@@ -1,0 +1,219 @@
+//! End-to-end driver (DESIGN.md §5): the full three-layer stack on a real
+//! small workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example lenet_mnist
+//! ```
+//!
+//! 1. Generates a synthetic-MNIST train/test split.
+//! 2. Builds 10-block MPD masks for LeNet-300-100's fc1/fc2 (paper §3.1).
+//! 3. Trains for several hundred steps through the AOT `lenet_train_step_b50`
+//!    PJRT executable (L2 graph + L1 masked-matmul Pallas kernel), logging
+//!    the loss curve to `results/lenet_mnist_loss.jsonl`.
+//! 4. Evaluates the masked model and a dense baseline.
+//! 5. Packs the trained weights (eq. 2) and serves batched inference through
+//!    the dynamic batcher with both the dense AOT executable and the packed
+//!    block-diagonal executable, reporting latency/throughput.
+//!
+//! Results from this run are recorded in EXPERIMENTS.md.
+
+use mpdc::compress::tilespace as ts;
+use mpdc::config::ModelKind;
+use mpdc::experiments::common;
+use mpdc::runtime::engine::Value;
+use mpdc::server::batcher::{spawn_with, AotBackend, BatcherConfig};
+use mpdc::train::aot_trainer::{evaluate_aot, AotTrainer, TrainConfig};
+use mpdc::util::benchkit::Table;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let engine = common::try_engine()
+        .ok_or_else(|| anyhow::anyhow!("artifacts missing — run `make artifacts` first"))?;
+    println!("== LeNet-300-100 end-to-end (synthetic MNIST) ==");
+
+    // 1–2. data + masks
+    let model = ModelKind::Lenet300;
+    let (train, test) = common::make_datasets(model, 3000, 800, 42);
+    let (masks, mask_inputs) = common::dense_mask_inputs(model, 10, 42, false);
+    println!(
+        "masks: fc1 {}×{} ({} blocks, {:.1}% density), fc2 {}×{}",
+        masks[0].rows(),
+        masks[0].cols(),
+        masks[0].nblocks(),
+        masks[0].density() * 100.0,
+        masks[1].rows(),
+        masks[1].cols()
+    );
+
+    // 3. AOT training with loss-curve logging
+    let cfg = TrainConfig { steps: 500, lr: 0.1, log_every: 25, seed: 42, ..Default::default() };
+    let log = Path::new("results/lenet_mnist_loss.jsonl");
+    let _ = std::fs::remove_file(log);
+    let t0 = Instant::now();
+    let mut tr = AotTrainer::new(&engine, model.train_artifact(), mask_inputs, cfg.seed)?;
+    tr.fit(&train, &cfg, Some(log))?;
+    let train_time = t0.elapsed();
+    println!(
+        "trained {} steps in {:.1}s ({:.1} steps/s); loss {:.4} → {:.4}; curve: {}",
+        cfg.steps,
+        train_time.as_secs_f64(),
+        cfg.steps as f64 / train_time.as_secs_f64(),
+        tr.history.first().unwrap().loss,
+        tr.history.last().unwrap().loss,
+        log.display()
+    );
+
+    // 4. accuracy: MPD vs dense baseline (all-ones masks, same budget)
+    let (top1, top5) = evaluate_aot(&engine, "lenet_infer_b256", &tr.params, &[], &test, 5)?;
+    println!("MPD (10× compression): top1={top1:.4} top5={top5:.4}");
+    let (_, ones) = common::dense_mask_inputs(model, 10, 0, true);
+    let mut dense_tr = AotTrainer::new(&engine, model.train_artifact(), ones, cfg.seed)?;
+    dense_tr.fit(&train, &cfg, None)?;
+    let (dtop1, _) = evaluate_aot(&engine, "lenet_infer_b256", &dense_tr.params, &[], &test, 5)?;
+    println!("dense baseline:        top1={dtop1:.4}  (accuracy loss {:+.4})", dtop1 - top1);
+
+    // 5. serve both variants through the dynamic batcher
+    let dense_params: Vec<Value> = dense_tr.params.clone();
+    let packed_args = packed_param_values(&masks, &tr)?;
+    let artifacts_dir = engine.manifest.dir.clone();
+    std::env::set_var("MPDC_ARTIFACTS", &artifacts_dir);
+
+    let bc = BatcherConfig { max_batch: 32, max_wait: std::time::Duration::from_micros(500), queue_depth: 512 };
+    let (dense_h, _dj) = spawn_with(
+        move || {
+            let eng = common::try_engine().ok_or_else(|| anyhow::anyhow!("artifacts missing"))?;
+            AotBackend::new(&eng, "lenet_infer_b32", dense_params)
+        },
+        bc,
+    )?;
+    let (packed_h, _pj) = spawn_with(
+        move || {
+            let eng = common::try_engine().ok_or_else(|| anyhow::anyhow!("artifacts missing"))?;
+            PackedLenetBackend::new(&eng, packed_args)
+        },
+        bc,
+    )?;
+
+    let mut table = Table::new(&["variant", "requests", "throughput req/s", "p50 µs", "p99 µs", "mean batch"]);
+    for (name, handle) in [("dense AOT", &dense_h), ("MPD packed AOT", &packed_h)] {
+        let nreq = 2000;
+        let nclients = 8;
+        let done = AtomicUsize::new(0);
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for c in 0..nclients {
+                let h = handle.clone();
+                let done = &done;
+                let test = &test;
+                s.spawn(move || {
+                    let mut i = c;
+                    loop {
+                        let n = done.fetch_add(1, Ordering::Relaxed);
+                        if n >= nreq {
+                            break;
+                        }
+                        let (x, _) = test.sample(i % test.len());
+                        let y = h.infer(x.to_vec()).expect("infer");
+                        assert_eq!(y.len(), 10);
+                        i += nclients;
+                    }
+                });
+            }
+        });
+        let dt = t0.elapsed();
+        let m = &handle.metrics;
+        table.row(&[
+            name.to_string(),
+            nreq.to_string(),
+            format!("{:.0}", nreq as f64 / dt.as_secs_f64()),
+            format!("{:.0}", m.latency.percentile_us(0.5)),
+            format!("{:.0}", m.latency.percentile_us(0.99)),
+            format!("{:.2}", m.mean_batch_size()),
+        ]);
+    }
+    println!("\nserving comparison (8 concurrent clients):\n{}", table.render());
+    println!("OK");
+    Ok(())
+}
+
+/// Pre-pack the trained masked weights into the packed-artifact argument
+/// list (everything except the per-request x).
+fn packed_param_values(
+    masks: &[mpdc::mask::mask::MpdMask],
+    tr: &AotTrainer,
+) -> anyhow::Result<Vec<Value>> {
+    let (m1, m2) = (&masks[0], &masks[1]);
+    let (ob1, ib1) = ts::tile_dims(m1);
+    let (ob2, ib2) = ts::tile_dims(m2);
+    let w1 = tr.param(0);
+    let b1 = tr.param(1);
+    let w2 = tr.param(2);
+    let b2 = tr.param(3);
+    let w3 = tr.param(4);
+    let b3 = tr.param(5);
+    let g12: Vec<i32> = ts::interlayer_gather(m1, m2).iter().map(|&v| v as i32).collect();
+    let g2o: Vec<i32> = ts::output_tile_positions(m2).iter().map(|&v| v as i32).collect();
+    Ok(vec![
+        Value::F32(ts::packed_blocks(m1, w1), vec![10, ob1, ib1]),
+        Value::F32(ts::bias_tiles(m1, b1), vec![10 * ob1]),
+        Value::I32(g12, vec![10 * ib2]),
+        Value::F32(ts::packed_blocks(m2, w2), vec![10, ob2, ib2]),
+        Value::F32(ts::bias_tiles(m2, b2), vec![10 * ob2]),
+        Value::I32(g2o, vec![100]),
+        Value::F32(w3.to_vec(), vec![10, 100]),
+        Value::F32(b3.to_vec(), vec![10]),
+    ])
+}
+
+/// Backend over `lenet_infer_packed_k10_b32`: gathers raw 784-d inputs into
+/// layer-1 tile space (the coordinator-side permutation of Fig. 3), pads to
+/// the static batch, and runs the packed executable.
+struct PackedLenetBackend {
+    exec: std::sync::Arc<mpdc::runtime::engine::LoadedExec>,
+    params: Vec<Value>,
+    gather: Vec<u32>,
+    static_batch: usize,
+    ib1_total: usize,
+}
+
+impl PackedLenetBackend {
+    fn new(engine: &mpdc::runtime::engine::Engine, params: Vec<Value>) -> anyhow::Result<Self> {
+        // rebuild the input gather from the same mask seed used in main()
+        let (masks, _) = common::dense_mask_inputs(ModelKind::Lenet300, 10, 42, false);
+        let exec = engine.load("lenet_infer_packed_k10_b32")?;
+        let xp_spec = &exec.meta.inputs[0];
+        Ok(Self {
+            static_batch: xp_spec.shape[0],
+            ib1_total: xp_spec.shape[1],
+            gather: ts::input_tile_gather(&masks[0]),
+            exec,
+            params,
+        })
+    }
+}
+
+impl mpdc::server::batcher::InferBackend for PackedLenetBackend {
+    fn feature_dim(&self) -> usize {
+        784
+    }
+
+    fn out_dim(&self) -> usize {
+        10
+    }
+
+    fn max_batch(&self) -> usize {
+        self.static_batch
+    }
+
+    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        let xt = ts::gather_rows(x, batch, 784, &self.gather);
+        let mut xp = vec![0.0f32; self.static_batch * self.ib1_total];
+        xp[..batch * self.ib1_total].copy_from_slice(&xt);
+        let mut args = vec![Value::F32(xp, vec![self.static_batch, self.ib1_total])];
+        args.extend(self.params.iter().cloned());
+        let out = self.exec.run(&args)?;
+        Ok(out[0].as_f32()[..batch * 10].to_vec())
+    }
+}

@@ -1,0 +1,165 @@
+"""AOT lowering driver: JAX entrypoints → HLO *text* artifacts + metadata.
+
+Run once at build time (``make artifacts``); the rust coordinator loads the
+HLO text via ``HloModuleProto::from_text_file`` and never touches Python.
+
+HLO text — NOT ``lowered.compile()`` output or a serialized HloModuleProto —
+is the interchange format: jax ≥ 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (what the published ``xla`` crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Each artifact ``<name>.hlo.txt`` gets a sidecar ``<name>.meta.json``::
+
+    {"name": ..., "inputs": [{"shape": [...], "dtype": "f32"}, ...],
+     "outputs": [...]}
+
+and ``manifest.txt`` lists all artifact names (one per line) — the rust
+``runtime::Manifest`` parses both.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dtype_name(d) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[jnp.dtype(d).name]
+
+
+def lower_entry(name: str, fn, arg_specs, out_dir: str) -> dict:
+    """Lower `fn(*arg_specs)`, write artifact + meta, return meta dict."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    # output shapes from the lowered signature
+    out_avals = lowered.out_info
+    outs = jax.tree_util.tree_leaves(out_avals)
+    meta = {
+        "name": name,
+        "inputs": [{"shape": list(s.shape), "dtype": _dtype_name(s.dtype)} for s in arg_specs],
+        "outputs": [{"shape": list(o.shape), "dtype": _dtype_name(o.dtype)} for o in outs],
+    }
+    with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  {name}: {len(text)} chars, {len(meta['inputs'])} in / {len(meta['outputs'])} out")
+    return meta
+
+
+# ---------------------------------------------------------------------------
+# entrypoint catalogue
+# ---------------------------------------------------------------------------
+
+def lenet_entries(out_dir):
+    d = model.LENET_DIMS
+    pshapes = [(d[1], d[0]), (d[1],), (d[2], d[1]), (d[2],), (d[3], d[2]), (d[3],)]
+    mshapes = [(d[1], d[0]), (d[2], d[1])]
+    metas = []
+    for batch in (50,):
+        args = (
+            [_spec(s) for s in pshapes]
+            + [_spec(s) for s in mshapes]
+            + [_spec((batch, d[0])), _spec((batch,), jnp.int32), _spec(())]
+        )
+        metas.append(lower_entry(f"lenet_train_step_b{batch}", model.lenet_train_step_flat, args, out_dir))
+    for batch in (1, 32, 256):
+        args = [_spec(s) for s in pshapes] + [_spec((batch, d[0]))]
+        metas.append(lower_entry(f"lenet_infer_b{batch}", model.lenet_infer_flat, args, out_dir))
+    # packed inference at k=10 (paper's 10% sparsity): tile dims
+    k = 10
+    ib1, ob1 = -(-d[0] // k), -(-d[1] // k)   # 79, 30
+    ib2, ob2 = -(-d[1] // k), -(-d[2] // k)   # 30, 10
+    for batch in (1, 32, 256):
+        args = [
+            _spec((batch, k * ib1)),            # xp
+            _spec((k, ob1, ib1)),               # wb1
+            _spec((k * ob1,)),                  # b1p
+            _spec((k * ib2,), jnp.int32),       # g12
+            _spec((k, ob2, ib2)),               # wb2
+            _spec((k * ob2,)),                  # b2p
+            _spec((d[2],), jnp.int32),          # g2o
+            _spec((d[3], d[2])),                # w3f
+            _spec((d[3],)),                     # b3
+        ]
+        metas.append(lower_entry(f"lenet_infer_packed_k10_b{batch}", model.lenet_infer_packed_flat, args, out_dir))
+    return metas
+
+
+def conv_entries(spec: model.NetSpec, out_dir, train_batch=32, infer_batch=128):
+    nmask = sum(spec.masked_fc)
+    pshapes = []
+    in_c = spec.in_shape[0]
+    for cs in spec.convs:
+        pshapes.append((cs.out_c, in_c, cs.kernel, cs.kernel))
+        pshapes.append((cs.out_c,))
+        in_c = cs.out_c
+    fc_shapes = spec.fc_shapes()
+    for s in fc_shapes:
+        pshapes.append(s)
+        pshapes.append((s[0],))
+    mshapes = [s for s, masked in zip(fc_shapes, spec.masked_fc) if masked]
+    c, h, w = spec.in_shape
+    metas = []
+    args = (
+        [_spec(s) for s in pshapes]
+        + [_spec(s) for s in mshapes]
+        + [_spec((train_batch, c, h, w)), _spec((train_batch,), jnp.int32), _spec(())]
+    )
+    metas.append(lower_entry(
+        f"{spec.name}_train_step_b{train_batch}",
+        model.conv_train_step_flat(spec, nmask), args, out_dir))
+    args = [_spec(s) for s in pshapes] + [_spec(s) for s in mshapes] + [_spec((infer_batch, c, h, w))]
+    metas.append(lower_entry(
+        f"{spec.name}_infer_b{infer_batch}",
+        model.conv_infer_flat(spec, nmask), args, out_dir))
+    return metas
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--only", default=None, help="comma-separated model filter (lenet,deep_mnist,cifar10,tiny_alexnet)")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    print(f"lowering artifacts into {out_dir} (jax {jax.__version__})")
+    metas = []
+    if only is None or "lenet" in only:
+        metas += lenet_entries(out_dir)
+    for name, spec in model.SPECS.items():
+        if only is None or name in only:
+            metas += conv_entries(spec, out_dir)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        for m in metas:
+            f.write(m["name"] + "\n")
+    print(f"wrote {len(metas)} artifacts + manifest")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Pallas kernel: packed block-diagonal matmul — the paper's inference
+hot-spot, expressed the way a TPU wants it.
+
+The MPDCompress insight is that after the eq.-2 inverse permutations every
+masked FC layer is exactly block-diagonal: ``K`` independent dense blocks.
+On the paper's GPUs each block maps to a threadblock; on TPU the natural
+mapping (DESIGN.md §Hardware-Adaptation) is one Pallas *grid step* per
+block, with ``BlockSpec`` expressing the HBM→VMEM schedule:
+
+  grid = (K,)
+  x tile   [B, IB]   — the slice of activations this block consumes
+  w tile   [OB, IB]  — the block's weights (resident in VMEM)
+  out tile [B, OB]   — written once, no cross-block accumulation
+
+There is *no* communication between grid steps — the paper's "key enabler"
+(independent sub-graphs) literally becomes the grid axis. The MXU sees a
+dense ``[B, IB] @ [IB, OB]`` per step; no gathers, no index arrays
+(contrast CSR-style sparse kernels).
+
+``interpret=True`` is mandatory on this CPU-only image: real TPU lowering
+emits a Mosaic custom-call that the CPU PJRT plugin cannot execute. The
+kernel is still the real thing — the same code lowers to Mosaic on TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _blockdiag_kernel(x_ref, w_ref, o_ref):
+    """One grid step = one diagonal block: o = x @ w.T."""
+    x = x_ref[...]            # [B, IB]  (VMEM tile)
+    w = w_ref[0]              # [OB, IB] (VMEM tile; leading block axis is 1)
+    # MXU-shaped contraction; on TPU this is a single systolic pass per
+    # 128×128 tile. float32 accumulation.
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def blockdiag_matmul(x_tiles: jnp.ndarray, w_blocks: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """Tile-space block-diagonal matmul (see kernels/ref.py for the spec).
+
+    Args:
+      x_tiles: [B, K*IB] activations in tile space (f32).
+      w_blocks: [K, OB, IB] packed uniform blocks (f32).
+    Returns:
+      [B, K*OB] output in tile space.
+    """
+    k, ob, ib = w_blocks.shape
+    b = x_tiles.shape[0]
+    assert x_tiles.shape == (b, k * ib), (x_tiles.shape, (b, k * ib))
+    return pl.pallas_call(
+        _blockdiag_kernel,
+        grid=(k,),
+        in_specs=[
+            # activations: block j reads x_tiles[:, j*IB:(j+1)*IB]
+            pl.BlockSpec((b, ib), lambda j: (0, j)),
+            # weights: block j reads w_blocks[j]
+            pl.BlockSpec((1, ob, ib), lambda j: (j, 0, 0)),
+        ],
+        # output: block j writes y[:, j*OB:(j+1)*OB]
+        out_specs=pl.BlockSpec((b, ob), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, k * ob), jnp.float32),
+        interpret=interpret,
+    )(x_tiles, w_blocks)
+
+
+def vmem_bytes(batch: int, k: int, ob: int, ib: int) -> int:
+    """Per-grid-step VMEM footprint estimate (f32): x tile + w block + out
+    tile. Used by the DESIGN.md roofline analysis — a block must fit VMEM
+    (~16 MiB on contemporary TPUs) for the schedule above to hold."""
+    del k  # footprint is per-step; K only scales the grid
+    return 4 * (batch * ib + ob * ib + batch * ob)
+
+
+def mxu_util_estimate(batch: int, ob: int, ib: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes doing useful work for one block GEMM, given the
+    128×128 systolic array: dims are padded up to multiples of `mxu`."""
+    pad = lambda d: ((d + mxu - 1) // mxu) * mxu
+    useful = batch * ob * ib
+    padded = pad(batch) * pad(ob) * pad(ib)
+    return useful / padded

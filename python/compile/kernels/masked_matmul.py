@@ -1,0 +1,97 @@
+"""Pallas kernel: fused mask-apply + matmul — the *training-mode* hot-spot.
+
+During training (paper Fig. 2 / Algorithm 1) every FC forward computes
+``y = x @ (M ∘ W).T``. Materializing ``M ∘ W`` in HBM doubles weight
+traffic; this kernel fuses the element-wise mask into the matmul tiles, so
+the mask load happens block-wise in VMEM right before the MXU pass.
+
+Grid is over output tiles: step ``j`` owns rows ``[j*OT, (j+1)*OT)`` of the
+weight/mask matrices and the matching output columns. The full ``x`` tile is
+re-read per step (B×IN is small relative to OUT×IN at the paper's shapes).
+
+A ``jax.custom_vjp`` wrapper (`masked_linear`) makes the kernel usable inside
+the L2 training graph: forward runs the Pallas kernel, backward is the
+standard masked-GEMM pair expressed in jnp (the gradient w.r.t. ``w`` is
+re-masked, which also makes "apply the mask to the updated weights" a no-op
+mathematically — we still re-apply post-update per Algorithm 1, belt and
+braces).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_kernel(x_ref, w_ref, m_ref, o_ref):
+    x = x_ref[...]                 # [B, IN]
+    w = w_ref[...] * m_ref[...]    # [OT, IN] — fused mask apply in VMEM
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("out_tile", "interpret"))
+def masked_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    m: jnp.ndarray,
+    *,
+    out_tile: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y = x @ (m * w).T with the mask fused into the weight tiles.
+
+    Args:
+      x: [B, IN] f32. w, m: [OUT, IN] f32 (m is 0/1).
+      out_tile: rows of w per grid step (OUT must divide or pad handled by
+        caller; we require OUT % out_tile == 0 or out_tile >= OUT).
+    """
+    b, inp = x.shape
+    out, inp2 = w.shape
+    assert inp == inp2 and w.shape == m.shape
+    ot = min(out_tile, out)
+    assert out % ot == 0, f"OUT={out} not divisible by tile {ot}"
+    grid = (out // ot,)
+    return pl.pallas_call(
+        _masked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, inp), lambda j: (0, 0)),
+            pl.BlockSpec((ot, inp), lambda j: (j, 0)),
+            pl.BlockSpec((ot, inp), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, ot), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, out), jnp.float32),
+        interpret=interpret,
+    )(x, w, m)
+
+
+def _pick_tile(out: int) -> int:
+    """Largest tile ≤128 that divides OUT (OUT=1 layers fall back to 1)."""
+    for t in (128, 100, 64, 50, 32, 25, 16, 10, 8, 5, 4, 2, 1):
+        if out % t == 0:
+            return t
+    return 1
+
+
+@jax.custom_vjp
+def masked_linear(x, w, m):
+    """Differentiable masked FC forward running the Pallas kernel."""
+    return masked_matmul(x, w, m, out_tile=_pick_tile(w.shape[0]))
+
+
+def _masked_linear_fwd(x, w, m):
+    return masked_linear(x, w, m), (x, w, m)
+
+
+def _masked_linear_bwd(res, g):
+    x, w, m = res
+    wm = w * m
+    dx = g @ wm                       # [B, IN]
+    dw = (g.T @ x) * m                # masked gradient — off-mask stays 0
+    return dx, dw, jnp.zeros_like(m)
+
+
+masked_linear.defvjp(_masked_linear_fwd, _masked_linear_bwd)

@@ -1,0 +1,46 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the *specification*: small, obviously-correct jnp expressions that
+the Pallas kernels in this package are tested against (pytest + hypothesis in
+``python/tests/test_kernels.py``), and that the rust-side native engine
+mirrors (``rust/src/linalg/blockdiag_mm.rs``).
+
+Tile-space convention (shared with the rust coordinator): a block-diagonal
+layer with ``K`` uniform blocks of shape ``(OB, IB)`` stores weights as
+``w_blocks[K, OB, IB]`` and activations as ``x_tiles[B, K*IB]`` /
+``y_tiles[B, K*OB]``, where tile ``k`` of the activation occupies columns
+``[k*IB, (k+1)*IB)``. Ragged layers are zero-padded to uniform tiles by the
+coordinator; zero padding is exact (it contributes nothing to the GEMMs).
+"""
+
+import jax.numpy as jnp
+
+
+def blockdiag_matmul_ref(x_tiles: jnp.ndarray, w_blocks: jnp.ndarray) -> jnp.ndarray:
+    """y_tiles[b, k*OB + o] = sum_i x_tiles[b, k*IB + i] * w_blocks[k, o, i].
+
+    Args:
+      x_tiles: [B, K*IB] activations in tile space.
+      w_blocks: [K, OB, IB] uniform packed blocks.
+    Returns:
+      [B, K*OB] output activations in tile space.
+    """
+    k, ob, ib = w_blocks.shape
+    b = x_tiles.shape[0]
+    xs = x_tiles.reshape(b, k, ib)
+    # y[b, k, o] = sum_i xs[b, k, i] * w[k, o, i]
+    y = jnp.einsum("bki,koi->bko", xs, w_blocks)
+    return y.reshape(b, k * ob)
+
+
+def masked_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ (m * w).T — eq. 1 of the paper applied inside the matmul.
+
+    Args:
+      x: [B, IN] activations.
+      w: [OUT, IN] weights.
+      m: [OUT, IN] binary mask.
+    Returns:
+      [B, OUT].
+    """
+    return x @ (m * w).T

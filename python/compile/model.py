@@ -1,0 +1,304 @@
+"""L2: the MPDCompress model zoo in JAX — build-time only, never imported at
+runtime.
+
+Models (paper §3): LeNet-300-100 (MLP), Deep-MNIST-lite, CIFAR-lite and
+TinyAlexNet (conv nets — scaled-down per DESIGN.md §2; the FC *topology* and
+masking plan match the paper, the channel/FC widths are shrunk to what a
+1-core CPU testbed can train).
+
+Everything here is expressed as pure functions over flat parameter tuples so
+that ``aot.py`` can lower each entrypoint to a single HLO module whose
+parameter list the rust coordinator can feed positionally:
+
+* ``*_train_step``: (params..., masks..., x, y, lr) -> (params'..., loss)
+  — one SGD step. Masks are *inputs*, so one compiled executable serves every
+  mask instantiation (the Fig. 4(a) hundred-mask sweep re-uses one artifact).
+  Per Algorithm 1 the binary mask multiplies the weights on the forward pass
+  (via the L1 ``masked_linear`` Pallas kernel) and is re-applied to the
+  updated weights after the gradient step.
+* ``*_infer``: (params..., x) -> logits — masked/dense inference.
+* ``lenet_infer_packed``: tile-space block-diagonal inference built on the
+  L1 ``blockdiag_matmul`` Pallas kernel (paper Fig. 3), with inter-layer
+  permutations supplied as gather-index inputs so the same executable serves
+  any mask.
+"""
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.blockdiag_matmul import blockdiag_matmul
+from compile.kernels.masked_matmul import masked_linear
+
+
+# --------------------------------------------------------------------------
+# shared pieces
+# --------------------------------------------------------------------------
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def he_init(key, out_dim: int, in_dim: int) -> jnp.ndarray:
+    return jax.random.normal(key, (out_dim, in_dim), jnp.float32) * jnp.sqrt(2.0 / in_dim)
+
+
+# --------------------------------------------------------------------------
+# LeNet-300-100 (MLP 784-300-100-10), masks on fc1 + fc2 (paper §3.1)
+# --------------------------------------------------------------------------
+
+LENET_DIMS = (784, 300, 100, 10)
+
+
+class LenetParams(NamedTuple):
+    w1: jnp.ndarray  # [300, 784]
+    b1: jnp.ndarray
+    w2: jnp.ndarray  # [100, 300]
+    b2: jnp.ndarray
+    w3: jnp.ndarray  # [10, 100]
+    b3: jnp.ndarray
+
+
+def lenet_init(seed: int = 0) -> LenetParams:
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    d = LENET_DIMS
+    return LenetParams(
+        he_init(ks[0], d[1], d[0]), jnp.zeros(d[1], jnp.float32),
+        he_init(ks[1], d[2], d[1]), jnp.zeros(d[2], jnp.float32),
+        he_init(ks[2], d[3], d[2]), jnp.zeros(d[3], jnp.float32),
+    )
+
+
+def lenet_forward_masked(p: LenetParams, m1: jnp.ndarray, m2: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Training-mode forward: masked FC1/FC2 via the L1 Pallas kernel."""
+    h = jax.nn.relu(masked_linear(x, p.w1, m1) + p.b1)
+    h = jax.nn.relu(masked_linear(h, p.w2, m2) + p.b2)
+    return h @ p.w3.T + p.b3
+
+
+def lenet_forward_dense(p: LenetParams, x: jnp.ndarray) -> jnp.ndarray:
+    """Inference on stored (already-masked or dense) weights."""
+    h = jax.nn.relu(x @ p.w1.T + p.b1)
+    h = jax.nn.relu(h @ p.w2.T + p.b2)
+    return h @ p.w3.T + p.b3
+
+
+def lenet_train_step(p: LenetParams, m1, m2, x, y, lr):
+    """One SGD step; mask re-applied to updated weights (Algorithm 1 l.14)."""
+
+    def loss_fn(p):
+        return softmax_xent(lenet_forward_masked(p, m1, m2, x), y)
+
+    loss, g = jax.value_and_grad(loss_fn)(p)
+    new = LenetParams(
+        (p.w1 - lr * g.w1) * m1, p.b1 - lr * g.b1,
+        (p.w2 - lr * g.w2) * m2, p.b2 - lr * g.b2,
+        p.w3 - lr * g.w3, p.b3 - lr * g.b3,
+    )
+    return new, loss
+
+
+def lenet_infer_packed(xp, wb1, b1p, g12, wb2, b2p, g2o, w3f, b3):
+    """Fig.-3 packed inference in tile space (see DESIGN.md):
+
+    xp   [B, K1*IB1]  input already gathered into layer-1 tile space
+    wb1  [K1, OB1, IB1] packed padded blocks of W1*
+    b1p  [K1*OB1]     bias in layer-1 output tile space
+    g12  [K2*IB2] i32 gather: layer-1 out tile space → layer-2 in tile space
+    wb2, b2p          likewise for layer 2
+    g2o  [100] i32    gather: layer-2 out tile space → logical order
+    w3f  [10, 100]    dense head (columns pre-folded by the coordinator)
+    b3   [10]
+    """
+    h = jax.nn.relu(blockdiag_matmul(xp, wb1) + b1p)
+    h = jnp.take(h, g12, axis=1)
+    h = jax.nn.relu(blockdiag_matmul(h, wb2) + b2p)
+    h = jnp.take(h, g2o, axis=1)
+    return h @ w3f.T + b3
+
+
+# --------------------------------------------------------------------------
+# Conv nets: generic spec covering Deep-MNIST-lite / CIFAR-lite / TinyAlexNet
+# --------------------------------------------------------------------------
+
+class ConvSpec(NamedTuple):
+    """One conv stage: 3×3-or-5×5 same conv + ReLU + optional 2×2 maxpool."""
+    out_c: int
+    kernel: int
+    stride: int
+    pool: bool
+
+
+class NetSpec(NamedTuple):
+    name: str
+    in_shape: tuple  # (C, H, W)
+    convs: tuple     # tuple[ConvSpec]
+    fc_dims: tuple   # hidden+output FC dims after flatten
+    masked_fc: tuple # bool per FC layer
+    classes: int
+
+    def flat_dim(self) -> int:
+        c, h, w = self.in_shape
+        for cs in self.convs:
+            h = (h + cs.stride - 1) // cs.stride
+            w = (w + cs.stride - 1) // cs.stride
+            if cs.pool:
+                h //= 2
+                w //= 2
+            c = cs.out_c
+        return c * h * w
+
+    def fc_shapes(self):
+        dims = (self.flat_dim(),) + tuple(self.fc_dims)
+        return [(dims[i + 1], dims[i]) for i in range(len(self.fc_dims))]
+
+
+# paper's Deep MNIST (conv32-conv64-fc1024-fc10) scaled ~4× down
+DEEP_MNIST_LITE = NetSpec(
+    name="deep_mnist",
+    in_shape=(1, 28, 28),
+    convs=(ConvSpec(8, 5, 1, True), ConvSpec(16, 5, 1, True)),
+    fc_dims=(256, 10),
+    masked_fc=(True, False),
+    classes=10,
+)
+
+# TF-tutorial CIFAR net (conv-conv-fc384-fc192-fc10) scaled down
+CIFAR_LITE = NetSpec(
+    name="cifar10",
+    in_shape=(3, 32, 32),
+    convs=(ConvSpec(16, 5, 1, True), ConvSpec(32, 5, 1, True)),
+    fc_dims=(192, 96, 10),
+    masked_fc=(True, True, False),
+    classes=10,
+)
+
+# AlexNet topology (5 conv → 3 masked FC) scaled to this testbed; all three
+# FC layers masked exactly as the paper masks FC6/FC7/FC8.
+TINY_ALEXNET = NetSpec(
+    name="tiny_alexnet",
+    in_shape=(3, 32, 32),
+    convs=(ConvSpec(16, 3, 2, True), ConvSpec(64, 3, 1, True)),
+    fc_dims=(256, 256, 16),
+    masked_fc=(True, True, True),
+    classes=16,
+)
+
+SPECS = {s.name: s for s in (DEEP_MNIST_LITE, CIFAR_LITE, TINY_ALEXNET)}
+
+
+def conv_init(spec: NetSpec, seed: int = 0):
+    """Flat param list: [cw0, cb0, cw1, cb1, ..., fw0, fb0, ...]."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    in_c = spec.in_shape[0]
+    for cs in spec.convs:
+        key, k = jax.random.split(key)
+        fan_in = in_c * cs.kernel * cs.kernel
+        params.append(jax.random.normal(k, (cs.out_c, in_c, cs.kernel, cs.kernel), jnp.float32)
+                      * jnp.sqrt(2.0 / fan_in))
+        params.append(jnp.zeros((cs.out_c,), jnp.float32))
+        in_c = cs.out_c
+    for (od, idim) in spec.fc_shapes():
+        key, k = jax.random.split(key)
+        params.append(he_init(k, od, idim))
+        params.append(jnp.zeros((od,), jnp.float32))
+    return params
+
+
+def conv_forward(spec: NetSpec, params: Sequence[jnp.ndarray], masks: Sequence[jnp.ndarray], x: jnp.ndarray):
+    """Forward through convs then masked FCs. x: [B, C, H, W]. `masks` holds
+    one entry per *masked* FC layer, in order."""
+    i = 0
+    h = x
+    for cs in spec.convs:
+        w, b = params[i], params[i + 1]
+        i += 2
+        h = jax.lax.conv_general_dilated(
+            h, w,
+            window_strides=(cs.stride, cs.stride),
+            padding="SAME",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        ) + b[None, :, None, None]
+        h = jax.nn.relu(h)
+        if cs.pool:
+            h = jax.lax.reduce_window(
+                h, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+            )
+    h = h.reshape(h.shape[0], -1)
+    mi = 0
+    nfc = len(spec.fc_dims)
+    for li in range(nfc):
+        w, b = params[i], params[i + 1]
+        i += 2
+        if spec.masked_fc[li]:
+            h = masked_linear(h, w, masks[mi]) + b
+            mi += 1
+        else:
+            h = h @ w.T + b
+        if li + 1 < nfc:
+            h = jax.nn.relu(h)
+    return h
+
+
+def conv_train_step(spec: NetSpec, params, masks, x, y, lr):
+    def loss_fn(params):
+        return softmax_xent(conv_forward(spec, params, masks, x), y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = [p - lr * g for p, g in zip(params, grads)]
+    # re-apply masks to updated FC weights (Algorithm 1 line 14)
+    nconv = 2 * len(spec.convs)
+    mi = 0
+    for li in range(len(spec.fc_dims)):
+        if spec.masked_fc[li]:
+            wi = nconv + 2 * li
+            new[wi] = new[wi] * masks[mi]
+            mi += 1
+    return new, loss
+
+
+# --------------------------------------------------------------------------
+# jit-able entrypoints (what aot.py lowers)
+# --------------------------------------------------------------------------
+
+def lenet_train_step_flat(w1, b1, w2, b2, w3, b3, m1, m2, x, y, lr):
+    p, loss = lenet_train_step(LenetParams(w1, b1, w2, b2, w3, b3), m1, m2, x, y, lr)
+    return (*p, loss)
+
+
+def lenet_infer_flat(w1, b1, w2, b2, w3, b3, x):
+    return (lenet_forward_dense(LenetParams(w1, b1, w2, b2, w3, b3), x),)
+
+
+def lenet_infer_packed_flat(xp, wb1, b1p, g12, wb2, b2p, g2o, w3f, b3):
+    return (lenet_infer_packed(xp, wb1, b1p, g12, wb2, b2p, g2o, w3f, b3),)
+
+
+def conv_train_step_flat(spec: NetSpec, nmasks: int):
+    nparams = 2 * len(spec.convs) + 2 * len(spec.fc_dims)
+
+    def fn(*args):
+        params = list(args[:nparams])
+        masks = list(args[nparams:nparams + nmasks])
+        x, y, lr = args[nparams + nmasks:]
+        new, loss = conv_train_step(spec, params, masks, x, y, lr)
+        return (*new, loss)
+
+    return fn
+
+
+def conv_infer_flat(spec: NetSpec, nmasks: int):
+    nparams = 2 * len(spec.convs) + 2 * len(spec.fc_dims)
+
+    def fn(*args):
+        params = list(args[:nparams])
+        masks = list(args[nparams:nparams + nmasks])
+        x = args[nparams + nmasks]
+        return (conv_forward(spec, params, masks, x),)
+
+    return fn

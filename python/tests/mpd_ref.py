@@ -1,0 +1,116 @@
+"""Numpy reference implementation of the MPD mask / tile-space contract.
+
+This mirrors ``rust/src/mask`` + the packing performed by the rust
+coordinator before invoking the ``lenet_infer_packed_*`` artifacts. It exists
+so python tests can validate the packed-inference executable end-to-end
+against the dense computation, pinning the cross-language contract:
+
+* ragged block partition: base = n//k, remainder spread over leading blocks
+* mask M = P_row · B · P_col (entry (r,c) kept iff the un-permuted coordinate
+  lies on a diagonal block)
+* eq. 2 re-blocking W* = P_rowᵀ · W̄ · P_colᵀ
+* uniform zero-padded tiles: IB = ceil(in/k), OB = ceil(out/k)
+* tile-space activations/bias and inter-layer gather indices
+"""
+
+import numpy as np
+
+
+def partition(n: int, k: int):
+    """[(start, len)] spans; sizes differ by ≤1, remainder on leading blocks."""
+    base, rem = divmod(n, k)
+    spans, start = [], 0
+    for b in range(k):
+        ln = base + (1 if b < rem else 0)
+        spans.append((start, ln))
+        start += ln
+    return spans
+
+
+class Mask:
+    """An MPD mask in factored form (forward-map convention: dest(i)=map[i])."""
+
+    def __init__(self, out_dim: int, in_dim: int, k: int, rng: np.random.Generator):
+        self.out_dim, self.in_dim, self.k = out_dim, in_dim, k
+        self.rs = partition(out_dim, k)
+        self.cs = partition(in_dim, k)
+        self.p_row = rng.permutation(out_dim)  # dest index per source
+        self.p_col = rng.permutation(in_dim)
+
+    def dense(self) -> np.ndarray:
+        m = np.zeros((self.out_dim, self.in_dim), np.float32)
+        for (r0, rl), (c0, cl) in zip(self.rs, self.cs):
+            rows = self.p_row[r0:r0 + rl]
+            cols = self.p_col[c0:c0 + cl]
+            m[np.ix_(rows, cols)] = 1.0
+        return m
+
+    def unpermute(self, w_masked: np.ndarray) -> np.ndarray:
+        """eq. 2: W*[r', c'] = W̄[p_row[r'], p_col[c']] — block diagonal."""
+        return w_masked[np.ix_(self.p_row, self.p_col)]
+
+    def tile_dims(self):
+        ib = -(-self.in_dim // self.k)
+        ob = -(-self.out_dim // self.k)
+        return ob, ib
+
+    def packed_blocks(self, w_masked: np.ndarray) -> np.ndarray:
+        """[K, OB, IB] zero-padded blocks of W*."""
+        star = self.unpermute(w_masked)
+        ob, ib = self.tile_dims()
+        out = np.zeros((self.k, ob, ib), np.float32)
+        for b, ((r0, rl), (c0, cl)) in enumerate(zip(self.rs, self.cs)):
+            out[b, :rl, :cl] = star[r0:r0 + rl, c0:c0 + cl]
+        return out
+
+    def x_to_tiles(self, x: np.ndarray) -> np.ndarray:
+        """[B, in] logical activations → [B, K*IB] layer-input tile space."""
+        _, ib = self.tile_dims()
+        xp = x[:, self.p_col]  # x'[c'] = x[p_col[c']]
+        out = np.zeros((x.shape[0], self.k * ib), np.float32)
+        for b, (c0, cl) in enumerate(self.cs):
+            out[:, b * ib:b * ib + cl] = xp[:, c0:c0 + cl]
+        return out
+
+    def bias_to_tiles(self, bias: np.ndarray) -> np.ndarray:
+        """[out] logical bias → [K*OB] output tile space (pads are 0)."""
+        ob, _ = self.tile_dims()
+        bp = bias[self.p_row]  # b'[r'] = b[p_row[r']]
+        out = np.zeros(self.k * ob, np.float32)
+        for b, (r0, rl) in enumerate(self.rs):
+            out[b * ob:b * ob + rl] = bp[r0:r0 + rl]
+        return out
+
+    def out_tiles_to_logical_gather(self) -> np.ndarray:
+        """i32 gather g: logical[c] = tiles[g[c]]."""
+        ob, _ = self.tile_dims()
+        inv_row = np.argsort(self.p_row)  # r' = inv_row[logical]
+        g = np.zeros(self.out_dim, np.int32)
+        for c in range(self.out_dim):
+            rp = inv_row[c]
+            for b, (r0, rl) in enumerate(self.rs):
+                if r0 <= rp < r0 + rl:
+                    g[c] = b * ob + (rp - r0)
+                    break
+        return g
+
+
+def interlayer_gather(prev: Mask, nxt: Mask) -> np.ndarray:
+    """i32 gather from `prev`'s output tile space into `nxt`'s input tile
+    space: next_in_tiles[j] = prev_out_tiles[g[j]]. Padded positions of the
+    next layer's input tiles may point anywhere (their weight columns are
+    zero-padded), we point them at slot 0."""
+    assert prev.out_dim == nxt.in_dim
+    ob_p, _ = prev.tile_dims()
+    _, ib_n = nxt.tile_dims()
+    inv_row_p = np.argsort(prev.p_row)
+    g = np.zeros(nxt.k * ib_n, np.int32)
+    for b, (c0, cl) in enumerate(nxt.cs):
+        for i in range(cl):
+            logical = nxt.p_col[c0 + i]          # neuron index
+            rp = inv_row_p[logical]              # prev block-row position
+            for pb, (r0, rl) in enumerate(prev.rs):
+                if r0 <= rp < r0 + rl:
+                    g[b * ib_n + i] = pb * ob_p + (rp - r0)
+                    break
+    return g

@@ -1,0 +1,145 @@
+"""L2 model correctness: shapes, masked training dynamics, and the packed
+(Fig. 3) inference path vs the dense reference — the eq.-2 equivalence that
+everything downstream relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from tests.mpd_ref import Mask, interlayer_gather
+
+
+def _mask_np(rng, out_dim, in_dim, k):
+    m = Mask(out_dim, in_dim, k, rng)
+    return m, jnp.asarray(m.dense())
+
+
+# ---------------------------------------------------------------------------
+# LeNet
+# ---------------------------------------------------------------------------
+
+def test_lenet_forward_shapes():
+    p = model.lenet_init(0)
+    x = jnp.zeros((7, 784), jnp.float32)
+    y = model.lenet_forward_dense(p, x)
+    assert y.shape == (7, 10)
+
+
+def test_lenet_masked_equals_dense_on_masked_weights():
+    rng = np.random.default_rng(0)
+    p = model.lenet_init(1)
+    m1r, m1 = _mask_np(rng, 300, 784, 10)
+    m2r, m2 = _mask_np(rng, 100, 300, 10)
+    x = jnp.asarray(rng.normal(size=(5, 784)).astype(np.float32))
+    # masked forward == dense forward on pre-masked weights
+    y_masked = model.lenet_forward_masked(p, m1, m2, x)
+    p_masked = p._replace(w1=p.w1 * m1, w2=p.w2 * m2)
+    y_dense = model.lenet_forward_dense(p_masked, x)
+    np.testing.assert_allclose(y_masked, y_dense, rtol=1e-4, atol=1e-4)
+
+
+def test_lenet_train_step_decreases_loss_and_keeps_mask():
+    rng = np.random.default_rng(1)
+    p = model.lenet_init(2)
+    _, m1 = _mask_np(rng, 300, 784, 10)
+    _, m2 = _mask_np(rng, 100, 300, 10)
+    x = jnp.asarray(rng.normal(size=(50, 784)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=50).astype(np.int32))
+    lr = jnp.float32(0.3)
+    losses = []
+    for _ in range(40):
+        p, loss = model.lenet_train_step(p, m1, m2, x, y, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, (losses[0], losses[-1])
+    # weights confined to the mask
+    assert np.all(np.asarray(p.w1)[np.asarray(m1) == 0.0] == 0.0)
+    assert np.all(np.asarray(p.w2)[np.asarray(m2) == 0.0] == 0.0)
+
+
+def test_lenet_packed_inference_matches_dense():
+    """The cross-language tile-space contract (mpd_ref) against the actual
+    packed entrypoint — the strongest eq.-2 end-to-end check in python."""
+    rng = np.random.default_rng(2)
+    p = model.lenet_init(3)
+    k = 10
+    mask1 = Mask(300, 784, k, rng)
+    mask2 = Mask(100, 300, k, rng)
+    m1 = jnp.asarray(mask1.dense())
+    m2 = jnp.asarray(mask2.dense())
+    pm = p._replace(w1=p.w1 * m1, w2=p.w2 * m2,
+                    b1=jnp.asarray(rng.normal(size=300).astype(np.float32)),
+                    b2=jnp.asarray(rng.normal(size=100).astype(np.float32)))
+    x = rng.normal(size=(4, 784)).astype(np.float32)
+    want = model.lenet_forward_dense(pm, jnp.asarray(x))
+
+    # coordinator-side packing (numpy reference)
+    xp = jnp.asarray(mask1.x_to_tiles(x))
+    wb1 = jnp.asarray(mask1.packed_blocks(np.asarray(pm.w1)))
+    b1p = jnp.asarray(mask1.bias_to_tiles(np.asarray(pm.b1)))
+    g12 = jnp.asarray(interlayer_gather(mask1, mask2))
+    wb2 = jnp.asarray(mask2.packed_blocks(np.asarray(pm.w2)))
+    b2p = jnp.asarray(mask2.bias_to_tiles(np.asarray(pm.b2)))
+    g2o = jnp.asarray(mask2.out_tiles_to_logical_gather())
+    got = model.lenet_infer_packed(xp, wb1, b1p, g12, wb2, b2p, g2o, pm.w3, pm.b3)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# conv nets
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(model.SPECS))
+def test_conv_shapes_and_flatdim(name):
+    spec = model.SPECS[name]
+    params = model.conv_init(spec, 0)
+    nmask = sum(spec.masked_fc)
+    masks = [jnp.ones(s, jnp.float32) for s, mk in zip(spec.fc_shapes(), spec.masked_fc) if mk]
+    assert len(masks) == nmask
+    c, h, w = spec.in_shape
+    x = jnp.zeros((3, c, h, w), jnp.float32)
+    y = model.conv_forward(spec, params, masks, x)
+    assert y.shape == (3, spec.classes)
+
+
+def test_tiny_alexnet_flat_dim():
+    # 32×32 → conv s2 → 16 → pool → 8 → conv s1 → 8 → pool → 4; 64ch → 1024
+    assert model.TINY_ALEXNET.flat_dim() == 1024
+
+
+@pytest.mark.parametrize("name", list(model.SPECS))
+def test_conv_train_step_decreases_loss(name):
+    spec = model.SPECS[name]
+    rng = np.random.default_rng(4)
+    params = model.conv_init(spec, 1)
+    masks = []
+    for s, mk in zip(spec.fc_shapes(), spec.masked_fc):
+        if mk:
+            k = min(8, min(s))
+            masks.append(jnp.asarray(Mask(s[0], s[1], k, rng).dense()))
+    c, h, w = spec.in_shape
+    x = jnp.asarray(rng.normal(size=(16, c, h, w)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, spec.classes, size=16).astype(np.int32))
+    lr = jnp.float32(0.01)
+    losses = []
+    for _ in range(8):
+        params, loss = model.conv_train_step(spec, params, masks, x, y, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    # masked FC weights stay confined
+    nconv = 2 * len(spec.convs)
+    mi = 0
+    for li, mk in enumerate(spec.masked_fc):
+        if mk:
+            wn = np.asarray(params[nconv + 2 * li])
+            mn = np.asarray(masks[mi])
+            assert np.all(wn[mn == 0.0] == 0.0)
+            mi += 1
+
+
+def test_softmax_xent_sane():
+    logits = jnp.asarray([[10.0, -10.0], [-10.0, 10.0]], jnp.float32)
+    labels = jnp.asarray([0, 1], jnp.int32)
+    assert float(model.softmax_xent(logits, labels)) < 1e-3
+    assert float(model.softmax_xent(logits, jnp.asarray([1, 0], jnp.int32))) > 5.0

@@ -1,0 +1,59 @@
+//! Ablation bench: design-choice studies beyond the paper's headline runs
+//! (DESIGN.md §4 "ablation benches"):
+//!   1. block-count sweep (accuracy vs compression curve on LeNet-300-100)
+//!   2. aligned-mask generation (zero internal gathers — §2 identity remark)
+//!   3. magnitude-pruning (Han'15, the paper's [9]) vs MPD at matched density
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+
+use mpdc::data::dataset::Dataset;
+use mpdc::data::synth::{SynthImages, SynthSpec};
+use mpdc::experiments::ablations;
+use mpdc::experiments::common;
+use mpdc::train::aot_trainer::TrainConfig;
+use mpdc::util::json::Json;
+
+fn main() {
+    let spec = SynthSpec::mnist_like();
+    let mut train = Dataset::from_synth(&SynthImages::generate(spec, 2500, 42, 0));
+    let (m, s) = train.normalize();
+    let mut test = Dataset::from_synth(&SynthImages::generate(spec, 600, 42, 1));
+    test.normalize_with(m, s);
+    let cfg = TrainConfig { steps: 300, lr: 0.1, log_every: 100, seed: 42, ..Default::default() };
+
+    println!("=== ablation 1: block-count sweep (LeNet-300-100) ===");
+    println!("{:>7} {:>12} {:>12} {:>8}", "blocks", "compression", "kept params", "top-1");
+    let t0 = std::time::Instant::now();
+    for p in ablations::block_sweep(&[2, 4, 8, 10, 16, 25, 40], &train, &test, &cfg) {
+        println!("{:>7} {:>11.2}× {:>12} {:>8.4}", p.nblocks, p.compression, p.kept_params, p.top1);
+        common::emit(
+            "results/ablation_blocks.jsonl",
+            Json::obj(vec![
+                ("nblocks", Json::num(p.nblocks as f64)),
+                ("compression", Json::num(p.compression)),
+                ("top1", Json::num(p.top1)),
+            ]),
+        );
+    }
+    println!("({:.1}s)", t0.elapsed().as_secs_f64());
+
+    println!("\n=== ablation 2: aligned masks (P_col(i+1) = P_row(i)) ===");
+    let out = ablations::aligned_masks(&train, &test, &cfg);
+    println!(
+        "random masks:  {} gathers, top1 {:.4}\naligned masks: {} gathers, top1 {:.4}",
+        out.random_gathers, out.random_top1, out.aligned_gathers, out.aligned_top1
+    );
+
+    println!("\n=== ablation 3: MPD vs magnitude pruning (Han'15) @10% ===");
+    let c = ablations::pruning_comparison(&train, &test, &cfg);
+    println!(
+        "dense top1 {:.4} | MPD top1 {:.4} ({} params, {} B packed) | pruned top1 {:.4} ({} params, {} B CSR)",
+        c.dense_top1, c.mpd_top1, c.mpd_kept, c.mpd_bytes, c.pruned_top1, c.pruned_kept, c.csr_bytes
+    );
+    println!(
+        "storage win for equal sparsity: CSR/packed = {:.2}× (the paper's 'flags and pointers' cost)",
+        c.csr_bytes as f64 / c.mpd_bytes as f64
+    );
+}

@@ -1,0 +1,54 @@
+//! Bench/regen target for paper Fig. 1: (e) the 300×100 block-diagonal
+//! matrix B₁, (f) the randomly permuted mask M₁, plus the Fig. 1(a–d)
+//! decomposition demo, and generation-cost microbenchmarks.
+//!
+//! ```bash
+//! cargo bench --bench fig1_masks
+//! ```
+
+use mpdc::experiments::figures;
+use mpdc::mask::decompose::{decompose, fig1_example, verify_decomposition};
+use mpdc::mask::mask::MpdMask;
+use mpdc::mask::prng::Xoshiro256pp;
+use mpdc::util::benchkit::{bench_quick, black_box};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Fig. 1 regeneration ===");
+    let out = Path::new("results");
+    let f = figures::fig1(out, 42)?;
+    println!(
+        "B density {:.4} | M density {:.4} | M off-block fraction {:.4}",
+        f.b_density, f.m_density, f.m_offblock_fraction
+    );
+    println!("wrote results/fig1_b.pgm, results/fig1_m.pgm");
+
+    // Fig 1(a–d): the worked 4×4 example
+    let (m, r, c) = fig1_example();
+    let d = decompose(&m, r, c);
+    println!(
+        "4×4 example: {} sub-graphs recovered, verified={}",
+        d.ncomponents,
+        verify_decomposition(&m, r, c, &d)
+    );
+
+    // generation cost at the paper's layer sizes
+    println!("\n--- mask generation cost ---");
+    for (rows, cols, k) in [(300usize, 100usize, 10usize), (300, 784, 10), (4096, 16384, 8)] {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let s = bench_quick(&format!("generate {rows}x{cols} k={k}"), || {
+            black_box(MpdMask::generate(rows, cols, k, &mut rng));
+        });
+        println!("{}", s.human());
+    }
+    // decomposition (recovery) cost
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let mask = MpdMask::generate(300, 784, 10, &mut rng);
+    let w: Vec<f32> = (0..300 * 784).map(|_| rng.next_f32() + 0.1).collect();
+    let masked = mask.apply(&w);
+    let s = bench_quick("decompose 300x784 masked", || {
+        black_box(decompose(&masked, 300, 784));
+    });
+    println!("{}", s.human());
+    Ok(())
+}

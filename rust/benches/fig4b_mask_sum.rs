@@ -1,0 +1,41 @@
+//! Bench/regen target for paper Fig. 4(b): the element-wise sum of 100
+//! independent random masks over the 300×100 LeNet fc2 shape. The paper
+//! reports the sum "on average reached 10, confirming the high spread of
+//! non-zero mask values across the matrix."
+//!
+//! ```bash
+//! cargo bench --bench fig4b_mask_sum
+//! ```
+
+use mpdc::experiments::figures;
+use mpdc::util::benchkit::{bench_quick, black_box};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Fig. 4(b) regeneration ===");
+    for nmasks in [10usize, 100] {
+        let out = figures::fig4b(Path::new("results"), nmasks, 42)?;
+        println!(
+            "{:>3} masks: mean={:.2} (expect {}) min={} max={} var={:.2} never-covered={:.5}",
+            nmasks,
+            out.stats.mean,
+            nmasks as f64 * 0.1,
+            out.stats.min,
+            out.stats.max,
+            out.stats.variance,
+            out.stats.never_covered
+        );
+        // paper claim: mean == nmasks × density exactly (nnz is deterministic)
+        assert!((out.stats.mean - nmasks as f64 * 0.1).abs() < 1e-9);
+    }
+    println!("wrote results/fig4b_mask_sum.pgm");
+
+    // cost of the sum itself
+    let mut rng = mpdc::mask::prng::Xoshiro256pp::seed_from_u64(7);
+    let masks: Vec<_> = (0..100).map(|_| mpdc::mask::mask::MpdMask::generate(300, 100, 10, &mut rng)).collect();
+    let s = bench_quick("sum 100 masks 300x100", || {
+        black_box(mpdc::mask::mask::sum_masks(&masks));
+    });
+    println!("{}", s.human());
+    Ok(())
+}

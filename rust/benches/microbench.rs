@@ -1,0 +1,99 @@
+//! Microbenchmarks of the L3 hot paths — the profile targets of the perf
+//! pass (EXPERIMENTS.md §Perf): dense GEMM GFLOP/s, block-diagonal GEMM,
+//! mask apply/pack, permutation gathers, batcher round-trip overhead.
+//!
+//! ```bash
+//! cargo bench --bench microbench
+//! ```
+
+use mpdc::linalg::blockdiag_mm::BlockDiagMatrix;
+use mpdc::linalg::gemm::{gemm, gemm_a_bt, gemm_naive};
+use mpdc::mask::mask::MpdMask;
+use mpdc::mask::prng::Xoshiro256pp;
+use mpdc::server::batcher::{spawn, BatcherConfig, InferBackend};
+use mpdc::util::benchkit::{bench_quick, black_box};
+
+struct Noop;
+
+impl InferBackend for Noop {
+    fn feature_dim(&self) -> usize {
+        8
+    }
+    fn out_dim(&self) -> usize {
+        8
+    }
+    fn max_batch(&self) -> usize {
+        64
+    }
+    fn infer(&mut self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(x.to_vec())
+    }
+}
+
+fn main() {
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+
+    println!("--- dense GEMM (C += A·B) ---");
+    for (m, k, n) in [(64usize, 64usize, 64usize), (128, 128, 128), (256, 256, 256), (32, 784, 300)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_f32()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_f32()).collect();
+        let mut c = vec![0.0f32; m * n];
+        let flops = 2.0 * (m * k * n) as f64;
+        let s = bench_quick(&format!("gemm {m}x{k}x{n}"), || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            gemm(&a, &b, &mut c, m, k, n);
+            black_box(&c);
+        });
+        let s_naive = bench_quick(&format!("gemm_naive {m}x{k}x{n}"), || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            gemm_naive(&a, &b, &mut c, m, k, n);
+            black_box(&c);
+        });
+        println!(
+            "{m:>4}x{k}x{n}: opt {:>8.2} µs ({:.2} GFLOP/s) | naive {:>8.2} µs ({:.2} GFLOP/s) | {:.2}×",
+            s.median_us(),
+            flops / s.median_ns,
+            s_naive.median_us(),
+            flops / s_naive.median_ns,
+            s_naive.median_ns / s.median_ns
+        );
+    }
+
+    println!("\n--- batched fc forward (Y += X·Wᵀ) lenet fc1 ---");
+    let w: Vec<f32> = (0..300 * 784).map(|_| rng.next_f32()).collect();
+    let x: Vec<f32> = (0..32 * 784).map(|_| rng.next_f32()).collect();
+    let mut y = vec![0.0f32; 32 * 300];
+    let s = bench_quick("gemm_a_bt 32x784x300", || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        gemm_a_bt(&x, &w, &mut y, 32, 784, 300);
+        black_box(&y);
+    });
+    println!("{} ({:.2} GFLOP/s)", s.human(), 2.0 * (32 * 784 * 300) as f64 / s.median_ns);
+
+    println!("\n--- mask ops (300×784, 10 blocks) ---");
+    let mask = MpdMask::generate(300, 784, 10, &mut rng);
+    let mut wm: Vec<f32> = (0..300 * 784).map(|_| rng.next_f32()).collect();
+    println!("{}", bench_quick("mask.to_dense", || { black_box(mask.to_dense()); }).human());
+    println!("{}", bench_quick("mask.apply_inplace", || mask.apply_inplace(&mut wm)).human());
+    println!("{}", bench_quick("mask.unpermute", || { black_box(mask.unpermute(&wm)); }).human());
+    println!("{}", bench_quick("mask.pack", || { black_box(mask.pack(&wm)); }).human());
+
+    println!("\n--- block-diagonal GEMM (masked lenet fc1, batch 32) ---");
+    mask.apply_inplace(&mut wm);
+    let bd = BlockDiagMatrix::from_masked_weights(&mask, &wm);
+    let mut yb = vec![0.0f32; 32 * 300];
+    let s = bench_quick("blockdiag 32x784x300 k=10", || {
+        yb.iter_mut().for_each(|v| *v = 0.0);
+        bd.matmul_xt(&x, &mut yb, 32);
+        black_box(&yb);
+    });
+    // useful FLOPs = 2·nnz·batch
+    println!("{} ({:.2} effective GFLOP/s)", s.human(), 2.0 * (bd.nnz() * 32) as f64 / s.median_ns);
+
+    println!("\n--- batcher round-trip overhead (noop backend) ---");
+    let (h, _j) = spawn(Noop, BatcherConfig { max_batch: 1, max_wait: std::time::Duration::ZERO, queue_depth: 16 });
+    let s = bench_quick("batcher roundtrip", || {
+        black_box(h.infer(vec![0.0; 8]).unwrap());
+    });
+    println!("{}", s.human());
+}

@@ -1,0 +1,55 @@
+//! PJRT memory-leak regression check.
+//!
+//! The upstream `xla` crate leaked one device copy of every input argument
+//! per `execute` call (xla_rs.cc `execute`: `buffer.release()` without a
+//! matching delete) — ~2.4 MB/step for the LeNet train step, which OOM-killed
+//! long sweeps like the Fig. 4(a) 100-mask run. We carry a patched crate in
+//! `third_party/xla` (see Cargo.toml `[patch.crates-io]`); this binary runs
+//! 200 train steps and fails if RSS grows by more than 64 MB.
+//!
+//! ```bash
+//! cargo run --release --bin leak_test
+//! ```
+
+use mpdc::runtime::engine::{Engine, Value};
+use mpdc::runtime::manifest::{default_artifact_dir, DType, Manifest};
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").expect("statm");
+    s.split_whitespace().nth(1).unwrap().parse::<f64>().unwrap() * 4096.0 / 1e6
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        println!("SKIP: artifacts not built");
+        return Ok(());
+    }
+    let eng = Engine::cpu(Manifest::load(&dir).map_err(|e| anyhow::anyhow!(e))?)?;
+    let exec = eng.load("lenet_train_step_b50")?;
+    let args: Vec<Value> = exec
+        .meta
+        .inputs
+        .iter()
+        .map(|s| match s.dtype {
+            DType::F32 => Value::F32(vec![0.1; s.numel()], s.shape.clone()),
+            DType::I32 => Value::I32(vec![1; s.numel()], s.shape.clone()),
+        })
+        .collect();
+    // warmup (first call maps executable memory)
+    for _ in 0..10 {
+        std::hint::black_box(exec.run(&args)?);
+    }
+    let start = rss_mb();
+    println!("start rss {start:.1} MB");
+    for i in 0..200 {
+        std::hint::black_box(exec.run(&args)?);
+        if i % 50 == 49 {
+            println!("iter {i}: rss {:.1} MB", rss_mb());
+        }
+    }
+    let grown = rss_mb() - start;
+    anyhow::ensure!(grown < 64.0, "RSS grew {grown:.1} MB over 200 steps — buffer leak regressed");
+    println!("OK: RSS growth {grown:.1} MB over 200 steps");
+    Ok(())
+}

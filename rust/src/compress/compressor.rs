@@ -1,0 +1,251 @@
+//! The MPDCompress compressor: ties a [`SparsityPlan`] to generated masks,
+//! produces the compression accounting of Table 1, and packs trained masked
+//! weights into the block-diagonal inference format (eq. 2).
+
+use crate::compress::plan::SparsityPlan;
+use crate::linalg::blockdiag_mm::BlockDiagMatrix;
+use crate::linalg::csr::Csr;
+use crate::mask::mask::MpdMask;
+
+/// Per-layer row of a compression report.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub name: String,
+    pub dense_params: usize,
+    pub kept_params: usize,
+    pub compression: f64,
+    /// Bytes if stored dense (f32).
+    pub dense_bytes: usize,
+    /// Bytes if stored as CSR (values + col indices + indptr) — what
+    /// irregular pruning pays.
+    pub csr_bytes: usize,
+    /// Bytes in MPD packed-block storage (values + one span pair per block).
+    pub packed_bytes: usize,
+}
+
+/// Whole-model compression accounting (paper Table 1 columns).
+#[derive(Clone, Debug)]
+pub struct CompressionReport {
+    pub layers: Vec<LayerReport>,
+}
+
+impl CompressionReport {
+    pub fn total_dense_params(&self) -> usize {
+        self.layers.iter().map(|l| l.dense_params).sum()
+    }
+
+    pub fn total_kept_params(&self) -> usize {
+        self.layers.iter().map(|l| l.kept_params).sum()
+    }
+
+    pub fn overall_compression(&self) -> f64 {
+        self.total_dense_params() as f64 / self.total_kept_params().max(1) as f64
+    }
+
+    pub fn total_packed_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.packed_bytes).sum()
+    }
+
+    pub fn total_csr_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.csr_bytes).sum()
+    }
+
+    pub fn total_dense_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.dense_bytes).sum()
+    }
+}
+
+/// The compressor object: plan + masks (+ seed for provenance).
+pub struct MpdCompressor {
+    pub plan: SparsityPlan,
+    pub masks: Vec<Option<MpdMask>>,
+    pub seed: u64,
+}
+
+impl MpdCompressor {
+    /// Create with random permutation masks (the algorithm proper).
+    pub fn new(plan: SparsityPlan, seed: u64) -> Self {
+        let masks = plan.generate_masks(seed);
+        Self { plan, masks, seed }
+    }
+
+    /// Create with the §3.1-ablation non-permuted masks.
+    pub fn new_non_permuted(plan: SparsityPlan) -> Self {
+        let masks = plan.generate_non_permuted_masks();
+        Self { plan, masks, seed: 0 }
+    }
+
+    pub fn nlayers(&self) -> usize {
+        self.plan.layers.len()
+    }
+
+    /// Compression accounting without needing trained weights (structure is
+    /// weight-independent — that is the whole point of the format).
+    pub fn report(&self) -> CompressionReport {
+        let layers = self
+            .plan
+            .layers
+            .iter()
+            .zip(&self.masks)
+            .map(|(lp, mask)| {
+                let dense_params = lp.dense_params();
+                let dense_bytes = dense_params * 4;
+                match mask {
+                    Some(m) => {
+                        let kept = m.nnz();
+                        LayerReport {
+                            name: lp.name.clone(),
+                            dense_params,
+                            kept_params: kept,
+                            compression: dense_params as f64 / kept as f64,
+                            dense_bytes,
+                            // CSR of a kept-weight matrix: nnz f32 + nnz u32 + (rows+1) u32
+                            csr_bytes: kept * 8 + (lp.out_dim + 1) * 4,
+                            packed_bytes: kept * 4 + m.nblocks() * 16,
+                        }
+                    }
+                    None => LayerReport {
+                        name: lp.name.clone(),
+                        dense_params,
+                        kept_params: dense_params,
+                        compression: 1.0,
+                        dense_bytes,
+                        csr_bytes: dense_bytes,
+                        packed_bytes: dense_bytes,
+                    },
+                }
+            })
+            .collect();
+        CompressionReport { layers }
+    }
+
+    /// Pack trained masked weights into the inference format. `weights[i]`
+    /// is the `[out × in]` trained (masked) weight matrix of layer `i`.
+    /// Dense layers pass through as `PackedLayer::Dense`.
+    pub fn pack(&self, weights: &[Vec<f32>]) -> Vec<PackedLayer> {
+        assert_eq!(weights.len(), self.nlayers());
+        self.masks
+            .iter()
+            .zip(&self.plan.layers)
+            .zip(weights)
+            .map(|((mask, lp), w)| {
+                assert_eq!(w.len(), lp.dense_params(), "{}: weight size mismatch", lp.name);
+                match mask {
+                    Some(m) => PackedLayer::BlockDiag(BlockDiagMatrix::from_masked_weights(m, w)),
+                    None => PackedLayer::Dense { w: w.clone(), out_dim: lp.out_dim, in_dim: lp.in_dim },
+                }
+            })
+            .collect()
+    }
+
+    /// Build the CSR (irregular) representation of the same masked weights —
+    /// the §3.3 competitor.
+    pub fn to_csr(&self, weights: &[Vec<f32>]) -> Vec<Option<Csr>> {
+        assert_eq!(weights.len(), self.nlayers());
+        self.masks
+            .iter()
+            .zip(&self.plan.layers)
+            .zip(weights)
+            .map(|((mask, lp), w)| mask.as_ref().map(|_| Csr::from_dense(w, lp.out_dim, lp.in_dim)))
+            .collect()
+    }
+}
+
+/// One packed inference layer.
+pub enum PackedLayer {
+    Dense { w: Vec<f32>, out_dim: usize, in_dim: usize },
+    BlockDiag(BlockDiagMatrix),
+}
+
+impl PackedLayer {
+    pub fn out_dim(&self) -> usize {
+        match self {
+            PackedLayer::Dense { out_dim, .. } => *out_dim,
+            PackedLayer::BlockDiag(bd) => bd.layout.rows,
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        match self {
+            PackedLayer::Dense { in_dim, .. } => *in_dim,
+            PackedLayer::BlockDiag(bd) => bd.layout.cols,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::prng::Xoshiro256pp;
+
+    #[test]
+    fn report_matches_paper_table1_lenet() {
+        // LeNet-300-100 @10 blocks: 266.2k dense FC weights → ~26.7k kept.
+        let c = MpdCompressor::new(SparsityPlan::lenet300(10), 1);
+        let r = c.report();
+        assert_eq!(r.total_dense_params(), 266_200);
+        // fc3 dense (1000) + fc1/fc2 kept ≈ 23520+3000
+        let expect_kept = 23_520 + 3_000 + 1_000;
+        // ragged blocks can differ by a handful of weights
+        assert!(
+            (r.total_kept_params() as i64 - expect_kept as i64).abs() < 200,
+            "kept {}",
+            r.total_kept_params()
+        );
+        // overall ≈ 9.7× (fc3 stays dense)
+        assert!(r.overall_compression() > 9.0 && r.overall_compression() < 10.5);
+        // format byte ordering
+        assert!(r.total_packed_bytes() < r.total_csr_bytes());
+        assert!(r.total_csr_bytes() < r.total_dense_bytes());
+    }
+
+    #[test]
+    fn report_alexnet_8x() {
+        // §3.2: 12.5% sparsity ⇒ 8 blocks ⇒ Table 1 "11M" kept of 87.98M.
+        let c = MpdCompressor::new(SparsityPlan::alexnet(8), 2);
+        let r = c.report();
+        let kept_m = r.total_kept_params() as f64 / 1e6;
+        assert!((kept_m - 11.0).abs() < 0.05, "kept {kept_m}M");
+        assert!((r.overall_compression() - 8.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn pack_roundtrip_values() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let plan = SparsityPlan::new(vec![
+            crate::compress::plan::LayerPlan::masked("a", 12, 9, 3),
+            crate::compress::plan::LayerPlan::dense("b", 4, 12),
+        ])
+        .unwrap();
+        let c = MpdCompressor::new(plan, 7);
+        let w0: Vec<f32> = (0..12 * 9).map(|_| rng.next_f32()).collect();
+        let w0m = c.masks[0].as_ref().unwrap().apply(&w0);
+        let w1: Vec<f32> = (0..48).map(|_| rng.next_f32()).collect();
+        let packed = c.pack(&[w0m.clone(), w1.clone()]);
+        match &packed[0] {
+            PackedLayer::BlockDiag(bd) => assert_eq!(bd.nnz(), c.masks[0].as_ref().unwrap().nnz()),
+            _ => panic!("expected blockdiag"),
+        }
+        match &packed[1] {
+            PackedLayer::Dense { w, .. } => assert_eq!(*w, w1),
+            _ => panic!("expected dense"),
+        }
+    }
+
+    #[test]
+    fn csr_layer_count() {
+        let c = MpdCompressor::new(SparsityPlan::lenet300(10), 5);
+        let weights: Vec<Vec<f32>> = c.plan.layers.iter().map(|l| vec![0.5; l.dense_params()]).collect();
+        let masked: Vec<Vec<f32>> = weights
+            .iter()
+            .zip(&c.masks)
+            .map(|(w, m)| match m {
+                Some(m) => m.apply(w),
+                None => w.clone(),
+            })
+            .collect();
+        let csrs = c.to_csr(&masked);
+        assert!(csrs[0].is_some() && csrs[1].is_some() && csrs[2].is_none());
+        assert_eq!(csrs[0].as_ref().unwrap().nnz(), c.masks[0].as_ref().unwrap().nnz());
+    }
+}

@@ -1,0 +1,12 @@
+//! MPDCompress public API: sparsity plans, the compressor (mask generation +
+//! Table-1 accounting + eq.-2 packing), the fused packed inference engine,
+//! and the magnitude-pruning baseline.
+pub mod compressor;
+pub mod packed_model;
+pub mod plan;
+pub mod pruning;
+pub mod tilespace;
+
+pub use compressor::{CompressionReport, MpdCompressor, PackedLayer};
+pub use packed_model::PackedMlp;
+pub use plan::{LayerPlan, SparsityPlan};

@@ -1,0 +1,201 @@
+//! Sparsity plans: which FC layers of a model get MPD masks and at what
+//! compression level. This is the user-facing entry point of the algorithm
+//! ("Creating Masks", Algorithm 1 lines 1–9).
+
+use crate::mask::mask::MpdMask;
+use crate::mask::prng::Xoshiro256pp;
+
+/// Plan for one FC layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerPlan {
+    /// Human-readable layer name (e.g. "fc6").
+    pub name: String,
+    /// Output dimension (`d_{i+1}` — rows of `W_i`).
+    pub out_dim: usize,
+    /// Input dimension (`d_i` — cols of `W_i`).
+    pub in_dim: usize,
+    /// Number of diagonal blocks; `None` leaves the layer dense.
+    /// Density ≈ 1/nblocks, compression ≈ nblocks× (paper: 10% sparsity ⇔
+    /// 10 blocks ⇔ 10× compression).
+    pub nblocks: Option<usize>,
+}
+
+impl LayerPlan {
+    pub fn masked(name: &str, out_dim: usize, in_dim: usize, nblocks: usize) -> Self {
+        Self { name: name.into(), out_dim, in_dim, nblocks: Some(nblocks) }
+    }
+
+    pub fn dense(name: &str, out_dim: usize, in_dim: usize) -> Self {
+        Self { name: name.into(), out_dim, in_dim, nblocks: None }
+    }
+
+    pub fn dense_params(&self) -> usize {
+        self.out_dim * self.in_dim
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.out_dim == 0 || self.in_dim == 0 {
+            return Err(format!("{}: zero dimension", self.name));
+        }
+        if let Some(k) = self.nblocks {
+            if k == 0 {
+                return Err(format!("{}: zero blocks", self.name));
+            }
+            if k > self.out_dim || k > self.in_dim {
+                return Err(format!(
+                    "{}: {} blocks exceeds min dim {} — cannot form non-empty blocks",
+                    self.name,
+                    k,
+                    self.out_dim.min(self.in_dim)
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A whole-model sparsity plan (FC layers in network order).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparsityPlan {
+    pub layers: Vec<LayerPlan>,
+}
+
+impl SparsityPlan {
+    pub fn new(layers: Vec<LayerPlan>) -> Result<Self, String> {
+        for l in &layers {
+            l.validate()?;
+        }
+        Ok(Self { layers })
+    }
+
+    /// Generate the per-layer masks (Algorithm 1, "Creating Masks"):
+    /// deterministic given `seed`, one independent PRNG stream per layer.
+    pub fn generate_masks(&self, seed: u64) -> Vec<Option<MpdMask>> {
+        let mut root = Xoshiro256pp::seed_from_u64(seed);
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let mut rng = root.fork(i as u64);
+                l.nblocks.map(|k| MpdMask::generate(l.out_dim, l.in_dim, k, &mut rng))
+            })
+            .collect()
+    }
+
+    /// §3.1-ablation variant: non-permuted block-diagonal masks.
+    pub fn generate_non_permuted_masks(&self) -> Vec<Option<MpdMask>> {
+        self.layers
+            .iter()
+            .map(|l| l.nblocks.map(|k| MpdMask::non_permuted(l.out_dim, l.in_dim, k)))
+            .collect()
+    }
+
+    // ---- the paper's model plans -------------------------------------
+
+    /// LeNet-300-100 (MNIST): mask 784×300 and 300×100 at `k` blocks, dense
+    /// 100×10 classifier (paper §3.1: masks on the first two FC layers).
+    pub fn lenet300(k: usize) -> Self {
+        Self::new(vec![
+            LayerPlan::masked("fc1", 300, 784, k),
+            LayerPlan::masked("fc2", 100, 300, k),
+            LayerPlan::dense("fc3", 10, 100),
+        ])
+        .expect("static plan")
+    }
+
+    /// Deep MNIST (TF tutorial conv net): conv-conv then FC 3136→1024→10;
+    /// the big FC layer is masked (Table 1: 3.22 M → 322 k ⇒ 10×).
+    pub fn deep_mnist(k: usize) -> Self {
+        Self::new(vec![
+            LayerPlan::masked("fc1", 1024, 3136, k),
+            LayerPlan::masked("fc2", 10, 1024, k.min(10)),
+        ])
+        .expect("static plan")
+    }
+
+    /// CIFAR-10 net (TF tutorial): FC 2304→384→192→10
+    /// (Table 1: 958.4 k → 95.84 k ⇒ 10×).
+    pub fn cifar10(k: usize) -> Self {
+        Self::new(vec![
+            LayerPlan::masked("fc1", 384, 2304, k),
+            LayerPlan::masked("fc2", 192, 384, k),
+            LayerPlan::masked("fc3", 10, 192, k.min(10)),
+        ])
+        .expect("static plan")
+    }
+
+    /// AlexNet FC layers at paper sizes (§3.2): FC6 16384×4096,
+    /// FC7 4096×4096, FC8 4096×1000 — all three masked.
+    pub fn alexnet(k: usize) -> Self {
+        Self::new(vec![
+            LayerPlan::masked("fc6", 4096, 16384, k),
+            LayerPlan::masked("fc7", 4096, 4096, k),
+            LayerPlan::masked("fc8", 1000, 4096, k),
+        ])
+        .expect("static plan")
+    }
+
+    /// Scaled-down AlexNet used for actual training on this testbed
+    /// (DESIGN.md §2 substitution): same 3-FC topology, smaller dims.
+    pub fn tiny_alexnet(k: usize, classes: usize) -> Self {
+        Self::new(vec![
+            LayerPlan::masked("fc6", 256, 1024, k),
+            LayerPlan::masked("fc7", 256, 256, k),
+            LayerPlan::masked("fc8", classes, 256, k.min(classes)),
+        ])
+        .expect("static plan")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation() {
+        assert!(LayerPlan::masked("x", 10, 10, 11).validate().is_err());
+        assert!(LayerPlan::masked("x", 10, 10, 10).validate().is_ok());
+        assert!(LayerPlan::dense("x", 0, 10).validate().is_err());
+        assert!(SparsityPlan::new(vec![LayerPlan::masked("x", 4, 4, 9)]).is_err());
+    }
+
+    #[test]
+    fn mask_generation_matches_plan() {
+        let plan = SparsityPlan::lenet300(10);
+        let masks = plan.generate_masks(42);
+        assert_eq!(masks.len(), 3);
+        let m1 = masks[0].as_ref().unwrap();
+        assert_eq!((m1.rows(), m1.cols(), m1.nblocks()), (300, 784, 10));
+        assert!(masks[2].is_none());
+        // deterministic
+        let again = plan.generate_masks(42);
+        assert_eq!(m1.to_dense(), again[0].as_ref().unwrap().to_dense());
+        // seed-sensitive
+        let other = plan.generate_masks(43);
+        assert_ne!(m1.to_dense(), other[0].as_ref().unwrap().to_dense());
+    }
+
+    #[test]
+    fn paper_plan_param_counts() {
+        // Table 1 "Non-compressed" FC params:
+        // LeNet-300-100: 784·300 + 300·100 + 100·10 ≈ 272k  (paper: 272k)
+        let lenet: usize = SparsityPlan::lenet300(10).layers.iter().map(|l| l.dense_params()).sum();
+        assert_eq!(lenet, 266_200); // 235200+30000+1000 — paper rounds to 272k incl. biases
+        // AlexNet: 16384·4096 + 4096·4096 + 4096·1000 = 87.98M (paper: 87.98M)
+        let alex: usize = SparsityPlan::alexnet(8).layers.iter().map(|l| l.dense_params()).sum();
+        assert_eq!(alex, 16384 * 4096 + 4096 * 4096 + 4096 * 1000);
+        assert!((alex as f64 / 1e6 - 87.98).abs() < 0.1);
+        // Deep MNIST: 3136·1024 + 1024·10 = 3.22M (paper: 3.22M)
+        let dm: usize = SparsityPlan::deep_mnist(10).layers.iter().map(|l| l.dense_params()).sum();
+        assert!((dm as f64 / 1e6 - 3.22).abs() < 0.01);
+    }
+
+    #[test]
+    fn non_permuted_masks_are_identity_permuted() {
+        let plan = SparsityPlan::lenet300(10);
+        let masks = plan.generate_non_permuted_masks();
+        let m = masks[0].as_ref().unwrap();
+        assert!(m.p_row.is_identity());
+        assert!(m.p_col.is_identity());
+    }
+}

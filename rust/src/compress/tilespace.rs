@@ -1,0 +1,226 @@
+//! Tile-space packing: the rust side of the `*_infer_packed_*` artifact
+//! contract (mirrored by `python/tests/mpd_ref.py`, which pins it against
+//! the dense computation in pytest).
+//!
+//! The AOT packed executable works on *uniform* zero-padded blocks —
+//! `IB = ceil(in/k)`, `OB = ceil(out/k)` — because TPU tiles are static:
+//! ragged paper layers (784×300 at k=10) pad up, and zero padding is exact.
+//! The coordinator (this module) prepares:
+//!
+//! * `w_blocks`: `[K, OB, IB]` padded blocks of the eq.-2 re-blocked `W*`
+//! * input tiles: activations gathered into per-block contiguous lanes
+//! * bias tiles: biases permuted into block-row space
+//! * inter-layer gathers: i32 index vectors fusing `P_row(i)` → `P_col(i+1)`
+//!   (the paper's "internal permutations" — a single gather per boundary)
+
+use crate::mask::mask::MpdMask;
+
+/// Uniform tile dims `(OB, IB)` for a mask.
+pub fn tile_dims(mask: &MpdMask) -> (usize, usize) {
+    let k = mask.nblocks();
+    (mask.rows().div_ceil(k), mask.cols().div_ceil(k))
+}
+
+/// `[K, OB, IB]` zero-padded packed blocks of `W* = unpermute(W̄)` (row-major
+/// flattened). Input is the trained *masked* weight matrix.
+pub fn packed_blocks(mask: &MpdMask, w_masked: &[f32]) -> Vec<f32> {
+    let (ob, ib) = tile_dims(mask);
+    let k = mask.nblocks();
+    let star = mask.unpermute(w_masked);
+    let cols = mask.cols();
+    let mut out = vec![0.0f32; k * ob * ib];
+    for b in 0..k {
+        let rs = mask.layout.row_spans[b];
+        let cs = mask.layout.col_spans[b];
+        for (ri, r) in (rs.start..rs.end()).enumerate() {
+            let src = &star[r * cols + cs.start..r * cols + cs.end()];
+            let dst = &mut out[(b * ob + ri) * ib..(b * ob + ri) * ib + cs.len];
+            dst.copy_from_slice(src);
+        }
+    }
+    out
+}
+
+/// Gather indices mapping logical input features → layer-input tile space:
+/// `tiles[j] = x[g[j]]` (padded lanes point at 0 and are multiplied by the
+/// zero-padded weight columns, so their value is irrelevant).
+pub fn input_tile_gather(mask: &MpdMask) -> Vec<u32> {
+    let (_, ib) = tile_dims(mask);
+    let k = mask.nblocks();
+    let mut g = vec![0u32; k * ib];
+    for b in 0..k {
+        let cs = mask.layout.col_spans[b];
+        for i in 0..cs.len {
+            // x'[c'] = x[p_col.dest(c')]
+            g[b * ib + i] = mask.p_col.dest(cs.start + i) as u32;
+        }
+    }
+    g
+}
+
+/// Apply a gather: `out[j] = x[g[j]]` per sample (row-major batch).
+pub fn gather_rows(x: &[f32], batch: usize, in_dim: usize, g: &[u32]) -> Vec<f32> {
+    assert_eq!(x.len(), batch * in_dim);
+    let mut out = vec![0.0f32; batch * g.len()];
+    for bi in 0..batch {
+        let src = &x[bi * in_dim..(bi + 1) * in_dim];
+        let dst = &mut out[bi * g.len()..(bi + 1) * g.len()];
+        for (j, &s) in g.iter().enumerate() {
+            dst[j] = src[s as usize];
+        }
+    }
+    out
+}
+
+/// Bias in output tile space: `bt[b*OB + o] = bias[p_row.dest(rs[b].start+o)]`.
+pub fn bias_tiles(mask: &MpdMask, bias: &[f32]) -> Vec<f32> {
+    assert_eq!(bias.len(), mask.rows());
+    let (ob, _) = tile_dims(mask);
+    let k = mask.nblocks();
+    let mut out = vec![0.0f32; k * ob];
+    for b in 0..k {
+        let rs = mask.layout.row_spans[b];
+        for o in 0..rs.len {
+            out[b * ob + o] = bias[mask.p_row.dest(rs.start + o)];
+        }
+    }
+    out
+}
+
+/// Position of each logical output neuron inside the output tile space:
+/// `tiles[pos[c]] = logical c` — i.e. `logical[c] = tiles[pos[c]]` gather.
+pub fn output_tile_positions(mask: &MpdMask) -> Vec<u32> {
+    let (ob, _) = tile_dims(mask);
+    let inv_row = mask.p_row.inverse();
+    let mut pos = vec![0u32; mask.rows()];
+    for c in 0..mask.rows() {
+        let rp = inv_row.dest(c);
+        let b = mask.layout.row_block(rp);
+        let rs = mask.layout.row_spans[b];
+        pos[c] = (b * ob + (rp - rs.start)) as u32;
+    }
+    pos
+}
+
+/// Inter-layer gather: `next_in_tiles[j] = prev_out_tiles[g[j]]` — fuses
+/// `P_row(prev)⁻¹ ∘ P_col(next)` into one index vector. Padded lanes → 0.
+pub fn interlayer_gather(prev: &MpdMask, next: &MpdMask) -> Vec<u32> {
+    assert_eq!(prev.rows(), next.cols(), "layer dims must chain");
+    let prev_pos = output_tile_positions(prev);
+    let (_, ib_n) = tile_dims(next);
+    let k = next.nblocks();
+    let mut g = vec![0u32; k * ib_n];
+    for b in 0..k {
+        let cs = next.layout.col_spans[b];
+        for i in 0..cs.len {
+            let logical = next.p_col.dest(cs.start + i);
+            g[b * ib_n + i] = prev_pos[logical];
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::gemm_a_bt;
+    use crate::mask::prng::Xoshiro256pp;
+
+    /// Reference tile-space forward for one masked layer:
+    /// y_tiles = blockdiag(x_tiles) (computed densely per block).
+    fn blockdiag_forward(wb: &[f32], x_tiles: &[f32], batch: usize, k: usize, ob: usize, ib: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; batch * k * ob];
+        for bi in 0..batch {
+            for b in 0..k {
+                for o in 0..ob {
+                    let wrow = &wb[(b * ob + o) * ib..(b * ob + o + 1) * ib];
+                    let xrow = &x_tiles[bi * k * ib + b * ib..bi * k * ib + (b + 1) * ib];
+                    let acc: f32 = wrow.iter().zip(xrow).map(|(w, x)| w * x).sum();
+                    y[bi * k * ob + b * ob + o] = acc;
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn single_layer_tilespace_matches_dense() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for (rows, cols, k) in [(300, 784, 10), (100, 300, 10), (30, 20, 7)] {
+            let mask = MpdMask::generate(rows, cols, k, &mut rng);
+            let w: Vec<f32> = (0..rows * cols).map(|_| rng.next_f32() - 0.5).collect();
+            let wm = mask.apply(&w);
+            let batch = 3;
+            let x: Vec<f32> = (0..batch * cols).map(|_| rng.next_f32()).collect();
+            // dense reference: y = x · W̄ᵀ
+            let mut y_ref = vec![0.0f32; batch * rows];
+            gemm_a_bt(&x, &wm, &mut y_ref, batch, cols, rows);
+            // tile-space path
+            let (ob, ib) = tile_dims(&mask);
+            let wb = packed_blocks(&mask, &wm);
+            let xt = gather_rows(&x, batch, cols, &input_tile_gather(&mask));
+            let yt = blockdiag_forward(&wb, &xt, batch, k, ob, ib);
+            // scatter back via output positions
+            let pos = output_tile_positions(&mask);
+            for bi in 0..batch {
+                for c in 0..rows {
+                    let got = yt[bi * k * ob + pos[c] as usize];
+                    let want = y_ref[bi * rows + c];
+                    assert!((got - want).abs() < 1e-4, "{rows}x{cols} k={k} c={c}: {got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bias_tiles_land_on_positions() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let mask = MpdMask::generate(30, 20, 4, &mut rng);
+        let bias: Vec<f32> = (0..30).map(|i| i as f32).collect();
+        let bt = bias_tiles(&mask, &bias);
+        let pos = output_tile_positions(&mask);
+        for c in 0..30 {
+            assert_eq!(bt[pos[c] as usize], bias[c]);
+        }
+        // padded slots are zero
+        let (ob, _) = tile_dims(&mask);
+        let used: std::collections::HashSet<u32> = pos.iter().cloned().collect();
+        for j in 0..4 * ob {
+            if !used.contains(&(j as u32)) {
+                assert_eq!(bt[j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn two_layer_chain_with_interlayer_gather() {
+        // x → masked L1 → gather → masked L2 == dense masked chain
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let m1 = MpdMask::generate(40, 24, 4, &mut rng);
+        let m2 = MpdMask::generate(16, 40, 4, &mut rng);
+        let w1: Vec<f32> = (0..40 * 24).map(|_| rng.next_f32() - 0.5).collect();
+        let w2: Vec<f32> = (0..16 * 40).map(|_| rng.next_f32() - 0.5).collect();
+        let (w1m, w2m) = (m1.apply(&w1), m2.apply(&w2));
+        let batch = 2;
+        let x: Vec<f32> = (0..batch * 24).map(|_| rng.next_f32()).collect();
+        // dense reference (no relu — pure linear chain)
+        let mut h_ref = vec![0.0f32; batch * 40];
+        gemm_a_bt(&x, &w1m, &mut h_ref, batch, 24, 40);
+        let mut y_ref = vec![0.0f32; batch * 16];
+        gemm_a_bt(&h_ref, &w2m, &mut y_ref, batch, 40, 16);
+        // tile path
+        let (ob1, ib1) = tile_dims(&m1);
+        let (ob2, ib2) = tile_dims(&m2);
+        let xt = gather_rows(&x, batch, 24, &input_tile_gather(&m1));
+        let h1 = blockdiag_forward(&packed_blocks(&m1, &w1m), &xt, batch, 4, ob1, ib1);
+        let h2in = gather_rows(&h1, batch, 4 * ob1, &interlayer_gather(&m1, &m2));
+        let y2 = blockdiag_forward(&packed_blocks(&m2, &w2m), &h2in, batch, 4, ob2, ib2);
+        let pos = output_tile_positions(&m2);
+        for bi in 0..batch {
+            for c in 0..16 {
+                let got = y2[bi * 4 * ob2 + pos[c] as usize];
+                assert!((got - y_ref[bi * 16 + c]).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Configuration system: a TOML-subset parser (no external crates available
+//! offline) + typed experiment configs with validation.
+//!
+//! Supported TOML subset — everything our configs and examples use:
+//! `[table]` / `[table.sub]` headers, `key = value` with strings, integers,
+//! floats, booleans, and homogeneous arrays; `#` comments. No inline tables,
+//! no arrays-of-tables, no multi-line strings (parse errors name the line).
+
+pub mod toml;
+
+use crate::compress::plan::{LayerPlan, SparsityPlan};
+pub use toml::{TomlDoc, TomlValue};
+
+/// Model choice for the CLI / examples.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Lenet300,
+    DeepMnist,
+    Cifar10,
+    TinyAlexnet,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "lenet" | "lenet300" | "lenet-300-100" => Ok(Self::Lenet300),
+            "deep_mnist" | "deepmnist" => Ok(Self::DeepMnist),
+            "cifar10" | "cifar" => Ok(Self::Cifar10),
+            "tiny_alexnet" | "alexnet" => Ok(Self::TinyAlexnet),
+            other => Err(format!("unknown model {other} (try lenet|deep_mnist|cifar10|tiny_alexnet)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Lenet300 => "lenet",
+            Self::DeepMnist => "deep_mnist",
+            Self::Cifar10 => "cifar10",
+            Self::TinyAlexnet => "tiny_alexnet",
+        }
+    }
+
+    /// Train-step artifact name for this model.
+    pub fn train_artifact(&self) -> &'static str {
+        match self {
+            Self::Lenet300 => "lenet_train_step_b50",
+            Self::DeepMnist => "deep_mnist_train_step_b32",
+            Self::Cifar10 => "cifar10_train_step_b32",
+            Self::TinyAlexnet => "tiny_alexnet_train_step_b32",
+        }
+    }
+
+    /// Inference artifact name.
+    pub fn infer_artifact(&self) -> &'static str {
+        match self {
+            Self::Lenet300 => "lenet_infer_b32",
+            Self::DeepMnist => "deep_mnist_infer_b128",
+            Self::Cifar10 => "cifar10_infer_b128",
+            Self::TinyAlexnet => "tiny_alexnet_infer_b128",
+        }
+    }
+
+    /// The *training-scale* sparsity plan used on this testbed (lenet trains
+    /// at paper scale; conv models use the scaled "lite" FC dims that match
+    /// the artifacts — see DESIGN.md §2).
+    pub fn plan(&self, k: usize) -> Result<SparsityPlan, String> {
+        match self {
+            Self::Lenet300 => SparsityPlan::new(vec![
+                LayerPlan::masked("fc1", 300, 784, k),
+                LayerPlan::masked("fc2", 100, 300, k),
+                LayerPlan::dense("fc3", 10, 100),
+            ]),
+            Self::DeepMnist => SparsityPlan::new(vec![
+                LayerPlan::masked("fc1", 256, 784, k),
+                LayerPlan::dense("fc2", 10, 256),
+            ]),
+            Self::Cifar10 => SparsityPlan::new(vec![
+                LayerPlan::masked("fc1", 192, 2048, k),
+                LayerPlan::masked("fc2", 96, 192, k),
+                LayerPlan::dense("fc3", 10, 96),
+            ]),
+            Self::TinyAlexnet => SparsityPlan::new(vec![
+                LayerPlan::masked("fc6", 256, 1024, k),
+                LayerPlan::masked("fc7", 256, 256, k),
+                LayerPlan::masked("fc8", 16, 256, k.min(16)),
+            ]),
+        }
+    }
+
+    /// Paper-scale plan (used for Table-1 parameter accounting).
+    pub fn paper_plan(&self, k: usize) -> SparsityPlan {
+        match self {
+            Self::Lenet300 => SparsityPlan::lenet300(k),
+            Self::DeepMnist => SparsityPlan::deep_mnist(k),
+            Self::Cifar10 => SparsityPlan::cifar10(k),
+            Self::TinyAlexnet => SparsityPlan::alexnet(k),
+        }
+    }
+}
+
+/// A full experiment config (CLI defaults + TOML override).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub model: ModelKind,
+    pub nblocks: usize,
+    pub seed: u64,
+    pub steps: usize,
+    pub lr: f32,
+    pub lr_decay: f32,
+    pub lr_decay_every: usize,
+    pub train_samples: usize,
+    pub test_samples: usize,
+    pub artifacts_dir: Option<String>,
+    pub out_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            model: ModelKind::Lenet300,
+            nblocks: 10,
+            seed: 42,
+            steps: 400,
+            lr: 0.05,
+            lr_decay: 1.0,
+            lr_decay_every: usize::MAX,
+            train_samples: 2000,
+            test_samples: 500,
+            artifacts_dir: None,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML file; missing keys keep defaults.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = Self::default();
+        if let Some(v) = doc.get_str("experiment.model") {
+            cfg.model = ModelKind::parse(v)?;
+        }
+        if let Some(v) = doc.get_int("experiment.nblocks") {
+            cfg.nblocks = v as usize;
+        }
+        if let Some(v) = doc.get_int("experiment.seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_int("train.steps") {
+            cfg.steps = v as usize;
+        }
+        if let Some(v) = doc.get_float("train.lr") {
+            cfg.lr = v as f32;
+        }
+        if let Some(v) = doc.get_float("train.lr_decay") {
+            cfg.lr_decay = v as f32;
+        }
+        if let Some(v) = doc.get_int("train.lr_decay_every") {
+            cfg.lr_decay_every = v as usize;
+        }
+        if let Some(v) = doc.get_int("data.train_samples") {
+            cfg.train_samples = v as usize;
+        }
+        if let Some(v) = doc.get_int("data.test_samples") {
+            cfg.test_samples = v as usize;
+        }
+        if let Some(v) = doc.get_str("paths.artifacts") {
+            cfg.artifacts_dir = Some(v.to_string());
+        }
+        if let Some(v) = doc.get_str("paths.out") {
+            cfg.out_dir = v.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nblocks == 0 {
+            return Err("nblocks must be ≥ 1".into());
+        }
+        if self.steps == 0 {
+            return Err("steps must be ≥ 1".into());
+        }
+        if !(self.lr > 0.0) {
+            return Err("lr must be positive".into());
+        }
+        if self.train_samples == 0 || self.test_samples == 0 {
+            return Err("sample counts must be positive".into());
+        }
+        // plan validity at this model/nblocks combination
+        self.model.plan(self.nblocks)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_kind_parse() {
+        assert_eq!(ModelKind::parse("lenet").unwrap(), ModelKind::Lenet300);
+        assert_eq!(ModelKind::parse("alexnet").unwrap(), ModelKind::TinyAlexnet);
+        assert!(ModelKind::parse("resnet").is_err());
+    }
+
+    #[test]
+    fn from_toml_overrides_defaults() {
+        let text = r#"
+# experiment file
+[experiment]
+model = "cifar10"
+nblocks = 8
+seed = 7
+
+[train]
+steps = 123
+lr = 0.01
+
+[data]
+train_samples = 99
+test_samples = 50
+
+[paths]
+out = "results/custom"
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.model, ModelKind::Cifar10);
+        assert_eq!(cfg.nblocks, 8);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.steps, 123);
+        assert!((cfg.lr - 0.01).abs() < 1e-9);
+        assert_eq!(cfg.train_samples, 99);
+        assert_eq!(cfg.out_dir, "results/custom");
+        // unspecified keys keep defaults
+        assert_eq!(cfg.test_samples, 50);
+        assert!((cfg.lr_decay - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validation_rejects_bad_combos() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.nblocks = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = ModelKind::TinyAlexnet;
+        cfg.nblocks = 100_000; // exceeds layer dims
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn artifact_names_exist_for_all_models() {
+        for m in [ModelKind::Lenet300, ModelKind::DeepMnist, ModelKind::Cifar10, ModelKind::TinyAlexnet] {
+            assert!(m.train_artifact().contains("train_step"));
+            assert!(m.infer_artifact().contains("infer"));
+            let plan = m.plan(8).unwrap();
+            assert!(!plan.layers.is_empty());
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! TOML-subset parser (see module docs in `config/mod.rs` for the subset).
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+/// A parsed document: dotted-path → value (table headers are flattened, so
+/// `[a.b]` + `c = 1` is stored under `"a.b.c"`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut entries = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |m: String| format!("line {}: {m}", lineno + 1);
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated table header".into()))?;
+                let name = name.trim();
+                if name.is_empty() || name.starts_with('[') {
+                    return Err(err(format!("unsupported table header {line:?}")));
+                }
+                validate_key_path(name).map_err(&err)?;
+                prefix = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| err(format!("expected key = value, got {line:?}")))?;
+            let key = key.trim();
+            validate_key_path(key).map_err(&err)?;
+            let full = if prefix.is_empty() { key.to_string() } else { format!("{prefix}.{key}") };
+            let parsed = parse_value(value.trim()).map_err(&err)?;
+            if entries.insert(full.clone(), parsed).is_some() {
+                return Err(err(format!("duplicate key {full}")));
+            }
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        match self.get(path) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, path: &str) -> Option<i64> {
+        match self.get(path) {
+            Some(TomlValue::Int(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`lr = 1` is a valid float).
+    pub fn get_float(&self, path: &str) -> Option<f64> {
+        match self.get(path) {
+            Some(TomlValue::Float(v)) => Some(*v),
+            Some(TomlValue::Int(v)) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        match self.get(path) {
+            Some(TomlValue::Bool(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_array(&self, path: &str) -> Option<&[TomlValue]> {
+        match self.get(path) {
+            Some(TomlValue::Array(v)) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside a string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn validate_key_path(path: &str) -> Result<(), String> {
+    for part in path.split('.') {
+        if part.is_empty()
+            || !part.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            return Err(format!("bad key {path:?}"));
+        }
+    }
+    Ok(())
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("escaped quotes not supported in this subset".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = split_top_level(inner)?
+            .into_iter()
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    let t = s.replace('_', "");
+    if !t.contains('.') && !t.contains('e') && !t.contains('E') {
+        if let Ok(v) = t.parse::<i64>() {
+            return Ok(TomlValue::Int(v));
+        }
+    }
+    if let Ok(v) = t.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split an array body on commas, respecting nested brackets and strings.
+fn split_top_level(s: &str) -> Result<Vec<&str>, String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.checked_sub(1).ok_or("unbalanced brackets")?,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str || depth != 0 {
+        return Err("unbalanced array".into());
+    }
+    parts.push(&s[start..]);
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_types() {
+        let doc = TomlDoc::parse(
+            r#"
+s = "hello"
+i = 42
+neg = -3
+f = 2.5
+sci = 1e-3
+b = true
+arr = [1, 2, 3]
+nested = [[1, 2], [3]]
+under = 1_000
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("s"), Some("hello"));
+        assert_eq!(doc.get_int("i"), Some(42));
+        assert_eq!(doc.get_int("neg"), Some(-3));
+        assert_eq!(doc.get_float("f"), Some(2.5));
+        assert_eq!(doc.get_float("sci"), Some(1e-3));
+        assert_eq!(doc.get_bool("b"), Some(true));
+        assert_eq!(doc.get_array("arr").unwrap().len(), 3);
+        assert_eq!(doc.get_int("under"), Some(1000));
+        match doc.get("nested") {
+            Some(TomlValue::Array(items)) => {
+                assert_eq!(items.len(), 2);
+                assert_eq!(items[0], TomlValue::Array(vec![TomlValue::Int(1), TomlValue::Int(2)]));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn tables_flatten() {
+        let doc = TomlDoc::parse("[a]\nx = 1\n[a.b]\ny = 2\n").unwrap();
+        assert_eq!(doc.get_int("a.x"), Some(1));
+        assert_eq!(doc.get_int("a.b.y"), Some(2));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = TomlDoc::parse("# top\nx = 1 # trailing\n\ns = \"with # inside\"\n").unwrap();
+        assert_eq!(doc.get_int("x"), Some(1));
+        assert_eq!(doc.get_str("s"), Some("with # inside"));
+    }
+
+    #[test]
+    fn errors_name_the_line() {
+        let e = TomlDoc::parse("x = 1\nbroken").unwrap_err();
+        assert!(e.starts_with("line 2:"), "{e}");
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("x = ").is_err());
+        assert!(TomlDoc::parse("x = 1\nx = 2").unwrap_err().contains("duplicate"));
+        assert!(TomlDoc::parse("bad key = 1").is_err());
+    }
+
+    #[test]
+    fn float_accepts_int() {
+        let doc = TomlDoc::parse("lr = 1\n").unwrap();
+        assert_eq!(doc.get_float("lr"), Some(1.0));
+        assert_eq!(doc.get_int("lr"), Some(1));
+    }
+}

@@ -1,0 +1,233 @@
+//! Dataset container + shuffled mini-batch iteration, and an IDX
+//! (LeCun MNIST format) loader so the real dataset drops in when present.
+
+use crate::data::synth::SynthImages;
+use crate::mask::prng::Xoshiro256pp;
+use std::io::Read;
+use std::path::Path;
+
+/// An in-memory classification dataset: flattened images + labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `[n × feature_dim]` row-major.
+    pub x: Vec<f32>,
+    pub y: Vec<u32>,
+    pub feature_dim: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, y: Vec<u32>, feature_dim: usize, classes: usize) -> Self {
+        assert_eq!(x.len(), y.len() * feature_dim, "x/y size mismatch");
+        assert!(y.iter().all(|&l| (l as usize) < classes), "label out of range");
+        Self { x, y, feature_dim, classes }
+    }
+
+    pub fn from_synth(s: &SynthImages) -> Self {
+        Self::new(s.images.clone(), s.labels.clone(), s.spec.pixels(), s.spec.classes)
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn sample(&self, i: usize) -> (&[f32], u32) {
+        (&self.x[i * self.feature_dim..(i + 1) * self.feature_dim], self.y[i])
+    }
+
+    /// Gather a batch by indices into contiguous buffers.
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<u32>) {
+        let mut x = Vec::with_capacity(idx.len() * self.feature_dim);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.sample(i).0);
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+
+    /// Split off the first `n` samples as one dataset, rest as another.
+    pub fn split_at(&self, n: usize) -> (Dataset, Dataset) {
+        assert!(n <= self.len());
+        let d = self.feature_dim;
+        (
+            Dataset::new(self.x[..n * d].to_vec(), self.y[..n].to_vec(), d, self.classes),
+            Dataset::new(self.x[n * d..].to_vec(), self.y[n..].to_vec(), d, self.classes),
+        )
+    }
+
+    /// Normalize features to zero mean / unit variance (computed on self,
+    /// returns the statistics so a test split can reuse them).
+    pub fn normalize(&mut self) -> (f32, f32) {
+        let n = self.x.len() as f64;
+        let mean = self.x.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var = self.x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        let std = var.sqrt().max(1e-8);
+        let (m, s) = (mean as f32, std as f32);
+        self.x.iter_mut().for_each(|v| *v = (*v - m) / s);
+        (m, s)
+    }
+
+    pub fn normalize_with(&mut self, mean: f32, std: f32) {
+        self.x.iter_mut().for_each(|v| *v = (*v - mean) / std);
+    }
+}
+
+/// Epoch iterator yielding shuffled mini-batches (last partial batch kept).
+pub struct BatchIter<'a> {
+    data: &'a Dataset,
+    order: Vec<usize>,
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, rng: &mut Xoshiro256pp) -> Self {
+        assert!(batch > 0);
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        rng.shuffle(&mut order);
+        Self { data, order, batch, pos: 0 }
+    }
+
+    /// Deterministic order (for eval).
+    pub fn sequential(data: &'a Dataset, batch: usize) -> Self {
+        Self { data, order: (0..data.len()).collect(), batch, pos: 0 }
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = (Vec<f32>, Vec<u32>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let end = (self.pos + self.batch).min(self.order.len());
+        let idx = &self.order[self.pos..end];
+        self.pos = end;
+        Some(self.data.gather(idx))
+    }
+}
+
+/// Load an IDX images file (magic 0x00000803) + labels file (0x00000801),
+/// the format real MNIST ships in. Pixels are scaled to [0, 1].
+pub fn load_idx(images_path: &Path, labels_path: &Path) -> std::io::Result<Dataset> {
+    let err = |m: String| std::io::Error::new(std::io::ErrorKind::InvalidData, m);
+    let mut img_bytes = Vec::new();
+    std::fs::File::open(images_path)?.read_to_end(&mut img_bytes)?;
+    let mut lbl_bytes = Vec::new();
+    std::fs::File::open(labels_path)?.read_to_end(&mut lbl_bytes)?;
+
+    let be32 = |b: &[u8], off: usize| -> u32 {
+        u32::from_be_bytes(b[off..off + 4].try_into().unwrap())
+    };
+    if img_bytes.len() < 16 || be32(&img_bytes, 0) != 0x0000_0803 {
+        return Err(err("bad IDX image magic".into()));
+    }
+    if lbl_bytes.len() < 8 || be32(&lbl_bytes, 0) != 0x0000_0801 {
+        return Err(err("bad IDX label magic".into()));
+    }
+    let n = be32(&img_bytes, 4) as usize;
+    let h = be32(&img_bytes, 8) as usize;
+    let w = be32(&img_bytes, 12) as usize;
+    if lbl_bytes.len() != 8 + n || img_bytes.len() != 16 + n * h * w {
+        return Err(err(format!("IDX size mismatch: n={n} h={h} w={w}")));
+    }
+    let x: Vec<f32> = img_bytes[16..].iter().map(|&b| b as f32 / 255.0).collect();
+    let y: Vec<u32> = lbl_bytes[8..].iter().map(|&b| b as u32).collect();
+    Ok(Dataset::new(x, y, h * w, 10))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthImages, SynthSpec};
+
+    fn tiny() -> Dataset {
+        Dataset::new((0..20).map(|i| i as f32).collect(), vec![0, 1, 0, 1], 5, 2)
+    }
+
+    #[test]
+    fn gather_and_sample() {
+        let d = tiny();
+        let (x, y) = d.gather(&[2, 0]);
+        assert_eq!(y, vec![0, 0]);
+        assert_eq!(x[..5], [10.0, 11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn split_preserves_all() {
+        let d = tiny();
+        let (a, b) = d.split_at(3);
+        assert_eq!(a.len(), 3);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.y, vec![1]);
+    }
+
+    #[test]
+    fn batches_cover_dataset_exactly_once() {
+        let spec = SynthSpec::mnist_like();
+        let d = Dataset::from_synth(&SynthImages::generate(spec, 23, 5, 0));
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let mut seen = 0usize;
+        let mut batches = 0usize;
+        for (x, y) in BatchIter::new(&d, 5, &mut rng) {
+            assert_eq!(x.len(), y.len() * d.feature_dim);
+            assert!(y.len() <= 5);
+            seen += y.len();
+            batches += 1;
+        }
+        assert_eq!(seen, 23);
+        assert_eq!(batches, 5); // 4 full + 1 partial
+    }
+
+    #[test]
+    fn normalize_stats() {
+        let mut d = tiny();
+        let (_, _) = d.normalize();
+        let n = d.x.len() as f64;
+        let mean: f64 = d.x.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 = d.x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn idx_loader_roundtrip() {
+        // synthesize a tiny IDX pair on disk
+        let dir = std::env::temp_dir().join(format!("mpdc_idx_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let img_path = dir.join("img.idx");
+        let lbl_path = dir.join("lbl.idx");
+        let (n, h, w) = (3usize, 2usize, 2usize);
+        let mut img = Vec::new();
+        img.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        img.extend_from_slice(&(n as u32).to_be_bytes());
+        img.extend_from_slice(&(h as u32).to_be_bytes());
+        img.extend_from_slice(&(w as u32).to_be_bytes());
+        img.extend_from_slice(&[0, 128, 255, 64, 1, 2, 3, 4, 10, 20, 30, 40]);
+        std::fs::write(&img_path, &img).unwrap();
+        let mut lbl = Vec::new();
+        lbl.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        lbl.extend_from_slice(&(n as u32).to_be_bytes());
+        lbl.extend_from_slice(&[7, 0, 3]);
+        std::fs::write(&lbl_path, &lbl).unwrap();
+
+        let d = load_idx(&img_path, &lbl_path).unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.feature_dim, 4);
+        assert_eq!(d.y, vec![7, 0, 3]);
+        assert!((d.x[1] - 128.0 / 255.0).abs() < 1e-6);
+
+        // corrupt magic
+        let mut bad = img.clone();
+        bad[3] = 0x99;
+        std::fs::write(&img_path, &bad).unwrap();
+        assert!(load_idx(&img_path, &lbl_path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

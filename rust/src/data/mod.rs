@@ -1,0 +1,8 @@
+//! Datasets: procedural synthetic substitutes for MNIST/CIFAR/ImageNet
+//! (no datasets ship on this image — see DESIGN.md §2) plus an IDX loader
+//! for real MNIST when available.
+pub mod dataset;
+pub mod synth;
+
+pub use dataset::{load_idx, BatchIter, Dataset};
+pub use synth::{SynthImages, SynthSpec};

@@ -1,0 +1,119 @@
+//! Shared experiment plumbing: dataset prep per model, trainer setup,
+//! result-row emission.
+
+use crate::config::ModelKind;
+use crate::data::dataset::Dataset;
+use crate::data::synth::{SynthImages, SynthSpec};
+use crate::mask::mask::MpdMask;
+use crate::runtime::engine::{Engine, Value};
+use crate::runtime::manifest::{default_artifact_dir, Manifest};
+use crate::train::aot_trainer::{AotTrainer, TrainConfig};
+use crate::util::json::{append_jsonl, Json};
+use std::path::Path;
+
+/// Build the engine over the default artifact directory. Returns None (with
+/// a message) when artifacts haven't been built — callers skip gracefully so
+/// `cargo test`/`cargo bench` work before `make artifacts`.
+pub fn try_engine() -> Option<Engine> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("[mpdc] artifacts not found at {} — run `make artifacts`", dir.display());
+        return None;
+    }
+    match Manifest::load(&dir).and_then(|m| Engine::cpu(m).map_err(|e| e.to_string())) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("[mpdc] engine init failed: {e}");
+            None
+        }
+    }
+}
+
+/// Synthetic train/test datasets for a model, normalized with train stats.
+pub fn make_datasets(model: ModelKind, n_train: usize, n_test: usize, seed: u64) -> (Dataset, Dataset) {
+    let spec = match model {
+        ModelKind::Lenet300 | ModelKind::DeepMnist => SynthSpec::mnist_like(),
+        ModelKind::Cifar10 => SynthSpec::cifar_like(),
+        ModelKind::TinyAlexnet => SynthSpec::imagenet_like(16),
+    };
+    let mut train = Dataset::from_synth(&SynthImages::generate(spec, n_train, seed, 0));
+    let (mean, std) = train.normalize();
+    let mut test = Dataset::from_synth(&SynthImages::generate(spec, n_test, seed, 1));
+    test.normalize_with(mean, std);
+    (train, test)
+}
+
+/// Generate the dense mask inputs for a model at `k` blocks (or all-ones for
+/// an uncompressed baseline run of the same artifact).
+pub fn dense_mask_inputs(model: ModelKind, k: usize, seed: u64, all_ones: bool) -> (Vec<MpdMask>, Vec<Vec<f32>>) {
+    let plan = model.plan(k).expect("valid plan");
+    let masks: Vec<MpdMask> = plan.generate_masks(seed).into_iter().flatten().collect();
+    let dense = if all_ones {
+        masks.iter().map(|m| vec![1.0f32; m.rows() * m.cols()]).collect()
+    } else {
+        masks.iter().map(|m| m.to_dense()).collect()
+    };
+    (masks, dense)
+}
+
+/// Train a model end-to-end with the AOT trainer; returns the trainer plus
+/// (top-1, top-5) test accuracy.
+pub fn train_and_eval(
+    engine: &Engine,
+    model: ModelKind,
+    mask_inputs: Vec<Vec<f32>>,
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &TrainConfig,
+    log_path: Option<&Path>,
+) -> anyhow::Result<(AotTrainer, f64, f64)> {
+    let mut tr = AotTrainer::new(engine, model.train_artifact(), mask_inputs, cfg.seed)?;
+    tr.fit(train, cfg, log_path)?;
+    let infer_masks = infer_mask_values(model, &tr);
+    let (top1, top5) =
+        crate::train::aot_trainer::evaluate_aot(engine, model.infer_artifact(), &tr.params, &infer_masks, test, 5)?;
+    Ok((tr, top1, top5))
+}
+
+/// Conv infer artifacts take mask inputs (lenet's does not) — reuse the
+/// trainer's mask values in that case.
+pub fn infer_mask_values(model: ModelKind, tr: &AotTrainer) -> Vec<Value> {
+    match model {
+        ModelKind::Lenet300 => vec![],
+        _ => tr.masks.clone(),
+    }
+}
+
+/// Emit one experiment result row (JSONL under `results/`).
+pub fn emit(path: &str, row: Json) {
+    let p = std::path::PathBuf::from(path);
+    if let Err(e) = append_jsonl(&p, &row) {
+        eprintln!("[mpdc] failed to write {path}: {e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn datasets_have_right_dims() {
+        let (tr, te) = make_datasets(ModelKind::Lenet300, 30, 10, 1);
+        assert_eq!(tr.feature_dim, 784);
+        assert_eq!(te.len(), 10);
+        let (tr, _) = make_datasets(ModelKind::TinyAlexnet, 8, 4, 1);
+        assert_eq!(tr.feature_dim, 3 * 32 * 32);
+        assert_eq!(tr.classes, 16);
+    }
+
+    #[test]
+    fn mask_inputs_match_plan() {
+        let (masks, dense) = dense_mask_inputs(ModelKind::Cifar10, 8, 3, false);
+        assert_eq!(masks.len(), 2);
+        assert_eq!(dense[0].len(), 192 * 2048);
+        let ones: f64 = dense[0].iter().map(|&v| v as f64).sum();
+        assert!((ones / (192.0 * 2048.0) - 0.125).abs() < 0.01);
+        let (_, all1) = dense_mask_inputs(ModelKind::Cifar10, 8, 3, true);
+        assert!(all1[0].iter().all(|&v| v == 1.0));
+    }
+}

@@ -1,0 +1,8 @@
+//! Experiment drivers regenerating every table and figure in the paper's
+//! evaluation (§3). Shared by the CLI (`mpdc bench-*`) and the `cargo bench`
+//! targets in `rust/benches/`. See DESIGN.md §4 for the experiment index.
+pub mod ablations;
+pub mod common;
+pub mod figures;
+pub mod speedup;
+pub mod table1;

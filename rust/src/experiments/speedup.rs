@@ -1,0 +1,213 @@
+//! §3.3 inference-speedup study: dense GEMM vs CSR (irregular pruning) vs
+//! packed block-diagonal (MPD) across the paper's FC layer shapes, plus the
+//! AOT-executable comparison (dense vs packed LeNet through PJRT) and a
+//! batched-serving throughput comparison.
+//!
+//! On the paper's GPUs the win comes from block-parallel scheduling; on this
+//! 1-core CPU testbed the same driver appears as FLOP reduction + regular
+//! access (no index gathers). Who-wins ordering is preserved; absolute 4× is
+//! hardware-specific (DESIGN.md §2).
+
+use crate::linalg::blockdiag_mm::BlockDiagMatrix;
+use crate::linalg::csr::Csr;
+use crate::linalg::gemm::gemm_a_bt;
+use crate::mask::mask::MpdMask;
+use crate::mask::prng::Xoshiro256pp;
+use crate::util::benchkit::{bench, black_box, BenchStats};
+use std::time::Duration;
+
+/// One kernel-level comparison row.
+#[derive(Clone, Debug)]
+pub struct SpeedupRow {
+    pub layer: String,
+    pub out_dim: usize,
+    pub in_dim: usize,
+    pub nblocks: usize,
+    pub batch: usize,
+    pub dense_us: f64,
+    pub csr_us: f64,
+    pub blockdiag_us: f64,
+}
+
+impl SpeedupRow {
+    pub fn speedup_vs_dense(&self) -> f64 {
+        self.dense_us / self.blockdiag_us
+    }
+
+    pub fn speedup_vs_csr(&self) -> f64 {
+        self.csr_us / self.blockdiag_us
+    }
+}
+
+/// FC shapes from the paper's four models (paper scale where feasible).
+pub fn paper_fc_shapes() -> Vec<(String, usize, usize)> {
+    vec![
+        ("lenet_fc1".into(), 300, 784),
+        ("lenet_fc2".into(), 100, 300),
+        ("deep_mnist_fc1".into(), 1024, 3136),
+        ("cifar_fc1".into(), 384, 2304),
+        ("alexnet_fc7".into(), 4096, 4096),
+        ("alexnet_fc8".into(), 1000, 4096),
+    ]
+}
+
+/// Measure one (shape, nblocks, batch) point.
+pub fn measure_point(
+    name: &str,
+    out_dim: usize,
+    in_dim: usize,
+    nblocks: usize,
+    batch: usize,
+    quick: bool,
+) -> SpeedupRow {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xBE*out_dim as u64 + in_dim as u64);
+    let mask = MpdMask::generate(out_dim, in_dim, nblocks, &mut rng);
+    let w: Vec<f32> = (0..out_dim * in_dim).map(|_| rng.next_f32() - 0.5).collect();
+    let wm = mask.apply(&w);
+    let csr = Csr::from_dense(&wm, out_dim, in_dim);
+    let bd = BlockDiagMatrix::from_masked_weights(&mask, &wm);
+    let x: Vec<f32> = (0..batch * in_dim).map(|_| rng.next_f32()).collect();
+    let mut y = vec![0.0f32; batch * out_dim];
+
+    let (warm, meas, min_it) = if quick {
+        (Duration::from_millis(30), Duration::from_millis(120), 5)
+    } else {
+        (Duration::from_millis(200), Duration::from_millis(800), 20)
+    };
+
+    let dense = bench(&format!("{name}/dense"), warm, meas, min_it, || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        gemm_a_bt(&x, &w, &mut y, batch, in_dim, out_dim);
+        black_box(&y);
+    });
+    let csr_stats = bench(&format!("{name}/csr"), warm, meas, min_it, || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        csr.spmm_xt(&x, &mut y, batch);
+        black_box(&y);
+    });
+    let bd_stats = bench(&format!("{name}/blockdiag"), warm, meas, min_it, || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        bd.matmul_xt(&x, &mut y, batch);
+        black_box(&y);
+    });
+    SpeedupRow {
+        layer: name.to_string(),
+        out_dim,
+        in_dim,
+        nblocks,
+        batch,
+        dense_us: dense.median_us(),
+        csr_us: csr_stats.median_us(),
+        blockdiag_us: bd_stats.median_us(),
+    }
+}
+
+/// The full kernel-level sweep: every paper FC shape × block counts.
+pub fn kernel_sweep(blocks: &[usize], batch: usize, quick: bool) -> Vec<SpeedupRow> {
+    let mut rows = Vec::new();
+    for (name, out_dim, in_dim) in paper_fc_shapes() {
+        for &k in blocks {
+            if k > out_dim.min(in_dim) {
+                continue;
+            }
+            rows.push(measure_point(&name, out_dim, in_dim, k, batch, quick));
+        }
+    }
+    rows
+}
+
+/// AOT-path comparison: dense LeNet inference vs packed block-diagonal LeNet
+/// inference, both through PJRT. Returns (dense_stats, packed_stats).
+pub fn aot_lenet_comparison(
+    engine: &crate::runtime::engine::Engine,
+    batch: usize,
+    quick: bool,
+) -> anyhow::Result<(BenchStats, BenchStats)> {
+    use crate::compress::tilespace as ts;
+    use crate::runtime::engine::Value;
+    let mut rng = Xoshiro256pp::seed_from_u64(4242);
+    // random trained-shaped weights; masked for the packed variant
+    let m1 = MpdMask::generate(300, 784, 10, &mut rng);
+    let m2 = MpdMask::generate(100, 300, 10, &mut rng);
+    let w1: Vec<f32> = (0..300 * 784).map(|_| rng.next_f32() - 0.5).collect();
+    let w2: Vec<f32> = (0..100 * 300).map(|_| rng.next_f32() - 0.5).collect();
+    let w3: Vec<f32> = (0..10 * 100).map(|_| rng.next_f32() - 0.5).collect();
+    let (b1, b2, b3): (Vec<f32>, Vec<f32>, Vec<f32>) =
+        ((0..300).map(|_| rng.next_f32()).collect(), (0..100).map(|_| rng.next_f32()).collect(), (0..10).map(|_| rng.next_f32()).collect());
+    let (w1m, w2m) = (m1.apply(&w1), m2.apply(&w2));
+    let x: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32()).collect();
+
+    let dense_exec = engine.load(&format!("lenet_infer_b{batch}"))?;
+    let dense_args = vec![
+        Value::F32(w1m.clone(), vec![300, 784]),
+        Value::F32(b1.clone(), vec![300]),
+        Value::F32(w2m.clone(), vec![100, 300]),
+        Value::F32(b2.clone(), vec![100]),
+        Value::F32(w3.clone(), vec![10, 100]),
+        Value::F32(b3.clone(), vec![10]),
+        Value::F32(x.clone(), vec![batch, 784]),
+    ];
+
+    let packed_exec = engine.load(&format!("lenet_infer_packed_k10_b{batch}"))?;
+    let (ob1, ib1) = ts::tile_dims(&m1);
+    let (ob2, ib2) = ts::tile_dims(&m2);
+    let xp = ts::gather_rows(&x, batch, 784, &ts::input_tile_gather(&m1));
+    let g12: Vec<i32> = ts::interlayer_gather(&m1, &m2).iter().map(|&v| v as i32).collect();
+    let g2o: Vec<i32> = ts::output_tile_positions(&m2).iter().map(|&v| v as i32).collect();
+    let packed_args = vec![
+        Value::F32(xp, vec![batch, 10 * ib1]),
+        Value::F32(ts::packed_blocks(&m1, &w1m), vec![10, ob1, ib1]),
+        Value::F32(ts::bias_tiles(&m1, &b1), vec![10 * ob1]),
+        Value::I32(g12, vec![10 * ib2]),
+        Value::F32(ts::packed_blocks(&m2, &w2m), vec![10, ob2, ib2]),
+        Value::F32(ts::bias_tiles(&m2, &b2), vec![10 * ob2]),
+        Value::I32(g2o, vec![100]),
+        Value::F32(w3.clone(), vec![10, 100]),
+        Value::F32(b3.clone(), vec![10]),
+    ];
+
+    // correctness cross-check before timing: packed output == dense output
+    let yd = dense_exec.run(&dense_args)?[0].clone().into_f32();
+    let yp = packed_exec.run(&packed_args)?[0].clone().into_f32();
+    for (a, b) in yd.iter().zip(&yp) {
+        anyhow::ensure!((a - b).abs() < 1e-3, "AOT packed/dense mismatch: {a} vs {b}");
+    }
+
+    let (warm, meas, min_it) = if quick {
+        (Duration::from_millis(50), Duration::from_millis(200), 10)
+    } else {
+        (Duration::from_millis(300), Duration::from_secs(1), 30)
+    };
+    let dense_stats = bench(&format!("aot/lenet_dense_b{batch}"), warm, meas, min_it, || {
+        black_box(dense_exec.run(&dense_args).unwrap());
+    });
+    let packed_stats = bench(&format!("aot/lenet_packed_b{batch}"), warm, meas, min_it, || {
+        black_box(packed_exec.run(&packed_args).unwrap());
+    });
+    Ok((dense_stats, packed_stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_ordering_blockdiag_beats_csr_and_dense() {
+        // At 10% density the packed form must beat both competitors on the
+        // medium LeNet fc1 shape — this is the §3.3 claim's kernel core.
+        let row = measure_point("lenet_fc1", 300, 784, 10, 32, true);
+        assert!(
+            row.blockdiag_us < row.dense_us,
+            "blockdiag {}µs !< dense {}µs",
+            row.blockdiag_us,
+            row.dense_us
+        );
+        assert!(
+            row.blockdiag_us < row.csr_us * 1.2,
+            "blockdiag {}µs should not lose badly to csr {}µs",
+            row.blockdiag_us,
+            row.csr_us
+        );
+        assert!(row.speedup_vs_dense() > 2.0, "speedup {}", row.speedup_vs_dense());
+    }
+}

@@ -1,0 +1,31 @@
+//! # mpdc — MPDCompress in Rust + JAX + Pallas
+//!
+//! A production-shaped reproduction of *MPDCompress: Matrix Permutation
+//! Decomposition Algorithm for Deep Neural Network Compression* (Supic et
+//! al., 2018). Fully-connected layers are trained under binary masks that
+//! are random row/column permutations of block-diagonal matrices; at
+//! inference the inverse permutations (eq. 2) expose an exactly
+//! block-diagonal weight matrix, executed as independent dense blocks.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`mask`] — permutations, block layouts, MPD masks, Fig.-1 decomposition
+//! * [`linalg`] — dense GEMM, CSR baseline, packed block-diagonal GEMM
+//! * [`nn`] — native layers/MLP/conv, checkpoints
+//! * [`data`] — synthetic datasets + IDX loader
+//! * [`compress`] — plans, compressor, packed inference engine, pruning baseline
+//! * [`runtime`] — PJRT loader/executor for AOT JAX artifacts
+//! * [`train`] — AOT + native trainers
+//! * [`server`] — batching inference server
+//! * [`config`] — TOML-subset config system
+//! * [`util`] — bench harness, property testing, JSON, PGM, CRC32
+pub mod compress;
+pub mod runtime;
+pub mod train;
+pub mod server;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod mask;
+pub mod nn;
+pub mod util;

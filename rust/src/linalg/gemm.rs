@@ -1,0 +1,250 @@
+//! Dense GEMM/GEMV — the baseline the paper's block-diagonal format competes
+//! against, and the inner kernel each diagonal block is multiplied with.
+//!
+//! `C[m×n] = A[m×k] · B[k×n] (+ C)`, row-major. The hot path
+//! [`gemm`] is register-blocked: the inner loop broadcasts one `A` element
+//! over a contiguous `B` row and FMA-accumulates into a contiguous `C` row —
+//! the classic "ikj" order that is unit-stride on both streams and
+//! auto-vectorizes cleanly. A 4-row outer micro-kernel reuses each loaded
+//! `B` row four times to cut B-stream traffic. Correctness is pinned to
+//! [`gemm_naive`] by randomized tests.
+
+/// Unrolled dot product — the shared inner kernel of the dot-product-form
+/// GEMMs (`gemv`, `gemm_a_bt`, and the block-diagonal matmul).
+/// `chunks_exact(8)` gives the compiler bounds-check-free fixed-width
+/// blocks (vectorizes), and four independent accumulators break the FP-add
+/// dependency chain. Arrived at through the §Perf iteration log in
+/// EXPERIMENTS.md (array-indexed accumulators regressed; chunked scalar
+/// accumulators won 2.3× over the original 4-wide indexed loop).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    // see doc comment: chunked, bounds-check-free, 4 accumulators
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        acc0 += x[0] * y[0] + x[4] * y[4];
+        acc1 += x[1] * y[1] + x[5] * y[5];
+        acc2 += x[2] * y[2] + x[6] * y[6];
+        acc3 += x[3] * y[3] + x[7] * y[7];
+    }
+    let mut s = (acc0 + acc1) + (acc2 + acc3);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// Naive triple loop, kept as the oracle for the optimized kernels.
+pub fn gemm_naive(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += a[i * k + p] * b[p * n + j];
+            }
+            c[i * n + j] += acc;
+        }
+    }
+}
+
+/// Optimized dense GEMM: `C += A·B`. Row-major, contiguous slices.
+pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+
+    // 4-row micro-kernel: for each p, broadcast a0..a3 and sweep B row p once.
+    let m4 = m / 4 * 4;
+    let mut i = 0;
+    while i < m4 {
+        let (c0s, rest) = c[i * n..].split_at_mut(n);
+        let (c1s, rest) = rest.split_at_mut(n);
+        let (c2s, rest) = rest.split_at_mut(n);
+        let c3s = &mut rest[..n];
+        for p in 0..k {
+            let a0 = a[i * k + p];
+            let a1 = a[(i + 1) * k + p];
+            let a2 = a[(i + 2) * k + p];
+            let a3 = a[(i + 3) * k + p];
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                continue; // masked-weight matrices are mostly zero rowschunks
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                let bv = brow[j];
+                c0s[j] += a0 * bv;
+                c1s[j] += a1 * bv;
+                c2s[j] += a2 * bv;
+                c3s[j] += a3 * bv;
+            }
+        }
+        i += 4;
+    }
+    // remainder rows
+    for i in m4..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// `y += W·x` for a row-major `W[m×k]`, `x[k]`, `y[m]` — single-sample path.
+pub fn gemv(w: &[f32], x: &[f32], y: &mut [f32], m: usize, k: usize) {
+    assert_eq!(w.len(), m * k);
+    assert_eq!(x.len(), k);
+    assert_eq!(y.len(), m);
+    for i in 0..m {
+        y[i] += dot(&w[i * k..(i + 1) * k], x);
+    }
+}
+
+/// `C = A·Bᵀ` convenience (used by backprop: dX = dY·W, with W row-major
+/// `[out×in]` this is dY[batch×out] · W[out×in] → gemm; and
+/// dW = dYᵀ·X needs the transposed-A variant below).
+pub fn gemm_at_b(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    // C[m×n] += Aᵀ·B where A is [k×m], B is [k×n]
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// `C += A·Bᵀ` where A is [m×k], B is [n×k] — dot-product form, used when the
+/// weight matrix is stored `[out×in]` and we need `X·Wᵀ` (batch forward).
+pub fn gemm_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            crow[j] += dot(arow, brow);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::prng::Xoshiro256pp;
+
+    fn randv(n: usize, rng: &mut Xoshiro256pp) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive_over_shapes() {
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (4, 4, 4), (17, 33, 9), (64, 100, 32), (5, 1, 8)] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let mut c1 = randv(m * n, &mut rng);
+            let mut c2 = c1.clone();
+            gemm_naive(&a, &b, &mut c1, m, k, n);
+            gemm(&a, &b, &mut c2, m, k, n);
+            assert_close(&c1, &c2, 1e-5);
+        }
+    }
+
+    #[test]
+    fn gemv_matches_gemm() {
+        let mut rng = Xoshiro256pp::seed_from_u64(22);
+        for (m, k) in [(1, 1), (10, 7), (300, 100), (33, 65)] {
+            let w = randv(m * k, &mut rng);
+            let x = randv(k, &mut rng);
+            let mut y1 = vec![0.0; m];
+            let mut y2 = vec![0.0; m];
+            gemv(&w, &x, &mut y1, m, k);
+            gemm_naive(&w, &x, &mut y2, m, k, 1);
+            assert_close(&y1, &y2, 1e-5);
+        }
+    }
+
+    #[test]
+    fn gemm_at_b_matches_explicit_transpose() {
+        let mut rng = Xoshiro256pp::seed_from_u64(23);
+        let (m, k, n) = (9, 13, 7);
+        let a = randv(k * m, &mut rng); // A is k×m
+        let b = randv(k * n, &mut rng);
+        let mut c1 = vec![0.0; m * n];
+        gemm_at_b(&a, &b, &mut c1, m, k, n);
+        // explicit transpose then naive
+        let mut at = vec![0.0; m * k];
+        for p in 0..k {
+            for i in 0..m {
+                at[i * k + p] = a[p * m + i];
+            }
+        }
+        let mut c2 = vec![0.0; m * n];
+        gemm_naive(&at, &b, &mut c2, m, k, n);
+        assert_close(&c1, &c2, 1e-5);
+    }
+
+    #[test]
+    fn gemm_a_bt_matches_explicit_transpose() {
+        let mut rng = Xoshiro256pp::seed_from_u64(24);
+        let (m, k, n) = (6, 11, 8);
+        let a = randv(m * k, &mut rng);
+        let b = randv(n * k, &mut rng); // B is n×k
+        let mut c1 = vec![0.0; m * n];
+        gemm_a_bt(&a, &b, &mut c1, m, k, n);
+        let mut bt = vec![0.0; k * n];
+        for j in 0..n {
+            for p in 0..k {
+                bt[p * n + j] = b[j * k + p];
+            }
+        }
+        let mut c2 = vec![0.0; m * n];
+        gemm_naive(&a, &bt, &mut c2, m, k, n);
+        assert_close(&c1, &c2, 1e-5);
+    }
+
+    #[test]
+    fn gemm_accumulates_into_c() {
+        let a = vec![1.0f32, 0.0, 0.0, 1.0];
+        let b = vec![5.0f32, 6.0, 7.0, 8.0];
+        let mut c = vec![1.0f32; 4];
+        gemm(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, vec![6.0, 7.0, 8.0, 9.0]);
+    }
+}

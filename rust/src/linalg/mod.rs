@@ -1,0 +1,11 @@
+//! Native linear algebra: dense GEMM, CSR (irregular-sparsity baseline), and
+//! the packed block-diagonal GEMM hot path.
+pub mod blockdiag_mm;
+pub mod csr;
+pub mod gemm;
+pub mod tensor;
+pub mod threadpool;
+
+pub use blockdiag_mm::BlockDiagMatrix;
+pub use csr::Csr;
+pub use tensor::{Matrix, Tensor};

@@ -1,0 +1,212 @@
+//! Minimal row-major f32 matrix/tensor types used across the native engine.
+//!
+//! We deliberately keep this small: shapes are explicit `(rows, cols)` pairs
+//! for 2-D work and a `Vec<usize>` for N-D activations; data is always a flat
+//! contiguous `Vec<f32>`. All hot-path kernels (`gemm`, `blockdiag_mm`, conv)
+//! operate on raw slices so the types here never get in the way of
+//! vectorization.
+
+use std::fmt;
+
+/// Dense row-major 2-D matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Self::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Self {
+        let mut out = Self::zeros(self.cols, self.rows);
+        // simple cache-blocked transpose
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max |a-b| over elements — test helper.
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for r in 0..show_r {
+            write!(f, "  ")?;
+            for c in 0..show_c {
+                write!(f, "{:8.4} ", self.get(r, c))?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// N-dimensional activation tensor (contiguous, row-major / C order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// View as a 2-D matrix collapsing all but the last dim into rows.
+    pub fn as_matrix(&self) -> Matrix {
+        let cols = *self.shape.last().expect("tensor has no dims");
+        Matrix::from_vec(self.numel() / cols, cols, self.data.clone())
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.numel(), shape.iter().product::<usize>(), "reshape numel mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_get_set() {
+        let mut m = Matrix::zeros(3, 4);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Matrix::from_fn(7, 5, |r, c| (r * 5 + c) as f32);
+        let t = m.transpose();
+        assert_eq!(t.rows, 5);
+        assert_eq!(t.get(2, 3), m.get(3, 2));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn transpose_blocked_matches_naive_on_large() {
+        let m = Matrix::from_fn(100, 67, |r, c| (r * 67 + c) as f32);
+        let t = m.transpose();
+        for r in 0..100 {
+            for c in 0..67 {
+                assert_eq!(t.get(c, r), m.get(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn identity_frobenius() {
+        let i = Matrix::identity(9);
+        assert!((i.frobenius() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tensor_reshape_and_matrix_view() {
+        let t = Tensor::from_vec(&[2, 3, 4], (0..24).map(|i| i as f32).collect());
+        let m = t.as_matrix();
+        assert_eq!(m.rows, 6);
+        assert_eq!(m.cols, 4);
+        let r = t.reshape(&[4, 6]);
+        assert_eq!(r.shape, vec![4, 6]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_rejects_bad_numel() {
+        Tensor::zeros(&[2, 3]).reshape(&[7]);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Matrix::from_vec(1, 3, vec![1.0, 2.5, 3.0]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+}

@@ -1,0 +1,116 @@
+//! A small scoped-parallelism helper for the block-diagonal GEMM.
+//!
+//! Each diagonal block of an MPD-packed layer is an *independent* GEMM — the
+//! paper's "key enabler" (§1: "the matrix multiplication and accumulation
+//! required for each block … has no dependence on any other blocks"). This
+//! module exposes [`parallel_chunks`], which partitions disjoint output
+//! ranges across `std::thread::scope` workers. On the single-core CI image
+//! this degrades to sequential execution (nthreads=1) with zero overhead;
+//! the *independence* property itself is asserted by tests regardless of
+//! core count.
+
+/// Run `f(chunk_index)` for every index in `0..nchunks`, distributed over
+/// `nthreads` OS threads. `f` must only touch disjoint state per index —
+/// enforced here by requiring `Fn + Sync` and passing only the index.
+pub fn parallel_indices<F>(nchunks: usize, nthreads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let nthreads = nthreads.max(1).min(nchunks.max(1));
+    if nthreads <= 1 || nchunks <= 1 {
+        for i in 0..nchunks {
+            f(i);
+        }
+        return;
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..nthreads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= nchunks {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Split a mutable slice into disjoint chunks at the given boundaries and run
+/// `f(chunk_idx, chunk)` in parallel. Boundaries are prefix offsets
+/// (`offsets[i]..offsets[i+1]` is chunk `i`).
+pub fn parallel_chunks<T: Send, F>(data: &mut [T], offsets: &[usize], nthreads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(!offsets.is_empty());
+    assert_eq!(*offsets.last().unwrap(), data.len(), "offsets must cover the slice");
+    let nchunks = offsets.len() - 1;
+    // Carve disjoint &mut chunks safely via split_at_mut chaining.
+    let mut chunks: Vec<&mut [T]> = Vec::with_capacity(nchunks);
+    let mut rest = data;
+    let mut prev = 0usize;
+    for &end in &offsets[1..] {
+        assert!(end >= prev, "offsets must be non-decreasing");
+        let (head, tail) = rest.split_at_mut(end - prev);
+        chunks.push(head);
+        rest = tail;
+        prev = end;
+    }
+    // Hand ownership of each chunk to exactly one task index.
+    let slots: Vec<std::sync::Mutex<Option<&mut [T]>>> =
+        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
+    parallel_indices(nchunks, nthreads, |i| {
+        let chunk = slots[i].lock().unwrap().take().expect("chunk taken twice");
+        f(i, chunk);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_indices_visits_all_once() {
+        for nthreads in [1, 2, 4] {
+            let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+            parallel_indices(37, nthreads, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1), "nthreads={nthreads}");
+        }
+    }
+
+    #[test]
+    fn parallel_indices_zero_chunks() {
+        parallel_indices(0, 4, |_| panic!("should not be called"));
+    }
+
+    #[test]
+    fn parallel_chunks_disjoint_writes() {
+        let mut data = vec![0u32; 100];
+        let offsets = vec![0usize, 10, 35, 35, 80, 100]; // includes empty chunk
+        for nthreads in [1, 3] {
+            data.iter_mut().for_each(|v| *v = 0);
+            parallel_chunks(&mut data, &offsets, nthreads, |i, chunk| {
+                for v in chunk.iter_mut() {
+                    *v = i as u32 + 1;
+                }
+            });
+            for (i, w) in offsets.windows(2).enumerate() {
+                for j in w[0]..w[1] {
+                    assert_eq!(data[j], i as u32 + 1, "pos {j} chunk {i} nthreads {nthreads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn parallel_chunks_rejects_short_offsets() {
+        let mut data = vec![0u32; 10];
+        parallel_chunks(&mut data, &[0, 5], 1, |_, _| {});
+    }
+}

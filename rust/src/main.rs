@@ -1,0 +1,426 @@
+//! `mpdc` — the MPDCompress command-line launcher.
+//!
+//! Subcommands (run `mpdc help` for details):
+//!   masks       generate a mask, print stats, write PGM figures
+//!   decompose   run the Fig.-1 sub-graph-separation demo
+//!   report      compression accounting (Table-1 param columns) for a model
+//!   train       train a model with MPD masks via the AOT/PJRT runtime
+//!   bench-fig1 / bench-fig4a / bench-fig4b / bench-fig5 / bench-table1 /
+//!   bench-speedup   regenerate the paper's figures/tables
+//!
+//! Flags are `--key value`; `--config file.toml` loads an
+//! [`mpdc::config::ExperimentConfig`] with CLI flags taking precedence.
+
+use mpdc::config::{ExperimentConfig, ModelKind};
+use mpdc::experiments::{common, figures, speedup, table1};
+use mpdc::train::aot_trainer::TrainConfig;
+use mpdc::util::benchkit::Table;
+use mpdc::util::json::Json;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, flags) = match parse_args(&args) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "masks" => cmd_masks(&flags),
+        "decompose" => cmd_decompose(&flags),
+        "report" => cmd_report(&flags),
+        "train" => cmd_train(&flags),
+        "bench-fig1" => cmd_fig1(&flags),
+        "bench-fig4a" => cmd_fig4a(&flags),
+        "bench-fig4b" => cmd_fig4b(&flags),
+        "bench-fig5" => cmd_fig5(&flags),
+        "bench-table1" => cmd_table1(&flags),
+        "bench-speedup" => cmd_speedup(&flags),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "mpdc — MPDCompress (matrix permutation decomposition DNN compression)
+
+USAGE: mpdc <command> [--key value]...
+
+COMMANDS
+  masks          --rows N --cols N --blocks K [--seed S] [--out DIR]
+  decompose      (Fig. 1 demo; no flags)
+  report         --model M --nblocks K          Table-1 parameter accounting
+  train          --model M --nblocks K [--steps N] [--lr F] [--seed S]
+                 [--train-samples N] [--test-samples N] [--config FILE]
+  bench-fig1     [--out DIR]
+  bench-fig4a    [--masks N] [--steps N] [--config FILE]
+  bench-fig4b    [--masks N] [--out DIR]
+  bench-fig5     [--steps N] [--config FILE]
+  bench-table1   [--steps N] [--config FILE]
+  bench-speedup  [--batch N] [--full]
+
+MODELS: lenet | deep_mnist | cifar10 | tiny_alexnet"
+    );
+}
+
+type Flags = HashMap<String, String>;
+
+fn parse_args(args: &[String]) -> Result<(String, Flags), String> {
+    let cmd = args.first().cloned().unwrap_or_else(|| "help".into());
+    let mut flags = HashMap::new();
+    let mut i = 1;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| format!("expected --flag, got {:?}", args[i]))?
+            .to_string();
+        // boolean flags
+        if i + 1 >= args.len() || args[i + 1].starts_with("--") {
+            flags.insert(key, "true".into());
+            i += 1;
+        } else {
+            flags.insert(key, args[i + 1].clone());
+            i += 2;
+        }
+    }
+    Ok((cmd, flags))
+}
+
+fn cfg_from_flags(flags: &Flags) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = flags.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        ExperimentConfig::from_toml(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(m) = flags.get("model") {
+        cfg.model = ModelKind::parse(m).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(v) = flags.get("nblocks") {
+        cfg.nblocks = v.parse()?;
+    }
+    if let Some(v) = flags.get("steps") {
+        cfg.steps = v.parse()?;
+    }
+    if let Some(v) = flags.get("lr") {
+        cfg.lr = v.parse()?;
+    }
+    if let Some(v) = flags.get("seed") {
+        cfg.seed = v.parse()?;
+    }
+    if let Some(v) = flags.get("train-samples") {
+        cfg.train_samples = v.parse()?;
+    }
+    if let Some(v) = flags.get("test-samples") {
+        cfg.test_samples = v.parse()?;
+    }
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(dir) = &cfg.artifacts_dir {
+        std::env::set_var("MPDC_ARTIFACTS", dir);
+    }
+    Ok(cfg)
+}
+
+fn train_cfg(cfg: &ExperimentConfig) -> TrainConfig {
+    TrainConfig {
+        steps: cfg.steps,
+        lr: cfg.lr,
+        lr_decay: cfg.lr_decay,
+        lr_decay_every: cfg.lr_decay_every,
+        log_every: (cfg.steps / 20).max(1),
+        seed: cfg.seed,
+    }
+}
+
+fn out_dir(flags: &Flags) -> PathBuf {
+    PathBuf::from(flags.get("out").cloned().unwrap_or_else(|| "results".into()))
+}
+
+// ---------------------------------------------------------------- commands
+
+fn cmd_masks(flags: &Flags) -> anyhow::Result<()> {
+    use mpdc::mask::mask::MpdMask;
+    use mpdc::mask::prng::Xoshiro256pp;
+    let rows: usize = flags.get("rows").map(|s| s.parse()).transpose()?.unwrap_or(300);
+    let cols: usize = flags.get("cols").map(|s| s.parse()).transpose()?.unwrap_or(100);
+    let blocks: usize = flags.get("blocks").map(|s| s.parse()).transpose()?.unwrap_or(10);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mask = MpdMask::generate(rows, cols, blocks, &mut rng);
+    println!(
+        "mask {rows}×{cols} blocks={blocks}: nnz={} density={:.3}% compression={:.2}×",
+        mask.nnz(),
+        mask.density() * 100.0,
+        mask.layout.compression()
+    );
+    let dir = out_dir(flags);
+    mpdc::util::pgm::write_pgm(&dir.join("mask_b.pgm"), &mask.layout.to_dense(), rows, cols)?;
+    mpdc::util::pgm::write_pgm(&dir.join("mask_m.pgm"), &mask.to_dense(), rows, cols)?;
+    println!("wrote {}/mask_b.pgm and mask_m.pgm", dir.display());
+    Ok(())
+}
+
+fn cmd_decompose(_flags: &Flags) -> anyhow::Result<()> {
+    use mpdc::mask::decompose::{apply_decomposition, decompose, fig1_example, verify_decomposition};
+    let (m, rows, cols) = fig1_example();
+    println!("Fig. 1(a) input (4×4 irregular sparse):");
+    for r in 0..rows {
+        println!("  {:?}", &m[r * cols..(r + 1) * cols]);
+    }
+    let d = decompose(&m, rows, cols);
+    println!(
+        "\nsub-graph separation found: {} components; row perm {:?}, col perm {:?}",
+        d.ncomponents,
+        d.p_row.as_slice(),
+        d.p_col.as_slice()
+    );
+    let blocked = apply_decomposition(&m, rows, cols, &d);
+    println!("\nFig. 1(c) block-diagonalized:");
+    for r in 0..rows {
+        println!("  {:?}", &blocked[r * cols..(r + 1) * cols]);
+    }
+    println!("\nverified: {}", verify_decomposition(&m, rows, cols, &d));
+    Ok(())
+}
+
+fn cmd_report(flags: &Flags) -> anyhow::Result<()> {
+    use mpdc::compress::compressor::MpdCompressor;
+    let cfg = cfg_from_flags(flags)?;
+    let comp = MpdCompressor::new(cfg.model.paper_plan(cfg.nblocks), cfg.seed);
+    let r = comp.report();
+    let mut t = Table::new(&["layer", "dense params", "kept", "compression", "dense B", "CSR B", "packed B"]);
+    for l in &r.layers {
+        t.row(&[
+            l.name.clone(),
+            l.dense_params.to_string(),
+            l.kept_params.to_string(),
+            format!("{:.2}×", l.compression),
+            l.dense_bytes.to_string(),
+            l.csr_bytes.to_string(),
+            l.packed_bytes.to_string(),
+        ]);
+    }
+    t.row(&[
+        "TOTAL".into(),
+        r.total_dense_params().to_string(),
+        r.total_kept_params().to_string(),
+        format!("{:.2}×", r.overall_compression()),
+        r.total_dense_bytes().to_string(),
+        r.total_csr_bytes().to_string(),
+        r.total_packed_bytes().to_string(),
+    ]);
+    println!("{} (paper scale, {} blocks)\n{}", cfg.model.name(), cfg.nblocks, t.render());
+    Ok(())
+}
+
+fn cmd_train(flags: &Flags) -> anyhow::Result<()> {
+    let cfg = cfg_from_flags(flags)?;
+    let engine = common::try_engine().ok_or_else(|| anyhow::anyhow!("artifacts missing"))?;
+    let (train, test) = common::make_datasets(cfg.model, cfg.train_samples, cfg.test_samples, cfg.seed);
+    let (_, masks) = common::dense_mask_inputs(cfg.model, cfg.nblocks, cfg.seed, false);
+    let dir = out_dir(flags);
+    std::fs::create_dir_all(&dir)?;
+    let log = dir.join(format!("{}_loss.jsonl", cfg.model.name()));
+    println!(
+        "training {} with {} blocks for {} steps (lr {})…",
+        cfg.model.name(),
+        cfg.nblocks,
+        cfg.steps,
+        cfg.lr
+    );
+    let t0 = std::time::Instant::now();
+    let (tr, top1, top5) =
+        common::train_and_eval(&engine, cfg.model, masks, &train, &test, &train_cfg(&cfg), Some(&log))?;
+    println!(
+        "done in {:.1}s: top1={:.4} top5={:.4} (loss {:.4} → {:.4}); curve: {}",
+        t0.elapsed().as_secs_f64(),
+        top1,
+        top5,
+        tr.history.first().map(|p| p.loss).unwrap_or(f32::NAN),
+        tr.history.last().map(|p| p.loss).unwrap_or(f32::NAN),
+        log.display()
+    );
+    let ckpt = dir.join(format!("{}_k{}.mpdc", cfg.model.name(), cfg.nblocks));
+    tr.save(&ckpt)?;
+    println!("checkpoint: {}", ckpt.display());
+    Ok(())
+}
+
+fn cmd_fig1(flags: &Flags) -> anyhow::Result<()> {
+    let dir = out_dir(flags);
+    let out = figures::fig1(&dir, 42)?;
+    println!(
+        "fig1: B density {:.3} | M density {:.3} | fraction of M off-block {:.3}",
+        out.b_density, out.m_density, out.m_offblock_fraction
+    );
+    println!("wrote {}/fig1_b.pgm, fig1_m.pgm", dir.display());
+    Ok(())
+}
+
+fn cmd_fig4a(flags: &Flags) -> anyhow::Result<()> {
+    let cfg = cfg_from_flags(flags)?;
+    let nmasks: usize = flags.get("masks").map(|s| s.parse()).transpose()?.unwrap_or(10);
+    let engine = common::try_engine().ok_or_else(|| anyhow::anyhow!("artifacts missing"))?;
+    let out = figures::fig4a(&engine, nmasks, &train_cfg(&cfg), (cfg.train_samples, cfg.test_samples))?;
+    let accs: Vec<f64> = out.per_mask.iter().map(|p| p.top1).collect();
+    let min = accs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = accs.iter().cloned().fold(0.0, f64::max);
+    let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+    let mut t = Table::new(&["variant", "top-1"]);
+    t.row(&[format!("MPD ({} masks) min", accs.len()), format!("{min:.4}")]);
+    t.row(&["MPD mean".into(), format!("{mean:.4}")]);
+    t.row(&["MPD max".into(), format!("{max:.4}")]);
+    t.row(&["dense baseline".into(), format!("{:.4}", out.dense_top1)]);
+    t.row(&["non-permuted 10%".into(), format!("{:.4}", out.non_permuted_top1)]);
+    t.row(&["non-permuted 20%".into(), format!("{:.4}", out.non_permuted_20_top1)]);
+    println!("{}", t.render());
+    for p in &out.per_mask {
+        common::emit(
+            "results/fig4a.jsonl",
+            Json::obj(vec![
+                ("mask_id", Json::num(p.mask_id as f64)),
+                ("seed", Json::num(p.seed as f64)),
+                ("top1", Json::num(p.top1)),
+            ]),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig4b(flags: &Flags) -> anyhow::Result<()> {
+    let nmasks: usize = flags.get("masks").map(|s| s.parse()).transpose()?.unwrap_or(100);
+    let dir = out_dir(flags);
+    let out = figures::fig4b(&dir, nmasks, 42)?;
+    println!(
+        "fig4b ({} masks, 300×100, 10 blocks): mean={:.2} min={} max={} var={:.2} never-covered={:.4}%",
+        out.nmasks,
+        out.stats.mean,
+        out.stats.min,
+        out.stats.max,
+        out.stats.variance,
+        out.stats.never_covered * 100.0
+    );
+    println!("wrote {}/fig4b_mask_sum.pgm", dir.display());
+    Ok(())
+}
+
+fn cmd_fig5(flags: &Flags) -> anyhow::Result<()> {
+    let cfg = cfg_from_flags(flags)?;
+    let engine = common::try_engine().ok_or_else(|| anyhow::anyhow!("artifacts missing"))?;
+    let points = figures::fig5(&engine, &[4, 8, 16], &train_cfg(&cfg), (cfg.train_samples, cfg.test_samples))?;
+    let mut t = Table::new(&["sparsity", "compression", "top-1", "top-5"]);
+    for p in &points {
+        let name = if p.nblocks == 0 { "dense".to_string() } else { format!("{:.2}%", p.sparsity_pct) };
+        let comp = if p.nblocks == 0 { "1×".to_string() } else { format!("{}×", p.nblocks) };
+        t.row(&[name, comp, format!("{:.4}", p.top1), format!("{:.4}", p.top5)]);
+        common::emit(
+            "results/fig5.jsonl",
+            Json::obj(vec![
+                ("nblocks", Json::num(p.nblocks as f64)),
+                ("top1", Json::num(p.top1)),
+                ("top5", Json::num(p.top5)),
+            ]),
+        );
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_table1(flags: &Flags) -> anyhow::Result<()> {
+    let cfg = cfg_from_flags(flags)?;
+    let engine = common::try_engine().ok_or_else(|| anyhow::anyhow!("artifacts missing"))?;
+    let models = [
+        (ModelKind::Lenet300, 10usize),
+        (ModelKind::DeepMnist, 10),
+        (ModelKind::Cifar10, 10),
+        (ModelKind::TinyAlexnet, 8),
+    ];
+    let rows = table1::table1(&engine, &models, &train_cfg(&cfg), (cfg.train_samples, cfg.test_samples))?;
+    let mut t = Table::new(&[
+        "model",
+        "MPD top1",
+        "dense top1",
+        "acc loss",
+        "FC params MPD",
+        "FC params dense",
+        "compression",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.model.to_string(),
+            format!("{:.4}", r.mpd_top1),
+            format!("{:.4}", r.dense_top1),
+            format!("{:+.4}", r.accuracy_loss()),
+            human_count(r.paper_params_mpd),
+            human_count(r.paper_params_dense),
+            format!("{:.1}×", r.compression()),
+        ]);
+        common::emit(
+            "results/table1.jsonl",
+            Json::obj(vec![
+                ("model", Json::str(r.model)),
+                ("mpd_top1", Json::num(r.mpd_top1)),
+                ("dense_top1", Json::num(r.dense_top1)),
+                ("params_mpd", Json::num(r.paper_params_mpd as f64)),
+                ("params_dense", Json::num(r.paper_params_dense as f64)),
+            ]),
+        );
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_speedup(flags: &Flags) -> anyhow::Result<()> {
+    let quick = !flags.contains_key("full");
+    let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let rows = speedup::kernel_sweep(&[4, 8, 10, 16], batch, quick);
+    let mut t = Table::new(&["layer", "blocks", "dense µs", "CSR µs", "blockdiag µs", "vs dense", "vs CSR"]);
+    for r in &rows {
+        t.row(&[
+            r.layer.clone(),
+            r.nblocks.to_string(),
+            format!("{:.1}", r.dense_us),
+            format!("{:.1}", r.csr_us),
+            format!("{:.1}", r.blockdiag_us),
+            format!("{:.2}×", r.speedup_vs_dense()),
+            format!("{:.2}×", r.speedup_vs_csr()),
+        ]);
+    }
+    println!("{}", t.render());
+    if let Some(engine) = common::try_engine() {
+        let (d, p) = speedup::aot_lenet_comparison(&engine, batch, quick)?;
+        println!(
+            "AOT lenet b{batch}: dense {:.1}µs vs packed {:.1}µs → {:.2}×",
+            d.median_us(),
+            p.median_us(),
+            d.median_us() / p.median_us()
+        );
+    }
+    Ok(())
+}
+
+fn human_count(n: usize) -> String {
+    if n >= 1_000_000 {
+        format!("{:.2}M", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.1}k", n as f64 / 1e3)
+    } else {
+        n.to_string()
+    }
+}

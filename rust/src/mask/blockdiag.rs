@@ -1,0 +1,340 @@
+//! Block-diagonal layouts and binary block-diagonal matrices — the "B" in
+//! `M = P_row · B · P_col` (paper §2, Fig. 1(e)).
+//!
+//! For a `rows × cols` FC weight matrix compressed `k×` (sparsity `1/k`), the
+//! paper uses a block-diagonal binary matrix with `k` blocks along the main
+//! diagonal. When `rows` or `cols` is not divisible by `k` the blocks are
+//! *ragged*: we distribute the remainder one unit at a time over the leading
+//! blocks, exactly preserving total density accounting. LeNet-300-100's
+//! 784×300 layer at 10 blocks, for example, gets row blocks of 79/78 and
+//! column blocks of 30.
+
+use crate::mask::perm::Permutation;
+
+/// Half-open span `[start, start+len)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub start: usize,
+    pub len: usize,
+}
+
+impl Span {
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        i >= self.start && i < self.end()
+    }
+}
+
+/// Partition `n` indices into `k` contiguous spans, remainder spread over the
+/// leading spans (sizes differ by at most one).
+pub fn partition(n: usize, k: usize) -> Vec<Span> {
+    assert!(k > 0, "need at least one block");
+    assert!(n >= k, "cannot split {n} indices into {k} non-empty blocks");
+    let base = n / k;
+    let rem = n % k;
+    let mut spans = Vec::with_capacity(k);
+    let mut start = 0;
+    for b in 0..k {
+        let len = base + usize::from(b < rem);
+        spans.push(Span { start, len });
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    spans
+}
+
+/// The block structure of a block-diagonal `rows × cols` matrix with
+/// `nblocks` diagonal blocks. Block `b` occupies `row_spans[b] × col_spans[b]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockDiagLayout {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_spans: Vec<Span>,
+    pub col_spans: Vec<Span>,
+}
+
+impl BlockDiagLayout {
+    pub fn new(rows: usize, cols: usize, nblocks: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            row_spans: partition(rows, nblocks),
+            col_spans: partition(cols, nblocks),
+        }
+    }
+
+    /// Construct from explicit spans (used by `decompose` when recovering a
+    /// planted structure whose blocks may be irregular).
+    pub fn from_spans(rows: usize, cols: usize, row_spans: Vec<Span>, col_spans: Vec<Span>) -> Self {
+        assert_eq!(row_spans.len(), col_spans.len());
+        debug_assert_eq!(row_spans.iter().map(|s| s.len).sum::<usize>(), rows);
+        debug_assert_eq!(col_spans.iter().map(|s| s.len).sum::<usize>(), cols);
+        Self { rows, cols, row_spans, col_spans }
+    }
+
+    pub fn nblocks(&self) -> usize {
+        self.row_spans.len()
+    }
+
+    /// Which block a row belongs to.
+    pub fn row_block(&self, r: usize) -> usize {
+        // spans are contiguous and sorted → binary search on start
+        match self.row_spans.binary_search_by(|s| {
+            if s.contains(r) {
+                std::cmp::Ordering::Equal
+            } else if s.start > r {
+                std::cmp::Ordering::Greater
+            } else {
+                std::cmp::Ordering::Less
+            }
+        }) {
+            Ok(b) => b,
+            Err(_) => panic!("row {r} out of range"),
+        }
+    }
+
+    /// Which block a column belongs to.
+    pub fn col_block(&self, c: usize) -> usize {
+        match self.col_spans.binary_search_by(|s| {
+            if s.contains(c) {
+                std::cmp::Ordering::Equal
+            } else if s.start > c {
+                std::cmp::Ordering::Greater
+            } else {
+                std::cmp::Ordering::Less
+            }
+        }) {
+            Ok(b) => b,
+            Err(_) => panic!("col {c} out of range"),
+        }
+    }
+
+    /// Number of non-zeros of the binary block-diagonal matrix: Σ rᵦ·cᵦ.
+    pub fn nnz(&self) -> usize {
+        self.row_spans
+            .iter()
+            .zip(&self.col_spans)
+            .map(|(r, c)| r.len * c.len)
+            .sum()
+    }
+
+    /// Density = nnz / (rows·cols). For `k` even blocks this is `1/k` — the
+    /// paper's "sparsity level" hyper-parameter (10% sparsity ⇔ 10 blocks).
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Achieved compression factor = dense params / kept params.
+    pub fn compression(&self) -> f64 {
+        (self.rows * self.cols) as f64 / self.nnz() as f64
+    }
+
+    /// Materialize the dense binary block-diagonal matrix `B` (row-major).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut b = vec![0.0f32; self.rows * self.cols];
+        for (rs, cs) in self.row_spans.iter().zip(&self.col_spans) {
+            for r in rs.start..rs.end() {
+                for c in cs.start..cs.end() {
+                    b[r * self.cols + c] = 1.0;
+                }
+            }
+        }
+        b
+    }
+
+    /// True iff `(r, c)` lies inside a diagonal block.
+    pub fn is_on_block(&self, r: usize, c: usize) -> bool {
+        self.row_block(r) == self.col_block(c)
+    }
+
+    /// The number of blocks needed for a target density (paper: sparsity s ⇒
+    /// k = round(1/s) blocks; e.g. 12.5% ⇒ 8 blocks ⇒ 8× compression).
+    pub fn blocks_for_density(density: f64) -> usize {
+        assert!(density > 0.0 && density <= 1.0, "density must be in (0, 1]");
+        (1.0 / density).round().max(1.0) as usize
+    }
+}
+
+/// Extract the dense sub-blocks of a (already block-diagonal) matrix
+/// according to `layout`, concatenated in block order. This is the packed
+/// storage the inference engine actually multiplies with — `nnz` floats
+/// instead of `rows*cols`.
+pub fn pack_blocks(data: &[f32], layout: &BlockDiagLayout) -> Vec<f32> {
+    assert_eq!(data.len(), layout.rows * layout.cols);
+    let mut packed = Vec::with_capacity(layout.nnz());
+    for (rs, cs) in layout.row_spans.iter().zip(&layout.col_spans) {
+        for r in rs.start..rs.end() {
+            packed.extend_from_slice(&data[r * layout.cols + cs.start..r * layout.cols + cs.end()]);
+        }
+    }
+    packed
+}
+
+/// Inverse of [`pack_blocks`]: scatter packed blocks back into a dense
+/// (block-diagonal) matrix.
+pub fn unpack_blocks(packed: &[f32], layout: &BlockDiagLayout) -> Vec<f32> {
+    assert_eq!(packed.len(), layout.nnz());
+    let mut dense = vec![0.0f32; layout.rows * layout.cols];
+    let mut off = 0;
+    for (rs, cs) in layout.row_spans.iter().zip(&layout.col_spans) {
+        for r in rs.start..rs.end() {
+            dense[r * layout.cols + cs.start..r * layout.cols + cs.end()]
+                .copy_from_slice(&packed[off..off + cs.len]);
+            off += cs.len;
+        }
+    }
+    dense
+}
+
+/// Mass outside the diagonal blocks — used to verify that training with a
+/// mask really confined the weights (should be exactly 0 after masking).
+pub fn off_block_mass(data: &[f32], layout: &BlockDiagLayout) -> f64 {
+    let mut mass = 0.0f64;
+    for (b, rs) in layout.row_spans.iter().enumerate() {
+        let cs = layout.col_spans[b];
+        for r in rs.start..rs.end() {
+            for c in 0..layout.cols {
+                if !cs.contains(c) {
+                    mass += (data[r * layout.cols + c] as f64).abs();
+                }
+            }
+        }
+    }
+    mass
+}
+
+/// Row/column permutations that sort a *permuted* block-diagonal matrix back
+/// to block form given the block id of every row/col (helper shared with
+/// `decompose`): rows are grouped by block, preserving relative order.
+pub fn grouping_permutation(block_of: &[usize], nblocks: usize) -> Permutation {
+    let mut counts = vec![0usize; nblocks];
+    for &b in block_of {
+        assert!(b < nblocks);
+        counts[b] += 1;
+    }
+    let mut starts = vec![0usize; nblocks];
+    let mut acc = 0;
+    for b in 0..nblocks {
+        starts[b] = acc;
+        acc += counts[b];
+    }
+    let mut map = vec![0u32; block_of.len()];
+    for (i, &b) in block_of.iter().enumerate() {
+        map[i] = starts[b] as u32;
+        starts[b] += 1;
+    }
+    Permutation::from_map(map).expect("grouping produces a bijection")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_even_and_ragged() {
+        let p = partition(100, 10);
+        assert_eq!(p.len(), 10);
+        assert!(p.iter().all(|s| s.len == 10));
+
+        // LeNet 784×300 with 10 blocks: 784 = 4×79 + 6×78
+        let p = partition(784, 10);
+        assert_eq!(p.iter().map(|s| s.len).sum::<usize>(), 784);
+        assert_eq!(p[0].len, 79);
+        assert_eq!(p[9].len, 78);
+        assert!(p.iter().all(|s| s.len == 78 || s.len == 79));
+        // spans are contiguous
+        for w in p.windows(2) {
+            assert_eq!(w[0].end(), w[1].start);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn partition_rejects_too_many_blocks() {
+        partition(5, 6);
+    }
+
+    #[test]
+    fn layout_density_matches_paper_sparsity() {
+        // 300×100 at 10 blocks → 10% density, 10× compression (paper Fig 1e)
+        let l = BlockDiagLayout::new(300, 100, 10);
+        assert_eq!(l.nnz(), 3000);
+        assert!((l.density() - 0.1).abs() < 1e-12);
+        assert!((l.compression() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blocks_for_density_inverts() {
+        assert_eq!(BlockDiagLayout::blocks_for_density(0.10), 10);
+        assert_eq!(BlockDiagLayout::blocks_for_density(0.125), 8);
+        assert_eq!(BlockDiagLayout::blocks_for_density(0.0625), 16);
+        assert_eq!(BlockDiagLayout::blocks_for_density(0.25), 4);
+        assert_eq!(BlockDiagLayout::blocks_for_density(1.0), 1);
+    }
+
+    #[test]
+    fn to_dense_nnz_and_block_membership() {
+        let l = BlockDiagLayout::new(12, 8, 4);
+        let d = l.to_dense();
+        let nnz = d.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nnz, l.nnz());
+        for r in 0..12 {
+            for c in 0..8 {
+                let expect = l.is_on_block(r, c);
+                assert_eq!(d[r * 8 + c] == 1.0, expect, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn row_col_block_lookup() {
+        let l = BlockDiagLayout::new(10, 10, 3); // rows 4,3,3
+        assert_eq!(l.row_block(0), 0);
+        assert_eq!(l.row_block(3), 0);
+        assert_eq!(l.row_block(4), 1);
+        assert_eq!(l.row_block(9), 2);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let l = BlockDiagLayout::new(9, 7, 3);
+        // fill a block-diagonal matrix with distinct values on blocks
+        let mut dense = vec![0.0f32; 63];
+        for (b, rs) in l.row_spans.iter().enumerate() {
+            let cs = l.col_spans[b];
+            for r in rs.start..rs.end() {
+                for c in cs.start..cs.end() {
+                    dense[r * 7 + c] = (r * 100 + c) as f32;
+                }
+            }
+        }
+        let packed = pack_blocks(&dense, &l);
+        assert_eq!(packed.len(), l.nnz());
+        let back = unpack_blocks(&packed, &l);
+        assert_eq!(back, dense);
+    }
+
+    #[test]
+    fn off_block_mass_detects_leaks() {
+        let l = BlockDiagLayout::new(6, 6, 2);
+        let mut dense = l.to_dense();
+        assert_eq!(off_block_mass(&dense, &l), 0.0);
+        dense[0 * 6 + 5] = 2.5; // row 0 is block 0, col 5 is block 1
+        assert!((off_block_mass(&dense, &l) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grouping_permutation_groups() {
+        let block_of = vec![1usize, 0, 1, 0, 2];
+        let p = grouping_permutation(&block_of, 3);
+        // indices of block 0 (1, 3) must land in positions 0..2, etc.
+        assert_eq!(p.dest(1), 0);
+        assert_eq!(p.dest(3), 1);
+        assert_eq!(p.dest(0), 2);
+        assert_eq!(p.dest(2), 3);
+        assert_eq!(p.dest(4), 4);
+    }
+}

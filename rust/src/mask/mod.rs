@@ -1,0 +1,14 @@
+//! Mask substrate: PRNGs, permutations, block-diagonal layouts, MPD masks,
+//! and the Fig.-1 sub-graph-separation decomposition.
+pub mod blockdiag;
+pub mod decompose;
+pub mod mask;
+pub mod perm;
+pub mod prng;
+pub mod serialize;
+
+pub use blockdiag::BlockDiagLayout;
+pub use decompose::{decompose, Decomposition};
+pub use mask::{mask_sum_stats, sum_masks, MpdMask};
+pub use perm::Permutation;
+pub use prng::Xoshiro256pp;

@@ -1,0 +1,271 @@
+//! Permutations — the "P" in MPDCompress's `M = P_row · B · P_col` (paper §2).
+//!
+//! A [`Permutation`] is stored as a forward map `map[i] = j`, meaning element
+//! at source index `i` moves to destination index `j` — equivalently, the
+//! permutation matrix `P` with `P[j][i] = 1`, so that for a vector `x`,
+//! `(P x)[map[i]] = x[i]`.
+//!
+//! The paper applies `P_row` to rows and `P_col` to columns of a
+//! block-diagonal binary matrix `B` to produce a mask `M`, then at inference
+//! time undoes them (`Wᵢ* = P_rowᵀ · W̄ᵢ · P_colᵀ`, eq. 2) to recover the
+//! block-diagonal structure. Everything in this file is exercised by the
+//! round-trip property tests at the bottom and in `mask::decompose`.
+
+use crate::mask::prng::Xoshiro256pp;
+
+/// A permutation of `n` indices, stored as a forward map.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Permutation {
+    map: Vec<u32>,
+}
+
+impl Permutation {
+    /// Identity permutation of size `n`.
+    pub fn identity(n: usize) -> Self {
+        Self { map: (0..n as u32).collect() }
+    }
+
+    /// Uniformly random permutation of size `n` (Fisher–Yates).
+    pub fn random(n: usize, rng: &mut Xoshiro256pp) -> Self {
+        let mut map: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut map);
+        Self { map }
+    }
+
+    /// Build from an explicit forward map. Validates it is a bijection.
+    pub fn from_map(map: Vec<u32>) -> Result<Self, String> {
+        let n = map.len();
+        let mut seen = vec![false; n];
+        for &j in &map {
+            let j = j as usize;
+            if j >= n {
+                return Err(format!("index {j} out of range for permutation of size {n}"));
+            }
+            if seen[j] {
+                return Err(format!("duplicate destination index {j}"));
+            }
+            seen[j] = true;
+        }
+        Ok(Self { map })
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.map.iter().enumerate().all(|(i, &j)| i as u32 == j)
+    }
+
+    /// Forward map: source index `i` → destination index.
+    #[inline]
+    pub fn dest(&self, i: usize) -> usize {
+        self.map[i] as usize
+    }
+
+    /// Raw forward map.
+    pub fn as_slice(&self) -> &[u32] {
+        &self.map
+    }
+
+    /// The inverse permutation: `inv.dest(self.dest(i)) == i`.
+    pub fn inverse(&self) -> Self {
+        let mut inv = vec![0u32; self.map.len()];
+        for (i, &j) in self.map.iter().enumerate() {
+            inv[j as usize] = i as u32;
+        }
+        Self { map: inv }
+    }
+
+    /// Composition `self ∘ other`: first apply `other`, then `self`.
+    pub fn compose(&self, other: &Self) -> Self {
+        assert_eq!(self.len(), other.len(), "composing permutations of different sizes");
+        let map = (0..self.len()).map(|i| self.map[other.map[i] as usize]).collect();
+        Self { map }
+    }
+
+    /// Permute a vector: `out[dest(i)] = x[i]`.
+    pub fn apply_vec<T: Copy + Default>(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.len());
+        let mut out = vec![T::default(); x.len()];
+        for (i, &v) in x.iter().enumerate() {
+            out[self.map[i] as usize] = v;
+        }
+        out
+    }
+
+    /// Permute in place into a caller-provided buffer (hot-path variant,
+    /// avoids allocation).
+    pub fn apply_into<T: Copy>(&self, x: &[T], out: &mut [T]) {
+        assert_eq!(x.len(), self.len());
+        assert_eq!(out.len(), self.len());
+        for (i, &v) in x.iter().enumerate() {
+            out[self.map[i] as usize] = v;
+        }
+    }
+
+    /// Permute the rows of a row-major `rows × cols` matrix:
+    /// row `i` of the input becomes row `dest(i)` of the output.
+    /// This is left-multiplication by the permutation matrix `P`.
+    pub fn apply_rows(&self, data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        assert_eq!(rows, self.len());
+        assert_eq!(data.len(), rows * cols);
+        let mut out = vec![0.0f32; data.len()];
+        for i in 0..rows {
+            let j = self.map[i] as usize;
+            out[j * cols..(j + 1) * cols].copy_from_slice(&data[i * cols..(i + 1) * cols]);
+        }
+        out
+    }
+
+    /// Permute the columns of a row-major `rows × cols` matrix:
+    /// column `i` of the input becomes column `dest(i)` of the output.
+    /// This is right-multiplication by `Pᵀ` (so `apply_cols` with the same
+    /// permutation used for `apply_rows` mirrors the paper's `P B P`).
+    pub fn apply_cols(&self, data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        assert_eq!(cols, self.len());
+        assert_eq!(data.len(), rows * cols);
+        let mut out = vec![0.0f32; data.len()];
+        for r in 0..rows {
+            let row_in = &data[r * cols..(r + 1) * cols];
+            let row_out = &mut out[r * cols..(r + 1) * cols];
+            for i in 0..cols {
+                row_out[self.map[i] as usize] = row_in[i];
+            }
+        }
+        out
+    }
+
+    /// Dense matrix form of the permutation: `P[dest(i)][i] = 1`.
+    pub fn to_matrix(&self) -> Vec<f32> {
+        let n = self.len();
+        let mut m = vec![0.0f32; n * n];
+        for i in 0..n {
+            m[self.map[i] as usize * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Cycle decomposition (sorted by smallest member), useful for debugging
+    /// and for the decompose round-trip diagnostics.
+    pub fn cycles(&self) -> Vec<Vec<usize>> {
+        let n = self.len();
+        let mut seen = vec![false; n];
+        let mut cycles = Vec::new();
+        for start in 0..n {
+            if seen[start] {
+                continue;
+            }
+            let mut cyc = vec![start];
+            seen[start] = true;
+            let mut cur = self.map[start] as usize;
+            while cur != start {
+                seen[cur] = true;
+                cyc.push(cur);
+                cur = self.map[cur] as usize;
+            }
+            cycles.push(cyc);
+        }
+        cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::prng::Xoshiro256pp;
+
+    #[test]
+    fn identity_roundtrip() {
+        let p = Permutation::identity(5);
+        assert!(p.is_identity());
+        assert_eq!(p.inverse(), p);
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(p.apply_vec(&x), x.to_vec());
+    }
+
+    #[test]
+    fn from_map_rejects_non_bijections() {
+        assert!(Permutation::from_map(vec![0, 0, 1]).is_err());
+        assert!(Permutation::from_map(vec![0, 3]).is_err());
+        assert!(Permutation::from_map(vec![2, 0, 1]).is_ok());
+    }
+
+    #[test]
+    fn inverse_law() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        for n in [1usize, 2, 7, 100, 301] {
+            let p = Permutation::random(n, &mut rng);
+            let inv = p.inverse();
+            assert!(p.compose(&inv).is_identity());
+            assert!(inv.compose(&p).is_identity());
+        }
+    }
+
+    #[test]
+    fn apply_vec_matches_matrix_form() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let n = 13;
+        let p = Permutation::random(n, &mut rng);
+        let x: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+        let px = p.apply_vec(&x);
+        // matrix-vector product with the dense form
+        let m = p.to_matrix();
+        let mut mx = vec![0.0f32; n];
+        for r in 0..n {
+            for c in 0..n {
+                mx[r] += m[r * n + c] * x[c];
+            }
+        }
+        assert_eq!(px, mx);
+    }
+
+    #[test]
+    fn rows_then_inverse_restores() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let (rows, cols) = (6, 4);
+        let p = Permutation::random(rows, &mut rng);
+        let data: Vec<f32> = (0..rows * cols).map(|i| i as f32).collect();
+        let permd = p.apply_rows(&data, rows, cols);
+        let back = p.inverse().apply_rows(&permd, rows, cols);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn cols_then_inverse_restores() {
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let (rows, cols) = (4, 9);
+        let p = Permutation::random(cols, &mut rng);
+        let data: Vec<f32> = (0..rows * cols).map(|i| i as f32).collect();
+        let permd = p.apply_cols(&data, rows, cols);
+        let back = p.inverse().apply_cols(&permd, rows, cols);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn compose_associates_with_apply() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let n = 11;
+        let p = Permutation::random(n, &mut rng);
+        let q = Permutation::random(n, &mut rng);
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let a = p.apply_vec(&q.apply_vec(&x));
+        let b = p.compose(&q).apply_vec(&x);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cycles_partition_indices() {
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let n = 20;
+        let p = Permutation::random(n, &mut rng);
+        let cycles = p.cycles();
+        let mut all: Vec<usize> = cycles.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,120 @@
+//! Mask serialization: persist [`MpdMask`]s in *factored* form (layout +
+//! permutations), not as dense 0/1 matrices — 2(rows+cols) u32s instead of
+//! rows×cols floats, and the factored form is what inference-time packing
+//! needs anyway. Reuses the MPDC checkpoint container (`nn::checkpoint`), so
+//! masks inherit its CRC integrity check and atomic-rename publishing.
+//!
+//! Encoding: per mask `i`, three tensors
+//!   `mask{i}.dims`  = [rows, cols, nblocks]           (f32-encoded u32s)
+//!   `mask{i}.p_row` = forward map of P_row            (len rows)
+//!   `mask{i}.p_col` = forward map of P_col            (len cols)
+//! Values are exact: u32 indices ≤ 2^24 round-trip through f32 losslessly,
+//! and layer dims beyond 16.7M rows are rejected at save time.
+
+use crate::mask::blockdiag::BlockDiagLayout;
+use crate::mask::mask::MpdMask;
+use crate::mask::perm::Permutation;
+use crate::nn::checkpoint::{self, CheckpointError, NamedTensor};
+use std::path::Path;
+
+const F32_EXACT_MAX: usize = 1 << 24;
+
+/// Save a set of masks to `path`.
+pub fn save_masks(path: &Path, masks: &[MpdMask]) -> Result<(), CheckpointError> {
+    let mut tensors = Vec::with_capacity(masks.len() * 3);
+    for (i, m) in masks.iter().enumerate() {
+        assert!(
+            m.rows() < F32_EXACT_MAX && m.cols() < F32_EXACT_MAX,
+            "mask dims exceed exact-f32 range"
+        );
+        tensors.push(NamedTensor {
+            name: format!("mask{i}.dims"),
+            shape: vec![3],
+            data: vec![m.rows() as f32, m.cols() as f32, m.nblocks() as f32],
+        });
+        tensors.push(NamedTensor {
+            name: format!("mask{i}.p_row"),
+            shape: vec![m.rows()],
+            data: m.p_row.as_slice().iter().map(|&v| v as f32).collect(),
+        });
+        tensors.push(NamedTensor {
+            name: format!("mask{i}.p_col"),
+            shape: vec![m.cols()],
+            data: m.p_col.as_slice().iter().map(|&v| v as f32).collect(),
+        });
+    }
+    checkpoint::save(path, &tensors)
+}
+
+/// Load masks saved by [`save_masks`].
+pub fn load_masks(path: &Path) -> Result<Vec<MpdMask>, String> {
+    let tensors = checkpoint::load(path).map_err(|e| e.to_string())?;
+    if tensors.len() % 3 != 0 {
+        return Err(format!("mask file has {} tensors (expected multiple of 3)", tensors.len()));
+    }
+    let mut masks = Vec::with_capacity(tensors.len() / 3);
+    for (i, chunk) in tensors.chunks(3).enumerate() {
+        let [dims, p_row, p_col] = chunk else {
+            return Err("bad chunk".into());
+        };
+        if dims.name != format!("mask{i}.dims") || dims.data.len() != 3 {
+            return Err(format!("unexpected tensor {} at mask {i}", dims.name));
+        }
+        let rows = dims.data[0] as usize;
+        let cols = dims.data[1] as usize;
+        let k = dims.data[2] as usize;
+        if p_row.data.len() != rows || p_col.data.len() != cols {
+            return Err(format!("mask {i}: permutation length mismatch"));
+        }
+        let to_map = |data: &[f32]| -> Result<Permutation, String> {
+            Permutation::from_map(data.iter().map(|&v| v as u32).collect())
+        };
+        masks.push(MpdMask {
+            layout: BlockDiagLayout::new(rows, cols, k),
+            p_row: to_map(&p_row.data).map_err(|e| format!("mask {i} p_row: {e}"))?,
+            p_col: to_map(&p_col.data).map_err(|e| format!("mask {i} p_col: {e}"))?,
+        });
+    }
+    Ok(masks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::prng::Xoshiro256pp;
+
+    #[test]
+    fn roundtrip_preserves_dense_mask() {
+        let dir = std::env::temp_dir().join(format!("mpdc_maskser_{}", std::process::id()));
+        let path = dir.join("masks.mpdc");
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let masks = vec![
+            MpdMask::generate(300, 784, 10, &mut rng),
+            MpdMask::generate(100, 300, 10, &mut rng),
+            MpdMask::non_permuted(16, 8, 4),
+        ];
+        save_masks(&path, &masks).unwrap();
+        let back = load_masks(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        for (a, b) in masks.iter().zip(&back) {
+            assert_eq!(a.to_dense(), b.to_dense());
+            assert_eq!(a.layout, b.layout);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_permutation() {
+        // hand-build a file with a non-bijective p_row
+        let dir = std::env::temp_dir().join(format!("mpdc_maskser2_{}", std::process::id()));
+        let path = dir.join("bad.mpdc");
+        let tensors = vec![
+            NamedTensor { name: "mask0.dims".into(), shape: vec![3], data: vec![2.0, 2.0, 1.0] },
+            NamedTensor { name: "mask0.p_row".into(), shape: vec![2], data: vec![0.0, 0.0] },
+            NamedTensor { name: "mask0.p_col".into(), shape: vec![2], data: vec![0.0, 1.0] },
+        ];
+        checkpoint::save(&path, &tensors).unwrap();
+        assert!(load_masks(&path).unwrap_err().contains("p_row"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

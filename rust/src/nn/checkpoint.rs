@@ -1,0 +1,209 @@
+//! Binary checkpoint format for trained models ("MPDC" format v1).
+//!
+//! Layout (little-endian):
+//! ```text
+//!   magic   b"MPDC"          4 bytes
+//!   version u32              currently 1
+//!   ntensor u32
+//!   repeat ntensor times:
+//!     name_len u32, name utf-8 bytes
+//!     ndim u32, dims u64 × ndim
+//!     data f32 × prod(dims)
+//!   crc32 u32                over everything before this field
+//! ```
+//! The trailing CRC (see `util::crc32`) catches truncation/corruption — a
+//! checkpoint that loads is bit-exact.
+
+use crate::util::crc32::Crc32;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"MPDC";
+const VERSION: u32 = 1;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CheckpointError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad magic (not an MPDC checkpoint)")]
+    BadMagic,
+    #[error("unsupported version {0}")]
+    BadVersion(u32),
+    #[error("corrupt checkpoint: {0}")]
+    Corrupt(String),
+    #[error("crc mismatch: stored {stored:#010x}, computed {computed:#010x}")]
+    CrcMismatch { stored: u32, computed: u32 },
+}
+
+/// A named tensor in a checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NamedTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Save named tensors to `path` (parents created).
+pub fn save(path: &Path, tensors: &[NamedTensor]) -> Result<(), CheckpointError> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        let numel: usize = t.shape.iter().product();
+        assert_eq!(t.data.len(), numel, "tensor {} shape/data mismatch", t.name);
+        buf.extend_from_slice(&(t.name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(t.name.as_bytes());
+        buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for &d in &t.shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for &v in &t.data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let mut crc = Crc32::new();
+    crc.update(&buf);
+    buf.extend_from_slice(&crc.finish().to_le_bytes());
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&buf)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?; // atomic publish
+    Ok(())
+}
+
+/// Load all tensors from `path`, verifying the CRC.
+pub fn load(path: &Path) -> Result<Vec<NamedTensor>, CheckpointError> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    if bytes.len() < 16 {
+        return Err(CheckpointError::Corrupt("file too small".into()));
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let mut crc = Crc32::new();
+    crc.update(body);
+    let computed = crc.finish();
+    if stored != computed {
+        return Err(CheckpointError::CrcMismatch { stored, computed });
+    }
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8], CheckpointError> {
+        if *pos + n > body.len() {
+            return Err(CheckpointError::Corrupt(format!("truncated at byte {pos}", pos = *pos)));
+        }
+        let s = &body[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    if take(&mut pos, 4)? != MAGIC {
+        return Err(CheckpointError::BadMagic);
+    }
+    let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    if version != VERSION {
+        return Err(CheckpointError::BadVersion(version));
+    }
+    let ntensor = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(ntensor);
+    for _ in 0..ntensor {
+        let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        if name_len > 4096 {
+            return Err(CheckpointError::Corrupt(format!("absurd name length {name_len}")));
+        }
+        let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+            .map_err(|e| CheckpointError::Corrupt(format!("bad name utf8: {e}")))?;
+        let ndim = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        if ndim > 16 {
+            return Err(CheckpointError::Corrupt(format!("absurd ndim {ndim}")));
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let raw = take(&mut pos, numel * 4)?;
+        let data: Vec<f32> =
+            raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        out.push(NamedTensor { name, shape, data });
+    }
+    if pos != body.len() {
+        return Err(CheckpointError::Corrupt("trailing bytes".into()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("mpdc_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = tmpdir();
+        let path = dir.join("a.mpdc");
+        let tensors = vec![
+            NamedTensor { name: "fc0.w".into(), shape: vec![3, 4], data: (0..12).map(|i| i as f32).collect() },
+            NamedTensor { name: "fc0.b".into(), shape: vec![3], data: vec![0.1, -0.2, 0.3] },
+            NamedTensor { name: "empty".into(), shape: vec![0], data: vec![] },
+        ];
+        save(&path, &tensors).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back, tensors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let dir = tmpdir();
+        let path = dir.join("b.mpdc");
+        save(&path, &[NamedTensor { name: "t".into(), shape: vec![2], data: vec![1.0, 2.0] }]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[20] ^= 0xFF; // flip a data byte
+        std::fs::write(&path, &bytes).unwrap();
+        match load(&path) {
+            Err(CheckpointError::CrcMismatch { .. }) => {}
+            other => panic!("expected CRC mismatch, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let dir = tmpdir();
+        let path = dir.join("c.mpdc");
+        save(&path, &[NamedTensor { name: "t".into(), shape: vec![8], data: vec![1.0; 8] }]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let dir = tmpdir();
+        let path = dir.join("d.mpdc");
+        let mut buf = b"NOPE".to_vec();
+        buf.extend_from_slice(&[0u8; 12]);
+        let mut crc = Crc32::new();
+        crc.update(&buf);
+        let c = crc.finish();
+        buf.extend_from_slice(&c.to_le_bytes());
+        std::fs::write(&path, &buf).unwrap();
+        match load(&path) {
+            Err(CheckpointError::BadMagic) => {}
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

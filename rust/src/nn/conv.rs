@@ -1,0 +1,312 @@
+//! Direct 2-D convolution + max-pool (NCHW) for the paper's conv models
+//! (Deep MNIST, CIFAR-10 net, AlexNet front-end).
+//!
+//! MPDCompress only masks FC layers ("the mask Mᵢ is only applied to the
+//! weight matrix" of FC layers — conv layers pass through unchanged), so the
+//! conv substrate here needs correctness and reasonable speed, not the full
+//! optimization treatment the block-diagonal GEMM hot path gets.
+
+use crate::mask::prng::Xoshiro256pp;
+use crate::nn::layer::he_init;
+
+/// `same`-or-`valid` 2-D convolution layer, NCHW activations,
+/// weights `[out_c, in_c, kh, kw]`.
+pub struct Conv2d {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub out_c: usize,
+    pub in_c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    x_cache: Vec<f32>,
+    in_hw: (usize, usize),
+    batch_cache: usize,
+    pub dw: Vec<f32>,
+    pub db: Vec<f32>,
+}
+
+impl Conv2d {
+    pub fn new(out_c: usize, in_c: usize, k: usize, stride: usize, pad: usize, rng: &mut Xoshiro256pp) -> Self {
+        Self {
+            w: he_init(out_c, in_c * k * k, rng),
+            b: vec![0.0; out_c],
+            out_c,
+            in_c,
+            kh: k,
+            kw: k,
+            stride,
+            pad,
+            x_cache: Vec::new(),
+            in_hw: (0, 0),
+            batch_cache: 0,
+            dw: vec![0.0; out_c * in_c * k * k],
+            db: vec![0.0; out_c],
+        }
+    }
+
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.kh) / self.stride + 1,
+            (w + 2 * self.pad - self.kw) / self.stride + 1,
+        )
+    }
+
+    /// Forward: direct convolution.
+    pub fn forward(&mut self, x: &[f32], batch: usize, h: usize, w: usize) -> Vec<f32> {
+        assert_eq!(x.len(), batch * self.in_c * h * w);
+        self.x_cache = x.to_vec();
+        self.in_hw = (h, w);
+        self.batch_cache = batch;
+        let (oh, ow) = self.out_hw(h, w);
+        let mut y = vec![0.0f32; batch * self.out_c * oh * ow];
+        for bi in 0..batch {
+            for oc in 0..self.out_c {
+                let bias = self.b[oc];
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = bias;
+                        for ic in 0..self.in_c {
+                            for ky in 0..self.kh {
+                                let iy = oy * self.stride + ky;
+                                if iy < self.pad || iy - self.pad >= h {
+                                    continue;
+                                }
+                                let iy = iy - self.pad;
+                                let xrow = &x[((bi * self.in_c + ic) * h + iy) * w..];
+                                let wrow = &self.w[((oc * self.in_c + ic) * self.kh + ky) * self.kw..];
+                                for kx in 0..self.kw {
+                                    let ix = ox * self.stride + kx;
+                                    if ix < self.pad || ix - self.pad >= w {
+                                        continue;
+                                    }
+                                    acc += xrow[ix - self.pad] * wrow[kx];
+                                }
+                            }
+                        }
+                        y[((bi * self.out_c + oc) * oh + oy) * ow + ox] = acc;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    /// Backward: accumulate dW/db, return dX.
+    pub fn backward(&mut self, dy: &[f32]) -> Vec<f32> {
+        let (h, w) = self.in_hw;
+        let batch = self.batch_cache;
+        let (oh, ow) = self.out_hw(h, w);
+        assert_eq!(dy.len(), batch * self.out_c * oh * ow);
+        let mut dx = vec![0.0f32; batch * self.in_c * h * w];
+        for bi in 0..batch {
+            for oc in 0..self.out_c {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let g = dy[((bi * self.out_c + oc) * oh + oy) * ow + ox];
+                        if g == 0.0 {
+                            continue;
+                        }
+                        self.db[oc] += g;
+                        for ic in 0..self.in_c {
+                            for ky in 0..self.kh {
+                                let iy = oy * self.stride + ky;
+                                if iy < self.pad || iy - self.pad >= h {
+                                    continue;
+                                }
+                                let iy = iy - self.pad;
+                                for kx in 0..self.kw {
+                                    let ix = ox * self.stride + kx;
+                                    if ix < self.pad || ix - self.pad >= w {
+                                        continue;
+                                    }
+                                    let ix = ix - self.pad;
+                                    let xi = ((bi * self.in_c + ic) * h + iy) * w + ix;
+                                    let wi = ((oc * self.in_c + ic) * self.kh + ky) * self.kw + kx;
+                                    self.dw[wi] += g * self.x_cache[xi];
+                                    dx[xi] += g * self.w[wi];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        dx
+    }
+
+    pub fn sgd_step(&mut self, lr: f32) {
+        for (w, g) in self.w.iter_mut().zip(&self.dw) {
+            *w -= lr * g;
+        }
+        for (b, g) in self.b.iter_mut().zip(&self.db) {
+            *b -= lr * g;
+        }
+        self.zero_grad();
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.dw.iter_mut().for_each(|v| *v = 0.0);
+        self.db.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+}
+
+/// 2×2-style max pooling, NCHW.
+pub struct MaxPool2d {
+    pub k: usize,
+    pub stride: usize,
+    argmax: Vec<usize>,
+    in_shape: (usize, usize, usize, usize),
+}
+
+impl MaxPool2d {
+    pub fn new(k: usize, stride: usize) -> Self {
+        Self { k, stride, argmax: Vec::new(), in_shape: (0, 0, 0, 0) }
+    }
+
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        ((h - self.k) / self.stride + 1, (w - self.k) / self.stride + 1)
+    }
+
+    pub fn forward(&mut self, x: &[f32], batch: usize, c: usize, h: usize, w: usize) -> Vec<f32> {
+        assert_eq!(x.len(), batch * c * h * w);
+        self.in_shape = (batch, c, h, w);
+        let (oh, ow) = self.out_hw(h, w);
+        let mut y = vec![0.0f32; batch * c * oh * ow];
+        self.argmax = vec![0usize; y.len()];
+        for bc in 0..batch * c {
+            let xp = &x[bc * h * w..(bc + 1) * h * w];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut besti = 0usize;
+                    for ky in 0..self.k {
+                        for kx in 0..self.k {
+                            let iy = oy * self.stride + ky;
+                            let ix = ox * self.stride + kx;
+                            let v = xp[iy * w + ix];
+                            if v > best {
+                                best = v;
+                                besti = iy * w + ix;
+                            }
+                        }
+                    }
+                    let oi = (bc * oh + oy) * ow + ox;
+                    y[oi] = best;
+                    self.argmax[oi] = bc * h * w + besti;
+                }
+            }
+        }
+        y
+    }
+
+    pub fn backward(&self, dy: &[f32]) -> Vec<f32> {
+        let (batch, c, h, w) = self.in_shape;
+        assert_eq!(dy.len(), self.argmax.len());
+        let mut dx = vec![0.0f32; batch * c * h * w];
+        for (oi, &ii) in self.argmax.iter().enumerate() {
+            dx[ii] += dy[oi];
+        }
+        dx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng(seed: u64) -> Xoshiro256pp {
+        Xoshiro256pp::seed_from_u64(seed)
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        let mut r = rng(1);
+        let mut conv = Conv2d::new(1, 1, 1, 1, 0, &mut r);
+        conv.w = vec![1.0];
+        conv.b = vec![0.0];
+        let x: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let y = conv.forward(&x, 1, 3, 3);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn conv_output_shape_with_pad_stride() {
+        let mut r = rng(2);
+        let conv = Conv2d::new(4, 3, 3, 2, 1, &mut r);
+        assert_eq!(conv.out_hw(28, 28), (14, 14));
+        let conv2 = Conv2d::new(4, 3, 5, 1, 0, &mut r);
+        assert_eq!(conv2.out_hw(28, 28), (24, 24));
+    }
+
+    #[test]
+    fn conv_known_values() {
+        // 2×2 input, 2×2 kernel of ones, valid → sum of inputs
+        let mut r = rng(3);
+        let mut conv = Conv2d::new(1, 1, 2, 1, 0, &mut r);
+        conv.w = vec![1.0; 4];
+        conv.b = vec![0.5];
+        let y = conv.forward(&[1.0, 2.0, 3.0, 4.0], 1, 2, 2);
+        assert_eq!(y, vec![10.5]);
+    }
+
+    #[test]
+    fn conv_gradcheck() {
+        let mut r = rng(4);
+        let mut conv = Conv2d::new(2, 1, 3, 1, 1, &mut r);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let loss_of = |conv: &mut Conv2d, x: &[f32]| -> f32 {
+            let y = conv.forward(x, 1, 4, 4);
+            y.iter().map(|v| v * v).sum::<f32>() * 0.5
+        };
+        let y = conv.forward(&x, 1, 4, 4);
+        conv.zero_grad();
+        let dx = conv.backward(&y); // dL/dy = y for L = ½‖y‖²
+        let eps = 1e-3f32;
+        for &idx in &[0usize, 7, 17] {
+            let orig = conv.w[idx];
+            conv.w[idx] = orig + eps;
+            let lp = loss_of(&mut conv, &x);
+            conv.w[idx] = orig - eps;
+            let lm = loss_of(&mut conv, &x);
+            conv.w[idx] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            assert!((conv.dw[idx] - num).abs() < 2e-2, "dw[{idx}] {} vs {num}", conv.dw[idx]);
+        }
+        // dx check at one position
+        let mut x2 = x.clone();
+        let idx = 5;
+        x2[idx] += eps;
+        let lp = loss_of(&mut conv, &x2);
+        x2[idx] -= 2.0 * eps;
+        let lm = loss_of(&mut conv, &x2);
+        let num = (lp - lm) / (2.0 * eps);
+        assert!((dx[idx] - num).abs() < 2e-2, "dx[{idx}] {} vs {num}", dx[idx]);
+    }
+
+    #[test]
+    fn maxpool_forward_backward() {
+        let mut mp = MaxPool2d::new(2, 2);
+        #[rustfmt::skip]
+        let x = vec![
+            1.0, 2.0, 5.0, 6.0,
+            3.0, 4.0, 7.0, 8.0,
+            0.0, 0.0, 1.0, 0.0,
+            0.0, 9.0, 0.0, 0.0,
+        ];
+        let y = mp.forward(&x, 1, 1, 4, 4);
+        assert_eq!(y, vec![4.0, 8.0, 9.0, 1.0]);
+        let dx = mp.backward(&[1.0, 1.0, 1.0, 1.0]);
+        // gradient lands only on the argmax positions
+        assert_eq!(dx[5], 1.0); // the 4.0
+        assert_eq!(dx[7], 1.0); // the 8.0
+        assert_eq!(dx[13], 1.0); // the 9.0
+        assert_eq!(dx[10], 1.0); // the 1.0
+        assert_eq!(dx.iter().sum::<f32>(), 4.0);
+    }
+}

@@ -1,0 +1,408 @@
+//! Native NN layers: forward + backward for the layer types the paper's four
+//! models need. The native engine serves three purposes: (1) a CPU baseline
+//! trainer that cross-checks the JAX/AOT path, (2) the dense / CSR / packed
+//! block-diagonal *inference* competitors for the §3.3 speedup study, and
+//! (3) a dependency-free way to run the Fig. 4 hundred-mask sweep fast.
+//!
+//! Conventions: activations are row-major `[batch × features]` (or
+//! `[batch, C, H, W]` for conv). A `Linear` stores `w: [out × in]`
+//! (`d_{i+1} × d_i`, matching the paper's `W_i`), so forward is
+//! `Y = X·Wᵀ + b`.
+
+use crate::linalg::blockdiag_mm::BlockDiagMatrix;
+use crate::linalg::csr::Csr;
+use crate::linalg::gemm::{gemm, gemm_a_bt, gemm_at_b};
+use crate::mask::mask::MpdMask;
+use crate::mask::prng::Xoshiro256pp;
+
+/// He-normal initialization for a `[out × in]` weight matrix.
+pub fn he_init(out: usize, inp: usize, rng: &mut Xoshiro256pp) -> Vec<f32> {
+    let std = (2.0 / inp as f64).sqrt();
+    (0..out * inp).map(|_| (rng.next_normal() * std) as f32).collect()
+}
+
+/// Fully-connected layer with optional MPD mask (Algorithm 1: the mask is
+/// re-applied after every weight update, so the gradient flow itself "molds"
+/// the weights to the permuted block structure).
+pub struct Linear {
+    pub w: Vec<f32>, // [out × in]
+    pub b: Vec<f32>, // [out]
+    pub out_dim: usize,
+    pub in_dim: usize,
+    pub mask: Option<MpdMask>,
+    // cached input for backward
+    x_cache: Vec<f32>,
+    batch_cache: usize,
+    // gradients
+    pub dw: Vec<f32>,
+    pub db: Vec<f32>,
+}
+
+impl Linear {
+    pub fn new(out_dim: usize, in_dim: usize, rng: &mut Xoshiro256pp) -> Self {
+        Self {
+            w: he_init(out_dim, in_dim, rng),
+            b: vec![0.0; out_dim],
+            out_dim,
+            in_dim,
+            mask: None,
+            x_cache: Vec::new(),
+            batch_cache: 0,
+            dw: vec![0.0; out_dim * in_dim],
+            db: vec![0.0; out_dim],
+        }
+    }
+
+    /// Attach an MPD mask (and immediately apply it — Algorithm 1 line 14).
+    pub fn with_mask(mut self, mask: MpdMask) -> Self {
+        assert_eq!(mask.rows(), self.out_dim);
+        assert_eq!(mask.cols(), self.in_dim);
+        mask.apply_inplace(&mut self.w);
+        self.mask = Some(mask);
+        self
+    }
+
+    /// `Y = X·Wᵀ + b`
+    pub fn forward(&mut self, x: &[f32], batch: usize) -> Vec<f32> {
+        assert_eq!(x.len(), batch * self.in_dim);
+        self.x_cache = x.to_vec();
+        self.batch_cache = batch;
+        let mut y = vec![0.0f32; batch * self.out_dim];
+        for bi in 0..batch {
+            y[bi * self.out_dim..(bi + 1) * self.out_dim].copy_from_slice(&self.b);
+        }
+        gemm_a_bt(x, &self.w, &mut y, batch, self.in_dim, self.out_dim);
+        y
+    }
+
+    /// Backward: given dY, accumulate dW, db and return dX.
+    /// dW = dYᵀ·X, db = Σ dY, dX = dY·W.
+    pub fn backward(&mut self, dy: &[f32]) -> Vec<f32> {
+        let batch = self.batch_cache;
+        assert_eq!(dy.len(), batch * self.out_dim);
+        // dW[out×in] += dYᵀ[out×batch]·X[batch×in]
+        gemm_at_b(dy, &self.x_cache, &mut self.dw, self.out_dim, batch, self.in_dim);
+        for bi in 0..batch {
+            for o in 0..self.out_dim {
+                self.db[o] += dy[bi * self.out_dim + o];
+            }
+        }
+        // dX[batch×in] = dY[batch×out]·W[out×in]
+        let mut dx = vec![0.0f32; batch * self.in_dim];
+        gemm(dy, &self.w, &mut dx, batch, self.out_dim, self.in_dim);
+        dx
+    }
+
+    /// SGD step; re-applies the mask to the *updated* weights, exactly as the
+    /// paper specifies ("binary masks are applied only on the updated weights
+    /// after the gradient descent calculation").
+    pub fn sgd_step(&mut self, lr: f32) {
+        for (w, g) in self.w.iter_mut().zip(&self.dw) {
+            *w -= lr * g;
+        }
+        for (b, g) in self.b.iter_mut().zip(&self.db) {
+            *b -= lr * g;
+        }
+        if let Some(mask) = &self.mask {
+            mask.apply_inplace(&mut self.w);
+        }
+        self.zero_grad();
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.dw.iter_mut().for_each(|v| *v = 0.0);
+        self.db.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
+    /// Surviving parameter count after masking (weights on the mask + biases).
+    pub fn effective_param_count(&self) -> usize {
+        match &self.mask {
+            Some(m) => m.nnz() + self.b.len(),
+            None => self.param_count(),
+        }
+    }
+}
+
+/// ReLU with cached activation sign for backward.
+#[derive(Default)]
+pub struct Relu {
+    active: Vec<bool>,
+}
+
+impl Relu {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+        self.active = x.iter().map(|&v| v > 0.0).collect();
+        x.iter().map(|&v| v.max(0.0)).collect()
+    }
+
+    pub fn backward(&self, dy: &[f32]) -> Vec<f32> {
+        assert_eq!(dy.len(), self.active.len());
+        dy.iter().zip(&self.active).map(|(&g, &a)| if a { g } else { 0.0 }).collect()
+    }
+}
+
+/// Row-wise softmax (numerically stabilized).
+pub fn softmax(x: &[f32], batch: usize, classes: usize) -> Vec<f32> {
+    assert_eq!(x.len(), batch * classes);
+    let mut out = vec![0.0f32; x.len()];
+    for bi in 0..batch {
+        let row = &x[bi * classes..(bi + 1) * classes];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        let orow = &mut out[bi * classes..(bi + 1) * classes];
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = (v - m).exp();
+            sum += *o;
+        }
+        for o in orow.iter_mut() {
+            *o /= sum;
+        }
+    }
+    out
+}
+
+/// Mean cross-entropy loss over the batch + gradient w.r.t. logits
+/// (softmax-xent fused backward: `p - onehot`).
+pub fn softmax_xent(logits: &[f32], labels: &[u32], batch: usize, classes: usize) -> (f32, Vec<f32>) {
+    let p = softmax(logits, batch, classes);
+    let mut loss = 0.0f64;
+    let mut dlogits = p.clone();
+    for bi in 0..batch {
+        let y = labels[bi] as usize;
+        assert!(y < classes, "label out of range");
+        let py = p[bi * classes + y].max(1e-12);
+        loss -= (py as f64).ln();
+        dlogits[bi * classes + y] -= 1.0;
+    }
+    let scale = 1.0 / batch as f32;
+    dlogits.iter_mut().for_each(|v| *v *= scale);
+    ((loss / batch as f64) as f32, dlogits)
+}
+
+/// Classification accuracy of logits vs labels.
+pub fn accuracy(logits: &[f32], labels: &[u32], batch: usize, classes: usize) -> f64 {
+    let mut correct = 0usize;
+    for bi in 0..batch {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let mut best = 0usize;
+        for c in 1..classes {
+            if row[c] > row[best] {
+                best = c;
+            }
+        }
+        if best == labels[bi] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / batch as f64
+}
+
+/// Top-k accuracy (paper reports top-1 and top-5 on AlexNet).
+pub fn topk_accuracy(logits: &[f32], labels: &[u32], batch: usize, classes: usize, k: usize) -> f64 {
+    let mut correct = 0usize;
+    for bi in 0..batch {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let y = labels[bi] as usize;
+        let ylogit = row[y];
+        // rank of the true class = #classes with strictly larger logit
+        let rank = row.iter().filter(|&&v| v > ylogit).count();
+        if rank < k {
+            correct += 1;
+        }
+    }
+    correct as f64 / batch as f64
+}
+
+/// Inference-only FC layer variants competing in the §3.3 speedup study.
+pub enum FcVariant {
+    /// Dense `[out × in]` GEMM — the uncompressed baseline.
+    Dense { w: Vec<f32>, out_dim: usize, in_dim: usize },
+    /// CSR over the masked (irregular in storage order) weights.
+    Sparse(Csr),
+    /// Packed block-diagonal (MPD after eq. 2) — the paper's format.
+    BlockDiag(BlockDiagMatrix),
+}
+
+impl FcVariant {
+    /// `Y += X·Wᵀ` under each representation.
+    pub fn matmul(&self, x: &[f32], y: &mut [f32], batch: usize) {
+        match self {
+            FcVariant::Dense { w, out_dim, in_dim } => {
+                gemm_a_bt(x, w, y, batch, *in_dim, *out_dim);
+            }
+            FcVariant::Sparse(csr) => csr.spmm_xt(x, y, batch),
+            FcVariant::BlockDiag(bd) => bd.matmul_xt(x, y, batch),
+        }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            FcVariant::Dense { w, .. } => w.len() * 4,
+            FcVariant::Sparse(csr) => csr.storage_bytes(),
+            FcVariant::BlockDiag(bd) => bd.storage_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng(seed: u64) -> Xoshiro256pp {
+        Xoshiro256pp::seed_from_u64(seed)
+    }
+
+    #[test]
+    fn linear_forward_shapes_and_bias() {
+        let mut r = rng(1);
+        let mut l = Linear::new(3, 4, &mut r);
+        l.b = vec![1.0, 2.0, 3.0];
+        l.w.iter_mut().for_each(|v| *v = 0.0);
+        let y = l.forward(&[0.5; 8], 2);
+        assert_eq!(y, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn linear_gradcheck() {
+        // numerical gradient check on a tiny layer
+        let mut r = rng(2);
+        let (out, inp, batch) = (3, 4, 2);
+        let mut l = Linear::new(out, inp, &mut r);
+        let x: Vec<f32> = (0..batch * inp).map(|i| (i as f32 * 0.3).sin()).collect();
+        let labels = vec![0u32, 2];
+
+        let loss_of = |l: &mut Linear, x: &[f32]| {
+            let y = l.forward(x, batch);
+            softmax_xent(&y, &labels, batch, out).0
+        };
+
+        // analytic grads
+        let y = l.forward(&x, batch);
+        let (_, dy) = softmax_xent(&y, &labels, batch, out);
+        l.zero_grad();
+        let dx = l.backward(&dy);
+
+        let eps = 1e-3f32;
+        // check dW at a few positions
+        for &idx in &[0usize, 5, 11] {
+            let orig = l.w[idx];
+            l.w[idx] = orig + eps;
+            let lp = loss_of(&mut l, &x);
+            l.w[idx] = orig - eps;
+            let lm = loss_of(&mut l, &x);
+            l.w[idx] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            // recompute analytic after restoring
+            let y = l.forward(&x, batch);
+            let (_, dy2) = softmax_xent(&y, &labels, batch, out);
+            l.zero_grad();
+            l.backward(&dy2);
+            assert!((l.dw[idx] - num).abs() < 1e-2, "dW[{idx}]: {} vs {}", l.dw[idx], num);
+        }
+        // check dX at one position
+        let mut x2 = x.clone();
+        let idx = 3;
+        let orig = x2[idx];
+        x2[idx] = orig + eps;
+        let lp = loss_of(&mut l, &x2);
+        x2[idx] = orig - eps;
+        let lm = loss_of(&mut l, &x2);
+        let num = (lp - lm) / (2.0 * eps);
+        assert!((dx[idx] - num).abs() < 1e-2, "dX[{idx}]: {} vs {num}", dx[idx]);
+    }
+
+    #[test]
+    fn masked_layer_keeps_weights_on_mask() {
+        let mut r = rng(3);
+        let mask = MpdMask::generate(6, 8, 2, &mut r);
+        let dense_mask = mask.to_dense();
+        let mut l = Linear::new(6, 8, &mut r).with_mask(mask);
+        // after init, off-mask weights are zero
+        for (i, &m) in dense_mask.iter().enumerate() {
+            if m == 0.0 {
+                assert_eq!(l.w[i], 0.0);
+            }
+        }
+        // after a training step they stay zero
+        let x: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        let y = l.forward(&x, 2);
+        let (_, dy) = softmax_xent(&y, &[1, 3], 2, 6);
+        l.backward(&dy);
+        l.sgd_step(0.1);
+        for (i, &m) in dense_mask.iter().enumerate() {
+            if m == 0.0 {
+                assert_eq!(l.w[i], 0.0, "weight {i} leaked off-mask");
+            }
+        }
+    }
+
+    #[test]
+    fn relu_forward_backward() {
+        let mut relu = Relu::new();
+        let y = relu.forward(&[-1.0, 0.0, 2.0]);
+        assert_eq!(y, vec![0.0, 0.0, 2.0]);
+        let dx = relu.backward(&[5.0, 5.0, 5.0]);
+        assert_eq!(dx, vec![0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0, -1.0, 0.0, 1.0], 2, 3);
+        for bi in 0..2 {
+            let s: f32 = p[bi * 3..(bi + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn xent_of_perfect_prediction_is_small() {
+        let logits = vec![10.0, -10.0, -10.0];
+        let (loss, _) = softmax_xent(&logits, &[0], 1, 3);
+        assert!(loss < 1e-3);
+        let (loss_bad, _) = softmax_xent(&logits, &[1], 1, 3);
+        assert!(loss_bad > 5.0);
+    }
+
+    #[test]
+    fn accuracy_and_topk() {
+        // logits: sample0 best=2, sample1 best=0
+        let logits = vec![0.1, 0.2, 0.9, 0.8, 0.1, 0.3];
+        assert_eq!(accuracy(&logits, &[2, 0], 2, 3), 1.0);
+        assert_eq!(accuracy(&logits, &[1, 0], 2, 3), 0.5);
+        // top-2: sample0 label 1 is rank 2 (0.2 < 0.9, > 0.1) → within top-2
+        assert_eq!(topk_accuracy(&logits, &[1, 2], 2, 3, 2), 1.0);
+        assert_eq!(topk_accuracy(&logits, &[1, 2], 2, 3, 1), 0.0);
+    }
+
+    #[test]
+    fn fc_variants_agree() {
+        let mut r = rng(4);
+        let mask = MpdMask::generate(20, 30, 5, &mut r);
+        let w: Vec<f32> = (0..600).map(|_| r.next_f32() - 0.5).collect();
+        let wm = mask.apply(&w);
+        let dense = FcVariant::Dense { w: wm.clone(), out_dim: 20, in_dim: 30 };
+        let sparse = FcVariant::Sparse(Csr::from_dense(&wm, 20, 30));
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * 30).map(|_| r.next_f32()).collect();
+        let mut y_dense = vec![0.0; batch * 20];
+        dense.matmul(&x, &mut y_dense, batch);
+        let mut y_sparse = vec![0.0; batch * 20];
+        sparse.matmul(&x, &mut y_sparse, batch);
+        for (a, b) in y_dense.iter().zip(&y_sparse) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        // storage ordering: blockdiag < csr < dense at 20% density
+        let bd = FcVariant::BlockDiag(BlockDiagMatrix::from_masked_weights(&mask, &wm));
+        assert!(bd.storage_bytes() < sparse.storage_bytes());
+        assert!(sparse.storage_bytes() < dense.storage_bytes());
+    }
+}

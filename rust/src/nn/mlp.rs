@@ -1,0 +1,226 @@
+//! Native multi-layer perceptron — the LeNet-300-100 workhorse for the
+//! Fig. 4 experiments (100-mask sweep, non-permuted ablation) and the CPU
+//! cross-check of the JAX/AOT training path.
+
+use crate::mask::mask::MpdMask;
+use crate::mask::prng::Xoshiro256pp;
+use crate::nn::layer::{accuracy, softmax_xent, Linear, Relu};
+
+/// MLP with ReLU between layers and raw logits at the output.
+pub struct Mlp {
+    pub dims: Vec<usize>,
+    pub layers: Vec<Linear>,
+    relus: Vec<Relu>,
+}
+
+impl Mlp {
+    /// `dims = [in, h1, ..., out]`.
+    pub fn new(dims: &[usize], rng: &mut Xoshiro256pp) -> Self {
+        assert!(dims.len() >= 2);
+        let layers = dims.windows(2).map(|w| Linear::new(w[1], w[0], rng)).collect::<Vec<_>>();
+        let relus = (0..dims.len() - 2).map(|_| Relu::new()).collect();
+        Self { dims: dims.to_vec(), layers, relus }
+    }
+
+    /// Attach MPD masks to selected layers: `masks[i]` applies to layer `i`
+    /// (None = dense). Per the paper, LeNet-300-100 masks FC1 (784×300) and
+    /// FC2 (300×100), leaving the 10-way classifier dense.
+    pub fn with_masks(mut self, masks: Vec<Option<MpdMask>>) -> Self {
+        assert_eq!(masks.len(), self.layers.len());
+        let layers = std::mem::take(&mut self.layers);
+        self.layers = layers
+            .into_iter()
+            .zip(masks)
+            .map(|(l, m)| match m {
+                Some(mask) => l.with_mask(mask),
+                None => l,
+            })
+            .collect();
+        self
+    }
+
+    pub fn forward(&mut self, x: &[f32], batch: usize) -> Vec<f32> {
+        let n = self.layers.len();
+        let mut act = self.layers[0].forward(x, batch);
+        for i in 1..n {
+            act = self.relus[i - 1].forward(&act);
+            act = self.layers[i].forward(&act, batch);
+        }
+        act
+    }
+
+    /// One SGD step on a batch; returns the loss.
+    pub fn train_step(&mut self, x: &[f32], labels: &[u32], batch: usize, lr: f32) -> f32 {
+        let classes = *self.dims.last().unwrap();
+        let logits = self.forward(x, batch);
+        let (loss, mut grad) = softmax_xent(&logits, labels, batch, classes);
+        let n = self.layers.len();
+        for i in (0..n).rev() {
+            grad = self.layers[i].backward(&grad);
+            if i > 0 {
+                grad = self.relus[i - 1].backward(&grad);
+            }
+        }
+        for l in &mut self.layers {
+            l.sgd_step(lr);
+        }
+        loss
+    }
+
+    /// Accuracy over a dataset slice.
+    pub fn evaluate(&mut self, x: &[f32], labels: &[u32], batch: usize) -> f64 {
+        let classes = *self.dims.last().unwrap();
+        let logits = self.forward(x, batch);
+        accuracy(&logits, labels, batch, classes)
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// Surviving params after masking — the paper's Table 1 "Number of
+    /// Parameters in FC" comparison.
+    pub fn effective_param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.effective_param_count()).sum()
+    }
+
+    /// Named parameter tensors for checkpointing: `fc{i}.w`, `fc{i}.b`.
+    pub fn named_params(&self) -> Vec<(String, Vec<usize>, &[f32])> {
+        let mut out = Vec::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            out.push((format!("fc{i}.w"), vec![l.out_dim, l.in_dim], l.w.as_slice()));
+            out.push((format!("fc{i}.b"), vec![l.out_dim], l.b.as_slice()));
+        }
+        out
+    }
+
+    /// Load parameters by name (inverse of [`Self::named_params`]).
+    pub fn load_params(&mut self, params: &[(String, Vec<usize>, Vec<f32>)]) -> Result<(), String> {
+        for (name, shape, data) in params {
+            let (kind, idx) = parse_param_name(name)?;
+            let l = self.layers.get_mut(idx).ok_or_else(|| format!("no layer {idx}"))?;
+            match kind {
+                "w" => {
+                    if *shape != vec![l.out_dim, l.in_dim] {
+                        return Err(format!("{name}: shape {shape:?} != [{}, {}]", l.out_dim, l.in_dim));
+                    }
+                    l.w = data.clone();
+                }
+                "b" => {
+                    if *shape != vec![l.out_dim] {
+                        return Err(format!("{name}: shape {shape:?} != [{}]", l.out_dim));
+                    }
+                    l.b = data.clone();
+                }
+                other => return Err(format!("unknown param kind {other}")),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_param_name(name: &str) -> Result<(&str, usize), String> {
+    let rest = name.strip_prefix("fc").ok_or_else(|| format!("bad param name {name}"))?;
+    let (idx, kind) = rest.split_once('.').ok_or_else(|| format!("bad param name {name}"))?;
+    Ok((kind, idx.parse().map_err(|_| format!("bad layer index in {name}"))?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::blockdiag::off_block_mass;
+
+    fn rng(seed: u64) -> Xoshiro256pp {
+        Xoshiro256pp::seed_from_u64(seed)
+    }
+
+    /// Tiny two-gaussian-blob classification task.
+    fn blob_data(n: usize, dim: usize, rng: &mut Xoshiro256pp) -> (Vec<f32>, Vec<u32>) {
+        let mut x = Vec::with_capacity(n * dim);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let label = (i % 2) as u32;
+            let center = if label == 0 { -1.0 } else { 1.0 };
+            for _ in 0..dim {
+                x.push((center + rng.next_normal() * 0.3) as f32);
+            }
+            y.push(label);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn learns_blobs() {
+        let mut r = rng(1);
+        let mut mlp = Mlp::new(&[4, 16, 2], &mut r);
+        let (x, y) = blob_data(64, 4, &mut r);
+        let first_loss = mlp.train_step(&x, &y, 64, 0.1);
+        let mut last = first_loss;
+        for _ in 0..50 {
+            last = mlp.train_step(&x, &y, 64, 0.1);
+        }
+        assert!(last < first_loss * 0.5, "loss {first_loss} → {last} did not drop");
+        assert!(mlp.evaluate(&x, &y, 64) > 0.95);
+    }
+
+    #[test]
+    fn masked_mlp_learns_and_stays_masked() {
+        let mut r = rng(2);
+        let mask1 = MpdMask::generate(16, 8, 4, &mut r);
+        let layout1 = mask1.layout.clone();
+        let m1 = mask1.clone();
+        let mut mlp = Mlp::new(&[8, 16, 2], &mut r).with_masks(vec![Some(mask1), None]);
+        let (x, y) = blob_data(64, 8, &mut r);
+        for _ in 0..60 {
+            mlp.train_step(&x, &y, 64, 0.1);
+        }
+        assert!(mlp.evaluate(&x, &y, 64) > 0.9);
+        // masked weights, unpermuted, must be exactly block diagonal
+        let star = m1.unpermute(&mlp.layers[0].w);
+        assert_eq!(off_block_mass(&star, &layout1), 0.0);
+    }
+
+    #[test]
+    fn param_counts() {
+        let mut r = rng(3);
+        // LeNet-300-100 dims: dense params (784·300+300)+(300·100+100)+(100·10+10)
+        let mlp = Mlp::new(&[784, 300, 100, 10], &mut r);
+        assert_eq!(mlp.param_count(), 784 * 300 + 300 + 300 * 100 + 100 + 100 * 10 + 10);
+        // with 10-block masks on fc1+fc2 the paper's 272k → 27.2k FC weights
+        let mask1 = MpdMask::generate(300, 784, 10, &mut r);
+        let mask2 = MpdMask::generate(100, 300, 10, &mut r);
+        let nnz = mask1.nnz() + mask2.nnz();
+        let mlp = Mlp::new(&[784, 300, 100, 10], &mut r).with_masks(vec![Some(mask1), Some(mask2), None]);
+        assert_eq!(
+            mlp.effective_param_count(),
+            nnz + 300 + 100 + 100 * 10 + 10
+        );
+        // ≈ 10× compression of the masked FC weights
+        let dense_fc = 784 * 300 + 300 * 100;
+        assert!((dense_fc as f64 / nnz as f64 - 10.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn named_params_roundtrip() {
+        let mut r = rng(4);
+        let mut a = Mlp::new(&[6, 5, 3], &mut r);
+        let b = Mlp::new(&[6, 5, 3], &mut r);
+        let saved: Vec<(String, Vec<usize>, Vec<f32>)> =
+            b.named_params().into_iter().map(|(n, s, d)| (n, s, d.to_vec())).collect();
+        a.load_params(&saved).unwrap();
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.w, lb.w);
+            assert_eq!(la.b, lb.b);
+        }
+    }
+
+    #[test]
+    fn load_params_rejects_bad_shapes() {
+        let mut r = rng(5);
+        let mut a = Mlp::new(&[6, 5, 3], &mut r);
+        let bad = vec![("fc0.w".to_string(), vec![5usize, 7], vec![0.0f32; 35])];
+        assert!(a.load_params(&bad).is_err());
+        let unknown = vec![("fc9.w".to_string(), vec![5usize, 6], vec![0.0f32; 30])];
+        assert!(a.load_params(&unknown).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Native neural-network engine: layers, MLP/conv models, checkpointing.
+pub mod checkpoint;
+pub mod conv;
+pub mod layer;
+pub mod mlp;
+
+pub use layer::{accuracy, softmax, softmax_xent, topk_accuracy, FcVariant, Linear, Relu};
+pub use mlp::Mlp;

@@ -1,0 +1,249 @@
+//! The PJRT execution engine: loads AOT HLO-text artifacts, compiles them on
+//! the CPU PJRT client (once — executables are cached), and runs them with
+//! typed host buffers. This is the only place the `xla` crate is touched;
+//! everything above works with [`Value`]s.
+
+use crate::runtime::manifest::{ArtifactMeta, DType, Manifest, TensorSpec};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// A host-side tensor crossing the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Self {
+        Value::F32(vec![v], vec![])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(_, s) | Value::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F32(..) => DType::F32,
+            Value::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            Value::F32(d, _) => d.len(),
+            Value::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Value::F32(d, _) => d,
+            _ => panic!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Value::I32(d, _) => d,
+            _ => panic!("expected i32 value"),
+        }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Value::F32(d, _) => d,
+            _ => panic!("expected f32 value"),
+        }
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
+    }
+
+    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32(d, _) => xla::Literal::vec1(d),
+            Value::I32(d, _) => xla::Literal::vec1(d),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> anyhow::Result<Value> {
+        Ok(match spec.dtype {
+            DType::F32 => Value::F32(lit.to_vec::<f32>()?, spec.shape.clone()),
+            DType::I32 => Value::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
+        })
+    }
+}
+
+/// A compiled artifact: PJRT executable + its metadata.
+pub struct LoadedExec {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedExec {
+    /// Execute with positional arguments; shapes/dtypes are validated against
+    /// the artifact metadata before touching PJRT.
+    pub fn run(&self, args: &[Value]) -> anyhow::Result<Vec<Value>> {
+        anyhow::ensure!(
+            args.len() == self.meta.inputs.len(),
+            "{}: got {} args, artifact expects {}",
+            self.meta.name,
+            args.len(),
+            self.meta.inputs.len()
+        );
+        for (i, (a, spec)) in args.iter().zip(&self.meta.inputs).enumerate() {
+            anyhow::ensure!(
+                a.matches(spec),
+                "{}: arg {i} mismatch: got {:?}/{:?}, expected {:?}/{:?}",
+                self.meta.name,
+                a.dtype(),
+                a.shape(),
+                spec.dtype,
+                spec.shape
+            );
+        }
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<anyhow::Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.meta.outputs.len(),
+            "{}: got {} outputs, expected {}",
+            self.meta.name,
+            parts.len(),
+            self.meta.outputs.len()
+        );
+        parts
+            .iter()
+            .zip(&self.meta.outputs)
+            .map(|(l, spec)| Value::from_literal(l, spec))
+            .collect()
+    }
+}
+
+/// The engine: PJRT client + manifest + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<LoadedExec>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn cpu(manifest: Manifest) -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load (or fetch from cache) a compiled artifact by name.
+    pub fn load(&self, name: &str) -> anyhow::Result<Arc<LoadedExec>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        anyhow::ensure!(self.manifest.contains(name), "artifact {name} not in manifest");
+        let meta = self.manifest.meta(name).map_err(|e| anyhow::anyhow!(e))?;
+        let path = self.manifest.hlo_path(name);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let loaded = Arc::new(LoadedExec { meta, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// One-shot convenience: load + run.
+    pub fn run(&self, name: &str, args: &[Value]) -> anyhow::Result<Vec<Value>> {
+        self.load(name)?.run(args)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::default_artifact_dir;
+
+    fn engine() -> Option<Engine> {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::cpu(Manifest::load(&dir).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn value_roundtrip_literal() {
+        let v = Value::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let lit = v.to_literal().unwrap();
+        let spec = TensorSpec { shape: vec![2, 3], dtype: DType::F32 };
+        let back = Value::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back, v);
+        let vi = Value::I32(vec![7, -8], vec![2]);
+        let lit = vi.to_literal().unwrap();
+        let spec = TensorSpec { shape: vec![2], dtype: DType::I32 };
+        assert_eq!(Value::from_literal(&lit, &spec).unwrap(), vi);
+    }
+
+    #[test]
+    fn engine_loads_and_validates() {
+        let Some(eng) = engine() else { return };
+        let exe = eng.load("lenet_infer_b1").unwrap();
+        assert_eq!(exe.meta.inputs.len(), 7);
+        // wrong arg count rejected
+        assert!(exe.run(&[]).is_err());
+        // wrong shape rejected
+        let mut args: Vec<Value> =
+            exe.meta.inputs.iter().map(|s| Value::F32(vec![0.0; s.numel()], s.shape.clone())).collect();
+        args[0] = Value::F32(vec![0.0; 4], vec![2, 2]);
+        assert!(exe.run(&args).is_err());
+        // cache hit returns the same Arc
+        let again = eng.load("lenet_infer_b1").unwrap();
+        assert!(Arc::ptr_eq(&exe, &again));
+    }
+
+    #[test]
+    fn lenet_infer_executes_and_matches_native() {
+        // The cross-layer contract: the AOT executable computes the same
+        // function as the native rust engine.
+        let Some(eng) = engine() else { return };
+        use crate::mask::prng::Xoshiro256pp;
+        use crate::nn::mlp::Mlp;
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let mut mlp = Mlp::new(&[784, 300, 100, 10], &mut rng);
+        for l in &mut mlp.layers {
+            for b in l.b.iter_mut() {
+                *b = rng.next_f32() - 0.5;
+            }
+        }
+        let x: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+        let want = mlp.forward(&x, 1);
+
+        let args = vec![
+            Value::F32(mlp.layers[0].w.clone(), vec![300, 784]),
+            Value::F32(mlp.layers[0].b.clone(), vec![300]),
+            Value::F32(mlp.layers[1].w.clone(), vec![100, 300]),
+            Value::F32(mlp.layers[1].b.clone(), vec![100]),
+            Value::F32(mlp.layers[2].w.clone(), vec![10, 100]),
+            Value::F32(mlp.layers[2].b.clone(), vec![10]),
+            Value::F32(x, vec![1, 784]),
+        ];
+        let out = eng.run("lenet_infer_b1", &args).unwrap();
+        assert_eq!(out.len(), 1);
+        let got = out[0].as_f32();
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Artifact manifest + metadata parsing.
+//!
+//! `make artifacts` (python/compile/aot.py) writes, per entrypoint,
+//! `<name>.hlo.txt` + `<name>.meta.json`, plus a `manifest.txt` listing all
+//! names. This module loads that metadata so the engine can type-check the
+//! positional argument lists it feeds PJRT.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Element dtype of an artifact tensor (the compile path only emits these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(format!("unsupported dtype {other}")),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Metadata of one AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactMeta {
+    fn specs(j: &Json, key: &str) -> Result<Vec<TensorSpec>, String> {
+        j.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("meta missing {key}"))?
+            .iter()
+            .map(|t| {
+                let shape = t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or("missing shape")?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or("bad dim"))
+                    .collect::<Result<Vec<_>, _>>()?;
+                let dtype = DType::parse(t.get("dtype").and_then(Json::as_str).ok_or("missing dtype")?)?;
+                Ok(TensorSpec { shape, dtype })
+            })
+            .collect()
+    }
+
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let j = Json::parse(text)?;
+        Ok(Self {
+            name: j.get("name").and_then(Json::as_str).ok_or("meta missing name")?.to_string(),
+            inputs: Self::specs(&j, "inputs")?,
+            outputs: Self::specs(&j, "outputs")?,
+        })
+    }
+}
+
+/// The artifact directory: manifest + lazily loadable metadata.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub names: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .map_err(|e| format!("cannot read {}/manifest.txt: {e} — run `make artifacts`", dir.display()))?;
+        let names = text.lines().map(|l| l.trim().to_string()).filter(|l| !l.is_empty()).collect();
+        Ok(Self { dir: dir.to_path_buf(), names })
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.names.iter().any(|n| n == name)
+    }
+
+    pub fn meta(&self, name: &str) -> Result<ArtifactMeta, String> {
+        let path = self.dir.join(format!("{name}.meta.json"));
+        let text = std::fs::read_to_string(&path).map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let meta = ArtifactMeta::parse(&text)?;
+        if meta.name != name {
+            return Err(format!("meta name {} does not match artifact {name}", meta.name));
+        }
+        Ok(meta)
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+}
+
+/// Locate the artifacts directory: $MPDC_ARTIFACTS, ./artifacts, or the
+/// crate-root artifacts dir (tests run from the workspace root).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("MPDC_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.join("manifest.txt").exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_meta_json() {
+        let text = r#"{"name":"m","inputs":[{"shape":[3,4],"dtype":"f32"},{"shape":[],"dtype":"f32"},{"shape":[5],"dtype":"i32"}],"outputs":[{"shape":[3],"dtype":"f32"}]}"#;
+        let m = ArtifactMeta::parse(text).unwrap();
+        assert_eq!(m.name, "m");
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.inputs[0], TensorSpec { shape: vec![3, 4], dtype: DType::F32 });
+        assert_eq!(m.inputs[1].numel(), 1);
+        assert_eq!(m.inputs[2].dtype, DType::I32);
+        assert_eq!(m.outputs[0].shape, vec![3]);
+    }
+
+    #[test]
+    fn parse_rejects_bad_dtype() {
+        let text = r#"{"name":"m","inputs":[{"shape":[1],"dtype":"f64"}],"outputs":[]}"#;
+        assert!(ArtifactMeta::parse(text).is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("mpdc_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "a\nb\n\n").unwrap();
+        std::fs::write(
+            dir.join("a.meta.json"),
+            r#"{"name":"a","inputs":[],"outputs":[]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.names, vec!["a", "b"]);
+        assert!(m.contains("a"));
+        assert!(!m.contains("c"));
+        assert_eq!(m.meta("a").unwrap().name, "a");
+        assert!(m.meta("b").is_err()); // no meta file
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_artifacts_parse_if_present() {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: no artifacts built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.contains("lenet_train_step_b50"));
+        for name in &m.names {
+            let meta = m.meta(name).unwrap();
+            assert!(!meta.inputs.is_empty(), "{name} has no inputs");
+            assert!(m.hlo_path(name).exists(), "{name} hlo missing");
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: artifact manifests + the compiled-executable engine.
+//! Python produces artifacts at build time; this module is how the rust
+//! coordinator runs them — Python is never on the request path.
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, LoadedExec, Value};
+pub use manifest::{default_artifact_dir, ArtifactMeta, DType, Manifest, TensorSpec};

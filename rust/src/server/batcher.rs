@@ -1,0 +1,411 @@
+//! Dynamic batching worker — the serving core of the coordinator.
+//!
+//! Requests are admitted through a *bounded* queue (backpressure: a full
+//! queue rejects instead of buffering unboundedly), collected by a worker
+//! thread into batches of at most `max_batch`, waiting at most `max_wait`
+//! after the first request arrives (the classic dynamic-batching policy), and
+//! executed on an [`InferBackend`]. MPDCompress's block-diagonal layers make
+//! the backend's per-batch cost ~1/c of dense — the batcher is how that
+//! translates into serving throughput.
+
+use crate::server::metrics::ServerMetrics;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// An inference backend consumed by one worker thread. Backends need not be
+/// `Send`: PJRT executables hold thread-local handles, so [`spawn_with`]
+/// constructs the backend *on* the worker thread via a `Send` factory.
+pub trait InferBackend: 'static {
+    fn feature_dim(&self) -> usize;
+    fn out_dim(&self) -> usize;
+    /// Largest batch the backend accepts at once.
+    fn max_batch(&self) -> usize;
+    /// Run `batch` stacked samples; returns `[batch × out_dim]` flattened.
+    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>>;
+}
+
+struct Request {
+    input: Vec<f32>,
+    enqueued: Instant,
+    resp: std::sync::mpsc::Sender<Result<Vec<f32>, String>>,
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Bounded admission queue length (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 32, max_wait: Duration::from_millis(2), queue_depth: 256 }
+    }
+}
+
+/// Handle to a running batcher. Cloneable; dropping all clones shuts the
+/// worker down (the channel disconnects).
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: SyncSender<Request>,
+    pub metrics: Arc<ServerMetrics>,
+    feature_dim: usize,
+    out_dim: usize,
+}
+
+/// Error returned to callers.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ServeError {
+    #[error("queue full — backpressure")]
+    Overloaded,
+    #[error("server shut down")]
+    Closed,
+    #[error("bad input size: got {got}, expected {expected}")]
+    BadInput { got: usize, expected: usize },
+    #[error("backend failure: {0}")]
+    Backend(String),
+}
+
+impl BatcherHandle {
+    /// Synchronous inference: enqueue and wait for the batched result.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>, ServeError> {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        if input.len() != self.feature_dim {
+            return Err(ServeError::BadInput { got: input.len(), expected: self.feature_dim });
+        }
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let req = Request { input, enqueued: Instant::now(), resp: rtx };
+        match self.tx.try_send(req) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::Overloaded);
+            }
+            Err(TrySendError::Disconnected(_)) => return Err(ServeError::Closed),
+        }
+        match rrx.recv() {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(e)) => Err(ServeError::Backend(e)),
+            Err(_) => Err(ServeError::Closed),
+        }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.feature_dim
+    }
+}
+
+/// Spawn a batching worker over an already-built (Send) backend.
+pub fn spawn<B: InferBackend + Send>(backend: B, cfg: BatcherConfig) -> (BatcherHandle, std::thread::JoinHandle<()>) {
+    spawn_with(move || Ok(backend), cfg).expect("infallible factory")
+}
+
+/// Spawn a batching worker whose backend is constructed *on* the worker
+/// thread (required for PJRT-backed backends, whose handles are not `Send`).
+/// Blocks until the factory has run; factory errors are returned here.
+pub fn spawn_with<B, F>(factory: F, cfg: BatcherConfig) -> anyhow::Result<(BatcherHandle, std::thread::JoinHandle<()>)>
+where
+    B: InferBackend,
+    F: FnOnce() -> anyhow::Result<B> + Send + 'static,
+{
+    assert!(cfg.max_batch >= 1);
+    let (tx, rx): (SyncSender<Request>, Receiver<Request>) = std::sync::mpsc::sync_channel(cfg.queue_depth);
+    let metrics = Arc::new(ServerMetrics::new());
+    let metrics_worker = metrics.clone();
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<(usize, usize, usize), String>>();
+    let join = std::thread::Builder::new()
+        .name("mpdc-batcher".into())
+        .spawn(move || {
+            let mut backend = match factory() {
+                Ok(b) => {
+                    let _ = ready_tx.send(Ok((b.feature_dim(), b.out_dim(), b.max_batch())));
+                    b
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return;
+                }
+            };
+            let metrics = metrics_worker;
+            let max_batch = cfg.max_batch.min(backend.max_batch());
+            let feature_dim = backend.feature_dim();
+            let out_dim = backend.out_dim();
+            loop {
+                // block for the first request of a batch
+                let first = match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => return, // all senders dropped
+                };
+                let deadline = Instant::now() + cfg.max_wait;
+                let mut batch = vec![first];
+                while batch.len() < max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => batch.push(r),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                // assemble
+                let n = batch.len();
+                let mut x = Vec::with_capacity(n * feature_dim);
+                for r in &batch {
+                    metrics.queue_wait.record(r.enqueued.elapsed());
+                    x.extend_from_slice(&r.input);
+                }
+                metrics.batches.fetch_add(1, Ordering::Relaxed);
+                metrics.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
+                let t0 = Instant::now();
+                let result = backend.infer(&x, n);
+                let dt = t0.elapsed();
+                match result {
+                    Ok(y) => {
+                        debug_assert_eq!(y.len(), n * out_dim);
+                        for (i, r) in batch.into_iter().enumerate() {
+                            metrics.latency.record(r.enqueued.elapsed());
+                            let _ = r.resp.send(Ok(y[i * out_dim..(i + 1) * out_dim].to_vec()));
+                        }
+                        let _ = dt;
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        for r in batch {
+                            metrics.latency.record(r.enqueued.elapsed());
+                            let _ = r.resp.send(Err(msg.clone()));
+                        }
+                    }
+                }
+            }
+        })
+        .expect("spawn batcher");
+    let (feature_dim, out_dim, _max_batch) = ready_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("batcher worker died during startup"))?
+        .map_err(|e| anyhow::anyhow!("backend factory failed: {e}"))?;
+    let handle = BatcherHandle { tx, metrics, feature_dim, out_dim };
+    Ok((handle, join))
+}
+
+// ---------------------------------------------------------------------------
+// backends
+// ---------------------------------------------------------------------------
+
+/// Backend over the native packed block-diagonal model (MPD inference).
+pub struct PackedBackend {
+    pub model: crate::compress::packed_model::PackedMlp,
+}
+
+impl InferBackend for PackedBackend {
+    fn feature_dim(&self) -> usize {
+        self.model.in_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.model.out_dim
+    }
+
+    fn max_batch(&self) -> usize {
+        1024
+    }
+
+    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(self.model.forward(x, batch))
+    }
+}
+
+/// Backend over an AOT PJRT inference executable: pads each dynamic batch to
+/// the artifact's static batch (the usual static-shape serving trick).
+pub struct AotBackend {
+    exec: std::sync::Arc<crate::runtime::engine::LoadedExec>,
+    params: Vec<crate::runtime::engine::Value>,
+    static_batch: usize,
+    feature_dim: usize,
+    out_dim: usize,
+    x_feat_shape: Vec<usize>,
+}
+
+impl AotBackend {
+    pub fn new(
+        engine: &crate::runtime::engine::Engine,
+        artifact: &str,
+        params: Vec<crate::runtime::engine::Value>,
+    ) -> anyhow::Result<Self> {
+        let exec = engine.load(artifact)?;
+        let x_spec = exec.meta.inputs.last().expect("infer artifact takes x last").clone();
+        anyhow::ensure!(
+            exec.meta.inputs.len() == params.len() + 1,
+            "{artifact}: expected {} params, got {}",
+            exec.meta.inputs.len() - 1,
+            params.len()
+        );
+        let out_spec = &exec.meta.outputs[0];
+        Ok(Self {
+            static_batch: x_spec.shape[0],
+            feature_dim: x_spec.shape[1..].iter().product(),
+            out_dim: out_spec.shape[1..].iter().product(),
+            x_feat_shape: x_spec.shape[1..].to_vec(),
+            exec,
+            params,
+        })
+    }
+}
+
+impl InferBackend for AotBackend {
+    fn feature_dim(&self) -> usize {
+        self.feature_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    fn max_batch(&self) -> usize {
+        self.static_batch
+    }
+
+    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        use crate::runtime::engine::Value;
+        anyhow::ensure!(batch <= self.static_batch);
+        let mut xp = vec![0.0f32; self.static_batch * self.feature_dim];
+        xp[..batch * self.feature_dim].copy_from_slice(x);
+        let mut shape = vec![self.static_batch];
+        shape.extend_from_slice(&self.x_feat_shape);
+        let mut args = self.params.clone();
+        args.push(Value::F32(xp, shape));
+        let out = self.exec.run(&args)?;
+        Ok(out[0].as_f32()[..batch * self.out_dim].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Trivial backend: y = 2x (out_dim == feature_dim), records batch sizes.
+    struct Echo {
+        dim: usize,
+        batches: Arc<std::sync::Mutex<Vec<usize>>>,
+        fail: bool,
+        delay: Duration,
+    }
+
+    impl InferBackend for Echo {
+        fn feature_dim(&self) -> usize {
+            self.dim
+        }
+
+        fn out_dim(&self) -> usize {
+            self.dim
+        }
+
+        fn max_batch(&self) -> usize {
+            64
+        }
+
+        fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+            if self.fail {
+                anyhow::bail!("injected failure");
+            }
+            std::thread::sleep(self.delay);
+            self.batches.lock().unwrap().push(batch);
+            Ok(x.iter().map(|v| v * 2.0).collect())
+        }
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let b = Echo { dim: 3, batches: Default::default(), fail: false, delay: Duration::ZERO };
+        let (h, join) = spawn(b, BatcherConfig::default());
+        let y = h.infer(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(y, vec![2.0, 4.0, 6.0]);
+        assert_eq!(h.metrics.requests.load(Ordering::Relaxed), 1);
+        drop(h);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_input_size() {
+        let b = Echo { dim: 3, batches: Default::default(), fail: false, delay: Duration::ZERO };
+        let (h, join) = spawn(b, BatcherConfig::default());
+        assert_eq!(h.infer(vec![1.0]), Err(ServeError::BadInput { got: 1, expected: 3 }));
+        drop(h);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn backend_errors_propagate() {
+        let b = Echo { dim: 2, batches: Default::default(), fail: true, delay: Duration::ZERO };
+        let (h, join) = spawn(b, BatcherConfig::default());
+        match h.infer(vec![0.0, 0.0]) {
+            Err(ServeError::Backend(msg)) => assert!(msg.contains("injected")),
+            other => panic!("{other:?}"),
+        }
+        drop(h);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let batches = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let b = Echo { dim: 2, batches: batches.clone(), fail: false, delay: Duration::from_millis(1) };
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20), queue_depth: 64 };
+        let (h, join) = spawn(b, cfg);
+        let mut threads = Vec::new();
+        for i in 0..16 {
+            let h = h.clone();
+            threads.push(std::thread::spawn(move || {
+                let v = i as f32;
+                let y = h.infer(vec![v, v + 0.5]).unwrap();
+                assert_eq!(y, vec![2.0 * v, 2.0 * v + 1.0]); // responses not mixed up
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        let sizes = batches.lock().unwrap().clone();
+        assert_eq!(sizes.iter().sum::<usize>(), 16);
+        assert!(sizes.iter().all(|&s| s <= 8), "{sizes:?}");
+        assert!(sizes.iter().any(|&s| s > 1), "no batching happened: {sizes:?}");
+        assert_eq!(h.metrics.batches.load(Ordering::Relaxed) as usize, sizes.len());
+        drop(h);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // slow backend + tiny queue + many concurrent callers ⇒ some Overloaded
+        let b = Echo { dim: 1, batches: Default::default(), fail: false, delay: Duration::from_millis(30) };
+        let cfg = BatcherConfig { max_batch: 1, max_wait: Duration::ZERO, queue_depth: 1 };
+        let (h, join) = spawn(b, cfg);
+        let mut threads = Vec::new();
+        let rejected = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        for _ in 0..12 {
+            let h = h.clone();
+            let rej = rejected.clone();
+            threads.push(std::thread::spawn(move || match h.infer(vec![1.0]) {
+                Ok(_) => {}
+                Err(ServeError::Overloaded) => {
+                    rej.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => panic!("{e:?}"),
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!(rejected.load(Ordering::Relaxed) > 0, "expected backpressure rejections");
+        drop(h);
+        join.join().unwrap();
+    }
+}

@@ -1,0 +1,188 @@
+//! Serving metrics: lock-light latency histogram + throughput counters.
+//!
+//! The histogram is log-bucketed (≈7% resolution) over 1 µs – 100 s, which is
+//! plenty for p50/p90/p99 reporting in the §3.3 serving benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKETS: usize = 256;
+const MIN_NS: f64 = 1_000.0; // 1 µs
+const GROWTH: f64 = 1.0746; // min * growth^255 ≈ 100 s
+
+/// Log-bucketed latency histogram; all operations are atomic.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if (ns as f64) <= MIN_NS {
+            return 0;
+        }
+        let b = ((ns as f64 / MIN_NS).ln() / GROWTH.ln()).floor() as usize;
+        b.min(BUCKETS - 1)
+    }
+
+    /// Lower bound of bucket `b` in ns.
+    fn bucket_floor(b: usize) -> f64 {
+        MIN_NS * GROWTH.powi(b as i32)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64 / 1e3
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_ns.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Approximate percentile in µs (bucket lower bound).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((total as f64) * p).ceil() as u64;
+        let mut acc = 0u64;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            acc += bucket.load(Ordering::Relaxed);
+            if acc >= target {
+                return Self::bucket_floor(b) / 1e3;
+            }
+        }
+        self.max_us()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Aggregate serving metrics for one model variant.
+pub struct ServerMetrics {
+    pub latency: Histogram,
+    pub queue_wait: Histogram,
+    pub requests: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self {
+            latency: Histogram::new(),
+            queue_wait: Histogram::new(),
+            requests: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} rejected={} batches={} mean_batch={:.2} latency(p50/p90/p99/max µs)={:.0}/{:.0}/{:.0}/{:.0}",
+            self.requests.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.latency.percentile_us(0.5),
+            self.latency.percentile_us(0.9),
+            self.latency.percentile_us(0.99),
+            self.latency.max_us(),
+        )
+    }
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = Histogram::new();
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile_us(0.5);
+        let p90 = h.percentile_us(0.9);
+        let p99 = h.percentile_us(0.99);
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        // log buckets: ±8% accuracy
+        assert!((p50 - 500.0).abs() < 60.0, "p50 {p50}");
+        assert!((p99 - 990.0).abs() < 100.0, "p99 {p99}");
+        assert!((h.mean_us() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile_us(0.99), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn extreme_values_clamp() {
+        let h = Histogram::new();
+        h.record(Duration::from_nanos(1));
+        h.record(Duration::from_secs(1000));
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile_us(1.0) > 0.0);
+    }
+
+    #[test]
+    fn metrics_batch_stats() {
+        let m = ServerMetrics::new();
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.batched_requests.fetch_add(7, Ordering::Relaxed);
+        assert!((m.mean_batch_size() - 3.5).abs() < 1e-9);
+        assert!(m.summary().contains("mean_batch=3.50"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Inference serving: dynamic batcher, model-variant router, metrics.
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+
+pub use batcher::{spawn, AotBackend, BatcherConfig, BatcherHandle, InferBackend, PackedBackend, ServeError};
+pub use metrics::{Histogram, ServerMetrics};
+pub use router::Router;

@@ -1,0 +1,174 @@
+//! Model-variant router: names → batchers.
+//!
+//! A deployment typically serves several variants of the same model at once —
+//! the dense baseline, the MPD block-diagonal build, maybe a CSR-pruned
+//! comparator — and routes each request by variant name (weighted A/B routing
+//! is supported for traffic splitting). This mirrors the role of the router
+//! in vLLM-style serving stacks, scaled to this repo's needs.
+
+use crate::mask::prng::Xoshiro256pp;
+use crate::server::batcher::{BatcherHandle, ServeError};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Router over named variants.
+pub struct Router {
+    variants: HashMap<String, BatcherHandle>,
+    /// Optional weighted split used by [`Router::infer_weighted`].
+    weights: Vec<(String, f64)>,
+    rng: Mutex<Xoshiro256pp>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self { variants: HashMap::new(), weights: Vec::new(), rng: Mutex::new(Xoshiro256pp::seed_from_u64(0)) }
+    }
+
+    pub fn register(&mut self, name: &str, handle: BatcherHandle) {
+        self.variants.insert(name.to_string(), handle);
+    }
+
+    /// Configure a weighted traffic split (weights need not sum to 1).
+    pub fn set_split(&mut self, split: &[(&str, f64)]) -> Result<(), String> {
+        for (name, w) in split {
+            if !self.variants.contains_key(*name) {
+                return Err(format!("unknown variant {name}"));
+            }
+            if *w < 0.0 {
+                return Err(format!("negative weight for {name}"));
+            }
+        }
+        self.weights = split.iter().map(|(n, w)| (n.to_string(), *w)).collect();
+        Ok(())
+    }
+
+    pub fn variant_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.variants.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn get(&self, name: &str) -> Option<&BatcherHandle> {
+        self.variants.get(name)
+    }
+
+    /// Route to an explicit variant.
+    pub fn infer(&self, variant: &str, input: Vec<f32>) -> Result<Vec<f32>, ServeError> {
+        match self.variants.get(variant) {
+            Some(h) => h.infer(input),
+            None => Err(ServeError::Backend(format!("unknown variant {variant}"))),
+        }
+    }
+
+    /// Route according to the configured weighted split.
+    pub fn infer_weighted(&self, input: Vec<f32>) -> Result<(String, Vec<f32>), ServeError> {
+        let total: f64 = self.weights.iter().map(|(_, w)| w).sum();
+        if total <= 0.0 {
+            return Err(ServeError::Backend("no traffic split configured".into()));
+        }
+        let mut pick = self.rng.lock().unwrap().next_f64() * total;
+        for (name, w) in &self.weights {
+            pick -= w;
+            if pick <= 0.0 {
+                return self.infer(name, input).map(|y| (name.clone(), y));
+            }
+        }
+        let (name, _) = self.weights.last().unwrap();
+        self.infer(name, input).map(|y| (name.clone(), y))
+    }
+
+    /// Per-variant metric summaries.
+    pub fn stats(&self) -> Vec<(String, String)> {
+        let mut out: Vec<(String, String)> = self
+            .variants
+            .iter()
+            .map(|(n, h)| (n.clone(), h.metrics.summary()))
+            .collect();
+        out.sort();
+        out
+    }
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::batcher::{spawn, BatcherConfig, InferBackend};
+
+    struct Const {
+        dim: usize,
+        value: f32,
+    }
+
+    impl InferBackend for Const {
+        fn feature_dim(&self) -> usize {
+            self.dim
+        }
+
+        fn out_dim(&self) -> usize {
+            1
+        }
+
+        fn max_batch(&self) -> usize {
+            16
+        }
+
+        fn infer(&mut self, _x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+            Ok(vec![self.value; batch])
+        }
+    }
+
+    fn router() -> (Router, Vec<std::thread::JoinHandle<()>>) {
+        let mut r = Router::new();
+        let mut joins = Vec::new();
+        for (name, v) in [("dense", 1.0f32), ("mpd", 2.0)] {
+            let (h, j) = spawn(Const { dim: 2, value: v }, BatcherConfig::default());
+            r.register(name, h);
+            joins.push(j);
+        }
+        (r, joins)
+    }
+
+    #[test]
+    fn routes_by_name() {
+        let (r, _j) = router();
+        assert_eq!(r.infer("dense", vec![0.0, 0.0]).unwrap(), vec![1.0]);
+        assert_eq!(r.infer("mpd", vec![0.0, 0.0]).unwrap(), vec![2.0]);
+        assert!(matches!(r.infer("nope", vec![0.0, 0.0]), Err(ServeError::Backend(_))));
+        assert_eq!(r.variant_names(), vec!["dense", "mpd"]);
+    }
+
+    #[test]
+    fn weighted_split_hits_both() {
+        let (mut r, _j) = router();
+        r.set_split(&[("dense", 0.5), ("mpd", 0.5)]).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..64 {
+            let (name, _) = r.infer_weighted(vec![0.0, 0.0]).unwrap();
+            seen.insert(name);
+        }
+        assert_eq!(seen.len(), 2, "both variants should receive traffic");
+    }
+
+    #[test]
+    fn split_validation() {
+        let (mut r, _j) = router();
+        assert!(r.set_split(&[("nope", 1.0)]).is_err());
+        assert!(r.set_split(&[("dense", -1.0)]).is_err());
+        assert!(r.infer_weighted(vec![0.0, 0.0]).is_err()); // no split yet
+    }
+
+    #[test]
+    fn stats_cover_all_variants() {
+        let (r, _j) = router();
+        r.infer("dense", vec![0.0, 0.0]).unwrap();
+        let stats = r.stats();
+        assert_eq!(stats.len(), 2);
+        assert!(stats[0].1.contains("requests="));
+    }
+}

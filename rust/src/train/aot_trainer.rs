@@ -1,0 +1,361 @@
+//! The AOT training orchestrator: drives a `*_train_step_b{N}` artifact from
+//! rust, holding parameters host-side between steps.
+//!
+//! Artifact calling convention (fixed by `python/compile/aot.py`):
+//!   inputs  = [params…, masks…, x, y, lr]
+//!   outputs = [params…, loss]
+//! so `n_params = outputs - 1` and `n_masks = inputs - n_params - 3`. The
+//! trainer validates this arithmetic against the metadata, initializes
+//! parameters (He for ≥2-D tensors, zeros for 1-D biases), feeds mini-batches
+//! from a [`Dataset`], applies the masks by passing them as inputs (the
+//! executable multiplies them in — Algorithm 1), and logs the loss curve.
+
+use crate::data::dataset::{BatchIter, Dataset};
+use crate::mask::prng::Xoshiro256pp;
+use crate::nn::checkpoint::{self, NamedTensor};
+use crate::runtime::engine::{Engine, LoadedExec, Value};
+use crate::runtime::manifest::DType;
+use crate::util::json::{append_jsonl, Json};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    /// Multiply lr by this factor every `lr_decay_every` steps (paper §3.2
+    /// drops 10× every 30 epochs; exposed here per-step).
+    pub lr_decay: f32,
+    pub lr_decay_every: usize,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { steps: 300, lr: 1e-3, lr_decay: 1.0, lr_decay_every: usize::MAX, log_every: 25, seed: 0 }
+    }
+}
+
+/// One logged point of the loss curve.
+#[derive(Clone, Copy, Debug)]
+pub struct LossPoint {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+}
+
+pub struct AotTrainer {
+    exec: Arc<LoadedExec>,
+    pub params: Vec<Value>,
+    pub masks: Vec<Value>,
+    n_params: usize,
+    batch: usize,
+    feature_shape: Vec<usize>,
+    pub history: Vec<LossPoint>,
+}
+
+impl AotTrainer {
+    /// Create a trainer for the given train-step artifact. `masks` are dense
+    /// 0/1 matrices matching the artifact's mask inputs (empty slices allowed
+    /// for fully-dense training of the same graph: pass all-ones).
+    pub fn new(engine: &Engine, artifact: &str, masks: Vec<Vec<f32>>, seed: u64) -> anyhow::Result<Self> {
+        let exec = engine.load(artifact)?;
+        let meta = &exec.meta;
+        let n_params = meta.outputs.len() - 1;
+        anyhow::ensure!(
+            meta.inputs.len() >= n_params + 3,
+            "{artifact}: malformed train-step signature"
+        );
+        let n_masks = meta.inputs.len() - n_params - 3;
+        anyhow::ensure!(
+            masks.len() == n_masks,
+            "{artifact}: expected {n_masks} masks, got {}",
+            masks.len()
+        );
+        // x input is at index n_params + n_masks; its shape [B, ...features]
+        let x_spec = &meta.inputs[n_params + n_masks];
+        let batch = x_spec.shape[0];
+        let feature_shape = x_spec.shape[1..].to_vec();
+        // labels + lr sanity
+        anyhow::ensure!(meta.inputs[n_params + n_masks + 1].dtype == DType::I32, "labels must be i32");
+        anyhow::ensure!(meta.inputs[n_params + n_masks + 2].shape.is_empty(), "lr must be a scalar");
+
+        // init params
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut params = Vec::with_capacity(n_params);
+        for spec in &meta.inputs[..n_params] {
+            let data = if spec.shape.len() >= 2 {
+                let fan_in: usize = spec.shape[1..].iter().product();
+                let std = (2.0 / fan_in as f64).sqrt();
+                (0..spec.numel()).map(|_| (rng.next_normal() * std) as f32).collect()
+            } else {
+                vec![0.0f32; spec.numel()]
+            };
+            params.push(Value::F32(data, spec.shape.clone()));
+        }
+        // masks → Values, validated against the artifact, and pre-applied to
+        // the initial weights (Algorithm 1 applies the mask from step 0).
+        let mask_values: Vec<Value> = masks
+            .into_iter()
+            .zip(&meta.inputs[n_params..n_params + n_masks])
+            .map(|(m, spec)| {
+                assert_eq!(m.len(), spec.numel(), "mask size mismatch for {:?}", spec.shape);
+                Value::F32(m, spec.shape.clone())
+            })
+            .collect();
+        // pre-mask matching weight params by shape order: mask i applies to
+        // the i-th *weight* param with identical shape.
+        let mut mi = 0;
+        for p in params.iter_mut() {
+            if mi >= mask_values.len() {
+                break;
+            }
+            if p.shape() == mask_values[mi].shape() {
+                if let (Value::F32(w, _), Value::F32(m, _)) = (&mut *p, &mask_values[mi]) {
+                    for (wv, mv) in w.iter_mut().zip(m) {
+                        *wv *= mv;
+                    }
+                }
+                mi += 1;
+            }
+        }
+        anyhow::ensure!(mi == mask_values.len(), "could not align all masks to weight params");
+
+        Ok(Self { exec, params, masks: mask_values, n_params, batch, feature_shape, history: Vec::new() })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.feature_shape.iter().product()
+    }
+
+    /// One SGD step on a prepared batch (x must be `batch × feature_dim`).
+    pub fn step(&mut self, x: &[f32], y: &[u32], lr: f32) -> anyhow::Result<f32> {
+        anyhow::ensure!(y.len() == self.batch, "batch must be exactly {}", self.batch);
+        anyhow::ensure!(x.len() == self.batch * self.feature_dim());
+        let mut x_shape = vec![self.batch];
+        x_shape.extend_from_slice(&self.feature_shape);
+        let mut args = Vec::with_capacity(self.exec.meta.inputs.len());
+        args.extend(self.params.iter().cloned());
+        args.extend(self.masks.iter().cloned());
+        args.push(Value::F32(x.to_vec(), x_shape));
+        args.push(Value::I32(y.iter().map(|&v| v as i32).collect(), vec![self.batch]));
+        args.push(Value::scalar_f32(lr));
+        let mut out = self.exec.run(&args)?;
+        let loss = out.pop().expect("loss output").into_f32()[0];
+        self.params = out;
+        Ok(loss)
+    }
+
+    /// Run a full training loop over `data`, logging to `log_path` (JSONL)
+    /// when given. Returns the loss history.
+    pub fn fit(
+        &mut self,
+        data: &Dataset,
+        cfg: &TrainConfig,
+        log_path: Option<&Path>,
+    ) -> anyhow::Result<Vec<LossPoint>> {
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xFEED);
+        let mut lr = cfg.lr;
+        let mut step = 0usize;
+        'outer: loop {
+            for (x, y) in BatchIter::new(data, self.batch, &mut rng) {
+                if y.len() < self.batch {
+                    continue; // drop ragged tail — the artifact batch is static
+                }
+                if step > 0 && step % cfg.lr_decay_every == 0 {
+                    lr *= cfg.lr_decay;
+                }
+                let loss = self.step(&x, &y, lr)?;
+                if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+                    let pt = LossPoint { step, loss, lr };
+                    self.history.push(pt);
+                    if let Some(p) = log_path {
+                        let _ = append_jsonl(
+                            p,
+                            &Json::obj(vec![
+                                ("step", Json::num(step as f64)),
+                                ("loss", Json::num(loss as f64)),
+                                ("lr", Json::num(lr as f64)),
+                            ]),
+                        );
+                    }
+                }
+                step += 1;
+                if step >= cfg.steps {
+                    break 'outer;
+                }
+            }
+        }
+        Ok(self.history.clone())
+    }
+
+    /// Save current parameters as an MPDC checkpoint.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let tensors: Vec<NamedTensor> = self
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| NamedTensor {
+                name: format!("param{i}"),
+                shape: p.shape().to_vec(),
+                data: p.as_f32().to_vec(),
+            })
+            .collect();
+        checkpoint::save(path, &tensors)?;
+        Ok(())
+    }
+
+    /// Restore parameters from a checkpoint (shapes must match).
+    pub fn restore(&mut self, path: &Path) -> anyhow::Result<()> {
+        let tensors = checkpoint::load(path)?;
+        anyhow::ensure!(tensors.len() == self.n_params, "checkpoint has {} params, expected {}", tensors.len(), self.n_params);
+        for (i, t) in tensors.into_iter().enumerate() {
+            anyhow::ensure!(t.shape == self.params[i].shape(), "param{i} shape mismatch");
+            self.params[i] = Value::F32(t.data, t.shape);
+        }
+        Ok(())
+    }
+
+    /// Borrow a parameter tensor's data.
+    pub fn param(&self, i: usize) -> &[f32] {
+        self.params[i].as_f32()
+    }
+}
+
+/// Batched evaluation through an `*_infer_b{N}` artifact: chunks `data` into
+/// the artifact's static batch (padding the tail), returns (top-1, top-k).
+pub fn evaluate_aot(
+    engine: &Engine,
+    infer_artifact: &str,
+    params: &[Value],
+    masks_for_infer: &[Value],
+    data: &Dataset,
+    topk: usize,
+) -> anyhow::Result<(f64, f64)> {
+    let exec = engine.load(infer_artifact)?;
+    let x_spec = exec.meta.inputs.last().expect("infer takes x last");
+    let batch = x_spec.shape[0];
+    let feat: usize = x_spec.shape[1..].iter().product();
+    anyhow::ensure!(feat == data.feature_dim, "feature dim mismatch: artifact {feat}, data {}", data.feature_dim);
+    let classes = data.classes;
+    let mut correct1 = 0usize;
+    let mut correctk = 0usize;
+    let mut i = 0usize;
+    while i < data.len() {
+        let n = (data.len() - i).min(batch);
+        let mut x = vec![0.0f32; batch * feat];
+        x[..n * feat].copy_from_slice(&data.x[i * feat..(i + n) * feat]);
+        let mut x_shape = vec![batch];
+        x_shape.extend_from_slice(&x_spec.shape[1..]);
+        let mut args: Vec<Value> = params.to_vec();
+        args.extend(masks_for_infer.iter().cloned());
+        args.push(Value::F32(x, x_shape));
+        let out = exec.run(&args)?;
+        let logits = out[0].as_f32();
+        for j in 0..n {
+            let row = &logits[j * classes..(j + 1) * classes];
+            let label = data.y[i + j] as usize;
+            let ylogit = row[label];
+            let rank = row.iter().filter(|&&v| v > ylogit).count();
+            if rank == 0 {
+                correct1 += 1;
+            }
+            if rank < topk {
+                correctk += 1;
+            }
+        }
+        i += n;
+    }
+    Ok((correct1 as f64 / data.len() as f64, correctk as f64 / data.len() as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::plan::SparsityPlan;
+    use crate::data::synth::{SynthImages, SynthSpec};
+    use crate::runtime::manifest::{default_artifact_dir, Manifest};
+
+    fn engine() -> Option<Engine> {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::cpu(Manifest::load(&dir).unwrap()).unwrap())
+    }
+
+    fn lenet_masks(seed: u64) -> Vec<Vec<f32>> {
+        SparsityPlan::lenet300(10)
+            .generate_masks(seed)
+            .into_iter()
+            .flatten()
+            .map(|m| m.to_dense())
+            .collect()
+    }
+
+    #[test]
+    fn trainer_reduces_loss_on_synth_mnist() {
+        let Some(eng) = engine() else { return };
+        let spec = SynthSpec::mnist_like();
+        let mut data = Dataset::from_synth(&SynthImages::generate(spec, 400, 3, 0));
+        data.normalize();
+        let mut tr = AotTrainer::new(&eng, "lenet_train_step_b50", lenet_masks(1), 7).unwrap();
+        assert_eq!(tr.batch_size(), 50);
+        let cfg = TrainConfig { steps: 60, lr: 0.05, log_every: 10, ..Default::default() };
+        let hist = tr.fit(&data, &cfg, None).unwrap();
+        assert!(hist.len() >= 4);
+        let first = hist.first().unwrap().loss;
+        let last = hist.last().unwrap().loss;
+        assert!(last < first * 0.8, "loss {first} → {last}");
+        // weights stayed confined to the mask
+        let m0 = tr.masks[0].as_f32();
+        let w0 = tr.param(0);
+        for (w, m) in w0.iter().zip(m0) {
+            if *m == 0.0 {
+                assert_eq!(*w, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn trainer_checkpoint_roundtrip() {
+        let Some(eng) = engine() else { return };
+        let mut tr = AotTrainer::new(&eng, "lenet_train_step_b50", lenet_masks(2), 9).unwrap();
+        let dir = std::env::temp_dir().join(format!("mpdc_tr_{}", std::process::id()));
+        let path = dir.join("ck.mpdc");
+        tr.save(&path).unwrap();
+        let orig = tr.param(0).to_vec();
+        // perturb then restore
+        if let Value::F32(w, _) = &mut tr.params[0] {
+            w.iter_mut().for_each(|v| *v += 1.0);
+        }
+        tr.restore(&path).unwrap();
+        assert_eq!(tr.param(0), &orig[..]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trainer_rejects_wrong_mask_count() {
+        let Some(eng) = engine() else { return };
+        assert!(AotTrainer::new(&eng, "lenet_train_step_b50", vec![], 0).is_err());
+    }
+
+    #[test]
+    fn evaluate_handles_ragged_tail() {
+        let Some(eng) = engine() else { return };
+        let spec = SynthSpec::mnist_like();
+        let mut data = Dataset::from_synth(&SynthImages::generate(spec, 37, 5, 1));
+        data.normalize();
+        let tr = AotTrainer::new(&eng, "lenet_train_step_b50", lenet_masks(3), 11).unwrap();
+        let (top1, top5) = evaluate_aot(&eng, "lenet_infer_b32", &tr.params, &[], &data, 5).unwrap();
+        assert!((0.0..=1.0).contains(&top1));
+        assert!(top5 >= top1);
+    }
+}

@@ -1,0 +1,6 @@
+//! Training orchestration: the AOT (PJRT) trainer and the native fallback.
+pub mod aot_trainer;
+pub mod native_trainer;
+
+pub use aot_trainer::{evaluate_aot, AotTrainer, LossPoint, TrainConfig};
+pub use native_trainer::{evaluate_native, fit_native};

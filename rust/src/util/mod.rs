@@ -1,0 +1,9 @@
+//! Shared utilities: bench harness, mini property testing, JSON-lite, PGM
+//! figures, CRC32.
+pub mod benchkit;
+pub mod crc32;
+pub mod json;
+pub mod pgm;
+pub mod prop;
+
+pub use json::Json;

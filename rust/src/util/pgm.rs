@@ -1,0 +1,91 @@
+//! PGM (portable graymap) writer — used to regenerate the paper's mask
+//! figures (Fig. 1(e,f): block-diagonal matrix B₁ and permuted mask M₁;
+//! Fig. 4(b): sum of 100 masks). PGM is chosen because it needs no codec:
+//! any image viewer opens it and the bytes are trivially testable.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write a `rows × cols` f32 matrix as an 8-bit PGM, linearly mapping
+/// `[min, max]` of the data to `[0, 255]` (constant matrices map to 0).
+pub fn write_pgm(path: &Path, data: &[f32], rows: usize, cols: usize) -> std::io::Result<()> {
+    assert_eq!(data.len(), rows * cols);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let lo = data.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let scale = if hi > lo { 255.0 / (hi - lo) } else { 0.0 };
+    let mut buf = Vec::with_capacity(rows * cols + 32);
+    write!(buf, "P5\n{cols} {rows}\n255\n")?;
+    for &v in data {
+        buf.push(((v - lo) * scale).round().clamp(0.0, 255.0) as u8);
+    }
+    std::fs::write(path, buf)
+}
+
+/// Parse the header + pixels of an 8-bit binary PGM (test helper / loader).
+pub fn read_pgm(path: &Path) -> std::io::Result<(Vec<u8>, usize, usize)> {
+    let bytes = std::fs::read(path)?;
+    let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+    // header: P5 <ws> cols <ws> rows <ws> maxval <single ws> pixels
+    let mut fields = Vec::new();
+    let mut pos = 0usize;
+    while fields.len() < 4 && pos < bytes.len() {
+        while pos < bytes.len() && bytes[pos].is_ascii_whitespace() {
+            pos += 1;
+        }
+        if pos < bytes.len() && bytes[pos] == b'#' {
+            while pos < bytes.len() && bytes[pos] != b'\n' {
+                pos += 1;
+            }
+            continue;
+        }
+        let start = pos;
+        while pos < bytes.len() && !bytes[pos].is_ascii_whitespace() {
+            pos += 1;
+        }
+        fields.push(std::str::from_utf8(&bytes[start..pos]).map_err(|_| err("bad header"))?.to_string());
+    }
+    if fields.len() < 4 || fields[0] != "P5" {
+        return Err(err("not a binary PGM"));
+    }
+    let cols: usize = fields[1].parse().map_err(|_| err("bad cols"))?;
+    let rows: usize = fields[2].parse().map_err(|_| err("bad rows"))?;
+    pos += 1; // the single whitespace after maxval
+    let pixels = bytes[pos..].to_vec();
+    if pixels.len() != rows * cols {
+        return Err(err("pixel count mismatch"));
+    }
+    Ok((pixels, rows, cols))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("mpdc_pgm_test");
+        let path = dir.join("t.pgm");
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        write_pgm(&path, &data, 3, 4).unwrap();
+        let (px, rows, cols) = read_pgm(&path).unwrap();
+        assert_eq!((rows, cols), (3, 4));
+        assert_eq!(px[0], 0);
+        assert_eq!(px[11], 255);
+        // monotone ramp
+        assert!(px.windows(2).all(|w| w[0] <= w[1]));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn constant_matrix_is_black() {
+        let dir = std::env::temp_dir().join("mpdc_pgm_test2");
+        let path = dir.join("c.pgm");
+        write_pgm(&path, &[5.0; 6], 2, 3).unwrap();
+        let (px, _, _) = read_pgm(&path).unwrap();
+        assert!(px.iter().all(|&p| p == 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,99 @@
+//! A miniature property-testing harness (no external crates available in the
+//! offline build, so we provide the 10% of proptest we need: seeded random
+//! case generation, a fixed case budget, and failure reporting that prints
+//! the case seed so a failure is reproducible with `PROP_SEED=<n>`).
+
+use crate::mask::prng::Xoshiro256pp;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop(case_rng, case_index)` for `default_cases()` seeded cases.
+/// Panics (with the failing case seed) if the property panics.
+pub fn for_all(name: &str, mut prop: impl FnMut(&mut Xoshiro256pp, usize)) {
+    let cases = default_cases();
+    let seed = base_seed();
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Xoshiro256pp::seed_from_u64(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property `{name}` failed at case {case}/{cases} \
+                 (reproduce with PROP_SEED={seed} — case seed {case_seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Uniform usize in `[lo, hi]` inclusive.
+pub fn gen_range(rng: &mut Xoshiro256pp, lo: usize, hi: usize) -> usize {
+    assert!(hi >= lo);
+    lo + rng.next_below((hi - lo + 1) as u64) as usize
+}
+
+/// Random f32 vector in `[-1, 1)`.
+pub fn gen_vec(rng: &mut Xoshiro256pp, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+}
+
+/// Random sparse f32 vector with the given density.
+pub fn gen_sparse_vec(rng: &mut Xoshiro256pp, n: usize, density: f64) -> Vec<f32> {
+    (0..n)
+        .map(|_| if rng.next_f64() < density { rng.next_f32() * 2.0 - 1.0 } else { 0.0 })
+        .collect()
+}
+
+/// Assert element-wise closeness with a mixed absolute/relative tolerance.
+pub fn assert_allclose(a: &[f32], b: &[f32], tol: f32, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0 + x.abs().max(y.abs());
+        assert!((x - y).abs() <= tol * scale, "{ctx}: idx {i}: {x} vs {y} (tol {tol})");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_runs_all_cases() {
+        let mut count = 0;
+        for_all("counter", |_, _| count += 1);
+        assert_eq!(count, default_cases());
+    }
+
+    #[test]
+    #[should_panic]
+    fn for_all_propagates_failure() {
+        for_all("fails", |rng, _| {
+            assert!(rng.next_f64() < 2.0); // always true
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for _ in 0..1000 {
+            let v = gen_range(&mut rng, 3, 9);
+            assert!((3..=9).contains(&v));
+        }
+        assert_eq!(gen_range(&mut rng, 5, 5), 5);
+    }
+
+    #[test]
+    fn allclose_tolerates_scale() {
+        assert_allclose(&[1000.0], &[1000.05], 1e-4, "scaled");
+    }
+}

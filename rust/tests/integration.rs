@@ -1,0 +1,190 @@
+//! Cross-module integration tests: the full three-layer contract.
+//!
+//! These tests exercise runtime + trainer + compressor + server together,
+//! including executing the AOT artifacts (they skip gracefully when
+//! `make artifacts` has not been run, so plain `cargo test` stays green).
+
+use mpdc::compress::compressor::MpdCompressor;
+use mpdc::compress::packed_model::PackedMlp;
+use mpdc::compress::plan::SparsityPlan;
+use mpdc::compress::tilespace as ts;
+use mpdc::config::ModelKind;
+use mpdc::data::dataset::Dataset;
+use mpdc::data::synth::{SynthImages, SynthSpec};
+use mpdc::experiments::common;
+use mpdc::mask::prng::Xoshiro256pp;
+use mpdc::nn::mlp::Mlp;
+use mpdc::runtime::engine::{Engine, Value};
+use mpdc::server::batcher::{spawn, BatcherConfig, PackedBackend};
+use mpdc::train::aot_trainer::{evaluate_aot, AotTrainer, TrainConfig};
+use mpdc::train::native_trainer::{evaluate_native, fit_native};
+
+fn engine() -> Option<Engine> {
+    common::try_engine()
+}
+
+/// AOT training improves accuracy, confinement holds, and the packed AOT
+/// executable agrees with the dense AOT executable on the trained weights —
+/// the full Fig. 2 → Fig. 3 pipeline through PJRT.
+#[test]
+fn aot_train_pack_serve_pipeline() {
+    let Some(eng) = engine() else { return };
+    let model = ModelKind::Lenet300;
+    let (train, test) = common::make_datasets(model, 1200, 300, 7);
+    let (masks, mask_inputs) = common::dense_mask_inputs(model, 10, 7, false);
+    let cfg = TrainConfig { steps: 150, lr: 0.1, log_every: 50, seed: 7, ..Default::default() };
+    let mut tr = AotTrainer::new(&eng, model.train_artifact(), mask_inputs, 7).unwrap();
+    tr.fit(&train, &cfg, None).unwrap();
+    let (top1, _) = evaluate_aot(&eng, "lenet_infer_b32", &tr.params, &[], &test, 5).unwrap();
+    assert!(top1 > 0.7, "masked AOT training reached only {top1}");
+
+    // packed inference path equals dense inference on the trained weights
+    let (m1, m2) = (&masks[0], &masks[1]);
+    let (ob1, ib1) = ts::tile_dims(m1);
+    let (ob2, ib2) = ts::tile_dims(m2);
+    let batch = 32;
+    let (x, _) = test.gather(&(0..batch).collect::<Vec<_>>());
+    let dense_out = {
+        let mut args: Vec<Value> = tr.params.clone();
+        args.push(Value::F32(x.clone(), vec![batch, 784]));
+        eng.run("lenet_infer_b32", &args).unwrap()[0].clone().into_f32()
+    };
+    let packed_out = {
+        let xt = ts::gather_rows(&x, batch, 784, &ts::input_tile_gather(m1));
+        let g12: Vec<i32> = ts::interlayer_gather(m1, m2).iter().map(|&v| v as i32).collect();
+        let g2o: Vec<i32> = ts::output_tile_positions(m2).iter().map(|&v| v as i32).collect();
+        let args = vec![
+            Value::F32(xt, vec![batch, 10 * ib1]),
+            Value::F32(ts::packed_blocks(m1, tr.param(0)), vec![10, ob1, ib1]),
+            Value::F32(ts::bias_tiles(m1, tr.param(1)), vec![10 * ob1]),
+            Value::I32(g12, vec![10 * ib2]),
+            Value::F32(ts::packed_blocks(m2, tr.param(2)), vec![10, ob2, ib2]),
+            Value::F32(ts::bias_tiles(m2, tr.param(3)), vec![10 * ob2]),
+            Value::I32(g2o, vec![100]),
+            Value::F32(tr.param(4).to_vec(), vec![10, 100]),
+            Value::F32(tr.param(5).to_vec(), vec![10]),
+        ];
+        eng.run("lenet_infer_packed_k10_b32", &args).unwrap()[0].clone().into_f32()
+    };
+    let max_err = dense_out.iter().zip(&packed_out).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "AOT packed vs dense diverged by {max_err}");
+}
+
+/// Native trainer and AOT trainer agree on the learning problem: both reach
+/// high accuracy on the same synthetic data with the same masks.
+#[test]
+fn native_and_aot_trainers_agree() {
+    let Some(eng) = engine() else { return };
+    let (train, test) = common::make_datasets(ModelKind::Lenet300, 1200, 300, 9);
+    let comp = MpdCompressor::new(SparsityPlan::lenet300(10), 9);
+
+    // native
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let mut mlp = Mlp::new(&[784, 300, 100, 10], &mut rng).with_masks(comp.masks.clone());
+    let cfg = TrainConfig { steps: 150, lr: 0.1, log_every: 50, seed: 9, ..Default::default() };
+    fit_native(&mut mlp, &train, 50, &cfg);
+    let acc_native = evaluate_native(&mut mlp, &test, 100);
+
+    // aot (same masks)
+    let mask_inputs: Vec<Vec<f32>> = comp.masks.iter().flatten().map(|m| m.to_dense()).collect();
+    let mut tr = AotTrainer::new(&eng, "lenet_train_step_b50", mask_inputs, 9).unwrap();
+    tr.fit(&train, &cfg, None).unwrap();
+    let (acc_aot, _) = evaluate_aot(&eng, "lenet_infer_b32", &tr.params, &[], &test, 5).unwrap();
+
+    assert!(acc_native > 0.7, "native {acc_native}");
+    assert!(acc_aot > 0.7, "aot {acc_aot}");
+    assert!((acc_native - acc_aot).abs() < 0.2, "trainers disagree: native {acc_native} vs aot {acc_aot}");
+}
+
+/// Conv-model AOT training works for every model in the zoo.
+#[test]
+fn conv_models_train_via_aot() {
+    let Some(eng) = engine() else { return };
+    for model in [ModelKind::DeepMnist, ModelKind::Cifar10, ModelKind::TinyAlexnet] {
+        let (train, test) = common::make_datasets(model, 400, 100, 3);
+        let k = 8;
+        let (_, mask_inputs) = common::dense_mask_inputs(model, k, 3, false);
+        let cfg = TrainConfig { steps: 60, lr: 0.05, log_every: 20, seed: 3, ..Default::default() };
+        let mut tr = AotTrainer::new(&eng, model.train_artifact(), mask_inputs, 3)
+            .unwrap_or_else(|e| panic!("{}: {e}", model.name()));
+        let hist = tr.fit(&train, &cfg, None).unwrap();
+        assert!(
+            hist.last().unwrap().loss < hist.first().unwrap().loss,
+            "{}: loss did not decrease",
+            model.name()
+        );
+        let infer_masks = common::infer_mask_values(model, &tr);
+        let (top1, top5) = evaluate_aot(&eng, model.infer_artifact(), &tr.params, &infer_masks, &test, 5).unwrap();
+        assert!(top5 >= top1, "{}", model.name());
+        assert!(top1 > 0.15, "{}: top1 {top1} at chance level", model.name());
+    }
+}
+
+/// Serving a trained packed model through the batcher returns the same
+/// predictions as direct forward, under concurrency.
+#[test]
+fn batched_serving_is_consistent() {
+    let spec = SynthSpec::mnist_like();
+    let mut train = Dataset::from_synth(&SynthImages::generate(spec, 600, 21, 0));
+    let (mean, std) = train.normalize();
+    let mut test = Dataset::from_synth(&SynthImages::generate(spec, 64, 21, 1));
+    test.normalize_with(mean, std);
+
+    let comp = MpdCompressor::new(SparsityPlan::lenet300(10), 21);
+    let mut rng = Xoshiro256pp::seed_from_u64(21);
+    let mut mlp = Mlp::new(&[784, 300, 100, 10], &mut rng).with_masks(comp.masks.clone());
+    let cfg = TrainConfig { steps: 80, lr: 0.08, log_every: 40, seed: 21, ..Default::default() };
+    fit_native(&mut mlp, &train, 50, &cfg);
+    let weights: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.w.clone()).collect();
+    let biases: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.b.clone()).collect();
+    let packed = PackedMlp::build(&comp, &weights, &biases);
+
+    // reference predictions
+    let expect: Vec<Vec<f32>> = (0..test.len()).map(|i| packed.forward(test.sample(i).0, 1)).collect();
+
+    let packed2 = PackedMlp::build(&comp, &weights, &biases);
+    let (h, join) = spawn(
+        PackedBackend { model: packed2 },
+        BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(1), queue_depth: 128 },
+    );
+    std::thread::scope(|s| {
+        for c in 0..4usize {
+            let h = h.clone();
+            let test = &test;
+            let expect = &expect;
+            s.spawn(move || {
+                for i in (c..test.len()).step_by(4) {
+                    let y = h.infer(test.sample(i).0.to_vec()).unwrap();
+                    for (a, b) in y.iter().zip(&expect[i]) {
+                        assert!((a - b).abs() < 1e-4, "sample {i}: batched {a} vs direct {b}");
+                    }
+                }
+            });
+        }
+    });
+    assert!(h.metrics.mean_batch_size() >= 1.0);
+    drop(h);
+    join.join().unwrap();
+}
+
+/// Checkpoint round-trip through the AOT trainer preserves eval accuracy.
+#[test]
+fn checkpoint_preserves_accuracy() {
+    let Some(eng) = engine() else { return };
+    let (train, test) = common::make_datasets(ModelKind::Lenet300, 600, 150, 31);
+    let (_, mask_inputs) = common::dense_mask_inputs(ModelKind::Lenet300, 10, 31, false);
+    let cfg = TrainConfig { steps: 80, lr: 0.1, log_every: 40, seed: 31, ..Default::default() };
+    let mut tr = AotTrainer::new(&eng, "lenet_train_step_b50", mask_inputs.clone(), 31).unwrap();
+    tr.fit(&train, &cfg, None).unwrap();
+    let (acc_before, _) = evaluate_aot(&eng, "lenet_infer_b32", &tr.params, &[], &test, 5).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("mpdc_it_{}", std::process::id()));
+    let path = dir.join("lenet.mpdc");
+    tr.save(&path).unwrap();
+
+    let mut tr2 = AotTrainer::new(&eng, "lenet_train_step_b50", mask_inputs, 999).unwrap();
+    tr2.restore(&path).unwrap();
+    let (acc_after, _) = evaluate_aot(&eng, "lenet_infer_b32", &tr2.params, &[], &test, 5).unwrap();
+    assert_eq!(acc_before, acc_after);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,236 @@
+//! Property-based tests over the coordinator invariants (routing, batching,
+//! masks, packing) using the in-repo `util::prop` harness. Each property
+//! runs `PROP_CASES` (default 64) random cases; failures print the seed.
+
+use mpdc::compress::compressor::MpdCompressor;
+use mpdc::compress::packed_model::PackedMlp;
+use mpdc::compress::plan::{LayerPlan, SparsityPlan};
+use mpdc::linalg::blockdiag_mm::BlockDiagMatrix;
+use mpdc::linalg::csr::Csr;
+use mpdc::linalg::gemm::{gemm, gemm_naive};
+use mpdc::mask::blockdiag::off_block_mass;
+use mpdc::mask::decompose::{decompose, verify_decomposition};
+use mpdc::mask::mask::MpdMask;
+use mpdc::mask::perm::Permutation;
+use mpdc::nn::mlp::Mlp;
+use mpdc::util::prop::{assert_allclose, for_all, gen_range, gen_vec};
+
+#[test]
+fn prop_permutation_laws() {
+    for_all("permutation inverse/compose laws", |rng, _| {
+        let n = gen_range(rng, 1, 200);
+        let p = Permutation::random(n, rng);
+        let q = Permutation::random(n, rng);
+        assert!(p.compose(&p.inverse()).is_identity());
+        assert!(p.inverse().compose(&p).is_identity());
+        // (p∘q)⁻¹ == q⁻¹∘p⁻¹
+        assert_eq!(p.compose(&q).inverse(), q.inverse().compose(&p.inverse()));
+        // applying p then p⁻¹ restores any vector
+        let x = gen_vec(rng, n);
+        assert_eq!(p.inverse().apply_vec(&p.apply_vec(&x)), x);
+    });
+}
+
+#[test]
+fn prop_mask_unpermute_always_block_diagonal() {
+    for_all("eq.2 re-blocking exactness", |rng, _| {
+        let k = gen_range(rng, 1, 12);
+        let rows = gen_range(rng, k, 150);
+        let cols = gen_range(rng, k, 150);
+        let mask = MpdMask::generate(rows, cols, k, rng);
+        let w = gen_vec(rng, rows * cols);
+        let star = mask.unpermute(&mask.apply(&w));
+        assert_eq!(off_block_mass(&star, &mask.layout), 0.0);
+        // density bookkeeping: nnz of mask == layout nnz
+        let dense = mask.to_dense();
+        assert_eq!(dense.iter().filter(|&&v| v != 0.0).count(), mask.nnz());
+    });
+}
+
+#[test]
+fn prop_decompose_recovers_any_planted_mask() {
+    for_all("decompose recovers planted structure", |rng, _| {
+        let k = gen_range(rng, 1, 10);
+        let rows = gen_range(rng, k, 80);
+        let cols = gen_range(rng, k, 80);
+        let mask = MpdMask::generate(rows, cols, k, rng);
+        // strictly nonzero weights so the sparsity pattern IS the mask
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.next_f32() + 0.5).collect();
+        let masked = mask.apply(&w);
+        let d = decompose(&masked, rows, cols);
+        assert!(verify_decomposition(&masked, rows, cols, &d));
+        assert!(d.ncomponents >= k, "found {} components, planted {k}", d.ncomponents);
+    });
+}
+
+#[test]
+fn prop_blockdiag_gemm_equals_dense_on_expansion() {
+    for_all("blockdiag == dense·expanded", |rng, _| {
+        let k = gen_range(rng, 1, 8);
+        let rows = gen_range(rng, k, 64);
+        let cols = gen_range(rng, k, 64);
+        let batch = gen_range(rng, 1, 8);
+        let mask = MpdMask::generate(rows, cols, k, rng);
+        let wm = mask.apply(&gen_vec(rng, rows * cols));
+        let bd = BlockDiagMatrix::from_masked_weights(&mask, &wm);
+        let star = mask.unpermute(&wm);
+        let x = gen_vec(rng, batch * cols);
+        let mut y1 = vec![0.0f32; batch * rows];
+        bd.matmul_xt(&x, &mut y1, batch);
+        let mut y2 = vec![0.0f32; batch * rows];
+        mpdc::linalg::gemm::gemm_a_bt(&x, &star, &mut y2, batch, cols, rows);
+        assert_allclose(&y1, &y2, 1e-4, "blockdiag vs dense-star");
+    });
+}
+
+#[test]
+fn prop_csr_equals_dense() {
+    for_all("csr spmm == dense gemm", |rng, _| {
+        let rows = gen_range(rng, 1, 60);
+        let cols = gen_range(rng, 1, 60);
+        let n = gen_range(rng, 1, 10);
+        let density = rng.next_f64();
+        let d: Vec<f32> = (0..rows * cols)
+            .map(|_| if rng.next_f64() < density { rng.next_f32() - 0.5 } else { 0.0 })
+            .collect();
+        let csr = Csr::from_dense(&d, rows, cols);
+        assert_eq!(csr.to_dense(), d);
+        let b = gen_vec(rng, cols * n);
+        let mut c1 = vec![0.0f32; rows * n];
+        csr.spmm(&b, &mut c1, n);
+        let mut c2 = vec![0.0f32; rows * n];
+        gemm_naive(&d, &b, &mut c2, rows, cols, n);
+        assert_allclose(&c1, &c2, 1e-4, "csr vs dense");
+    });
+}
+
+#[test]
+fn prop_gemm_matches_naive() {
+    for_all("optimized gemm == naive", |rng, _| {
+        let m = gen_range(rng, 1, 40);
+        let k = gen_range(rng, 1, 40);
+        let n = gen_range(rng, 1, 40);
+        let a = gen_vec(rng, m * k);
+        let b = gen_vec(rng, k * n);
+        let mut c1 = gen_vec(rng, m * n);
+        let mut c2 = c1.clone();
+        gemm(&a, &b, &mut c1, m, k, n);
+        gemm_naive(&a, &b, &mut c2, m, k, n);
+        assert_allclose(&c1, &c2, 1e-4, "gemm");
+    });
+}
+
+#[test]
+fn prop_packed_model_equals_masked_dense() {
+    for_all("PackedMlp == masked dense forward", |rng, case| {
+        // random 2–4 layer plans with random masked/dense choices
+        let nlayers = gen_range(rng, 2, 4);
+        let mut dims = vec![gen_range(rng, 4, 40)];
+        for _ in 0..nlayers {
+            dims.push(gen_range(rng, 4, 40));
+        }
+        let layers: Vec<LayerPlan> = (0..nlayers)
+            .map(|i| {
+                let (od, id) = (dims[i + 1], dims[i]);
+                if rng.next_f64() < 0.7 {
+                    let k = gen_range(rng, 1, od.min(id));
+                    LayerPlan::masked(&format!("l{i}"), od, id, k)
+                } else {
+                    LayerPlan::dense(&format!("l{i}"), od, id)
+                }
+            })
+            .collect();
+        let plan = SparsityPlan::new(layers).unwrap();
+        let comp = MpdCompressor::new(plan, case as u64);
+        let mut mlp = Mlp::new(&dims, rng).with_masks(comp.masks.clone());
+        for l in mlp.layers.iter_mut() {
+            for b in l.b.iter_mut() {
+                *b = rng.next_f32() - 0.5;
+            }
+        }
+        let weights: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.w.clone()).collect();
+        let biases: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.b.clone()).collect();
+        let packed = PackedMlp::build(&comp, &weights, &biases);
+        let batch = gen_range(rng, 1, 5);
+        let x = gen_vec(rng, batch * dims[0]);
+        let yd = mlp.forward(&x, batch);
+        let yp = packed.forward(&x, batch);
+        assert_allclose(&yp, &yd, 1e-3, "packed vs dense");
+    });
+}
+
+#[test]
+fn prop_compression_report_conservation() {
+    for_all("report conservation", |rng, case| {
+        let od = gen_range(rng, 2, 100);
+        let id = gen_range(rng, 2, 100);
+        let k = gen_range(rng, 1, od.min(id));
+        let plan = SparsityPlan::new(vec![LayerPlan::masked("l", od, id, k)]).unwrap();
+        let comp = MpdCompressor::new(plan, case as u64);
+        let r = comp.report();
+        let l = &r.layers[0];
+        // kept = Σ block areas; compression consistent; packed ≤ csr ≤ dense bytes
+        assert_eq!(l.kept_params, comp.masks[0].as_ref().unwrap().nnz());
+        assert!((l.compression - l.dense_params as f64 / l.kept_params as f64).abs() < 1e-9);
+        // packed ≤ CSR whenever block metadata doesn't dominate:
+        // kept·4 + k·16 ≤ kept·8 + (od+1)·4 ⇔ 4k ≤ kept + od + 1
+        if 4 * comp.plan.layers[0].nblocks.unwrap() <= l.kept_params + od + 1 {
+            assert!(l.packed_bytes <= l.csr_bytes, "{l:?}");
+        }
+        assert!(l.csr_bytes >= l.kept_params * 8);
+    });
+}
+
+#[test]
+fn prop_batcher_serves_every_request_exactly_once() {
+    use mpdc::server::batcher::{spawn, BatcherConfig, InferBackend};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    struct Tag;
+    impl InferBackend for Tag {
+        fn feature_dim(&self) -> usize {
+            1
+        }
+        fn out_dim(&self) -> usize {
+            1
+        }
+        fn max_batch(&self) -> usize {
+            7
+        }
+        fn infer(&mut self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+            Ok(x.iter().map(|v| v + 1000.0).collect())
+        }
+    }
+
+    for_all("batcher exactly-once", |rng, _| {
+        let nreq = gen_range(rng, 1, 40);
+        let max_batch = gen_range(rng, 1, 9);
+        let (h, join) = spawn(
+            Tag,
+            BatcherConfig {
+                max_batch,
+                max_wait: std::time::Duration::from_micros(gen_range(rng, 0, 500) as u64),
+                queue_depth: 64,
+            },
+        );
+        let served = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for c in 0..4usize {
+                let h = h.clone();
+                let served = served.clone();
+                s.spawn(move || {
+                    for i in (c..nreq).step_by(4) {
+                        let y = h.infer(vec![i as f32]).unwrap();
+                        assert_eq!(y, vec![i as f32 + 1000.0], "response routed to wrong caller");
+                        served.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert_eq!(served.load(Ordering::SeqCst), nreq);
+        assert_eq!(h.metrics.batched_requests.load(Ordering::SeqCst) as usize, nreq);
+        drop(h);
+        join.join().unwrap();
+    });
+}
