@@ -12,7 +12,6 @@
 //! accounting.
 
 use mpdc::compress::compressor::MpdCompressor;
-use mpdc::compress::packed_model::PackedMlp;
 use mpdc::compress::plan::{LayerPlan, SparsityPlan};
 use mpdc::data::dataset::Dataset;
 use mpdc::data::synth::{SynthImages, SynthSpec};
@@ -55,10 +54,13 @@ fn main() -> anyhow::Result<()> {
     let acc = evaluate_native(&mut mlp, &test, 100);
     println!("  masked-dense test accuracy: {acc:.4}");
 
-    // 3. pack: eq. 2 inverse permutations → block-diagonal inference engine
+    // 3. pack: eq. 2 inverse permutations → block-diagonal inference engine,
+    // tuned by EngineConfig (persistent pool + register-tile shape)
     let weights: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.w.clone()).collect();
     let biases: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.b.clone()).collect();
-    let packed = PackedMlp::build(&comp, &weights, &biases);
+    let packed = comp
+        .build_engine(&weights, &biases, &mpdc::config::EngineConfig::default())
+        .map_err(|e| anyhow::anyhow!(e))?;
     println!(
         "  packed engine: {} MACs/sample (dense would be {}), {} internal gathers",
         packed.macs_per_sample,

@@ -8,8 +8,8 @@
 //! ```
 
 use mpdc::compress::compressor::MpdCompressor;
-use mpdc::compress::packed_model::PackedMlp;
 use mpdc::compress::plan::SparsityPlan;
+use mpdc::config::EngineConfig;
 use mpdc::data::dataset::Dataset;
 use mpdc::data::synth::{SynthImages, SynthSpec};
 use mpdc::linalg::csr::Csr;
@@ -90,10 +90,15 @@ fn main() -> anyhow::Result<()> {
     let cfg = TrainConfig { steps: 250, lr: 0.08, log_every: 50, ..Default::default() };
     fit_native(&mut mlp, &train, 50, &cfg);
 
-    // three representations of the same weights
+    // three representations of the same weights; the MPD variant runs on the
+    // tuned engine (persistent pool + register tiles) from EngineConfig —
+    // default: process-global pool, 4×8 tiles
     let weights: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.w.clone()).collect();
     let biases: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.b.clone()).collect();
-    let packed = PackedMlp::build(&comp, &weights, &biases);
+    let engine_cfg = EngineConfig::default();
+    let packed = comp
+        .build_engine(&weights, &biases, &engine_cfg)
+        .map_err(|e| anyhow::anyhow!(e))?;
     let csr_layers: Vec<(Csr, Vec<f32>)> = weights
         .iter()
         .zip(&biases)

@@ -78,17 +78,77 @@ fn main() {
     println!("{}", bench_quick("mask.unpermute", || { black_box(mask.unpermute(&wm)); }).human());
     println!("{}", bench_quick("mask.pack", || { black_box(mask.pack(&wm)); }).human());
 
-    println!("\n--- block-diagonal GEMM (masked lenet fc1, batch 32) ---");
+    println!("\n--- block-diagonal GEMM (masked lenet fc1): seed scalar vs tiled vs pooled ---");
     mask.apply_inplace(&mut wm);
     let bd = BlockDiagMatrix::from_masked_weights(&mask, &wm);
-    let mut yb = vec![0.0f32; 32 * 300];
-    let s = bench_quick("blockdiag 32x784x300 k=10", || {
-        yb.iter_mut().for_each(|v| *v = 0.0);
-        bd.matmul_xt(&x, &mut yb, 32);
-        black_box(&yb);
+    let bias: Vec<f32> = (0..300).map(|i| (i as f32 * 0.03).sin()).collect();
+    let pool = mpdc::linalg::pool::global();
+    println!(
+        "pool: {} lanes ({} persistent workers)",
+        pool.lanes(),
+        pool.worker_count()
+    );
+    for batch in [1usize, 16, 64] {
+        let xb: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32()).collect();
+        let mut yb = vec![0.0f32; batch * 300];
+        let flops = 2.0 * (bd.nnz() * batch) as f64;
+        let s_ref = bench_quick(&format!("blockdiag b{batch} scalar (seed)"), || {
+            yb.iter_mut().for_each(|v| *v = 0.0);
+            bd.matmul_xt_reference(&xb, &mut yb, batch);
+            black_box(&yb);
+        });
+        let s_tiled = bench_quick(&format!("blockdiag b{batch} tiled"), || {
+            yb.iter_mut().for_each(|v| *v = 0.0);
+            bd.matmul_xt(&xb, &mut yb, batch);
+            black_box(&yb);
+        });
+        let s_fused = bench_quick(&format!("blockdiag b{batch} tiled+fused"), || {
+            bd.forward_fused(&xb, &mut yb, batch, &bias, true, None, mpdc::linalg::TileShape::DEFAULT);
+            black_box(&yb);
+        });
+        let s_pooled = bench_quick(&format!("blockdiag b{batch} tiled+fused+pool"), || {
+            bd.forward_fused(&xb, &mut yb, batch, &bias, true, Some(pool), mpdc::linalg::TileShape::DEFAULT);
+            black_box(&yb);
+        });
+        println!(
+            "b{batch:>3}: scalar {:>8.2}µs ({:>5.2} GF/s) | tiled {:>8.2}µs ({:>5.2} GF/s, {:.2}×) | +fuse {:>8.2}µs | +pool {:>8.2}µs ({:.2}× vs seed)",
+            s_ref.median_us(),
+            flops / s_ref.median_ns,
+            s_tiled.median_us(),
+            flops / s_tiled.median_ns,
+            s_ref.median_ns / s_tiled.median_ns,
+            s_fused.median_us(),
+            s_pooled.median_us(),
+            s_ref.median_ns / s_pooled.median_ns,
+        );
+    }
+
+    println!("\n--- seed scoped-thread spawn vs persistent pool (8 blocks, trivial work) ---");
+    let spawn_overhead = bench_quick("scoped spawn 8 chunks", || {
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= 8 {
+                        break;
+                    }
+                    black_box(i);
+                });
+            }
+        });
     });
-    // useful FLOPs = 2·nnz·batch
-    println!("{} ({:.2} effective GFLOP/s)", s.human(), 2.0 * (bd.nnz() * 32) as f64 / s.median_ns);
+    let pool_overhead = bench_quick("pool dispatch 8 chunks", || {
+        pool.run_capped(8, 2, |i| {
+            black_box(i);
+        });
+    });
+    println!(
+        "scoped {:.2}µs vs pool {:.2}µs per dispatch ({:.1}× cheaper)",
+        spawn_overhead.median_us(),
+        pool_overhead.median_us(),
+        spawn_overhead.median_ns / pool_overhead.median_ns
+    );
 
     println!("\n--- batcher round-trip overhead (noop backend) ---");
     let (h, _j) = spawn(Noop, BatcherConfig { max_batch: 1, max_wait: std::time::Duration::ZERO, queue_depth: 16 });

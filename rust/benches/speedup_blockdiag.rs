@@ -9,22 +9,24 @@
 //! cargo bench --bench speedup_blockdiag
 //! ```
 
+use mpdc::config::EngineConfig;
 use mpdc::experiments::{common, speedup};
 use mpdc::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("MPDC_FULL").is_err();
+    let engine = EngineConfig::default();
     println!("=== §3.3 speedup: kernel-level sweep (batch=32{}) ===", if quick { ", quick" } else { "" });
     println!(
-        "{:<16} {:>6} {:>11} {:>11} {:>13} {:>9} {:>8}",
-        "layer", "blocks", "dense µs", "CSR µs", "blockdiag µs", "vs dense", "vs CSR"
+        "{:<16} {:>6} {:>11} {:>11} {:>13} {:>10} {:>9} {:>8} {:>7}",
+        "layer", "blocks", "dense µs", "CSR µs", "blockdiag µs", "tuned µs", "vs dense", "vs CSR", "tuned×"
     );
-    let rows = speedup::kernel_sweep(&[4, 8, 10, 16], 32, quick);
+    let rows = speedup::kernel_sweep(&[4, 8, 10, 16], 32, quick, &engine);
     for r in &rows {
         println!(
-            "{:<16} {:>6} {:>11.1} {:>11.1} {:>13.1} {:>8.2}× {:>7.2}×",
-            r.layer, r.nblocks, r.dense_us, r.csr_us, r.blockdiag_us,
-            r.speedup_vs_dense(), r.speedup_vs_csr()
+            "{:<16} {:>6} {:>11.1} {:>11.1} {:>13.1} {:>10.1} {:>8.2}× {:>7.2}× {:>6.2}×",
+            r.layer, r.nblocks, r.dense_us, r.csr_us, r.blockdiag_us, r.tuned_us,
+            r.speedup_vs_dense(), r.speedup_vs_csr(), r.tuned_speedup_vs_dense()
         );
         common::emit(
             "results/speedup.jsonl",
@@ -35,6 +37,7 @@ fn main() -> anyhow::Result<()> {
                 ("dense_us", Json::num(r.dense_us)),
                 ("csr_us", Json::num(r.csr_us)),
                 ("blockdiag_us", Json::num(r.blockdiag_us)),
+                ("tuned_us", Json::num(r.tuned_us)),
             ]),
         );
     }
@@ -51,10 +54,10 @@ fn main() -> anyhow::Result<()> {
     // batch-size sensitivity on the AlexNet FC7 shape
     println!("\n--- batch sensitivity (alexnet_fc7, 8 blocks) ---");
     for batch in [1usize, 8, 32, 128] {
-        let r = speedup::measure_point("alexnet_fc7", 4096, 4096, 8, batch, quick);
+        let r = speedup::measure_point("alexnet_fc7", 4096, 4096, 8, batch, quick, &engine);
         println!(
-            "batch {:>4}: dense {:>9.1}µs  blockdiag {:>9.1}µs  → {:>5.2}×",
-            batch, r.dense_us, r.blockdiag_us, r.speedup_vs_dense()
+            "batch {:>4}: dense {:>9.1}µs  blockdiag {:>9.1}µs  tuned {:>9.1}µs  → {:>5.2}× ({:>5.2}× tuned)",
+            batch, r.dense_us, r.blockdiag_us, r.tuned_us, r.speedup_vs_dense(), r.tuned_speedup_vs_dense()
         );
     }
 

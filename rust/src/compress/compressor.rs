@@ -138,6 +138,49 @@ impl MpdCompressor {
             .collect()
     }
 
+    /// Deterministic random masked weights + biases shaped for this plan —
+    /// the shared fixture for tests, benches, and the leak checker (a stand-in
+    /// for trained parameters when only shapes/structure matter).
+    pub fn random_masked_weights(&self, seed: u64) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let mut rng = crate::mask::prng::Xoshiro256pp::seed_from_u64(seed);
+        let weights = self
+            .plan
+            .layers
+            .iter()
+            .zip(&self.masks)
+            .map(|(l, m)| {
+                let w: Vec<f32> = (0..l.dense_params()).map(|_| rng.next_f32() - 0.5).collect();
+                match m {
+                    Some(m) => m.apply(&w),
+                    None => w,
+                }
+            })
+            .collect();
+        let biases = self
+            .plan
+            .layers
+            .iter()
+            .map(|l| (0..l.out_dim).map(|i| ((i as f32) * 0.17).sin()).collect())
+            .collect();
+        (weights, biases)
+    }
+
+    /// Compile the fused packed inference engine for trained weights/biases,
+    /// tuned by an [`crate::config::EngineConfig`] (persistent-pool sizing +
+    /// register-tile shape). One-stop shop for serving call sites; `Err` on
+    /// an invalid engine config.
+    pub fn build_engine(
+        &self,
+        weights: &[Vec<f32>],
+        biases: &[Vec<f32>],
+        cfg: &crate::config::EngineConfig,
+    ) -> Result<crate::compress::packed_model::PackedMlp, String> {
+        // Validate before paying for the full weight-packing build
+        // (with_engine_config re-runs the same cheap check afterwards).
+        cfg.validate()?;
+        crate::compress::packed_model::PackedMlp::build(self, weights, biases).with_engine_config(cfg)
+    }
+
     /// Build the CSR (irregular) representation of the same masked weights —
     /// the §3.3 competitor.
     pub fn to_csr(&self, weights: &[Vec<f32>]) -> Vec<Option<Csr>> {
@@ -230,6 +273,22 @@ mod tests {
             PackedLayer::Dense { w, .. } => assert_eq!(*w, w1),
             _ => panic!("expected dense"),
         }
+    }
+
+    #[test]
+    fn build_engine_matches_plain_build() {
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let c = MpdCompressor::new(SparsityPlan::lenet300(10), 9);
+        let (weights, biases) = c.random_masked_weights(9);
+        assert_eq!(weights.len(), 3);
+        assert_eq!(biases[0].len(), 300);
+        let plain = crate::compress::packed_model::PackedMlp::build(&c, &weights, &biases);
+        let tuned = c.build_engine(&weights, &biases, &crate::config::EngineConfig::default()).unwrap();
+        let x: Vec<f32> = (0..2 * 784).map(|_| rng.next_f32()).collect();
+        assert_eq!(plain.forward(&x, 2), tuned.forward(&x, 2));
+        // invalid configs are rejected, not panicked on
+        let bad = crate::config::EngineConfig { tile_batch: 3, ..Default::default() };
+        assert!(c.build_engine(&weights, &biases, &bad).is_err());
     }
 
     #[test]

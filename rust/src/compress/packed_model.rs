@@ -13,23 +13,48 @@
 //! single gather (dropping it when it is the identity), folds any residual
 //! permutation into the next dense layer's columns, and re-permutes biases
 //! once at build time. ReLU is element-wise, so it commutes with all of this.
+//!
+//! ## Execution engine
+//!
+//! Bias-add and ReLU are **fused into the block loop** of each packed layer
+//! ([`crate::linalg::BlockDiagMatrix::forward_fused`]): instead of
+//! bias-copy → GEMM-accumulate → separate activation sweep, every output
+//! element is written exactly once. The forward pass ping-pongs between two
+//! reusable buffers, so a layer-by-layer run allocates twice per call instead
+//! of once per stage. Block-level parallelism runs on a persistent
+//! [`ThreadPool`] — either the process-global one, a dedicated engine-owned
+//! pool ([`PackedMlp::with_threads`]), or a shared handle
+//! ([`PackedMlp::with_pool`]) so e.g. one serving worker reuses one pool
+//! across all batches.
 
 use crate::compress::compressor::MpdCompressor;
-use crate::linalg::blockdiag_mm::BlockDiagMatrix;
+use crate::config::EngineConfig;
+use crate::linalg::blockdiag_mm::{BlockDiagMatrix, TileShape};
 use crate::linalg::gemm::gemm_a_bt;
+use crate::linalg::pool::{self, ThreadPool};
 use crate::mask::perm::Permutation;
+use std::sync::Arc;
 
-/// One fused inference stage.
+/// One fused inference stage. ReLU never appears as its own stage: it is a
+/// flag on the FC stage it follows (the fusion contract, see DESIGN.md).
 enum Stage {
     /// Gather activation features: `out[j] = in[g.dest(j)]`… stored as the
     /// gather index list for the hot loop.
     Gather(Vec<u32>),
-    /// Packed block-diagonal FC (+ bias, already in block-row space).
-    BlockFc { bd: BlockDiagMatrix, bias: Vec<f32> },
+    /// Packed block-diagonal FC (+ bias in block-row space, + fused ReLU).
+    BlockFc { bd: BlockDiagMatrix, bias: Vec<f32>, relu: bool },
     /// Dense FC (+ bias), columns already folded with any pending permutation.
-    DenseFc { w: Vec<f32>, bias: Vec<f32>, out_dim: usize, in_dim: usize },
-    /// Element-wise ReLU.
-    Relu,
+    DenseFc { w: Vec<f32>, bias: Vec<f32>, out_dim: usize, in_dim: usize, relu: bool },
+}
+
+/// Which persistent pool a packed model executes on.
+enum PoolChoice {
+    /// Single-threaded.
+    None,
+    /// The process-global pool (`linalg::pool::global`).
+    Global,
+    /// An engine-owned (possibly shared) pool.
+    Owned(Arc<ThreadPool>),
 }
 
 /// A compiled packed model: a list of fused stages.
@@ -42,12 +67,14 @@ pub struct PackedMlp {
     pub n_gathers: usize,
     /// Multiply-accumulate count per sample (compression in compute).
     pub macs_per_sample: usize,
-    nthreads: usize,
+    pool: PoolChoice,
+    tile: TileShape,
 }
 
 impl PackedMlp {
     /// Build from a compressor (masks + plan) and trained per-layer weights
-    /// and biases. ReLU is inserted between layers, none after the last.
+    /// and biases. ReLU is inserted between layers (fused into the preceding
+    /// FC stage), none after the last.
     pub fn build(comp: &MpdCompressor, weights: &[Vec<f32>], biases: &[Vec<f32>]) -> Self {
         let n = comp.nlayers();
         assert_eq!(weights.len(), n);
@@ -61,6 +88,7 @@ impl PackedMlp {
 
         for i in 0..n {
             let lp = &comp.plan.layers[i];
+            let relu = i + 1 < n;
             assert_eq!(biases[i].len(), lp.out_dim, "{}: bias size", lp.name);
             match &comp.masks[i] {
                 Some(mask) => {
@@ -76,7 +104,7 @@ impl PackedMlp {
                     let bd = BlockDiagMatrix::from_masked_weights(mask, &weights[i]);
                     macs += bd.nnz();
                     let bias = mask.p_row.inverse().apply_vec(&biases[i]);
-                    stages.push(Stage::BlockFc { bd, bias });
+                    stages.push(Stage::BlockFc { bd, bias, relu });
                     space = Some(mask.p_row.clone());
                 }
                 None => {
@@ -91,12 +119,10 @@ impl PackedMlp {
                         bias: biases[i].clone(),
                         out_dim: lp.out_dim,
                         in_dim: lp.in_dim,
+                        relu,
                     });
                     space = None;
                 }
-            }
-            if i + 1 < n {
-                stages.push(Stage::Relu);
             }
         }
         // Restore logical order at the output if still permuted.
@@ -109,28 +135,86 @@ impl PackedMlp {
         }
         let in_dim = comp.plan.layers[0].in_dim;
         let out_dim = comp.plan.layers[n - 1].out_dim;
-        Self { stages, in_dim, out_dim, n_gathers, macs_per_sample: macs, nthreads: 1 }
+        Self {
+            stages,
+            in_dim,
+            out_dim,
+            n_gathers,
+            macs_per_sample: macs,
+            pool: PoolChoice::None,
+            tile: TileShape::DEFAULT,
+        }
     }
 
-    /// Enable parallel-over-blocks execution with `nthreads` workers.
+    /// Enable parallel-over-blocks execution on a dedicated persistent pool
+    /// of `nthreads` lanes (`<= 1` reverts to single-threaded).
     pub fn with_threads(mut self, nthreads: usize) -> Self {
-        self.nthreads = nthreads.max(1);
+        self.pool = if nthreads > 1 {
+            PoolChoice::Owned(Arc::new(ThreadPool::new(nthreads)))
+        } else {
+            PoolChoice::None
+        };
         self
+    }
+
+    /// Execute on a caller-provided (shareable) persistent pool — e.g. one
+    /// pool per serving worker, reused across every batch it handles.
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = PoolChoice::Owned(pool);
+        self
+    }
+
+    /// Execute on the process-global persistent pool.
+    pub fn with_global_pool(mut self) -> Self {
+        self.pool = PoolChoice::Global;
+        self
+    }
+
+    /// Override the register-tile shape. Panics on an unsupported shape —
+    /// use [`Self::with_engine_config`] for the fallible path.
+    pub fn with_tile(mut self, tile: TileShape) -> Self {
+        tile.validate().expect("valid tile shape");
+        self.tile = tile;
+        self
+    }
+
+    /// Apply an [`EngineConfig`]: pool sizing (0 = global pool) + tile
+    /// shape. Validates the config first, so programmatically-built configs
+    /// get an `Err` instead of a panic deep inside a serving process.
+    pub fn with_engine_config(mut self, cfg: &EngineConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        self.tile = cfg.tile();
+        Ok(match cfg.pool_threads {
+            0 => self.with_global_pool(),
+            n => self.with_threads(n),
+        })
+    }
+
+    fn pool(&self) -> Option<&ThreadPool> {
+        match &self.pool {
+            PoolChoice::None => None,
+            PoolChoice::Global => Some(pool::global()),
+            PoolChoice::Owned(p) => Some(p.as_ref()),
+        }
     }
 
     /// Forward a batch: `x` is `[batch × in_dim]`, returns `[batch × out_dim]`
     /// logits in logical (un-permuted) class order.
     pub fn forward(&self, x: &[f32], batch: usize) -> Vec<f32> {
         assert_eq!(x.len(), batch * self.in_dim);
+        let pool = self.pool();
         let mut act = x.to_vec();
         let mut dim = self.in_dim;
+        // Ping-pong scratch buffer reused across stages — no per-stage allocs.
         let mut scratch: Vec<f32> = Vec::new();
         for stage in &self.stages {
             match stage {
                 Stage::Gather(g) => {
                     // out[b][j] = act[b][g[j]]  (g stores source index per dest:
                     // built from a forward map where dest j pulls from map[j])
-                    scratch.clear();
+                    // resize without clear: every stage fully overwrites its
+                    // output, so stale prefix data is fine and we skip the
+                    // per-stage memset (same below)
                     scratch.resize(act.len(), 0.0);
                     for bi in 0..batch {
                         let src = &act[bi * dim..(bi + 1) * dim];
@@ -141,31 +225,26 @@ impl PackedMlp {
                     }
                     std::mem::swap(&mut act, &mut scratch);
                 }
-                Stage::BlockFc { bd, bias } => {
+                Stage::BlockFc { bd, bias, relu } => {
                     let out_dim = bd.layout.rows;
-                    let mut y = vec![0.0f32; batch * out_dim];
-                    for bi in 0..batch {
-                        y[bi * out_dim..(bi + 1) * out_dim].copy_from_slice(bias);
-                    }
-                    if self.nthreads > 1 {
-                        bd.matmul_xt_parallel(&act, &mut y, batch, self.nthreads);
-                    } else {
-                        bd.matmul_xt(&act, &mut y, batch);
-                    }
-                    act = y;
+                    scratch.resize(batch * out_dim, 0.0);
+                    // Fused bias + (optional) ReLU epilogue inside the block
+                    // loop; writes every output element exactly once.
+                    bd.forward_fused(&act, &mut scratch, batch, bias, *relu, pool, self.tile);
+                    std::mem::swap(&mut act, &mut scratch);
                     dim = out_dim;
                 }
-                Stage::DenseFc { w, bias, out_dim, in_dim } => {
-                    let mut y = vec![0.0f32; batch * out_dim];
+                Stage::DenseFc { w, bias, out_dim, in_dim, relu } => {
+                    scratch.resize(batch * out_dim, 0.0);
                     for bi in 0..batch {
-                        y[bi * out_dim..(bi + 1) * out_dim].copy_from_slice(bias);
+                        scratch[bi * out_dim..(bi + 1) * out_dim].copy_from_slice(bias);
                     }
-                    gemm_a_bt(&act, w, &mut y, batch, *in_dim, *out_dim);
-                    act = y;
+                    gemm_a_bt(&act, w, &mut scratch, batch, *in_dim, *out_dim);
+                    if *relu {
+                        scratch.iter_mut().for_each(|v| *v = v.max(0.0));
+                    }
+                    std::mem::swap(&mut act, &mut scratch);
                     dim = *out_dim;
-                }
-                Stage::Relu => {
-                    act.iter_mut().for_each(|v| *v = v.max(0.0));
                 }
             }
         }
@@ -179,9 +258,8 @@ impl PackedMlp {
             .iter()
             .map(|s| match s {
                 Stage::Gather(g) => g.len() * 4,
-                Stage::BlockFc { bd, bias } => bd.storage_bytes() + bias.len() * 4,
+                Stage::BlockFc { bd, bias, .. } => bd.storage_bytes() + bias.len() * 4,
                 Stage::DenseFc { w, bias, .. } => (w.len() + bias.len()) * 4,
-                Stage::Relu => 0,
             })
             .sum()
     }
@@ -278,8 +356,29 @@ mod tests {
         let (comp, _, weights, biases) = build_trained(&plan, 19);
         let p1 = PackedMlp::build(&comp, &weights, &biases);
         let p2 = PackedMlp::build(&comp, &weights, &biases).with_threads(4);
+        let p3 = PackedMlp::build(&comp, &weights, &biases).with_global_pool();
+        let shared = Arc::new(ThreadPool::new(3));
+        let p4 = PackedMlp::build(&comp, &weights, &biases).with_pool(shared);
         let mut rng = Xoshiro256pp::seed_from_u64(3);
         let x: Vec<f32> = (0..2 * 784).map(|_| rng.next_f32()).collect();
-        assert_eq!(p1.forward(&x, 2), p2.forward(&x, 2));
+        let want = p1.forward(&x, 2);
+        assert_eq!(want, p2.forward(&x, 2));
+        assert_eq!(want, p3.forward(&x, 2));
+        assert_eq!(want, p4.forward(&x, 2));
+    }
+
+    #[test]
+    fn engine_config_is_respected_and_exact() {
+        let plan = SparsityPlan::lenet300(10);
+        let (comp, _, weights, biases) = build_trained(&plan, 23);
+        let base = PackedMlp::build(&comp, &weights, &biases);
+        let cfg = EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 4 };
+        let tuned = PackedMlp::build(&comp, &weights, &biases).with_engine_config(&cfg).unwrap();
+        let bad = EngineConfig { tile_rows: 5, ..EngineConfig::default() };
+        assert!(PackedMlp::build(&comp, &weights, &biases).with_engine_config(&bad).is_err());
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let x: Vec<f32> = (0..3 * 784).map(|_| rng.next_f32()).collect();
+        // tile shape and pool must not change the computed values at all
+        assert_eq!(base.forward(&x, 3), tuned.forward(&x, 3));
     }
 }

@@ -98,6 +98,50 @@ impl ModelKind {
     }
 }
 
+/// Execution-engine knobs: persistent-pool sizing and the register-tile
+/// shape of the packed block-diagonal kernel (see DESIGN.md §Engine).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Worker-pool lanes for the packed engine. `0` = share the process-global
+    /// pool (sized by the machine / `MPDC_POOL_THREADS`); `1` = single-thread;
+    /// `n > 1` = a dedicated pool of `n` lanes per engine instance.
+    ///
+    /// Note: the global pool runs one job at a time, so engines of *multiple
+    /// concurrently-serving models* sharing it serialize their layer GEMMs.
+    /// That trade is fine for the single-model case; multi-model deployments
+    /// should give each serving worker its own pool (`pool_threads > 1`, or
+    /// `PackedBackend::with_pool` with a shared per-worker handle).
+    pub pool_threads: usize,
+    /// Register-tile batch rows (1/2/4/8).
+    pub tile_batch: usize,
+    /// Register-tile output rows (1/2/4/8).
+    pub tile_rows: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            pool_threads: 0,
+            tile_batch: crate::linalg::TileShape::DEFAULT.batch,
+            tile_rows: crate::linalg::TileShape::DEFAULT.rows,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn tile(&self) -> crate::linalg::TileShape {
+        crate::linalg::TileShape { batch: self.tile_batch, rows: self.tile_rows }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.tile().validate()?;
+        if self.pool_threads > 1024 {
+            return Err(format!("pool_threads {} is absurd (max 1024)", self.pool_threads));
+        }
+        Ok(())
+    }
+}
+
 /// A full experiment config (CLI defaults + TOML override).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -112,6 +156,7 @@ pub struct ExperimentConfig {
     pub test_samples: usize,
     pub artifacts_dir: Option<String>,
     pub out_dir: String,
+    pub engine: EngineConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -128,6 +173,7 @@ impl Default for ExperimentConfig {
             test_samples: 500,
             artifacts_dir: None,
             out_dir: "results".into(),
+            engine: EngineConfig::default(),
         }
     }
 }
@@ -164,6 +210,15 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_int("data.test_samples") {
             cfg.test_samples = v as usize;
         }
+        if let Some(v) = doc.get_int("engine.pool_threads") {
+            cfg.engine.pool_threads = v as usize;
+        }
+        if let Some(v) = doc.get_int("engine.tile_batch") {
+            cfg.engine.tile_batch = v as usize;
+        }
+        if let Some(v) = doc.get_int("engine.tile_rows") {
+            cfg.engine.tile_rows = v as usize;
+        }
         if let Some(v) = doc.get_str("paths.artifacts") {
             cfg.artifacts_dir = Some(v.to_string());
         }
@@ -187,6 +242,7 @@ impl ExperimentConfig {
         if self.train_samples == 0 || self.test_samples == 0 {
             return Err("sample counts must be positive".into());
         }
+        self.engine.validate()?;
         // plan validity at this model/nblocks combination
         self.model.plan(self.nblocks)?;
         Ok(())
@@ -246,6 +302,27 @@ out = "results/custom"
         cfg.model = ModelKind::TinyAlexnet;
         cfg.nblocks = 100_000; // exceeds layer dims
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn engine_config_parses_and_validates() {
+        let text = r#"
+[engine]
+pool_threads = 4
+tile_batch = 2
+tile_rows = 8
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.engine, EngineConfig { pool_threads: 4, tile_batch: 2, tile_rows: 8 });
+        assert_eq!(cfg.engine.tile(), crate::linalg::TileShape { batch: 2, rows: 8 });
+        // defaults when the table is absent
+        let cfg = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.engine, EngineConfig::default());
+        // bad tile shapes are rejected
+        assert!(ExperimentConfig::from_toml("[engine]\ntile_batch = 3\n").is_err());
+        let mut bad = ExperimentConfig::default();
+        bad.engine.tile_rows = 7;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

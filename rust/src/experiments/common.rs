@@ -14,6 +14,11 @@ use std::path::Path;
 /// Build the engine over the default artifact directory. Returns None (with
 /// a message) when artifacts haven't been built — callers skip gracefully so
 /// `cargo test`/`cargo bench` work before `make artifacts`.
+///
+/// Skip policy (shared by every test helper that delegates here): an
+/// engine-init failure is only a graceful skip in pjrt-less builds. With the
+/// `pjrt` feature on and real artifacts present, a client-init failure is a
+/// regression and debug builds (i.e. `cargo test`) fail hard on it.
 pub fn try_engine() -> Option<Engine> {
     let dir = default_artifact_dir();
     if !dir.join("manifest.txt").exists() {
@@ -23,6 +28,10 @@ pub fn try_engine() -> Option<Engine> {
     match Manifest::load(&dir).and_then(|m| Engine::cpu(m).map_err(|e| e.to_string())) {
         Ok(e) => Some(e),
         Err(e) => {
+            debug_assert!(
+                !cfg!(feature = "pjrt"),
+                "engine init failed with pjrt enabled and artifacts present: {e}"
+            );
             eprintln!("[mpdc] engine init failed: {e}");
             None
         }

@@ -8,9 +8,11 @@
 //! access (no index gathers). Who-wins ordering is preserved; absolute 4× is
 //! hardware-specific (DESIGN.md §2).
 
+use crate::config::EngineConfig;
 use crate::linalg::blockdiag_mm::BlockDiagMatrix;
 use crate::linalg::csr::Csr;
 use crate::linalg::gemm::gemm_a_bt;
+use crate::linalg::pool::{self, ThreadPool};
 use crate::mask::mask::MpdMask;
 use crate::mask::prng::Xoshiro256pp;
 use crate::util::benchkit::{bench, black_box, BenchStats};
@@ -27,6 +29,9 @@ pub struct SpeedupRow {
     pub dense_us: f64,
     pub csr_us: f64,
     pub blockdiag_us: f64,
+    /// The tuned engine path: fused bias+ReLU epilogue on the configured
+    /// pool + tile shape (`[engine]` in the experiment TOML).
+    pub tuned_us: f64,
 }
 
 impl SpeedupRow {
@@ -36,6 +41,10 @@ impl SpeedupRow {
 
     pub fn speedup_vs_csr(&self) -> f64 {
         self.csr_us / self.blockdiag_us
+    }
+
+    pub fn tuned_speedup_vs_dense(&self) -> f64 {
+        self.dense_us / self.tuned_us
     }
 }
 
@@ -51,7 +60,7 @@ pub fn paper_fc_shapes() -> Vec<(String, usize, usize)> {
     ]
 }
 
-/// Measure one (shape, nblocks, batch) point.
+/// Measure one (shape, nblocks, batch) point under the given engine config.
 pub fn measure_point(
     name: &str,
     out_dim: usize,
@@ -59,6 +68,7 @@ pub fn measure_point(
     nblocks: usize,
     batch: usize,
     quick: bool,
+    engine: &EngineConfig,
 ) -> SpeedupRow {
     let mut rng = Xoshiro256pp::seed_from_u64(0xBE*out_dim as u64 + in_dim as u64);
     let mask = MpdMask::generate(out_dim, in_dim, nblocks, &mut rng);
@@ -90,6 +100,20 @@ pub fn measure_point(
         bd.matmul_xt(&x, &mut y, batch);
         black_box(&y);
     });
+    // tuned engine: fused epilogue on the configured pool + tiles
+    let bias = vec![0.0f32; out_dim];
+    let owned_pool: Option<ThreadPool> =
+        if engine.pool_threads > 1 { Some(ThreadPool::new(engine.pool_threads)) } else { None };
+    let tuned_pool: Option<&ThreadPool> = match engine.pool_threads {
+        0 => Some(pool::global()),
+        1 => None,
+        _ => owned_pool.as_ref(),
+    };
+    let tile = engine.tile();
+    let tuned_stats = bench(&format!("{name}/tuned"), warm, meas, min_it, || {
+        bd.forward_fused(&x, &mut y, batch, &bias, false, tuned_pool, tile);
+        black_box(&y);
+    });
     SpeedupRow {
         layer: name.to_string(),
         out_dim,
@@ -99,18 +123,24 @@ pub fn measure_point(
         dense_us: dense.median_us(),
         csr_us: csr_stats.median_us(),
         blockdiag_us: bd_stats.median_us(),
+        tuned_us: tuned_stats.median_us(),
     }
 }
 
 /// The full kernel-level sweep: every paper FC shape × block counts.
-pub fn kernel_sweep(blocks: &[usize], batch: usize, quick: bool) -> Vec<SpeedupRow> {
+pub fn kernel_sweep(
+    blocks: &[usize],
+    batch: usize,
+    quick: bool,
+    engine: &EngineConfig,
+) -> Vec<SpeedupRow> {
     let mut rows = Vec::new();
     for (name, out_dim, in_dim) in paper_fc_shapes() {
         for &k in blocks {
             if k > out_dim.min(in_dim) {
                 continue;
             }
-            rows.push(measure_point(&name, out_dim, in_dim, k, batch, quick));
+            rows.push(measure_point(&name, out_dim, in_dim, k, batch, quick, engine));
         }
     }
     rows
@@ -195,7 +225,8 @@ mod tests {
     fn speedup_ordering_blockdiag_beats_csr_and_dense() {
         // At 10% density the packed form must beat both competitors on the
         // medium LeNet fc1 shape — this is the §3.3 claim's kernel core.
-        let row = measure_point("lenet_fc1", 300, 784, 10, 32, true);
+        let row = measure_point("lenet_fc1", 300, 784, 10, 32, true, &EngineConfig::default());
+        assert!(row.tuned_us > 0.0);
         assert!(
             row.blockdiag_us < row.dense_us,
             "blockdiag {}µs !< dense {}µs",

@@ -9,15 +9,24 @@
 //!
 //! Layer map (see DESIGN.md):
 //! * [`mask`] — permutations, block layouts, MPD masks, Fig.-1 decomposition
-//! * [`linalg`] — dense GEMM, CSR baseline, packed block-diagonal GEMM
+//! * [`linalg`] — dense GEMM, CSR baseline, the persistent worker pool
+//!   (`linalg::pool`), and the register-tiled packed block-diagonal GEMM with
+//!   fused bias+ReLU epilogue (`linalg::blockdiag_mm`)
 //! * [`nn`] — native layers/MLP/conv, checkpoints
 //! * [`data`] — synthetic datasets + IDX loader
-//! * [`compress`] — plans, compressor, packed inference engine, pruning baseline
-//! * [`runtime`] — PJRT loader/executor for AOT JAX artifacts
-//! * [`train`] — AOT + native trainers
-//! * [`server`] — batching inference server
-//! * [`config`] — TOML-subset config system
+//! * [`compress`] — plans, compressor, fused packed inference engine
+//!   (`compress::packed_model`, executes on the pool), pruning baseline
+//! * [`runtime`] — PJRT loader/executor for AOT JAX artifacts (behind the
+//!   `pjrt` feature; stubs out gracefully offline)
+//! * [`train`] — AOT + native trainers, packed-engine evaluation
+//! * [`server`] — batching inference server; each worker reuses one
+//!   persistent pool across every batch it executes
+//! * [`config`] — TOML-subset config system, incl. [`config::EngineConfig`]
+//!   (pool sizing + kernel tile shape)
 //! * [`util`] — bench harness, property testing, JSON, PGM, CRC32
+//!
+//! Engine notes — pool lifecycle, tile-shape choice, and the fusion
+//! contract — live in DESIGN.md §Engine at the repo root.
 pub mod compress;
 pub mod runtime;
 pub mod train;

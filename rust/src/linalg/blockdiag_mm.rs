@@ -14,10 +14,92 @@
 //! disjoint slice of `Y`'s columns, so blocks parallelize with no
 //! synchronization — the paper's "key enabler" (§1). No index arrays, no
 //! gathers: contrast with `csr.rs`.
+//!
+//! ## Kernel design (see DESIGN.md §Engine)
+//!
+//! The per-block kernel is a cache-blocked, register-tiled micro-GEMM: a
+//! `TM × TN` accumulator tile (default 4 batch rows × 8 output rows) is held
+//! in registers while the reduction dimension is swept once, so each loaded
+//! `x` value is reused `TN` times and each loaded `w` value `TM` times.
+//! Remainder batch/output rows fall back to a scalar path that accumulates
+//! in the **same `p`-ascending order** as the tiles, so every output element
+//! has one canonical value regardless of batch size, tile shape, or thread
+//! count — the property the equivalence tests pin down with exact equality.
+//!
+//! Bias-add + ReLU fuse into the tile epilogue ([`BlockDiagMatrix::forward_fused`]):
+//! the packed forward writes each activation exactly once instead of
+//! bias-copy → accumulate → separate ReLU sweep.
+//!
+//! Parallel execution goes through the persistent [`crate::linalg::pool`]
+//! (blocks are the work unit), not per-call scoped threads.
 
-use crate::linalg::threadpool::parallel_indices;
+use crate::linalg::pool::ThreadPool;
 use crate::mask::blockdiag::BlockDiagLayout;
 use crate::mask::mask::MpdMask;
+
+/// Register-tile shape of the micro-kernel: `batch` activation rows ×
+/// `rows` block-output rows per tile. Exposed through
+/// [`crate::config::EngineConfig`]; both axes must be one of {1, 2, 4, 8}.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileShape {
+    pub batch: usize,
+    pub rows: usize,
+}
+
+impl TileShape {
+    pub const DEFAULT: TileShape = TileShape { batch: 4, rows: 8 };
+
+    pub fn validate(&self) -> Result<(), String> {
+        const OK: [usize; 4] = [1, 2, 4, 8];
+        if OK.contains(&self.batch) && OK.contains(&self.rows) {
+            Ok(())
+        } else {
+            Err(format!(
+                "tile shape {}x{} unsupported: each axis must be one of 1/2/4/8",
+                self.batch, self.rows
+            ))
+        }
+    }
+}
+
+/// What the kernel does with the finished accumulator tile.
+#[derive(Clone, Copy)]
+enum Epilogue {
+    /// `Y += acc` (the classic GEMM contract).
+    Accumulate,
+    /// `Y = acc + bias` (bias indexed in block-row space), optionally clamped
+    /// at zero. Writes — does not read — `Y`.
+    Fused { relu: bool },
+}
+
+/// Shared handle to the output buffer for block tasks. Concurrent tasks must
+/// NOT each hold a `&mut` over the whole buffer (aliased `&mut` is undefined
+/// behavior even with disjoint writes); instead every write site projects a
+/// short-lived `&mut` over exactly its own disjoint row segment.
+#[derive(Clone, Copy)]
+struct OutPtr {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: tasks write disjoint segments (block row spans partition the
+// output columns) and the pool joins all tasks before the caller's `&mut`
+// is used again; `row_mut` is the only access path.
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+impl OutPtr {
+    /// Project a mutable view over `n` elements starting at `base`.
+    ///
+    /// SAFETY (caller): the `[base, base + n)` segment must not overlap any
+    /// other live projection — guaranteed here because block row spans are
+    /// disjoint and each task projects only rows of its own block.
+    #[inline]
+    unsafe fn seg_mut(&self, base: usize, n: usize) -> &mut [f32] {
+        debug_assert!(base + n <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(base), n)
+    }
+}
 
 /// A block-diagonal weight matrix in packed storage.
 ///
@@ -93,19 +175,38 @@ impl BlockDiagMatrix {
     }
 
     /// `Y += X · Wᵀ` with `X: [batch × cols]`, `Y: [batch × rows]`,
-    /// both row-major. Sequential over blocks.
+    /// both row-major. Sequential over blocks, tiled within each block.
     pub fn matmul_xt(&self, x: &[f32], y: &mut [f32], batch: usize) {
         let (rows, cols) = (self.layout.rows, self.layout.cols);
         assert_eq!(x.len(), batch * cols, "X shape mismatch");
         assert_eq!(y.len(), batch * rows, "Y shape mismatch");
+        self.run_blocks(x, y, batch, &[], Epilogue::Accumulate, TileShape::DEFAULT, None);
+    }
+
+    /// The seed's scalar dot-product kernel, kept as the oracle the tiled and
+    /// pooled paths are property-tested (and benchmarked) against.
+    pub fn matmul_xt_reference(&self, x: &[f32], y: &mut [f32], batch: usize) {
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        assert_eq!(x.len(), batch * cols, "X shape mismatch");
+        assert_eq!(y.len(), batch * rows, "Y shape mismatch");
         for b in 0..self.nblocks() {
-            self.block_matmul(b, x, y, batch);
+            let rs = self.layout.row_spans[b];
+            let cs = self.layout.col_spans[b];
+            let wb = self.block(b);
+            for bi in 0..batch {
+                let xrow = &x[bi * cols + cs.start..bi * cols + cs.end()];
+                let yrow = &mut y[bi * rows + rs.start..bi * rows + rs.end()];
+                for (r, yv) in yrow.iter_mut().enumerate() {
+                    *yv += crate::linalg::gemm::dot(&wb[r * cs.len..(r + 1) * cs.len], xrow);
+                }
+            }
         }
     }
 
-    /// Parallel-over-blocks variant. Blocks write disjoint column spans of
-    /// `Y`, so per-block tasks are data-race-free; we hand out the shared
-    /// buffer through a Send pointer wrapper scoped to this call.
+    /// Parallel-over-blocks variant on the process-global persistent pool,
+    /// capped at `nthreads` lanes. Bit-identical to [`Self::matmul_xt`]:
+    /// blocks write disjoint column spans of `Y` and every element keeps its
+    /// canonical accumulation order.
     pub fn matmul_xt_parallel(&self, x: &[f32], y: &mut [f32], batch: usize, nthreads: usize) {
         let (rows, cols) = (self.layout.rows, self.layout.cols);
         assert_eq!(x.len(), batch * cols);
@@ -113,31 +214,229 @@ impl BlockDiagMatrix {
         if nthreads <= 1 {
             return self.matmul_xt(x, y, batch);
         }
-        struct SendPtr(*mut f32, usize);
-        unsafe impl Send for SendPtr {}
-        unsafe impl Sync for SendPtr {}
-        let yp = SendPtr(y.as_mut_ptr(), y.len());
-        let yp = &yp; // capture the Sync wrapper, not the raw pointer field
-        parallel_indices(self.nblocks(), nthreads, |b| {
-            // SAFETY: block b writes only Y[:, row_spans[b]] — column spans
-            // are disjoint across blocks, so no two tasks alias an element.
-            let y = unsafe { std::slice::from_raw_parts_mut(yp.0, yp.1) };
-            self.block_matmul(b, x, y, batch);
+        self.run_blocks(x, y, batch, &[], Epilogue::Accumulate, TileShape::DEFAULT, Some((crate::linalg::pool::global(), nthreads)));
+    }
+
+    /// [`Self::matmul_xt`] on a caller-owned pool (all lanes).
+    pub fn matmul_xt_pooled(&self, x: &[f32], y: &mut [f32], batch: usize, pool: &ThreadPool) {
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        assert_eq!(x.len(), batch * cols);
+        assert_eq!(y.len(), batch * rows);
+        self.run_blocks(x, y, batch, &[], Epilogue::Accumulate, TileShape::DEFAULT, Some((pool, usize::MAX)));
+    }
+
+    /// Fused layer forward: `Y[:, rs_b] = X[:, cs_b] · W_bᵀ + bias[rs_b]`,
+    /// optionally through ReLU — the packed model's per-layer operation with
+    /// the bias copy and activation sweep folded into the block loop. `Y` is
+    /// written (not accumulated); `bias` is indexed in block-row space and
+    /// must have `rows` entries. Runs on `pool` when given.
+    pub fn forward_fused(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        batch: usize,
+        bias: &[f32],
+        relu: bool,
+        pool: Option<&ThreadPool>,
+        tile: TileShape,
+    ) {
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        assert_eq!(x.len(), batch * cols, "X shape mismatch");
+        assert_eq!(y.len(), batch * rows, "Y shape mismatch");
+        assert_eq!(bias.len(), rows, "bias must be in block-row space");
+        self.run_blocks(x, y, batch, bias, Epilogue::Fused { relu }, tile, pool.map(|p| (p, usize::MAX)));
+    }
+
+    /// Shared driver: run every block through the kernel, sequentially or on
+    /// a pool.
+    fn run_blocks(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        batch: usize,
+        bias: &[f32],
+        ep: Epilogue,
+        tile: TileShape,
+        pool: Option<(&ThreadPool, usize)>,
+    ) {
+        let nblocks = self.nblocks();
+        // One raw handle for all block tasks; every write projects a
+        // short-lived &mut over its own disjoint rows only (see OutPtr).
+        let yp = OutPtr { ptr: y.as_mut_ptr(), len: y.len() };
+        let parallel = match pool {
+            Some((p, cap)) => p.lanes().min(cap) > 1 && nblocks > 1,
+            None => false,
+        };
+        if !parallel {
+            for b in 0..nblocks {
+                self.block_forward(b, x, yp, batch, bias, ep, tile);
+            }
+            return;
+        }
+        let (p, cap) = pool.unwrap();
+        p.run_capped(nblocks, cap, |b| {
+            // SAFETY of sharing yp: block b writes only Y[:, row_spans[b]] —
+            // row spans are disjoint across blocks, so no two tasks ever
+            // project overlapping segments, and the pool guarantees all
+            // tasks finish before `run_capped` (and thus the borrow of `y`)
+            // returns.
+            self.block_forward(b, x, yp, batch, bias, ep, tile);
         });
     }
 
-    /// The per-block micro-GEMM: `Y[:, rs] += X[:, cs] · W_bᵀ`.
-    #[inline]
-    fn block_matmul(&self, b: usize, x: &[f32], y: &mut [f32], batch: usize) {
+    /// Per-block kernel entry: dispatch the configured tile shape onto a
+    /// monomorphized micro-kernel.
+    fn block_forward(
+        &self,
+        b: usize,
+        x: &[f32],
+        yp: OutPtr,
+        batch: usize,
+        bias: &[f32],
+        ep: Epilogue,
+        tile: TileShape,
+    ) {
+        // Every shape TileShape::validate accepts has its own monomorphized
+        // kernel — a configured shape is never silently substituted. Shapes
+        // that would fail validation (only reachable by constructing a
+        // TileShape by hand) fall back to the default kernel.
+        match (tile.batch, tile.rows) {
+            (1, 1) => self.block_forward_t::<1, 1>(b, x, yp, batch, bias, ep),
+            (1, 2) => self.block_forward_t::<1, 2>(b, x, yp, batch, bias, ep),
+            (1, 4) => self.block_forward_t::<1, 4>(b, x, yp, batch, bias, ep),
+            (1, 8) => self.block_forward_t::<1, 8>(b, x, yp, batch, bias, ep),
+            (2, 1) => self.block_forward_t::<2, 1>(b, x, yp, batch, bias, ep),
+            (2, 2) => self.block_forward_t::<2, 2>(b, x, yp, batch, bias, ep),
+            (2, 4) => self.block_forward_t::<2, 4>(b, x, yp, batch, bias, ep),
+            (2, 8) => self.block_forward_t::<2, 8>(b, x, yp, batch, bias, ep),
+            (4, 1) => self.block_forward_t::<4, 1>(b, x, yp, batch, bias, ep),
+            (4, 2) => self.block_forward_t::<4, 2>(b, x, yp, batch, bias, ep),
+            (4, 4) => self.block_forward_t::<4, 4>(b, x, yp, batch, bias, ep),
+            (4, 8) => self.block_forward_t::<4, 8>(b, x, yp, batch, bias, ep),
+            (8, 1) => self.block_forward_t::<8, 1>(b, x, yp, batch, bias, ep),
+            (8, 2) => self.block_forward_t::<8, 2>(b, x, yp, batch, bias, ep),
+            (8, 4) => self.block_forward_t::<8, 4>(b, x, yp, batch, bias, ep),
+            (8, 8) => self.block_forward_t::<8, 8>(b, x, yp, batch, bias, ep),
+            _ => {
+                debug_assert!(false, "unvalidated tile shape {tile:?}");
+                self.block_forward_t::<4, 8>(b, x, yp, batch, bias, ep)
+            }
+        }
+    }
+
+    /// The tiled micro-GEMM over one block, `TM × TN` register tiles.
+    fn block_forward_t<const TM: usize, const TN: usize>(
+        &self,
+        b: usize,
+        x: &[f32],
+        yp: OutPtr,
+        batch: usize,
+        bias: &[f32],
+        ep: Epilogue,
+    ) {
         let rs = self.layout.row_spans[b];
         let cs = self.layout.col_spans[b];
         let (rows, cols) = (self.layout.rows, self.layout.cols);
         let wb = self.block(b); // (rs.len × cs.len), row-major
-        for bi in 0..batch {
-            let xrow = &x[bi * cols + cs.start..bi * cols + cs.end()];
-            let yrow = &mut y[bi * rows + rs.start..bi * rows + rs.end()];
-            for (r, yv) in yrow.iter_mut().enumerate() {
-                *yv += crate::linalg::gemm::dot(&wb[r * cs.len..(r + 1) * cs.len], xrow);
+        let (out_b, in_b) = (rs.len, cs.len);
+        let mb = batch - batch % TM;
+        let nb = out_b - out_b % TN;
+
+        for bi0 in (0..mb).step_by(TM) {
+            for r0 in (0..nb).step_by(TN) {
+                // Full TM×TN tile. Slices pinned up front so the inner loop
+                // indexes with in-bounds-provable offsets.
+                let mut xrows = [&x[..0]; TM];
+                for (i, xr) in xrows.iter_mut().enumerate() {
+                    let base = (bi0 + i) * cols + cs.start;
+                    *xr = &x[base..base + in_b];
+                }
+                let mut wrows = [&wb[..0]; TN];
+                for (j, wr) in wrows.iter_mut().enumerate() {
+                    *wr = &wb[(r0 + j) * in_b..(r0 + j + 1) * in_b];
+                }
+                let mut acc = [[0.0f32; TN]; TM];
+                for p in 0..in_b {
+                    for i in 0..TM {
+                        let xv = xrows[i][p];
+                        for j in 0..TN {
+                            acc[i][j] += xv * wrows[j][p];
+                        }
+                    }
+                }
+                for i in 0..TM {
+                    let base = (bi0 + i) * rows + rs.start + r0;
+                    // SAFETY: rows of this block only — disjoint across tasks.
+                    let yrow = unsafe { yp.seg_mut(base, TN) };
+                    match ep {
+                        Epilogue::Accumulate => {
+                            for j in 0..TN {
+                                yrow[j] += acc[i][j];
+                            }
+                        }
+                        Epilogue::Fused { relu } => {
+                            for j in 0..TN {
+                                let mut v = acc[i][j] + bias[rs.start + r0 + j];
+                                if relu && v < 0.0 {
+                                    v = 0.0;
+                                }
+                                yrow[j] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Remainder regions, same p-ascending accumulation order as the
+        // tiles so element values are path-independent:
+        //   A: full-tile batch rows × leftover output rows
+        //   B: leftover batch rows × all output rows
+        if nb < out_b {
+            self.block_scalar(b, x, yp, bias, ep, 0..mb, nb..out_b);
+        }
+        if mb < batch {
+            self.block_scalar(b, x, yp, bias, ep, mb..batch, 0..out_b);
+        }
+    }
+
+    /// Scalar cell path for tile remainders (and the 1×1 "tile").
+    #[allow(clippy::too_many_arguments)]
+    fn block_scalar(
+        &self,
+        b: usize,
+        x: &[f32],
+        yp: OutPtr,
+        bias: &[f32],
+        ep: Epilogue,
+        bi_range: std::ops::Range<usize>,
+        r_range: std::ops::Range<usize>,
+    ) {
+        let rs = self.layout.row_spans[b];
+        let cs = self.layout.col_spans[b];
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        let wb = self.block(b);
+        let in_b = cs.len;
+        for bi in bi_range {
+            let xrow = &x[bi * cols + cs.start..bi * cols + cs.start + in_b];
+            for r in r_range.clone() {
+                let wrow = &wb[r * in_b..(r + 1) * in_b];
+                let mut acc = 0.0f32;
+                for p in 0..in_b {
+                    acc += xrow[p] * wrow[p];
+                }
+                let idx = bi * rows + rs.start + r;
+                // SAFETY: a cell of this block's own rows — disjoint across tasks.
+                let cell = unsafe { yp.seg_mut(idx, 1) };
+                match ep {
+                    Epilogue::Accumulate => cell[0] += acc,
+                    Epilogue::Fused { relu } => {
+                        let mut v = acc + bias[rs.start + r];
+                        if relu && v < 0.0 {
+                            v = 0.0;
+                        }
+                        cell[0] = v;
+                    }
+                }
             }
         }
     }
@@ -187,6 +486,67 @@ mod tests {
     }
 
     #[test]
+    fn tiled_matches_scalar_reference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(46);
+        for (rows, cols, k, batch) in [(13, 9, 3, 1), (300, 784, 10, 32), (40, 40, 5, 6), (7, 7, 7, 9)] {
+            let (bd, _) = mk(rows, cols, k, &mut rng);
+            let x: Vec<f32> = (0..batch * cols).map(|_| rng.next_f32() - 0.5).collect();
+            let init: Vec<f32> = (0..batch * rows).map(|_| rng.next_f32()).collect();
+            let mut y_ref = init.clone();
+            bd.matmul_xt_reference(&x, &mut y_ref, batch);
+            let mut y_tiled = init.clone();
+            bd.matmul_xt(&x, &mut y_tiled, batch);
+            for (a, b) in y_tiled.iter().zip(&y_ref) {
+                assert!((a - b).abs() < 1e-4, "{rows}x{cols} k={k} b={batch}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_tile_shapes_agree_exactly() {
+        // Element values must be identical across tile shapes (canonical
+        // p-ascending accumulation), so config changes can't shift numerics.
+        let mut rng = Xoshiro256pp::seed_from_u64(47);
+        let (bd, _) = mk(45, 31, 4, &mut rng);
+        let batch = 11;
+        let x: Vec<f32> = (0..batch * 31).map(|_| rng.next_f32() - 0.5).collect();
+        let bias: Vec<f32> = (0..45).map(|_| rng.next_f32() - 0.5).collect();
+        let mut y_default = vec![0.0f32; batch * 45];
+        bd.forward_fused(&x, &mut y_default, batch, &bias, true, None, TileShape::DEFAULT);
+        for (tm, tn) in [(1, 1), (1, 4), (1, 8), (2, 2), (2, 4), (2, 8), (4, 4), (8, 8)] {
+            let tile = TileShape { batch: tm, rows: tn };
+            tile.validate().unwrap();
+            let mut y = vec![0.0f32; batch * 45];
+            bd.forward_fused(&x, &mut y, batch, &bias, true, None, tile);
+            assert_eq!(y, y_default, "tile {tm}x{tn}");
+        }
+        assert!(TileShape { batch: 3, rows: 8 }.validate().is_err());
+    }
+
+    #[test]
+    fn fused_equals_unfused_composition() {
+        let mut rng = Xoshiro256pp::seed_from_u64(48);
+        for relu in [false, true] {
+            let (bd, _) = mk(30, 24, 3, &mut rng);
+            let batch = 5;
+            let x: Vec<f32> = (0..batch * 24).map(|_| rng.next_f32() - 0.5).collect();
+            let bias: Vec<f32> = (0..30).map(|_| rng.next_f32() - 0.5).collect();
+            // unfused: bias-init, accumulate, then activation sweep
+            let mut y_ref = vec![0.0f32; batch * 30];
+            for bi in 0..batch {
+                y_ref[bi * 30..(bi + 1) * 30].copy_from_slice(&bias);
+            }
+            bd.matmul_xt(&x, &mut y_ref, batch);
+            if relu {
+                y_ref.iter_mut().for_each(|v| *v = v.max(0.0));
+            }
+            let mut y_fused = vec![0.0f32; batch * 30];
+            bd.forward_fused(&x, &mut y_fused, batch, &bias, relu, None, TileShape::DEFAULT);
+            assert_eq!(y_fused, y_ref, "relu={relu}");
+        }
+    }
+
+    #[test]
     fn parallel_matches_sequential() {
         let mut rng = Xoshiro256pp::seed_from_u64(42);
         let (bd, _) = mk(120, 90, 6, &mut rng);
@@ -199,6 +559,11 @@ mod tests {
             bd.matmul_xt_parallel(&x, &mut y_par, batch, nthreads);
             assert_eq!(y_seq, y_par, "nthreads={nthreads}");
         }
+        // caller-owned pool path
+        let pool = ThreadPool::new(4);
+        let mut y_pool = vec![0.0f32; batch * 120];
+        bd.matmul_xt_pooled(&x, &mut y_pool, batch, &pool);
+        assert_eq!(y_seq, y_pool);
     }
 
     #[test]

@@ -1,11 +1,13 @@
-//! Native linear algebra: dense GEMM, CSR (irregular-sparsity baseline), and
-//! the packed block-diagonal GEMM hot path.
+//! Native linear algebra: dense GEMM, CSR (irregular-sparsity baseline), the
+//! persistent worker pool, and the register-tiled packed block-diagonal GEMM
+//! hot path.
 pub mod blockdiag_mm;
 pub mod csr;
 pub mod gemm;
+pub mod pool;
 pub mod tensor;
-pub mod threadpool;
 
-pub use blockdiag_mm::BlockDiagMatrix;
+pub use blockdiag_mm::{BlockDiagMatrix, TileShape};
 pub use csr::Csr;
+pub use pool::ThreadPool;
 pub use tensor::{Matrix, Tensor};

@@ -1,0 +1,456 @@
+//! Persistent worker pool — the execution engine under every parallel hot
+//! path (block-diagonal GEMM, fused packed forward, batcher backends).
+//!
+//! The seed implementation (a `threadpool::parallel_indices` helper, since
+//! removed) spawned fresh `std::thread::scope` workers on *every* GEMM call;
+//! at serving batch sizes
+//! the spawn/join cost rivals the kernel itself. This module replaces it with
+//! long-lived workers that park on a condvar between jobs:
+//!
+//! * **Job model** — a job is "run `f(i)` for every `i in 0..nchunks`".
+//!   Chunks are claimed from a shared atomic cursor, so imbalanced chunk
+//!   costs (ragged MPD blocks) self-balance.
+//! * **Lifecycle** — `ThreadPool::new(n)` spawns `n − 1` OS threads; the
+//!   caller of [`ThreadPool::run`] is always the n-th lane, so `new(1)` is a
+//!   zero-thread pool that degrades to an inline loop with zero overhead.
+//!   Workers park on a condvar when idle and are woken per job; `Drop` flags
+//!   shutdown and joins every worker (asserted by the leak tests).
+//! * **Scoped borrows without `'static`** — `run` type-erases `&F` into a raw
+//!   pointer and returns only after every claimed chunk has completed (a
+//!   per-job completion count, confirmed under the job's mutex), so the
+//!   closure and its borrows are provably alive whenever a worker can touch
+//!   them. Workers that wake late see an exhausted cursor and never
+//!   dereference the closure.
+//! * **Sharing** — one process-global instance ([`global`]) serves callers
+//!   that don't manage a pool themselves (sized by `MPDC_POOL_THREADS` or
+//!   the available parallelism); engines that want isolation own an
+//!   `Arc<ThreadPool>` ([`crate::compress::packed_model::PackedMlp::with_threads`]).
+//!
+//! Do **not** call `run` from inside a job closure on the same pool: jobs are
+//! serialized by an internal lock and a nested call would deadlock. The
+//! engine never nests (parallelism lives at the block level only).
+
+use std::sync::atomic::{AtomicIsize, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Type-erased `&F` handed to workers. Soundness argument in [`ThreadPool::run`].
+struct RawTask {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+// SAFETY: the pointer refers to an `F: Fn(usize) + Sync` that `run` keeps
+// alive (and exclusively manages) until every chunk has completed; `Sync`
+// makes concurrent `&F` calls legal.
+unsafe impl Send for RawTask {}
+unsafe impl Sync for RawTask {}
+
+/// One published unit of work: chunk cursor + completion accounting.
+struct Job {
+    task: RawTask,
+    total: usize,
+    /// Next unclaimed chunk index.
+    next: AtomicUsize,
+    /// Chunks whose `f(i)` call has returned (or panicked — a panicked chunk
+    /// still counts, so the caller never deadlocks waiting on it).
+    completed: AtomicUsize,
+    /// Worker admission tickets: bounds lanes to the caller-requested cap.
+    tickets: AtomicIsize,
+    /// First panic payload raised inside `f`, re-raised on the caller after
+    /// the job drains — matching `std::thread::scope` semantics.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+    done_lock: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl Job {
+    /// Claim and run chunks until the cursor is exhausted. Panics inside the
+    /// closure are caught and stashed (never unwound across a lane): the
+    /// remaining chunks still run, completion still reaches `total`, and the
+    /// caller re-raises the first payload — so a panicking chunk can neither
+    /// leave a worker holding a dangling closure pointer nor wedge the
+    /// caller's completion wait.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.total {
+                break;
+            }
+            // SAFETY: i < total, so `run` has not returned yet and the
+            // closure behind `data` is alive; see module docs.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                (self.task.call)(self.task.data, i)
+            }));
+            if let Err(payload) = result {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
+                let mut done = self.done_lock.lock().unwrap();
+                *done = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// What idle workers watch: a generation counter plus the current job.
+struct Inbox {
+    gen: u64,
+    job: Option<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    inbox: Mutex<Inbox>,
+    work_cv: Condvar,
+}
+
+/// A persistent pool of `lanes() - 1` worker threads plus the calling thread.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    lanes: usize,
+    /// Serializes jobs: one in flight at a time; concurrent callers queue here.
+    run_lock: Mutex<()>,
+}
+
+impl ThreadPool {
+    /// A pool with `nthreads` total lanes (the caller counts as one, so this
+    /// spawns `nthreads - 1` OS threads). `new(0)` and `new(1)` are inline.
+    pub fn new(nthreads: usize) -> Self {
+        let lanes = nthreads.max(1);
+        let shared = Arc::new(Shared {
+            inbox: Mutex::new(Inbox { gen: 0, job: None, shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let workers = (0..lanes - 1)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("mpdc-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, workers, lanes, run_lock: Mutex::new(()) }
+    }
+
+    /// Total parallel lanes (worker threads + the calling thread).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Spawned worker threads (`lanes() - 1`; a count of handles, not a
+    /// liveness check — see [`Self::live_lanes`] for that).
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Liveness probe: the peak number of lanes observed running one probe
+    /// job concurrently. Unlike [`Self::worker_count`] this detects dead
+    /// workers — each probe chunk holds its lane briefly (bounded at 500 ms)
+    /// to let the others rendezvous, so a healthy pool reports ≥ 2 and a
+    /// pool whose workers died reports 1. Used by leak/shutdown tests.
+    pub fn live_lanes(&self) -> usize {
+        if self.lanes <= 1 || self.workers.is_empty() {
+            return 1;
+        }
+        let lanes = self.lanes;
+        let inside = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        self.run(lanes, |_| {
+            let now = inside.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            let t0 = std::time::Instant::now();
+            while inside.load(Ordering::SeqCst) < lanes
+                && t0.elapsed() < std::time::Duration::from_millis(500)
+            {
+                std::thread::yield_now();
+            }
+            inside.fetch_sub(1, Ordering::SeqCst);
+        });
+        peak.load(Ordering::SeqCst)
+    }
+
+    /// Run `f(i)` for every `i in 0..nchunks`, distributed over the pool.
+    /// Returns after every call has completed. `f` must only touch disjoint
+    /// state per index (enforced by `Fn + Sync` plus index-only input).
+    pub fn run<F: Fn(usize) + Sync>(&self, nchunks: usize, f: F) {
+        self.run_capped(nchunks, usize::MAX, f)
+    }
+
+    /// [`ThreadPool::run`] with at most `max_lanes` lanes participating —
+    /// compatibility shim for call sites that carry an explicit `nthreads`.
+    pub fn run_capped<F: Fn(usize) + Sync>(&self, nchunks: usize, max_lanes: usize, f: F) {
+        if nchunks == 0 {
+            return;
+        }
+        let lanes = self.lanes.min(max_lanes).max(1);
+        if lanes == 1 || nchunks == 1 || self.workers.is_empty() {
+            for i in 0..nchunks {
+                f(i);
+            }
+            return;
+        }
+        let _guard = self.run_lock.lock().unwrap();
+
+        // SAFETY of the thunk: p is produced from `&f` below; `run_capped`
+        // keeps f alive until every chunk completed.
+        unsafe fn call_thunk<F: Fn(usize)>(p: *const (), i: usize) {
+            (*(p as *const F))(i)
+        }
+        let job = Arc::new(Job {
+            task: RawTask { data: &f as *const F as *const (), call: call_thunk::<F> },
+            total: nchunks,
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            tickets: AtomicIsize::new((lanes - 1) as isize),
+            panic: Mutex::new(None),
+            done_lock: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut inbox = self.shared.inbox.lock().unwrap();
+            inbox.gen = inbox.gen.wrapping_add(1);
+            inbox.job = Some(job.clone());
+            // Wake only as many workers as can usefully participate —
+            // notify_all would thundering-herd every parked worker on every
+            // small GEMM. Workers left parked simply join the next job (the
+            // gen check is an inequality), and job completion never depends
+            // on any worker: the caller lane drains the cursor regardless.
+            let useful = (lanes - 1).min(nchunks.saturating_sub(1));
+            for _ in 0..useful {
+                self.shared.work_cv.notify_one();
+            }
+        }
+        // The caller is always a lane — it starts on chunks immediately
+        // instead of sleeping until workers finish.
+        job.work();
+        // Wait for in-flight chunks on other lanes. `completed == total`
+        // implies every `f(i)` call has returned (completion is counted
+        // after the call), so the borrow of `f` ends here.
+        let mut done = job.done_lock.lock().unwrap();
+        while !*done {
+            done = job.done_cv.wait(done).unwrap();
+        }
+        drop(done);
+        // Drop the pool's reference to the job so the erased pointer does not
+        // linger in the inbox after `f` is gone. Workers that already cloned
+        // the Arc only see an exhausted cursor.
+        self.shared.inbox.lock().unwrap().job = None;
+        // Re-raise a chunk panic on the caller, like thread::scope would.
+        // The job is fully drained, so the pool stays usable afterwards —
+        // which requires releasing run_lock BEFORE unwinding: dropping a
+        // MutexGuard during a panic poisons the mutex and would wedge every
+        // later run() with a PoisonError.
+        let payload = job.panic.lock().unwrap().take();
+        drop(_guard);
+        if let Some(payload) = payload {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut inbox = self.shared.inbox.lock().unwrap();
+            inbox.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut last_gen = 0u64;
+    loop {
+        let job = {
+            let mut inbox = shared.inbox.lock().unwrap();
+            loop {
+                if inbox.shutdown {
+                    return;
+                }
+                if inbox.gen != last_gen {
+                    last_gen = inbox.gen;
+                    break inbox.job.clone();
+                }
+                inbox = shared.work_cv.wait(inbox).unwrap();
+            }
+        };
+        if let Some(job) = job {
+            // Admission ticket: bounds participating lanes to the cap the
+            // caller asked for. Skipping is always safe — skippers never
+            // touch the closure.
+            if job.tickets.fetch_sub(1, Ordering::AcqRel) > 0 {
+                job.work();
+            }
+        }
+    }
+}
+
+/// The process-global pool: sized by `MPDC_POOL_THREADS` when set, otherwise
+/// by the available parallelism — on a single-core host that means 1 lane,
+/// i.e. the zero-overhead inline path (tests that need real thread
+/// interaction construct their own multi-lane pools). Never dropped — its
+/// workers live for the process, which is the point of a persistent pool.
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::env::var("MPDC_POOL_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            // 0 reads as "no pool threads" → 1 lane (inline), matching the
+            // minimum an operator could mean rather than silently maxing out
+            .map(|n| n.max(1))
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        ThreadPool::new(n)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        for nthreads in [1usize, 2, 4, 8] {
+            let pool = ThreadPool::new(nthreads);
+            assert_eq!(pool.lanes(), nthreads.max(1));
+            let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(97, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                "nthreads={nthreads}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_chunks_is_a_noop() {
+        let pool = ThreadPool::new(4);
+        pool.run(0, |_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_jobs() {
+        // The whole point vs scoped threads: no spawn per call. Hammer the
+        // same pool with many small jobs and check the accounting every time.
+        let pool = ThreadPool::new(4);
+        let total = AtomicU64::new(0);
+        for round in 1..200u64 {
+            pool.run(round as usize % 7 + 1, |i| {
+                total.fetch_add(round * 1000 + i as u64, Ordering::Relaxed);
+            });
+        }
+        let expect: u64 = (1..200u64)
+            .map(|round| {
+                let n = round as usize % 7 + 1;
+                (0..n as u64).map(|i| round * 1000 + i).sum::<u64>()
+            })
+            .sum();
+        assert_eq!(total.load(Ordering::Relaxed), expect);
+        assert_eq!(pool.worker_count(), 3);
+    }
+
+    #[test]
+    fn run_capped_limits_lanes_but_completes() {
+        let pool = ThreadPool::new(8);
+        let concurrent = AtomicIsize::new(0);
+        let peak = AtomicIsize::new(0);
+        pool.run_capped(64, 2, |_| {
+            let now = concurrent.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            concurrent.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak {}", peak.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn concurrent_callers_serialize_safely() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let total = Arc::new(AtomicU64::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let pool = pool.clone();
+            let total = total.clone();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    pool.run(11, |i| {
+                        total.fetch_add(i as u64 + 1, Ordering::Relaxed);
+                    });
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        // 4 threads × 50 runs × Σ(1..=11)
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 66);
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        // If Drop failed to wake/join parked workers this test would hang
+        // (caught by the harness timeout) — and the leak_test binary
+        // additionally asserts on the process thread count.
+        for _ in 0..20 {
+            let pool = ThreadPool::new(6);
+            pool.run(12, |_| {});
+            drop(pool);
+        }
+    }
+
+    #[test]
+    fn global_pool_exists_and_runs() {
+        let p = global();
+        // ≥ 1 lane always; ≥ 2 only when MPDC_POOL_THREADS doesn't force 1
+        assert!(p.lanes() >= 1);
+        let sum = AtomicUsize::new(0);
+        p.run(10, |i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn chunk_panic_propagates_and_pool_survives() {
+        // A panicking chunk must neither deadlock the caller nor poison the
+        // pool: the panic resurfaces on the caller (like thread::scope) and
+        // the next job runs normally.
+        let pool = ThreadPool::new(4);
+        let ran = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(16, |i| {
+                ran.fetch_add(1, Ordering::SeqCst);
+                if i == 3 {
+                    panic!("chunk 3 exploded");
+                }
+            });
+        }));
+        let err = result.expect_err("panic must propagate to the caller");
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("chunk 3"), "unexpected payload {msg:?}");
+        // every chunk was still claimed and attempted — no dangling work
+        assert_eq!(ran.load(Ordering::SeqCst), 16);
+        // pool remains fully usable, and the workers are actually alive
+        // (worker_count would pass even with dead threads; live_lanes won't)
+        let sum = AtomicUsize::new(0);
+        pool.run(8, |i| {
+            sum.fetch_add(i + 1, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 36);
+        assert!(pool.live_lanes() >= 2, "workers died after chunk panic");
+    }
+}

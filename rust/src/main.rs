@@ -389,8 +389,20 @@ fn cmd_table1(flags: &Flags) -> anyhow::Result<()> {
 fn cmd_speedup(flags: &Flags) -> anyhow::Result<()> {
     let quick = !flags.contains_key("full");
     let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(32);
-    let rows = speedup::kernel_sweep(&[4, 8, 10, 16], batch, quick);
-    let mut t = Table::new(&["layer", "blocks", "dense µs", "CSR µs", "blockdiag µs", "vs dense", "vs CSR"]);
+    // `[engine]` from --config tunes the packed engine (pool + tile shape)
+    let cfg = cfg_from_flags(flags)?;
+    let rows = speedup::kernel_sweep(&[4, 8, 10, 16], batch, quick, &cfg.engine);
+    let mut t = Table::new(&[
+        "layer",
+        "blocks",
+        "dense µs",
+        "CSR µs",
+        "blockdiag µs",
+        "tuned µs",
+        "vs dense",
+        "vs CSR",
+        "tuned×",
+    ]);
     for r in &rows {
         t.row(&[
             r.layer.clone(),
@@ -398,8 +410,10 @@ fn cmd_speedup(flags: &Flags) -> anyhow::Result<()> {
             format!("{:.1}", r.dense_us),
             format!("{:.1}", r.csr_us),
             format!("{:.1}", r.blockdiag_us),
+            format!("{:.1}", r.tuned_us),
             format!("{:.2}×", r.speedup_vs_dense()),
             format!("{:.2}×", r.speedup_vs_csr()),
+            format!("{:.2}×", r.tuned_speedup_vs_dense()),
         ]);
     }
     println!("{}", t.render());

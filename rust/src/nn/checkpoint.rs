@@ -21,18 +21,42 @@ use std::path::Path;
 const MAGIC: &[u8; 4] = b"MPDC";
 const VERSION: u32 = 1;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CheckpointError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("bad magic (not an MPDC checkpoint)")]
+    Io(std::io::Error),
     BadMagic,
-    #[error("unsupported version {0}")]
     BadVersion(u32),
-    #[error("corrupt checkpoint: {0}")]
     Corrupt(String),
-    #[error("crc mismatch: stored {stored:#010x}, computed {computed:#010x}")]
     CrcMismatch { stored: u32, computed: u32 },
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "io error: {e}"),
+            CheckpointError::BadMagic => write!(f, "bad magic (not an MPDC checkpoint)"),
+            CheckpointError::BadVersion(v) => write!(f, "unsupported version {v}"),
+            CheckpointError::Corrupt(s) => write!(f, "corrupt checkpoint: {s}"),
+            CheckpointError::CrcMismatch { stored, computed } => {
+                write!(f, "crc mismatch: stored {stored:#010x}, computed {computed:#010x}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
 }
 
 /// A named tensor in a checkpoint.

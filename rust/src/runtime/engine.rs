@@ -2,8 +2,18 @@
 //! the CPU PJRT client (once — executables are cached), and runs them with
 //! typed host buffers. This is the only place the `xla` crate is touched;
 //! everything above works with [`Value`]s.
+//!
+//! The `xla` PJRT bindings are not available in the offline build, so every
+//! xla-touching path is gated behind the `pjrt` cargo feature. Without it the
+//! public API is unchanged, but [`Engine::cpu`] (and therefore everything that
+//! would execute an artifact) returns an error at runtime — callers such as
+//! `experiments::common::try_engine` treat that as "artifacts unavailable"
+//! and skip gracefully, which is exactly what `cargo test` needs.
 
-use crate::runtime::manifest::{ArtifactMeta, DType, Manifest, TensorSpec};
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+#[cfg(feature = "pjrt")]
+use crate::runtime::manifest::TensorSpec;
+use crate::runtime::manifest::DType;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -60,10 +70,12 @@ impl Value {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn matches(&self, spec: &TensorSpec) -> bool {
         self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> anyhow::Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -73,6 +85,7 @@ impl Value {
         Ok(lit.reshape(&dims)?)
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> anyhow::Result<Value> {
         Ok(match spec.dtype {
             DType::F32 => Value::F32(lit.to_vec::<f32>()?, spec.shape.clone()),
@@ -84,12 +97,14 @@ impl Value {
 /// A compiled artifact: PJRT executable + its metadata.
 pub struct LoadedExec {
     pub meta: ArtifactMeta,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
 impl LoadedExec {
     /// Execute with positional arguments; shapes/dtypes are validated against
     /// the artifact metadata before touching PJRT.
+    #[cfg(feature = "pjrt")]
     pub fn run(&self, args: &[Value]) -> anyhow::Result<Vec<Value>> {
         anyhow::ensure!(
             args.len() == self.meta.inputs.len(),
@@ -127,10 +142,20 @@ impl LoadedExec {
             .map(|(l, spec)| Value::from_literal(l, spec))
             .collect()
     }
+
+    /// Stub: the build carries no PJRT backend.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run(&self, _args: &[Value]) -> anyhow::Result<Vec<Value>> {
+        anyhow::bail!(
+            "{}: mpdc was built without the `pjrt` feature — AOT artifacts cannot be executed",
+            self.meta.name
+        )
+    }
 }
 
 /// The engine: PJRT client + manifest + executable cache.
 pub struct Engine {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     pub manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<LoadedExec>>>,
@@ -138,9 +163,16 @@ pub struct Engine {
 
 impl Engine {
     /// Create a CPU engine over an artifact directory.
+    #[cfg(feature = "pjrt")]
     pub fn cpu(manifest: Manifest) -> anyhow::Result<Self> {
         let client = xla::PjRtClient::cpu()?;
         Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Stub: the build carries no PJRT backend, so no engine can exist.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cpu(_manifest: Manifest) -> anyhow::Result<Self> {
+        anyhow::bail!("PJRT runtime unavailable: mpdc was built without the `pjrt` feature")
     }
 
     /// Load (or fetch from cache) a compiled artifact by name.
@@ -150,13 +182,21 @@ impl Engine {
         }
         anyhow::ensure!(self.manifest.contains(name), "artifact {name} not in manifest");
         let meta = self.manifest.meta(name).map_err(|e| anyhow::anyhow!(e))?;
-        let path = self.manifest.hlo_path(name);
-        let proto = xla::HloModuleProto::from_text_file(&path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let loaded = Arc::new(LoadedExec { meta, exe });
-        self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
-        Ok(loaded)
+        #[cfg(feature = "pjrt")]
+        {
+            let path = self.manifest.hlo_path(name);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let loaded = Arc::new(LoadedExec { meta, exe });
+            self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
+            Ok(loaded)
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = meta;
+            anyhow::bail!("cannot compile {name}: mpdc was built without the `pjrt` feature")
+        }
     }
 
     /// One-shot convenience: load + run.
@@ -165,26 +205,27 @@ impl Engine {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        return self.client.platform_name();
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt-disabled".to_string()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::manifest::default_artifact_dir;
 
+    // Shared skip policy lives in common::try_engine (hard failure when the
+    // pjrt feature is on but init fails next to real artifacts).
     fn engine() -> Option<Engine> {
-        let dir = default_artifact_dir();
-        if !dir.join("manifest.txt").exists() {
-            eprintln!("skipping: run `make artifacts` first");
-            return None;
-        }
-        Some(Engine::cpu(Manifest::load(&dir).unwrap()).unwrap())
+        crate::experiments::common::try_engine()
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn value_roundtrip_literal() {
+        use crate::runtime::manifest::{DType, TensorSpec};
         let v = Value::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
         let lit = v.to_literal().unwrap();
         let spec = TensorSpec { shape: vec![2, 3], dtype: DType::F32 };
@@ -194,6 +235,17 @@ mod tests {
         let lit = vi.to_literal().unwrap();
         let spec = TensorSpec { shape: vec![2], dtype: DType::I32 };
         assert_eq!(Value::from_literal(&lit, &spec).unwrap(), vi);
+    }
+
+    #[test]
+    fn value_accessors() {
+        let v = Value::F32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(v.numel(), 2);
+        assert_eq!(v.dtype(), DType::F32);
+        assert_eq!(v.as_f32(), &[1.0, 2.0]);
+        assert_eq!(Value::scalar_f32(3.0).shape(), &[] as &[usize]);
+        let vi = Value::I32(vec![5], vec![1]);
+        assert_eq!(vi.as_i32(), &[5]);
     }
 
     #[test]

@@ -58,17 +58,28 @@ pub struct BatcherHandle {
 }
 
 /// Error returned to callers.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ServeError {
-    #[error("queue full — backpressure")]
     Overloaded,
-    #[error("server shut down")]
     Closed,
-    #[error("bad input size: got {got}, expected {expected}")]
     BadInput { got: usize, expected: usize },
-    #[error("backend failure: {0}")]
     Backend(String),
 }
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded => write!(f, "queue full — backpressure"),
+            ServeError::Closed => write!(f, "server shut down"),
+            ServeError::BadInput { got, expected } => {
+                write!(f, "bad input size: got {got}, expected {expected}")
+            }
+            ServeError::Backend(msg) => write!(f, "backend failure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 impl BatcherHandle {
     /// Synchronous inference: enqueue and wait for the batched result.
@@ -202,8 +213,23 @@ where
 // ---------------------------------------------------------------------------
 
 /// Backend over the native packed block-diagonal model (MPD inference).
+///
+/// The model carries its persistent [`crate::linalg::ThreadPool`] handle
+/// (global, dedicated, or shared — see `PackedMlp::with_pool`), so the
+/// batcher worker that owns this backend reuses one warm pool across every
+/// batch it executes: no thread spawn/join anywhere on the request path.
 pub struct PackedBackend {
     pub model: crate::compress::packed_model::PackedMlp,
+}
+
+impl PackedBackend {
+    /// Convenience: wrap a model and point it at a shared persistent pool.
+    pub fn with_pool(
+        model: crate::compress::packed_model::PackedMlp,
+        pool: std::sync::Arc<crate::linalg::ThreadPool>,
+    ) -> Self {
+        Self { model: model.with_pool(pool) }
+    }
 }
 
 impl InferBackend for PackedBackend {

@@ -280,15 +280,11 @@ mod tests {
     use super::*;
     use crate::compress::plan::SparsityPlan;
     use crate::data::synth::{SynthImages, SynthSpec};
-    use crate::runtime::manifest::{default_artifact_dir, Manifest};
 
+    // Shared skip policy lives in common::try_engine (hard failure when the
+    // pjrt feature is on but init fails next to real artifacts).
     fn engine() -> Option<Engine> {
-        let dir = default_artifact_dir();
-        if !dir.join("manifest.txt").exists() {
-            eprintln!("skipping: run `make artifacts` first");
-            return None;
-        }
-        Some(Engine::cpu(Manifest::load(&dir).unwrap()).unwrap())
+        crate::experiments::common::try_engine()
     }
 
     fn lenet_masks(seed: u64) -> Vec<Vec<f32>> {

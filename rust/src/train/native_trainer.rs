@@ -49,10 +49,58 @@ pub fn evaluate_native(mlp: &mut Mlp, data: &Dataset, chunk: usize) -> f64 {
     correct / seen as f64
 }
 
+/// Evaluate a compiled packed engine (fused bias+ReLU forward on the
+/// persistent pool) over a dataset — the post-compression counterpart of
+/// [`evaluate_native`], used to confirm the packed model serves the same
+/// accuracy the masked-dense trainer reached.
+pub fn evaluate_packed(packed: &crate::compress::packed_model::PackedMlp, data: &Dataset, chunk: usize) -> f64 {
+    let mut correct = 0.0;
+    let mut seen = 0usize;
+    for (x, y) in BatchIter::sequential(data, chunk) {
+        let logits = packed.forward(&x, y.len());
+        correct += crate::nn::layer::accuracy(&logits, &y, y.len(), packed.out_dim) * y.len() as f64;
+        seen += y.len();
+    }
+    correct / seen as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth::{SynthImages, SynthSpec};
+
+    #[test]
+    fn packed_eval_matches_dense_eval_after_training() {
+        use crate::compress::compressor::MpdCompressor;
+        use crate::compress::plan::SparsityPlan;
+        use crate::train::native_trainer::evaluate_packed;
+
+        let spec = SynthSpec::mnist_like();
+        let mut train = Dataset::from_synth(&SynthImages::generate(spec, 400, 19, 0));
+        let (mean, std) = train.normalize();
+        let mut test = Dataset::from_synth(&SynthImages::generate(spec, 120, 19, 1));
+        test.normalize_with(mean, std);
+
+        let comp = MpdCompressor::new(SparsityPlan::lenet300(10), 19);
+        let mut rng = Xoshiro256pp::seed_from_u64(19);
+        let mut mlp = crate::nn::mlp::Mlp::new(&[784, 300, 100, 10], &mut rng)
+            .with_masks(comp.masks.clone());
+        let cfg = TrainConfig { steps: 80, lr: 0.08, log_every: 40, ..Default::default() };
+        fit_native(&mut mlp, &train, 50, &cfg);
+        let acc_dense = evaluate_native(&mut mlp, &test, 64);
+
+        let weights: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.w.clone()).collect();
+        let biases: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.b.clone()).collect();
+        let packed =
+            comp.build_engine(&weights, &biases, &crate::config::EngineConfig::default()).unwrap();
+        let acc_packed = evaluate_packed(&packed, &test, 64);
+        // fp reassociation in the fused kernel can only flip samples whose
+        // top-2 logits are ~1e-3 apart; identical accuracy expected here.
+        assert!(
+            (acc_dense - acc_packed).abs() < 0.02,
+            "dense {acc_dense} vs packed {acc_packed}"
+        );
+    }
 
     #[test]
     fn native_trainer_learns_synth_mnist() {

@@ -2,17 +2,24 @@
 //! for the checkpoint format in `nn::checkpoint`. Table-driven, byte at a
 //! time; matches zlib's `crc32()`.
 
-static TABLE: once_cell::sync::Lazy<[u32; 256]> = once_cell::sync::Lazy::new(|| {
+// Built at compile time — no lazy-init dependency needed offline.
+const TABLE: [u32; 256] = build_table();
+
+const fn build_table() -> [u32; 256] {
     let mut table = [0u32; 256];
-    for (i, entry) in table.iter_mut().enumerate() {
+    let mut i = 0;
+    while i < 256 {
         let mut c = i as u32;
-        for _ in 0..8 {
+        let mut k = 0;
+        while k < 8 {
             c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
         }
-        *entry = c;
+        table[i] = c;
+        i += 1;
     }
     table
-});
+}
 
 /// CRC-32 of a byte slice.
 pub fn crc32(data: &[u8]) -> u32 {

@@ -167,6 +167,77 @@ fn batched_serving_is_consistent() {
     join.join().unwrap();
 }
 
+/// Fused-forward equivalence: the packed engine's fused bias+ReLU forward
+/// (tiled, pooled) equals the unfused layer-by-layer reference on random MPD
+/// plans — the masked-dense MLP within float tolerance, and an explicitly
+/// unfused packed composition bit-for-bit.
+#[test]
+fn fused_forward_equals_unfused_reference_on_random_plans() {
+    use mpdc::compress::plan::LayerPlan;
+    use mpdc::linalg::pool::ThreadPool;
+    use std::sync::Arc;
+
+    let mut rng = Xoshiro256pp::seed_from_u64(0xF05E);
+    let shared = Arc::new(ThreadPool::new(4));
+    for trial in 0..20u64 {
+        // random 2–4 layer plan, random masked/dense mix
+        let nlayers = 2 + (rng.next_below(3) as usize);
+        let mut dims = vec![4 + rng.next_below(40) as usize];
+        for _ in 0..nlayers {
+            dims.push(4 + rng.next_below(40) as usize);
+        }
+        let layers: Vec<LayerPlan> = (0..nlayers)
+            .map(|i| {
+                let (od, id) = (dims[i + 1], dims[i]);
+                if rng.next_f64() < 0.75 {
+                    let k = 1 + rng.next_below(od.min(id) as u64) as usize;
+                    LayerPlan::masked(&format!("l{i}"), od, id, k)
+                } else {
+                    LayerPlan::dense(&format!("l{i}"), od, id)
+                }
+            })
+            .collect();
+        let plan = SparsityPlan::new(layers).unwrap();
+        let comp = MpdCompressor::new(plan, trial);
+        let mut mlp = Mlp::new(&dims, &mut rng).with_masks(comp.masks.clone());
+        for l in mlp.layers.iter_mut() {
+            for b in l.b.iter_mut() {
+                *b = rng.next_f32() - 0.5;
+            }
+        }
+        let weights: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.w.clone()).collect();
+        let biases: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.b.clone()).collect();
+
+        let batch = 1 + rng.next_below(9) as usize;
+        let x: Vec<f32> = (0..batch * dims[0]).map(|_| rng.next_f32() - 0.5).collect();
+
+        // 1) fused engine ≈ masked-dense training representation
+        let fused = PackedMlp::build(&comp, &weights, &biases);
+        let y_fused = fused.forward(&x, batch);
+        let y_dense = mlp.forward(&x, batch);
+        for (a, b) in y_fused.iter().zip(&y_dense) {
+            assert!((a - b).abs() < 1e-3, "trial {trial}: fused {a} vs dense {b}");
+        }
+
+        // 2) pooled/tiled variants are bit-identical to the plain build
+        let pooled = PackedMlp::build(&comp, &weights, &biases).with_pool(shared.clone());
+        assert_eq!(pooled.forward(&x, batch), y_fused, "trial {trial}: pooled differs");
+        let tiled = PackedMlp::build(&comp, &weights, &biases)
+            .with_tile(mpdc::linalg::TileShape { batch: 2, rows: 4 });
+        assert_eq!(tiled.forward(&x, batch), y_fused, "trial {trial}: tile shape changed numerics");
+
+        // 3) batch invariance: row i of the batched forward == single-sample
+        // forward of sample i (the canonical-accumulation guarantee that the
+        // batcher relies on)
+        for bi in 0..batch {
+            let xi = &x[bi * dims[0]..(bi + 1) * dims[0]];
+            let yi = fused.forward(xi, 1);
+            let row = &y_fused[bi * fused.out_dim..(bi + 1) * fused.out_dim];
+            assert_eq!(row, &yi[..], "trial {trial}: batch row {bi} differs from single-sample");
+        }
+    }
+}
+
 /// Checkpoint round-trip through the AOT trainer preserves eval accuracy.
 #[test]
 fn checkpoint_preserves_accuracy() {

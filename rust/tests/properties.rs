@@ -5,9 +5,10 @@
 use mpdc::compress::compressor::MpdCompressor;
 use mpdc::compress::packed_model::PackedMlp;
 use mpdc::compress::plan::{LayerPlan, SparsityPlan};
-use mpdc::linalg::blockdiag_mm::BlockDiagMatrix;
+use mpdc::linalg::blockdiag_mm::{BlockDiagMatrix, TileShape};
 use mpdc::linalg::csr::Csr;
 use mpdc::linalg::gemm::{gemm, gemm_naive};
+use mpdc::linalg::pool::ThreadPool;
 use mpdc::mask::blockdiag::off_block_mass;
 use mpdc::mask::decompose::{decompose, verify_decomposition};
 use mpdc::mask::mask::MpdMask;
@@ -80,6 +81,83 @@ fn prop_blockdiag_gemm_equals_dense_on_expansion() {
         let mut y2 = vec![0.0f32; batch * rows];
         mpdc::linalg::gemm::gemm_a_bt(&x, &star, &mut y2, batch, cols, rows);
         assert_allclose(&y1, &y2, 1e-4, "blockdiag vs dense-star");
+    });
+}
+
+#[test]
+fn prop_tiled_pooled_gemm_matches_scalar_oracle() {
+    // The engine rewrite's core contract: the register-tiled kernel agrees
+    // with the seed's scalar dot-product kernel on randomized shapes, block
+    // counts, and batch sizes — and pooled execution (owned pools of 1, 2,
+    // and 8 lanes) is BIT-IDENTICAL to sequential tiled execution, because
+    // blocks are independent and every element keeps one canonical
+    // accumulation order.
+    for_all("tiled+pooled blockdiag == scalar oracle", |rng, _| {
+        let k = gen_range(rng, 1, 10);
+        let rows = gen_range(rng, k, 96);
+        let cols = gen_range(rng, k, 96);
+        let batch = gen_range(rng, 1, 19);
+        let mask = MpdMask::generate(rows, cols, k, rng);
+        let wm = mask.apply(&gen_vec(rng, rows * cols));
+        let bd = BlockDiagMatrix::from_masked_weights(&mask, &wm);
+        let x = gen_vec(rng, batch * cols);
+        let init = gen_vec(rng, batch * rows); // nonzero: += semantics matter
+
+        let mut y_oracle = init.clone();
+        bd.matmul_xt_reference(&x, &mut y_oracle, batch);
+        let mut y_tiled = init.clone();
+        bd.matmul_xt(&x, &mut y_tiled, batch);
+        assert_allclose(&y_tiled, &y_oracle, 1e-4, "tiled vs scalar oracle");
+
+        for nthreads in [1usize, 2, 8] {
+            let pool = ThreadPool::new(nthreads);
+            let mut y_pool = init.clone();
+            bd.matmul_xt_pooled(&x, &mut y_pool, batch, &pool);
+            assert_eq!(y_pool, y_tiled, "pooled(nthreads={nthreads}) != sequential tiled");
+        }
+    });
+}
+
+#[test]
+fn prop_fused_forward_equals_unfused_composition() {
+    // Fusion contract: forward_fused(x) == relu?(bias + matmul_xt(x)),
+    // exactly, for every supported tile shape and thread count.
+    for_all("fused bias+relu == unfused composition", |rng, case| {
+        let k = gen_range(rng, 1, 8);
+        let rows = gen_range(rng, k, 80);
+        let cols = gen_range(rng, k, 80);
+        let batch = gen_range(rng, 1, 11);
+        let relu = case % 2 == 0;
+        let mask = MpdMask::generate(rows, cols, k, rng);
+        let wm = mask.apply(&gen_vec(rng, rows * cols));
+        let bd = BlockDiagMatrix::from_masked_weights(&mask, &wm);
+        let x = gen_vec(rng, batch * cols);
+        let bias = gen_vec(rng, rows);
+
+        let mut y_ref = vec![0.0f32; batch * rows];
+        for bi in 0..batch {
+            y_ref[bi * rows..(bi + 1) * rows].copy_from_slice(&bias);
+        }
+        bd.matmul_xt(&x, &mut y_ref, batch);
+        if relu {
+            y_ref.iter_mut().for_each(|v| *v = v.max(0.0));
+        }
+
+        let tiles = [
+            TileShape { batch: 1, rows: 1 },
+            TileShape { batch: 2, rows: 4 },
+            TileShape::DEFAULT,
+            TileShape { batch: 8, rows: 8 },
+        ];
+        let tile = tiles[case % tiles.len()];
+        let mut y_fused = vec![0.0f32; batch * rows];
+        bd.forward_fused(&x, &mut y_fused, batch, &bias, relu, None, tile);
+        assert_eq!(y_fused, y_ref, "sequential fused, tile {tile:?}");
+
+        let pool = ThreadPool::new(gen_range(rng, 2, 6));
+        let mut y_pooled = vec![0.0f32; batch * rows];
+        bd.forward_fused(&x, &mut y_pooled, batch, &bias, relu, Some(&pool), tile);
+        assert_eq!(y_pooled, y_ref, "pooled fused, tile {tile:?}");
     });
 }
 
@@ -233,4 +311,78 @@ fn prop_batcher_serves_every_request_exactly_once() {
         drop(h);
         join.join().unwrap();
     });
+}
+
+#[test]
+fn prop_batcher_exactly_once_under_shared_persistent_pool() {
+    // The serving-path stress for the engine rewrite: a real packed model on
+    // a SHARED persistent pool, hammered by many concurrent clients across
+    // randomized batching policies. Every request must be answered exactly
+    // once with the same logits direct forward produces, and dropping the
+    // handle must cleanly join the batcher worker while the shared pool's
+    // threads survive for the next case (then join on drop).
+    use mpdc::server::batcher::{spawn, BatcherConfig, PackedBackend};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    // One trained-shaped packed model per process is plenty; the pool and
+    // batching policy vary per case.
+    let comp = MpdCompressor::new(SparsityPlan::lenet300(10), 77);
+    let (weights, biases) = comp.random_masked_weights(77);
+    let reference = PackedMlp::build(&comp, &weights, &biases);
+
+    let pool = Arc::new(ThreadPool::new(4));
+
+    for_all("batcher + shared pool exactly-once", |rng, _| {
+        let nclients = gen_range(rng, 2, 8);
+        let per_client = gen_range(rng, 1, 6);
+        let cfg = BatcherConfig {
+            max_batch: gen_range(rng, 1, 16),
+            max_wait: std::time::Duration::from_micros(gen_range(rng, 0, 400) as u64),
+            queue_depth: 128,
+        };
+        let model = PackedMlp::build(&comp, &weights, &biases);
+        let backend = PackedBackend::with_pool(model, pool.clone());
+        let (h, join) = spawn(backend, cfg);
+
+        // distinct inputs per request so cross-routing would be caught
+        let inputs: Vec<Vec<f32>> = (0..nclients * per_client)
+            .map(|_| gen_vec(rng, 784))
+            .collect();
+        let expect: Vec<Vec<f32>> = inputs.iter().map(|x| reference.forward(x, 1)).collect();
+
+        let served = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for c in 0..nclients {
+                let h = h.clone();
+                let served = served.clone();
+                let inputs = &inputs;
+                let expect = &expect;
+                s.spawn(move || {
+                    for i in (c..inputs.len()).step_by(nclients) {
+                        let y = h.infer(inputs[i].clone()).unwrap();
+                        // pooled + batched must equal direct single-sample
+                        // forward bit-for-bit (canonical accumulation order)
+                        assert_eq!(y, expect[i], "request {i} got wrong logits");
+                        served.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert_eq!(served.load(Ordering::SeqCst), inputs.len(), "requests lost or duplicated");
+        assert_eq!(
+            h.metrics.batched_requests.load(Ordering::SeqCst) as usize,
+            inputs.len(),
+            "backend saw a different request count"
+        );
+        // clean shutdown: the batcher worker joins, the shared pool persists
+        drop(h);
+        join.join().unwrap();
+    });
+    // After the whole stress run, the shared pool's workers must still be
+    // alive (a liveness probe, not a handle count).
+    assert!(
+        pool.live_lanes() >= 2,
+        "shared pool lost workers across the stress run"
+    );
 }

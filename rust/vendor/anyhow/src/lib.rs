@@ -1,0 +1,154 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Provides exactly the surface this repository uses — [`Error`], [`Result`],
+//! and the [`anyhow!`], [`bail!`], [`ensure!`] macros — with the same
+//! semantics for those paths: any `std::error::Error + Send + Sync + 'static`
+//! converts into [`Error`] via `?`, and the macros build message errors from
+//! format strings or single displayable expressions. No downcasting, no
+//! context chains, no backtraces. Swapping in the real `anyhow` from
+//! crates.io is a drop-in replacement.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`, with the error type defaulted like the real
+/// crate so `collect::<anyhow::Result<_>>()` works.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A type-erased error: a rendered message plus (when converted from a typed
+/// error) the boxed source for `source()`-style inspection.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from anything displayable (what `anyhow!` lowers to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// The underlying typed error, when this `Error` came from one via `?`.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cur = self.source.as_deref().and_then(|e| e.source());
+        while let Some(e) = cur {
+            write!(f, "\ncaused by: {e}")?;
+            cur = e.source();
+        }
+        Ok(())
+    }
+}
+
+// The real anyhow's conversion: every typed std error flows in through `?`.
+// No coherence conflict with `impl From<T> for T` because `Error` itself
+// deliberately does not implement `std::error::Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(::std::format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// `bail!` unless the condition holds. With no message, the stringified
+/// condition becomes the message (matching the real crate).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($t)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing thing"));
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let plain: Error = anyhow!("artifacts missing");
+        assert_eq!(plain.to_string(), "artifacts missing");
+        let n = 3;
+        let fmt: Error = anyhow!("got {} things at {n}", 2 + 1);
+        assert_eq!(fmt.to_string(), "got 3 things at 3");
+        let from_string: Error = anyhow!(String::from("boom"));
+        assert_eq!(from_string.to_string(), "boom");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn b() -> Result<()> {
+            bail!("stopped: {}", 7)
+        }
+        assert_eq!(b().unwrap_err().to_string(), "stopped: 7");
+
+        fn e(v: usize) -> Result<usize> {
+            ensure!(v < 10, "v too big: {v}");
+            ensure!(v != 5);
+            Ok(v)
+        }
+        assert_eq!(e(3).unwrap(), 3);
+        assert_eq!(e(12).unwrap_err().to_string(), "v too big: 12");
+        assert!(e(5).unwrap_err().to_string().contains("v != 5"));
+    }
+
+    #[test]
+    fn parse_errors_flow_through() {
+        fn p(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(p("42").unwrap(), 42);
+        assert!(p("nope").is_err());
+    }
+}
