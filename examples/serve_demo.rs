@@ -1,7 +1,9 @@
 //! Serving demo: router + dynamic batchers over three inference
 //! representations of the same trained LeNet — dense GEMM, CSR (irregular
-//! pruning), and MPD packed block-diagonal — with a weighted traffic split
-//! and per-variant metrics. Pure native backends (no artifacts needed).
+//! pruning), and MPD packed block-diagonal — with a weighted traffic split,
+//! per-variant metrics, and the HTTP front-end + load generator driving the
+//! same router over a real socket. Pure native backends (no artifacts
+//! needed).
 //!
 //! ```bash
 //! cargo run --release --example serve_demo
@@ -15,65 +17,14 @@ use mpdc::data::synth::{SynthImages, SynthSpec};
 use mpdc::linalg::csr::Csr;
 use mpdc::mask::prng::Xoshiro256pp;
 use mpdc::nn::mlp::Mlp;
-use mpdc::server::batcher::{spawn, BatcherConfig, InferBackend, PackedBackend};
+use mpdc::server::batcher::{spawn, BatcherConfig, CsrBackend, MlpBackend, PackedBackend};
+use mpdc::server::http::{HttpConfig, HttpServer};
+use mpdc::server::loadgen::{self, Arrival, LoadgenConfig};
 use mpdc::server::router::Router;
 use mpdc::train::aot_trainer::TrainConfig;
 use mpdc::train::native_trainer::fit_native;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
-
-/// Dense native backend.
-struct DenseBackend {
-    mlp: Mlp,
-}
-
-impl InferBackend for DenseBackend {
-    fn feature_dim(&self) -> usize {
-        784
-    }
-    fn out_dim(&self) -> usize {
-        10
-    }
-    fn max_batch(&self) -> usize {
-        256
-    }
-    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
-        Ok(self.mlp.forward(x, batch))
-    }
-}
-
-/// CSR backend: same masked weights, irregular-sparse representation.
-struct CsrBackend {
-    layers: Vec<(Csr, Vec<f32>)>, // (weights, bias)
-}
-
-impl InferBackend for CsrBackend {
-    fn feature_dim(&self) -> usize {
-        784
-    }
-    fn out_dim(&self) -> usize {
-        10
-    }
-    fn max_batch(&self) -> usize {
-        256
-    }
-    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
-        let mut act = x.to_vec();
-        let n = self.layers.len();
-        for (i, (w, b)) in self.layers.iter().enumerate() {
-            let mut y = vec![0.0f32; batch * w.rows];
-            for bi in 0..batch {
-                y[bi * w.rows..(bi + 1) * w.rows].copy_from_slice(b);
-            }
-            w.spmm_xt(&act, &mut y, batch);
-            if i + 1 < n {
-                y.iter_mut().for_each(|v| *v = v.max(0.0));
-            }
-            act = y;
-        }
-        Ok(act)
-    }
-}
 
 fn main() -> anyhow::Result<()> {
     println!("== mpdc serving demo (router + dynamic batcher) ==");
@@ -108,9 +59,9 @@ fn main() -> anyhow::Result<()> {
 
     let bc = BatcherConfig { max_batch: 16, max_wait: std::time::Duration::from_micros(300), queue_depth: 256 };
     let mut router = Router::new();
-    let (h, _j1) = spawn(DenseBackend { mlp }, bc);
+    let (h, _j1) = spawn(MlpBackend::new(mlp), bc);
     router.register("dense", h);
-    let (h, _j2) = spawn(CsrBackend { layers: csr_layers }, bc);
+    let (h, _j2) = spawn(CsrBackend { layers: csr_layers, feature_dim: 784, out_dim: 10 }, bc);
     router.register("csr", h);
     let (h, _j3) = spawn(PackedBackend { model: packed }, bc);
     router.register("mpd", h);
@@ -163,6 +114,36 @@ fn main() -> anyhow::Result<()> {
         *counts.entry(name).or_insert(0usize) += 1;
     }
     println!("weighted 20/80 split over 500 requests: {counts:?}");
+
+    // ---- the same router, over a real socket -----------------------------
+    // ephemeral port, fixed accept-thread pool; the load generator speaks
+    // actual HTTP/1.1 with keep-alive
+    let http_cfg = HttpConfig { addr: "127.0.0.1:0".into(), accept_threads: 6, ..HttpConfig::default() };
+    let server = HttpServer::start(std::sync::Arc::new(router), http_cfg)?;
+    println!("\nHTTP front-end on {}", server.url());
+    for variant in ["dense", "mpd"] {
+        let cfg = LoadgenConfig { concurrency: 4, requests: 800, arrival: Arrival::Closed, seed: 7 };
+        let report = loadgen::run_http(server.addr(), variant, 784, &cfg);
+        println!("  closed-loop {variant:>6}: {}", report.summary());
+    }
+    let open = LoadgenConfig {
+        concurrency: 4,
+        requests: 400,
+        arrival: Arrival::Poisson { target_qps: 400.0 },
+        seed: 7,
+    };
+    let report = loadgen::run_http(server.addr(), "mpd", 784, &open);
+    println!("  open-loop  mpd@400qps: {}", report.summary());
+
+    // scrape /metrics like Prometheus would
+    let mut client = loadgen::HttpClient::new(server.addr());
+    let (status, page) = client.get("/metrics").map_err(|e| anyhow::anyhow!(e))?;
+    assert_eq!(status, 200);
+    let excerpt: Vec<&str> =
+        page.lines().filter(|l| l.starts_with("mpdc_requests_total")).collect();
+    println!("  /metrics excerpt:\n    {}", excerpt.join("\n    "));
+    drop(client); // close the keep-alive connection before shutdown
+    server.shutdown();
     println!("OK");
     Ok(())
 }

@@ -1,0 +1,97 @@
+//! Serving smoke bench: dense vs MPD packed variants behind the real HTTP
+//! front-end, measured by the in-repo load generator. Reports p50/p99 and
+//! throughput per variant in both arrival disciplines — the repo's standing
+//! serving benchmark (ISSUE 2). Artifact-free and training-free: weights are
+//! random (identical shapes to trained LeNet-300-100), which is what serving
+//! cost depends on.
+//!
+//! ```bash
+//! cargo bench --bench serve_http              # quick (CI) preset
+//! MPDC_SERVE_REQUESTS=20000 cargo bench --bench serve_http
+//! ```
+
+use mpdc::compress::compressor::MpdCompressor;
+use mpdc::compress::plan::SparsityPlan;
+use mpdc::config::EngineConfig;
+use mpdc::mask::prng::Xoshiro256pp;
+use mpdc::nn::mlp::Mlp;
+use mpdc::server::http::{HttpConfig, HttpServer};
+use mpdc::server::loadgen::{self, Arrival, LoadgenConfig};
+use mpdc::server::{spawn, BatcherConfig, MlpBackend, PackedBackend, Router};
+use mpdc::util::benchkit::Table;
+use mpdc::util::json::{append_jsonl, Json};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let requests: usize = std::env::var("MPDC_SERVE_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000);
+
+    // Same weights for both variants: the dense MLP runs them as one GEMM
+    // chain, the packed engine as block-diagonal MACs (~10× fewer).
+    let comp = MpdCompressor::new(SparsityPlan::lenet300(10), 42);
+    let (weights, biases) = comp.random_masked_weights(7);
+    let packed = comp
+        .build_engine(&weights, &biases, &EngineConfig::default())
+        .expect("engine build");
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let mut mlp = Mlp::new(&[784, 300, 100, 10], &mut rng).with_masks(comp.masks.clone());
+    for (l, (w, b)) in mlp.layers.iter_mut().zip(weights.iter().zip(&biases)) {
+        l.w = w.clone();
+        l.b = b.clone();
+    }
+
+    let bc = BatcherConfig { max_batch: 32, max_wait: Duration::from_micros(300), queue_depth: 1024 };
+    let mut router = Router::new();
+    let (h, _w1) = spawn(MlpBackend::new(mlp), bc);
+    router.register("dense", h);
+    let (h, _w2) = spawn(PackedBackend { model: packed }, bc);
+    router.register("mpd", h);
+
+    let cfg = HttpConfig { addr: "127.0.0.1:0".into(), accept_threads: 8, ..HttpConfig::default() };
+    let server = HttpServer::start(Arc::new(router), cfg).expect("bind ephemeral port");
+    println!("serve_http bench on {} ({requests} requests per cell)\n", server.url());
+
+    let mut table = Table::new(&["variant", "arrival", "ok", "429", "req/s", "p50 µs", "p90 µs", "p99 µs"]);
+    for variant in ["dense", "mpd"] {
+        for (mode, arrival) in
+            [("closed", Arrival::Closed), ("open-500qps", Arrival::Poisson { target_qps: 500.0 })]
+        {
+            let lg = LoadgenConfig {
+                concurrency: 6,
+                requests: if mode == "closed" { requests } else { requests.min(1500) },
+                arrival,
+                seed: 42,
+            };
+            let r = loadgen::run_http(server.addr(), variant, 784, &lg);
+            assert_eq!(r.errors, 0, "{variant}/{mode}: transport errors under smoke load");
+            table.row(&[
+                variant.to_string(),
+                mode.to_string(),
+                r.ok.to_string(),
+                r.rejected.to_string(),
+                format!("{:.0}", r.throughput_rps()),
+                format!("{:.0}", r.latency.percentile_us(0.5)),
+                format!("{:.0}", r.latency.percentile_us(0.9)),
+                format!("{:.0}", r.latency.percentile_us(0.99)),
+            ]);
+            let _ = append_jsonl(
+                std::path::Path::new("results/serve_http.jsonl"),
+                &Json::obj(vec![
+                    ("variant", Json::str(variant)),
+                    ("arrival", Json::str(mode)),
+                    ("ok", Json::num(r.ok as f64)),
+                    ("rejected", Json::num(r.rejected as f64)),
+                    ("rps", Json::num(r.throughput_rps())),
+                    ("p50_us", Json::num(r.latency.percentile_us(0.5))),
+                    ("p99_us", Json::num(r.latency.percentile_us(0.99))),
+                ]),
+            );
+        }
+    }
+    println!("{}", table.render());
+    server.shutdown();
+    println!("OK");
+}

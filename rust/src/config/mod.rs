@@ -142,6 +142,99 @@ impl EngineConfig {
     }
 }
 
+/// HTTP serving knobs — the `[server]` TOML table. Transport-level settings
+/// map onto [`crate::server::HttpConfig`]; batching-policy settings map onto
+/// [`crate::server::BatcherConfig`] (one batcher per registered variant).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServerConfig {
+    pub host: String,
+    /// TCP port; 0 picks an ephemeral port.
+    pub port: u16,
+    /// Fixed accept/worker thread count — the hard bound on concurrently
+    /// served connections (excess connections wait in the kernel backlog).
+    pub accept_threads: usize,
+    /// Secondary cap that 503s connections beyond it; since each accept
+    /// thread serves one connection at a time, this only takes effect when
+    /// set *below* `accept_threads`. Raise `accept_threads` to raise
+    /// concurrency.
+    pub max_connections: usize,
+    pub keep_alive: bool,
+    /// Per-read socket timeout (idle keep-alive reaper), in ms.
+    pub read_timeout_ms: u64,
+    /// Request bodies above this return 413, in KiB.
+    pub max_body_kb: usize,
+    /// Dynamic batching: largest batch assembled per worker dispatch.
+    pub max_batch: usize,
+    /// Dynamic batching: wait after the first queued request, in µs.
+    pub max_wait_us: u64,
+    /// Bounded admission queue per variant (backpressure → 429).
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            host: "127.0.0.1".into(),
+            port: 8077,
+            accept_threads: 8,
+            max_connections: 64,
+            keep_alive: true,
+            read_timeout_ms: 5_000,
+            max_body_kb: 1024,
+            max_batch: 32,
+            max_wait_us: 300,
+            queue_depth: 256,
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn addr(&self) -> String {
+        format!("{}:{}", self.host, self.port)
+    }
+
+    pub fn http_config(&self) -> crate::server::HttpConfig {
+        crate::server::HttpConfig {
+            addr: self.addr(),
+            accept_threads: self.accept_threads,
+            max_connections: self.max_connections,
+            keep_alive: self.keep_alive,
+            read_timeout: std::time::Duration::from_millis(self.read_timeout_ms),
+            max_body_bytes: self.max_body_kb * 1024,
+        }
+    }
+
+    pub fn batcher_config(&self) -> crate::server::BatcherConfig {
+        crate::server::BatcherConfig {
+            max_batch: self.max_batch,
+            max_wait: std::time::Duration::from_micros(self.max_wait_us),
+            queue_depth: self.queue_depth,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.host.is_empty() {
+            return Err("server.host must not be empty".into());
+        }
+        if self.accept_threads == 0 || self.accept_threads > 1024 {
+            return Err(format!("server.accept_threads {} out of range 1..=1024", self.accept_threads));
+        }
+        if self.max_connections == 0 {
+            return Err("server.max_connections must be ≥ 1".into());
+        }
+        if self.max_batch == 0 {
+            return Err("server.max_batch must be ≥ 1".into());
+        }
+        if self.queue_depth == 0 {
+            return Err("server.queue_depth must be ≥ 1".into());
+        }
+        if self.max_body_kb == 0 {
+            return Err("server.max_body_kb must be ≥ 1".into());
+        }
+        Ok(())
+    }
+}
+
 /// A full experiment config (CLI defaults + TOML override).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -157,6 +250,7 @@ pub struct ExperimentConfig {
     pub artifacts_dir: Option<String>,
     pub out_dir: String,
     pub engine: EngineConfig,
+    pub server: ServerConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -174,6 +268,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: None,
             out_dir: "results".into(),
             engine: EngineConfig::default(),
+            server: ServerConfig::default(),
         }
     }
 }
@@ -219,6 +314,37 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_int("engine.tile_rows") {
             cfg.engine.tile_rows = v as usize;
         }
+        if let Some(v) = doc.get_str("server.host") {
+            cfg.server.host = v.to_string();
+        }
+        if let Some(v) = doc.get_int("server.port") {
+            cfg.server.port =
+                u16::try_from(v).map_err(|_| format!("server.port {v} out of range 0..=65535"))?;
+        }
+        if let Some(v) = doc.get_int("server.accept_threads") {
+            cfg.server.accept_threads = v as usize;
+        }
+        if let Some(v) = doc.get_int("server.max_connections") {
+            cfg.server.max_connections = v as usize;
+        }
+        if let Some(v) = doc.get_bool("server.keep_alive") {
+            cfg.server.keep_alive = v;
+        }
+        if let Some(v) = doc.get_int("server.read_timeout_ms") {
+            cfg.server.read_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.get_int("server.max_body_kb") {
+            cfg.server.max_body_kb = v as usize;
+        }
+        if let Some(v) = doc.get_int("server.max_batch") {
+            cfg.server.max_batch = v as usize;
+        }
+        if let Some(v) = doc.get_int("server.max_wait_us") {
+            cfg.server.max_wait_us = v as u64;
+        }
+        if let Some(v) = doc.get_int("server.queue_depth") {
+            cfg.server.queue_depth = v as usize;
+        }
         if let Some(v) = doc.get_str("paths.artifacts") {
             cfg.artifacts_dir = Some(v.to_string());
         }
@@ -243,6 +369,7 @@ impl ExperimentConfig {
             return Err("sample counts must be positive".into());
         }
         self.engine.validate()?;
+        self.server.validate()?;
         // plan validity at this model/nblocks combination
         self.model.plan(self.nblocks)?;
         Ok(())
@@ -322,6 +449,43 @@ tile_rows = 8
         assert!(ExperimentConfig::from_toml("[engine]\ntile_batch = 3\n").is_err());
         let mut bad = ExperimentConfig::default();
         bad.engine.tile_rows = 7;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn server_config_parses_and_validates() {
+        let text = r#"
+[server]
+host = "0.0.0.0"
+port = 9000
+accept_threads = 16
+max_batch = 64
+max_wait_us = 500
+queue_depth = 512
+keep_alive = false
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.server.addr(), "0.0.0.0:9000");
+        assert_eq!(cfg.server.accept_threads, 16);
+        assert_eq!(cfg.server.max_batch, 64);
+        assert!(!cfg.server.keep_alive);
+        // unspecified keys keep defaults
+        assert_eq!(cfg.server.queue_depth, 512);
+        assert_eq!(cfg.server.max_connections, ServerConfig::default().max_connections);
+        // conversions carry the policy through
+        let bc = cfg.server.batcher_config();
+        assert_eq!(bc.max_batch, 64);
+        assert_eq!(bc.max_wait, std::time::Duration::from_micros(500));
+        let hc = cfg.server.http_config();
+        assert_eq!(hc.accept_threads, 16);
+        assert!(!hc.keep_alive);
+        // invalid combinations rejected
+        assert!(ExperimentConfig::from_toml("[server]\naccept_threads = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml("[server]\nqueue_depth = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml("[server]\nport = 70000\n").is_err());
+        assert!(ExperimentConfig::from_toml("[server]\nport = -1\n").is_err());
+        let mut bad = ExperimentConfig::default();
+        bad.server.max_batch = 0;
         assert!(bad.validate().is_err());
     }
 

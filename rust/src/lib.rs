@@ -19,14 +19,21 @@
 //! * [`runtime`] — PJRT loader/executor for AOT JAX artifacts (behind the
 //!   `pjrt` feature; stubs out gracefully offline)
 //! * [`train`] — AOT + native trainers, packed-engine evaluation
-//! * [`server`] — batching inference server; each worker reuses one
-//!   persistent pool across every batch it executes
+//! * [`server`] — serving stack: bounded-queue dynamic batcher, weighted
+//!   A/B router, Prometheus metrics, the dependency-free HTTP/1.1 front-end
+//!   (`server::http`), and the closed/open-loop load generator
+//!   (`server::loadgen`); each batcher worker reuses one persistent pool
+//!   across every batch it executes
 //! * [`config`] — TOML-subset config system, incl. [`config::EngineConfig`]
-//!   (pool sizing + kernel tile shape)
+//!   (pool sizing + kernel tile shape) and [`config::ServerConfig`]
+//!   (`[server]`: HTTP transport + batching policy)
 //! * [`util`] — bench harness, property testing, JSON, PGM, CRC32
 //!
 //! Engine notes — pool lifecycle, tile-shape choice, and the fusion
-//! contract — live in DESIGN.md §Engine at the repo root.
+//! contract — live in DESIGN.md §Engine; batching policy, backpressure/429
+//! semantics, and metric resolution bounds in DESIGN.md §Serving. The
+//! repo-level overview (quickstart, architecture map, bench index) is in
+//! README.md.
 pub mod compress;
 pub mod runtime;
 pub mod train;

@@ -15,6 +15,27 @@
 //! synchronization — the paper's "key enabler" (§1). No index arrays, no
 //! gathers: contrast with `csr.rs`.
 //!
+//! ```
+//! use mpdc::linalg::blockdiag_mm::BlockDiagMatrix;
+//! use mpdc::mask::mask::MpdMask;
+//! use mpdc::mask::prng::Xoshiro256pp;
+//!
+//! // a 6×6 MPD mask with 2 blocks; mask random weights, then re-block (eq. 2)
+//! let mut rng = Xoshiro256pp::seed_from_u64(1);
+//! let mask = MpdMask::generate(6, 6, 2, &mut rng);
+//! let w: Vec<f32> = (0..36).map(|i| i as f32 * 0.1).collect();
+//! let bd = BlockDiagMatrix::from_masked_weights(&mask, &mask.apply(&w));
+//! assert_eq!(bd.nnz(), mask.nnz()); // only block entries are stored
+//!
+//! // Y += X · Wᵀ over the packed blocks — and it is bit-identical to the
+//! // scalar reference kernel (canonical accumulation order)
+//! let x = vec![1.0f32; 6];
+//! let (mut y, mut y_ref) = (vec![0.0f32; 6], vec![0.0f32; 6]);
+//! bd.matmul_xt(&x, &mut y, 1);
+//! bd.matmul_xt_reference(&x, &mut y_ref, 1);
+//! assert_eq!(y, y_ref);
+//! ```
+//!
 //! ## Kernel design (see DESIGN.md §Engine)
 //!
 //! The per-block kernel is a cache-blocked, register-tiled micro-GEMM: a

@@ -5,6 +5,8 @@
 //!   decompose   run the Fig.-1 sub-graph-separation demo
 //!   report      compression accounting (Table-1 param columns) for a model
 //!   train       train a model with MPD masks via the AOT/PJRT runtime
+//!   serve       start the HTTP inference server (dense + MPD variants)
+//!   loadgen     drive closed/open-loop load against a running server
 //!   bench-fig1 / bench-fig4a / bench-fig4b / bench-fig5 / bench-table1 /
 //!   bench-speedup   regenerate the paper's figures/tables
 //!
@@ -34,6 +36,8 @@ fn main() {
         "decompose" => cmd_decompose(&flags),
         "report" => cmd_report(&flags),
         "train" => cmd_train(&flags),
+        "serve" => cmd_serve(&flags),
+        "loadgen" => cmd_loadgen(&flags),
         "bench-fig1" => cmd_fig1(&flags),
         "bench-fig4a" => cmd_fig4a(&flags),
         "bench-fig4b" => cmd_fig4b(&flags),
@@ -68,6 +72,12 @@ COMMANDS
   report         --model M --nblocks K          Table-1 parameter accounting
   train          --model M --nblocks K [--steps N] [--lr F] [--seed S]
                  [--train-samples N] [--test-samples N] [--config FILE]
+  serve          [--port P] [--steps N] [--split dense:0.2,mpd:0.8]
+                 [--config FILE]   quick-train a masked LeNet, register
+                 dense + csr + mpd variants, serve HTTP ([server] in TOML)
+  loadgen        [--host H] [--port P] [--variant V] [--mode closed|open]
+                 [--qps F] [--concurrency N] [--requests N] [--seed S]
+                 drive load against a running server; prints p50/p99 + req/s
   bench-fig1     [--out DIR]
   bench-fig4a    [--masks N] [--steps N] [--config FILE]
   bench-fig4b    [--masks N] [--out DIR]
@@ -259,6 +269,147 @@ fn cmd_train(flags: &Flags) -> anyhow::Result<()> {
     let ckpt = dir.join(format!("{}_k{}.mpdc", cfg.model.name(), cfg.nblocks));
     tr.save(&ckpt)?;
     println!("checkpoint: {}", ckpt.display());
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
+    use mpdc::compress::compressor::MpdCompressor;
+    use mpdc::compress::plan::SparsityPlan;
+    use mpdc::data::dataset::Dataset;
+    use mpdc::data::synth::{SynthImages, SynthSpec};
+    use mpdc::linalg::csr::Csr;
+    use mpdc::mask::prng::Xoshiro256pp;
+    use mpdc::nn::mlp::Mlp;
+    use mpdc::server::{spawn, CsrBackend, HttpServer, MlpBackend, PackedBackend, Router};
+    use mpdc::train::native_trainer::fit_native;
+    use std::sync::Arc;
+
+    let mut cfg = cfg_from_flags(flags)?;
+    if let Some(p) = flags.get("port") {
+        cfg.server.port = p.parse()?;
+    }
+    let steps: usize = flags.get("steps").map(|s| s.parse()).transpose()?.unwrap_or(150);
+
+    // Quick native training on synthetic MNIST-like data: enough to make the
+    // three representations meaningfully identical, fast enough for a CLI.
+    println!("training masked LeNet-300-100 natively ({steps} steps, {} blocks)…", cfg.nblocks);
+    let spec = SynthSpec::mnist_like();
+    let mut train = Dataset::from_synth(&SynthImages::generate(spec, 1500, cfg.seed, 0));
+    train.normalize();
+    let comp = MpdCompressor::new(SparsityPlan::lenet300(cfg.nblocks), cfg.seed);
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xA5);
+    let mut mlp = Mlp::new(&[784, 300, 100, 10], &mut rng).with_masks(comp.masks.clone());
+    let tc = TrainConfig { steps, lr: 0.08, log_every: (steps / 4).max(1), seed: cfg.seed, ..Default::default() };
+    fit_native(&mut mlp, &train, 50, &tc);
+
+    // Three serving representations of the same trained weights.
+    let weights: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.w.clone()).collect();
+    let biases: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.b.clone()).collect();
+    let packed = comp.build_engine(&weights, &biases, &cfg.engine).map_err(|e| anyhow::anyhow!(e))?;
+    let csr_layers: Vec<(Csr, Vec<f32>)> = weights
+        .iter()
+        .zip(&biases)
+        .zip(&comp.plan.layers)
+        .map(|((w, b), lp)| (Csr::from_dense(w, lp.out_dim, lp.in_dim), b.clone()))
+        .collect();
+
+    let bc = cfg.server.batcher_config();
+    let mut router = Router::new();
+    let (h, _w1) = spawn(MlpBackend::new(mlp), bc);
+    router.register("dense", h);
+    let (h, _w2) = spawn(CsrBackend { layers: csr_layers, feature_dim: 784, out_dim: 10 }, bc);
+    router.register("csr", h);
+    let (h, _w3) = spawn(PackedBackend { model: packed }, bc);
+    router.register("mpd", h);
+
+    if let Some(split) = flags.get("split") {
+        let parsed: Vec<(String, f64)> = split
+            .split(',')
+            .map(|pair| {
+                let (name, w) = pair
+                    .split_once(':')
+                    .ok_or_else(|| anyhow::anyhow!("bad --split entry {pair:?} (want name:weight)"))?;
+                Ok((name.trim().to_string(), w.trim().parse::<f64>()?))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let as_refs: Vec<(&str, f64)> = parsed.iter().map(|(n, w)| (n.as_str(), *w)).collect();
+        router.set_split(&as_refs).map_err(|e| anyhow::anyhow!(e))?;
+        println!("weighted split: {split}");
+    }
+
+    let server = HttpServer::start(Arc::new(router), cfg.server.http_config())?;
+    println!("serving dense/csr/mpd on {}", server.url());
+    println!("  curl {}/healthz", server.url());
+    println!("  curl {}/variants", server.url());
+    println!("  curl {}/metrics", server.url());
+    println!("  curl -X POST {}/infer/mpd -d '{{\"input\":[0.0, …×784]}}'", server.url());
+    println!("  mpdc loadgen --port {} --variant mpd", server.addr().port());
+    server.join();
+    Ok(())
+}
+
+fn cmd_loadgen(flags: &Flags) -> anyhow::Result<()> {
+    use mpdc::server::loadgen::{self, Arrival, LoadgenConfig};
+    use std::net::ToSocketAddrs;
+
+    let host = flags.get("host").map(String::as_str).unwrap_or("127.0.0.1");
+    let port: u16 = flags.get("port").map(|s| s.parse()).transpose()?.unwrap_or(8077);
+    let addr = format!("{host}:{port}")
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("cannot resolve {host}:{port}"))?;
+    let variant = flags.get("variant").cloned().unwrap_or_else(|| "mpd".into());
+    let mode = flags.get("mode").map(String::as_str).unwrap_or("closed");
+    let qps: f64 = flags.get("qps").map(|s| s.parse()).transpose()?.unwrap_or(500.0);
+    let arrival = match mode {
+        "closed" => Arrival::Closed,
+        "open" => Arrival::Poisson { target_qps: qps },
+        other => anyhow::bail!("unknown --mode {other:?} (closed|open)"),
+    };
+    let cfg = LoadgenConfig {
+        concurrency: flags.get("concurrency").map(|s| s.parse()).transpose()?.unwrap_or(4),
+        requests: flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(2000),
+        arrival,
+        seed: flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42),
+    };
+
+    let variants = loadgen::discover_variants(addr).map_err(|e| anyhow::anyhow!(e))?;
+    let Some((_, feature_dim, _)) = variants.iter().find(|(n, _, _)| *n == variant) else {
+        anyhow::bail!(
+            "variant {variant:?} not served (have: {})",
+            variants.iter().map(|(n, _, _)| n.as_str()).collect::<Vec<_>>().join(", ")
+        );
+    };
+    println!("driving {mode} load at http://{addr}/infer/{variant} ({} features)…", feature_dim);
+    let report = loadgen::run_http(addr, &variant, *feature_dim, &cfg);
+    let mut t = Table::new(&["variant", "mode", "sent", "ok", "429", "err", "req/s", "p50 µs", "p90 µs", "p99 µs"]);
+    t.row(&[
+        variant.clone(),
+        mode.to_string(),
+        report.sent.to_string(),
+        report.ok.to_string(),
+        report.rejected.to_string(),
+        report.errors.to_string(),
+        format!("{:.0}", report.throughput_rps()),
+        format!("{:.0}", report.latency.percentile_us(0.5)),
+        format!("{:.0}", report.latency.percentile_us(0.9)),
+        format!("{:.0}", report.latency.percentile_us(0.99)),
+    ]);
+    println!("{}", t.render());
+    mpdc::util::json::append_jsonl(
+        std::path::Path::new("results/serve_loadgen.jsonl"),
+        &Json::obj(vec![
+            ("variant", Json::str(variant)),
+            ("mode", Json::str(mode)),
+            ("sent", Json::num(report.sent as f64)),
+            ("ok", Json::num(report.ok as f64)),
+            ("rejected", Json::num(report.rejected as f64)),
+            ("errors", Json::num(report.errors as f64)),
+            ("rps", Json::num(report.throughput_rps())),
+            ("p50_us", Json::num(report.latency.percentile_us(0.5))),
+            ("p99_us", Json::num(report.latency.percentile_us(0.99))),
+        ]),
+    )?;
     Ok(())
 }
 

@@ -7,6 +7,16 @@
 //! executed on an [`InferBackend`]. MPDCompress's block-diagonal layers make
 //! the backend's per-batch cost ~1/c of dense — the batcher is how that
 //! translates into serving throughput.
+//!
+//! ```
+//! use mpdc::server::{spawn, BatcherConfig, ConstBackend};
+//!
+//! let backend = ConstBackend { dim: 2, out: 1, value: 7.0 };
+//! let (handle, worker) = spawn(backend, BatcherConfig::default());
+//! assert_eq!(handle.infer(vec![0.0, 0.0]).unwrap(), vec![7.0]);
+//! drop(handle); // dropping every handle disconnects the queue…
+//! worker.join().unwrap(); // …and the worker exits cleanly
+//! ```
 
 use crate::server::metrics::ServerMetrics;
 use std::sync::atomic::Ordering;
@@ -57,12 +67,15 @@ pub struct BatcherHandle {
     out_dim: usize,
 }
 
-/// Error returned to callers.
+/// Error returned to callers. The HTTP front-end maps each variant to a
+/// status code (see `server/http.rs`): `Overloaded` → 429, `UnknownVariant`
+/// → 404, `BadInput` → 400, `Closed` → 503, `Backend` → 500.
 #[derive(Debug, PartialEq)]
 pub enum ServeError {
     Overloaded,
     Closed,
     BadInput { got: usize, expected: usize },
+    UnknownVariant(String),
     Backend(String),
 }
 
@@ -74,6 +87,7 @@ impl std::fmt::Display for ServeError {
             ServeError::BadInput { got, expected } => {
                 write!(f, "bad input size: got {got}, expected {expected}")
             }
+            ServeError::UnknownVariant(name) => write!(f, "unknown variant {name}"),
             ServeError::Backend(msg) => write!(f, "backend failure: {msg}"),
         }
     }
@@ -211,6 +225,105 @@ where
 // ---------------------------------------------------------------------------
 // backends
 // ---------------------------------------------------------------------------
+
+/// Fixed-output backend: every sample maps to `[value; out]`. Useful for
+/// doctests, wiring checks, and load-generator self-tests where the serving
+/// plumbing — not the model — is under scrutiny.
+pub struct ConstBackend {
+    pub dim: usize,
+    pub out: usize,
+    pub value: f32,
+}
+
+impl InferBackend for ConstBackend {
+    fn feature_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out
+    }
+
+    fn max_batch(&self) -> usize {
+        64
+    }
+
+    fn infer(&mut self, _x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(vec![self.value; batch * self.out])
+    }
+}
+
+/// Backend over the native dense [`crate::nn::mlp::Mlp`] — the uncompressed
+/// baseline variant in A/B serving comparisons against [`PackedBackend`].
+pub struct MlpBackend {
+    pub mlp: crate::nn::mlp::Mlp,
+    pub max_batch: usize,
+}
+
+impl MlpBackend {
+    pub fn new(mlp: crate::nn::mlp::Mlp) -> Self {
+        Self { mlp, max_batch: 256 }
+    }
+}
+
+impl InferBackend for MlpBackend {
+    fn feature_dim(&self) -> usize {
+        self.mlp.dims[0]
+    }
+
+    fn out_dim(&self) -> usize {
+        *self.mlp.dims.last().unwrap()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(self.mlp.forward(x, batch))
+    }
+}
+
+/// Backend over the CSR (irregular-sparse) representation of the same masked
+/// weights — the §3.3 comparator variant in A/B serving demos. ReLU between
+/// layers, none after the last.
+pub struct CsrBackend {
+    /// Per-layer `(weights, bias)`.
+    pub layers: Vec<(crate::linalg::csr::Csr, Vec<f32>)>,
+    pub feature_dim: usize,
+    pub out_dim: usize,
+}
+
+impl InferBackend for CsrBackend {
+    fn feature_dim(&self) -> usize {
+        self.feature_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    fn max_batch(&self) -> usize {
+        256
+    }
+
+    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        let mut act = x.to_vec();
+        let n = self.layers.len();
+        for (i, (w, b)) in self.layers.iter().enumerate() {
+            let mut y = vec![0.0f32; batch * w.rows];
+            for bi in 0..batch {
+                y[bi * w.rows..(bi + 1) * w.rows].copy_from_slice(b);
+            }
+            w.spmm_xt(&act, &mut y, batch);
+            if i + 1 < n {
+                y.iter_mut().for_each(|v| *v = v.max(0.0));
+            }
+            act = y;
+        }
+        Ok(act)
+    }
+}
 
 /// Backend over the native packed block-diagonal model (MPD inference).
 ///

@@ -1,0 +1,671 @@
+//! Dependency-free HTTP/1.1 front-end over the router → batcher serving core.
+//!
+//! This is the layer that turns the in-process engine into a system a client
+//! can hit over a socket: a `std::net::TcpListener` shared by a **fixed
+//! accept-thread pool** (each worker accepts a connection and serves it with
+//! keep-alive until close/timeout, so the pool size bounds concurrent
+//! connections), no async runtime, no external crates.
+//!
+//! Endpoints:
+//!
+//! | method & path          | behavior                                               |
+//! |------------------------|--------------------------------------------------------|
+//! | `POST /infer/{variant}`| body `{"input": [f32…]}` → `{"variant", "output"}`     |
+//! | `POST /infer`          | weighted A/B split (requires [`Router::set_split`])    |
+//! | `GET /metrics`         | Prometheus text format over all variants               |
+//! | `GET /healthz`         | liveness probe                                         |
+//! | `GET /variants`        | variant names + feature/output dims (client discovery) |
+//!
+//! Error mapping follows [`ServeError`]: bounded-queue backpressure surfaces
+//! as **429 Too Many Requests** (the batcher rejected, nothing was queued),
+//! unknown variants as **404**, malformed bodies as **400**, oversized bodies
+//! as **413**, backend failures as **500**, shutdown as **503**.
+//!
+//! ```no_run
+//! use mpdc::server::{spawn, BatcherConfig, ConstBackend, HttpConfig, HttpServer, Router};
+//! use std::sync::Arc;
+//!
+//! let mut router = Router::new();
+//! let (h, _worker) = spawn(ConstBackend { dim: 4, out: 2, value: 1.0 }, BatcherConfig::default());
+//! router.register("const", h);
+//! let server = HttpServer::start(Arc::new(router), HttpConfig::default()).unwrap();
+//! println!("curl -X POST {}/infer/const -d '{{\"input\":[0,0,0,0]}}'", server.url());
+//! server.join(); // serve until the process is killed
+//! ```
+
+use crate::server::batcher::ServeError;
+use crate::server::metrics;
+use crate::server::router::Router;
+use crate::util::json::Json;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Front-end knobs. See `[server]` in [`crate::config::ServerConfig`] for the
+/// TOML-facing equivalent.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests, benches).
+    pub addr: String,
+    /// Fixed worker count: each thread accepts + serves one connection at a
+    /// time, so this is the hard bound on concurrently-served connections.
+    pub accept_threads: usize,
+    /// Secondary cap on concurrently-served connections (excess gets 503);
+    /// only binds when set below `accept_threads`.
+    pub max_connections: usize,
+    /// Honor HTTP keep-alive (`false` forces `Connection: close`).
+    pub keep_alive: bool,
+    /// Per-read socket timeout; an idle keep-alive connection is closed after
+    /// this long, freeing its worker.
+    pub read_timeout: Duration,
+    /// Request bodies above this return 413.
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:8077".into(),
+            accept_threads: 8,
+            max_connections: 64,
+            keep_alive: true,
+            read_timeout: Duration::from_secs(5),
+            max_body_bytes: 1 << 20,
+        }
+    }
+}
+
+/// Front-end (transport-level) counters, served alongside the per-variant
+/// batcher metrics on `/metrics`.
+#[derive(Default)]
+pub struct FrontendStats {
+    /// Connections accepted over the server's lifetime.
+    pub connections: AtomicU64,
+    /// Connections currently being served.
+    pub active: AtomicUsize,
+    /// HTTP requests parsed (all endpoints, all statuses).
+    pub http_requests: AtomicU64,
+    /// Requests rejected before routing (malformed, oversized).
+    pub bad_requests: AtomicU64,
+}
+
+impl FrontendStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, help, v) in [
+            ("mpdc_http_connections_total", "Connections accepted.", self.connections.load(Ordering::Relaxed)),
+            ("mpdc_http_requests_total", "HTTP requests parsed.", self.http_requests.load(Ordering::Relaxed)),
+            ("mpdc_http_bad_requests_total", "Requests rejected before routing.", self.bad_requests.load(Ordering::Relaxed)),
+        ] {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        let _ = writeln!(out, "# HELP mpdc_http_active_connections Connections currently served.");
+        let _ = writeln!(out, "# TYPE mpdc_http_active_connections gauge");
+        let _ = writeln!(out, "mpdc_http_active_connections {}", self.active.load(Ordering::Relaxed));
+        out
+    }
+}
+
+/// A running HTTP front-end. Dropping the handle does **not** stop the
+/// server; call [`HttpServer::shutdown`] (tests) or [`HttpServer::join`]
+/// (serve-forever binaries).
+pub struct HttpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    stats: Arc<FrontendStats>,
+}
+
+impl HttpServer {
+    /// Bind and spawn the accept-thread pool. The router is shared read-only
+    /// across workers — register variants and configure splits *before*
+    /// starting the server.
+    pub fn start(router: Arc<Router>, cfg: HttpConfig) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(cfg.addr.as_str())?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(FrontendStats::new());
+        let nthreads = cfg.accept_threads.max(1);
+        let mut joins = Vec::with_capacity(nthreads);
+        for t in 0..nthreads {
+            let listener = listener.try_clone()?;
+            let router = router.clone();
+            let shutdown = shutdown.clone();
+            let stats = stats.clone();
+            let cfg = cfg.clone();
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("mpdc-http-{t}"))
+                    .spawn(move || accept_loop(&listener, &router, &cfg, &shutdown, &stats))
+                    .expect("spawn http worker"),
+            );
+        }
+        Ok(Self { addr, shutdown, joins, stats })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    pub fn stats(&self) -> &FrontendStats {
+        &self.stats
+    }
+
+    /// Stop accepting, wake blocked workers, and join the pool. Workers
+    /// serving a live keep-alive connection exit at the next request
+    /// boundary or read timeout, whichever comes first.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Each no-op connection unblocks one worker parked in accept().
+        for _ in 0..self.joins.len() {
+            let _ = TcpStream::connect(self.addr);
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+
+    /// Block the calling thread for the server's lifetime (`mpdc serve`).
+    pub fn join(mut self) {
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    router: &Router,
+    cfg: &HttpConfig,
+    shutdown: &AtomicBool,
+    stats: &FrontendStats,
+) {
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let mut stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                // Transient failures (EMFILE under fd exhaustion, EINTR…):
+                // back off briefly instead of busy-spinning the whole pool.
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        stats.connections.fetch_add(1, Ordering::Relaxed);
+        let active = stats.active.fetch_add(1, Ordering::Relaxed) + 1;
+        if active > cfg.max_connections {
+            let _ = write_response(&mut stream, &Response::text(503, "connection limit reached"), false);
+            stats.active.fetch_sub(1, Ordering::Relaxed);
+            continue;
+        }
+        handle_connection(stream, router, cfg, shutdown, stats);
+        stats.active.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    router: &Router,
+    cfg: &HttpConfig,
+    shutdown: &AtomicBool,
+    stats: &FrontendStats,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    // Residual buffer across keep-alive requests (supports pipelining).
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let req = match read_request(&mut stream, &mut buf, cfg.max_body_bytes) {
+            Ok(Some(r)) => r,
+            Ok(None) => return, // clean close between requests
+            Err(ReadError::Timeout) => return, // idle keep-alive expired
+            Err(ReadError::TooLarge) => {
+                stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                let _ = write_response(&mut stream, &Response::text(413, "payload too large"), false);
+                return;
+            }
+            Err(ReadError::Malformed(msg)) => {
+                stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                let _ = write_response(&mut stream, &Response::text(400, &msg), false);
+                return;
+            }
+            Err(ReadError::Io) => return,
+        };
+        stats.http_requests.fetch_add(1, Ordering::Relaxed);
+        let keep = cfg.keep_alive && req.keep_alive;
+        let resp = route(router, stats, &req);
+        // HEAD: full headers (including the would-be Content-Length), no body.
+        let head_only = req.method == "HEAD";
+        if write_response_inner(&mut stream, &resp, keep, head_only).is_err() || !keep {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// request parsing
+// ---------------------------------------------------------------------------
+
+struct Request {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    body: Vec<u8>,
+}
+
+enum ReadError {
+    /// Socket timed out with no request in flight.
+    Timeout,
+    /// Head or declared body exceeds the configured limits.
+    TooLarge,
+    /// Syntactically invalid request.
+    Malformed(String),
+    /// Connection-level failure (reset, truncation mid-request, …).
+    Io,
+}
+
+const MAX_HEAD_BYTES: usize = 64 * 1024;
+
+pub(crate) fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Fill `buf` from `stream` until `want(buf)` is satisfied. Returns false on
+/// clean EOF before the predicate holds.
+fn read_until<S: Read>(
+    stream: &mut S,
+    buf: &mut Vec<u8>,
+    mut want: impl FnMut(&[u8]) -> bool,
+) -> Result<bool, ReadError> {
+    let mut tmp = [0u8; 4096];
+    while !want(buf) {
+        match stream.read(&mut tmp) {
+            Ok(0) => return Ok(false),
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                return Err(if buf.is_empty() { ReadError::Timeout } else { ReadError::Io });
+            }
+            Err(_) => return Err(ReadError::Io),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one HTTP/1.1 request. `buf` carries residual bytes between calls on
+/// the same connection. `Ok(None)` = clean EOF with no request started.
+fn read_request<S: Read + Write>(
+    stream: &mut S,
+    buf: &mut Vec<u8>,
+    max_body: usize,
+) -> Result<Option<Request>, ReadError> {
+    // --- head ---
+    let complete = read_until(stream, buf, |b| {
+        find_subsequence(b, b"\r\n\r\n").is_some() || b.len() > MAX_HEAD_BYTES
+    })?;
+    if buf.len() > MAX_HEAD_BYTES && find_subsequence(buf, b"\r\n\r\n").is_none() {
+        return Err(ReadError::TooLarge);
+    }
+    if !complete {
+        return if buf.is_empty() {
+            Ok(None)
+        } else {
+            Err(ReadError::Malformed("truncated request head".into()))
+        };
+    }
+    let head_end = find_subsequence(buf, b"\r\n\r\n").expect("loop ensures terminator");
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || !path.starts_with('/') || !version.starts_with("HTTP/") {
+        return Err(ReadError::Malformed(format!("bad request line {request_line:?}")));
+    }
+    let mut content_length = 0usize;
+    let mut connection = String::new();
+    let mut expect_continue = false;
+    for line in lines {
+        let Some((k, v)) = line.split_once(':') else { continue };
+        let v = v.trim();
+        match k.trim().to_ascii_lowercase().as_str() {
+            "content-length" => {
+                content_length =
+                    v.parse().map_err(|_| ReadError::Malformed(format!("bad content-length {v:?}")))?;
+            }
+            "connection" => connection = v.to_ascii_lowercase(),
+            "expect" => expect_continue = v.eq_ignore_ascii_case("100-continue"),
+            _ => {}
+        }
+    }
+    if content_length > max_body {
+        // Drain a bounded amount of the in-flight body first: closing with
+        // unread data in the receive buffer sends an RST that can destroy
+        // the 413 response before the client reads it.
+        let cap = (head_end + 4).saturating_add(content_length.min(64 * 1024));
+        let _ = read_until(stream, buf, |b| b.len() >= cap);
+        buf.clear();
+        return Err(ReadError::TooLarge);
+    }
+    if expect_continue && buf.len() < head_end + 4 + content_length {
+        // client is waiting for the interim response before sending the body
+        let _ = stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
+        let _ = stream.flush();
+    }
+    // --- body ---
+    let total = head_end + 4 + content_length;
+    let complete = read_until(stream, buf, |b| b.len() >= total)?;
+    if !complete {
+        return Err(ReadError::Malformed("truncated request body".into()));
+    }
+    let body = buf[head_end + 4..total].to_vec();
+    buf.drain(..total);
+    let keep_alive = match connection.as_str() {
+        "close" => false,
+        "keep-alive" => true,
+        _ => version.eq_ignore_ascii_case("HTTP/1.1"),
+    };
+    Ok(Some(Request { method, path, keep_alive, body }))
+}
+
+// ---------------------------------------------------------------------------
+// responses + routing
+// ---------------------------------------------------------------------------
+
+struct Response {
+    status: u16,
+    content_type: &'static str,
+    body: String,
+}
+
+impl Response {
+    fn json(status: u16, v: &Json) -> Self {
+        Self { status, content_type: "application/json", body: v.to_string() }
+    }
+
+    fn error(status: u16, msg: &str) -> Self {
+        Self::json(status, &Json::obj(vec![("error", Json::str(msg))]))
+    }
+
+    fn text(status: u16, body: &str) -> Self {
+        if status >= 400 {
+            return Self::error(status, body);
+        }
+        Self { status, content_type: "text/plain; charset=utf-8", body: body.to_string() }
+    }
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+fn write_response<W: Write>(stream: &mut W, resp: &Response, keep_alive: bool) -> std::io::Result<()> {
+    write_response_inner(stream, resp, keep_alive, false)
+}
+
+fn write_response_inner<W: Write>(
+    stream: &mut W,
+    resp: &Response,
+    keep_alive: bool,
+    head_only: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    if !head_only {
+        stream.write_all(resp.body.as_bytes())?;
+    }
+    stream.flush()
+}
+
+fn route(router: &Router, stats: &FrontendStats, req: &Request) -> Response {
+    // HEAD is GET with the body suppressed at write time (RFC 9110 §9.3.2);
+    // probes commonly use `HEAD /healthz`.
+    let method = if req.method == "HEAD" { "GET" } else { req.method.as_str() };
+    match (method, req.path.as_str()) {
+        ("GET", "/healthz") => Response::json(200, &Json::obj(vec![("status", Json::str("ok"))])),
+        ("GET", "/variants") => variants_response(router),
+        ("GET", "/metrics") => {
+            let mut page = metrics::render_prometheus(&router.metrics_handles());
+            page.push_str(&stats.render_prometheus());
+            Response { status: 200, content_type: "text/plain; version=0.0.4", body: page }
+        }
+        ("POST", "/infer") => {
+            if !router.has_split() {
+                return Response::error(404, "no traffic split configured; POST /infer/{variant}");
+            }
+            infer_response(router, None, &req.body)
+        }
+        ("POST", path) => match path.strip_prefix("/infer/") {
+            Some(variant) if !variant.is_empty() => infer_response(router, Some(variant), &req.body),
+            _ => Response::error(404, "not found"),
+        },
+        ("GET", _) => Response::error(404, "not found"),
+        _ => Response::error(405, "method not allowed"),
+    }
+}
+
+fn variants_response(router: &Router) -> Response {
+    let items: Vec<Json> = router
+        .variant_names()
+        .into_iter()
+        .map(|name| {
+            let h = router.get(&name).expect("listed variant exists");
+            Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("feature_dim", Json::num(h.feature_dim() as f64)),
+                ("out_dim", Json::num(h.out_dim() as f64)),
+            ])
+        })
+        .collect();
+    Response::json(200, &Json::obj(vec![("variants", Json::Arr(items))]))
+}
+
+/// Parse `{"input": [f32…]}` and dispatch to an explicit variant or the
+/// weighted split. JSON float round-trip is exact for f32 (values are
+/// serialized as shortest-roundtrip f64), so the HTTP path adds no numeric
+/// error over direct in-process inference.
+fn infer_response(router: &Router, variant: Option<&str>, body: &[u8]) -> Response {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return Response::error(400, "body is not UTF-8"),
+    };
+    let parsed = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, &format!("invalid JSON body: {e}")),
+    };
+    let Some(arr) = parsed.get("input").and_then(|j| j.as_arr()) else {
+        return Response::error(400, "body must be {\"input\": [number, ...]}");
+    };
+    let mut x = Vec::with_capacity(arr.len());
+    for item in arr {
+        match item.as_f64() {
+            Some(v) => x.push(v as f32),
+            None => return Response::error(400, "input must contain only numbers"),
+        }
+    }
+    let result = match variant {
+        Some(v) => router.infer(v, x).map(|y| (v.to_string(), y)),
+        None => router.infer_weighted(x),
+    };
+    match result {
+        Ok((name, y)) => {
+            let out: Vec<Json> = y.iter().map(|&v| Json::num(v as f64)).collect();
+            Response::json(
+                200,
+                &Json::obj(vec![("variant", Json::str(name)), ("output", Json::Arr(out))]),
+            )
+        }
+        Err(e) => {
+            let status = match &e {
+                ServeError::Overloaded => 429,
+                ServeError::UnknownVariant(_) => 404,
+                ServeError::BadInput { .. } => 400,
+                ServeError::Closed => 503,
+                ServeError::Backend(_) => 500,
+            };
+            Response::error(status, &e.to_string())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// In-memory `Read + Write` pair: reads from `input`, appends to `output`.
+    struct Duplex {
+        input: std::io::Cursor<Vec<u8>>,
+        output: Vec<u8>,
+    }
+
+    impl Duplex {
+        fn new(input: &[u8]) -> Self {
+            Self { input: std::io::Cursor::new(input.to_vec()), output: Vec::new() }
+        }
+    }
+
+    impl Read for Duplex {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.input.read(buf)
+        }
+    }
+
+    impl Write for Duplex {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.output.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn parses_post_with_body_and_keep_alive() {
+        let raw = b"POST /infer/mpd HTTP/1.1\r\nHost: x\r\nContent-Length: 15\r\n\r\n{\"input\":[1,2]}";
+        let mut s = Duplex::new(raw);
+        let mut buf = Vec::new();
+        let req = read_request(&mut s, &mut buf, 1 << 20).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/infer/mpd");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(req.body, b"{\"input\":[1,2]}");
+        assert!(buf.is_empty(), "buffer fully consumed");
+    }
+
+    #[test]
+    fn parses_pipelined_requests_and_connection_close() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\nGET /variants HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut s = Duplex::new(raw);
+        let mut buf = Vec::new();
+        let r1 = read_request(&mut s, &mut buf, 1024).unwrap().unwrap();
+        assert_eq!(r1.path, "/healthz");
+        assert!(r1.keep_alive);
+        let r2 = read_request(&mut s, &mut buf, 1024).unwrap().unwrap();
+        assert_eq!(r2.path, "/variants");
+        assert!(!r2.keep_alive, "Connection: close honored");
+        assert!(read_request(&mut s, &mut buf, 1024).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn rejects_oversized_and_malformed() {
+        let raw = b"POST /infer HTTP/1.1\r\nContent-Length: 999\r\n\r\n";
+        let mut s = Duplex::new(raw);
+        let mut buf = Vec::new();
+        assert!(matches!(read_request(&mut s, &mut buf, 100), Err(ReadError::TooLarge)));
+
+        let raw = b"NOT A REQUEST\r\n\r\n";
+        let mut s = Duplex::new(raw);
+        let mut buf = Vec::new();
+        assert!(matches!(read_request(&mut s, &mut buf, 100), Err(ReadError::Malformed(_))));
+    }
+
+    #[test]
+    fn response_bytes_have_content_length() {
+        let mut s = Duplex::new(b"");
+        write_response(&mut s, &Response::text(200, "hello"), true).unwrap();
+        let text = String::from_utf8(s.output).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 5\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\nhello"));
+
+        // HEAD: same headers (incl. Content-Length of the would-be body),
+        // no body bytes — keep-alive framing stays in sync
+        let mut s = Duplex::new(b"");
+        write_response_inner(&mut s, &Response::text(200, "hello"), true, true).unwrap();
+        let text = String::from_utf8(s.output).unwrap();
+        assert!(text.contains("Content-Length: 5\r\n"));
+        assert!(text.ends_with("\r\n\r\n"), "HEAD response must not carry a body");
+    }
+
+    #[test]
+    fn routing_on_empty_router() {
+        // full error mapping is exercised end-to-end in tests/serve_http.rs;
+        // this covers the routes that need no live batcher
+        let router = Router::new();
+        let stats = FrontendStats::new();
+        let req = |method: &str, path: &str, body: &[u8]| Request {
+            method: method.into(),
+            path: path.into(),
+            keep_alive: true,
+            body: body.to_vec(),
+        };
+        assert_eq!(route(&router, &stats, &req("GET", "/healthz", b"")).status, 200);
+        assert_eq!(route(&router, &stats, &req("HEAD", "/healthz", b"")).status, 200);
+        assert_eq!(route(&router, &stats, &req("GET", "/variants", b"")).status, 200);
+        assert_eq!(route(&router, &stats, &req("GET", "/metrics", b"")).status, 200);
+        assert_eq!(route(&router, &stats, &req("GET", "/nope", b"")).status, 404);
+        assert_eq!(route(&router, &stats, &req("DELETE", "/healthz", b"")).status, 405);
+        // unknown variant → 404; bad JSON → 400; no split → 404
+        let r = route(&router, &stats, &req("POST", "/infer/nope", b"{\"input\":[1]}"));
+        assert_eq!(r.status, 404);
+        let r = route(&router, &stats, &req("POST", "/infer/nope", b"not json"));
+        assert_eq!(r.status, 400);
+        let r = route(&router, &stats, &req("POST", "/infer", b"{\"input\":[1]}"));
+        assert_eq!(r.status, 404);
+        assert!(r.body.contains("no traffic split"));
+    }
+}

@@ -1,14 +1,27 @@
 //! Serving metrics: lock-light latency histogram + throughput counters.
 //!
 //! The histogram is log-bucketed (≈7% resolution) over 1 µs – 100 s, which is
-//! plenty for p50/p90/p99 reporting in the §3.3 serving benches.
+//! plenty for p50/p90/p99 reporting in the §3.3 serving benches. Values past
+//! the top of the range saturate into the last bucket (the true maximum is
+//! still tracked separately by [`Histogram::max_us`]).
+//!
+//! [`render_prometheus`] turns a set of per-variant [`ServerMetrics`] into
+//! the Prometheus text exposition format served by `GET /metrics`
+//! ([`crate::server::http`]). The 256 internal buckets are down-sampled to
+//! 32 cumulative `le` bounds per histogram — exact, because the exposition
+//! format is cumulative.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 const BUCKETS: usize = 256;
 const MIN_NS: f64 = 1_000.0; // 1 µs
 const GROWTH: f64 = 1.0746; // min * growth^255 ≈ 100 s
+
+/// Internal buckets folded per rendered Prometheus bucket (256 / 8 = 32
+/// `le` bounds per histogram — cumulative counts, so folding loses nothing).
+const PROM_STRIDE: usize = 8;
 
 /// Log-bucketed latency histogram; all operations are atomic.
 pub struct Histogram {
@@ -81,6 +94,30 @@ impl Histogram {
         }
         self.max_us()
     }
+
+    /// Append this histogram in Prometheus text format: 32 cumulative
+    /// `_bucket` lines (`le` in seconds), then `_sum` and `_count`. The
+    /// `+Inf` bucket and `_count` both use the summed bucket counts, so a
+    /// scrape is internally consistent even while recording continues.
+    fn write_prometheus(&self, out: &mut String, name: &str, labels: &str) {
+        use std::fmt::Write as _;
+        let mut cum = 0u64;
+        let groups = BUCKETS / PROM_STRIDE;
+        for g in 0..groups {
+            for b in g * PROM_STRIDE..(g + 1) * PROM_STRIDE {
+                cum += self.buckets[b].load(Ordering::Relaxed);
+            }
+            if g + 1 == groups {
+                let _ = writeln!(out, "{name}_bucket{{{labels},le=\"+Inf\"}} {cum}");
+            } else {
+                let le = Self::bucket_floor((g + 1) * PROM_STRIDE) / 1e9;
+                let _ = writeln!(out, "{name}_bucket{{{labels},le=\"{le:.9}\"}} {cum}");
+            }
+        }
+        let sum_s = self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9;
+        let _ = writeln!(out, "{name}_sum{{{labels}}} {sum_s}");
+        let _ = writeln!(out, "{name}_count{{{labels}}} {cum}");
+    }
 }
 
 impl Default for Histogram {
@@ -140,6 +177,52 @@ impl Default for ServerMetrics {
     }
 }
 
+/// Escape a Prometheus label value (`\`, `"`, newline).
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render per-variant [`ServerMetrics`] as a Prometheus text-format page —
+/// the body of `GET /metrics`. One metric family per counter/histogram,
+/// with a `variant` label per registered model variant.
+pub fn render_prometheus(variants: &[(String, Arc<ServerMetrics>)]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let counters = [
+        ("mpdc_requests_total", "Requests admitted to a variant's batcher handle."),
+        ("mpdc_rejected_total", "Requests rejected by bounded-queue backpressure (HTTP 429)."),
+        ("mpdc_batches_total", "Batches executed by the worker."),
+        ("mpdc_batched_requests_total", "Requests that reached a batch (ok or backend error)."),
+    ];
+    for (name, help) in counters {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        for (variant, m) in variants {
+            let v = match name {
+                "mpdc_requests_total" => m.requests.load(Ordering::Relaxed),
+                "mpdc_rejected_total" => m.rejected.load(Ordering::Relaxed),
+                "mpdc_batches_total" => m.batches.load(Ordering::Relaxed),
+                _ => m.batched_requests.load(Ordering::Relaxed),
+            };
+            let _ = writeln!(out, "{name}{{variant=\"{}\"}} {v}", escape_label(variant));
+        }
+    }
+    let histograms = [
+        ("mpdc_latency_seconds", "End-to-end request latency (enqueue to response)."),
+        ("mpdc_queue_wait_seconds", "Time spent queued before batch assembly."),
+    ];
+    for (name, help) in histograms {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        for (variant, m) in variants {
+            let h = if name == "mpdc_latency_seconds" { &m.latency } else { &m.queue_wait };
+            let labels = format!("variant=\"{}\"", escape_label(variant));
+            h.write_prometheus(&mut out, name, &labels);
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +267,84 @@ mod tests {
         m.batched_requests.fetch_add(7, Ordering::Relaxed);
         assert!((m.mean_batch_size() - 3.5).abs() < 1e-9);
         assert!(m.summary().contains("mean_batch=3.50"));
+    }
+
+    /// Reported percentiles are the lower bound of the log-bucket that holds
+    /// the exact sample, so `reported ≤ exact < reported × GROWTH` — i.e.
+    /// within one ≈7.5% bucket of the true percentile, for any sample set.
+    #[test]
+    fn percentiles_within_one_log_bucket_of_exact() {
+        crate::util::prop::for_all("hist_percentile_bound", |rng, _| {
+            let n = crate::util::prop::gen_range(rng, 50, 1500);
+            // log-uniform ns over [2 µs, 50 s] — inside the bucket range, so
+            // neither edge clamp can hide a resolution bug
+            let (lo, hi) = ((2_000.0f64).ln(), (50e9f64).ln());
+            let samples: Vec<u64> =
+                (0..n).map(|_| (lo + rng.next_f64() * (hi - lo)).exp() as u64).collect();
+            let h = Histogram::new();
+            for &s in &samples {
+                h.record(Duration::from_nanos(s));
+            }
+            let mut sorted = samples;
+            sorted.sort_unstable();
+            for p in [0.5, 0.9, 0.99] {
+                let idx = ((n as f64 * p).ceil() as usize).clamp(1, n) - 1;
+                let exact_us = sorted[idx] as f64 / 1e3;
+                let got_us = h.percentile_us(p);
+                assert!(
+                    got_us <= exact_us * 1.0001,
+                    "p{p}: reported {got_us}µs above exact {exact_us}µs"
+                );
+                assert!(
+                    exact_us <= got_us * GROWTH * 1.0001,
+                    "p{p}: exact {exact_us}µs more than one bucket above reported {got_us}µs"
+                );
+            }
+        });
+    }
+
+    /// Durations past the 100 s top of the range saturate into the last
+    /// bucket: every percentile collapses to the top bucket's floor (~93 s)
+    /// while the true maximum is still tracked exactly.
+    #[test]
+    fn top_bucket_saturation() {
+        let h = Histogram::new();
+        for _ in 0..16 {
+            h.record(Duration::from_secs(1000));
+        }
+        let p50_s = h.percentile_us(0.5) / 1e6;
+        assert!(p50_s > 50.0 && p50_s < 150.0, "top-bucket floor should be ~93 s, got {p50_s}");
+        assert_eq!(h.percentile_us(0.5), h.percentile_us(0.99));
+        assert_eq!(h.max_us(), 1e9); // 1000 s, exact
+    }
+
+    #[test]
+    fn prometheus_page_is_well_formed() {
+        let m = Arc::new(ServerMetrics::new());
+        m.requests.fetch_add(5, Ordering::Relaxed);
+        m.rejected.fetch_add(2, Ordering::Relaxed);
+        for us in [10u64, 100, 1000, 10_000] {
+            m.latency.record(Duration::from_micros(us));
+        }
+        let page = render_prometheus(&[("mpd".to_string(), m.clone())]);
+        assert!(page.contains("# TYPE mpdc_requests_total counter"));
+        assert!(page.contains("mpdc_requests_total{variant=\"mpd\"} 5"));
+        assert!(page.contains("mpdc_rejected_total{variant=\"mpd\"} 2"));
+        assert!(page.contains("# TYPE mpdc_latency_seconds histogram"));
+        // cumulative bucket counts are non-decreasing and +Inf == _count
+        let mut last = 0u64;
+        let mut inf = None;
+        for line in page.lines() {
+            if let Some(rest) = line.strip_prefix("mpdc_latency_seconds_bucket{variant=\"mpd\"") {
+                let count: u64 = rest.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(count >= last, "cumulative counts must be monotone: {line}");
+                last = count;
+                if rest.contains("+Inf") {
+                    inf = Some(count);
+                }
+            }
+        }
+        assert_eq!(inf, Some(4));
+        assert!(page.contains("mpdc_latency_seconds_count{variant=\"mpd\"} 4"));
     }
 }

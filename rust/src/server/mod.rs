@@ -1,8 +1,27 @@
-//! Inference serving: dynamic batcher, model-variant router, metrics.
+//! Inference serving: dynamic batcher, model-variant router, metrics, the
+//! HTTP/1.1 front-end, and a closed/open-loop load generator.
+//!
+//! The serving stack is layered (each layer usable on its own):
+//!
+//! ```text
+//!   HTTP client ── http::HttpServer ── Router ── BatcherHandle ── InferBackend
+//!                  (socket front-end)  (A/B split) (bounded queue,  (Packed / Mlp /
+//!                                                   dynamic batch)   Aot / Const)
+//! ```
+//!
+//! See DESIGN.md §Serving for the batching policy, backpressure semantics,
+//! and metric resolution bounds.
 pub mod batcher;
+pub mod http;
+pub mod loadgen;
 pub mod metrics;
 pub mod router;
 
-pub use batcher::{spawn, AotBackend, BatcherConfig, BatcherHandle, InferBackend, PackedBackend, ServeError};
-pub use metrics::{Histogram, ServerMetrics};
+pub use batcher::{
+    spawn, AotBackend, BatcherConfig, BatcherHandle, ConstBackend, CsrBackend, InferBackend,
+    MlpBackend, PackedBackend, ServeError,
+};
+pub use http::{FrontendStats, HttpConfig, HttpServer};
+pub use loadgen::{Arrival, HttpClient, LoadgenConfig, LoadgenReport};
+pub use metrics::{render_prometheus, Histogram, ServerMetrics};
 pub use router::Router;

@@ -5,11 +5,30 @@
 //! comparator — and routes each request by variant name (weighted A/B routing
 //! is supported for traffic splitting). This mirrors the role of the router
 //! in vLLM-style serving stacks, scaled to this repo's needs.
+//!
+//! ```
+//! use mpdc::server::{spawn, BatcherConfig, ConstBackend, Router, ServeError};
+//!
+//! let mut router = Router::new();
+//! let (dense, _w1) = spawn(ConstBackend { dim: 2, out: 1, value: 1.0 }, BatcherConfig::default());
+//! let (mpd, _w2) = spawn(ConstBackend { dim: 2, out: 1, value: 2.0 }, BatcherConfig::default());
+//! router.register("dense", dense);
+//! router.register("mpd", mpd);
+//!
+//! assert_eq!(router.infer("mpd", vec![0.0, 0.0]).unwrap(), vec![2.0]);
+//! assert!(matches!(router.infer("nope", vec![]), Err(ServeError::UnknownVariant(_))));
+//!
+//! router.set_split(&[("dense", 0.2), ("mpd", 0.8)]).unwrap();
+//! let (variant, y) = router.infer_weighted(vec![0.0, 0.0]).unwrap();
+//! assert!(variant == "dense" || variant == "mpd");
+//! assert!(y[0] == 1.0 || y[0] == 2.0);
+//! ```
 
 use crate::mask::prng::Xoshiro256pp;
 use crate::server::batcher::{BatcherHandle, ServeError};
+use crate::server::metrics::ServerMetrics;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Router over named variants.
 pub struct Router {
@@ -52,11 +71,26 @@ impl Router {
         self.variants.get(name)
     }
 
+    /// Whether a weighted traffic split has been configured (required by
+    /// [`Router::infer_weighted`] and the front-end's bare `POST /infer`).
+    pub fn has_split(&self) -> bool {
+        self.weights.iter().any(|(_, w)| *w > 0.0)
+    }
+
+    /// Per-variant metric handles, sorted by name — the `/metrics` page is
+    /// rendered from these via [`crate::server::metrics::render_prometheus`].
+    pub fn metrics_handles(&self) -> Vec<(String, Arc<ServerMetrics>)> {
+        let mut v: Vec<(String, Arc<ServerMetrics>)> =
+            self.variants.iter().map(|(n, h)| (n.clone(), h.metrics.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
     /// Route to an explicit variant.
     pub fn infer(&self, variant: &str, input: Vec<f32>) -> Result<Vec<f32>, ServeError> {
         match self.variants.get(variant) {
             Some(h) => h.infer(input),
-            None => Err(ServeError::Backend(format!("unknown variant {variant}"))),
+            None => Err(ServeError::UnknownVariant(variant.to_string())),
         }
     }
 
@@ -139,8 +173,11 @@ mod tests {
         let (r, _j) = router();
         assert_eq!(r.infer("dense", vec![0.0, 0.0]).unwrap(), vec![1.0]);
         assert_eq!(r.infer("mpd", vec![0.0, 0.0]).unwrap(), vec![2.0]);
-        assert!(matches!(r.infer("nope", vec![0.0, 0.0]), Err(ServeError::Backend(_))));
+        assert!(matches!(r.infer("nope", vec![0.0, 0.0]), Err(ServeError::UnknownVariant(_))));
         assert_eq!(r.variant_names(), vec!["dense", "mpd"]);
+        let mh = r.metrics_handles();
+        assert_eq!(mh.len(), 2);
+        assert_eq!(mh[0].0, "dense");
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! End-to-end tests of the HTTP serving front-end (ISSUE 2 acceptance):
+//! ephemeral-port server, concurrent `/infer` against a registered packed
+//! variant matching direct `PackedMlp` inference bit-for-bit, 429 under
+//! queue saturation, and a well-formed `/metrics` scrape. No artifacts, no
+//! network beyond loopback.
+
+use mpdc::compress::compressor::MpdCompressor;
+use mpdc::compress::packed_model::PackedMlp;
+use mpdc::compress::plan::{LayerPlan, SparsityPlan};
+use mpdc::mask::prng::Xoshiro256pp;
+use mpdc::server::http::{HttpConfig, HttpServer};
+use mpdc::server::loadgen::{self, Arrival, HttpClient, LoadgenConfig};
+use mpdc::server::{spawn, BatcherConfig, InferBackend, PackedBackend, Router};
+use mpdc::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Small two-layer plan: masked 24→32 in 4 blocks, dense 32→10 head.
+fn small_plan() -> SparsityPlan {
+    SparsityPlan::new(vec![LayerPlan::masked("fc1", 32, 24, 4), LayerPlan::dense("fc2", 10, 32)])
+        .unwrap()
+}
+
+/// Build the same packed engine twice from identical inputs: one copy serves
+/// behind the batcher, the other is the in-process oracle. `PackedMlp::build`
+/// is deterministic, so the two engines are bit-identical.
+fn packed_pair() -> (PackedMlp, PackedMlp) {
+    let comp = MpdCompressor::new(small_plan(), 3);
+    let (weights, biases) = comp.random_masked_weights(5);
+    let serve = PackedMlp::build(&comp, &weights, &biases);
+    let oracle = PackedMlp::build(&comp, &weights, &biases);
+    (serve, oracle)
+}
+
+fn ephemeral(accept_threads: usize) -> HttpConfig {
+    HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        accept_threads,
+        read_timeout: Duration::from_secs(2),
+        ..HttpConfig::default()
+    }
+}
+
+#[test]
+fn concurrent_infer_matches_direct_inference_bit_for_bit() {
+    let (serve_model, oracle) = packed_pair();
+    let mut router = Router::new();
+    let (h, _worker) = spawn(PackedBackend { model: serve_model }, BatcherConfig::default());
+    router.register("mpd", h);
+    let server = HttpServer::start(Arc::new(router), ephemeral(4)).unwrap();
+    let addr = server.addr();
+    let oracle = Arc::new(oracle);
+
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let oracle = oracle.clone();
+            s.spawn(move || {
+                let mut client = HttpClient::new(addr);
+                let mut rng = Xoshiro256pp::seed_from_u64(100 + t);
+                for _ in 0..25 {
+                    let x: Vec<f32> = (0..24).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+                    let body = Json::obj(vec![(
+                        "input",
+                        Json::Arr(x.iter().map(|&v| Json::num(v as f64)).collect()),
+                    )]);
+                    let (status, resp) = client.post_json("/infer/mpd", &body).unwrap();
+                    assert_eq!(status, 200, "{resp}");
+                    let parsed = Json::parse(&resp).unwrap();
+                    assert_eq!(parsed.get("variant").and_then(|j| j.as_str()), Some("mpd"));
+                    let got: Vec<f32> = parsed
+                        .get("output")
+                        .and_then(|j| j.as_arr())
+                        .expect("output array")
+                        .iter()
+                        .map(|j| j.as_f64().expect("number") as f32)
+                        .collect();
+                    let want = oracle.forward(&x, 1);
+                    assert_eq!(got.len(), want.len());
+                    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "output[{i}]: HTTP {g} != direct {w} — JSON round-trip must be exact"
+                        );
+                    }
+                }
+            });
+        }
+    });
+    server.shutdown();
+}
+
+/// Slow single-slot backend: guarantees the bounded queue fills.
+struct SlowBackend;
+
+impl InferBackend for SlowBackend {
+    fn feature_dim(&self) -> usize {
+        1
+    }
+
+    fn out_dim(&self) -> usize {
+        1
+    }
+
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(Duration::from_millis(30));
+        Ok(x[..batch].to_vec())
+    }
+}
+
+#[test]
+fn queue_saturation_maps_to_429() {
+    let cfg = BatcherConfig { max_batch: 1, max_wait: Duration::ZERO, queue_depth: 1 };
+    let mut router = Router::new();
+    let (h, _worker) = spawn(SlowBackend, cfg);
+    router.register("slow", h);
+    let server = HttpServer::start(Arc::new(router), ephemeral(12)).unwrap();
+    let addr = server.addr();
+
+    let ok = std::sync::atomic::AtomicUsize::new(0);
+    let rejected = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..12 {
+            let (ok, rejected) = (&ok, &rejected);
+            s.spawn(move || {
+                let mut client = HttpClient::new(addr);
+                let body = Json::obj(vec![("input", Json::Arr(vec![Json::num(1.0)]))]);
+                match client.post_json("/infer/slow", &body).unwrap() {
+                    (200, _) => {
+                        ok.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    (429, resp) => {
+                        assert!(resp.contains("backpressure"), "{resp}");
+                        rejected.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    (status, resp) => panic!("unexpected status {status}: {resp}"),
+                }
+            });
+        }
+    });
+    let (ok, rejected) = (
+        ok.load(std::sync::atomic::Ordering::Relaxed),
+        rejected.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    assert!(ok >= 1, "some requests must be served");
+    assert!(rejected >= 1, "queue_depth=1 + 12 concurrent clients must trip backpressure");
+    assert_eq!(ok + rejected, 12);
+    server.shutdown();
+}
+
+#[test]
+fn metrics_scrape_is_well_formed_prometheus() {
+    let (serve_model, _) = packed_pair();
+    let mut router = Router::new();
+    let (h, _worker) = spawn(PackedBackend { model: serve_model }, BatcherConfig::default());
+    router.register("mpd", h);
+    let server = HttpServer::start(Arc::new(router), ephemeral(4)).unwrap();
+
+    // generate some traffic (including a client-side 400 that never reaches
+    // a batcher) then scrape
+    let mut client = HttpClient::new(server.addr());
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    for _ in 0..20 {
+        let x: Vec<Json> = (0..24).map(|_| Json::num((rng.next_f32()) as f64)).collect();
+        let (status, _) = client.post_json("/infer/mpd", &Json::obj(vec![("input", Json::Arr(x))])).unwrap();
+        assert_eq!(status, 200);
+    }
+    let (status, _) = client.request("POST", "/infer/mpd", Some("not json")).unwrap();
+    assert_eq!(status, 400);
+
+    let (status, page) = client.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    assert!(page.contains("# TYPE mpdc_requests_total counter"), "{page}");
+    assert!(page.contains("mpdc_requests_total{variant=\"mpd\"} 20"), "{page}");
+    assert!(page.contains("# TYPE mpdc_latency_seconds histogram"));
+    assert!(page.contains("# TYPE mpdc_http_active_connections gauge"));
+
+    // histogram sanity: cumulative, monotone, +Inf == _count == 20
+    let mut last = 0u64;
+    let mut inf = None;
+    for line in page.lines() {
+        if let Some(rest) = line.strip_prefix("mpdc_latency_seconds_bucket{variant=\"mpd\"") {
+            let v: u64 = rest.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "bucket counts must be cumulative: {line}");
+            last = v;
+            if rest.contains("le=\"+Inf\"") {
+                inf = Some(v);
+            }
+        }
+    }
+    assert_eq!(inf, Some(20));
+    assert!(page.contains("mpdc_latency_seconds_count{variant=\"mpd\"} 20"), "{page}");
+    // every sample line parses as `name{labels} value` or `name value`
+    for line in page.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+        let value = line.rsplit(' ').next().unwrap();
+        assert!(value.parse::<f64>().is_ok(), "unparseable sample line: {line}");
+    }
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn discovery_health_and_error_statuses() {
+    let (serve_model, _) = packed_pair();
+    let mut router = Router::new();
+    let (h, _worker) = spawn(PackedBackend { model: serve_model }, BatcherConfig::default());
+    router.register("mpd", h);
+    let mut cfg = ephemeral(4);
+    cfg.max_body_bytes = 512; // provoke 413 below
+    let server = HttpServer::start(Arc::new(router), cfg).unwrap();
+    let mut client = HttpClient::new(server.addr());
+
+    let (status, body) = client.get("/healthz").unwrap();
+    assert_eq!((status, body.contains("ok")), (200, true));
+
+    // discovery: names + dims, consumable by the load generator
+    let variants = loadgen::discover_variants(server.addr()).unwrap();
+    assert_eq!(variants, vec![("mpd".to_string(), 24, 10)]);
+
+    let good = Json::obj(vec![("input", Json::Arr(vec![Json::num(0.0); 24]))]);
+    let (status, _) = client.post_json("/infer/nope", &good).unwrap();
+    assert_eq!(status, 404, "unknown variant");
+    let (status, _) = client.post_json("/infer", &good).unwrap();
+    assert_eq!(status, 404, "no split configured");
+    let (status, body) = client.request("POST", "/infer/mpd", Some("{\"input\":[1,2]}")).unwrap();
+    assert_eq!(status, 400, "wrong feature count: {body}");
+    let (status, _) = client.request("POST", "/infer/mpd", Some("{}")).unwrap();
+    assert_eq!(status, 400, "missing input key");
+    let (status, _) = client.get("/definitely-not-a-route").unwrap();
+    assert_eq!(status, 404);
+
+    // oversized body → 413 (the server closes the connection; the client's
+    // retry-once logic must not loop)
+    let huge = Json::obj(vec![("input", Json::Arr(vec![Json::num(0.123456789); 200]))]);
+    let (status, _) = client.post_json("/infer/mpd", &huge).unwrap();
+    assert_eq!(status, 413);
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn loadgen_closed_and_open_loop_roundtrip() {
+    let (serve_model, _) = packed_pair();
+    let mut router = Router::new();
+    let (h, _worker) = spawn(PackedBackend { model: serve_model }, BatcherConfig::default());
+    router.register("mpd", h);
+    let server = HttpServer::start(Arc::new(router), ephemeral(6)).unwrap();
+
+    let closed = LoadgenConfig { concurrency: 3, requests: 120, arrival: Arrival::Closed, seed: 1 };
+    let r = loadgen::run_http(server.addr(), "mpd", 24, &closed);
+    assert_eq!(r.ok, 120, "closed loop over an idle server must all succeed");
+    assert_eq!(r.errors, 0);
+    assert!(r.latency.percentile_us(0.5) > 0.0);
+
+    let open = LoadgenConfig {
+        concurrency: 3,
+        requests: 60,
+        arrival: Arrival::Poisson { target_qps: 300.0 },
+        seed: 1,
+    };
+    let r = loadgen::run_http(server.addr(), "mpd", 24, &open);
+    assert_eq!(r.ok + r.rejected + r.errors, 60);
+    assert_eq!(r.errors, 0);
+    server.shutdown();
+}
