@@ -1,0 +1,150 @@
+//! Quantization bench: dense-f32 vs MPD-f32 vs MPD-int8 on the same trained
+//! weights — compression ratio, accuracy delta, and per-request p50/p99
+//! (ISSUE 3's standing benchmark). Artifact-free: quick native training on
+//! synthetic MNIST-like data, so the accuracy column is meaningful while the
+//! whole bench stays CI-sized.
+//!
+//! ```bash
+//! cargo bench --bench quant_speedup                 # quick (CI) preset
+//! MPDC_QUANT_STEPS=400 MPDC_QUANT_ITERS=5000 cargo bench --bench quant_speedup
+//! ```
+
+use mpdc::compress::compressor::MpdCompressor;
+use mpdc::compress::plan::SparsityPlan;
+use mpdc::config::EngineConfig;
+use mpdc::data::dataset::Dataset;
+use mpdc::data::synth::{SynthImages, SynthSpec};
+use mpdc::mask::prng::Xoshiro256pp;
+use mpdc::nn::mlp::Mlp;
+use mpdc::quant::calibrate_chunked;
+use mpdc::server::metrics::Histogram;
+use mpdc::train::aot_trainer::TrainConfig;
+use mpdc::train::native_trainer::{evaluate_native, evaluate_packed, evaluate_quantized, fit_native};
+use mpdc::util::benchkit::{black_box, Table};
+use mpdc::util::json::{append_jsonl, Json};
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Measure per-call latency of `f` over `iters` calls into a log-bucketed
+/// histogram (same sink the serving stack uses).
+fn measure(iters: usize, mut f: impl FnMut()) -> Histogram {
+    // warmup
+    for _ in 0..(iters / 10).max(10) {
+        f();
+    }
+    let h = Histogram::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        h.record(t0.elapsed());
+    }
+    h
+}
+
+fn main() {
+    let steps = env_usize("MPDC_QUANT_STEPS", 150);
+    let iters = env_usize("MPDC_QUANT_ITERS", 1500);
+    let batch = env_usize("MPDC_QUANT_BATCH", 1);
+    let seed = 42u64;
+
+    // Train a masked LeNet-300-100 natively so the accuracy column is real.
+    println!("training masked LeNet-300-100 ({steps} steps, 10 blocks)…");
+    let spec = SynthSpec::mnist_like();
+    let mut train = Dataset::from_synth(&SynthImages::generate(spec, 1500, seed, 0));
+    let (mean, std) = train.normalize();
+    let mut test = Dataset::from_synth(&SynthImages::generate(spec, 400, seed, 1));
+    test.normalize_with(mean, std);
+    let comp = MpdCompressor::new(SparsityPlan::lenet300(10), seed);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xA5);
+    let mut mlp = Mlp::new(&[784, 300, 100, 10], &mut rng).with_masks(comp.masks.clone());
+    let tc = TrainConfig { steps, lr: 0.08, log_every: (steps / 4).max(1), seed, ..Default::default() };
+    fit_native(&mut mlp, &train, 50, &tc);
+
+    let weights: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.w.clone()).collect();
+    let biases: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.b.clone()).collect();
+    let engine_cfg = EngineConfig::default();
+    let packed = comp.build_engine(&weights, &biases, &engine_cfg).expect("f32 engine");
+    let nsamples = 256.min(train.len());
+    let calib = calibrate_chunked(&comp, &weights, &biases, &train.x[..nsamples * 784], nsamples, 64);
+    let quant = comp.build_quantized_engine(&weights, &biases, &calib, &engine_cfg).expect("i8 engine");
+
+    // Accuracy per engine (dense = the masked-dense f32 MLP itself).
+    let acc_dense = evaluate_native(&mut mlp, &test, 64);
+    let acc_packed = evaluate_packed(&packed, &test, 64);
+    let acc_quant = evaluate_quantized(&quant, &test, 64);
+
+    // Storage: dense f32 weights+biases vs packed f32 vs packed int8.
+    let dense_bytes: usize =
+        weights.iter().map(|w| w.len() * 4).sum::<usize>() + biases.iter().map(|b| b.len() * 4).sum::<usize>();
+    let packed_bytes = packed.storage_bytes();
+    let quant_bytes = quant.storage_bytes();
+
+    // Latency: single-request forward (the serving unit of work).
+    let x: Vec<f32> = test.x[..batch * 784].to_vec();
+    println!("measuring {iters} forward calls per engine (batch {batch})…");
+    let h_dense = measure(iters, || {
+        black_box(mlp.forward(&x, batch));
+    });
+    let h_packed = measure(iters, || {
+        black_box(packed.forward(&x, batch));
+    });
+    let h_quant = measure(iters, || {
+        black_box(quant.forward(&x, batch));
+    });
+
+    let mut t = Table::new(&[
+        "engine",
+        "bytes",
+        "compression",
+        "top-1",
+        "acc Δ vs f32",
+        "p50 µs",
+        "p99 µs",
+    ]);
+    let rows = [
+        ("dense-f32", dense_bytes, acc_dense, acc_dense, &h_dense),
+        ("mpd-f32", packed_bytes, acc_packed, acc_dense, &h_packed),
+        ("mpd-int8", quant_bytes, acc_quant, acc_dense, &h_quant),
+    ];
+    for (name, bytes, acc, acc_base, h) in rows {
+        t.row(&[
+            name.to_string(),
+            bytes.to_string(),
+            format!("{:.2}×", dense_bytes as f64 / bytes as f64),
+            format!("{acc:.4}"),
+            format!("{:+.4}", acc - acc_base),
+            format!("{:.0}", h.percentile_us(0.5)),
+            format!("{:.0}", h.percentile_us(0.99)),
+        ]);
+        let _ = append_jsonl(
+            std::path::Path::new("results/quant_speedup.jsonl"),
+            &Json::obj(vec![
+                ("engine", Json::str(name)),
+                ("batch", Json::num(batch as f64)),
+                ("bytes", Json::num(bytes as f64)),
+                ("compression", Json::num(dense_bytes as f64 / bytes as f64)),
+                ("top1", Json::num(acc)),
+                ("acc_delta", Json::num(acc - acc_base)),
+                ("p50_us", Json::num(h.percentile_us(0.5))),
+                ("p99_us", Json::num(h.percentile_us(0.99))),
+            ]),
+        );
+    }
+    println!("{}", t.render());
+
+    // Smoke invariants (what CI actually checks): the int8 engine must be
+    // meaningfully smaller than the f32 packed engine and must not collapse
+    // accuracy relative to it.
+    assert!(
+        quant_bytes * 3 < packed_bytes,
+        "int8 engine not ≥3× smaller: {quant_bytes} vs {packed_bytes}"
+    );
+    assert!(
+        (acc_packed - acc_quant).abs() < 0.05,
+        "int8 accuracy collapsed: {acc_quant} vs f32 {acc_packed}"
+    );
+    println!("OK");
+}

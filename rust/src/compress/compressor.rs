@@ -181,6 +181,58 @@ impl MpdCompressor {
         crate::compress::packed_model::PackedMlp::build(self, weights, biases).with_engine_config(cfg)
     }
 
+    /// Compile the int8 inference engine for trained weights/biases: quantize
+    /// per-block-row against `calib`'s per-layer activation scales and tune by
+    /// the same [`crate::config::EngineConfig`] as the f32 engine. The
+    /// quantized counterpart of [`MpdCompressor::build_engine`].
+    pub fn build_quantized_engine(
+        &self,
+        weights: &[Vec<f32>],
+        biases: &[Vec<f32>],
+        calib: &crate::quant::Calibration,
+        cfg: &crate::config::EngineConfig,
+    ) -> Result<crate::quant::QuantizedMlp, String> {
+        cfg.validate()?;
+        crate::quant::QuantizedMlp::quantize(self, weights, biases, calib)?.with_engine_config(cfg)
+    }
+
+    /// The f32 packed-format checkpoint tensors of a trained model: masked
+    /// layers store only the packed block values (`fc{i}.wp`, the compressed
+    /// representation), dense layers the full matrix, plus `fc{i}.b` biases.
+    /// This is the on-disk baseline `mpdc quantize` compares its int8
+    /// artifact against (and what the ≥3.5× ratio test measures).
+    pub fn packed_f32_tensors(
+        &self,
+        weights: &[Vec<f32>],
+        biases: &[Vec<f32>],
+    ) -> Vec<crate::nn::checkpoint::NamedTensor> {
+        use crate::nn::checkpoint::NamedTensor;
+        assert_eq!(weights.len(), self.nlayers());
+        assert_eq!(biases.len(), self.nlayers());
+        let mut out = Vec::new();
+        for (i, ((w, b), (lp, mask))) in weights
+            .iter()
+            .zip(biases)
+            .zip(self.plan.layers.iter().zip(&self.masks))
+            .enumerate()
+        {
+            match mask {
+                Some(m) => {
+                    let bd = BlockDiagMatrix::from_masked_weights(m, w);
+                    let nnz = bd.nnz();
+                    out.push(NamedTensor::f32(format!("fc{i}.wp"), vec![nnz], bd.packed));
+                }
+                None => out.push(NamedTensor::f32(
+                    format!("fc{i}.w"),
+                    vec![lp.out_dim, lp.in_dim],
+                    w.clone(),
+                )),
+            }
+            out.push(NamedTensor::f32(format!("fc{i}.b"), vec![b.len()], b.clone()));
+        }
+        out
+    }
+
     /// Build the CSR (irregular) representation of the same masked weights —
     /// the §3.3 competitor.
     pub fn to_csr(&self, weights: &[Vec<f32>]) -> Vec<Option<Csr>> {

@@ -142,6 +142,37 @@ impl EngineConfig {
     }
 }
 
+/// Int8 quantization knobs — the `[quant]` TOML table. Controls whether the
+/// serving CLI registers `{variant}-int8` backends and how the post-training
+/// calibrator samples activations (see `quant::calibrate`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantConfig {
+    /// Register quantized `-int8` serving variants / emit int8 artifacts.
+    pub enabled: bool,
+    /// Activation samples the calibrator runs through the f32 model.
+    pub calib_samples: usize,
+    /// Batch size of the calibration forward passes.
+    pub calib_batch: usize,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        Self { enabled: true, calib_samples: 256, calib_batch: 64 }
+    }
+}
+
+impl QuantConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.calib_samples == 0 {
+            return Err("quant.calib_samples must be ≥ 1".into());
+        }
+        if self.calib_batch == 0 {
+            return Err("quant.calib_batch must be ≥ 1".into());
+        }
+        Ok(())
+    }
+}
+
 /// HTTP serving knobs — the `[server]` TOML table. Transport-level settings
 /// map onto [`crate::server::HttpConfig`]; batching-policy settings map onto
 /// [`crate::server::BatcherConfig`] (one batcher per registered variant).
@@ -251,6 +282,7 @@ pub struct ExperimentConfig {
     pub out_dir: String,
     pub engine: EngineConfig,
     pub server: ServerConfig,
+    pub quant: QuantConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -269,6 +301,7 @@ impl Default for ExperimentConfig {
             out_dir: "results".into(),
             engine: EngineConfig::default(),
             server: ServerConfig::default(),
+            quant: QuantConfig::default(),
         }
     }
 }
@@ -345,6 +378,15 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_int("server.queue_depth") {
             cfg.server.queue_depth = v as usize;
         }
+        if let Some(v) = doc.get_bool("quant.enabled") {
+            cfg.quant.enabled = v;
+        }
+        if let Some(v) = doc.get_int("quant.calib_samples") {
+            cfg.quant.calib_samples = v as usize;
+        }
+        if let Some(v) = doc.get_int("quant.calib_batch") {
+            cfg.quant.calib_batch = v as usize;
+        }
         if let Some(v) = doc.get_str("paths.artifacts") {
             cfg.artifacts_dir = Some(v.to_string());
         }
@@ -370,6 +412,7 @@ impl ExperimentConfig {
         }
         self.engine.validate()?;
         self.server.validate()?;
+        self.quant.validate()?;
         // plan validity at this model/nblocks combination
         self.model.plan(self.nblocks)?;
         Ok(())
@@ -487,6 +530,25 @@ keep_alive = false
         let mut bad = ExperimentConfig::default();
         bad.server.max_batch = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn quant_config_parses_and_validates() {
+        let text = r#"
+[quant]
+enabled = false
+calib_samples = 512
+calib_batch = 32
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.quant, QuantConfig { enabled: false, calib_samples: 512, calib_batch: 32 });
+        // defaults when the table is absent: quantized variants on
+        let cfg = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.quant, QuantConfig::default());
+        assert!(cfg.quant.enabled);
+        // invalid values rejected
+        assert!(ExperimentConfig::from_toml("[quant]\ncalib_samples = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml("[quant]\ncalib_batch = 0\n").is_err());
     }
 
     #[test]

@@ -16,6 +16,10 @@
 //! * [`data`] — synthetic datasets + IDX loader
 //! * [`compress`] — plans, compressor, fused packed inference engine
 //!   (`compress::packed_model`, executes on the pool), pruning baseline
+//! * [`quant`] — post-training int8 quantization: activation calibration,
+//!   the i8 packed engine (`quant::QuantizedMlp`, running on the
+//!   register-tiled integer kernel in `linalg::blockdiag_mm_i8`), and the
+//!   checkpoint-v2 i8 serialization
 //! * [`runtime`] — PJRT loader/executor for AOT JAX artifacts (behind the
 //!   `pjrt` feature; stubs out gracefully offline)
 //! * [`train`] — AOT + native trainers, packed-engine evaluation
@@ -34,7 +38,16 @@
 //! semantics, and metric resolution bounds in DESIGN.md §Serving. The
 //! repo-level overview (quickstart, architecture map, bench index) is in
 //! README.md.
+//
+// Kernel and epilogue code indexes by position on purpose (canonical
+// accumulation order, in-bounds-provable tile offsets), and the fused entry
+// points thread pool/tile/epilogue state explicitly; these style lints fight
+// both idioms, so they are opted out crate-wide rather than per-function.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::new_without_default)]
 pub mod compress;
+pub mod quant;
 pub mod runtime;
 pub mod train;
 pub mod server;

@@ -1,0 +1,597 @@
+//! Int8 packed block-diagonal GEMM — the quantized mirror of
+//! [`crate::linalg::blockdiag_mm`].
+//!
+//! A [`QuantizedBlockDiagMatrix`] stores the same packed block layout as
+//! [`BlockDiagMatrix`], but each weight is an `i8` with a symmetric
+//! per-block-row scale: `w[r][p] ≈ q[r][p] · row_scales[r]`. Activations are
+//! quantized per layer with one symmetric scale (`x ≈ qx · act_scale`), so a
+//! block row reduces to an integer dot product
+//!
+//! ```text
+//!   acc[r] = Σ_p qx[p] · q[r][p]            (i8 × i8 → i32, exact)
+//!   y[r]   = acc[r] · act_scale · row_scales[r] + bias[r]   (dequant epilogue)
+//! ```
+//!
+//! Because the accumulator is an exact integer, the result is **identical for
+//! every tile shape, thread count, and summation order** — the f32 kernel has
+//! to enforce a canonical p-order to get that property; here it is free. The
+//! tests still pin it down across tile shapes and pooled execution.
+//!
+//! The kernel mirrors the f32 micro-GEMM's structure: const-generic
+//! `TM × TN` register tiles ([`TileShape`], same {1,2,4,8} axes), scalar
+//! remainder paths, disjoint per-block output rows, parallel-over-blocks on
+//! the persistent [`ThreadPool`]. The dequantize + bias + ReLU epilogue is
+//! fused into the tile writeback, so a quantized layer forward writes every
+//! output element exactly once.
+//!
+//! Overflow: `in_b · 127 · 127` must stay below `i32::MAX`, i.e. block input
+//! widths up to ~130k columns — far beyond any layer here; checked at
+//! construction.
+
+use crate::linalg::blockdiag_mm::{BlockDiagMatrix, TileShape};
+use crate::linalg::pool::ThreadPool;
+use crate::mask::blockdiag::BlockDiagLayout;
+
+/// Largest quantized magnitude of the symmetric i8 scheme (−127..=127; −128
+/// is never produced, keeping negation safe and the range symmetric).
+pub const QMAX: f32 = 127.0;
+
+/// Widest block input dimension the i32 accumulator provably cannot overflow.
+const MAX_IN_B: usize = (i32::MAX / (127 * 127)) as usize;
+
+/// Symmetric quantization scale covering `[-max_abs, max_abs]` in `QMAX`
+/// steps. A zero range yields scale 1.0 (everything quantizes to 0).
+#[inline]
+pub fn symmetric_scale(max_abs: f32) -> f32 {
+    if max_abs > 0.0 {
+        max_abs / QMAX
+    } else {
+        1.0
+    }
+}
+
+/// Quantize one value: round-half-away-from-zero, clamped to ±127.
+#[inline]
+pub fn quantize_i8(v: f32, scale: f32) -> i8 {
+    (v / scale).round().clamp(-QMAX, QMAX) as i8
+}
+
+/// Quantize a slice into a reusable buffer.
+pub fn quantize_slice_into(src: &[f32], scale: f32, dst: &mut Vec<i8>) {
+    dst.clear();
+    dst.extend(src.iter().map(|&v| quantize_i8(v, scale)));
+}
+
+/// What the finished integer tile turns into (mirror of the f32 kernel's
+/// epilogue, minus the accumulate variant: quantized layers always fuse).
+#[derive(Clone, Copy)]
+struct QEpilogue {
+    act_scale: f32,
+    relu: bool,
+}
+
+/// Shared raw handle to the f32 output buffer; same aliasing discipline as
+/// the f32 kernel's `OutPtr` (each task projects `&mut` only over its own
+/// block's disjoint rows, and the pool joins before the caller's borrow
+/// resumes).
+#[derive(Clone, Copy)]
+struct QOutPtr {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: tasks write disjoint row segments (block row spans partition the
+// output columns) and the pool joins all tasks before the caller's `&mut` is
+// used again; `seg_mut` is the only access path.
+unsafe impl Send for QOutPtr {}
+unsafe impl Sync for QOutPtr {}
+
+impl QOutPtr {
+    /// SAFETY (caller): `[base, base + n)` must not overlap any other live
+    /// projection — guaranteed because block row spans are disjoint.
+    #[inline]
+    unsafe fn seg_mut(&self, base: usize, n: usize) -> &mut [f32] {
+        debug_assert!(base + n <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(base), n)
+    }
+}
+
+/// A block-diagonal weight matrix quantized to i8 in packed storage, with
+/// symmetric per-block-row scales.
+#[derive(Clone, Debug)]
+pub struct QuantizedBlockDiagMatrix {
+    pub layout: BlockDiagLayout,
+    /// Concatenated row-major i8 blocks, same layout as
+    /// [`BlockDiagMatrix::packed`].
+    pub packed: Vec<i8>,
+    pub block_off: Vec<usize>,
+    /// One scale per output row, indexed in block-row space (length
+    /// `layout.rows`): `w[r][p] ≈ packed-entry · row_scales[r]`.
+    pub row_scales: Vec<f32>,
+}
+
+impl QuantizedBlockDiagMatrix {
+    /// Quantize an f32 packed block-diagonal matrix: per block row, the scale
+    /// is `max|w| / 127` and entries round to the nearest step — the rounding
+    /// error per weight is at most `row_scales[r] / 2`.
+    pub fn from_f32(bd: &BlockDiagMatrix) -> Self {
+        let layout = bd.layout.clone();
+        let mut row_scales = vec![1.0f32; layout.rows];
+        let mut packed = vec![0i8; bd.packed.len()];
+        for b in 0..layout.nblocks() {
+            let rs = layout.row_spans[b];
+            let cs = layout.col_spans[b];
+            assert!(
+                cs.len <= MAX_IN_B,
+                "block {b}: input width {} overflows the i32 accumulator bound {MAX_IN_B}",
+                cs.len
+            );
+            let wb = bd.block(b);
+            let off = bd.block_off[b];
+            for r in 0..rs.len {
+                let row = &wb[r * cs.len..(r + 1) * cs.len];
+                let max_abs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let scale = symmetric_scale(max_abs);
+                row_scales[rs.start + r] = scale;
+                for (p, &v) in row.iter().enumerate() {
+                    packed[off + r * cs.len + p] = quantize_i8(v, scale);
+                }
+            }
+        }
+        Self { layout, packed, block_off: bd.block_off.clone(), row_scales }
+    }
+
+    /// Quantize a dense `[rows × cols]` f32 matrix as a single block — how
+    /// the quantized model runs its dense (unmasked) layers through the same
+    /// kernel.
+    pub fn from_dense_f32(w: &[f32], rows: usize, cols: usize) -> Self {
+        assert_eq!(w.len(), rows * cols);
+        let layout = BlockDiagLayout::new(rows, cols, 1);
+        let bd = BlockDiagMatrix::from_packed(w.to_vec(), layout);
+        Self::from_f32(&bd)
+    }
+
+    /// Rebuild from serialized parts (checkpoint v2 load path).
+    pub fn from_parts(
+        layout: BlockDiagLayout,
+        packed: Vec<i8>,
+        row_scales: Vec<f32>,
+    ) -> Result<Self, String> {
+        if packed.len() != layout.nnz() {
+            return Err(format!("packed len {} != layout nnz {}", packed.len(), layout.nnz()));
+        }
+        if row_scales.len() != layout.rows {
+            return Err(format!("row_scales len {} != rows {}", row_scales.len(), layout.rows));
+        }
+        if row_scales.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+            return Err("row scales must be finite and positive".into());
+        }
+        if layout.col_spans.iter().any(|c| c.len > MAX_IN_B) {
+            return Err(format!("block input width exceeds accumulator bound {MAX_IN_B}"));
+        }
+        let mut block_off = Vec::with_capacity(layout.nblocks() + 1);
+        let mut off = 0;
+        for b in 0..layout.nblocks() {
+            block_off.push(off);
+            off += layout.row_spans[b].len * layout.col_spans[b].len;
+        }
+        block_off.push(off);
+        Ok(Self { layout, packed, block_off, row_scales })
+    }
+
+    pub fn nblocks(&self) -> usize {
+        self.layout.nblocks()
+    }
+
+    /// Stored quantized parameter count.
+    pub fn nnz(&self) -> usize {
+        self.packed.len()
+    }
+
+    /// Bytes of the quantized representation: i8 values, f32 row scales, and
+    /// one span pair per block — ~4× below the f32 packed format.
+    pub fn storage_bytes(&self) -> usize {
+        self.packed.len() + self.row_scales.len() * 4 + self.layout.nblocks() * 4 * std::mem::size_of::<u32>()
+    }
+
+    /// Block `b` as a row-major `(out_b × in_b)` i8 slice.
+    #[inline]
+    pub fn block(&self, b: usize) -> &[i8] {
+        &self.packed[self.block_off[b]..self.block_off[b + 1]]
+    }
+
+    /// Dequantize back to a dense f32 `[rows × cols]` matrix (test helper).
+    pub fn to_dense_f32(&self) -> Vec<f32> {
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        let mut out = vec![0.0f32; rows * cols];
+        for b in 0..self.nblocks() {
+            let rs = self.layout.row_spans[b];
+            let cs = self.layout.col_spans[b];
+            let qb = self.block(b);
+            for r in 0..rs.len {
+                let scale = self.row_scales[rs.start + r];
+                for p in 0..cs.len {
+                    out[(rs.start + r) * cols + cs.start + p] = qb[r * cs.len + p] as f32 * scale;
+                }
+            }
+        }
+        out
+    }
+
+    /// Fused quantized layer forward:
+    /// `Y[:, rs_b] = dequant(Xq[:, cs_b] · Qᵀ_b) + bias[rs_b]`, optionally
+    /// through ReLU. `xq` is the layer input already quantized with
+    /// `act_scale` (`[batch × cols]` row-major i8), `y` is written — not
+    /// accumulated; `bias` is f32 in block-row space. Runs on `pool` when
+    /// given; exact across tile shapes and thread counts.
+    pub fn forward_fused(
+        &self,
+        xq: &[i8],
+        y: &mut [f32],
+        batch: usize,
+        act_scale: f32,
+        bias: &[f32],
+        relu: bool,
+        pool: Option<&ThreadPool>,
+        tile: TileShape,
+    ) {
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        assert_eq!(xq.len(), batch * cols, "Xq shape mismatch");
+        assert_eq!(y.len(), batch * rows, "Y shape mismatch");
+        assert_eq!(bias.len(), rows, "bias must be in block-row space");
+        let ep = QEpilogue { act_scale, relu };
+        let nblocks = self.nblocks();
+        let yp = QOutPtr { ptr: y.as_mut_ptr(), len: y.len() };
+        let parallel = match pool {
+            Some(p) => p.lanes() > 1 && nblocks > 1,
+            None => false,
+        };
+        if !parallel {
+            for b in 0..nblocks {
+                self.block_forward(b, xq, yp, batch, bias, ep, tile);
+            }
+            return;
+        }
+        let p = pool.unwrap();
+        p.run(nblocks, |b| {
+            // SAFETY of sharing yp: block b writes only Y[:, row_spans[b]] —
+            // row spans are disjoint across blocks, and the pool joins every
+            // task before the borrow of `y` resumes on the caller.
+            self.block_forward(b, xq, yp, batch, bias, ep, tile);
+        });
+    }
+
+    /// Scalar reference kernel (the oracle the tiled/pooled paths are tested
+    /// against — equality is exact, integer accumulation is order-free).
+    pub fn forward_fused_reference(
+        &self,
+        xq: &[i8],
+        y: &mut [f32],
+        batch: usize,
+        act_scale: f32,
+        bias: &[f32],
+        relu: bool,
+    ) {
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        assert_eq!(xq.len(), batch * cols);
+        assert_eq!(y.len(), batch * rows);
+        assert_eq!(bias.len(), rows);
+        let ep = QEpilogue { act_scale, relu };
+        for b in 0..self.nblocks() {
+            let rs = self.layout.row_spans[b];
+            let cs = self.layout.col_spans[b];
+            let qb = self.block(b);
+            for bi in 0..batch {
+                let xrow = &xq[bi * cols + cs.start..bi * cols + cs.end()];
+                for r in 0..rs.len {
+                    let wrow = &qb[r * cs.len..(r + 1) * cs.len];
+                    let mut acc = 0i32;
+                    for p in 0..cs.len {
+                        acc += xrow[p] as i32 * wrow[p] as i32;
+                    }
+                    y[bi * rows + rs.start + r] = dequant(acc, ep, self.row_scales[rs.start + r], bias[rs.start + r]);
+                }
+            }
+        }
+    }
+
+    /// Per-block kernel entry: dispatch the configured tile shape onto a
+    /// monomorphized micro-kernel (same shape set as the f32 kernel).
+    fn block_forward(
+        &self,
+        b: usize,
+        xq: &[i8],
+        yp: QOutPtr,
+        batch: usize,
+        bias: &[f32],
+        ep: QEpilogue,
+        tile: TileShape,
+    ) {
+        match (tile.batch, tile.rows) {
+            (1, 1) => self.block_forward_t::<1, 1>(b, xq, yp, batch, bias, ep),
+            (1, 2) => self.block_forward_t::<1, 2>(b, xq, yp, batch, bias, ep),
+            (1, 4) => self.block_forward_t::<1, 4>(b, xq, yp, batch, bias, ep),
+            (1, 8) => self.block_forward_t::<1, 8>(b, xq, yp, batch, bias, ep),
+            (2, 1) => self.block_forward_t::<2, 1>(b, xq, yp, batch, bias, ep),
+            (2, 2) => self.block_forward_t::<2, 2>(b, xq, yp, batch, bias, ep),
+            (2, 4) => self.block_forward_t::<2, 4>(b, xq, yp, batch, bias, ep),
+            (2, 8) => self.block_forward_t::<2, 8>(b, xq, yp, batch, bias, ep),
+            (4, 1) => self.block_forward_t::<4, 1>(b, xq, yp, batch, bias, ep),
+            (4, 2) => self.block_forward_t::<4, 2>(b, xq, yp, batch, bias, ep),
+            (4, 4) => self.block_forward_t::<4, 4>(b, xq, yp, batch, bias, ep),
+            (4, 8) => self.block_forward_t::<4, 8>(b, xq, yp, batch, bias, ep),
+            (8, 1) => self.block_forward_t::<8, 1>(b, xq, yp, batch, bias, ep),
+            (8, 2) => self.block_forward_t::<8, 2>(b, xq, yp, batch, bias, ep),
+            (8, 4) => self.block_forward_t::<8, 4>(b, xq, yp, batch, bias, ep),
+            (8, 8) => self.block_forward_t::<8, 8>(b, xq, yp, batch, bias, ep),
+            _ => {
+                debug_assert!(false, "unvalidated tile shape {tile:?}");
+                self.block_forward_t::<4, 8>(b, xq, yp, batch, bias, ep)
+            }
+        }
+    }
+
+    /// The tiled integer micro-GEMM over one block, `TM × TN` register tiles
+    /// of i32 accumulators.
+    fn block_forward_t<const TM: usize, const TN: usize>(
+        &self,
+        b: usize,
+        xq: &[i8],
+        yp: QOutPtr,
+        batch: usize,
+        bias: &[f32],
+        ep: QEpilogue,
+    ) {
+        let rs = self.layout.row_spans[b];
+        let cs = self.layout.col_spans[b];
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        let qb = self.block(b); // (rs.len × cs.len), row-major i8
+        let (out_b, in_b) = (rs.len, cs.len);
+        let mb = batch - batch % TM;
+        let nb = out_b - out_b % TN;
+
+        for bi0 in (0..mb).step_by(TM) {
+            for r0 in (0..nb).step_by(TN) {
+                let mut xrows = [&xq[..0]; TM];
+                for (i, xr) in xrows.iter_mut().enumerate() {
+                    let base = (bi0 + i) * cols + cs.start;
+                    *xr = &xq[base..base + in_b];
+                }
+                let mut wrows = [&qb[..0]; TN];
+                for (j, wr) in wrows.iter_mut().enumerate() {
+                    *wr = &qb[(r0 + j) * in_b..(r0 + j + 1) * in_b];
+                }
+                let mut acc = [[0i32; TN]; TM];
+                for p in 0..in_b {
+                    for i in 0..TM {
+                        let xv = xrows[i][p] as i32;
+                        for j in 0..TN {
+                            acc[i][j] += xv * wrows[j][p] as i32;
+                        }
+                    }
+                }
+                for i in 0..TM {
+                    let base = (bi0 + i) * rows + rs.start + r0;
+                    // SAFETY: rows of this block only — disjoint across tasks.
+                    let yrow = unsafe { yp.seg_mut(base, TN) };
+                    for j in 0..TN {
+                        let gr = rs.start + r0 + j;
+                        yrow[j] = dequant(acc[i][j], ep, self.row_scales[gr], bias[gr]);
+                    }
+                }
+            }
+        }
+        // Remainder regions (same split as the f32 kernel):
+        //   A: full-tile batch rows × leftover output rows
+        //   B: leftover batch rows × all output rows
+        if nb < out_b {
+            self.block_scalar(b, xq, yp, bias, ep, 0..mb, nb..out_b);
+        }
+        if mb < batch {
+            self.block_scalar(b, xq, yp, bias, ep, mb..batch, 0..out_b);
+        }
+    }
+
+    /// Scalar cell path for tile remainders (and the 1×1 "tile").
+    fn block_scalar(
+        &self,
+        b: usize,
+        xq: &[i8],
+        yp: QOutPtr,
+        bias: &[f32],
+        ep: QEpilogue,
+        bi_range: std::ops::Range<usize>,
+        r_range: std::ops::Range<usize>,
+    ) {
+        let rs = self.layout.row_spans[b];
+        let cs = self.layout.col_spans[b];
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        let qb = self.block(b);
+        let in_b = cs.len;
+        for bi in bi_range {
+            let xrow = &xq[bi * cols + cs.start..bi * cols + cs.start + in_b];
+            for r in r_range.clone() {
+                let wrow = &qb[r * in_b..(r + 1) * in_b];
+                let mut acc = 0i32;
+                for p in 0..in_b {
+                    acc += xrow[p] as i32 * wrow[p] as i32;
+                }
+                let gr = rs.start + r;
+                let idx = bi * rows + gr;
+                // SAFETY: a cell of this block's own rows — disjoint across tasks.
+                let cell = unsafe { yp.seg_mut(idx, 1) };
+                cell[0] = dequant(acc, ep, self.row_scales[gr], bias[gr]);
+            }
+        }
+    }
+}
+
+/// The dequantize + bias + ReLU epilogue applied to one finished integer
+/// accumulator. The scale product runs in f64 so the epilogue's own rounding
+/// stays far below the quantization error the bound accounts for; every code
+/// path (tiled, scalar remainder, reference) funnels through this one
+/// function, which is what makes cross-path equality exact.
+#[inline]
+fn dequant(acc: i32, ep: QEpilogue, row_scale: f32, bias: f32) -> f32 {
+    let v = (acc as f64 * (ep.act_scale as f64 * row_scale as f64)) as f32 + bias;
+    if ep.relu && v < 0.0 {
+        0.0
+    } else {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::prng::Xoshiro256pp;
+
+    fn mk(rows: usize, cols: usize, k: usize, rng: &mut Xoshiro256pp) -> BlockDiagMatrix {
+        let layout = BlockDiagLayout::new(rows, cols, k);
+        let mut packed = Vec::with_capacity(layout.nnz());
+        for _ in 0..layout.nnz() {
+            packed.push(rng.next_f32() * 2.0 - 1.0);
+        }
+        BlockDiagMatrix::from_packed(packed, layout)
+    }
+
+    fn quantize_input(x: &[f32]) -> (Vec<i8>, f32) {
+        let max_abs = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s = symmetric_scale(max_abs);
+        let mut q = Vec::new();
+        quantize_slice_into(x, s, &mut q);
+        (q, s)
+    }
+
+    #[test]
+    fn quantization_error_bounded_per_weight() {
+        let mut rng = Xoshiro256pp::seed_from_u64(71);
+        let bd = mk(40, 30, 4, &mut rng);
+        let qbd = QuantizedBlockDiagMatrix::from_f32(&bd);
+        assert_eq!(qbd.nnz(), bd.nnz());
+        let dense = bd.to_dense();
+        let deq = qbd.to_dense_f32();
+        for r in 0..40 {
+            let s = qbd.row_scales[r];
+            assert!(s > 0.0);
+            for c in 0..30 {
+                let err = (dense[r * 30 + c] - deq[r * 30 + c]).abs();
+                assert!(err <= s * 0.5 + 1e-7, "row {r}: err {err} > {}", s * 0.5);
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_matches_scalar_reference_exactly() {
+        let mut rng = Xoshiro256pp::seed_from_u64(72);
+        for (rows, cols, k, batch) in [(13, 9, 3, 1), (300, 784, 10, 32), (40, 40, 5, 6), (7, 7, 7, 9)] {
+            let bd = mk(rows, cols, k, &mut rng);
+            let qbd = QuantizedBlockDiagMatrix::from_f32(&bd);
+            let x: Vec<f32> = (0..batch * cols).map(|_| rng.next_f32() - 0.5).collect();
+            let (xq, s) = quantize_input(&x);
+            let bias: Vec<f32> = (0..rows).map(|_| rng.next_f32() - 0.5).collect();
+            for relu in [false, true] {
+                let mut y_ref = vec![0.0f32; batch * rows];
+                qbd.forward_fused_reference(&xq, &mut y_ref, batch, s, &bias, relu);
+                for (tm, tn) in [(1, 1), (1, 8), (2, 4), (4, 8), (8, 2), (8, 8)] {
+                    let tile = TileShape { batch: tm, rows: tn };
+                    let mut y = vec![0.0f32; batch * rows];
+                    qbd.forward_fused(&xq, &mut y, batch, s, &bias, relu, None, tile);
+                    assert_eq!(y, y_ref, "{rows}x{cols} k={k} b={batch} tile {tm}x{tn} relu={relu}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_matches_sequential_exactly() {
+        let mut rng = Xoshiro256pp::seed_from_u64(73);
+        let bd = mk(120, 90, 6, &mut rng);
+        let qbd = QuantizedBlockDiagMatrix::from_f32(&bd);
+        let batch = 5;
+        let x: Vec<f32> = (0..batch * 90).map(|_| rng.next_f32()).collect();
+        let (xq, s) = quantize_input(&x);
+        let bias: Vec<f32> = (0..120).map(|_| rng.next_f32() - 0.5).collect();
+        let mut y_seq = vec![0.0f32; batch * 120];
+        qbd.forward_fused(&xq, &mut y_seq, batch, s, &bias, true, None, TileShape::DEFAULT);
+        for nthreads in [2, 3, 8] {
+            let pool = ThreadPool::new(nthreads);
+            let mut y_par = vec![0.0f32; batch * 120];
+            qbd.forward_fused(&xq, &mut y_par, batch, s, &bias, true, Some(&pool), TileShape::DEFAULT);
+            assert_eq!(y_seq, y_par, "nthreads={nthreads}");
+        }
+    }
+
+    #[test]
+    fn dequantized_output_tracks_f32_kernel() {
+        // |y_q - y_f32| ≤ Σ_p |ŵ|·(s_x/2) + (s_w/2)·|x_p|  per output row
+        // (the single-layer dequantization error bound; no propagated error).
+        let mut rng = Xoshiro256pp::seed_from_u64(74);
+        let (rows, cols, k, batch) = (60, 44, 4, 3);
+        let bd = mk(rows, cols, k, &mut rng);
+        let qbd = QuantizedBlockDiagMatrix::from_f32(&bd);
+        let x: Vec<f32> = (0..batch * cols).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let (xq, s_x) = quantize_input(&x);
+        let bias: Vec<f32> = (0..rows).map(|_| rng.next_f32() - 0.5).collect();
+
+        let mut y_f = vec![0.0f32; batch * rows];
+        bd.forward_fused(&x, &mut y_f, batch, &bias, false, None, TileShape::DEFAULT);
+        let mut y_q = vec![0.0f32; batch * rows];
+        qbd.forward_fused(&xq, &mut y_q, batch, s_x, &bias, false, None, TileShape::DEFAULT);
+
+        let deq = qbd.to_dense_f32();
+        for bi in 0..batch {
+            for b in 0..qbd.nblocks() {
+                let rs = qbd.layout.row_spans[b];
+                let cs = qbd.layout.col_spans[b];
+                for r in rs.start..rs.end() {
+                    let s_w = qbd.row_scales[r];
+                    let mut bound = 0.0f64;
+                    for c in cs.start..cs.end() {
+                        let aw = deq[r * cols + c].abs() as f64;
+                        bound += aw * (s_x as f64 * 0.5) + (s_w as f64 * 0.5) * x[bi * cols + c].abs() as f64;
+                    }
+                    let err = (y_f[bi * rows + r] - y_q[bi * rows + r]).abs() as f64;
+                    assert!(err <= bound * 1.001 + 1e-4, "row {r}: err {err} > bound {bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        let mut rng = Xoshiro256pp::seed_from_u64(75);
+        let bd = mk(12, 8, 2, &mut rng);
+        let qbd = QuantizedBlockDiagMatrix::from_f32(&bd);
+        let rebuilt = QuantizedBlockDiagMatrix::from_parts(
+            qbd.layout.clone(),
+            qbd.packed.clone(),
+            qbd.row_scales.clone(),
+        )
+        .unwrap();
+        assert_eq!(rebuilt.block_off, qbd.block_off);
+        assert_eq!(rebuilt.to_dense_f32(), qbd.to_dense_f32());
+        // wrong lengths and bad scales rejected
+        assert!(QuantizedBlockDiagMatrix::from_parts(
+            qbd.layout.clone(),
+            vec![0i8; 3],
+            qbd.row_scales.clone()
+        )
+        .is_err());
+        assert!(QuantizedBlockDiagMatrix::from_parts(
+            qbd.layout.clone(),
+            qbd.packed.clone(),
+            vec![0.0; 12]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn storage_is_quarter_of_f32() {
+        let mut rng = Xoshiro256pp::seed_from_u64(76);
+        let bd = mk(300, 100, 10, &mut rng);
+        let qbd = QuantizedBlockDiagMatrix::from_f32(&bd);
+        // 3000 i8 + 300 f32 scales + spans vs 3000 f32 + spans
+        assert!(qbd.storage_bytes() * 7 < bd.storage_bytes() * 3, "{} vs {}", qbd.storage_bytes(), bd.storage_bytes());
+    }
+}

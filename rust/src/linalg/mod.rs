@@ -1,13 +1,16 @@
 //! Native linear algebra: dense GEMM, CSR (irregular-sparsity baseline), the
 //! persistent worker pool, and the register-tiled packed block-diagonal GEMM
-//! hot path.
+//! hot paths — f32 (`blockdiag_mm`) and int8 with a fused dequantize
+//! epilogue (`blockdiag_mm_i8`).
 pub mod blockdiag_mm;
+pub mod blockdiag_mm_i8;
 pub mod csr;
 pub mod gemm;
 pub mod pool;
 pub mod tensor;
 
 pub use blockdiag_mm::{BlockDiagMatrix, TileShape};
+pub use blockdiag_mm_i8::QuantizedBlockDiagMatrix;
 pub use csr::Csr;
 pub use pool::ThreadPool;
 pub use tensor::{Matrix, Tensor};

@@ -5,7 +5,8 @@
 //!   decompose   run the Fig.-1 sub-graph-separation demo
 //!   report      compression accounting (Table-1 param columns) for a model
 //!   train       train a model with MPD masks via the AOT/PJRT runtime
-//!   serve       start the HTTP inference server (dense + MPD variants)
+//!   quantize    post-training int8 quantization → checkpoint-v2 artifact
+//!   serve       start the HTTP inference server (dense + MPD + -int8 variants)
 //!   loadgen     drive closed/open-loop load against a running server
 //!   bench-fig1 / bench-fig4a / bench-fig4b / bench-fig5 / bench-table1 /
 //!   bench-speedup   regenerate the paper's figures/tables
@@ -36,6 +37,7 @@ fn main() {
         "decompose" => cmd_decompose(&flags),
         "report" => cmd_report(&flags),
         "train" => cmd_train(&flags),
+        "quantize" => cmd_quantize(&flags),
         "serve" => cmd_serve(&flags),
         "loadgen" => cmd_loadgen(&flags),
         "bench-fig1" => cmd_fig1(&flags),
@@ -72,12 +74,21 @@ COMMANDS
   report         --model M --nblocks K          Table-1 parameter accounting
   train          --model M --nblocks K [--steps N] [--lr F] [--seed S]
                  [--train-samples N] [--test-samples N] [--config FILE]
+  quantize       [--ckpt FILE] [--model M] [--nblocks K] [--steps N]
+                 [--seed S] [--out DIR] [--config FILE]
+                 post-training int8 quantization: load (or quick-train) a
+                 masked model, emit <model>_k<K>.packed.mpdc (f32) and
+                 <model>_k<K>.int8.mpdc (checkpoint v2, i8 + scale
+                 sidecars), report compression ratio + accuracy delta
+                 ([quant] in TOML tunes calibration)
   serve          [--port P] [--steps N] [--split dense:0.2,mpd:0.8]
                  [--config FILE]   quick-train a masked LeNet, register
-                 dense + csr + mpd variants, serve HTTP ([server] in TOML)
+                 dense + csr + mpd (+ mpd-int8/dense-int8 unless
+                 quant.enabled=false) variants, serve HTTP ([server] in TOML)
   loadgen        [--host H] [--port P] [--variant V] [--mode closed|open]
                  [--qps F] [--concurrency N] [--requests N] [--seed S]
-                 drive load against a running server; prints p50/p99 + req/s
+                 drive load against a running server; prints p50/p99 +
+                 req/s + the non-200 fraction by status class
   bench-fig1     [--out DIR]
   bench-fig4a    [--masks N] [--steps N] [--config FILE]
   bench-fig4b    [--masks N] [--out DIR]
@@ -272,15 +283,176 @@ fn cmd_train(flags: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Post-training int8 quantization: (quick-train or load) a masked model,
+/// emit the f32 packed artifact and the checkpoint-v2 int8 artifact, verify
+/// the int8 file round-trips bit-exactly, and report compression + accuracy.
+fn cmd_quantize(flags: &Flags) -> anyhow::Result<()> {
+    use mpdc::compress::compressor::MpdCompressor;
+    use mpdc::mask::prng::Xoshiro256pp;
+    use mpdc::nn::checkpoint;
+    use mpdc::nn::mlp::Mlp;
+    use mpdc::quant::{calibrate_chunked, QuantizedMlp};
+    use mpdc::train::native_trainer::{evaluate_packed, evaluate_quantized, fit_native};
+
+    let cfg = cfg_from_flags(flags)?;
+    let dir = out_dir(flags);
+    std::fs::create_dir_all(&dir)?;
+    let plan = cfg.model.plan(cfg.nblocks).map_err(|e| anyhow::anyhow!(e))?;
+    let comp = MpdCompressor::new(plan, cfg.seed);
+    let in_dim = comp.plan.layers[0].in_dim;
+    let (train, test) = common::make_datasets(cfg.model, cfg.train_samples, cfg.test_samples, cfg.seed);
+    anyhow::ensure!(
+        train.feature_dim == in_dim,
+        "dataset features {} != model input {in_dim}",
+        train.feature_dim
+    );
+
+    // 1) Trained f32 weights: --ckpt (fc{i}.w / fc{i}.b) or quick native training.
+    let (weights, biases) = if let Some(path) = flags.get("ckpt") {
+        println!("loading {path} (model {}, {} blocks, seed {})…", cfg.model.name(), cfg.nblocks, cfg.seed);
+        load_mlp_params(&comp, std::path::Path::new(path))?
+    } else {
+        println!(
+            "no --ckpt given: training {} natively ({} steps, {} blocks)…",
+            cfg.model.name(),
+            cfg.steps,
+            cfg.nblocks
+        );
+        let dims: Vec<usize> = std::iter::once(in_dim)
+            .chain(comp.plan.layers.iter().map(|l| l.out_dim))
+            .collect();
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xA5);
+        let mut mlp = Mlp::new(&dims, &mut rng).with_masks(comp.masks.clone());
+        let tc = train_cfg(&cfg);
+        fit_native(&mut mlp, &train, 50, &tc);
+        (
+            mlp.layers.iter().map(|l| l.w.clone()).collect::<Vec<_>>(),
+            mlp.layers.iter().map(|l| l.b.clone()).collect::<Vec<_>>(),
+        )
+    };
+
+    // 2) The f32 packed artifact (the compression baseline on disk).
+    let packed = comp.build_engine(&weights, &biases, &cfg.engine).map_err(|e| anyhow::anyhow!(e))?;
+    let stem = format!("{}_k{}", cfg.model.name(), cfg.nblocks);
+    let f32_path = dir.join(format!("{stem}.packed.mpdc"));
+    checkpoint::save(&f32_path, &comp.packed_f32_tensors(&weights, &biases))?;
+
+    // 3) Calibrate on training activations, quantize, emit checkpoint v2.
+    let nsamples = cfg.quant.calib_samples.min(train.len());
+    println!("calibrating on {nsamples} samples (batch {})…", cfg.quant.calib_batch);
+    let calib = calibrate_chunked(
+        &comp,
+        &weights,
+        &biases,
+        &train.x[..nsamples * in_dim],
+        nsamples,
+        cfg.quant.calib_batch,
+    );
+    let q = comp
+        .build_quantized_engine(&weights, &biases, &calib, &cfg.engine)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let i8_path = dir.join(format!("{stem}.int8.mpdc"));
+    checkpoint::save(&i8_path, &q.to_tensors())?;
+
+    // 4) The artifact must round-trip bit-exactly before we report success.
+    let back = QuantizedMlp::from_tensors(&comp, &checkpoint::load(&i8_path)?)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let probe = 8.min(test.len());
+    anyhow::ensure!(
+        q.forward(&test.x[..probe * in_dim], probe) == back.forward(&test.x[..probe * in_dim], probe),
+        "int8 artifact round-trip mismatch"
+    );
+
+    // 5) Report: artifact sizes, compression ratio, accuracy delta.
+    let f32_bytes = std::fs::metadata(&f32_path)?.len();
+    let i8_bytes = std::fs::metadata(&i8_path)?.len();
+    let ratio = f32_bytes as f64 / i8_bytes as f64;
+    let acc_f32 = evaluate_packed(&packed, &test, 64);
+    let acc_i8 = evaluate_quantized(&q, &test, 64);
+    let mut t = Table::new(&["artifact", "format", "bytes", "top-1"]);
+    t.row(&[
+        f32_path.display().to_string(),
+        "v1 f32 packed".into(),
+        f32_bytes.to_string(),
+        format!("{acc_f32:.4}"),
+    ]);
+    t.row(&[
+        i8_path.display().to_string(),
+        "v2 int8 + scales".into(),
+        i8_bytes.to_string(),
+        format!("{acc_i8:.4}"),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "artifact compression: {ratio:.2}× ({f32_bytes} → {i8_bytes} bytes){}",
+        if ratio < 3.5 { "  [below the 3.5× target]" } else { "" }
+    );
+    println!("accuracy delta (int8 − f32): {:+.4}", acc_i8 - acc_f32);
+    println!("round-trip: verified bit-exact on {probe} probe samples");
+    mpdc::util::json::append_jsonl(
+        std::path::Path::new("results/quantize.jsonl"),
+        &Json::obj(vec![
+            ("model", Json::str(cfg.model.name())),
+            ("nblocks", Json::num(cfg.nblocks as f64)),
+            ("f32_bytes", Json::num(f32_bytes as f64)),
+            ("int8_bytes", Json::num(i8_bytes as f64)),
+            ("ratio", Json::num(ratio)),
+            ("acc_f32", Json::num(acc_f32)),
+            ("acc_int8", Json::num(acc_i8)),
+            ("calib_samples", Json::num(nsamples as f64)),
+        ]),
+    )?;
+    Ok(())
+}
+
+/// Load `fc{i}.w` / `fc{i}.b` tensors (the `Mlp::named_params` layout) and
+/// re-apply the plan's masks, so a checkpoint trained under different masks
+/// cannot silently leak off-block weights into packing.
+fn load_mlp_params(
+    comp: &mpdc::compress::compressor::MpdCompressor,
+    path: &std::path::Path,
+) -> anyhow::Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+    let tensors = mpdc::nn::checkpoint::load(path)?;
+    let find = |name: &str| {
+        tensors
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing tensor {name}"))
+    };
+    let mut weights = Vec::new();
+    let mut biases = Vec::new();
+    for (i, lp) in comp.plan.layers.iter().enumerate() {
+        let w = find(&format!("fc{i}.w"))?;
+        anyhow::ensure!(
+            w.shape == vec![lp.out_dim, lp.in_dim],
+            "fc{i}.w: shape {:?} != [{}, {}]",
+            w.shape,
+            lp.out_dim,
+            lp.in_dim
+        );
+        let wv = w.as_f32().ok_or_else(|| anyhow::anyhow!("fc{i}.w is not f32"))?.to_vec();
+        let wv = match &comp.masks[i] {
+            Some(m) => m.apply(&wv),
+            None => wv,
+        };
+        let b = find(&format!("fc{i}.b"))?;
+        anyhow::ensure!(b.shape == vec![lp.out_dim], "fc{i}.b: shape {:?} != [{}]", b.shape, lp.out_dim);
+        weights.push(wv);
+        biases.push(b.as_f32().ok_or_else(|| anyhow::anyhow!("fc{i}.b is not f32"))?.to_vec());
+    }
+    Ok((weights, biases))
+}
+
 fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     use mpdc::compress::compressor::MpdCompressor;
-    use mpdc::compress::plan::SparsityPlan;
+    use mpdc::compress::plan::{LayerPlan, SparsityPlan};
     use mpdc::data::dataset::Dataset;
     use mpdc::data::synth::{SynthImages, SynthSpec};
     use mpdc::linalg::csr::Csr;
     use mpdc::mask::prng::Xoshiro256pp;
     use mpdc::nn::mlp::Mlp;
-    use mpdc::server::{spawn, CsrBackend, HttpServer, MlpBackend, PackedBackend, Router};
+    use mpdc::quant::calibrate_chunked;
+    use mpdc::server::{spawn, CsrBackend, HttpServer, MlpBackend, PackedBackend, QuantBackend, Router};
     use mpdc::train::native_trainer::fit_native;
     use std::sync::Arc;
 
@@ -322,6 +494,36 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     let (h, _w3) = spawn(PackedBackend { model: packed }, bc);
     router.register("mpd", h);
 
+    // Quantized -int8 variants of the same trained weights ([quant] in TOML):
+    // mpd-int8 runs the block-diagonal i8 engine, dense-int8 the same weights
+    // through an all-dense plan — both calibrated on the training activations.
+    if cfg.quant.enabled {
+        let nsamples = cfg.quant.calib_samples.min(train.len());
+        let calib_x = &train.x[..nsamples * 784];
+        let calib =
+            calibrate_chunked(&comp, &weights, &biases, calib_x, nsamples, cfg.quant.calib_batch);
+        let q = comp
+            .build_quantized_engine(&weights, &biases, &calib, &cfg.engine)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let (h, _wq1) = spawn(QuantBackend { model: q }, bc);
+        router.register("mpd-int8", h);
+
+        let dense_plan = SparsityPlan::new(vec![
+            LayerPlan::dense("fc1", 300, 784),
+            LayerPlan::dense("fc2", 100, 300),
+            LayerPlan::dense("fc3", 10, 100),
+        ])
+        .map_err(|e| anyhow::anyhow!(e))?;
+        let dense_comp = MpdCompressor::new(dense_plan, cfg.seed);
+        // calibration depends only on layer dims + weights (never on masks),
+        // so the scales computed for mpd-int8 are exactly right here too
+        let qd = dense_comp
+            .build_quantized_engine(&weights, &biases, &calib, &cfg.engine)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let (h, _wq2) = spawn(QuantBackend { model: qd }, bc);
+        router.register("dense-int8", h);
+    }
+
     if let Some(split) = flags.get("split") {
         let parsed: Vec<(String, f64)> = split
             .split(',')
@@ -337,8 +539,9 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         println!("weighted split: {split}");
     }
 
+    let variants = router.variant_names().join("/");
     let server = HttpServer::start(Arc::new(router), cfg.server.http_config())?;
-    println!("serving dense/csr/mpd on {}", server.url());
+    println!("serving {variants} on {}", server.url());
     println!("  curl {}/healthz", server.url());
     println!("  curl {}/variants", server.url());
     println!("  curl {}/metrics", server.url());
@@ -396,6 +599,14 @@ fn cmd_loadgen(flags: &Flags) -> anyhow::Result<()> {
         format!("{:.0}", report.latency.percentile_us(0.99)),
     ]);
     println!("{}", t.render());
+    println!(
+        "non-200 rate: {:.2}% (2xx={} 4xx={} 5xx={} transport={})",
+        report.non_200_rate() * 100.0,
+        report.status_classes[1],
+        report.status_classes[3],
+        report.status_classes[4],
+        report.transport_errors,
+    );
     mpdc::util::json::append_jsonl(
         std::path::Path::new("results/serve_loadgen.jsonl"),
         &Json::obj(vec![
@@ -405,6 +616,8 @@ fn cmd_loadgen(flags: &Flags) -> anyhow::Result<()> {
             ("ok", Json::num(report.ok as f64)),
             ("rejected", Json::num(report.rejected as f64)),
             ("errors", Json::num(report.errors as f64)),
+            ("non200_rate", Json::num(report.non_200_rate())),
+            ("transport_errors", Json::num(report.transport_errors as f64)),
             ("rps", Json::num(report.throughput_rps())),
             ("p50_us", Json::num(report.latency.percentile_us(0.5))),
             ("p99_us", Json::num(report.latency.percentile_us(0.99))),

@@ -27,21 +27,21 @@ pub fn save_masks(path: &Path, masks: &[MpdMask]) -> Result<(), CheckpointError>
             m.rows() < F32_EXACT_MAX && m.cols() < F32_EXACT_MAX,
             "mask dims exceed exact-f32 range"
         );
-        tensors.push(NamedTensor {
-            name: format!("mask{i}.dims"),
-            shape: vec![3],
-            data: vec![m.rows() as f32, m.cols() as f32, m.nblocks() as f32],
-        });
-        tensors.push(NamedTensor {
-            name: format!("mask{i}.p_row"),
-            shape: vec![m.rows()],
-            data: m.p_row.as_slice().iter().map(|&v| v as f32).collect(),
-        });
-        tensors.push(NamedTensor {
-            name: format!("mask{i}.p_col"),
-            shape: vec![m.cols()],
-            data: m.p_col.as_slice().iter().map(|&v| v as f32).collect(),
-        });
+        tensors.push(NamedTensor::f32(
+            format!("mask{i}.dims"),
+            vec![3],
+            vec![m.rows() as f32, m.cols() as f32, m.nblocks() as f32],
+        ));
+        tensors.push(NamedTensor::f32(
+            format!("mask{i}.p_row"),
+            vec![m.rows()],
+            m.p_row.as_slice().iter().map(|&v| v as f32).collect(),
+        ));
+        tensors.push(NamedTensor::f32(
+            format!("mask{i}.p_col"),
+            vec![m.cols()],
+            m.p_col.as_slice().iter().map(|&v| v as f32).collect(),
+        ));
     }
     checkpoint::save(path, &tensors)
 }
@@ -57,13 +57,16 @@ pub fn load_masks(path: &Path) -> Result<Vec<MpdMask>, String> {
         let [dims, p_row, p_col] = chunk else {
             return Err("bad chunk".into());
         };
-        if dims.name != format!("mask{i}.dims") || dims.data.len() != 3 {
+        let dims_v = dims.as_f32().ok_or_else(|| format!("mask {i}: dims tensor is not f32"))?;
+        if dims.name != format!("mask{i}.dims") || dims_v.len() != 3 {
             return Err(format!("unexpected tensor {} at mask {i}", dims.name));
         }
-        let rows = dims.data[0] as usize;
-        let cols = dims.data[1] as usize;
-        let k = dims.data[2] as usize;
-        if p_row.data.len() != rows || p_col.data.len() != cols {
+        let rows = dims_v[0] as usize;
+        let cols = dims_v[1] as usize;
+        let k = dims_v[2] as usize;
+        let p_row_v = p_row.as_f32().ok_or_else(|| format!("mask {i}: p_row tensor is not f32"))?;
+        let p_col_v = p_col.as_f32().ok_or_else(|| format!("mask {i}: p_col tensor is not f32"))?;
+        if p_row_v.len() != rows || p_col_v.len() != cols {
             return Err(format!("mask {i}: permutation length mismatch"));
         }
         let to_map = |data: &[f32]| -> Result<Permutation, String> {
@@ -71,8 +74,8 @@ pub fn load_masks(path: &Path) -> Result<Vec<MpdMask>, String> {
         };
         masks.push(MpdMask {
             layout: BlockDiagLayout::new(rows, cols, k),
-            p_row: to_map(&p_row.data).map_err(|e| format!("mask {i} p_row: {e}"))?,
-            p_col: to_map(&p_col.data).map_err(|e| format!("mask {i} p_col: {e}"))?,
+            p_row: to_map(p_row_v).map_err(|e| format!("mask {i} p_row: {e}"))?,
+            p_col: to_map(p_col_v).map_err(|e| format!("mask {i} p_col: {e}"))?,
         });
     }
     Ok(masks)
@@ -109,9 +112,9 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("mpdc_maskser2_{}", std::process::id()));
         let path = dir.join("bad.mpdc");
         let tensors = vec![
-            NamedTensor { name: "mask0.dims".into(), shape: vec![3], data: vec![2.0, 2.0, 1.0] },
-            NamedTensor { name: "mask0.p_row".into(), shape: vec![2], data: vec![0.0, 0.0] },
-            NamedTensor { name: "mask0.p_col".into(), shape: vec![2], data: vec![0.0, 1.0] },
+            NamedTensor::f32("mask0.dims", vec![3], vec![2.0, 2.0, 1.0]),
+            NamedTensor::f32("mask0.p_row", vec![2], vec![0.0, 0.0]),
+            NamedTensor::f32("mask0.p_col", vec![2], vec![0.0, 1.0]),
         ];
         checkpoint::save(&path, &tensors).unwrap();
         assert!(load_masks(&path).unwrap_err().contains("p_row"));

@@ -1,25 +1,45 @@
-//! Binary checkpoint format for trained models ("MPDC" format v1).
+//! Binary checkpoint format for trained models ("MPDC" format, versions 1–2).
 //!
 //! Layout (little-endian):
 //! ```text
 //!   magic   b"MPDC"          4 bytes
-//!   version u32              currently 1
+//!   version u32              1 (f32-only) or 2 (per-tensor dtype tag)
 //!   ntensor u32
 //!   repeat ntensor times:
 //!     name_len u32, name utf-8 bytes
 //!     ndim u32, dims u64 × ndim
-//!     data f32 × prod(dims)
+//!     dtype u8                 — version 2 only (0 = f32, 1 = i8)
+//!     data elem × prod(dims)   — elem is f32 (v1, or v2 dtype 0) or i8
 //!   crc32 u32                over everything before this field
 //! ```
 //! The trailing CRC (see `util::crc32`) catches truncation/corruption — a
 //! checkpoint that loads is bit-exact.
+//!
+//! **Version policy.** [`save`] emits version 1 when every tensor is f32 —
+//! bit-identical to what pre-quantization builds wrote, so old readers and
+//! old files keep working — and version 2 as soon as any tensor carries a
+//! non-f32 dtype. [`load`] reads both. Quantized models (`quant::QuantizedMlp`)
+//! store i8 weight tensors next to f32 scale sidecars by naming convention
+//! (`fc0.wq` + `fc0.wq.scale`); the container itself only knows dtypes.
+//!
+//! **Hostile-input hardening.** Before a tensor's data buffer is ever
+//! allocated, `prod(dims) × elem_size` is computed with overflow checks and
+//! validated against the bytes actually remaining in the file, so a corrupt
+//! or truncated header fails with [`CheckpointError::Corrupt`] instead of
+//! attempting a multi-GB allocation.
 
 use crate::util::crc32::Crc32;
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"MPDC";
-const VERSION: u32 = 1;
+/// Original all-f32 format.
+const VERSION_V1: u32 = 1;
+/// Adds a one-byte dtype tag per tensor (i8 quantized weights + f32 sidecars).
+const VERSION_V2: u32 = 2;
+
+const DTYPE_F32: u8 = 0;
+const DTYPE_I8: u8 = 1;
 
 #[derive(Debug)]
 pub enum CheckpointError {
@@ -59,22 +79,95 @@ impl From<std::io::Error> for CheckpointError {
     }
 }
 
+/// Typed tensor payload. `F32` round-trips through format v1; any other
+/// dtype forces the container to version 2.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes per element of this dtype.
+    pub fn elem_size(&self) -> usize {
+        match self {
+            TensorData::F32(_) => 4,
+            TensorData::I8(_) => 1,
+        }
+    }
+
+    fn dtype_tag(&self) -> u8 {
+        match self {
+            TensorData::F32(_) => DTYPE_F32,
+            TensorData::I8(_) => DTYPE_I8,
+        }
+    }
+}
+
 /// A named tensor in a checkpoint.
 #[derive(Clone, Debug, PartialEq)]
 pub struct NamedTensor {
     pub name: String,
     pub shape: Vec<usize>,
-    pub data: Vec<f32>,
+    pub data: TensorData,
 }
 
-/// Save named tensors to `path` (parents created).
+impl NamedTensor {
+    pub fn f32(name: impl Into<String>, shape: Vec<usize>, data: Vec<f32>) -> Self {
+        Self { name: name.into(), shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i8(name: impl Into<String>, shape: Vec<usize>, data: Vec<i8>) -> Self {
+        Self { name: name.into(), shape, data: TensorData::I8(data) }
+    }
+
+    /// Borrow the payload as f32 (None when the tensor holds another dtype).
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Borrow the payload as i8 (None when the tensor holds another dtype).
+    pub fn as_i8(&self) -> Option<&[i8]> {
+        match &self.data {
+            TensorData::I8(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Take the payload as f32 (None when the tensor holds another dtype).
+    pub fn into_f32(self) -> Option<Vec<f32>> {
+        match self.data {
+            TensorData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Save named tensors to `path` (parents created). Emits format v1 when all
+/// tensors are f32 (byte-compatible with old files), v2 otherwise.
 pub fn save(path: &Path, tensors: &[NamedTensor]) -> Result<(), CheckpointError> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
+    let version =
+        if tensors.iter().all(|t| matches!(t.data, TensorData::F32(_))) { VERSION_V1 } else { VERSION_V2 };
     let mut buf: Vec<u8> = Vec::new();
     buf.extend_from_slice(MAGIC);
-    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&version.to_le_bytes());
     buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
     for t in tensors {
         let numel: usize = t.shape.iter().product();
@@ -85,8 +178,20 @@ pub fn save(path: &Path, tensors: &[NamedTensor]) -> Result<(), CheckpointError>
         for &d in &t.shape {
             buf.extend_from_slice(&(d as u64).to_le_bytes());
         }
-        for &v in &t.data {
-            buf.extend_from_slice(&v.to_le_bytes());
+        if version == VERSION_V2 {
+            buf.push(t.data.dtype_tag());
+        }
+        match &t.data {
+            TensorData::F32(vals) => {
+                for &v in vals {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            TensorData::I8(vals) => {
+                for &v in vals {
+                    buf.push(v as u8);
+                }
+            }
         }
     }
     let mut crc = Crc32::new();
@@ -102,7 +207,8 @@ pub fn save(path: &Path, tensors: &[NamedTensor]) -> Result<(), CheckpointError>
     Ok(())
 }
 
-/// Load all tensors from `path`, verifying the CRC.
+/// Load all tensors from `path`, verifying the CRC. Accepts format v1
+/// (implicit f32) and v2 (per-tensor dtype tags).
 pub fn load(path: &Path) -> Result<Vec<NamedTensor>, CheckpointError> {
     let mut bytes = Vec::new();
     std::fs::File::open(path)?.read_to_end(&mut bytes)?;
@@ -119,7 +225,7 @@ pub fn load(path: &Path) -> Result<Vec<NamedTensor>, CheckpointError> {
     }
     let mut pos = 0usize;
     let take = |pos: &mut usize, n: usize| -> Result<&[u8], CheckpointError> {
-        if *pos + n > body.len() {
+        if n > body.len() - *pos {
             return Err(CheckpointError::Corrupt(format!("truncated at byte {pos}", pos = *pos)));
         }
         let s = &body[*pos..*pos + n];
@@ -130,11 +236,11 @@ pub fn load(path: &Path) -> Result<Vec<NamedTensor>, CheckpointError> {
         return Err(CheckpointError::BadMagic);
     }
     let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
-    if version != VERSION {
+    if version != VERSION_V1 && version != VERSION_V2 {
         return Err(CheckpointError::BadVersion(version));
     }
     let ntensor = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
-    let mut out = Vec::with_capacity(ntensor);
+    let mut out = Vec::with_capacity(ntensor.min(4096));
     for _ in 0..ntensor {
         let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
         if name_len > 4096 {
@@ -150,10 +256,44 @@ pub fn load(path: &Path) -> Result<Vec<NamedTensor>, CheckpointError> {
         for _ in 0..ndim {
             shape.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
         }
-        let numel: usize = shape.iter().product();
-        let raw = take(&mut pos, numel * 4)?;
-        let data: Vec<f32> =
-            raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        let dtype = if version == VERSION_V2 {
+            match take(&mut pos, 1)?[0] {
+                DTYPE_F32 => DTYPE_F32,
+                DTYPE_I8 => DTYPE_I8,
+                other => {
+                    return Err(CheckpointError::Corrupt(format!(
+                        "tensor {name}: unknown dtype tag {other}"
+                    )))
+                }
+            }
+        } else {
+            DTYPE_F32
+        };
+        // Validate the claimed payload size BEFORE allocating anything for
+        // it: the element count must not overflow, and the byte count must
+        // fit in what actually remains of the file — a corrupt header
+        // otherwise asks for a multi-GB buffer.
+        let elem_size = if dtype == DTYPE_F32 { 4usize } else { 1 };
+        let numel = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| CheckpointError::Corrupt(format!("tensor {name}: dims product overflows")))?;
+        let nbytes = numel
+            .checked_mul(elem_size)
+            .ok_or_else(|| CheckpointError::Corrupt(format!("tensor {name}: byte size overflows")))?;
+        if nbytes > body.len() - pos {
+            return Err(CheckpointError::Corrupt(format!(
+                "tensor {name}: {nbytes} data bytes claimed but only {} remain",
+                body.len() - pos
+            )));
+        }
+        let raw = take(&mut pos, nbytes)?;
+        let data = match dtype {
+            DTYPE_F32 => TensorData::F32(
+                raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            _ => TensorData::I8(raw.iter().map(|&b| b as i8).collect()),
+        };
         out.push(NamedTensor { name, shape, data });
     }
     if pos != body.len() {
@@ -177,9 +317,9 @@ mod tests {
         let dir = tmpdir();
         let path = dir.join("a.mpdc");
         let tensors = vec![
-            NamedTensor { name: "fc0.w".into(), shape: vec![3, 4], data: (0..12).map(|i| i as f32).collect() },
-            NamedTensor { name: "fc0.b".into(), shape: vec![3], data: vec![0.1, -0.2, 0.3] },
-            NamedTensor { name: "empty".into(), shape: vec![0], data: vec![] },
+            NamedTensor::f32("fc0.w", vec![3, 4], (0..12).map(|i| i as f32).collect()),
+            NamedTensor::f32("fc0.b", vec![3], vec![0.1, -0.2, 0.3]),
+            NamedTensor::f32("empty", vec![0], vec![]),
         ];
         save(&path, &tensors).unwrap();
         let back = load(&path).unwrap();
@@ -188,10 +328,38 @@ mod tests {
     }
 
     #[test]
+    fn all_f32_saves_as_v1() {
+        let dir = tmpdir();
+        let path = dir.join("v1.mpdc");
+        save(&path, &[NamedTensor::f32("t", vec![2], vec![1.0, 2.0])]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), VERSION_V1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn i8_tensor_forces_v2_and_roundtrips() {
+        let dir = tmpdir();
+        let path = dir.join("v2.mpdc");
+        let tensors = vec![
+            NamedTensor::i8("fc0.wq", vec![2, 3], vec![-128, -1, 0, 1, 42, 127]),
+            NamedTensor::f32("fc0.wq.scale", vec![2], vec![0.01, 0.02]),
+        ];
+        save(&path, &tensors).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), VERSION_V2);
+        let back = load(&path).unwrap();
+        assert_eq!(back, tensors);
+        assert_eq!(back[0].as_i8().unwrap(), &[-128, -1, 0, 1, 42, 127]);
+        assert!(back[0].as_f32().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn detects_corruption() {
         let dir = tmpdir();
         let path = dir.join("b.mpdc");
-        save(&path, &[NamedTensor { name: "t".into(), shape: vec![2], data: vec![1.0, 2.0] }]).unwrap();
+        save(&path, &[NamedTensor::f32("t", vec![2], vec![1.0, 2.0])]).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         bytes[20] ^= 0xFF; // flip a data byte
         std::fs::write(&path, &bytes).unwrap();
@@ -206,7 +374,7 @@ mod tests {
     fn detects_truncation() {
         let dir = tmpdir();
         let path = dir.join("c.mpdc");
-        save(&path, &[NamedTensor { name: "t".into(), shape: vec![8], data: vec![1.0; 8] }]).unwrap();
+        save(&path, &[NamedTensor::f32("t", vec![8], vec![1.0; 8])]).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
         assert!(load(&path).is_err());

@@ -1,0 +1,176 @@
+//! Activation-range calibration for post-training quantization.
+//!
+//! Symmetric int8 activation quantization needs one scale per layer input:
+//! `x ≈ qx · s_x` with `s_x = max|x| / 127` over a calibration set. The
+//! max-abs statistic is **permutation-invariant**, so calibrating on the
+//! logical (un-permuted) masked-dense forward gives exactly the scales the
+//! permuted packed runtime needs — gathers reorder features, they never
+//! change magnitudes. That keeps the calibrator independent of the stage
+//! pipeline: it runs the plain layer-by-layer f32 network.
+
+use crate::compress::compressor::MpdCompressor;
+use crate::linalg::blockdiag_mm_i8::symmetric_scale;
+use crate::linalg::gemm::gemm_a_bt;
+
+/// Per-layer activation scales derived from a calibration run. `act_scales[i]`
+/// is the symmetric scale of layer `i`'s *input* activations.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Calibration {
+    pub act_scales: Vec<f32>,
+    /// Samples the statistics were gathered over (provenance).
+    pub samples: usize,
+}
+
+impl Calibration {
+    /// Fallback for inputs known to live in `[-1, 1]` when no calibration
+    /// data is available: every layer input scale covers a unit range.
+    pub fn unit_range(nlayers: usize) -> Self {
+        Self { act_scales: vec![symmetric_scale(1.0); nlayers], samples: 0 }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.act_scales.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+            return Err("activation scales must be finite and positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// Run `x` (`[batch × in_dim]`, row-major) through the masked-dense f32
+/// network defined by `comp` + trained `weights`/`biases`, recording the
+/// max-abs of every layer's input. ReLU between layers, none after the last —
+/// the same activation structure `PackedMlp`/`QuantizedMlp` execute.
+pub fn calibrate(
+    comp: &MpdCompressor,
+    weights: &[Vec<f32>],
+    biases: &[Vec<f32>],
+    x: &[f32],
+    batch: usize,
+) -> Calibration {
+    let n = comp.nlayers();
+    assert_eq!(weights.len(), n);
+    assert_eq!(biases.len(), n);
+    assert!(batch > 0, "calibration needs at least one sample");
+    assert_eq!(x.len(), batch * comp.plan.layers[0].in_dim, "calibration input shape");
+    let mut act = x.to_vec();
+    let mut act_scales = Vec::with_capacity(n);
+    for (i, lp) in comp.plan.layers.iter().enumerate() {
+        let max_abs = act.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        act_scales.push(symmetric_scale(max_abs));
+        let mut y = vec![0.0f32; batch * lp.out_dim];
+        for bi in 0..batch {
+            y[bi * lp.out_dim..(bi + 1) * lp.out_dim].copy_from_slice(&biases[i]);
+        }
+        gemm_a_bt(&act, &weights[i], &mut y, batch, lp.in_dim, lp.out_dim);
+        if i + 1 < n {
+            y.iter_mut().for_each(|v| *v = v.max(0.0));
+        }
+        act = y;
+    }
+    Calibration { act_scales, samples: batch }
+}
+
+/// [`calibrate`] over `samples` inputs in forward passes of at most `chunk`
+/// samples each (bounds peak activation memory for big calibration sets).
+/// Max-abs statistics merge as an elementwise max of the per-chunk scales,
+/// so the result equals one giant-batch calibration exactly.
+pub fn calibrate_chunked(
+    comp: &MpdCompressor,
+    weights: &[Vec<f32>],
+    biases: &[Vec<f32>],
+    x: &[f32],
+    samples: usize,
+    chunk: usize,
+) -> Calibration {
+    assert!(samples > 0 && chunk > 0);
+    let in_dim = comp.plan.layers[0].in_dim;
+    assert_eq!(x.len(), samples * in_dim, "calibration input shape");
+    let mut merged: Option<Calibration> = None;
+    let mut done = 0usize;
+    while done < samples {
+        let n = chunk.min(samples - done);
+        let part = calibrate(comp, weights, biases, &x[done * in_dim..(done + n) * in_dim], n);
+        merged = Some(match merged {
+            None => part,
+            Some(mut acc) => {
+                for (a, b) in acc.act_scales.iter_mut().zip(&part.act_scales) {
+                    *a = a.max(*b);
+                }
+                acc.samples += part.samples;
+                acc
+            }
+        });
+        done += n;
+    }
+    merged.expect("samples > 0")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::plan::{LayerPlan, SparsityPlan};
+    use crate::mask::prng::Xoshiro256pp;
+
+    #[test]
+    fn scales_cover_observed_ranges() {
+        let plan = SparsityPlan::new(vec![
+            LayerPlan::masked("a", 16, 12, 4),
+            LayerPlan::dense("b", 4, 16),
+        ])
+        .unwrap();
+        let comp = MpdCompressor::new(plan, 5);
+        let (weights, biases) = comp.random_masked_weights(5);
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let batch = 8;
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let cal = calibrate(&comp, &weights, &biases, &x, batch);
+        cal.validate().unwrap();
+        assert_eq!(cal.act_scales.len(), 2);
+        assert_eq!(cal.samples, batch);
+        // layer-0 input scale covers the raw input range exactly
+        let max_abs = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!((cal.act_scales[0] - max_abs / 127.0).abs() < 1e-7);
+        // every quantization of a calibration input stays un-clipped
+        for &v in &x {
+            assert!((v / cal.act_scales[0]).abs() <= 127.5);
+        }
+    }
+
+    #[test]
+    fn chunked_equals_single_batch() {
+        let plan = SparsityPlan::new(vec![
+            LayerPlan::masked("a", 24, 18, 3),
+            LayerPlan::dense("b", 5, 24),
+        ])
+        .unwrap();
+        let comp = MpdCompressor::new(plan, 9);
+        let (weights, biases) = comp.random_masked_weights(9);
+        let mut rng = Xoshiro256pp::seed_from_u64(10);
+        let samples = 23;
+        let x: Vec<f32> = (0..samples * 18).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let whole = calibrate(&comp, &weights, &biases, &x, samples);
+        for chunk in [1, 4, 7, 23, 64] {
+            let parts = calibrate_chunked(&comp, &weights, &biases, &x, samples, chunk);
+            assert_eq!(parts.act_scales, whole.act_scales, "chunk={chunk}");
+            assert_eq!(parts.samples, samples);
+        }
+    }
+
+    #[test]
+    fn unit_range_fallback_is_valid() {
+        let cal = Calibration::unit_range(3);
+        cal.validate().unwrap();
+        assert_eq!(cal.act_scales.len(), 3);
+        assert_eq!(cal.samples, 0);
+    }
+
+    #[test]
+    fn degenerate_all_zero_input_still_validates() {
+        let plan = SparsityPlan::new(vec![LayerPlan::dense("only", 3, 5)]).unwrap();
+        let comp = MpdCompressor::new(plan, 1);
+        let (weights, biases) = comp.random_masked_weights(1);
+        let cal = calibrate(&comp, &weights, &biases, &[0.0; 10], 2);
+        cal.validate().unwrap(); // zero range ⇒ scale 1.0, not 0/NaN
+        assert_eq!(cal.act_scales[0], 1.0);
+    }
+}

@@ -1,0 +1,34 @@
+//! Post-training int8 quantization of packed block-diagonal models.
+//!
+//! The paper's headline compression (10× on LeNet, 8× on AlexNet) pairs the
+//! MPD block structure with low-precision storage; PERMDNN makes the same
+//! observation for permuted sparsity generally — the regular block layout is
+//! exactly what makes fixed-point scaling cheap, because every block row is a
+//! contiguous dense vector with a single scale. This module closes that gap:
+//!
+//! * [`calibrate`](calibrate::calibrate) runs sample activations through the
+//!   f32 model and derives one symmetric activation scale per layer
+//!   ([`Calibration`]); weights get symmetric per-block-row scales at
+//!   quantization time.
+//! * [`QuantizedMlp`] is the int8 twin of
+//!   [`crate::compress::packed_model::PackedMlp`]: the same stage pipeline
+//!   and consecutive-layer permutation fusion, with every FC stage executed
+//!   by the register-tiled i8×i8→i32 kernel
+//!   ([`crate::linalg::QuantizedBlockDiagMatrix`]) whose epilogue fuses
+//!   dequantize + bias + ReLU. Dense (unmasked) layers run through the same
+//!   kernel as a single block.
+//! * Checkpoint format v2 (`nn::checkpoint`) persists the quantized model as
+//!   i8 weight tensors with f32 scale sidecars
+//!   ([`QuantizedMlp::to_tensors`] / [`QuantizedMlp::from_tensors`]).
+//!
+//! Accuracy is bounded, not hoped for: [`QuantizedMlp::forward_with_bound`]
+//! propagates an analytic per-element worst-case dequantization error bound
+//! alongside the forward pass, and the property tests assert the quantized
+//! output never leaves that envelope of the f32 reference (see DESIGN.md
+//! §Quantization for the derivation).
+
+pub mod calibrate;
+pub mod qmodel;
+
+pub use calibrate::{calibrate, calibrate_chunked, Calibration};
+pub use qmodel::QuantizedMlp;

@@ -363,6 +363,43 @@ impl InferBackend for PackedBackend {
     }
 }
 
+/// Backend over the int8 quantized packed model (`quant::QuantizedMlp`) —
+/// the `-int8` serving variant: same stage pipeline as [`PackedBackend`],
+/// with each layer executed by the i8×i8→i32 kernel and a fused
+/// dequantize+bias+ReLU epilogue. Carries its persistent pool handle the same
+/// way the f32 engine does.
+pub struct QuantBackend {
+    pub model: crate::quant::QuantizedMlp,
+}
+
+impl QuantBackend {
+    /// Wrap a quantized model and point it at a shared persistent pool.
+    pub fn with_pool(
+        model: crate::quant::QuantizedMlp,
+        pool: std::sync::Arc<crate::linalg::ThreadPool>,
+    ) -> Self {
+        Self { model: model.with_pool(pool) }
+    }
+}
+
+impl InferBackend for QuantBackend {
+    fn feature_dim(&self) -> usize {
+        self.model.in_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.model.out_dim
+    }
+
+    fn max_batch(&self) -> usize {
+        1024
+    }
+
+    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(self.model.forward(x, batch))
+    }
+}
+
 /// Backend over an AOT PJRT inference executable: pads each dynamic batch to
 /// the artifact's static batch (the usual static-shape serving trick).
 pub struct AotBackend {

@@ -16,7 +16,11 @@
 //! Arrivals use the repo's deterministic [`Xoshiro256pp`] stream
 //! (exponential inter-arrival gaps), so a load run is reproducible
 //! seed-for-seed. The latency sink is the same log-bucketed
-//! [`Histogram`] the server uses (≈7% resolution).
+//! [`Histogram`] the server uses (≈7% resolution) and records HTTP 200s
+//! only; every response is additionally counted per status class
+//! ([`LoadgenReport::status_classes`]) so a saturation run reports its
+//! 429/5xx fraction ([`LoadgenReport::non_200_rate`]) instead of silently
+//! dropping it from the percentiles.
 //!
 //! [`HttpClient`] is the matching dependency-free HTTP/1.1 client (keep-alive
 //! with one transparent reconnect), also used by the integration tests and
@@ -183,6 +187,12 @@ pub struct LoadgenReport {
     pub rejected: u64,
     /// Transport failures and any other status.
     pub errors: u64,
+    /// Responses per HTTP status class: index 0 = 1xx … index 4 = 5xx.
+    /// Every HTTP response is counted here (200s and 429s included);
+    /// transport failures never produced a status and are excluded.
+    pub status_classes: [u64; 5],
+    /// Requests that failed at the transport layer (connect/read/write/EOF).
+    pub transport_errors: u64,
     pub elapsed: Duration,
     /// Latency distribution of **successful** (HTTP 200) requests only;
     /// rejections and errors are counted but never recorded here.
@@ -198,13 +208,28 @@ impl LoadgenReport {
         self.ok as f64 / self.elapsed.as_secs_f64()
     }
 
+    /// Fraction of sent requests that did **not** come back as HTTP 200 —
+    /// the number a saturation run is actually about: with the histogram
+    /// recording successes only, this is where the 429 wave shows up.
+    pub fn non_200_rate(&self) -> f64 {
+        if self.sent == 0 {
+            return 0.0;
+        }
+        (self.sent - self.ok) as f64 / self.sent as f64
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "sent={} ok={} rejected={} errors={} | {:.0} req/s | p50/p90/p99 = {:.0}/{:.0}/{:.0} µs",
+            "sent={} ok={} rejected={} errors={} | non-200 {:.2}% (4xx={} 5xx={} transport={}) | \
+             {:.0} req/s | p50/p90/p99 = {:.0}/{:.0}/{:.0} µs",
             self.sent,
             self.ok,
             self.rejected,
             self.errors,
+            self.non_200_rate() * 100.0,
+            self.status_classes[3],
+            self.status_classes[4],
+            self.transport_errors,
             self.throughput_rps(),
             self.latency.percentile_us(0.5),
             self.latency.percentile_us(0.9),
@@ -239,6 +264,8 @@ pub fn run_http(addr: SocketAddr, variant: &str, feature_dim: usize, cfg: &Loadg
     let ok = AtomicU64::new(0);
     let rejected = AtomicU64::new(0);
     let errors = AtomicU64::new(0);
+    let status_classes: [AtomicU64; 5] = Default::default();
+    let transport_errors = AtomicU64::new(0);
     let next = AtomicUsize::new(0);
     let latency = Histogram::new();
     let t0 = Instant::now();
@@ -247,6 +274,7 @@ pub fn run_http(addr: SocketAddr, variant: &str, feature_dim: usize, cfg: &Loadg
             let (path, schedule) = (&path, &schedule);
             let (sent, ok, rejected, errors, next, latency) =
                 (&sent, &ok, &rejected, &errors, &next, &latency);
+            let (status_classes, transport_errors) = (&status_classes, &transport_errors);
             let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed).fork(w as u64 + 1);
             let arrival = cfg.arrival;
             let requests = cfg.requests;
@@ -274,18 +302,31 @@ pub fn run_http(addr: SocketAddr, variant: &str, feature_dim: usize, cfg: &Loadg
                     let body = Json::obj(vec![("input", Json::Arr(input))]);
                     sent.fetch_add(1, Ordering::Relaxed);
                     match client.post_json(path, &body) {
-                        Ok((200, _)) => {
-                            ok.fetch_add(1, Ordering::Relaxed);
-                            // Only successes enter the latency distribution:
-                            // fast 429s and client-timeout errors would
-                            // otherwise skew the percentiles exactly when the
-                            // server is saturated and they matter most.
-                            latency.record(started.elapsed());
+                        Ok((status, _)) => {
+                            let class = (status / 100) as usize;
+                            if (1..=5).contains(&class) {
+                                status_classes[class - 1].fetch_add(1, Ordering::Relaxed);
+                            }
+                            match status {
+                                200 => {
+                                    ok.fetch_add(1, Ordering::Relaxed);
+                                    // Only successes enter the latency
+                                    // distribution: fast 429s and client-
+                                    // timeout errors would otherwise skew the
+                                    // percentiles exactly when the server is
+                                    // saturated and they matter most.
+                                    latency.record(started.elapsed());
+                                }
+                                429 => {
+                                    rejected.fetch_add(1, Ordering::Relaxed);
+                                }
+                                _ => {
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
                         }
-                        Ok((429, _)) => {
-                            rejected.fetch_add(1, Ordering::Relaxed);
-                        }
-                        Ok(_) | Err(_) => {
+                        Err(_) => {
+                            transport_errors.fetch_add(1, Ordering::Relaxed);
                             errors.fetch_add(1, Ordering::Relaxed);
                         }
                     }
@@ -298,6 +339,8 @@ pub fn run_http(addr: SocketAddr, variant: &str, feature_dim: usize, cfg: &Loadg
         ok: ok.into_inner(),
         rejected: rejected.into_inner(),
         errors: errors.into_inner(),
+        status_classes: status_classes.map(|c| c.into_inner()),
+        transport_errors: transport_errors.into_inner(),
         elapsed: t0.elapsed(),
         latency,
     }
@@ -353,11 +396,32 @@ mod tests {
             ok: 7,
             rejected: 2,
             errors: 1,
+            status_classes: [0, 7, 0, 2, 0],
+            transport_errors: 1,
             elapsed: Duration::from_secs(1),
             latency: Histogram::new(),
         };
         assert!((r.throughput_rps() - 7.0).abs() < 1e-9);
+        // 3 of 10 sent did not come back 200
+        assert!((r.non_200_rate() - 0.3).abs() < 1e-12);
         let s = r.summary();
         assert!(s.contains("ok=7") && s.contains("rejected=2"), "{s}");
+        assert!(s.contains("non-200 30.00%") && s.contains("4xx=2") && s.contains("transport=1"), "{s}");
+    }
+
+    #[test]
+    fn non_200_rate_handles_empty_run() {
+        let r = LoadgenReport {
+            sent: 0,
+            ok: 0,
+            rejected: 0,
+            errors: 0,
+            status_classes: [0; 5],
+            transport_errors: 0,
+            elapsed: Duration::ZERO,
+            latency: Histogram::new(),
+        };
+        assert_eq!(r.non_200_rate(), 0.0);
+        assert_eq!(r.throughput_rps(), 0.0);
     }
 }

@@ -19,7 +19,7 @@ pub mod router;
 
 pub use batcher::{
     spawn, AotBackend, BatcherConfig, BatcherHandle, ConstBackend, CsrBackend, InferBackend,
-    MlpBackend, PackedBackend, ServeError,
+    MlpBackend, PackedBackend, QuantBackend, ServeError,
 };
 pub use http::{FrontendStats, HttpConfig, HttpServer};
 pub use loadgen::{Arrival, HttpClient, LoadgenConfig, LoadgenReport};

@@ -201,11 +201,7 @@ impl AotTrainer {
             .params
             .iter()
             .enumerate()
-            .map(|(i, p)| NamedTensor {
-                name: format!("param{i}"),
-                shape: p.shape().to_vec(),
-                data: p.as_f32().to_vec(),
-            })
+            .map(|(i, p)| NamedTensor::f32(format!("param{i}"), p.shape().to_vec(), p.as_f32().to_vec()))
             .collect();
         checkpoint::save(path, &tensors)?;
         Ok(())
@@ -217,7 +213,9 @@ impl AotTrainer {
         anyhow::ensure!(tensors.len() == self.n_params, "checkpoint has {} params, expected {}", tensors.len(), self.n_params);
         for (i, t) in tensors.into_iter().enumerate() {
             anyhow::ensure!(t.shape == self.params[i].shape(), "param{i} shape mismatch");
-            self.params[i] = Value::F32(t.data, t.shape);
+            let shape = t.shape.clone();
+            let data = t.into_f32().ok_or_else(|| anyhow::anyhow!("param{i} is not f32"))?;
+            self.params[i] = Value::F32(data, shape);
         }
         Ok(())
     }

@@ -37,16 +37,29 @@ pub fn fit_native(
     history
 }
 
-/// Evaluate top-1 accuracy over a dataset in chunks.
-pub fn evaluate_native(mlp: &mut Mlp, data: &Dataset, chunk: usize) -> f64 {
+/// Shared accuracy loop: run `forward` over sequential chunks and weight the
+/// per-chunk accuracy by chunk size. The three engine evaluators below are
+/// thin wrappers, so a change to the evaluation policy lands in one place.
+fn evaluate_with(
+    mut forward: impl FnMut(&[f32], usize) -> Vec<f32>,
+    out_dim: usize,
+    data: &Dataset,
+    chunk: usize,
+) -> f64 {
     let mut correct = 0.0;
     let mut seen = 0usize;
     for (x, y) in BatchIter::sequential(data, chunk) {
-        let acc = mlp.evaluate(&x, &y, y.len());
-        correct += acc * y.len() as f64;
+        let logits = forward(&x, y.len());
+        correct += crate::nn::layer::accuracy(&logits, &y, y.len(), out_dim) * y.len() as f64;
         seen += y.len();
     }
     correct / seen as f64
+}
+
+/// Evaluate top-1 accuracy over a dataset in chunks.
+pub fn evaluate_native(mlp: &mut Mlp, data: &Dataset, chunk: usize) -> f64 {
+    let classes = *mlp.dims.last().unwrap();
+    evaluate_with(|x, batch| mlp.forward(x, batch), classes, data, chunk)
 }
 
 /// Evaluate a compiled packed engine (fused bias+ReLU forward on the
@@ -54,14 +67,14 @@ pub fn evaluate_native(mlp: &mut Mlp, data: &Dataset, chunk: usize) -> f64 {
 /// [`evaluate_native`], used to confirm the packed model serves the same
 /// accuracy the masked-dense trainer reached.
 pub fn evaluate_packed(packed: &crate::compress::packed_model::PackedMlp, data: &Dataset, chunk: usize) -> f64 {
-    let mut correct = 0.0;
-    let mut seen = 0usize;
-    for (x, y) in BatchIter::sequential(data, chunk) {
-        let logits = packed.forward(&x, y.len());
-        correct += crate::nn::layer::accuracy(&logits, &y, y.len(), packed.out_dim) * y.len() as f64;
-        seen += y.len();
-    }
-    correct / seen as f64
+    evaluate_with(|x, batch| packed.forward(x, batch), packed.out_dim, data, chunk)
+}
+
+/// Evaluate the int8 quantized engine over a dataset — the quantized
+/// counterpart of [`evaluate_packed`], used by `mpdc quantize` and the
+/// quant-speedup bench to report the accuracy delta of quantization.
+pub fn evaluate_quantized(q: &crate::quant::QuantizedMlp, data: &Dataset, chunk: usize) -> f64 {
+    evaluate_with(|x, batch| q.forward(x, batch), q.out_dim, data, chunk)
 }
 
 #[cfg(test)]
@@ -99,6 +112,45 @@ mod tests {
         assert!(
             (acc_dense - acc_packed).abs() < 0.02,
             "dense {acc_dense} vs packed {acc_packed}"
+        );
+    }
+
+    #[test]
+    fn quantized_eval_tracks_packed_eval_after_training() {
+        use crate::compress::compressor::MpdCompressor;
+        use crate::compress::plan::SparsityPlan;
+        use crate::quant::calibrate_chunked;
+
+        let spec = SynthSpec::mnist_like();
+        let mut train = Dataset::from_synth(&SynthImages::generate(spec, 400, 31, 0));
+        let (mean, std) = train.normalize();
+        let mut test = Dataset::from_synth(&SynthImages::generate(spec, 120, 31, 1));
+        test.normalize_with(mean, std);
+
+        let comp = MpdCompressor::new(SparsityPlan::lenet300(10), 31);
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let mut mlp = crate::nn::mlp::Mlp::new(&[784, 300, 100, 10], &mut rng)
+            .with_masks(comp.masks.clone());
+        let cfg = TrainConfig { steps: 80, lr: 0.08, log_every: 40, ..Default::default() };
+        fit_native(&mut mlp, &train, 50, &cfg);
+
+        let weights: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.w.clone()).collect();
+        let biases: Vec<Vec<f32>> = mlp.layers.iter().map(|l| l.b.clone()).collect();
+        let packed =
+            comp.build_engine(&weights, &biases, &crate::config::EngineConfig::default()).unwrap();
+        let acc_packed = evaluate_packed(&packed, &test, 64);
+
+        let nsamples = 128.min(train.len());
+        let calib = calibrate_chunked(&comp, &weights, &biases, &train.x[..nsamples * 784], nsamples, 64);
+        let q = comp
+            .build_quantized_engine(&weights, &biases, &calib, &crate::config::EngineConfig::default())
+            .unwrap();
+        let acc_q = evaluate_quantized(&q, &test, 64);
+        // int8 with calibrated scales should track the f32 engine closely —
+        // the paper's "<1% accuracy loss" claim at this scale
+        assert!(
+            (acc_packed - acc_q).abs() < 0.05,
+            "packed {acc_packed} vs int8 {acc_q}"
         );
     }
 

@@ -1,0 +1,192 @@
+//! Checkpoint format v1 → v2 compatibility and hostile-input hardening
+//! (ISSUE 3 satellites): v1 f32 files round-trip byte-identically, v2 i8
+//! tensors round-trip bit-exactly, and truncated / garbage-dtype / absurd-dim
+//! headers fail with a clean `Corrupt` error instead of panicking or
+//! attempting a multi-GB allocation.
+
+use mpdc::nn::checkpoint::{self, CheckpointError, NamedTensor};
+use mpdc::util::crc32::Crc32;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mpdc_ckpt_v2_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Append a valid CRC32 trailer to a hand-crafted body.
+fn with_crc(mut body: Vec<u8>) -> Vec<u8> {
+    let mut crc = Crc32::new();
+    crc.update(&body);
+    let c = crc.finish();
+    body.extend_from_slice(&c.to_le_bytes());
+    body
+}
+
+/// `magic + version + ntensor` prefix.
+fn header(version: u32, ntensor: u32) -> Vec<u8> {
+    let mut b = b"MPDC".to_vec();
+    b.extend_from_slice(&version.to_le_bytes());
+    b.extend_from_slice(&ntensor.to_le_bytes());
+    b
+}
+
+/// One tensor header: `name_len + name + ndim + dims` (caller appends the
+/// optional dtype tag and payload).
+fn tensor_header(name: &str, dims: &[u64]) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    b.extend_from_slice(name.as_bytes());
+    b.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+    for &d in dims {
+        b.extend_from_slice(&d.to_le_bytes());
+    }
+    b
+}
+
+#[test]
+fn v1_f32_files_round_trip_unchanged() {
+    let dir = tmpdir("v1rt");
+    let path = dir.join("a.mpdc");
+    let tensors = vec![
+        NamedTensor::f32("fc0.w", vec![3, 4], (0..12).map(|i| i as f32 * 0.5 - 3.0).collect()),
+        NamedTensor::f32("fc0.b", vec![3], vec![0.1, -0.2, 0.3]),
+    ];
+    checkpoint::save(&path, &tensors).unwrap();
+    let bytes_first = std::fs::read(&path).unwrap();
+    // all-f32 ⇒ the writer stays on version 1 (old readers keep working)
+    assert_eq!(u32::from_le_bytes(bytes_first[4..8].try_into().unwrap()), 1);
+    // load → save produces the identical byte stream: v1 files are stable
+    let loaded = checkpoint::load(&path).unwrap();
+    assert_eq!(loaded, tensors);
+    let path2 = dir.join("b.mpdc");
+    checkpoint::save(&path2, &loaded).unwrap();
+    assert_eq!(std::fs::read(&path2).unwrap(), bytes_first);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn handcrafted_v1_file_loads() {
+    // A v1 file as the pre-quantization writer laid it out (no dtype tag).
+    let dir = tmpdir("v1hand");
+    let path = dir.join("h.mpdc");
+    let mut body = header(1, 1);
+    body.extend_from_slice(&tensor_header("t", &[2]));
+    body.extend_from_slice(&1.5f32.to_le_bytes());
+    body.extend_from_slice(&(-2.5f32).to_le_bytes());
+    std::fs::write(&path, with_crc(body)).unwrap();
+    let tensors = checkpoint::load(&path).unwrap();
+    assert_eq!(tensors, vec![NamedTensor::f32("t", vec![2], vec![1.5, -2.5])]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn v2_i8_tensors_round_trip_bit_exact() {
+    let dir = tmpdir("v2rt");
+    let path = dir.join("q.mpdc");
+    // full i8 range incl. the extremes, plus an f32 sidecar and an empty i8
+    let tensors = vec![
+        NamedTensor::i8("fc0.wq", vec![3, 3], vec![-128, -127, -1, 0, 1, 64, 126, 127, -50]),
+        NamedTensor::f32("fc0.wq.scale", vec![3], vec![0.011, 0.02, 1.0e-6]),
+        NamedTensor::i8("empty.wq", vec![0], vec![]),
+    ];
+    checkpoint::save(&path, &tensors).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 2);
+    let back = checkpoint::load(&path).unwrap();
+    assert_eq!(back, tensors);
+    // and a second save emits the identical byte stream
+    let path2 = dir.join("q2.mpdc");
+    checkpoint::save(&path2, &back).unwrap();
+    assert_eq!(std::fs::read(&path2).unwrap(), bytes);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn every_truncation_fails_cleanly() {
+    // Chop a valid v2 file at every possible length: each prefix must load
+    // as a clean Err — no panic, no partial tensor list.
+    let dir = tmpdir("trunc");
+    let path = dir.join("t.mpdc");
+    checkpoint::save(
+        &path,
+        &[
+            NamedTensor::i8("wq", vec![4], vec![1, -2, 3, -4]),
+            NamedTensor::f32("s", vec![1], vec![0.5]),
+        ],
+    )
+    .unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let cut = dir.join("cut.mpdc");
+    for len in 0..bytes.len() {
+        std::fs::write(&cut, &bytes[..len]).unwrap();
+        assert!(checkpoint::load(&cut).is_err(), "prefix of {len} bytes unexpectedly loaded");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn garbage_dtype_tag_is_rejected() {
+    let dir = tmpdir("dtype");
+    let path = dir.join("g.mpdc");
+    let mut body = header(2, 1);
+    body.extend_from_slice(&tensor_header("t", &[1]));
+    body.push(7); // no such dtype
+    body.extend_from_slice(&[0u8; 4]);
+    std::fs::write(&path, with_crc(body)).unwrap();
+    match checkpoint::load(&path) {
+        Err(CheckpointError::Corrupt(msg)) => assert!(msg.contains("dtype"), "{msg}"),
+        other => panic!("expected Corrupt(dtype), got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn overflowing_dims_product_is_rejected_before_allocation() {
+    // prod(dims) overflows usize — must fail as Corrupt, not wrap around.
+    let dir = tmpdir("ovf");
+    let path = dir.join("o.mpdc");
+    let mut body = header(1, 1);
+    body.extend_from_slice(&tensor_header("huge", &[1 << 40, 1 << 40]));
+    std::fs::write(&path, with_crc(body)).unwrap();
+    match checkpoint::load(&path) {
+        Err(CheckpointError::Corrupt(msg)) => assert!(msg.contains("overflow"), "{msg}"),
+        other => panic!("expected Corrupt(overflow), got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn oversized_claim_is_rejected_before_allocation() {
+    // prod(dims)·4 fits in usize but vastly exceeds the file: the loader must
+    // refuse (Corrupt) instead of allocating terabytes.
+    let dir = tmpdir("claim");
+    let path = dir.join("c.mpdc");
+    let mut body = header(1, 1);
+    body.extend_from_slice(&tensor_header("big", &[1 << 40, 4]));
+    std::fs::write(&path, with_crc(body)).unwrap();
+    match checkpoint::load(&path) {
+        Err(CheckpointError::Corrupt(msg)) => {
+            assert!(msg.contains("remain") || msg.contains("truncated"), "{msg}")
+        }
+        other => panic!("expected Corrupt, got {other:?}"),
+    }
+    // same for an i8 tensor in v2
+    let path2 = dir.join("c2.mpdc");
+    let mut body = header(2, 1);
+    body.extend_from_slice(&tensor_header("bigq", &[1 << 50]));
+    body.push(1); // i8
+    std::fs::write(&path2, with_crc(body)).unwrap();
+    assert!(matches!(checkpoint::load(&path2), Err(CheckpointError::Corrupt(_))));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_version_is_rejected() {
+    let dir = tmpdir("ver");
+    let path = dir.join("v.mpdc");
+    let body = header(3, 0);
+    std::fs::write(&path, with_crc(body)).unwrap();
+    assert!(matches!(checkpoint::load(&path), Err(CheckpointError::BadVersion(3))));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,137 @@
+//! Property tests for the int8 quantization subsystem (ISSUE 3): for random
+//! masked/dense layer stacks, the `QuantizedMlp` output stays inside the
+//! analytically derived dequantization error bound of the f32 `PackedMlp`
+//! reference, and is bit-identical across register-tile shapes and thread
+//! counts (1/2/8) — integer accumulation is order-free, and the tests keep it
+//! that way.
+
+use mpdc::compress::compressor::MpdCompressor;
+use mpdc::compress::packed_model::PackedMlp;
+use mpdc::compress::plan::{LayerPlan, SparsityPlan};
+use mpdc::config::EngineConfig;
+use mpdc::nn::checkpoint;
+use mpdc::quant::{calibrate, Calibration, QuantizedMlp};
+use mpdc::util::prop::{for_all, gen_range, gen_vec};
+
+/// Random chained layer stack: 1–3 layers, dims 6..=28, ~2/3 masked with
+/// 1..=4 blocks. Returns the plan plus the input dimension.
+fn random_plan(rng: &mut mpdc::mask::prng::Xoshiro256pp) -> (SparsityPlan, usize) {
+    let nlayers = gen_range(rng, 1, 3);
+    let mut dims = Vec::with_capacity(nlayers + 1);
+    for _ in 0..=nlayers {
+        dims.push(gen_range(rng, 6, 28));
+    }
+    let layers = (0..nlayers)
+        .map(|i| {
+            let (out_d, in_d) = (dims[i + 1], dims[i]);
+            if gen_range(rng, 0, 2) > 0 {
+                let k = gen_range(rng, 1, out_d.min(in_d).min(4));
+                LayerPlan::masked(&format!("l{i}"), out_d, in_d, k)
+            } else {
+                LayerPlan::dense(&format!("l{i}"), out_d, in_d)
+            }
+        })
+        .collect();
+    (SparsityPlan::new(layers).unwrap(), dims[0])
+}
+
+#[test]
+fn prop_quantized_within_analytic_error_bound() {
+    for_all("quantized output within analytic bound of f32 packed", |rng, case| {
+        let (plan, in_dim) = random_plan(rng);
+        let comp = MpdCompressor::new(plan, case as u64);
+        let (weights, biases) = comp.random_masked_weights(case as u64 ^ 0xAB);
+        let batch = gen_range(rng, 1, 5);
+        let x = gen_vec(rng, batch * in_dim);
+        // calibrate on the eval inputs themselves: activation quantization
+        // then never clips, which is the regime the bound is tightest in
+        let cal = calibrate(&comp, &weights, &biases, &x, batch);
+        let packed = PackedMlp::build(&comp, &weights, &biases);
+        let y_f = packed.forward(&x, batch);
+        let q = QuantizedMlp::quantize(&comp, &weights, &biases, &cal).unwrap();
+        let (y_q, bound) = q.forward_with_bound(&x, batch);
+        assert_eq!(y_q.len(), y_f.len());
+        for i in 0..y_q.len() {
+            let err = (y_q[i] - y_f[i]).abs();
+            // small slack for the f32 rounding of the reference itself and of
+            // the bound computation (both far below the quantization steps)
+            assert!(
+                err <= bound[i] * 1.001 + 1e-4,
+                "case {case}, elem {i}: err {err} exceeds bound {}",
+                bound[i]
+            );
+            assert!(bound[i].is_finite(), "case {case}: non-finite bound");
+        }
+    });
+}
+
+#[test]
+fn prop_quantized_exact_across_tiles_and_threads() {
+    for_all("quantized forward identical across tile/thread configs", |rng, case| {
+        let (plan, in_dim) = random_plan(rng);
+        let comp = MpdCompressor::new(plan, case as u64 ^ 0x55);
+        let (weights, biases) = comp.random_masked_weights(case as u64 ^ 0xCD);
+        let cal = Calibration::unit_range(comp.nlayers());
+        let batch = gen_range(rng, 1, 9);
+        let x = gen_vec(rng, batch * in_dim);
+        let want = QuantizedMlp::quantize(&comp, &weights, &biases, &cal)
+            .unwrap()
+            .forward(&x, batch);
+        for (threads, tb, tr) in [(1usize, 1usize, 2usize), (2, 4, 4), (8, 8, 1), (2, 2, 8)] {
+            let cfg = EngineConfig { pool_threads: threads, tile_batch: tb, tile_rows: tr };
+            let q = QuantizedMlp::quantize(&comp, &weights, &biases, &cal)
+                .unwrap()
+                .with_engine_config(&cfg)
+                .unwrap();
+            assert_eq!(want, q.forward(&x, batch), "case {case}, threads={threads} tile {tb}x{tr}");
+        }
+    });
+}
+
+#[test]
+fn prop_checkpoint_v2_roundtrip_preserves_forward() {
+    // to_tensors → save → load → from_tensors is bit-exact on the forward
+    // pass for random models (the full artifact path `mpdc quantize` takes).
+    let dir = std::env::temp_dir().join(format!("mpdc_quant_rt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for_all("quantized checkpoint v2 roundtrip", |rng, case| {
+        let (plan, in_dim) = random_plan(rng);
+        let comp = MpdCompressor::new(plan, case as u64 ^ 0x77);
+        let (weights, biases) = comp.random_masked_weights(case as u64 ^ 0xEF);
+        let cal = Calibration::unit_range(comp.nlayers());
+        let q = QuantizedMlp::quantize(&comp, &weights, &biases, &cal).unwrap();
+        let path = dir.join(format!("case{case}.int8.mpdc"));
+        checkpoint::save(&path, &q.to_tensors()).unwrap();
+        let back = QuantizedMlp::from_tensors(&comp, &checkpoint::load(&path).unwrap()).unwrap();
+        let batch = gen_range(rng, 1, 4);
+        let x = gen_vec(rng, batch * in_dim);
+        assert_eq!(q.forward(&x, batch), back.forward(&x, batch), "case {case}");
+        std::fs::remove_file(&path).ok();
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn quantized_artifact_is_at_least_3_5x_smaller_than_f32_packed() {
+    // The acceptance-criterion ratio, pinned at LeNet-300-100 scale: the v2
+    // int8 artifact vs the f32 packed artifact for the same trained shapes.
+    let comp = MpdCompressor::new(SparsityPlan::lenet300(10), 42);
+    let (weights, biases) = comp.random_masked_weights(7);
+    let cal = Calibration::unit_range(3);
+    let q = QuantizedMlp::quantize(&comp, &weights, &biases, &cal).unwrap();
+    let dir = std::env::temp_dir().join(format!("mpdc_quant_ratio_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // f32 packed artifact — the same builder `mpdc quantize` writes its
+    // baseline with, so this test measures the real on-disk layout.
+    let f32_path = dir.join("lenet.packed.mpdc");
+    checkpoint::save(&f32_path, &comp.packed_f32_tensors(&weights, &biases)).unwrap();
+    let i8_path = dir.join("lenet.int8.mpdc");
+    checkpoint::save(&i8_path, &q.to_tensors()).unwrap();
+
+    let f32_bytes = std::fs::metadata(&f32_path).unwrap().len() as f64;
+    let i8_bytes = std::fs::metadata(&i8_path).unwrap().len() as f64;
+    let ratio = f32_bytes / i8_bytes;
+    assert!(ratio >= 3.5, "artifact ratio {ratio:.2}× below the 3.5× target ({f32_bytes} vs {i8_bytes})");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -255,6 +255,10 @@ fn loadgen_closed_and_open_loop_roundtrip() {
     assert_eq!(r.ok, 120, "closed loop over an idle server must all succeed");
     assert_eq!(r.errors, 0);
     assert!(r.latency.percentile_us(0.5) > 0.0);
+    // status-class accounting: every response was a 2xx, nothing else
+    assert_eq!(r.status_classes, [0, 120, 0, 0, 0]);
+    assert_eq!(r.transport_errors, 0);
+    assert_eq!(r.non_200_rate(), 0.0);
 
     let open = LoadgenConfig {
         concurrency: 3,
