@@ -1,0 +1,137 @@
+//! Compressed-conv bench: direct dense-loop conv vs the im2col-lowered MPD
+//! packed engine vs its int8 twin on the lite Deep MNIST model — storage,
+//! parameter compression, and per-request p50/p99 (ISSUE 4's standing
+//! benchmark). Artifact-free and CI-sized: deterministic random masked
+//! weights (latency and storage don't need a trained model; accuracy is
+//! covered by `tests/conv.rs` and the native-trainer pipeline test).
+//!
+//! ```bash
+//! cargo bench --bench conv_speedup                  # quick (CI) preset
+//! MPDC_CONV_ITERS=2000 cargo bench --bench conv_speedup
+//! ```
+
+use mpdc::compress::conv_model::{ConvNetParams, PackedConvNet};
+use mpdc::compress::{ConvCompressor, ConvModelPlan};
+use mpdc::config::EngineConfig;
+use mpdc::mask::prng::Xoshiro256pp;
+use mpdc::quant::{calibrate_conv, QuantizedConvNet};
+use mpdc::server::metrics::Histogram;
+use mpdc::util::benchkit::{black_box, Table};
+use mpdc::util::json::{append_jsonl, Json};
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn measure(iters: usize, mut f: impl FnMut()) -> Histogram {
+    for _ in 0..(iters / 10).max(5) {
+        f();
+    }
+    let h = Histogram::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        h.record(t0.elapsed());
+    }
+    h
+}
+
+fn main() {
+    let iters = env_usize("MPDC_CONV_ITERS", 300);
+    let batch = env_usize("MPDC_CONV_BATCH", 1);
+    let k = env_usize("MPDC_CONV_BLOCKS", 10);
+
+    let comp = ConvCompressor::new(ConvModelPlan::deep_mnist_lite(k), 42);
+    let params = comp.random_masked_params(42);
+    let report = comp.report();
+    println!(
+        "deep_mnist_lite k={k}: {} dense params → {} kept ({:.2}×)",
+        report.total_dense_params(),
+        report.total_kept_params(),
+        report.overall_compression()
+    );
+
+    // direct dense-loop baseline: the trainable net on the same masked weights
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    let mut direct = comp.build_net(&mut rng);
+    let tensors = comp.tensors(&params);
+    direct.load_tensors(&tensors).expect("params load");
+    let dense_bytes: usize = params.conv_w.iter().map(|w| w.len() * 4).sum::<usize>()
+        + params.conv_b.iter().map(|b| b.len() * 4).sum::<usize>()
+        + params.fc_w.iter().map(|w| w.len() * 4).sum::<usize>()
+        + params.fc_b.iter().map(|b| b.len() * 4).sum::<usize>();
+
+    let engine_cfg = EngineConfig::default();
+    let packed = comp.build_engine(&params, &engine_cfg).expect("f32 conv engine");
+    let mut crng = Xoshiro256pp::seed_from_u64(7);
+    let calib_n = 32usize;
+    let calib_x: Vec<f32> = (0..calib_n * 784).map(|_| crng.next_f32() * 2.0 - 1.0).collect();
+    let calib = calibrate_conv(&comp, &params, &calib_x, calib_n, 16);
+    let quant = QuantizedConvNet::quantize(&comp, &params, &calib)
+        .expect("i8 conv engine")
+        .with_engine_config(&engine_cfg)
+        .expect("engine cfg");
+
+    let x: Vec<f32> = (0..batch * 784).map(|_| crng.next_f32() * 2.0 - 1.0).collect();
+    println!("measuring {iters} forward calls per engine (batch {batch})…");
+    let h_direct = measure(iters, || {
+        black_box(direct.forward(&x, batch));
+    });
+    let h_packed = measure(iters, || {
+        black_box(packed.forward(&x, batch));
+    });
+    let h_quant = measure(iters, || {
+        black_box(quant.forward(&x, batch));
+    });
+
+    let mut t = Table::new(&["engine", "bytes", "compression", "p50 µs", "p99 µs"]);
+    let rows = [
+        ("dense-conv (direct loop)", dense_bytes, &h_direct),
+        ("mpd-conv (im2col+packed)", packed.storage_bytes(), &h_packed),
+        ("mpd-conv-int8", quant.storage_bytes(), &h_quant),
+    ];
+    for (name, bytes, h) in rows {
+        t.row(&[
+            name.to_string(),
+            bytes.to_string(),
+            format!("{:.2}×", dense_bytes as f64 / bytes as f64),
+            format!("{:.0}", h.percentile_us(0.5)),
+            format!("{:.0}", h.percentile_us(0.99)),
+        ]);
+        let _ = append_jsonl(
+            std::path::Path::new("results/conv_speedup.jsonl"),
+            &Json::obj(vec![
+                ("engine", Json::str(name)),
+                ("batch", Json::num(batch as f64)),
+                ("nblocks", Json::num(k as f64)),
+                ("bytes", Json::num(bytes as f64)),
+                ("compression", Json::num(dense_bytes as f64 / bytes as f64)),
+                ("p50_us", Json::num(h.percentile_us(0.5))),
+                ("p99_us", Json::num(h.percentile_us(0.99))),
+            ]),
+        );
+    }
+    println!("{}", t.render());
+
+    // Smoke invariants (what CI checks): compression must be real, and the
+    // engines must agree on the actual computation (packed vs direct within
+    // float tolerance — the kernels are property-tested elsewhere).
+    assert!(
+        packed.storage_bytes() * 2 < dense_bytes,
+        "packed conv engine not ≥2× smaller: {} vs {dense_bytes}",
+        packed.storage_bytes()
+    );
+    assert!(
+        quant.storage_bytes() * 2 < packed.storage_bytes(),
+        "int8 conv engine not ≥2× below f32 packed: {} vs {}",
+        quant.storage_bytes(),
+        packed.storage_bytes()
+    );
+    let yd = direct.forward(&x, batch);
+    let yp = packed.forward(&x, batch);
+    for (a, b) in yp.iter().zip(&yd) {
+        assert!((a - b).abs() <= 1e-3 * (1.0 + a.abs().max(b.abs())), "{a} vs {b}");
+    }
+    println!("OK");
+}

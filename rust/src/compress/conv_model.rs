@@ -1,0 +1,580 @@
+//! Compressed conv inference: im2col lowering onto the packed block-diagonal
+//! engine (paper Fig. 3 extended to the conv workload family).
+//!
+//! [`ConvCompressor`] ties a [`ConvModelPlan`] to generated masks (conv masks
+//! over filter matrices + the FC head's [`MpdCompressor`]);
+//! [`PackedConvNet`] is the compiled inference engine: per conv stage,
+//!
+//! ```text
+//!   im2col → (patch-column gather = P_col)
+//!          → packed block-diagonal GEMM, fused bias+ReLU epilogue
+//!          → NCHW transpose restoring logical channel order (= P_row⁻¹)
+//!          → max-pool
+//! ```
+//!
+//! and the FC head runs as a [`PackedMlp`] (gather fusion and all). Conv
+//! stages cannot fuse consecutive permutations the way FC stages do — pooling
+//! and the next im2col operate in channel/spatial space — so each stage
+//! restores logical channel order during the (already required) GEMM-rows →
+//! NCHW transpose, where the restore is a free index remap.
+//!
+//! **Exactness.** The block kernel keeps its canonical accumulation order, so
+//! the whole forward is bit-identical across tile shapes and thread counts;
+//! for *unmasked* conv stages it is additionally bit-identical to the direct
+//! `Conv2d::forward` training loop (see the ordering contract in
+//! `linalg::im2col`). Masked stages agree with the masked-dense trainer to
+//! float tolerance, exactly like `PackedMlp` vs the masked-dense MLP.
+
+use crate::compress::compressor::{CompressionReport, LayerReport, MpdCompressor};
+use crate::compress::packed_model::PackedMlp;
+use crate::compress::plan::ConvModelPlan;
+use crate::config::EngineConfig;
+use crate::linalg::blockdiag_mm::{BlockDiagMatrix, TileShape};
+use crate::linalg::im2col::{gather_cols, im2col, maxpool_nchw, rows_to_nchw, ConvShape};
+use crate::linalg::pool::{self, ThreadPool};
+use crate::mask::mask::MpdMask;
+use crate::nn::checkpoint::NamedTensor;
+use crate::nn::convnet::ConvNet;
+use std::sync::Arc;
+
+/// Trained parameters of a mixed conv+dense model, in training (masked-dense)
+/// layout: `conv_w[i]` is the `(out_c × in_c·k·k)` filter matrix.
+#[derive(Clone, Debug)]
+pub struct ConvNetParams {
+    pub conv_w: Vec<Vec<f32>>,
+    pub conv_b: Vec<Vec<f32>>,
+    pub fc_w: Vec<Vec<f32>>,
+    pub fc_b: Vec<Vec<f32>>,
+}
+
+impl ConvNetParams {
+    /// Snapshot a trained [`ConvNet`]'s parameters.
+    pub fn from_net(net: &ConvNet) -> Self {
+        Self {
+            conv_w: net.convs.iter().map(|c| c.w.clone()).collect(),
+            conv_b: net.convs.iter().map(|c| c.b.clone()).collect(),
+            fc_w: net.fcs.iter().map(|l| l.w.clone()).collect(),
+            fc_b: net.fcs.iter().map(|l| l.b.clone()).collect(),
+        }
+    }
+}
+
+/// The conv-model compressor: plan + conv masks + the FC head compressor.
+pub struct ConvCompressor {
+    pub plan: ConvModelPlan,
+    /// One optional mask per conv stage, over its filter matrix.
+    pub conv_masks: Vec<Option<MpdMask>>,
+    /// The FC head as a plain [`MpdCompressor`] (same masks a pure-FC model
+    /// with this head would get at this seed).
+    pub fc: MpdCompressor,
+    pub seed: u64,
+}
+
+impl ConvCompressor {
+    /// Create with random permutation masks (the algorithm proper).
+    pub fn new(plan: ConvModelPlan, seed: u64) -> Self {
+        let conv_masks = plan.generate_conv_masks(seed);
+        let fc = MpdCompressor::new(plan.fc.clone(), seed);
+        Self { plan, conv_masks, fc, seed }
+    }
+
+    /// §3.1-ablation variant: non-permuted masks everywhere.
+    pub fn new_non_permuted(plan: ConvModelPlan) -> Self {
+        let conv_masks = plan.generate_non_permuted_conv_masks();
+        let fc = MpdCompressor::new_non_permuted(plan.fc.clone());
+        Self { plan, conv_masks, fc, seed: 0 }
+    }
+
+    /// Build the trainable network with this compressor's masks attached.
+    pub fn build_net(&self, rng: &mut crate::mask::prng::Xoshiro256pp) -> ConvNet {
+        ConvNet::new(self.plan.net_spec(), rng)
+            .with_masks(self.conv_masks.clone(), self.fc.masks.clone())
+    }
+
+    /// Compression accounting across conv + FC layers (Table-1 columns for
+    /// the mixed model; weight-independent, like [`MpdCompressor::report`]).
+    pub fn report(&self) -> CompressionReport {
+        let mut layers: Vec<LayerReport> = self
+            .plan
+            .filter_dims()
+            .iter()
+            .zip(&self.plan.convs)
+            .zip(&self.conv_masks)
+            .map(|((&(out_c, cols), cp), mask)| {
+                let dense_params = out_c * cols;
+                let dense_bytes = dense_params * 4;
+                match mask {
+                    Some(m) => LayerReport {
+                        name: cp.name.clone(),
+                        dense_params,
+                        kept_params: m.nnz(),
+                        compression: dense_params as f64 / m.nnz() as f64,
+                        dense_bytes,
+                        csr_bytes: m.nnz() * 8 + (out_c + 1) * 4,
+                        packed_bytes: m.nnz() * 4 + m.nblocks() * 16,
+                    },
+                    None => LayerReport {
+                        name: cp.name.clone(),
+                        dense_params,
+                        kept_params: dense_params,
+                        compression: 1.0,
+                        dense_bytes,
+                        csr_bytes: dense_bytes,
+                        packed_bytes: dense_bytes,
+                    },
+                }
+            })
+            .collect();
+        layers.extend(self.fc.report().layers);
+        CompressionReport { layers }
+    }
+
+    /// Deterministic random masked parameters shaped for this plan — the
+    /// shared fixture for tests and benches (stand-in for trained weights
+    /// when only structure matters).
+    pub fn random_masked_params(&self, seed: u64) -> ConvNetParams {
+        let mut rng = crate::mask::prng::Xoshiro256pp::seed_from_u64(seed);
+        let mut conv_w = Vec::new();
+        let mut conv_b = Vec::new();
+        for (&(out_c, cols), mask) in self.plan.filter_dims().iter().zip(&self.conv_masks) {
+            let w: Vec<f32> = (0..out_c * cols).map(|_| rng.next_f32() - 0.5).collect();
+            conv_w.push(match mask {
+                Some(m) => m.apply(&w),
+                None => w,
+            });
+            conv_b.push((0..out_c).map(|i| (i as f32 * 0.31).sin()).collect());
+        }
+        let (fc_w, fc_b) = self.fc.random_masked_weights(seed ^ 0x5EED);
+        ConvNetParams { conv_w, conv_b, fc_w, fc_b }
+    }
+
+    /// Named f32 checkpoint tensors of trained parameters — `conv{i}.w`
+    /// `[out_c, in_c, kh, kw]`, `conv{i}.b`, `fc{j}.w`, `fc{j}.b` — the
+    /// [`ConvNet::named_tensors`] layout, written through checkpoint v1.
+    pub fn tensors(&self, params: &ConvNetParams) -> Vec<NamedTensor> {
+        let shapes = self.plan.conv_shapes();
+        let mut out = Vec::new();
+        for (i, (w, b)) in params.conv_w.iter().zip(&params.conv_b).enumerate() {
+            let s = &shapes[i];
+            let out_c = self.plan.convs[i].out_c;
+            assert_eq!(w.len(), out_c * s.patch_dim(), "conv{i}.w size");
+            out.push(NamedTensor::f32(
+                format!("conv{i}.w"),
+                vec![out_c, s.in_c, s.kh, s.kw],
+                w.clone(),
+            ));
+            out.push(NamedTensor::f32(format!("conv{i}.b"), vec![b.len()], b.clone()));
+        }
+        for (j, (w, b)) in params.fc_w.iter().zip(&params.fc_b).enumerate() {
+            let lp = &self.plan.fc.layers[j];
+            out.push(NamedTensor::f32(format!("fc{j}.w"), vec![lp.out_dim, lp.in_dim], w.clone()));
+            out.push(NamedTensor::f32(format!("fc{j}.b"), vec![b.len()], b.clone()));
+        }
+        out
+    }
+
+    /// Inverse of [`Self::tensors`]: pull parameters out of checkpoint
+    /// tensors, shape-checking against the plan and re-applying this
+    /// compressor's masks (a checkpoint trained under different masks cannot
+    /// silently leak off-block weights into packing).
+    pub fn params_from_tensors(&self, tensors: &[NamedTensor]) -> Result<ConvNetParams, String> {
+        let find = |name: &str| -> Result<&NamedTensor, String> {
+            tensors.iter().find(|t| t.name == name).ok_or_else(|| format!("missing tensor {name}"))
+        };
+        let shapes = self.plan.conv_shapes();
+        let mut conv_w = Vec::new();
+        let mut conv_b = Vec::new();
+        for (i, (s, cp)) in shapes.iter().zip(&self.plan.convs).enumerate() {
+            let w = find(&format!("conv{i}.w"))?;
+            if w.shape != vec![cp.out_c, s.in_c, s.kh, s.kw] {
+                return Err(format!("conv{i}.w: shape {:?} mismatch", w.shape));
+            }
+            let wv = w.as_f32().ok_or_else(|| format!("conv{i}.w: not f32"))?.to_vec();
+            conv_w.push(match &self.conv_masks[i] {
+                Some(m) => m.apply(&wv),
+                None => wv,
+            });
+            let b = find(&format!("conv{i}.b"))?;
+            if b.shape != vec![cp.out_c] {
+                return Err(format!("conv{i}.b: shape {:?} mismatch", b.shape));
+            }
+            conv_b.push(b.as_f32().ok_or_else(|| format!("conv{i}.b: not f32"))?.to_vec());
+        }
+        let mut fc_w = Vec::new();
+        let mut fc_b = Vec::new();
+        for (j, lp) in self.plan.fc.layers.iter().enumerate() {
+            let w = find(&format!("fc{j}.w"))?;
+            if w.shape != vec![lp.out_dim, lp.in_dim] {
+                return Err(format!("fc{j}.w: shape {:?} mismatch", w.shape));
+            }
+            let wv = w.as_f32().ok_or_else(|| format!("fc{j}.w: not f32"))?.to_vec();
+            fc_w.push(match &self.fc.masks[j] {
+                Some(m) => m.apply(&wv),
+                None => wv,
+            });
+            let b = find(&format!("fc{j}.b"))?;
+            if b.shape != vec![lp.out_dim] {
+                return Err(format!("fc{j}.b: shape {:?} mismatch", b.shape));
+            }
+            fc_b.push(b.as_f32().ok_or_else(|| format!("fc{j}.b: not f32"))?.to_vec());
+        }
+        Ok(ConvNetParams { conv_w, conv_b, fc_w, fc_b })
+    }
+
+    /// Compile the packed inference engine, tuned by an [`EngineConfig`].
+    pub fn build_engine(
+        &self,
+        params: &ConvNetParams,
+        cfg: &EngineConfig,
+    ) -> Result<PackedConvNet, String> {
+        cfg.validate()?;
+        PackedConvNet::build(self, params).with_engine_config(cfg)
+    }
+}
+
+/// One compiled conv inference stage (see module docs for the pipeline).
+pub(crate) struct PackedConvStage {
+    pub(crate) bd: BlockDiagMatrix,
+    /// Patch-column gather (`P_col`): block column `c'` reads patch column
+    /// `gather[c']`. `None` for unmasked stages.
+    pub(crate) col_gather: Option<Vec<u32>>,
+    /// Logical out-channel `oc` reads GEMM column `chan_src[oc]`
+    /// (`P_row⁻¹`). `None` for unmasked stages.
+    pub(crate) chan_src: Option<Vec<u32>>,
+    /// Bias in block-row space.
+    pub(crate) bias: Vec<f32>,
+    pub(crate) shape: ConvShape,
+    pub(crate) pool_k: usize,
+    pub(crate) pool_stride: usize,
+}
+
+/// Which persistent pool a packed conv model executes on.
+enum PoolChoice {
+    None,
+    Global,
+    Owned(Arc<ThreadPool>),
+}
+
+/// A compiled compressed conv model: im2col-lowered packed conv stages plus
+/// a [`PackedMlp`] head.
+pub struct PackedConvNet {
+    stages: Vec<PackedConvStage>,
+    head: PackedMlp,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Multiply-accumulates per sample across conv stages + head.
+    pub macs_per_sample: usize,
+    pool: PoolChoice,
+    tile: TileShape,
+}
+
+impl PackedConvNet {
+    /// Compile just the conv stages (+ their MAC count) — shared by
+    /// [`Self::build`] and the quantizer, which re-quantizes these stages
+    /// without paying for an f32 FC head it would throw away.
+    pub(crate) fn build_stages(
+        comp: &ConvCompressor,
+        params: &ConvNetParams,
+    ) -> (Vec<PackedConvStage>, usize) {
+        let shapes = comp.plan.conv_shapes();
+        assert_eq!(params.conv_w.len(), shapes.len());
+        assert_eq!(params.conv_b.len(), shapes.len());
+        let mut stages = Vec::with_capacity(shapes.len());
+        let mut macs = 0usize;
+        for (i, s) in shapes.iter().enumerate() {
+            let cp = &comp.plan.convs[i];
+            assert_eq!(params.conv_w[i].len(), cp.out_c * s.patch_dim(), "{}: filter size", cp.name);
+            assert_eq!(params.conv_b[i].len(), cp.out_c, "{}: bias size", cp.name);
+            let (bd, col_gather, chan_src, bias) = match &comp.conv_masks[i] {
+                Some(mask) => {
+                    let bd = BlockDiagMatrix::from_masked_weights(mask, &params.conv_w[i]);
+                    let col_gather =
+                        (!mask.p_col.is_identity()).then(|| mask.p_col.as_slice().to_vec());
+                    let chan_src =
+                        (!mask.p_row.is_identity()).then(|| mask.p_row.inverse().as_slice().to_vec());
+                    let bias = mask.p_row.inverse().apply_vec(&params.conv_b[i]);
+                    (bd, col_gather, chan_src, bias)
+                }
+                None => {
+                    // Dense conv: one block covering the whole filter matrix,
+                    // logical order throughout.
+                    let layout = crate::mask::blockdiag::BlockDiagLayout::new(cp.out_c, s.patch_dim(), 1);
+                    let bd = BlockDiagMatrix::from_packed(params.conv_w[i].clone(), layout);
+                    (bd, None, None, params.conv_b[i].clone())
+                }
+            };
+            macs += bd.nnz() * s.patches_per_sample();
+            stages.push(PackedConvStage {
+                bd,
+                col_gather,
+                chan_src,
+                bias,
+                shape: *s,
+                pool_k: cp.pool,
+                pool_stride: cp.pool,
+            });
+        }
+        (stages, macs)
+    }
+
+    /// Build from a compressor and trained parameters (masked-dense layout).
+    pub fn build(comp: &ConvCompressor, params: &ConvNetParams) -> Self {
+        let (stages, mut macs) = Self::build_stages(comp, params);
+        let head = PackedMlp::build(&comp.fc, &params.fc_w, &params.fc_b);
+        let in_dim = comp.plan.net_spec().in_dim();
+        let out_dim = head.out_dim;
+        macs += head.macs_per_sample;
+        Self {
+            stages,
+            head,
+            in_dim,
+            out_dim,
+            macs_per_sample: macs,
+            pool: PoolChoice::None,
+            tile: TileShape::DEFAULT,
+        }
+    }
+
+    /// Execute on a dedicated persistent pool of `nthreads` lanes (shared
+    /// between the conv stages and the head; `<= 1` reverts to
+    /// single-threaded).
+    pub fn with_threads(self, nthreads: usize) -> Self {
+        if nthreads > 1 {
+            self.with_pool(Arc::new(ThreadPool::new(nthreads)))
+        } else {
+            let mut s = self;
+            s.pool = PoolChoice::None;
+            s
+        }
+    }
+
+    /// Execute on a caller-provided (shareable) persistent pool.
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.head = self.head.with_pool(pool.clone());
+        self.pool = PoolChoice::Owned(pool);
+        self
+    }
+
+    /// Execute on the process-global persistent pool.
+    pub fn with_global_pool(mut self) -> Self {
+        self.head = self.head.with_global_pool();
+        self.pool = PoolChoice::Global;
+        self
+    }
+
+    /// Override the register-tile shape (conv stages + head). Panics on an
+    /// unsupported shape — use [`Self::with_engine_config`] for the fallible
+    /// path.
+    pub fn with_tile(mut self, tile: TileShape) -> Self {
+        tile.validate().expect("valid tile shape");
+        self.tile = tile;
+        self.head = self.head.with_tile(tile);
+        self
+    }
+
+    /// Apply an [`EngineConfig`]: one pool shared by conv stages and head,
+    /// plus the register-tile shape.
+    pub fn with_engine_config(mut self, cfg: &EngineConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        self.tile = cfg.tile();
+        self.head = self.head.with_tile(cfg.tile());
+        Ok(match cfg.pool_threads {
+            0 => self.with_global_pool(),
+            n => self.with_threads(n),
+        })
+    }
+
+    fn pool(&self) -> Option<&ThreadPool> {
+        match &self.pool {
+            PoolChoice::None => None,
+            PoolChoice::Global => Some(pool::global()),
+            PoolChoice::Owned(p) => Some(p.as_ref()),
+        }
+    }
+
+    /// Forward a batch of flattened NCHW inputs `[batch × in_dim]`, returns
+    /// `[batch × out_dim]` logits in logical class order.
+    pub fn forward(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        assert_eq!(x.len(), batch * self.in_dim);
+        let pool = self.pool();
+        let mut act = x.to_vec();
+        let mut patches: Vec<f32> = Vec::new();
+        let mut gathered: Vec<f32> = Vec::new();
+        let mut rows_out: Vec<f32> = Vec::new();
+        let mut nchw: Vec<f32> = Vec::new();
+        for st in &self.stages {
+            let s = &st.shape;
+            let (oh, ow) = s.out_hw();
+            let out_c = st.bd.layout.rows;
+            let pdim = s.patch_dim();
+            im2col(&act, batch, s, &mut patches);
+            let nrows = batch * oh * ow;
+            // Patch-column gather into P_col space (masked stages only).
+            let gemm_in: &[f32] = match &st.col_gather {
+                Some(g) => {
+                    gather_cols(&patches, nrows, pdim, g, &mut gathered);
+                    &gathered
+                }
+                None => &patches,
+            };
+            // Packed GEMM with fused bias+ReLU; patch rows act as the batch.
+            rows_out.resize(nrows * out_c, 0.0);
+            st.bd.forward_fused(gemm_in, &mut rows_out, nrows, &st.bias, true, pool, self.tile);
+            // Transpose to NCHW, restoring logical channel order (P_row⁻¹).
+            rows_to_nchw(&rows_out, batch, out_c, oh, ow, st.chan_src.as_deref(), &mut nchw);
+            if st.pool_k > 0 {
+                maxpool_nchw(&nchw, batch, out_c, oh, ow, st.pool_k, st.pool_stride, &mut act);
+            } else {
+                std::mem::swap(&mut act, &mut nchw);
+            }
+        }
+        self.head.forward(&act, batch)
+    }
+
+    /// Total packed storage bytes across conv stages + head.
+    pub fn storage_bytes(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|st| {
+                st.bd.storage_bytes()
+                    + st.bias.len() * 4
+                    + st.col_gather.as_ref().map_or(0, |g| g.len() * 4)
+                    + st.chan_src.as_ref().map_or(0, |g| g.len() * 4)
+            })
+            .sum::<usize>()
+            + self.head.storage_bytes()
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::plan::{ConvLayerPlan, LayerPlan, SparsityPlan};
+    use crate::mask::prng::Xoshiro256pp;
+
+    fn tiny_plan(masked: bool) -> ConvModelPlan {
+        let convs = if masked {
+            vec![ConvLayerPlan::dense("c1", 4, 3, 2), ConvLayerPlan::masked("c2", 6, 3, 2, 3)]
+        } else {
+            vec![ConvLayerPlan::dense("c1", 4, 3, 2), ConvLayerPlan::dense("c2", 6, 3, 2)]
+        };
+        let fc = if masked {
+            SparsityPlan::new(vec![
+                LayerPlan::masked("fc1", 16, 24, 4),
+                LayerPlan::dense("fc2", 3, 16),
+            ])
+            .unwrap()
+        } else {
+            SparsityPlan::new(vec![
+                LayerPlan::dense("fc1", 16, 24),
+                LayerPlan::dense("fc2", 3, 16),
+            ])
+            .unwrap()
+        };
+        ConvModelPlan::new((1, 8, 8), convs, fc).unwrap()
+    }
+
+    /// Unmasked model: the packed engine must equal the trainable net
+    /// bit-for-bit (the im2col ordering contract), across pools and tiles.
+    #[test]
+    fn dense_packed_matches_trainer_bit_exact() {
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let comp = ConvCompressor::new(tiny_plan(false), 31);
+        let mut net = comp.build_net(&mut rng);
+        for c in net.convs.iter_mut() {
+            for b in c.b.iter_mut() {
+                *b = rng.next_f32() - 0.5;
+            }
+        }
+        for l in net.fcs.iter_mut() {
+            for b in l.b.iter_mut() {
+                *b = rng.next_f32() - 0.5;
+            }
+        }
+        let params = ConvNetParams::from_net(&net);
+        let packed = PackedConvNet::build(&comp, &params);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * 64).map(|_| rng.next_f32() - 0.5).collect();
+        let want = net.forward(&x, batch);
+        let got = packed.forward(&x, batch);
+        assert_eq!(got, want, "dense conv lowering must be bit-exact");
+        // pools and tiles must not change a single bit
+        let pooled = PackedConvNet::build(&comp, &params).with_threads(4);
+        assert_eq!(pooled.forward(&x, batch), want);
+        let tiled = PackedConvNet::build(&comp, &params)
+            .with_engine_config(&EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 2 })
+            .unwrap();
+        assert_eq!(tiled.forward(&x, batch), want);
+    }
+
+    /// Masked model: close to the masked-dense trainer, bit-stable across
+    /// engine configs, and actually compressed.
+    #[test]
+    fn masked_packed_matches_trainer_within_tolerance() {
+        let mut rng = Xoshiro256pp::seed_from_u64(33);
+        let comp = ConvCompressor::new(tiny_plan(true), 33);
+        let mut net = comp.build_net(&mut rng);
+        let params = ConvNetParams::from_net(&net);
+        let packed = PackedConvNet::build(&comp, &params);
+        let batch = 2;
+        let x: Vec<f32> = (0..batch * 64).map(|_| rng.next_f32() - 0.5).collect();
+        let want = net.forward(&x, batch);
+        let got = packed.forward(&x, batch);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        let pooled = PackedConvNet::build(&comp, &params).with_threads(8);
+        assert_eq!(pooled.forward(&x, batch), got);
+        // report: masked conv2 + fc1 compress, dense layers don't — and the
+        // engine's actual byte footprint is below storing everything dense
+        let r = comp.report();
+        assert_eq!(r.layers.len(), 4);
+        assert!(r.overall_compression() > 1.5);
+        assert!(
+            packed.storage_bytes() < r.total_dense_bytes(),
+            "{} vs dense {}",
+            packed.storage_bytes(),
+            r.total_dense_bytes()
+        );
+    }
+
+    #[test]
+    fn tensors_roundtrip_through_checkpoint() {
+        let comp = ConvCompressor::new(tiny_plan(true), 35);
+        let params = comp.random_masked_params(35);
+        let tensors = comp.tensors(&params);
+        let dir = std::env::temp_dir().join(format!("mpdc_convck_{}", std::process::id()));
+        let path = dir.join("conv.mpdc");
+        crate::nn::checkpoint::save(&path, &tensors).unwrap();
+        let back = crate::nn::checkpoint::load(&path).unwrap();
+        let params2 = comp.params_from_tensors(&back).unwrap();
+        assert_eq!(params.conv_w, params2.conv_w);
+        assert_eq!(params.fc_w, params2.fc_w);
+        // packed engines built from both agree exactly
+        let a = PackedConvNet::build(&comp, &params);
+        let b = PackedConvNet::build(&comp, &params2);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.7).sin()).collect();
+        assert_eq!(a.forward(&x, 1), b.forward(&x, 1));
+        // missing tensor rejected
+        assert!(comp.params_from_tensors(&back[1..]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_rows_match_single_sample() {
+        // batch invariance: row i of a batched forward equals the
+        // single-sample forward of sample i (canonical accumulation).
+        let mut rng = Xoshiro256pp::seed_from_u64(37);
+        let comp = ConvCompressor::new(tiny_plan(true), 37);
+        let params = comp.random_masked_params(37);
+        let packed = PackedConvNet::build(&comp, &params);
+        let batch = 4;
+        let x: Vec<f32> = (0..batch * 64).map(|_| rng.next_f32() - 0.5).collect();
+        let y = packed.forward(&x, batch);
+        for bi in 0..batch {
+            let yi = packed.forward(&x[bi * 64..(bi + 1) * 64], 1);
+            assert_eq!(&y[bi * 3..(bi + 1) * 3], &yi[..], "row {bi}");
+        }
+    }
+}

@@ -1,12 +1,15 @@
-//! MPDCompress public API: sparsity plans, the compressor (mask generation +
-//! Table-1 accounting + eq.-2 packing), the fused packed inference engine,
-//! and the magnitude-pruning baseline.
+//! MPDCompress public API: sparsity plans (FC and mixed conv+dense), the
+//! compressors (mask generation + Table-1 accounting + eq.-2 packing), the
+//! fused packed inference engines (`PackedMlp`, and the im2col-lowered
+//! `PackedConvNet`), and the magnitude-pruning baseline.
 pub mod compressor;
+pub mod conv_model;
 pub mod packed_model;
 pub mod plan;
 pub mod pruning;
 pub mod tilespace;
 
 pub use compressor::{CompressionReport, MpdCompressor, PackedLayer};
+pub use conv_model::{ConvCompressor, ConvNetParams, PackedConvNet};
 pub use packed_model::PackedMlp;
-pub use plan::{LayerPlan, SparsityPlan};
+pub use plan::{ConvLayerPlan, ConvModelPlan, LayerPlan, SparsityPlan};

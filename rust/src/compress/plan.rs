@@ -1,9 +1,14 @@
-//! Sparsity plans: which FC layers of a model get MPD masks and at what
+//! Sparsity plans: which layers of a model get MPD masks and at what
 //! compression level. This is the user-facing entry point of the algorithm
-//! ("Creating Masks", Algorithm 1 lines 1–9).
+//! ("Creating Masks", Algorithm 1 lines 1–9). [`SparsityPlan`] covers pure
+//! FC models; [`ConvModelPlan`] adds conv stages whose `(out_c × in_c·k·k)`
+//! filter matrices are maskable exactly like FC weight matrices (see
+//! `linalg::im2col` for the lowering that makes this work at inference).
 
+use crate::linalg::im2col::ConvShape;
 use crate::mask::mask::MpdMask;
 use crate::mask::prng::Xoshiro256pp;
+use crate::nn::convnet::{ConvNetSpec, ConvStageSpec};
 
 /// Plan for one FC layer.
 #[derive(Clone, Debug, PartialEq)]
@@ -147,6 +152,198 @@ impl SparsityPlan {
     }
 }
 
+/// Plan for one conv stage of a mixed conv+dense model. Masking applies to
+/// the `(out_c × in_c·k·k)` filter matrix; `nblocks: None` leaves the conv
+/// dense (the paper's default — Table 1 compresses only FC layers — but
+/// PERMDNN-style conv masking is fully supported).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConvLayerPlan {
+    pub name: String,
+    pub out_c: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Max-pool kernel after the conv (`0` = no pool); stride equals the
+    /// kernel (the non-overlapping pooling every model here uses).
+    pub pool: usize,
+    pub nblocks: Option<usize>,
+}
+
+impl ConvLayerPlan {
+    /// `k×k` stride-1 dense conv with `pad = k/2` + `pool×pool` max-pool.
+    /// For odd `k` this is "same" padding (output-preserving); even kernels
+    /// get `k/2` padding too, which grows the output by one — set `pad`
+    /// explicitly on the struct if a different geometry is wanted
+    /// (`ConvModelPlan::validate` checks the head dims either way).
+    pub fn dense(name: &str, out_c: usize, k: usize, pool: usize) -> Self {
+        Self { name: name.into(), out_c, k, stride: 1, pad: k / 2, pool, nblocks: None }
+    }
+
+    /// Same geometry, with an MPD mask of `nblocks` blocks on the filter
+    /// matrix.
+    pub fn masked(name: &str, out_c: usize, k: usize, pool: usize, nblocks: usize) -> Self {
+        Self { nblocks: Some(nblocks), ..Self::dense(name, out_c, k, pool) }
+    }
+
+    fn stage_spec(&self) -> ConvStageSpec {
+        ConvStageSpec {
+            out_c: self.out_c,
+            k: self.k,
+            stride: self.stride,
+            pad: self.pad,
+            pool_k: self.pool,
+            pool_stride: self.pool,
+        }
+    }
+}
+
+/// A whole mixed conv+dense model plan: input shape, conv stages in network
+/// order, then the FC head as a [`SparsityPlan`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvModelPlan {
+    /// `(channels, height, width)` of the NCHW input.
+    pub input: (usize, usize, usize),
+    pub convs: Vec<ConvLayerPlan>,
+    pub fc: SparsityPlan,
+}
+
+impl ConvModelPlan {
+    pub fn new(
+        input: (usize, usize, usize),
+        convs: Vec<ConvLayerPlan>,
+        fc: SparsityPlan,
+    ) -> Result<Self, String> {
+        let plan = Self { input, convs, fc };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// The architecture as an [`nn::convnet::ConvNetSpec`](ConvNetSpec) —
+    /// the single source of truth trainers and the packed engine both build
+    /// from.
+    pub fn net_spec(&self) -> ConvNetSpec {
+        let mut fc_dims = vec![self.fc.layers[0].in_dim];
+        fc_dims.extend(self.fc.layers.iter().map(|l| l.out_dim));
+        ConvNetSpec {
+            input: self.input,
+            convs: self.convs.iter().map(|c| c.stage_spec()).collect(),
+            fc_dims,
+        }
+    }
+
+    /// Per-stage conv geometry (input of each conv stage).
+    pub fn conv_shapes(&self) -> Vec<ConvShape> {
+        let spec = self.net_spec();
+        spec.stage_shapes()
+            .iter()
+            .zip(&spec.convs)
+            .map(|(&(in_c, h, w), s)| ConvShape {
+                in_c,
+                h,
+                w,
+                kh: s.k,
+                kw: s.k,
+                stride: s.stride,
+                pad: s.pad,
+            })
+            .collect()
+    }
+
+    /// Filter-matrix dims `(out_c, in_c·k·k)` of each conv stage.
+    pub fn filter_dims(&self) -> Vec<(usize, usize)> {
+        self.conv_shapes()
+            .iter()
+            .zip(&self.convs)
+            .map(|(s, c)| (c.out_c, s.patch_dim()))
+            .collect()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.fc.layers.is_empty() {
+            return Err("conv model needs an FC head".into());
+        }
+        for l in &self.fc.layers {
+            l.validate()?;
+        }
+        let spec = self.net_spec();
+        spec.validate()?;
+        for ((out_c, cols), cp) in self.filter_dims().iter().zip(&self.convs) {
+            if let Some(k) = cp.nblocks {
+                if k == 0 {
+                    return Err(format!("{}: zero blocks", cp.name));
+                }
+                if k > *out_c || k > *cols {
+                    return Err(format!(
+                        "{}: {k} blocks exceeds filter-matrix min dim {}",
+                        cp.name,
+                        out_c.min(cols)
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-conv-layer masks over the filter matrices (deterministic given
+    /// `seed`, stream-separated from the FC masks so adding conv layers
+    /// never perturbs the FC mask stream).
+    pub fn generate_conv_masks(&self, seed: u64) -> Vec<Option<MpdMask>> {
+        let mut root = Xoshiro256pp::seed_from_u64(seed ^ 0xC0417_1E5);
+        self.filter_dims()
+            .iter()
+            .zip(&self.convs)
+            .enumerate()
+            .map(|(i, ((out_c, cols), cp))| {
+                let mut rng = root.fork(i as u64);
+                cp.nblocks.map(|k| MpdMask::generate(*out_c, *cols, k, &mut rng))
+            })
+            .collect()
+    }
+
+    /// §3.1-ablation variant: non-permuted conv masks.
+    pub fn generate_non_permuted_conv_masks(&self) -> Vec<Option<MpdMask>> {
+        self.filter_dims()
+            .iter()
+            .zip(&self.convs)
+            .map(|((out_c, cols), cp)| cp.nblocks.map(|k| MpdMask::non_permuted(*out_c, *cols, k)))
+            .collect()
+    }
+
+    // ---- the paper's conv model plans --------------------------------
+
+    /// Deep MNIST at paper scale (TF tutorial): conv 5×5×32 pool2 →
+    /// conv 5×5×64 pool2 → fc 3136→1024→10; both FC layers masked
+    /// (Table 1: 3.22 M → 322 k ⇒ 10×), convs dense per the paper.
+    pub fn deep_mnist(k: usize) -> Self {
+        Self::new(
+            (1, 28, 28),
+            vec![ConvLayerPlan::dense("conv1", 32, 5, 2), ConvLayerPlan::dense("conv2", 64, 5, 2)],
+            SparsityPlan::deep_mnist(k),
+        )
+        .expect("static plan")
+    }
+
+    /// Training-scale Deep MNIST for this testbed (native scalar trainer):
+    /// same topology with slimmer conv stacks and a 784→256 head; conv2's
+    /// filter matrix is masked too, exercising the compressed-conv path
+    /// end-to-end in serving.
+    pub fn deep_mnist_lite(k: usize) -> Self {
+        Self::new(
+            (1, 28, 28),
+            vec![
+                ConvLayerPlan::dense("conv1", 8, 5, 2),
+                ConvLayerPlan::masked("conv2", 16, 5, 2, k.min(8)),
+            ],
+            SparsityPlan::new(vec![
+                LayerPlan::masked("fc1", 256, 16 * 7 * 7, k),
+                LayerPlan::masked("fc2", 10, 256, k.min(10)),
+            ])
+            .expect("static head"),
+        )
+        .expect("static plan")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,5 +394,43 @@ mod tests {
         let m = masks[0].as_ref().unwrap();
         assert!(m.p_row.is_identity());
         assert!(m.p_col.is_identity());
+    }
+
+    #[test]
+    fn conv_plan_shapes_and_masks() {
+        let plan = ConvModelPlan::deep_mnist(10);
+        assert_eq!(plan.net_spec().conv_out_dim(), 3136);
+        assert_eq!(plan.filter_dims(), vec![(32, 25), (64, 32 * 25)]);
+        // convs dense per the paper → no conv masks
+        assert!(plan.generate_conv_masks(7).iter().all(|m| m.is_none()));
+
+        let lite = ConvModelPlan::deep_mnist_lite(10);
+        lite.validate().unwrap();
+        assert_eq!(lite.net_spec().conv_out_dim(), 784);
+        let masks = lite.generate_conv_masks(7);
+        assert!(masks[0].is_none());
+        let m = masks[1].as_ref().unwrap();
+        assert_eq!((m.rows(), m.cols(), m.nblocks()), (16, 8 * 25, 8));
+        // deterministic + seed-sensitive, like FC masks
+        assert_eq!(m.to_dense(), lite.generate_conv_masks(7)[1].as_ref().unwrap().to_dense());
+        assert_ne!(m.to_dense(), lite.generate_conv_masks(8)[1].as_ref().unwrap().to_dense());
+    }
+
+    #[test]
+    fn conv_plan_rejects_bad_geometry() {
+        // head input dim must equal flattened conv output
+        let bad = ConvModelPlan::new(
+            (1, 8, 8),
+            vec![ConvLayerPlan::dense("c1", 4, 3, 2)],
+            SparsityPlan::new(vec![LayerPlan::dense("fc", 3, 65)]).unwrap(),
+        );
+        assert!(bad.is_err());
+        // too many blocks for the filter matrix
+        let bad = ConvModelPlan::new(
+            (1, 8, 8),
+            vec![ConvLayerPlan::masked("c1", 4, 3, 2, 5)],
+            SparsityPlan::new(vec![LayerPlan::dense("fc", 3, 64)]).unwrap(),
+        );
+        assert!(bad.is_err());
     }
 }

@@ -173,6 +173,35 @@ impl QuantConfig {
     }
 }
 
+/// Compressed-conv serving knobs — the `[conv]` TOML table. Controls whether
+/// `mpdc serve` trains and registers the `deep-mnist-mpd` conv variant (and,
+/// together with `[quant] enabled`, its `-int8` twin) next to the FC
+/// variants. Disabled ⇒ the conv routes simply don't exist and return 404.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvConfig {
+    /// Register the conv serving variants.
+    pub enabled: bool,
+    /// Quick-train steps for the native conv trainer at serve startup
+    /// (conv training is scalar-loop bound, so this defaults lower than the
+    /// FC variants' step count).
+    pub steps: usize,
+}
+
+impl Default for ConvConfig {
+    fn default() -> Self {
+        Self { enabled: true, steps: 60 }
+    }
+}
+
+impl ConvConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.steps == 0 {
+            return Err("conv.steps must be ≥ 1".into());
+        }
+        Ok(())
+    }
+}
+
 /// HTTP serving knobs — the `[server]` TOML table. Transport-level settings
 /// map onto [`crate::server::HttpConfig`]; batching-policy settings map onto
 /// [`crate::server::BatcherConfig`] (one batcher per registered variant).
@@ -283,6 +312,7 @@ pub struct ExperimentConfig {
     pub engine: EngineConfig,
     pub server: ServerConfig,
     pub quant: QuantConfig,
+    pub conv: ConvConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -302,6 +332,7 @@ impl Default for ExperimentConfig {
             engine: EngineConfig::default(),
             server: ServerConfig::default(),
             quant: QuantConfig::default(),
+            conv: ConvConfig::default(),
         }
     }
 }
@@ -387,6 +418,13 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_int("quant.calib_batch") {
             cfg.quant.calib_batch = v as usize;
         }
+        if let Some(v) = doc.get_bool("conv.enabled") {
+            cfg.conv.enabled = v;
+        }
+        if let Some(v) = doc.get_int("conv.steps") {
+            cfg.conv.steps =
+                usize::try_from(v).map_err(|_| format!("conv.steps {v} must be non-negative"))?;
+        }
         if let Some(v) = doc.get_str("paths.artifacts") {
             cfg.artifacts_dir = Some(v.to_string());
         }
@@ -413,6 +451,7 @@ impl ExperimentConfig {
         self.engine.validate()?;
         self.server.validate()?;
         self.quant.validate()?;
+        self.conv.validate()?;
         // plan validity at this model/nblocks combination
         self.model.plan(self.nblocks)?;
         Ok(())
@@ -549,6 +588,24 @@ calib_batch = 32
         // invalid values rejected
         assert!(ExperimentConfig::from_toml("[quant]\ncalib_samples = 0\n").is_err());
         assert!(ExperimentConfig::from_toml("[quant]\ncalib_batch = 0\n").is_err());
+    }
+
+    #[test]
+    fn conv_config_parses_and_validates() {
+        let text = r#"
+[conv]
+enabled = false
+steps = 25
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.conv, ConvConfig { enabled: false, steps: 25 });
+        // defaults when the table is absent: conv variants on
+        let cfg = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.conv, ConvConfig::default());
+        assert!(cfg.conv.enabled);
+        assert!(ExperimentConfig::from_toml("[conv]\nsteps = 0\n").is_err());
+        // a negative step count must not wrap through the usize cast
+        assert!(ExperimentConfig::from_toml("[conv]\nsteps = -1\n").is_err());
     }
 
     #[test]

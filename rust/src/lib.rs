@@ -10,16 +10,19 @@
 //! Layer map (see DESIGN.md):
 //! * [`mask`] — permutations, block layouts, MPD masks, Fig.-1 decomposition
 //! * [`linalg`] — dense GEMM, CSR baseline, the persistent worker pool
-//!   (`linalg::pool`), and the register-tiled packed block-diagonal GEMM with
-//!   fused bias+ReLU epilogue (`linalg::blockdiag_mm`)
-//! * [`nn`] — native layers/MLP/conv, checkpoints
+//!   (`linalg::pool`), the register-tiled packed block-diagonal GEMM with
+//!   fused bias+ReLU epilogue (`linalg::blockdiag_mm`), and the im2col
+//!   conv lowering (`linalg::im2col`) that feeds conv layers into it
+//! * [`nn`] — native layers/MLP/conv layers/trainable conv nets, checkpoints
 //! * [`data`] — synthetic datasets + IDX loader
-//! * [`compress`] — plans, compressor, fused packed inference engine
-//!   (`compress::packed_model`, executes on the pool), pruning baseline
+//! * [`compress`] — plans (FC + mixed conv+dense), compressors, the fused
+//!   packed inference engines (`compress::packed_model` for MLPs,
+//!   `compress::conv_model` for im2col-lowered conv nets, both on the
+//!   pool), pruning baseline
 //! * [`quant`] — post-training int8 quantization: activation calibration,
-//!   the i8 packed engine (`quant::QuantizedMlp`, running on the
-//!   register-tiled integer kernel in `linalg::blockdiag_mm_i8`), and the
-//!   checkpoint-v2 i8 serialization
+//!   the i8 packed engines (`quant::QuantizedMlp` / `quant::qconv`, running
+//!   on the register-tiled integer kernel in `linalg::blockdiag_mm_i8`),
+//!   and the checkpoint-v2 i8 serialization
 //! * [`runtime`] — PJRT loader/executor for AOT JAX artifacts (behind the
 //!   `pjrt` feature; stubs out gracefully offline)
 //! * [`train`] — AOT + native trainers, packed-engine evaluation

@@ -1,0 +1,299 @@
+//! im2col lowering — how convolutions reach the packed block-diagonal engine.
+//!
+//! A `Conv2d` with weights `[out_c, in_c, kh, kw]` is exactly a dense FC
+//! layer over sliding-window patches: flatten the filters to the
+//! `(out_c × in_c·kh·kw)` *filter matrix* `W`, extract every receptive field
+//! of the NCHW input into a row of the *patch matrix*
+//! `[batch·oh·ow × in_c·kh·kw]`, and the convolution is `Y = patches · Wᵀ` —
+//! the same `X·Wᵀ` contract every FC kernel in this repo implements. That is
+//! the whole trick: once lowered, a conv layer runs on the register-tiled
+//! packed block-diagonal GEMM (f32 or i8) with the fused bias+ReLU epilogue,
+//! MPD masks apply to the filter matrix exactly as they do to FC weight
+//! matrices, and the compression/accounting machinery needs no new cases.
+//!
+//! ## Ordering contract (bit-exactness)
+//!
+//! Patch columns are ordered `(ic·kh + ky)·kw + kx` — identical to the
+//! filter-matrix column order — and padded taps contribute literal `0.0`
+//! entries. Because the block kernel accumulates products in ascending
+//! column order starting from `+0.0` and adds the bias in the epilogue
+//! (`acc + bias`), and because adding a `±0.0` product never changes an
+//! accumulator that started at `+0.0`, the lowered forward is **bit-identical**
+//! to the direct convolution loop in [`crate::nn::conv::Conv2d::forward`]
+//! (which sums taps in the same `ic → ky → kx` order, skipping padded taps,
+//! then adds the bias last). `tests/conv.rs` pins this down across tile
+//! shapes and thread counts.
+
+/// Geometry of one conv layer application: input shape + kernel + stride/pad.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    pub in_c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvShape {
+    /// Output spatial dims (same formula as `Conv2d::out_hw`).
+    pub fn out_hw(&self) -> (usize, usize) {
+        (
+            (self.h + 2 * self.pad - self.kh) / self.stride + 1,
+            (self.w + 2 * self.pad - self.kw) / self.stride + 1,
+        )
+    }
+
+    /// Patch-matrix column count == filter-matrix column count.
+    pub fn patch_dim(&self) -> usize {
+        self.in_c * self.kh * self.kw
+    }
+
+    /// Patch-matrix rows contributed per sample.
+    pub fn patches_per_sample(&self) -> usize {
+        let (oh, ow) = self.out_hw();
+        oh * ow
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.in_c * self.h * self.w
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.in_c == 0 || self.h == 0 || self.w == 0 || self.kh == 0 || self.kw == 0 {
+            return Err("conv shape has a zero dimension".into());
+        }
+        if self.stride == 0 {
+            return Err("conv stride must be ≥ 1".into());
+        }
+        if self.h + 2 * self.pad < self.kh || self.w + 2 * self.pad < self.kw {
+            return Err(format!(
+                "kernel {}×{} does not fit padded input {}×{} (pad {})",
+                self.kh, self.kw, self.h, self.w, self.pad
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Lower NCHW activations `[batch × in_c·h·w]` to the patch matrix
+/// `[batch·oh·ow × patch_dim]` (row-major, reusing `out`'s allocation).
+/// Row `(bi·oh + oy)·ow + ox` holds the receptive field of output pixel
+/// `(oy, ox)` of sample `bi`; out-of-bounds (padded) taps are `0.0`.
+pub fn im2col(x: &[f32], batch: usize, s: &ConvShape, out: &mut Vec<f32>) {
+    assert_eq!(x.len(), batch * s.in_dim(), "im2col input shape");
+    let (oh, ow) = s.out_hw();
+    let pdim = s.patch_dim();
+    out.clear();
+    out.resize(batch * oh * ow * pdim, 0.0);
+    for bi in 0..batch {
+        let xs = &x[bi * s.in_dim()..(bi + 1) * s.in_dim()];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = &mut out[((bi * oh + oy) * ow + ox) * pdim..][..pdim];
+                for ic in 0..s.in_c {
+                    for ky in 0..s.kh {
+                        let iy = oy * s.stride + ky;
+                        if iy < s.pad || iy - s.pad >= s.h {
+                            continue; // row stays 0.0 (padded)
+                        }
+                        let iy = iy - s.pad;
+                        let xrow = &xs[(ic * s.h + iy) * s.w..][..s.w];
+                        let prow = &mut row[(ic * s.kh + ky) * s.kw..][..s.kw];
+                        for kx in 0..s.kw {
+                            let ix = ox * s.stride + kx;
+                            if ix < s.pad || ix - s.pad >= s.w {
+                                continue;
+                            }
+                            prow[kx] = xrow[ix - s.pad];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Column-gather every row of a `[nrows × dim]` matrix into `out`:
+/// `out[r][j] = rows[r][gather[j]]` — how a masked conv stage moves patch
+/// columns into `P_col` (block) space before the packed GEMM. Shared by the
+/// f32 and i8 conv engines so the gather semantics cannot drift.
+pub fn gather_cols(rows: &[f32], nrows: usize, dim: usize, gather: &[u32], out: &mut Vec<f32>) {
+    assert_eq!(rows.len(), nrows * dim, "gather input shape");
+    assert_eq!(gather.len(), dim, "gather length");
+    out.resize(rows.len(), 0.0);
+    for r in 0..nrows {
+        let src = &rows[r * dim..(r + 1) * dim];
+        let dst = &mut out[r * dim..(r + 1) * dim];
+        for (j, &s) in gather.iter().enumerate() {
+            dst[j] = src[s as usize];
+        }
+    }
+}
+
+/// Transpose the GEMM output `[batch·oh·ow × out_c]` back to NCHW
+/// `[batch × out_c·oh·ow]`, optionally restoring logical channel order:
+/// when `chan_src` is given, logical channel `oc` pulls from GEMM column
+/// `chan_src[oc]` (the block-row-space column the packed kernel wrote it to).
+pub fn rows_to_nchw(
+    rows: &[f32],
+    batch: usize,
+    out_c: usize,
+    oh: usize,
+    ow: usize,
+    chan_src: Option<&[u32]>,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(rows.len(), batch * oh * ow * out_c, "rows shape");
+    if let Some(g) = chan_src {
+        assert_eq!(g.len(), out_c, "channel gather length");
+    }
+    out.clear();
+    out.resize(rows.len(), 0.0);
+    for bi in 0..batch {
+        for oc in 0..out_c {
+            let src_c = match chan_src {
+                Some(g) => g[oc] as usize,
+                None => oc,
+            };
+            let dst = &mut out[((bi * out_c + oc) * oh * ow)..][..oh * ow];
+            for (p, d) in dst.iter_mut().enumerate() {
+                *d = rows[((bi * oh * ow) + p) * out_c + src_c];
+            }
+        }
+    }
+}
+
+/// Stateless NCHW max-pool (inference path; the trainable
+/// [`crate::nn::conv::MaxPool2d`] additionally caches argmax for backward).
+/// Identical tie-breaking (`>` keeps the first maximum), so the value stream
+/// matches the trainer's pooling bit-for-bit.
+pub fn maxpool_nchw(
+    x: &[f32],
+    batch: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(x.len(), batch * c * h * w, "maxpool input shape");
+    assert!(k >= 1 && stride >= 1 && h >= k && w >= k, "maxpool geometry");
+    let (oh, ow) = ((h - k) / stride + 1, (w - k) / stride + 1);
+    out.clear();
+    out.resize(batch * c * oh * ow, 0.0);
+    for bc in 0..batch * c {
+        let xp = &x[bc * h * w..(bc + 1) * h * w];
+        let yp = &mut out[bc * oh * ow..(bc + 1) * oh * ow];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut best = f32::NEG_INFINITY;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let v = xp[(oy * stride + ky) * w + (ox * stride + kx)];
+                        if v > best {
+                            best = v;
+                        }
+                    }
+                }
+                yp[oy * ow + ox] = best;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::gemm_a_bt;
+    use crate::mask::prng::Xoshiro256pp;
+    use crate::nn::conv::Conv2d;
+
+    #[test]
+    fn shapes_and_validation() {
+        let s = ConvShape { in_c: 3, h: 28, w: 28, kh: 5, kw: 5, stride: 1, pad: 2 };
+        assert_eq!(s.out_hw(), (28, 28));
+        assert_eq!(s.patch_dim(), 75);
+        s.validate().unwrap();
+        let too_big = ConvShape { h: 4, w: 4, kh: 9, kw: 9, pad: 1, ..s };
+        assert!(too_big.validate().is_err());
+        assert!(ConvShape { stride: 0, ..s }.validate().is_err());
+    }
+
+    #[test]
+    fn im2col_known_values() {
+        // 1×3×3 input, 2×2 kernel, stride 1, no pad → 4 patches of 4 taps.
+        let s = ConvShape { in_c: 1, h: 3, w: 3, kh: 2, kw: 2, stride: 1, pad: 0 };
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let mut p = Vec::new();
+        im2col(&x, 1, &s, &mut p);
+        assert_eq!(p.len(), 4 * 4);
+        assert_eq!(&p[0..4], &[1.0, 2.0, 4.0, 5.0]); // top-left patch
+        assert_eq!(&p[12..16], &[5.0, 6.0, 8.0, 9.0]); // bottom-right patch
+    }
+
+    #[test]
+    fn im2col_padding_zeroes() {
+        let s = ConvShape { in_c: 1, h: 2, w: 2, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let mut p = Vec::new();
+        im2col(&x, 1, &s, &mut p);
+        // output is 2×2; the (0,0) patch sees the input in its lower-right 2×2
+        assert_eq!(&p[0..9], &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn lowered_gemm_matches_direct_conv() {
+        let mut rng = Xoshiro256pp::seed_from_u64(91);
+        for (in_c, h, w, out_c, k, stride, pad, batch) in
+            [(1, 6, 6, 3, 3, 1, 1, 2), (2, 7, 5, 4, 3, 2, 0, 1), (3, 8, 8, 2, 5, 1, 2, 3)]
+        {
+            let mut conv = Conv2d::new(out_c, in_c, k, stride, pad, &mut rng);
+            for b in conv.b.iter_mut() {
+                *b = rng.next_f32() - 0.5;
+            }
+            let x: Vec<f32> = (0..batch * in_c * h * w).map(|_| rng.next_f32() - 0.5).collect();
+            let direct = conv.forward(&x, batch, h, w);
+
+            let s = ConvShape { in_c, h, w, kh: k, kw: k, stride, pad };
+            let (oh, ow) = s.out_hw();
+            let mut patches = Vec::new();
+            im2col(&x, batch, &s, &mut patches);
+            let rows = batch * oh * ow;
+            let mut y = vec![0.0f32; rows * out_c];
+            for r in 0..rows {
+                y[r * out_c..(r + 1) * out_c].copy_from_slice(&conv.b);
+            }
+            gemm_a_bt(&patches, &conv.w, &mut y, rows, s.patch_dim(), out_c);
+            let mut nchw = Vec::new();
+            rows_to_nchw(&y, batch, out_c, oh, ow, None, &mut nchw);
+            for (a, b) in nchw.iter().zip(&direct) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn rows_to_nchw_restores_channel_order() {
+        // 1 sample, 2×1 spatial, 3 channels; gather reverses channel order.
+        let rows = [0.0f32, 1.0, 2.0, 10.0, 11.0, 12.0]; // [2 rows × 3 ch]
+        let mut out = Vec::new();
+        rows_to_nchw(&rows, 1, 3, 2, 1, Some(&[2, 1, 0]), &mut out);
+        assert_eq!(out, vec![2.0, 12.0, 1.0, 11.0, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn maxpool_matches_trainable_pool() {
+        use crate::nn::conv::MaxPool2d;
+        let mut rng = Xoshiro256pp::seed_from_u64(92);
+        let (batch, c, h, w) = (2, 3, 6, 6);
+        let x: Vec<f32> = (0..batch * c * h * w).map(|_| rng.next_f32() - 0.5).collect();
+        let mut mp = MaxPool2d::new(2, 2);
+        let want = mp.forward(&x, batch, c, h, w);
+        let mut got = Vec::new();
+        maxpool_nchw(&x, batch, c, h, w, 2, 2, &mut got);
+        assert_eq!(got, want);
+    }
+}

@@ -6,7 +6,8 @@
 //!   report      compression accounting (Table-1 param columns) for a model
 //!   train       train a model with MPD masks via the AOT/PJRT runtime
 //!   quantize    post-training int8 quantization → checkpoint-v2 artifact
-//!   serve       start the HTTP inference server (dense + MPD + -int8 variants)
+//!   serve       start the HTTP inference server (dense + MPD + -int8 +
+//!               compressed-conv deep-mnist-mpd variants)
 //!   loadgen     drive closed/open-loop load against a running server
 //!   bench-fig1 / bench-fig4a / bench-fig4b / bench-fig5 / bench-table1 /
 //!   bench-speedup   regenerate the paper's figures/tables
@@ -84,7 +85,8 @@ COMMANDS
   serve          [--port P] [--steps N] [--split dense:0.2,mpd:0.8]
                  [--config FILE]   quick-train a masked LeNet, register
                  dense + csr + mpd (+ mpd-int8/dense-int8 unless
-                 quant.enabled=false) variants, serve HTTP ([server] in TOML)
+                 quant.enabled=false; + deep-mnist-mpd[-int8] conv variants
+                 unless conv.enabled=false), serve HTTP ([server] in TOML)
   loadgen        [--host H] [--port P] [--variant V] [--mode closed|open]
                  [--qps F] [--concurrency N] [--requests N] [--seed S]
                  drive load against a running server; prints p50/p99 +
@@ -522,6 +524,64 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!(e))?;
         let (h, _wq2) = spawn(QuantBackend { model: qd }, bc);
         router.register("dense-int8", h);
+    }
+
+    // Compressed-conv variants ([conv] in TOML): quick-train the lite Deep
+    // MNIST conv net under in-training masking (conv2 filter matrix + both
+    // head FC layers carry MPD masks), lower it via im2col onto the packed
+    // block-diagonal engine, and register deep-mnist-mpd (+ its -int8 twin
+    // when [quant] is also enabled).
+    if cfg.conv.enabled {
+        use mpdc::compress::conv_model::ConvNetParams;
+        use mpdc::compress::{ConvCompressor, ConvModelPlan};
+        use mpdc::quant::{calibrate_conv, QuantizedConvNet};
+        use mpdc::server::{ConvBackend, QuantConvBackend};
+        use mpdc::train::native_trainer::fit_native_conv;
+
+        anyhow::ensure!(cfg.nblocks <= 256, "deep-mnist-mpd supports ≤ 256 blocks");
+        println!(
+            "training Deep MNIST (lite) conv net natively ({} steps, {} blocks)…",
+            cfg.conv.steps, cfg.nblocks
+        );
+        let conv_comp = ConvCompressor::new(ConvModelPlan::deep_mnist_lite(cfg.nblocks), cfg.seed);
+        let mut conv_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xC4);
+        let mut conv_net = conv_comp.build_net(&mut conv_rng);
+        let ctc = TrainConfig {
+            steps: cfg.conv.steps,
+            lr: 0.05,
+            log_every: (cfg.conv.steps / 4).max(1),
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        fit_native_conv(&mut conv_net, &train, 32, &ctc);
+        let cparams = ConvNetParams::from_net(&conv_net);
+        let cr = conv_comp.report();
+        println!(
+            "  deep-mnist-mpd: {:.2}× parameter compression ({} → {})",
+            cr.overall_compression(),
+            cr.total_dense_params(),
+            cr.total_kept_params()
+        );
+        let cpacked = conv_comp.build_engine(&cparams, &cfg.engine).map_err(|e| anyhow::anyhow!(e))?;
+        let (h, _wc1) = spawn(ConvBackend { model: cpacked }, bc);
+        router.register("deep-mnist-mpd", h);
+
+        if cfg.quant.enabled {
+            let nsamples = cfg.quant.calib_samples.min(train.len());
+            let ccalib = calibrate_conv(
+                &conv_comp,
+                &cparams,
+                &train.x[..nsamples * 784],
+                nsamples,
+                cfg.quant.calib_batch,
+            );
+            let cq = QuantizedConvNet::quantize(&conv_comp, &cparams, &ccalib)
+                .map_err(|e| anyhow::anyhow!(e))?
+                .with_engine_config(&cfg.engine)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            let (h, _wc2) = spawn(QuantConvBackend { model: cq }, bc);
+            router.register("deep-mnist-mpd-int8", h);
+        }
     }
 
     if let Some(split) = flags.get("split") {

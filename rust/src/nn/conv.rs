@@ -1,16 +1,31 @@
 //! Direct 2-D convolution + max-pool (NCHW) for the paper's conv models
 //! (Deep MNIST, CIFAR-10 net, AlexNet front-end).
 //!
-//! MPDCompress only masks FC layers ("the mask Mᵢ is only applied to the
-//! weight matrix" of FC layers — conv layers pass through unchanged), so the
-//! conv substrate here needs correctness and reasonable speed, not the full
-//! optimization treatment the block-diagonal GEMM hot path gets.
+//! The paper itself only masks FC layers, but a `Conv2d` *is* an FC layer
+//! over receptive-field patches: its weights flatten to the
+//! `(out_c × in_c·kh·kw)` filter matrix, so MPD masks apply to it exactly as
+//! to `nn::layer::Linear` (PERMDNN makes the same move for permuted sparsity
+//! on conv layers). [`Conv2d::with_mask`] attaches a mask over the filter
+//! matrix; [`Conv2d::sgd_step`] re-applies it after every update, the
+//! in-training-masking contract of Algorithm 1. Compressed inference lowers
+//! through `linalg::im2col` onto the packed block-diagonal engine; this
+//! direct loop stays the training substrate and the correctness oracle.
+//!
+//! **Accumulation-order contract:** the direct loop sums taps in
+//! `ic → ky → kx` order (ascending filter-matrix column), skipping padded
+//! taps, and adds the bias *after* the reduction — the same association the
+//! packed engine's fused epilogue uses (`acc + bias`), which is what makes
+//! the im2col-lowered forward bit-identical to this loop (see
+//! `linalg::im2col` and `tests/conv.rs`).
 
+use crate::mask::mask::MpdMask;
 use crate::mask::prng::Xoshiro256pp;
 use crate::nn::layer::he_init;
 
 /// `same`-or-`valid` 2-D convolution layer, NCHW activations,
-/// weights `[out_c, in_c, kh, kw]`.
+/// weights `[out_c, in_c, kh, kw]` (equivalently the row-major
+/// `(out_c × in_c·kh·kw)` filter matrix), optionally under an MPD mask on
+/// that filter matrix.
 pub struct Conv2d {
     pub w: Vec<f32>,
     pub b: Vec<f32>,
@@ -20,6 +35,8 @@ pub struct Conv2d {
     pub kw: usize,
     pub stride: usize,
     pub pad: usize,
+    /// Optional MPD mask over the `(out_c × in_c·kh·kw)` filter matrix.
+    pub mask: Option<MpdMask>,
     x_cache: Vec<f32>,
     in_hw: (usize, usize),
     batch_cache: usize,
@@ -38,12 +55,23 @@ impl Conv2d {
             kw: k,
             stride,
             pad,
+            mask: None,
             x_cache: Vec::new(),
             in_hw: (0, 0),
             batch_cache: 0,
             dw: vec![0.0; out_c * in_c * k * k],
             db: vec![0.0; out_c],
         }
+    }
+
+    /// Attach an MPD mask over the filter matrix (and immediately apply it),
+    /// mirroring [`crate::nn::layer::Linear::with_mask`].
+    pub fn with_mask(mut self, mask: MpdMask) -> Self {
+        assert_eq!(mask.rows(), self.out_c, "mask rows must equal out channels");
+        assert_eq!(mask.cols(), self.in_c * self.kh * self.kw, "mask cols must equal filter-matrix cols");
+        mask.apply_inplace(&mut self.w);
+        self.mask = Some(mask);
+        self
     }
 
     pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
@@ -66,7 +94,10 @@ impl Conv2d {
                 let bias = self.b[oc];
                 for oy in 0..oh {
                     for ox in 0..ow {
-                        let mut acc = bias;
+                        // Products first, bias last — the packed engine's
+                        // epilogue association, so the im2col lowering can be
+                        // bit-identical to this loop.
+                        let mut acc = 0.0f32;
                         for ic in 0..self.in_c {
                             for ky in 0..self.kh {
                                 let iy = oy * self.stride + ky;
@@ -85,7 +116,7 @@ impl Conv2d {
                                 }
                             }
                         }
-                        y[((bi * self.out_c + oc) * oh + oy) * ow + ox] = acc;
+                        y[((bi * self.out_c + oc) * oh + oy) * ow + ox] = acc + bias;
                     }
                 }
             }
@@ -136,12 +167,17 @@ impl Conv2d {
         dx
     }
 
+    /// SGD step; re-applies the filter-matrix mask to the *updated* weights,
+    /// the same in-training-masking rule `Linear::sgd_step` follows.
     pub fn sgd_step(&mut self, lr: f32) {
         for (w, g) in self.w.iter_mut().zip(&self.dw) {
             *w -= lr * g;
         }
         for (b, g) in self.b.iter_mut().zip(&self.db) {
             *b -= lr * g;
+        }
+        if let Some(mask) = &self.mask {
+            mask.apply_inplace(&mut self.w);
         }
         self.zero_grad();
     }
@@ -153,6 +189,14 @@ impl Conv2d {
 
     pub fn param_count(&self) -> usize {
         self.w.len() + self.b.len()
+    }
+
+    /// Surviving parameter count after masking (weights on the mask + biases).
+    pub fn effective_param_count(&self) -> usize {
+        match &self.mask {
+            Some(m) => m.nnz() + self.b.len(),
+            None => self.param_count(),
+        }
     }
 }
 
@@ -287,6 +331,31 @@ mod tests {
         let lm = loss_of(&mut conv, &x2);
         let num = (lp - lm) / (2.0 * eps);
         assert!((dx[idx] - num).abs() < 2e-2, "dx[{idx}] {} vs {num}", dx[idx]);
+    }
+
+    #[test]
+    fn masked_conv_keeps_filter_matrix_on_mask() {
+        let mut r = rng(6);
+        // filter matrix is 4 × (2·3·3) = 4×18; mask it with 2 blocks
+        let mask = MpdMask::generate(4, 18, 2, &mut r);
+        let dense_mask = mask.to_dense();
+        let mut conv = Conv2d::new(4, 2, 3, 1, 1, &mut r).with_mask(mask);
+        for (i, &m) in dense_mask.iter().enumerate() {
+            if m == 0.0 {
+                assert_eq!(conv.w[i], 0.0, "init leaked off-mask");
+            }
+        }
+        // one training step: gradients flow, off-mask weights stay zero
+        let x: Vec<f32> = (0..2 * 4 * 4).map(|i| (i as f32 * 0.23).sin()).collect();
+        let y = conv.forward(&x, 1, 4, 4);
+        conv.backward(&y);
+        conv.sgd_step(0.05);
+        for (i, &m) in dense_mask.iter().enumerate() {
+            if m == 0.0 {
+                assert_eq!(conv.w[i], 0.0, "weight {i} leaked off-mask after sgd");
+            }
+        }
+        assert_eq!(conv.effective_param_count(), conv.mask.as_ref().unwrap().nnz() + 4);
     }
 
     #[test]

@@ -1,0 +1,441 @@
+//! Native trainable conv net — the Deep MNIST / CIFAR-10 workhorse: a stack
+//! of `Conv2d → ReLU → (MaxPool)` stages followed by a dense FC head, all
+//! trained with plain SGD under optional in-training MPD masking (conv masks
+//! apply to the `(out_c × in_c·k·k)` filter matrix, FC masks to the weight
+//! matrix, both re-applied after every update — Algorithm 1).
+//!
+//! The forward value stream is deliberately identical to the compressed
+//! inference path (`compress::conv_model::PackedConvNet`): convs accumulate
+//! taps in filter-matrix column order with the bias added last, ReLU follows
+//! each conv, pooling uses first-maximum tie-breaking, activations flatten in
+//! NCHW order into the head. For unmasked models the two paths are
+//! bit-identical; under masks they agree to float tolerance (the packed
+//! kernel sums each block's taps in permuted order).
+
+use crate::mask::mask::MpdMask;
+use crate::mask::prng::Xoshiro256pp;
+use crate::nn::checkpoint::NamedTensor;
+use crate::nn::conv::{Conv2d, MaxPool2d};
+use crate::nn::layer::{accuracy, softmax_xent, Linear, Relu};
+
+/// One conv stage of a [`ConvNetSpec`]: a square-kernel convolution plus an
+/// optional max-pool (`pool_k == 0` disables pooling).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvStageSpec {
+    pub out_c: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub pool_k: usize,
+    pub pool_stride: usize,
+}
+
+impl ConvStageSpec {
+    /// `k×k` stride-1 conv with `pad = k/2` followed by a `p×p` stride-`p`
+    /// pool. Output-preserving ("same") for odd `k`; even kernels grow the
+    /// output by one — construct the struct directly for other geometries.
+    pub fn same(out_c: usize, k: usize, pool: usize) -> Self {
+        Self { out_c, k, stride: 1, pad: k / 2, pool_k: pool, pool_stride: pool }
+    }
+
+    pub fn has_pool(&self) -> bool {
+        self.pool_k > 0
+    }
+}
+
+/// Architecture of a conv net: NCHW input shape, conv stages, FC head dims
+/// (`fc_dims[0]` must equal the flattened conv output; last entry is the
+/// class count).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConvNetSpec {
+    /// `(channels, height, width)`.
+    pub input: (usize, usize, usize),
+    pub convs: Vec<ConvStageSpec>,
+    pub fc_dims: Vec<usize>,
+}
+
+impl ConvNetSpec {
+    /// Per-stage `(in_c, h, w)` at the *input* of each conv, plus the final
+    /// `(c, h, w)` after the last stage.
+    pub fn stage_shapes(&self) -> Vec<(usize, usize, usize)> {
+        let (mut c, mut h, mut w) = self.input;
+        let mut shapes = Vec::with_capacity(self.convs.len() + 1);
+        for s in &self.convs {
+            shapes.push((c, h, w));
+            h = (h + 2 * s.pad - s.k) / s.stride + 1;
+            w = (w + 2 * s.pad - s.k) / s.stride + 1;
+            c = s.out_c;
+            if s.has_pool() {
+                h = (h - s.pool_k) / s.pool_stride + 1;
+                w = (w - s.pool_k) / s.pool_stride + 1;
+            }
+        }
+        shapes.push((c, h, w));
+        shapes
+    }
+
+    /// Flattened feature count entering the FC head.
+    pub fn conv_out_dim(&self) -> usize {
+        let &(c, h, w) = self.stage_shapes().last().unwrap();
+        c * h * w
+    }
+
+    pub fn in_dim(&self) -> usize {
+        let (c, h, w) = self.input;
+        c * h * w
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let (c, h, w) = self.input;
+        if c == 0 || h == 0 || w == 0 {
+            return Err("convnet input has a zero dimension".into());
+        }
+        if self.fc_dims.len() < 2 {
+            return Err("convnet head needs at least [in, out] dims".into());
+        }
+        let (mut c, mut h, mut w) = self.input;
+        for (i, s) in self.convs.iter().enumerate() {
+            if s.out_c == 0 || s.k == 0 || s.stride == 0 {
+                return Err(format!("conv stage {i}: zero dimension"));
+            }
+            if h + 2 * s.pad < s.k || w + 2 * s.pad < s.k {
+                return Err(format!("conv stage {i}: kernel {} does not fit {h}×{w} (pad {})", s.k, s.pad));
+            }
+            h = (h + 2 * s.pad - s.k) / s.stride + 1;
+            w = (w + 2 * s.pad - s.k) / s.stride + 1;
+            c = s.out_c;
+            if s.has_pool() {
+                if s.pool_stride == 0 {
+                    return Err(format!("conv stage {i}: zero pool stride"));
+                }
+                if h < s.pool_k || w < s.pool_k {
+                    return Err(format!("conv stage {i}: pool {} does not fit {h}×{w}", s.pool_k));
+                }
+                h = (h - s.pool_k) / s.pool_stride + 1;
+                w = (w - s.pool_k) / s.pool_stride + 1;
+            }
+        }
+        if self.fc_dims[0] != c * h * w {
+            return Err(format!(
+                "head input dim {} != flattened conv output {} ({c}×{h}×{w})",
+                self.fc_dims[0],
+                c * h * w
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A trainable conv net: conv stages + FC head, NCHW activations flattened
+/// row-major between the two.
+pub struct ConvNet {
+    pub spec: ConvNetSpec,
+    pub convs: Vec<Conv2d>,
+    pools: Vec<Option<MaxPool2d>>,
+    conv_relus: Vec<Relu>,
+    pub fcs: Vec<Linear>,
+    fc_relus: Vec<Relu>,
+    /// `(in_c, h, w)` at each conv's input (cached from the spec).
+    shapes: Vec<(usize, usize, usize)>,
+}
+
+impl ConvNet {
+    pub fn new(spec: ConvNetSpec, rng: &mut Xoshiro256pp) -> Self {
+        spec.validate().expect("valid convnet spec");
+        let shapes = spec.stage_shapes();
+        let convs: Vec<Conv2d> = spec
+            .convs
+            .iter()
+            .zip(&shapes)
+            .map(|(s, &(in_c, _, _))| Conv2d::new(s.out_c, in_c, s.k, s.stride, s.pad, rng))
+            .collect();
+        let pools = spec
+            .convs
+            .iter()
+            .map(|s| s.has_pool().then(|| MaxPool2d::new(s.pool_k, s.pool_stride)))
+            .collect();
+        let conv_relus = (0..spec.convs.len()).map(|_| Relu::new()).collect();
+        let fcs = spec.fc_dims.windows(2).map(|d| Linear::new(d[1], d[0], rng)).collect::<Vec<_>>();
+        let fc_relus = (0..spec.fc_dims.len().saturating_sub(2)).map(|_| Relu::new()).collect();
+        Self { spec, convs, pools, conv_relus, fcs, fc_relus, shapes }
+    }
+
+    /// Attach MPD masks: `conv_masks[i]` over conv `i`'s filter matrix,
+    /// `fc_masks[j]` over FC layer `j` (None = dense). Masks are applied
+    /// immediately and re-applied after every SGD step.
+    pub fn with_masks(mut self, conv_masks: Vec<Option<MpdMask>>, fc_masks: Vec<Option<MpdMask>>) -> Self {
+        assert_eq!(conv_masks.len(), self.convs.len());
+        assert_eq!(fc_masks.len(), self.fcs.len());
+        let convs = std::mem::take(&mut self.convs);
+        self.convs = convs
+            .into_iter()
+            .zip(conv_masks)
+            .map(|(c, m)| match m {
+                Some(mask) => c.with_mask(mask),
+                None => c,
+            })
+            .collect();
+        let fcs = std::mem::take(&mut self.fcs);
+        self.fcs = fcs
+            .into_iter()
+            .zip(fc_masks)
+            .map(|(l, m)| match m {
+                Some(mask) => l.with_mask(mask),
+                None => l,
+            })
+            .collect();
+        self
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.spec.in_dim()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        *self.spec.fc_dims.last().unwrap()
+    }
+
+    /// Forward a batch of flattened NCHW inputs `[batch × in_dim]` → logits.
+    pub fn forward(&mut self, x: &[f32], batch: usize) -> Vec<f32> {
+        assert_eq!(x.len(), batch * self.in_dim());
+        let mut act = x.to_vec();
+        for i in 0..self.convs.len() {
+            let (_, h, w) = self.shapes[i];
+            act = self.convs[i].forward(&act, batch, h, w);
+            act = self.conv_relus[i].forward(&act);
+            if let Some(p) = &mut self.pools[i] {
+                let (oh, ow) = self.convs[i].out_hw(h, w);
+                act = p.forward(&act, batch, self.convs[i].out_c, oh, ow);
+            }
+        }
+        let n = self.fcs.len();
+        act = self.fcs[0].forward(&act, batch);
+        for j in 1..n {
+            act = self.fc_relus[j - 1].forward(&act);
+            act = self.fcs[j].forward(&act, batch);
+        }
+        act
+    }
+
+    /// One SGD step on a batch; returns the loss.
+    pub fn train_step(&mut self, x: &[f32], labels: &[u32], batch: usize, lr: f32) -> f32 {
+        let classes = self.out_dim();
+        let logits = self.forward(x, batch);
+        let (loss, mut grad) = softmax_xent(&logits, labels, batch, classes);
+        let n = self.fcs.len();
+        for j in (0..n).rev() {
+            grad = self.fcs[j].backward(&grad);
+            if j > 0 {
+                grad = self.fc_relus[j - 1].backward(&grad);
+            }
+        }
+        for i in (0..self.convs.len()).rev() {
+            if let Some(p) = &self.pools[i] {
+                grad = p.backward(&grad);
+            }
+            grad = self.conv_relus[i].backward(&grad);
+            grad = self.convs[i].backward(&grad);
+        }
+        for c in &mut self.convs {
+            c.sgd_step(lr);
+        }
+        for l in &mut self.fcs {
+            l.sgd_step(lr);
+        }
+        loss
+    }
+
+    /// Accuracy over a batch.
+    pub fn evaluate(&mut self, x: &[f32], labels: &[u32], batch: usize) -> f64 {
+        let classes = self.out_dim();
+        let logits = self.forward(x, batch);
+        accuracy(&logits, labels, batch, classes)
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.convs.iter().map(|c| c.param_count()).sum::<usize>()
+            + self.fcs.iter().map(|l| l.param_count()).sum::<usize>()
+    }
+
+    /// Surviving parameters after masking (Table-1 accounting for mixed
+    /// conv+dense models).
+    pub fn effective_param_count(&self) -> usize {
+        self.convs.iter().map(|c| c.effective_param_count()).sum::<usize>()
+            + self.fcs.iter().map(|l| l.effective_param_count()).sum::<usize>()
+    }
+
+    /// Named checkpoint tensors: `conv{i}.w [out_c, in_c, kh, kw]`,
+    /// `conv{i}.b`, `fc{j}.w [out, in]`, `fc{j}.b` — plain f32 tensors, so a
+    /// conv model round-trips through checkpoint format v1 unchanged.
+    pub fn named_tensors(&self) -> Vec<NamedTensor> {
+        let mut out = Vec::new();
+        for (i, c) in self.convs.iter().enumerate() {
+            out.push(NamedTensor::f32(
+                format!("conv{i}.w"),
+                vec![c.out_c, c.in_c, c.kh, c.kw],
+                c.w.clone(),
+            ));
+            out.push(NamedTensor::f32(format!("conv{i}.b"), vec![c.out_c], c.b.clone()));
+        }
+        for (j, l) in self.fcs.iter().enumerate() {
+            out.push(NamedTensor::f32(format!("fc{j}.w"), vec![l.out_dim, l.in_dim], l.w.clone()));
+            out.push(NamedTensor::f32(format!("fc{j}.b"), vec![l.out_dim], l.b.clone()));
+        }
+        out
+    }
+
+    /// Load parameters saved by [`Self::named_tensors`] (shape-checked).
+    /// Attached masks are re-applied after loading, so a checkpoint trained
+    /// under different masks cannot leak off-block weights.
+    pub fn load_tensors(&mut self, tensors: &[NamedTensor]) -> Result<(), String> {
+        let find = |name: &str| -> Result<&NamedTensor, String> {
+            tensors.iter().find(|t| t.name == name).ok_or_else(|| format!("missing tensor {name}"))
+        };
+        for (i, c) in self.convs.iter_mut().enumerate() {
+            let w = find(&format!("conv{i}.w"))?;
+            if w.shape != vec![c.out_c, c.in_c, c.kh, c.kw] {
+                return Err(format!("conv{i}.w: shape {:?} mismatch", w.shape));
+            }
+            c.w = w.as_f32().ok_or_else(|| format!("conv{i}.w: not f32"))?.to_vec();
+            if let Some(m) = &c.mask {
+                m.apply_inplace(&mut c.w);
+            }
+            let b = find(&format!("conv{i}.b"))?;
+            if b.shape != vec![c.out_c] {
+                return Err(format!("conv{i}.b: shape {:?} mismatch", b.shape));
+            }
+            c.b = b.as_f32().ok_or_else(|| format!("conv{i}.b: not f32"))?.to_vec();
+        }
+        for (j, l) in self.fcs.iter_mut().enumerate() {
+            let w = find(&format!("fc{j}.w"))?;
+            if w.shape != vec![l.out_dim, l.in_dim] {
+                return Err(format!("fc{j}.w: shape {:?} mismatch", w.shape));
+            }
+            l.w = w.as_f32().ok_or_else(|| format!("fc{j}.w: not f32"))?.to_vec();
+            if let Some(m) = &l.mask {
+                m.apply_inplace(&mut l.w);
+            }
+            let b = find(&format!("fc{j}.b"))?;
+            if b.shape != vec![l.out_dim] {
+                return Err(format!("fc{j}.b: shape {:?} mismatch", b.shape));
+            }
+            l.b = b.as_f32().ok_or_else(|| format!("fc{j}.b: not f32"))?.to_vec();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> ConvNetSpec {
+        ConvNetSpec {
+            input: (1, 8, 8),
+            convs: vec![ConvStageSpec::same(4, 3, 2), ConvStageSpec::same(6, 3, 2)],
+            fc_dims: vec![6 * 2 * 2, 16, 3],
+        }
+    }
+
+    #[test]
+    fn spec_shapes_and_validation() {
+        let spec = tiny_spec();
+        spec.validate().unwrap();
+        assert_eq!(spec.stage_shapes(), vec![(1, 8, 8), (4, 4, 4), (6, 2, 2)]);
+        assert_eq!(spec.conv_out_dim(), 24);
+        let mut bad = tiny_spec();
+        bad.fc_dims[0] = 25;
+        assert!(bad.validate().is_err());
+        let mut bad = tiny_spec();
+        bad.convs[0].k = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn deep_mnist_paper_spec_shapes() {
+        // TF-tutorial Deep MNIST: conv 5×5×32 pool2 → conv 5×5×64 pool2 →
+        // fc 3136→1024→10 (paper Table 1's 3.22M FC params).
+        let spec = ConvNetSpec {
+            input: (1, 28, 28),
+            convs: vec![ConvStageSpec::same(32, 5, 2), ConvStageSpec::same(64, 5, 2)],
+            fc_dims: vec![3136, 1024, 10],
+        };
+        spec.validate().unwrap();
+        assert_eq!(spec.conv_out_dim(), 64 * 7 * 7);
+    }
+
+    #[test]
+    fn learns_tiny_synthetic_task() {
+        // 3-class blobs rendered as 8×8 images with class-keyed quadrants.
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let spec = tiny_spec();
+        let mut net = ConvNet::new(spec.clone(), &mut rng);
+        let n = 60;
+        let mut x = Vec::with_capacity(n * 64);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let label = (i % 3) as u32;
+            for p in 0..64 {
+                let (py, px) = (p / 8, p % 8);
+                let on = match label {
+                    0 => py < 4,
+                    1 => px < 4,
+                    _ => (py + px) % 2 == 0,
+                };
+                x.push(if on { 1.0 } else { -1.0 } + (rng.next_f32() - 0.5) * 0.3);
+            }
+            y.push(label);
+        }
+        let first = net.train_step(&x, &y, n, 0.05);
+        let mut last = first;
+        for _ in 0..40 {
+            last = net.train_step(&x, &y, n, 0.05);
+        }
+        assert!(last < first * 0.6, "loss {first} → {last} did not drop");
+        assert!(net.evaluate(&x, &y, n) > 0.8);
+    }
+
+    #[test]
+    fn masked_training_confines_weights() {
+        use crate::mask::blockdiag::off_block_mass;
+        let mut rng = Xoshiro256pp::seed_from_u64(12);
+        let spec = tiny_spec();
+        // mask conv1's 6×(4·9)=6×36 filter matrix and fc0's 16×24 matrix
+        let conv_mask = MpdMask::generate(6, 36, 3, &mut rng);
+        let fc_mask = MpdMask::generate(16, 24, 4, &mut rng);
+        let (cm, fm) = (conv_mask.clone(), fc_mask.clone());
+        let mut net = ConvNet::new(spec, &mut rng)
+            .with_masks(vec![None, Some(conv_mask)], vec![Some(fc_mask), None]);
+        let x: Vec<f32> = (0..5 * 64).map(|i| (i as f32 * 0.17).sin()).collect();
+        let y = vec![0u32, 1, 2, 0, 1];
+        for _ in 0..5 {
+            net.train_step(&x, &y, 5, 0.05);
+        }
+        assert_eq!(off_block_mass(&cm.unpermute(&net.convs[1].w), &cm.layout), 0.0);
+        assert_eq!(off_block_mass(&fm.unpermute(&net.fcs[0].w), &fm.layout), 0.0);
+        assert!(net.effective_param_count() < net.param_count());
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(13);
+        let spec = tiny_spec();
+        let a = ConvNet::new(spec.clone(), &mut rng);
+        let mut b = ConvNet::new(spec, &mut rng);
+        let tensors = a.named_tensors();
+        assert_eq!(tensors.len(), 2 * 2 + 2 * 2);
+        b.load_tensors(&tensors).unwrap();
+        for (ca, cb) in a.convs.iter().zip(&b.convs) {
+            assert_eq!(ca.w, cb.w);
+            assert_eq!(ca.b, cb.b);
+        }
+        for (la, lb) in a.fcs.iter().zip(&b.fcs) {
+            assert_eq!(la.w, lb.w);
+            assert_eq!(la.b, lb.b);
+        }
+        // bad shape rejected
+        let mut bad = a.named_tensors();
+        bad[0] = NamedTensor::f32("conv0.w", vec![1, 1, 1, 1], vec![0.0]);
+        assert!(b.load_tensors(&bad).is_err());
+    }
+}

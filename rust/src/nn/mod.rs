@@ -1,8 +1,10 @@
 //! Native neural-network engine: layers, MLP/conv models, checkpointing.
 pub mod checkpoint;
 pub mod conv;
+pub mod convnet;
 pub mod layer;
 pub mod mlp;
 
+pub use convnet::{ConvNet, ConvNetSpec, ConvStageSpec};
 pub use layer::{accuracy, softmax, softmax_xent, topk_accuracy, FcVariant, Linear, Relu};
 pub use mlp::Mlp;

@@ -28,7 +28,9 @@
 //! §Quantization for the derivation).
 
 pub mod calibrate;
+pub mod qconv;
 pub mod qmodel;
 
 pub use calibrate::{calibrate, calibrate_chunked, Calibration};
+pub use qconv::{calibrate_conv, ConvCalibration, QuantizedConvNet};
 pub use qmodel::QuantizedMlp;

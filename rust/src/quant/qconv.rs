@@ -1,0 +1,482 @@
+//! Int8 compressed-conv inference — the quantized twin of
+//! [`crate::compress::conv_model::PackedConvNet`].
+//!
+//! Conv stages lower through the same im2col pipeline, with the GEMM run by
+//! the i8×i8→i32 kernel ([`QuantizedBlockDiagMatrix`]) and a fused
+//! dequantize+bias+ReLU epilogue; the FC head is a [`QuantizedMlp`]. Each
+//! stage quantizes its im2col patches with one calibrated symmetric scale —
+//! legitimate because im2col only *copies* activations (and inserts zeros),
+//! so the patch max-abs equals the activation max-abs the calibrator saw.
+//!
+//! ## Error accounting
+//!
+//! [`QuantizedConvNet::forward_with_bound`] extends the per-element
+//! worst-case bound of `QuantizedMlp` through the conv pipeline:
+//! im2col routes the incoming bound alongside the values (padded taps carry
+//! bound 0), the FC-stage formula applies per patch row, the NCHW transpose
+//! permutes the bound, and max-pool propagates it as the window max
+//! (`|max aᵢ − max bᵢ| ≤ maxᵢ|aᵢ − bᵢ|`). ReLU is 1-Lipschitz as before.
+//! The golden-fixture test asserts the int8 logits never leave this envelope
+//! of the stored f32 goldens.
+
+use crate::compress::conv_model::{ConvCompressor, ConvNetParams, PackedConvNet};
+use crate::config::EngineConfig;
+use crate::linalg::blockdiag_mm::TileShape;
+use crate::linalg::blockdiag_mm_i8::{quantize_slice_into, QuantizedBlockDiagMatrix};
+use crate::linalg::gemm::gemm_a_bt;
+use crate::linalg::im2col::{gather_cols, im2col, maxpool_nchw, rows_to_nchw, ConvShape};
+use crate::linalg::pool::{self, ThreadPool};
+use crate::quant::calibrate::{calibrate, Calibration};
+use crate::quant::qmodel::QuantizedMlp;
+use std::sync::Arc;
+
+/// Per-stage activation scales for a conv model: one per conv stage input,
+/// plus the FC head's [`Calibration`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvCalibration {
+    pub conv_scales: Vec<f32>,
+    pub fc: Calibration,
+}
+
+impl ConvCalibration {
+    /// Fallback for inputs known to live in `[-1, 1]`.
+    pub fn unit_range(nconvs: usize, nfcs: usize) -> Self {
+        Self {
+            conv_scales: vec![crate::linalg::blockdiag_mm_i8::symmetric_scale(1.0); nconvs],
+            fc: Calibration::unit_range(nfcs),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.conv_scales.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+            return Err("conv activation scales must be finite and positive".into());
+        }
+        self.fc.validate()
+    }
+}
+
+/// One chunk of calibration: run the masked-dense f32 conv forward (im2col +
+/// dense filter-matrix GEMM in logical order — max-abs is permutation- and
+/// lowering-invariant) recording each conv stage's input max-abs, then hand
+/// the head input to the FC calibrator.
+fn calibrate_conv_chunk(
+    comp: &ConvCompressor,
+    params: &ConvNetParams,
+    x: &[f32],
+    batch: usize,
+) -> ConvCalibration {
+    use crate::linalg::blockdiag_mm_i8::symmetric_scale;
+    let shapes = comp.plan.conv_shapes();
+    let mut act = x.to_vec();
+    let mut conv_scales = Vec::with_capacity(shapes.len());
+    let mut patches = Vec::new();
+    let mut nchw = Vec::new();
+    for (i, s) in shapes.iter().enumerate() {
+        let max_abs = act.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        conv_scales.push(symmetric_scale(max_abs));
+        let (oh, ow) = s.out_hw();
+        let out_c = comp.plan.convs[i].out_c;
+        im2col(&act, batch, s, &mut patches);
+        let nrows = batch * oh * ow;
+        let mut y = vec![0.0f32; nrows * out_c];
+        for r in 0..nrows {
+            y[r * out_c..(r + 1) * out_c].copy_from_slice(&params.conv_b[i]);
+        }
+        gemm_a_bt(&patches, &params.conv_w[i], &mut y, nrows, s.patch_dim(), out_c);
+        y.iter_mut().for_each(|v| *v = v.max(0.0));
+        rows_to_nchw(&y, batch, out_c, oh, ow, None, &mut nchw);
+        let cp = &comp.plan.convs[i];
+        if cp.pool > 0 {
+            maxpool_nchw(&nchw, batch, out_c, oh, ow, cp.pool, cp.pool, &mut act);
+        } else {
+            std::mem::swap(&mut act, &mut nchw);
+        }
+    }
+    let fc = calibrate(&comp.fc, &params.fc_w, &params.fc_b, &act, batch);
+    ConvCalibration { conv_scales, fc }
+}
+
+/// Calibrate a conv model over `samples` inputs in chunks of at most `chunk`
+/// (max-abs statistics merge as elementwise max, so the result equals one
+/// giant-batch run — the [`crate::quant::calibrate_chunked`] policy).
+pub fn calibrate_conv(
+    comp: &ConvCompressor,
+    params: &ConvNetParams,
+    x: &[f32],
+    samples: usize,
+    chunk: usize,
+) -> ConvCalibration {
+    assert!(samples > 0 && chunk > 0);
+    let in_dim = comp.plan.net_spec().in_dim();
+    assert_eq!(x.len(), samples * in_dim, "calibration input shape");
+    let mut merged: Option<ConvCalibration> = None;
+    let mut done = 0usize;
+    while done < samples {
+        let n = chunk.min(samples - done);
+        let part = calibrate_conv_chunk(comp, params, &x[done * in_dim..(done + n) * in_dim], n);
+        merged = Some(match merged {
+            None => part,
+            Some(mut acc) => {
+                for (a, b) in acc.conv_scales.iter_mut().zip(&part.conv_scales) {
+                    *a = a.max(*b);
+                }
+                for (a, b) in acc.fc.act_scales.iter_mut().zip(&part.fc.act_scales) {
+                    *a = a.max(*b);
+                }
+                acc.fc.samples += part.fc.samples;
+                acc
+            }
+        });
+        done += n;
+    }
+    merged.expect("samples > 0")
+}
+
+/// One quantized conv inference stage.
+struct QConvStage {
+    qbd: QuantizedBlockDiagMatrix,
+    col_gather: Option<Vec<u32>>,
+    chan_src: Option<Vec<u32>>,
+    bias: Vec<f32>,
+    act_scale: f32,
+    shape: ConvShape,
+    pool_k: usize,
+    pool_stride: usize,
+}
+
+/// Which persistent pool the quantized conv model executes on.
+enum PoolChoice {
+    None,
+    Global,
+    Owned(Arc<ThreadPool>),
+}
+
+/// A compiled int8 compressed conv model.
+pub struct QuantizedConvNet {
+    stages: Vec<QConvStage>,
+    head: QuantizedMlp,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Integer multiply-accumulates per sample.
+    pub macs_per_sample: usize,
+    pool: PoolChoice,
+    tile: TileShape,
+}
+
+impl QuantizedConvNet {
+    /// Quantize a trained conv model against a [`ConvCalibration`]. The conv
+    /// stage structure (gathers, bias permutation, geometry) comes from the
+    /// f32 [`PackedConvNet`] stage builder, so the two engines can never
+    /// disagree about the pipeline — without paying for an f32 FC head this
+    /// constructor would immediately discard.
+    pub fn quantize(
+        comp: &ConvCompressor,
+        params: &ConvNetParams,
+        calib: &ConvCalibration,
+    ) -> Result<Self, String> {
+        calib.validate()?;
+        if calib.conv_scales.len() != comp.plan.convs.len() {
+            return Err(format!(
+                "calibration has {} conv scales for {} conv stages",
+                calib.conv_scales.len(),
+                comp.plan.convs.len()
+            ));
+        }
+        let (f32_stages, _) = PackedConvNet::build_stages(comp, params);
+        let mut stages = Vec::new();
+        let mut macs = 0usize;
+        for (st, &act_scale) in f32_stages.iter().zip(&calib.conv_scales) {
+            let qbd = QuantizedBlockDiagMatrix::from_f32(&st.bd);
+            macs += qbd.nnz() * st.shape.patches_per_sample();
+            stages.push(QConvStage {
+                qbd,
+                col_gather: st.col_gather.clone(),
+                chan_src: st.chan_src.clone(),
+                bias: st.bias.clone(),
+                act_scale,
+                shape: st.shape,
+                pool_k: st.pool_k,
+                pool_stride: st.pool_stride,
+            });
+        }
+        let head = QuantizedMlp::quantize(&comp.fc, &params.fc_w, &params.fc_b, &calib.fc)?;
+        macs += head.macs_per_sample;
+        Ok(Self {
+            stages,
+            in_dim: comp.plan.net_spec().in_dim(),
+            out_dim: head.out_dim,
+            macs_per_sample: macs,
+            head,
+            pool: PoolChoice::None,
+            tile: TileShape::DEFAULT,
+        })
+    }
+
+    /// Execute on a dedicated persistent pool of `nthreads` lanes (shared
+    /// with the head; `<= 1` reverts to single-threaded).
+    pub fn with_threads(self, nthreads: usize) -> Self {
+        if nthreads > 1 {
+            self.with_pool(Arc::new(ThreadPool::new(nthreads)))
+        } else {
+            let mut s = self;
+            s.pool = PoolChoice::None;
+            s
+        }
+    }
+
+    /// Execute on a caller-provided (shareable) persistent pool.
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.head = self.head.with_pool(pool.clone());
+        self.pool = PoolChoice::Owned(pool);
+        self
+    }
+
+    /// Execute on the process-global persistent pool.
+    pub fn with_global_pool(mut self) -> Self {
+        self.head = self.head.with_global_pool();
+        self.pool = PoolChoice::Global;
+        self
+    }
+
+    /// Apply an [`EngineConfig`]: one pool shared by conv stages and head,
+    /// plus the register-tile shape (same policy and structure as
+    /// `PackedConvNet::with_engine_config`).
+    pub fn with_engine_config(mut self, cfg: &EngineConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        self.tile = cfg.tile();
+        self.head = self.head.with_tile(cfg.tile());
+        Ok(match cfg.pool_threads {
+            0 => self.with_global_pool(),
+            n => self.with_threads(n),
+        })
+    }
+
+    fn pool(&self) -> Option<&ThreadPool> {
+        match &self.pool {
+            PoolChoice::None => None,
+            PoolChoice::Global => Some(pool::global()),
+            PoolChoice::Owned(p) => Some(p.as_ref()),
+        }
+    }
+
+    /// Run the conv stages over flattened NCHW input, returning the head
+    /// input activations (shared by [`Self::forward`] and the bound walk).
+    fn conv_stages_forward(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        let pool = self.pool();
+        let mut act = x.to_vec();
+        let mut patches = Vec::new();
+        let mut gathered = Vec::new();
+        let mut qbuf: Vec<i8> = Vec::new();
+        let mut rows_out = Vec::new();
+        let mut nchw = Vec::new();
+        for st in &self.stages {
+            let s = &st.shape;
+            let (oh, ow) = s.out_hw();
+            let out_c = st.qbd.layout.rows;
+            let pdim = s.patch_dim();
+            im2col(&act, batch, s, &mut patches);
+            let nrows = batch * oh * ow;
+            let gemm_in: &[f32] = match &st.col_gather {
+                Some(g) => {
+                    gather_cols(&patches, nrows, pdim, g, &mut gathered);
+                    &gathered
+                }
+                None => &patches,
+            };
+            quantize_slice_into(gemm_in, st.act_scale, &mut qbuf);
+            rows_out.resize(nrows * out_c, 0.0);
+            st.qbd.forward_fused(&qbuf, &mut rows_out, nrows, st.act_scale, &st.bias, true, pool, self.tile);
+            rows_to_nchw(&rows_out, batch, out_c, oh, ow, st.chan_src.as_deref(), &mut nchw);
+            if st.pool_k > 0 {
+                maxpool_nchw(&nchw, batch, out_c, oh, ow, st.pool_k, st.pool_stride, &mut act);
+            } else {
+                std::mem::swap(&mut act, &mut nchw);
+            }
+        }
+        act
+    }
+
+    /// Forward a batch of flattened NCHW inputs `[batch × in_dim]`, returns
+    /// `[batch × out_dim]` logits in logical class order.
+    pub fn forward(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        assert_eq!(x.len(), batch * self.in_dim);
+        let act = self.conv_stages_forward(x, batch);
+        self.head.forward(&act, batch)
+    }
+
+    /// [`Self::forward`] plus the analytic per-element worst-case bound on
+    /// `|y_int8 − y_f32|` (module docs). Scalar-path; not a serving hot path.
+    pub fn forward_with_bound(&self, x: &[f32], batch: usize) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(x.len(), batch * self.in_dim);
+        let pool = self.pool();
+        let mut act = x.to_vec();
+        let mut err = vec![0.0f32; x.len()];
+        let mut patches = Vec::new();
+        let mut err_patches = Vec::new();
+        let mut gathered = Vec::new();
+        let mut err_gathered = Vec::new();
+        let mut qbuf: Vec<i8> = Vec::new();
+        let mut rows_out = Vec::new();
+        let mut err_rows = Vec::new();
+        let mut nchw = Vec::new();
+        let mut err_nchw = Vec::new();
+        for st in &self.stages {
+            let s = &st.shape;
+            let (oh, ow) = s.out_hw();
+            let out_c = st.qbd.layout.rows;
+            let pdim = s.patch_dim();
+            im2col(&act, batch, s, &mut patches);
+            im2col(&err, batch, s, &mut err_patches); // padded taps carry bound 0
+            let nrows = batch * oh * ow;
+            let (pvals, perrs): (&[f32], &[f32]) = match &st.col_gather {
+                Some(g) => {
+                    gather_cols(&patches, nrows, pdim, g, &mut gathered);
+                    gather_cols(&err_patches, nrows, pdim, g, &mut err_gathered);
+                    (&gathered, &err_gathered)
+                }
+                None => (&patches, &err_patches),
+            };
+            quantize_slice_into(pvals, st.act_scale, &mut qbuf);
+            // per-row bound, mirroring QuantizedMlp::forward_with_bound
+            err_rows.clear();
+            err_rows.resize(nrows * out_c, 0.0);
+            for r in 0..nrows {
+                for b in 0..st.qbd.nblocks() {
+                    let rs = st.qbd.layout.row_spans[b];
+                    let cs = st.qbd.layout.col_spans[b];
+                    let qb = st.qbd.block(b);
+                    for br in 0..rs.len {
+                        let s_w = st.qbd.row_scales[rs.start + br] as f64;
+                        let mut bound = 0.0f64;
+                        for p in 0..cs.len {
+                            let c = r * pdim + cs.start + p;
+                            let aw = (qb[br * cs.len + p] as i32).abs() as f64 * s_w;
+                            let qe = (pvals[c] - qbuf[c] as f32 * st.act_scale).abs() as f64;
+                            let e = perrs[c] as f64;
+                            bound += aw * (qe + e) + 0.5 * s_w * (pvals[c].abs() as f64 + e);
+                        }
+                        err_rows[r * out_c + rs.start + br] = bound as f32;
+                    }
+                }
+            }
+            rows_out.resize(nrows * out_c, 0.0);
+            st.qbd.forward_fused(&qbuf, &mut rows_out, nrows, st.act_scale, &st.bias, true, pool, self.tile);
+            rows_to_nchw(&rows_out, batch, out_c, oh, ow, st.chan_src.as_deref(), &mut nchw);
+            rows_to_nchw(&err_rows, batch, out_c, oh, ow, st.chan_src.as_deref(), &mut err_nchw);
+            if st.pool_k > 0 {
+                maxpool_nchw(&nchw, batch, out_c, oh, ow, st.pool_k, st.pool_stride, &mut act);
+                // |max aᵢ − max bᵢ| ≤ maxᵢ|aᵢ − bᵢ|: pool the bound as a max
+                maxpool_nchw(&err_nchw, batch, out_c, oh, ow, st.pool_k, st.pool_stride, &mut err);
+            } else {
+                std::mem::swap(&mut act, &mut nchw);
+                std::mem::swap(&mut err, &mut err_nchw);
+            }
+        }
+        self.head.forward_with_bound_from(&act, &err, batch)
+    }
+
+    /// Total storage bytes across conv stages + head.
+    pub fn storage_bytes(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|st| {
+                st.qbd.storage_bytes()
+                    + st.bias.len() * 4
+                    + 4
+                    + st.col_gather.as_ref().map_or(0, |g| g.len() * 4)
+                    + st.chan_src.as_ref().map_or(0, |g| g.len() * 4)
+            })
+            .sum::<usize>()
+            + self.head.storage_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::plan::{ConvLayerPlan, ConvModelPlan, LayerPlan, SparsityPlan};
+    use crate::mask::prng::Xoshiro256pp;
+
+    fn tiny() -> (ConvCompressor, ConvNetParams) {
+        let plan = ConvModelPlan::new(
+            (1, 8, 8),
+            vec![ConvLayerPlan::dense("c1", 4, 3, 2), ConvLayerPlan::masked("c2", 6, 3, 2, 3)],
+            SparsityPlan::new(vec![
+                LayerPlan::masked("fc1", 16, 24, 4),
+                LayerPlan::dense("fc2", 3, 16),
+            ])
+            .unwrap(),
+        )
+        .unwrap();
+        let comp = ConvCompressor::new(plan, 41);
+        let params = comp.random_masked_params(41);
+        (comp, params)
+    }
+
+    #[test]
+    fn quantized_conv_tracks_f32_within_bound() {
+        let (comp, params) = tiny();
+        let packed = PackedConvNet::build(&comp, &params);
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * 64).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let calib = calibrate_conv(&comp, &params, &x, batch, 2);
+        let q = QuantizedConvNet::quantize(&comp, &params, &calib).unwrap();
+        assert_eq!((q.in_dim, q.out_dim), (64, 3));
+        let y_f = packed.forward(&x, batch);
+        let (y_q, bound) = q.forward_with_bound(&x, batch);
+        assert_eq!(y_q, q.forward(&x, batch), "bound walk must not change values");
+        for i in 0..y_q.len() {
+            let err = (y_q[i] - y_f[i]).abs();
+            assert!(err <= bound[i] * 1.001 + 1e-4, "elem {i}: err {err} > bound {}", bound[i]);
+            assert!(bound[i].is_finite());
+        }
+    }
+
+    #[test]
+    fn exact_across_tiles_and_threads() {
+        let (comp, params) = tiny();
+        let calib = ConvCalibration::unit_range(2, 2);
+        let mut rng = Xoshiro256pp::seed_from_u64(43);
+        let x: Vec<f32> = (0..2 * 64).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let base = QuantizedConvNet::quantize(&comp, &params, &calib).unwrap();
+        let want = base.forward(&x, 2);
+        for cfg in [
+            EngineConfig { pool_threads: 1, tile_batch: 1, tile_rows: 1 },
+            EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 4 },
+            EngineConfig { pool_threads: 8, tile_batch: 8, tile_rows: 8 },
+        ] {
+            let q = QuantizedConvNet::quantize(&comp, &params, &calib)
+                .unwrap()
+                .with_engine_config(&cfg)
+                .unwrap();
+            assert_eq!(want, q.forward(&x, 2), "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn chunked_calibration_merges_exactly() {
+        let (comp, params) = tiny();
+        let mut rng = Xoshiro256pp::seed_from_u64(44);
+        let samples = 9;
+        let x: Vec<f32> = (0..samples * 64).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let whole = calibrate_conv(&comp, &params, &x, samples, samples);
+        for chunk in [1, 2, 4, 64] {
+            let parts = calibrate_conv(&comp, &params, &x, samples, chunk);
+            assert_eq!(parts.conv_scales, whole.conv_scales, "chunk={chunk}");
+            assert_eq!(parts.fc.act_scales, whole.fc.act_scales, "chunk={chunk}");
+        }
+        assert!(ConvCalibration { conv_scales: vec![0.0], fc: Calibration::unit_range(1) }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn quantized_storage_well_below_f32_packed() {
+        let (comp, params) = tiny();
+        let packed = PackedConvNet::build(&comp, &params);
+        let q = QuantizedConvNet::quantize(&comp, &params, &ConvCalibration::unit_range(2, 2)).unwrap();
+        assert_eq!(q.macs_per_sample, packed.macs_per_sample);
+        assert!(q.storage_bytes() * 2 < packed.storage_bytes(), "{} vs {}", q.storage_bytes(), packed.storage_bytes());
+    }
+}

@@ -209,6 +209,16 @@ impl QuantizedMlp {
         self
     }
 
+    /// Override the register-tile shape. Panics on an unsupported shape —
+    /// use [`Self::with_engine_config`] for the fallible path. (Mirror of
+    /// `PackedMlp::with_tile`, used by the conv engine to propagate its tile
+    /// without disturbing pool wiring.)
+    pub fn with_tile(mut self, tile: TileShape) -> Self {
+        tile.validate().expect("valid tile shape");
+        self.tile = tile;
+        self
+    }
+
     /// Apply an [`EngineConfig`]: pool sizing (0 = global pool) + tile shape.
     pub fn with_engine_config(mut self, cfg: &EngineConfig) -> Result<Self, String> {
         cfg.validate()?;
@@ -270,10 +280,19 @@ impl QuantizedMlp {
     /// `(logits, bound)`, both `[batch × out_dim]`. Used by the accuracy-bound
     /// property tests; scalar-path, not a serving hot path.
     pub fn forward_with_bound(&self, x: &[f32], batch: usize) -> (Vec<f32>, Vec<f32>) {
+        self.forward_with_bound_from(x, &vec![0.0; x.len()], batch)
+    }
+
+    /// [`Self::forward_with_bound`] with a non-zero *incoming* per-element
+    /// error bound `err0` on `x` — how an upstream quantized stage (e.g. the
+    /// conv stages of `quant::qconv::QuantizedConvNet`) chains its
+    /// accumulated bound through this FC head.
+    pub fn forward_with_bound_from(&self, x: &[f32], err0: &[f32], batch: usize) -> (Vec<f32>, Vec<f32>) {
         assert_eq!(x.len(), batch * self.in_dim);
+        assert_eq!(err0.len(), x.len(), "incoming bound shape");
         let pool = self.pool();
         let mut act = x.to_vec();
-        let mut err = vec![0.0f32; x.len()];
+        let mut err = err0.to_vec();
         let mut dim = self.in_dim;
         let mut scratch: Vec<f32> = Vec::new();
         let mut err_scratch: Vec<f32> = Vec::new();

@@ -400,6 +400,66 @@ impl InferBackend for QuantBackend {
     }
 }
 
+/// Backend over the im2col-lowered packed conv engine
+/// (`compress::conv_model::PackedConvNet`) — the compressed-conv serving
+/// variant (e.g. `deep-mnist-mpd`). Inputs are flattened NCHW images; the
+/// engine carries its persistent pool handle like [`PackedBackend`].
+pub struct ConvBackend {
+    pub model: crate::compress::conv_model::PackedConvNet,
+}
+
+impl ConvBackend {
+    /// Wrap a conv model and point it at a shared persistent pool.
+    pub fn with_pool(
+        model: crate::compress::conv_model::PackedConvNet,
+        pool: std::sync::Arc<crate::linalg::ThreadPool>,
+    ) -> Self {
+        Self { model: model.with_pool(pool) }
+    }
+}
+
+impl InferBackend for ConvBackend {
+    fn feature_dim(&self) -> usize {
+        self.model.in_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.model.out_dim
+    }
+
+    fn max_batch(&self) -> usize {
+        256
+    }
+
+    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(self.model.forward(x, batch))
+    }
+}
+
+/// Backend over the int8 compressed conv engine (`quant::QuantizedConvNet`)
+/// — the `deep-mnist-mpd-int8` serving variant.
+pub struct QuantConvBackend {
+    pub model: crate::quant::QuantizedConvNet,
+}
+
+impl InferBackend for QuantConvBackend {
+    fn feature_dim(&self) -> usize {
+        self.model.in_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.model.out_dim
+    }
+
+    fn max_batch(&self) -> usize {
+        256
+    }
+
+    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(self.model.forward(x, batch))
+    }
+}
+
 /// Backend over an AOT PJRT inference executable: pads each dynamic batch to
 /// the artifact's static batch (the usual static-shape serving trick).
 pub struct AotBackend {

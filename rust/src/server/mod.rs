@@ -18,8 +18,8 @@ pub mod metrics;
 pub mod router;
 
 pub use batcher::{
-    spawn, AotBackend, BatcherConfig, BatcherHandle, ConstBackend, CsrBackend, InferBackend,
-    MlpBackend, PackedBackend, QuantBackend, ServeError,
+    spawn, AotBackend, BatcherConfig, BatcherHandle, ConstBackend, ConvBackend, CsrBackend,
+    InferBackend, MlpBackend, PackedBackend, QuantBackend, QuantConvBackend, ServeError,
 };
 pub use http::{FrontendStats, HttpConfig, HttpServer};
 pub use loadgen::{Arrival, HttpClient, LoadgenConfig, LoadgenReport};

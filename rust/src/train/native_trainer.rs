@@ -8,9 +8,11 @@ use crate::mask::prng::Xoshiro256pp;
 use crate::nn::mlp::Mlp;
 use crate::train::aot_trainer::{LossPoint, TrainConfig};
 
-/// Train an MLP with SGD over shuffled mini-batches.
-pub fn fit_native(
-    mlp: &mut Mlp,
+/// Shared SGD driver over shuffled mini-batches: both the MLP and conv-net
+/// trainers are thin wrappers over this, so schedule policy (decay, logging)
+/// lives in one place.
+fn fit_with(
+    mut train_step: impl FnMut(&[f32], &[u32], usize, f32) -> f32,
     data: &Dataset,
     batch: usize,
     cfg: &TrainConfig,
@@ -24,7 +26,7 @@ pub fn fit_native(
             if step > 0 && step % cfg.lr_decay_every == 0 {
                 lr *= cfg.lr_decay;
             }
-            let loss = mlp.train_step(&x, &y, y.len(), lr);
+            let loss = train_step(&x, &y, y.len(), lr);
             if step % cfg.log_every == 0 || step + 1 == cfg.steps {
                 history.push(LossPoint { step, loss, lr });
             }
@@ -35,6 +37,28 @@ pub fn fit_native(
         }
     }
     history
+}
+
+/// Train an MLP with SGD over shuffled mini-batches.
+pub fn fit_native(
+    mlp: &mut Mlp,
+    data: &Dataset,
+    batch: usize,
+    cfg: &TrainConfig,
+) -> Vec<LossPoint> {
+    fit_with(|x, y, b, lr| mlp.train_step(x, y, b, lr), data, batch, cfg)
+}
+
+/// Train a conv net ([`crate::nn::convnet::ConvNet`]) with SGD over shuffled
+/// mini-batches — in-training masking included (conv filter-matrix masks and
+/// FC masks re-apply after every update inside `train_step`).
+pub fn fit_native_conv(
+    net: &mut crate::nn::convnet::ConvNet,
+    data: &Dataset,
+    batch: usize,
+    cfg: &TrainConfig,
+) -> Vec<LossPoint> {
+    fit_with(|x, y, b, lr| net.train_step(x, y, b, lr), data, batch, cfg)
 }
 
 /// Shared accuracy loop: run `forward` over sequential chunks and weight the
@@ -74,6 +98,31 @@ pub fn evaluate_packed(packed: &crate::compress::packed_model::PackedMlp, data: 
 /// counterpart of [`evaluate_packed`], used by `mpdc quantize` and the
 /// quant-speedup bench to report the accuracy delta of quantization.
 pub fn evaluate_quantized(q: &crate::quant::QuantizedMlp, data: &Dataset, chunk: usize) -> f64 {
+    evaluate_with(|x, batch| q.forward(x, batch), q.out_dim, data, chunk)
+}
+
+/// Evaluate a trainable conv net over a dataset.
+pub fn evaluate_conv(net: &mut crate::nn::convnet::ConvNet, data: &Dataset, chunk: usize) -> f64 {
+    let classes = net.out_dim();
+    evaluate_with(|x, batch| net.forward(x, batch), classes, data, chunk)
+}
+
+/// Evaluate the im2col-lowered packed conv engine over a dataset — the
+/// compressed-conv counterpart of [`evaluate_packed`].
+pub fn evaluate_packed_conv(
+    packed: &crate::compress::conv_model::PackedConvNet,
+    data: &Dataset,
+    chunk: usize,
+) -> f64 {
+    evaluate_with(|x, batch| packed.forward(x, batch), packed.out_dim, data, chunk)
+}
+
+/// Evaluate the int8 conv engine over a dataset.
+pub fn evaluate_quantized_conv(
+    q: &crate::quant::QuantizedConvNet,
+    data: &Dataset,
+    chunk: usize,
+) -> f64 {
     evaluate_with(|x, batch| q.forward(x, batch), q.out_dim, data, chunk)
 }
 
@@ -152,6 +201,63 @@ mod tests {
             (acc_packed - acc_q).abs() < 0.05,
             "packed {acc_packed} vs int8 {acc_q}"
         );
+    }
+
+    #[test]
+    fn conv_train_compress_quantize_pipeline() {
+        // End-to-end on a small conv model: native in-training-masked SGD →
+        // pack (im2col → block-diagonal engine) → quantize; the packed
+        // engine serves the trained accuracy, int8 tracks it.
+        use crate::compress::conv_model::{ConvNetParams, PackedConvNet};
+        use crate::compress::plan::{ConvLayerPlan, ConvModelPlan, LayerPlan, SparsityPlan};
+        use crate::compress::ConvCompressor;
+        use crate::quant::{calibrate_conv, QuantizedConvNet};
+
+        let spec = SynthSpec {
+            classes: 4,
+            channels: 1,
+            height: 8,
+            width: 8,
+            label_noise: 0.01,
+            pixel_noise: 0.3,
+            max_shift: 1,
+        };
+        let mut train = Dataset::from_synth(&SynthImages::generate(spec, 300, 23, 0));
+        let (mean, std) = train.normalize();
+        let mut test = Dataset::from_synth(&SynthImages::generate(spec, 100, 23, 1));
+        test.normalize_with(mean, std);
+
+        let plan = ConvModelPlan::new(
+            (1, 8, 8),
+            vec![ConvLayerPlan::dense("c1", 4, 3, 2), ConvLayerPlan::masked("c2", 8, 3, 2, 4)],
+            SparsityPlan::new(vec![
+                LayerPlan::masked("fc1", 24, 32, 4),
+                LayerPlan::dense("fc2", 4, 24),
+            ])
+            .unwrap(),
+        )
+        .unwrap();
+        let comp = ConvCompressor::new(plan, 23);
+        let mut rng = Xoshiro256pp::seed_from_u64(23);
+        let mut net = comp.build_net(&mut rng);
+        let cfg = TrainConfig { steps: 60, lr: 0.05, log_every: 30, ..Default::default() };
+        let hist = fit_native_conv(&mut net, &train, 32, &cfg);
+        assert!(hist.last().unwrap().loss < hist.first().unwrap().loss);
+        let acc_dense = evaluate_conv(&mut net, &test, 50);
+
+        let params = ConvNetParams::from_net(&net);
+        let packed = comp.build_engine(&params, &crate::config::EngineConfig::default()).unwrap();
+        let acc_packed = evaluate_packed_conv(&packed, &test, 50);
+        assert!(
+            (acc_dense - acc_packed).abs() < 0.03,
+            "dense {acc_dense} vs packed {acc_packed}"
+        );
+
+        let nsamples = 64.min(train.len());
+        let calib = calibrate_conv(&comp, &params, &train.x[..nsamples * 64], nsamples, 32);
+        let q = QuantizedConvNet::quantize(&comp, &params, &calib).unwrap();
+        let acc_q = evaluate_quantized_conv(&q, &test, 50);
+        assert!((acc_packed - acc_q).abs() < 0.08, "packed {acc_packed} vs int8 {acc_q}");
     }
 
     #[test]

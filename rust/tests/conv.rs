@@ -1,0 +1,308 @@
+//! Compressed-conv test suite (ISSUE 4 acceptance): the im2col lowering onto
+//! the packed block-diagonal engine is pinned down three ways —
+//!
+//! 1. **Bit-exactness property**: for random conv geometries (kernel /
+//!    stride / pad sweeps) the lowered packed forward equals the direct
+//!    `Conv2d::forward` training loop *bit for bit*, across 1/2/8 pool
+//!    threads and multiple register-tile shapes. Holds for dense convs and
+//!    for non-permuted (identity-permutation) masks, where block columns
+//!    stay in logical ascending order — the ordering-contract cases.
+//! 2. **Tolerance + stability property**: with random *permuted* masks the
+//!    packed forward tracks the masked-dense trainer to float tolerance
+//!    (blocks sum taps in permuted order) while staying bit-identical
+//!    across thread counts and tile shapes (canonical accumulation).
+//! 3. **Golden fixture**: a committed seeded Deep-MNIST-shaped checkpoint
+//!    (`tests/fixtures/deep_mnist_tiny.mpdc`, regenerable with the sibling
+//!    python script) whose compress→pack→forward logits must match stored
+//!    goldens to exact bits (f32) and stay within the analytic error bound
+//!    (i8) — the guard against silent kernel regressions.
+
+use mpdc::compress::conv_model::{ConvCompressor, ConvNetParams, PackedConvNet};
+use mpdc::compress::plan::{ConvLayerPlan, ConvModelPlan, LayerPlan, SparsityPlan};
+use mpdc::config::EngineConfig;
+use mpdc::linalg::pool::ThreadPool;
+use mpdc::linalg::TileShape;
+use mpdc::mask::prng::Xoshiro256pp;
+use mpdc::nn::checkpoint;
+use mpdc::quant::{Calibration, ConvCalibration, QuantizedConvNet};
+use mpdc::util::prop::{for_all, gen_range};
+use std::sync::Arc;
+
+/// Random single-conv-stage plan: kernel/stride/pad sweep with a small dense
+/// head. `conv_blocks(out_c, patch_dim)` picks the conv mask (None = dense).
+fn random_plan(
+    rng: &mut Xoshiro256pp,
+    conv_blocks: impl Fn(&mut Xoshiro256pp, usize, usize) -> Option<usize>,
+) -> ConvModelPlan {
+    let in_c = gen_range(rng, 1, 3);
+    let h = gen_range(rng, 4, 9);
+    let w = gen_range(rng, 4, 9);
+    let k = gen_range(rng, 1, 3);
+    let pad = gen_range(rng, 0, k - 1);
+    let stride = gen_range(rng, 1, 2);
+    let out_c = gen_range(rng, 1, 6);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let pool = if oh >= 2 && ow >= 2 && gen_range(rng, 0, 1) == 0 { 2 } else { 0 };
+    let (fh, fw) = if pool == 2 { ((oh - 2) / 2 + 1, (ow - 2) / 2 + 1) } else { (oh, ow) };
+    let flat = out_c * fh * fw;
+    let hidden = gen_range(rng, 3, 8);
+    let classes = gen_range(rng, 2, 4);
+    let nblocks = conv_blocks(rng, out_c, in_c * k * k);
+    ConvModelPlan::new(
+        (in_c, h, w),
+        vec![ConvLayerPlan { name: "c1".into(), out_c, k, stride, pad, pool, nblocks }],
+        SparsityPlan::new(vec![
+            LayerPlan::dense("fc1", hidden, flat),
+            LayerPlan::dense("fc2", classes, hidden),
+        ])
+        .unwrap(),
+    )
+    .unwrap()
+}
+
+/// Build a trained-shaped net + params for a plan (biases randomized so the
+/// `acc + bias` ordering is actually exercised).
+fn net_and_params(
+    comp: &ConvCompressor,
+    rng: &mut Xoshiro256pp,
+) -> (mpdc::nn::convnet::ConvNet, ConvNetParams) {
+    let mut net = comp.build_net(rng);
+    for c in net.convs.iter_mut() {
+        for b in c.b.iter_mut() {
+            *b = rng.next_f32() - 0.5;
+        }
+    }
+    for l in net.fcs.iter_mut() {
+        for b in l.b.iter_mut() {
+            *b = rng.next_f32() - 0.5;
+        }
+    }
+    let params = ConvNetParams::from_net(&net);
+    (net, params)
+}
+
+/// The satellite property: im2col-lowered packed conv forward is
+/// bit-identical to the direct `Conv2d::forward` loop for random shapes
+/// (stride/pad/k sweeps), across 1/2/8 pool threads and ≥ 2 tile shapes.
+/// Runs the two ordering-contract mask regimes: dense filters and
+/// non-permuted block masks (logical column order either way).
+#[test]
+fn prop_lowered_conv_bit_identical_to_direct_loop() {
+    let pools = [
+        Arc::new(ThreadPool::new(1)),
+        Arc::new(ThreadPool::new(2)),
+        Arc::new(ThreadPool::new(8)),
+    ];
+    let tiles = [
+        TileShape::DEFAULT,
+        TileShape { batch: 2, rows: 2 },
+        TileShape { batch: 1, rows: 8 },
+    ];
+    for_all("lowered conv == direct loop, bit-exact", |rng, case| {
+        let non_permuted = case % 2 == 1;
+        let plan = random_plan(rng, |rng, out_c, pdim| {
+            if non_permuted {
+                Some(gen_range(rng, 1, out_c.min(pdim)))
+            } else {
+                None
+            }
+        });
+        let comp = if non_permuted {
+            ConvCompressor::new_non_permuted(plan)
+        } else {
+            ConvCompressor::new(plan, case as u64)
+        };
+        let (mut net, params) = net_and_params(&comp, rng);
+        let batch = gen_range(rng, 1, 5);
+        let x: Vec<f32> = (0..batch * comp.plan.net_spec().in_dim())
+            .map(|_| rng.next_f32() * 2.0 - 1.0)
+            .collect();
+        // the oracle: direct Conv2d::forward loops + dense head
+        let want = net.forward(&x, batch);
+        for pool in &pools {
+            for tile in tiles {
+                let packed = PackedConvNet::build(&comp, &params)
+                    .with_pool(pool.clone())
+                    .with_tile(tile);
+                let got = packed.forward(&x, batch);
+                assert_eq!(
+                    got, want,
+                    "packed != direct (non_permuted={non_permuted}, lanes={}, tile {tile:?})",
+                    pool.lanes()
+                );
+            }
+        }
+    });
+}
+
+/// Random *permuted* masks: packed tracks the masked-dense trainer to float
+/// tolerance and is bit-stable across thread counts and tile shapes.
+#[test]
+fn prop_permuted_masked_conv_close_and_engine_stable() {
+    let pools = [Arc::new(ThreadPool::new(2)), Arc::new(ThreadPool::new(8))];
+    for_all("permuted masked conv: close + stable", |rng, case| {
+        let plan = random_plan(rng, |rng, out_c, pdim| {
+            Some(gen_range(rng, 1, out_c.min(pdim)))
+        });
+        let comp = ConvCompressor::new(plan, case as u64 ^ 0x7E57);
+        let (mut net, params) = net_and_params(&comp, rng);
+        let batch = gen_range(rng, 1, 4);
+        let x: Vec<f32> = (0..batch * comp.plan.net_spec().in_dim())
+            .map(|_| rng.next_f32() * 2.0 - 1.0)
+            .collect();
+        let want = net.forward(&x, batch);
+        let base = PackedConvNet::build(&comp, &params);
+        let got = base.forward(&x, batch);
+        for (a, b) in got.iter().zip(&want) {
+            let scale = 1.0 + a.abs().max(b.abs());
+            assert!((a - b).abs() <= 1e-3 * scale, "packed {a} vs dense {b}");
+        }
+        for pool in &pools {
+            let p = PackedConvNet::build(&comp, &params)
+                .with_pool(pool.clone())
+                .with_tile(TileShape { batch: 2, rows: 4 });
+            assert_eq!(p.forward(&x, batch), got, "lanes={}", pool.lanes());
+        }
+    });
+}
+
+// ---------------------------------------------------------------- goldens
+
+fn fixture_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/deep_mnist_tiny.mpdc")
+}
+
+/// The fixture's plan — must stay in sync with gen_deep_mnist_tiny.py.
+fn fixture_compressor() -> ConvCompressor {
+    let plan = ConvModelPlan::new(
+        (1, 8, 8),
+        vec![
+            ConvLayerPlan::masked("conv0", 4, 3, 2, 2),
+            ConvLayerPlan::masked("conv1", 6, 3, 2, 3),
+        ],
+        SparsityPlan::new(vec![
+            LayerPlan::masked("fc0", 16, 24, 4),
+            LayerPlan::masked("fc1", 10, 16, 2),
+        ])
+        .unwrap(),
+    )
+    .unwrap();
+    ConvCompressor::new_non_permuted(plan)
+}
+
+fn fixture_tensor(tensors: &[checkpoint::NamedTensor], name: &str) -> Vec<f32> {
+    tensors
+        .iter()
+        .find(|t| t.name == name)
+        .unwrap_or_else(|| panic!("fixture missing {name}"))
+        .as_f32()
+        .expect("f32 tensor")
+        .to_vec()
+}
+
+/// Golden f32: compress→pack→forward logits must match the stored goldens to
+/// exact bits, across thread counts and tile shapes.
+#[test]
+fn golden_fixture_f32_logits_bit_exact() {
+    let comp = fixture_compressor();
+    let tensors = checkpoint::load(&fixture_path()).expect("fixture loads");
+    let params = comp.params_from_tensors(&tensors).expect("fixture params");
+    let x = fixture_tensor(&tensors, "golden.x");
+    let want = fixture_tensor(&tensors, "golden.y");
+    assert_eq!(x.len(), 2 * 64);
+    assert_eq!(want.len(), 2 * 10);
+    for cfg in [
+        EngineConfig { pool_threads: 1, tile_batch: 4, tile_rows: 8 },
+        EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 2 },
+        EngineConfig { pool_threads: 8, tile_batch: 1, tile_rows: 1 },
+        EngineConfig { pool_threads: 8, tile_batch: 8, tile_rows: 8 },
+    ] {
+        let packed = comp.build_engine(&params, &cfg).unwrap();
+        let got = packed.forward(&x, 2);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "logit {i}: engine {g} != golden {w} under {cfg:?} — kernel numerics changed"
+            );
+        }
+    }
+}
+
+/// Golden i8: the quantized engine's logits stay within its own analytic
+/// worst-case bound of the stored f32 goldens, and are exact across engine
+/// configs (integer accumulation is order-free).
+#[test]
+fn golden_fixture_i8_within_analytic_bound() {
+    let comp = fixture_compressor();
+    let tensors = checkpoint::load(&fixture_path()).expect("fixture loads");
+    let params = comp.params_from_tensors(&tensors).expect("fixture params");
+    let x = fixture_tensor(&tensors, "golden.x");
+    let want = fixture_tensor(&tensors, "golden.y");
+    let calib = ConvCalibration {
+        conv_scales: fixture_tensor(&tensors, "golden.conv_scales"),
+        fc: Calibration { act_scales: fixture_tensor(&tensors, "golden.fc_scales"), samples: 0 },
+    };
+    calib.validate().unwrap();
+    let q = QuantizedConvNet::quantize(&comp, &params, &calib).unwrap();
+    let (y_q, bound) = q.forward_with_bound(&x, 2);
+    assert_eq!(y_q, q.forward(&x, 2), "bound walk must not change values");
+    for i in 0..want.len() {
+        let err = (y_q[i] - want[i]).abs();
+        assert!(
+            err <= bound[i] * 1.001 + 1e-4,
+            "logit {i}: |i8 − golden f32| = {err} exceeds analytic bound {}",
+            bound[i]
+        );
+    }
+    // order-free integer kernel: exact across thread counts / tiles
+    for cfg in [
+        EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 4 },
+        EngineConfig { pool_threads: 8, tile_batch: 8, tile_rows: 8 },
+    ] {
+        let q2 = QuantizedConvNet::quantize(&comp, &params, &calib)
+            .unwrap()
+            .with_engine_config(&cfg)
+            .unwrap();
+        assert_eq!(q2.forward(&x, 2), y_q, "{cfg:?}");
+    }
+}
+
+/// Checkpoint round-trip at the integration level: params → v1 file → params
+/// → identical packed engine output (conv tensors ride the existing format).
+#[test]
+fn conv_checkpoint_roundtrip_preserves_serving_output() {
+    let comp = fixture_compressor();
+    let params = comp.random_masked_params(99);
+    let dir = std::env::temp_dir().join(format!("mpdc_convit_{}", std::process::id()));
+    let path = dir.join("tiny.mpdc");
+    checkpoint::save(&path, &comp.tensors(&params)).unwrap();
+    let params2 = comp.params_from_tensors(&checkpoint::load(&path).unwrap()).unwrap();
+    let a = PackedConvNet::build(&comp, &params);
+    let b = PackedConvNet::build(&comp, &params2);
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let x: Vec<f32> = (0..3 * 64).map(|_| rng.next_f32() - 0.5).collect();
+    assert_eq!(a.forward(&x, 3), b.forward(&x, 3));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Trainer-side and compressor-side checkpoint codecs must stay in sync: a
+/// checkpoint written by `ConvNet::named_tensors` loads through
+/// `ConvCompressor::params_from_tensors` (and vice versa) with identical
+/// values — the guard against the two tensor naming schemes drifting.
+#[test]
+fn trainer_and_compressor_checkpoints_interoperate() {
+    let comp = fixture_compressor();
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let mut net = comp.build_net(&mut rng);
+    // trainer → compressor
+    let params = comp.params_from_tensors(&net.named_tensors()).expect("trainer tensors load");
+    assert_eq!(params.conv_w[0], net.convs[0].w);
+    assert_eq!(params.fc_w[1], net.fcs[1].w);
+    // compressor → trainer
+    net.load_tensors(&comp.tensors(&params)).expect("compressor tensors load");
+    assert_eq!(net.convs[1].w, params.conv_w[1]);
+    assert_eq!(net.fcs[0].b, params.fc_b[0]);
+}

@@ -1,0 +1,253 @@
+#!/usr/bin/env python3
+"""Generate tests/fixtures/deep_mnist_tiny.mpdc — the golden fixture for the
+compressed-conv engine (tests/conv.rs::golden_fixture_*).
+
+The fixture is a checkpoint-v1 (all-f32) MPDC file holding:
+  * seeded masked weights for a tiny Deep-MNIST-shaped model
+      input (1,8,8)
+      conv0: 4ch 3x3 same pad1, mask k=2 (non-permuted), pool 2
+      conv1: 6ch 3x3 same pad1, mask k=3 (non-permuted), pool 2
+      fc0:   24->16, mask k=4 (non-permuted)
+      fc1:   16->10, mask k=2 (non-permuted)
+  * a probe batch  golden.x [2, 64]
+  * golden logits  golden.y [2, 10] — computed HERE with exact float32
+    semantics mirroring the packed engine's canonical accumulation order
+    (block columns ascending, products before bias, fused ReLU, first-max
+    pooling), so the rust test can assert bit equality
+  * per-stage activation scales golden.conv_scales / golden.fc_scales for
+    the int8 engine's analytic-bound check
+
+Masks are NON-permuted (identity P_row/P_col) so the engine emits no gathers
+and the fixture needs no PRNG replication: block spans follow directly from
+the deterministic `partition` rule (remainder spread over leading blocks).
+Weight values come from a fixed LCG, so the fixture is reproducible:
+
+    python3 gen_deep_mnist_tiny.py   # rewrites deep_mnist_tiny.mpdc in place
+"""
+import struct
+import zlib
+from pathlib import Path
+
+import numpy as np
+
+F32 = np.float32
+
+
+# ---------------------------------------------------------------- seeded LCG
+class Lcg:
+    def __init__(self, seed):
+        self.state = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64(self):
+        self.state = (self.state * 6364136223846793005 + 1442695040888963407) & 0xFFFFFFFFFFFFFFFF
+        return self.state
+
+    def next_f32(self, lo=-0.5, hi=0.5):
+        # 24 high-quality bits -> [0,1) -> [lo,hi); exactly representable
+        u = (self.next_u64() >> 40) / float(1 << 24)
+        return F32(lo + (hi - lo) * u)
+
+
+# ------------------------------------------------------- block-span helpers
+def partition(n, k):
+    base, rem = n // k, n % k
+    spans, start = [], 0
+    for b in range(k):
+        ln = base + (1 if b < rem else 0)
+        spans.append((start, ln))
+        start += ln
+    return spans
+
+
+def mask_matrix(rows, cols, k):
+    """Dense 0/1 non-permuted block-diagonal mask + per-row column spans."""
+    rs, cs = partition(rows, k), partition(cols, k)
+    m = np.zeros((rows, cols), dtype=F32)
+    row_span = [None] * rows
+    for (r0, rl), (c0, cl) in zip(rs, cs):
+        m[r0 : r0 + rl, c0 : c0 + cl] = 1.0
+        for r in range(r0, r0 + rl):
+            row_span[r] = (c0, cl)
+    return m, row_span
+
+
+# ----------------------------------------------------- exact-f32 forward ops
+def block_fc(x_rows, w, row_span, bias, relu):
+    """Packed block-diagonal FC over [N, in] rows, exact f32, canonical order:
+    per output row, products over the block's columns ascending, then + bias,
+    then fused ReLU (rust: `if v < 0.0 { 0.0 }`)."""
+    n = x_rows.shape[0]
+    out = np.zeros((n, w.shape[0]), dtype=F32)
+    for i in range(n):
+        xr = x_rows[i]
+        for r in range(w.shape[0]):
+            c0, cl = row_span[r]
+            acc = F32(0.0)
+            for c in range(c0, c0 + cl):
+                acc = F32(acc + F32(xr[c] * w[r, c]))
+            v = F32(acc + bias[r])
+            if relu and v < F32(0.0):
+                v = F32(0.0)
+            out[i, r] = v
+    return out
+
+
+def im2col(x, in_c, h, w, k, pad):
+    """[N, in_c*h*w] -> [N*oh*ow, in_c*k*k], stride 1, zero-padded taps."""
+    n = x.shape[0]
+    oh, ow = h, w  # same-padded stride-1
+    pdim = in_c * k * k
+    out = np.zeros((n * oh * ow, pdim), dtype=F32)
+    xi = x.reshape(n, in_c, h, w)
+    for b in range(n):
+        for oy in range(oh):
+            for ox in range(ow):
+                row = out[(b * oh + oy) * ow + ox]
+                for ic in range(in_c):
+                    for ky in range(k):
+                        iy = oy + ky - pad
+                        if iy < 0 or iy >= h:
+                            continue
+                        for kx in range(k):
+                            ix = ox + kx - pad
+                            if ix < 0 or ix >= w:
+                                continue
+                            row[(ic * k + ky) * k + kx] = xi[b, ic, iy, ix]
+    return out, oh, ow
+
+
+def conv_stage(x, in_c, h, w, out_c, k, pad, wmat, row_span, bias, pool):
+    n = x.shape[0]
+    patches, oh, ow = im2col(x, in_c, h, w, k, pad)
+    rows = block_fc(patches, wmat, row_span, bias, relu=True)  # [N*oh*ow, out_c]
+    nchw = np.zeros((n, out_c, oh, ow), dtype=F32)
+    for b in range(n):
+        for oc in range(out_c):
+            for oy in range(oh):
+                for ox in range(ow):
+                    nchw[b, oc, oy, ox] = rows[(b * oh + oy) * ow + ox, oc]
+    # first-max 2x2 pooling (exact)
+    ph, pw = (oh - pool) // pool + 1, (ow - pool) // pool + 1
+    pooled = np.zeros((n, out_c, ph, pw), dtype=F32)
+    for b in range(n):
+        for oc in range(out_c):
+            for py in range(ph):
+                for px in range(pw):
+                    best = F32(-np.inf)
+                    for ky in range(pool):
+                        for kx in range(pool):
+                            v = nchw[b, oc, py * pool + ky, px * pool + kx]
+                            if v > best:
+                                best = v
+                    pooled[b, oc, py, px] = best
+    return pooled.reshape(n, out_c * ph * pw), out_c, ph, pw
+
+
+def max_abs(a):
+    return float(np.max(np.abs(a.astype(np.float64)))) if a.size else 0.0
+
+
+# ------------------------------------------------------------- build model
+rng = Lcg(0xDEE9_317)
+
+def gen_matrix(rows, cols, scale=1.0):
+    m = np.zeros((rows, cols), dtype=F32)
+    for r in range(rows):
+        for c in range(cols):
+            m[r, c] = F32(rng.next_f32() * F32(scale))
+    return m
+
+def gen_vec(n, scale=0.2):
+    return np.array([F32(rng.next_f32() * F32(scale)) for _ in range(n)], dtype=F32)
+
+# conv0: filter 4 x (1*3*3) = 4x9, mask k=2
+m0, span0 = mask_matrix(4, 9, 2)
+w0 = gen_matrix(4, 9) * m0
+b0 = gen_vec(4)
+# conv1: filter 6 x (4*3*3) = 6x36, mask k=3
+m1, span1 = mask_matrix(6, 36, 3)
+w1 = gen_matrix(6, 36) * m1
+b1 = gen_vec(6)
+# fc0: 16x24, mask k=4
+mf0, spanf0 = mask_matrix(16, 24, 4)
+wf0 = gen_matrix(16, 24) * mf0
+bf0 = gen_vec(16)
+# fc1: 10x16, mask k=2
+mf1, spanf1 = mask_matrix(10, 16, 2)
+wf1 = gen_matrix(10, 16) * mf1
+bf1 = gen_vec(10)
+
+# probe batch
+x = np.array([[F32(rng.next_f32(-1.0, 1.0)) for _ in range(64)] for _ in range(2)], dtype=F32)
+
+# ------------------------------------------------------------ exact forward
+conv_scales = []
+act = x
+conv_scales.append(max_abs(act) / 127.0)
+act, _, _, _ = conv_stage(act, 1, 8, 8, 4, 3, 1, w0, span0, b0, 2)  # -> [2, 4*4*4]
+conv_scales.append(max_abs(act) / 127.0)
+act, _, _, _ = conv_stage(act, 4, 4, 4, 6, 3, 1, w1, span1, b1, 2)  # -> [2, 6*2*2]
+fc_scales = [max_abs(act) / 127.0]
+h1 = block_fc(act, wf0, spanf0, bf0, relu=True)
+fc_scales.append(max_abs(h1) / 127.0)
+y = block_fc(h1, wf1, spanf1, bf1, relu=False)
+
+# float64 cross-check of the generator itself (catches structural bugs; the
+# exact-f32 path above is what the fixture stores)
+def f64_forward(xx):
+    a = xx.astype(np.float64)
+    for (in_c, h, w, out_c, k, pad, wm, bb, pool) in [
+        (1, 8, 8, 4, 3, 1, w0, b0, 2),
+        (4, 4, 4, 6, 3, 1, w1, b1, 2),
+    ]:
+        n = a.shape[0]
+        ai = a.reshape(n, in_c, h, w)
+        padded = np.pad(ai, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+        pat = np.zeros((n, h, w, in_c * k * k))
+        for oy in range(h):
+            for ox in range(w):
+                pat[:, oy, ox, :] = padded[:, :, oy : oy + k, ox : ox + k].reshape(n, -1)
+        conv = np.maximum(pat.reshape(n * h * w, -1) @ wm.astype(np.float64).T + bb.astype(np.float64), 0.0)
+        nchw = conv.reshape(n, h, w, out_c).transpose(0, 3, 1, 2)
+        ph = h // pool
+        pooled = nchw.reshape(n, out_c, ph, pool, ph, pool).max(axis=(3, 5))
+        a = pooled.reshape(n, -1)
+    a = np.maximum(a @ wf0.astype(np.float64).T + bf0.astype(np.float64), 0.0)
+    return a @ wf1.astype(np.float64).T + bf1.astype(np.float64)
+
+ref = f64_forward(x)
+assert np.max(np.abs(ref - y.astype(np.float64))) < 1e-4, "f32/f64 generator mismatch"
+
+# --------------------------------------------------------------- serialize
+def tensor(name, shape, data):
+    buf = struct.pack("<I", len(name)) + name.encode()
+    buf += struct.pack("<I", len(shape))
+    for d in shape:
+        buf += struct.pack("<Q", d)
+    flat = np.ascontiguousarray(data, dtype="<f4").reshape(-1)
+    assert flat.size == int(np.prod(shape)), name
+    return buf + flat.tobytes()
+
+tensors = [
+    ("conv0.w", [4, 1, 3, 3], w0),
+    ("conv0.b", [4], b0),
+    ("conv1.w", [6, 4, 3, 3], w1),
+    ("conv1.b", [6], b1),
+    ("fc0.w", [16, 24], wf0),
+    ("fc0.b", [16], bf0),
+    ("fc1.w", [10, 16], wf1),
+    ("fc1.b", [10], bf1),
+    ("golden.x", [2, 64], x),
+    ("golden.y", [2, 10], y),
+    ("golden.conv_scales", [2], np.array(conv_scales, dtype=F32)),
+    ("golden.fc_scales", [2], np.array(fc_scales, dtype=F32)),
+]
+
+body = b"MPDC" + struct.pack("<II", 1, len(tensors))
+for name, shape, data in tensors:
+    body += tensor(name, shape, data)
+body += struct.pack("<I", zlib.crc32(body) & 0xFFFFFFFF)
+
+out = Path(__file__).parent / "deep_mnist_tiny.mpdc"
+out.write_bytes(body)
+print(f"wrote {out} ({len(body)} bytes); logits sample: {y[0][:4]}")

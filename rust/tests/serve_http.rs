@@ -5,12 +5,13 @@
 //! network beyond loopback.
 
 use mpdc::compress::compressor::MpdCompressor;
+use mpdc::compress::conv_model::{ConvCompressor, PackedConvNet};
 use mpdc::compress::packed_model::PackedMlp;
-use mpdc::compress::plan::{LayerPlan, SparsityPlan};
+use mpdc::compress::plan::{ConvLayerPlan, ConvModelPlan, LayerPlan, SparsityPlan};
 use mpdc::mask::prng::Xoshiro256pp;
 use mpdc::server::http::{HttpConfig, HttpServer};
 use mpdc::server::loadgen::{self, Arrival, HttpClient, LoadgenConfig};
-use mpdc::server::{spawn, BatcherConfig, InferBackend, PackedBackend, Router};
+use mpdc::server::{spawn, BatcherConfig, ConvBackend, InferBackend, PackedBackend, Router};
 use mpdc::util::json::Json;
 use std::sync::Arc;
 use std::time::Duration;
@@ -238,6 +239,84 @@ fn discovery_health_and_error_statuses() {
     let huge = Json::obj(vec![("input", Json::Arr(vec![Json::num(0.123456789); 200]))]);
     let (status, _) = client.post_json("/infer/mpd", &huge).unwrap();
     assert_eq!(status, 413);
+    drop(client);
+    server.shutdown();
+}
+
+/// Tiny Deep-MNIST-shaped conv model (masked conv2 + masked head) served
+/// twice from identical inputs: one engine behind the batcher, one as the
+/// in-process oracle.
+fn conv_pair() -> (PackedConvNet, PackedConvNet) {
+    let plan = ConvModelPlan::new(
+        (1, 8, 8),
+        vec![ConvLayerPlan::dense("c1", 4, 3, 2), ConvLayerPlan::masked("c2", 6, 3, 2, 3)],
+        SparsityPlan::new(vec![LayerPlan::masked("fc1", 16, 24, 4), LayerPlan::dense("fc2", 10, 16)])
+            .unwrap(),
+    )
+    .unwrap();
+    let comp = ConvCompressor::new(plan, 13);
+    let params = comp.random_masked_params(17);
+    (PackedConvNet::build(&comp, &params), PackedConvNet::build(&comp, &params))
+}
+
+/// The compressed-conv serving round-trip (ISSUE 4): POST an image-shaped
+/// input to `/infer/deep-mnist-mpd` and get back exactly what the packed
+/// conv engine computes directly — then the 404 case for a deployment where
+/// conv registration is disabled (`[conv] enabled=false` ⇒ the variant is
+/// simply never registered).
+#[test]
+fn conv_variant_roundtrip_and_404_when_disabled() {
+    let (serve_model, oracle) = conv_pair();
+    let mut router = Router::new();
+    let (h, _worker) = spawn(ConvBackend { model: serve_model }, BatcherConfig::default());
+    router.register("deep-mnist-mpd", h);
+    let server = HttpServer::start(Arc::new(router), ephemeral(4)).unwrap();
+    let mut client = HttpClient::new(server.addr());
+    let mut rng = Xoshiro256pp::seed_from_u64(31);
+    for _ in 0..10 {
+        // image-shaped input: flattened 1×8×8 NCHW
+        let x: Vec<f32> = (0..64).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let body = Json::obj(vec![(
+            "input",
+            Json::Arr(x.iter().map(|&v| Json::num(v as f64)).collect()),
+        )]);
+        let (status, resp) = client.post_json("/infer/deep-mnist-mpd", &body).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        let parsed = Json::parse(&resp).unwrap();
+        let got: Vec<f32> = parsed
+            .get("output")
+            .and_then(|j| j.as_arr())
+            .expect("output array")
+            .iter()
+            .map(|j| j.as_f64().expect("number") as f32)
+            .collect();
+        let want = oracle.forward(&x, 1);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "output[{i}]: HTTP {g} != direct {w}");
+        }
+    }
+    // wrong feature count for the conv variant → 400, not a crash
+    let short = Json::obj(vec![("input", Json::Arr(vec![Json::num(0.0); 8]))]);
+    let (status, _) = client.post_json("/infer/deep-mnist-mpd", &short).unwrap();
+    assert_eq!(status, 400);
+    drop(client);
+    server.shutdown();
+
+    // conv registration disabled: the same deployment without the conv
+    // variant — the route must 404 while the FC variant keeps serving.
+    let (mlp_model, _) = packed_pair();
+    let mut router = Router::new();
+    let (h, _worker) = spawn(PackedBackend { model: mlp_model }, BatcherConfig::default());
+    router.register("mpd", h);
+    let server = HttpServer::start(Arc::new(router), ephemeral(2)).unwrap();
+    let mut client = HttpClient::new(server.addr());
+    let img = Json::obj(vec![("input", Json::Arr(vec![Json::num(0.0); 64]))]);
+    let (status, resp) = client.post_json("/infer/deep-mnist-mpd", &img).unwrap();
+    assert_eq!(status, 404, "disabled conv variant must 404: {resp}");
+    let ok = Json::obj(vec![("input", Json::Arr(vec![Json::num(0.0); 24]))]);
+    let (status, _) = client.post_json("/infer/mpd", &ok).unwrap();
+    assert_eq!(status, 200);
     drop(client);
     server.shutdown();
 }
