@@ -207,13 +207,14 @@ impl mpdc::server::batcher::InferBackend for PackedLenetBackend {
         self.static_batch
     }
 
-    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
         let xt = ts::gather_rows(x, batch, 784, &self.gather);
         let mut xp = vec![0.0f32; self.static_batch * self.ib1_total];
         xp[..batch * self.ib1_total].copy_from_slice(&xt);
         let mut args = vec![Value::F32(xp, vec![self.static_batch, self.ib1_total])];
         args.extend(self.params.iter().cloned());
-        let out = self.exec.run(&args)?;
-        Ok(out[0].as_f32()[..batch * 10].to_vec())
+        let result = self.exec.run(&args)?;
+        out.copy_from_slice(&result[0].as_f32()[..batch * 10]);
+        Ok(())
     }
 }

@@ -17,7 +17,8 @@ use mpdc::data::synth::{SynthImages, SynthSpec};
 use mpdc::linalg::csr::Csr;
 use mpdc::mask::prng::Xoshiro256pp;
 use mpdc::nn::mlp::Mlp;
-use mpdc::server::batcher::{spawn, BatcherConfig, CsrBackend, MlpBackend, PackedBackend};
+use mpdc::exec::{lower_dense_mlp, Executor};
+use mpdc::server::batcher::{spawn, BatcherConfig, CsrBackend, PlanBackend};
 use mpdc::server::http::{HttpConfig, HttpServer};
 use mpdc::server::loadgen::{self, Arrival, LoadgenConfig};
 use mpdc::server::router::Router;
@@ -59,11 +60,11 @@ fn main() -> anyhow::Result<()> {
 
     let bc = BatcherConfig { max_batch: 16, max_wait: std::time::Duration::from_micros(300), queue_depth: 256 };
     let mut router = Router::new();
-    let (h, _j1) = spawn(MlpBackend::new(mlp), bc);
+    let (h, _j1) = spawn(PlanBackend::new(Executor::new(lower_dense_mlp(&mlp))).with_max_batch(bc.max_batch).warmed(), bc);
     router.register("dense", h);
     let (h, _j2) = spawn(CsrBackend { layers: csr_layers, feature_dim: 784, out_dim: 10 }, bc);
     router.register("csr", h);
-    let (h, _j3) = spawn(PackedBackend { model: packed }, bc);
+    let (h, _j3) = spawn(PlanBackend::new(packed.into_executor()).with_max_batch(bc.max_batch).warmed(), bc);
     router.register("mpd", h);
 
     // sanity: all variants agree on a sample

@@ -25,8 +25,9 @@ impl InferBackend for Noop {
     fn max_batch(&self) -> usize {
         64
     }
-    fn infer(&mut self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
-        Ok(x.to_vec())
+    fn infer_into(&mut self, x: &[f32], _batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
+        out.copy_from_slice(x);
+        Ok(())
     }
 }
 

@@ -1,0 +1,152 @@
+//! Plan-executor smoke bench (ISSUE 5): per-call latency of the four model
+//! variants under the unified interpreter, comparing the allocating legacy
+//! wrapper path (`forward`: fresh arena + fresh output per call) against
+//! the serving hot path (`run_into` with a reused [`ScratchArena`]).
+//! Emits the machine-readable `results/BENCH_5.json` that CI uploads as a
+//! workflow artifact, so the perf trajectory is tracked per commit.
+//!
+//! ```bash
+//! cargo bench --bench plan_exec                 # quick (CI) preset
+//! MPDC_PLAN_ITERS=5000 cargo bench --bench plan_exec
+//! ```
+
+use mpdc::compress::compressor::MpdCompressor;
+use mpdc::compress::conv_model::PackedConvNet;
+use mpdc::compress::packed_model::PackedMlp;
+use mpdc::compress::plan::SparsityPlan;
+use mpdc::compress::{ConvCompressor, ConvModelPlan};
+use mpdc::exec::{lower_dense_mlp, Executor, ScratchArena};
+use mpdc::mask::prng::Xoshiro256pp;
+use mpdc::nn::mlp::Mlp;
+use mpdc::quant::{Calibration, ConvCalibration, QuantizedConvNet, QuantizedMlp};
+use mpdc::util::benchkit::{black_box, Table};
+use mpdc::util::json::Json;
+use std::time::Instant;
+
+fn percentile_us(samples: &mut [f64], q: f64) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((samples.len() - 1) as f64 * q).round() as usize;
+    samples[idx]
+}
+
+struct Cell {
+    variant: String,
+    mode: String,
+    p50_us: f64,
+    p99_us: f64,
+    rps: f64,
+}
+
+/// Measure one (variant, mode) cell: `iters` single-sample calls.
+fn measure(variant: &str, mode: &str, iters: usize, mut call: impl FnMut()) -> Cell {
+    // brief warmup
+    for _ in 0..(iters / 10).max(5) {
+        call();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let t = Instant::now();
+        call();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    let total = t0.elapsed().as_secs_f64();
+    Cell {
+        variant: variant.to_string(),
+        mode: mode.to_string(),
+        p50_us: percentile_us(&mut samples, 0.5),
+        p99_us: percentile_us(&mut samples, 0.99),
+        rps: iters as f64 / total,
+    }
+}
+
+fn main() {
+    let iters: usize = std::env::var("MPDC_PLAN_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+
+    // Shared trained-shaped weights (random — serving cost depends only on
+    // structure): LeNet-300-100 for the FC variants, Deep-MNIST-lite conv.
+    let comp = MpdCompressor::new(SparsityPlan::lenet300(10), 42);
+    let (weights, biases) = comp.random_masked_weights(7);
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let mut mlp = Mlp::new(&[784, 300, 100, 10], &mut rng).with_masks(comp.masks.clone());
+    for (l, (w, b)) in mlp.layers.iter_mut().zip(weights.iter().zip(&biases)) {
+        l.w = w.clone();
+        l.b = b.clone();
+    }
+    let conv_comp = ConvCompressor::new(ConvModelPlan::deep_mnist_lite(8), 42);
+    let conv_params = conv_comp.random_masked_params(7);
+
+    let execs: Vec<(&'static str, Executor)> = vec![
+        ("dense-f32", Executor::new(lower_dense_mlp(&mlp))),
+        ("mpd-f32", PackedMlp::build(&comp, &weights, &biases).into_executor()),
+        (
+            "mpd-int8",
+            QuantizedMlp::quantize(&comp, &weights, &biases, &Calibration::unit_range(3))
+                .expect("quantize")
+                .into_executor(),
+        ),
+        ("conv", PackedConvNet::build(&conv_comp, &conv_params).into_executor()),
+        (
+            "conv-int8",
+            QuantizedConvNet::quantize(&conv_comp, &conv_params, &ConvCalibration::unit_range(2, 2))
+                .expect("conv quantize")
+                .into_executor(),
+        ),
+    ];
+
+    println!("plan_exec bench: {iters} single-sample calls per cell\n");
+    let mut table = Table::new(&["variant", "mode", "p50 µs", "p99 µs", "req/s"]);
+    let mut cells: Vec<Cell> = Vec::new();
+    for (variant, exec) in &execs {
+        let x: Vec<f32> = (0..exec.in_dim()).map(|i| (i as f32 * 0.013).sin()).collect();
+
+        // legacy path: the allocating wrapper (fresh arena + output per call)
+        cells.push(measure(variant, "legacy", iters, || {
+            black_box(exec.run(&x, 1));
+        }));
+
+        // plan path: run_into with a per-worker arena (serving hot path)
+        let mut scratch = ScratchArena::for_plan(exec.plan(), 1);
+        let mut out = vec![0.0f32; exec.out_dim()];
+        cells.push(measure(variant, "plan", iters, || {
+            exec.run_into(&x, 1, &mut out, &mut scratch);
+            black_box(&out);
+        }));
+    }
+    for c in &cells {
+        table.row(&[
+            c.variant.clone(),
+            c.mode.clone(),
+            format!("{:.1}", c.p50_us),
+            format!("{:.1}", c.p99_us),
+            format!("{:.0}", c.rps),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // Machine-readable artifact: results/BENCH_5.json
+    let rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("variant", Json::str(c.variant.clone())),
+                ("mode", Json::str(c.mode.clone())),
+                ("p50_us", Json::num(c.p50_us)),
+                ("p99_us", Json::num(c.p99_us)),
+                ("rps", Json::num(c.rps)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("plan_exec")),
+        ("batch", Json::num(1.0)),
+        ("iters", Json::num(iters as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    std::fs::create_dir_all("results").expect("mkdir results");
+    std::fs::write("results/BENCH_5.json", doc.to_string()).expect("write BENCH_5.json");
+    println!("wrote results/BENCH_5.json");
+}

@@ -17,7 +17,8 @@ use mpdc::mask::prng::Xoshiro256pp;
 use mpdc::nn::mlp::Mlp;
 use mpdc::server::http::{HttpConfig, HttpServer};
 use mpdc::server::loadgen::{self, Arrival, LoadgenConfig};
-use mpdc::server::{spawn, BatcherConfig, MlpBackend, PackedBackend, Router};
+use mpdc::exec::{lower_dense_mlp, Executor};
+use mpdc::server::{spawn, BatcherConfig, PlanBackend, Router};
 use mpdc::util::benchkit::Table;
 use mpdc::util::json::{append_jsonl, Json};
 use std::sync::Arc;
@@ -45,9 +46,9 @@ fn main() {
 
     let bc = BatcherConfig { max_batch: 32, max_wait: Duration::from_micros(300), queue_depth: 1024 };
     let mut router = Router::new();
-    let (h, _w1) = spawn(MlpBackend::new(mlp), bc);
+    let (h, _w1) = spawn(PlanBackend::new(Executor::new(lower_dense_mlp(&mlp))).with_max_batch(bc.max_batch).warmed(), bc);
     router.register("dense", h);
-    let (h, _w2) = spawn(PackedBackend { model: packed }, bc);
+    let (h, _w2) = spawn(PlanBackend::new(packed.into_executor()).with_max_batch(bc.max_batch).warmed(), bc);
     router.register("mpd", h);
 
     let cfg = HttpConfig { addr: "127.0.0.1:0".into(), accept_threads: 8, ..HttpConfig::default() };

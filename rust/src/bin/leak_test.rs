@@ -1,10 +1,18 @@
 //! Resource-leak regression checks.
 //!
+//! **Zero-allocation section (always runs, first):** the process installs a
+//! counting global allocator; after warming a [`ScratchArena`],
+//! `Executor::run_into` must perform **zero** heap allocations per call on
+//! the single-threaded path — for the f32-packed, int8, and conv plans.
+//! This is the executor's hot-path contract, asserted exactly (an
+//! allocation count, not an RSS heuristic).
+//!
 //! **Pool/batcher section (always runs):** the persistent-pool engine must
 //! not leak OS threads or memory across pool lifecycles or across thousands
 //! of served batches. We drive many create→run→drop pool cycles and a
-//! batcher serving loop over a pooled packed model, then assert the process
-//! thread count returns to baseline and RSS growth stays bounded.
+//! batcher serving loop over a pooled packed model behind the generic
+//! `PlanBackend`, then assert the process thread count returns to baseline
+//! and RSS growth stays bounded.
 //!
 //! **PJRT section (needs artifacts + the `pjrt` feature):** the upstream
 //! `xla` crate leaked one device copy of every input argument per `execute`
@@ -18,11 +26,97 @@
 
 use mpdc::compress::compressor::MpdCompressor;
 use mpdc::compress::plan::SparsityPlan;
+use mpdc::exec::ScratchArena;
 use mpdc::linalg::pool::ThreadPool;
 use mpdc::runtime::engine::{Engine, Value};
 use mpdc::runtime::manifest::{default_artifact_dir, DType, Manifest};
-use mpdc::server::batcher::{spawn, BatcherConfig, PackedBackend};
+use mpdc::server::batcher::{spawn, BatcherConfig, PlanBackend};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Global allocator wrapper that counts every allocation (and realloc).
+/// Deallocations are free to happen; the zero-alloc assertion is about new
+/// heap acquisitions on the hot path.
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// `Executor::run_into` must allocate nothing after arena warm-up. Runs
+/// before anything spawns threads, so the allocation counter is exact.
+fn run_into_zero_alloc_check() -> anyhow::Result<()> {
+    use mpdc::compress::conv_model::PackedConvNet;
+    use mpdc::compress::{ConvCompressor, ConvModelPlan};
+    use mpdc::quant::{Calibration, QuantizedMlp};
+
+    let comp = MpdCompressor::new(SparsityPlan::lenet300(10), 7);
+    let (weights, biases) = comp.random_masked_weights(7);
+    let conv_comp = ConvCompressor::new(ConvModelPlan::deep_mnist_lite(8), 7);
+    let cparams = conv_comp.random_masked_params(7);
+    let execs = [
+        (
+            "mpd-f32",
+            mpdc::compress::PackedMlp::build(&comp, &weights, &biases).into_executor(),
+        ),
+        (
+            "mpd-int8",
+            QuantizedMlp::quantize(&comp, &weights, &biases, &Calibration::unit_range(3))
+                .map_err(anyhow::Error::msg)?
+                .into_executor(),
+        ),
+        ("conv-f32", PackedConvNet::build(&conv_comp, &cparams).into_executor()),
+    ];
+    let batch = 4;
+    for (name, exec) in execs {
+        let x: Vec<f32> = (0..batch * exec.in_dim()).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut out = vec![0.0f32; batch * exec.out_dim()];
+        let mut scratch = ScratchArena::for_plan(exec.plan(), batch);
+        // Two warm-up calls (the first may still touch lazily-sized paths).
+        exec.run_into(&x, batch, &mut out, &mut scratch);
+        exec.run_into(&x, batch, &mut out, &mut scratch);
+        // Allocate the small-batch output *before* the measured windows so
+        // both windows contain run_into calls only.
+        let mut out1 = vec![0.0f32; exec.out_dim()];
+        let before = ALLOC_COUNT.load(Ordering::Relaxed);
+        for _ in 0..100 {
+            exec.run_into(&x, batch, &mut out, &mut scratch);
+        }
+        // Smaller batches reuse the same arena without allocating either.
+        let before_small = ALLOC_COUNT.load(Ordering::Relaxed);
+        for _ in 0..10 {
+            exec.run_into(&x[..exec.in_dim()], 1, &mut out1, &mut scratch);
+        }
+        let after = ALLOC_COUNT.load(Ordering::Relaxed);
+        anyhow::ensure!(
+            before_small == before && after == before_small,
+            "{name}: run_into allocated on the hot path \
+             ({} allocs over 100 warm calls + {} over 10 small-batch calls)",
+            before_small - before,
+            after - before_small
+        );
+        println!("OK: {name} run_into performed 0 allocations across 110 warmed calls");
+    }
+    Ok(())
+}
 
 /// Resident set size in MB (linux; 0.0 elsewhere so growth checks pass
 /// trivially, mirroring `thread_count`).
@@ -79,7 +173,7 @@ fn batcher_pool_check() -> anyhow::Result<()> {
     let (weights, biases) = comp.random_masked_weights(7);
     let model = mpdc::compress::packed_model::PackedMlp::build(&comp, &weights, &biases);
     let pool = Arc::new(ThreadPool::new(4));
-    let backend = PackedBackend::with_pool(model, pool.clone());
+    let backend = PlanBackend::with_pool(model.into_executor(), pool.clone()).with_max_batch(16).warmed();
 
     let (h, join) = spawn(
         backend,
@@ -164,6 +258,8 @@ fn pjrt_check() -> anyhow::Result<()> {
 }
 
 fn main() -> anyhow::Result<()> {
+    // First, before anything spawns threads: the exact-count assertion.
+    run_into_zero_alloc_check()?;
     pool_lifecycle_check()?;
     batcher_pool_check()?;
     pjrt_check()?;

@@ -196,6 +196,25 @@ impl MpdCompressor {
         crate::quant::QuantizedMlp::quantize(self, weights, biases, calib)?.with_engine_config(cfg)
     }
 
+    /// Compile a **mixed-precision** engine: `prec[i]` picks f32 or int8 per
+    /// layer on one [`crate::exec::ExecPlan`] (the Deep-Compression-style
+    /// per-layer pruning+quantization shape). Returns the bare
+    /// [`crate::exec::Executor`] — run it directly, or serve it through
+    /// [`crate::server::PlanBackend`]. `calib` is required as soon as any
+    /// layer is [`crate::exec::Precision::I8`].
+    pub fn build_mixed_engine(
+        &self,
+        weights: &[Vec<f32>],
+        biases: &[Vec<f32>],
+        calib: Option<&crate::quant::Calibration>,
+        prec: &[crate::exec::Precision],
+        cfg: &crate::config::EngineConfig,
+    ) -> Result<crate::exec::Executor, String> {
+        cfg.validate()?;
+        let plan = crate::exec::lower_mlp(self, weights, biases, calib, prec)?;
+        crate::exec::Executor::new(plan).with_engine_config(cfg)
+    }
+
     /// The f32 packed-format checkpoint tensors of a trained model: masked
     /// layers store only the packed block values (`fc{i}.wp`, the compressed
     /// representation), dense layers the full matrix, plus `fc{i}.b` biases.

@@ -12,7 +12,8 @@
 //!          → max-pool
 //! ```
 //!
-//! and the FC head runs as a [`PackedMlp`] (gather fusion and all). Conv
+//! and the FC head runs as the fused MLP op sequence of
+//! [`crate::compress::packed_model::PackedMlp`] (gather fusion and all). Conv
 //! stages cannot fuse consecutive permutations the way FC stages do — pooling
 //! and the next im2col operate in channel/spatial space — so each stage
 //! restores logical channel order during the (already required) GEMM-rows →
@@ -24,14 +25,22 @@
 //! `Conv2d::forward` training loop (see the ordering contract in
 //! `linalg::im2col`). Masked stages agree with the masked-dense trainer to
 //! float tolerance, exactly like `PackedMlp` vs the masked-dense MLP.
+//!
+//! **Lowering.** [`PackedConvNet`] compiles the whole network — conv stages
+//! *and* FC head — into one [`crate::exec::ExecPlan`]
+//! (`im2col → gather → block_gemm → rows_to_nchw → max_pool` per stage,
+//! then the head's fused MLP ops) executed by the single interpreter
+//! [`crate::exec::Executor`]. `PackedConvStage` (crate-internal) survives
+//! as the lowering intermediate shared with the int8 twin, so the two
+//! engines can never disagree about stage structure.
 
 use crate::compress::compressor::{CompressionReport, LayerReport, MpdCompressor};
-use crate::compress::packed_model::PackedMlp;
 use crate::compress::plan::ConvModelPlan;
 use crate::config::EngineConfig;
+use crate::exec::{lower_mlp, Executor, PlanBuilder, Precision};
 use crate::linalg::blockdiag_mm::{BlockDiagMatrix, TileShape};
-use crate::linalg::im2col::{gather_cols, im2col, maxpool_nchw, rows_to_nchw, ConvShape};
-use crate::linalg::pool::{self, ThreadPool};
+use crate::linalg::im2col::ConvShape;
+use crate::linalg::pool::ThreadPool;
 use crate::mask::mask::MpdMask;
 use crate::nn::checkpoint::NamedTensor;
 use crate::nn::convnet::ConvNet;
@@ -248,24 +257,40 @@ pub(crate) struct PackedConvStage {
     pub(crate) pool_stride: usize,
 }
 
-/// Which persistent pool a packed conv model executes on.
-enum PoolChoice {
-    None,
-    Global,
-    Owned(Arc<ThreadPool>),
+/// Shared conv-stage lowering: emit each stage's op sequence onto `b`.
+/// `gemm(b, stage_idx, bd, bias)` pushes the stage's GEMM op — the f32
+/// engine pushes [`crate::exec::Op::BlockGemmF32`], the int8 twin quantizes
+/// the same block matrix first. ReLU is always fused (every conv stage is
+/// followed by an activation in this model family).
+pub(crate) fn lower_conv_stages(
+    b: &mut PlanBuilder,
+    stages: Vec<PackedConvStage>,
+    mut gemm: impl FnMut(&mut PlanBuilder, usize, BlockDiagMatrix, Vec<f32>),
+) {
+    for (i, st) in stages.into_iter().enumerate() {
+        let PackedConvStage { bd, col_gather, chan_src, bias, shape, pool_k, pool_stride } = st;
+        let (oh, ow) = shape.out_hw();
+        let out_c = bd.layout.rows;
+        b.im2col(shape);
+        if let Some(g) = col_gather {
+            b.gather(g);
+        }
+        gemm(b, i, bd, bias);
+        b.rows_to_nchw(out_c, oh, ow, chan_src);
+        if pool_k > 0 {
+            b.max_pool(out_c, oh, ow, pool_k, pool_stride);
+        }
+    }
 }
 
-/// A compiled compressed conv model: im2col-lowered packed conv stages plus
-/// a [`PackedMlp`] head.
+/// A compiled compressed conv model: one [`Executor`] over the whole
+/// lowered plan (im2col conv stages + fused MLP head).
 pub struct PackedConvNet {
-    stages: Vec<PackedConvStage>,
-    head: PackedMlp,
+    exec: Executor,
     pub in_dim: usize,
     pub out_dim: usize,
     /// Multiply-accumulates per sample across conv stages + head.
     pub macs_per_sample: usize,
-    pool: PoolChoice,
-    tile: TileShape,
 }
 
 impl PackedConvNet {
@@ -319,46 +344,40 @@ impl PackedConvNet {
 
     /// Build from a compressor and trained parameters (masked-dense layout).
     pub fn build(comp: &ConvCompressor, params: &ConvNetParams) -> Self {
-        let (stages, mut macs) = Self::build_stages(comp, params);
-        let head = PackedMlp::build(&comp.fc, &params.fc_w, &params.fc_b);
+        let (stages, _) = Self::build_stages(comp, params);
+        let nfc = comp.fc.nlayers();
+        let head = lower_mlp(&comp.fc, &params.fc_w, &params.fc_b, None, &vec![Precision::F32; nfc])
+            .expect("f32 head lowering");
         let in_dim = comp.plan.net_spec().in_dim();
-        let out_dim = head.out_dim;
-        macs += head.macs_per_sample;
-        Self {
-            stages,
-            head,
-            in_dim,
-            out_dim,
-            macs_per_sample: macs,
-            pool: PoolChoice::None,
-            tile: TileShape::DEFAULT,
-        }
+        let mut b = PlanBuilder::new(in_dim);
+        lower_conv_stages(&mut b, stages, |b, _i, bd, bias| b.block_gemm_f32(bd, bias, true));
+        b.append_plan(head);
+        Self::from_executor(Executor::new(b.finish()))
+    }
+
+    pub(crate) fn from_executor(exec: Executor) -> Self {
+        let p = exec.plan();
+        let (in_dim, out_dim, macs) = (p.in_dim, p.out_dim, p.macs_per_sample);
+        Self { exec, in_dim, out_dim, macs_per_sample: macs }
     }
 
     /// Execute on a dedicated persistent pool of `nthreads` lanes (shared
     /// between the conv stages and the head; `<= 1` reverts to
     /// single-threaded).
-    pub fn with_threads(self, nthreads: usize) -> Self {
-        if nthreads > 1 {
-            self.with_pool(Arc::new(ThreadPool::new(nthreads)))
-        } else {
-            let mut s = self;
-            s.pool = PoolChoice::None;
-            s
-        }
+    pub fn with_threads(mut self, nthreads: usize) -> Self {
+        self.exec = self.exec.with_threads(nthreads);
+        self
     }
 
     /// Execute on a caller-provided (shareable) persistent pool.
     pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
-        self.head = self.head.with_pool(pool.clone());
-        self.pool = PoolChoice::Owned(pool);
+        self.exec = self.exec.with_pool(pool);
         self
     }
 
     /// Execute on the process-global persistent pool.
     pub fn with_global_pool(mut self) -> Self {
-        self.head = self.head.with_global_pool();
-        self.pool = PoolChoice::Global;
+        self.exec = self.exec.with_global_pool();
         self
     }
 
@@ -366,85 +385,38 @@ impl PackedConvNet {
     /// unsupported shape — use [`Self::with_engine_config`] for the fallible
     /// path.
     pub fn with_tile(mut self, tile: TileShape) -> Self {
-        tile.validate().expect("valid tile shape");
-        self.tile = tile;
-        self.head = self.head.with_tile(tile);
+        self.exec = self.exec.with_tile(tile);
         self
     }
 
     /// Apply an [`EngineConfig`]: one pool shared by conv stages and head,
     /// plus the register-tile shape.
     pub fn with_engine_config(mut self, cfg: &EngineConfig) -> Result<Self, String> {
-        cfg.validate()?;
-        self.tile = cfg.tile();
-        self.head = self.head.with_tile(cfg.tile());
-        Ok(match cfg.pool_threads {
-            0 => self.with_global_pool(),
-            n => self.with_threads(n),
-        })
+        self.exec = self.exec.with_engine_config(cfg)?;
+        Ok(self)
     }
 
-    fn pool(&self) -> Option<&ThreadPool> {
-        match &self.pool {
-            PoolChoice::None => None,
-            PoolChoice::Global => Some(pool::global()),
-            PoolChoice::Owned(p) => Some(p.as_ref()),
-        }
+    /// The underlying executor (plan inspection, `run_into` serving paths).
+    pub fn executor(&self) -> &Executor {
+        &self.exec
+    }
+
+    /// Unwrap into the executor — how this model enters a
+    /// [`crate::server::PlanBackend`].
+    pub fn into_executor(self) -> Executor {
+        self.exec
     }
 
     /// Forward a batch of flattened NCHW inputs `[batch × in_dim]`, returns
     /// `[batch × out_dim]` logits in logical class order.
     pub fn forward(&self, x: &[f32], batch: usize) -> Vec<f32> {
-        assert_eq!(x.len(), batch * self.in_dim);
-        let pool = self.pool();
-        let mut act = x.to_vec();
-        let mut patches: Vec<f32> = Vec::new();
-        let mut gathered: Vec<f32> = Vec::new();
-        let mut rows_out: Vec<f32> = Vec::new();
-        let mut nchw: Vec<f32> = Vec::new();
-        for st in &self.stages {
-            let s = &st.shape;
-            let (oh, ow) = s.out_hw();
-            let out_c = st.bd.layout.rows;
-            let pdim = s.patch_dim();
-            im2col(&act, batch, s, &mut patches);
-            let nrows = batch * oh * ow;
-            // Patch-column gather into P_col space (masked stages only).
-            let gemm_in: &[f32] = match &st.col_gather {
-                Some(g) => {
-                    gather_cols(&patches, nrows, pdim, g, &mut gathered);
-                    &gathered
-                }
-                None => &patches,
-            };
-            // Packed GEMM with fused bias+ReLU; patch rows act as the batch.
-            rows_out.resize(nrows * out_c, 0.0);
-            st.bd.forward_fused(gemm_in, &mut rows_out, nrows, &st.bias, true, pool, self.tile);
-            // Transpose to NCHW, restoring logical channel order (P_row⁻¹).
-            rows_to_nchw(&rows_out, batch, out_c, oh, ow, st.chan_src.as_deref(), &mut nchw);
-            if st.pool_k > 0 {
-                maxpool_nchw(&nchw, batch, out_c, oh, ow, st.pool_k, st.pool_stride, &mut act);
-            } else {
-                std::mem::swap(&mut act, &mut nchw);
-            }
-        }
-        self.head.forward(&act, batch)
+        self.exec.run(x, batch)
     }
 
     /// Total packed storage bytes across conv stages + head.
     pub fn storage_bytes(&self) -> usize {
-        self.stages
-            .iter()
-            .map(|st| {
-                st.bd.storage_bytes()
-                    + st.bias.len() * 4
-                    + st.col_gather.as_ref().map_or(0, |g| g.len() * 4)
-                    + st.chan_src.as_ref().map_or(0, |g| g.len() * 4)
-            })
-            .sum::<usize>()
-            + self.head.storage_bytes()
+        self.exec.plan().storage_bytes()
     }
-
 }
 
 #[cfg(test)]

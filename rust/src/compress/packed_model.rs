@@ -1,4 +1,4 @@
-//! The packed block-diagonal inference engine (paper Fig. 3), with
+//! The packed block-diagonal MLP front-end (paper Fig. 3), with
 //! consecutive-layer permutation fusion.
 //!
 //! After training, each masked layer's weights are re-blocked by eq. 2 into
@@ -8,173 +8,81 @@
 //! inverses of each other, thus forming the identity matrix and eliminating
 //! the need for internal permutations."
 //!
-//! We implement that fully: the builder tracks which *permuted space* the
-//! activation vector currently lives in, fuses adjacent permutations into a
-//! single gather (dropping it when it is the identity), folds any residual
-//! permutation into the next dense layer's columns, and re-permutes biases
-//! once at build time. ReLU is element-wise, so it commutes with all of this.
-//!
-//! ## Execution engine
-//!
-//! Bias-add and ReLU are **fused into the block loop** of each packed layer
-//! ([`crate::linalg::BlockDiagMatrix::forward_fused`]): instead of
-//! bias-copy → GEMM-accumulate → separate activation sweep, every output
-//! element is written exactly once. The forward pass ping-pongs between two
-//! reusable buffers, so a layer-by-layer run allocates twice per call instead
-//! of once per stage. Block-level parallelism runs on a persistent
-//! [`ThreadPool`] — either the process-global one, a dedicated engine-owned
-//! pool ([`PackedMlp::with_threads`]), or a shared handle
-//! ([`PackedMlp::with_pool`]) so e.g. one serving worker reuses one pool
-//! across all batches.
+//! [`PackedMlp`] is now a *lowering*: [`PackedMlp::build`] compiles the
+//! masked model onto the unified execution IR via
+//! [`crate::exec::lower_mlp`] (all layers [`crate::exec::Precision::F32`])
+//! and execution is owned by the one interpreter,
+//! [`crate::exec::Executor`] — fused bias+ReLU block GEMMs on the
+//! persistent pool, ping-pong scratch, zero-allocation `run_into` for
+//! serving. The public `forward`/builder API is a thin wrapper kept for
+//! trainers, benches, and tests; outputs are bit-identical to the
+//! pre-refactor stage loop (pinned by `tests/exec.rs`).
 
 use crate::compress::compressor::MpdCompressor;
 use crate::config::EngineConfig;
-use crate::linalg::blockdiag_mm::{BlockDiagMatrix, TileShape};
-use crate::linalg::gemm::gemm_a_bt;
-use crate::linalg::pool::{self, ThreadPool};
-use crate::mask::perm::Permutation;
+use crate::exec::{lower_mlp, Executor, Precision};
+use crate::linalg::blockdiag_mm::TileShape;
+use crate::linalg::pool::ThreadPool;
 use std::sync::Arc;
 
-/// One fused inference stage. ReLU never appears as its own stage: it is a
-/// flag on the FC stage it follows (the fusion contract, see DESIGN.md).
-enum Stage {
-    /// Gather activation features: `out[j] = in[g.dest(j)]`… stored as the
-    /// gather index list for the hot loop.
-    Gather(Vec<u32>),
-    /// Packed block-diagonal FC (+ bias in block-row space, + fused ReLU).
-    BlockFc { bd: BlockDiagMatrix, bias: Vec<f32>, relu: bool },
-    /// Dense FC (+ bias), columns already folded with any pending permutation.
-    DenseFc { w: Vec<f32>, bias: Vec<f32>, out_dim: usize, in_dim: usize, relu: bool },
-}
-
-/// Which persistent pool a packed model executes on.
-enum PoolChoice {
-    /// Single-threaded.
-    None,
-    /// The process-global pool (`linalg::pool::global`).
-    Global,
-    /// An engine-owned (possibly shared) pool.
-    Owned(Arc<ThreadPool>),
-}
-
-/// A compiled packed model: a list of fused stages.
+/// A compiled packed model: an [`Executor`] over the lowered plan.
 pub struct PackedMlp {
-    stages: Vec<Stage>,
+    exec: Executor,
     pub in_dim: usize,
     pub out_dim: usize,
-    /// Number of feature-gather stages that survived fusion (0 internal
+    /// Number of feature-gather ops that survived fusion (0 internal
     /// gathers when masks are aligned — the paper's identity remark).
     pub n_gathers: usize,
     /// Multiply-accumulate count per sample (compression in compute).
     pub macs_per_sample: usize,
-    pool: PoolChoice,
-    tile: TileShape,
 }
 
 impl PackedMlp {
     /// Build from a compressor (masks + plan) and trained per-layer weights
     /// and biases. ReLU is inserted between layers (fused into the preceding
-    /// FC stage), none after the last.
+    /// FC op), none after the last.
     pub fn build(comp: &MpdCompressor, weights: &[Vec<f32>], biases: &[Vec<f32>]) -> Self {
         let n = comp.nlayers();
         assert_eq!(weights.len(), n);
         assert_eq!(biases.len(), n);
-        let mut stages = Vec::new();
-        let mut n_gathers = 0usize;
-        let mut macs = 0usize;
-        // `space`: permutation S such that held[j] = logical[S.dest(j)];
-        // None = identity.
-        let mut space: Option<Permutation> = None;
+        let plan = lower_mlp(comp, weights, biases, None, &vec![Precision::F32; n])
+            .expect("f32 MLP lowering");
+        Self::from_executor(Executor::new(plan))
+    }
 
-        for i in 0..n {
-            let lp = &comp.plan.layers[i];
-            let relu = i + 1 < n;
-            assert_eq!(biases[i].len(), lp.out_dim, "{}: bias size", lp.name);
-            match &comp.masks[i] {
-                Some(mask) => {
-                    // Required input space: p_col. Emit gather G = S⁻¹∘p_col.
-                    let g = match &space {
-                        None => mask.p_col.clone(),
-                        Some(s) => s.inverse().compose(&mask.p_col),
-                    };
-                    if !g.is_identity() {
-                        stages.push(Stage::Gather(g.as_slice().to_vec()));
-                        n_gathers += 1;
-                    }
-                    let bd = BlockDiagMatrix::from_masked_weights(mask, &weights[i]);
-                    macs += bd.nnz();
-                    let bias = mask.p_row.inverse().apply_vec(&biases[i]);
-                    stages.push(Stage::BlockFc { bd, bias, relu });
-                    space = Some(mask.p_row.clone());
-                }
-                None => {
-                    // Fold the current space into the dense layer's columns.
-                    let w = match &space {
-                        None => weights[i].clone(),
-                        Some(s) => s.inverse().apply_cols(&weights[i], lp.out_dim, lp.in_dim),
-                    };
-                    macs += w.len();
-                    stages.push(Stage::DenseFc {
-                        w,
-                        bias: biases[i].clone(),
-                        out_dim: lp.out_dim,
-                        in_dim: lp.in_dim,
-                        relu,
-                    });
-                    space = None;
-                }
-            }
-        }
-        // Restore logical order at the output if still permuted.
-        if let Some(s) = space {
-            if !s.is_identity() {
-                // out[s.dest(j)] = held[j] ⇔ gather held[s⁻¹.dest(k)] into out[k]
-                stages.push(Stage::Gather(s.inverse().as_slice().to_vec()));
-                n_gathers += 1;
-            }
-        }
-        let in_dim = comp.plan.layers[0].in_dim;
-        let out_dim = comp.plan.layers[n - 1].out_dim;
-        Self {
-            stages,
-            in_dim,
-            out_dim,
-            n_gathers,
-            macs_per_sample: macs,
-            pool: PoolChoice::None,
-            tile: TileShape::DEFAULT,
-        }
+    /// Wrap an already-lowered executor (the mixed-precision and
+    /// deserialization paths construct executors directly).
+    pub(crate) fn from_executor(exec: Executor) -> Self {
+        let p = exec.plan();
+        let (in_dim, out_dim) = (p.in_dim, p.out_dim);
+        let (n_gathers, macs_per_sample) = (p.n_gathers, p.macs_per_sample);
+        Self { exec, in_dim, out_dim, n_gathers, macs_per_sample }
     }
 
     /// Enable parallel-over-blocks execution on a dedicated persistent pool
     /// of `nthreads` lanes (`<= 1` reverts to single-threaded).
     pub fn with_threads(mut self, nthreads: usize) -> Self {
-        self.pool = if nthreads > 1 {
-            PoolChoice::Owned(Arc::new(ThreadPool::new(nthreads)))
-        } else {
-            PoolChoice::None
-        };
+        self.exec = self.exec.with_threads(nthreads);
         self
     }
 
     /// Execute on a caller-provided (shareable) persistent pool — e.g. one
     /// pool per serving worker, reused across every batch it handles.
     pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
-        self.pool = PoolChoice::Owned(pool);
+        self.exec = self.exec.with_pool(pool);
         self
     }
 
     /// Execute on the process-global persistent pool.
     pub fn with_global_pool(mut self) -> Self {
-        self.pool = PoolChoice::Global;
+        self.exec = self.exec.with_global_pool();
         self
     }
 
     /// Override the register-tile shape. Panics on an unsupported shape —
     /// use [`Self::with_engine_config`] for the fallible path.
     pub fn with_tile(mut self, tile: TileShape) -> Self {
-        tile.validate().expect("valid tile shape");
-        self.tile = tile;
+        self.exec = self.exec.with_tile(tile);
         self
     }
 
@@ -182,86 +90,31 @@ impl PackedMlp {
     /// shape. Validates the config first, so programmatically-built configs
     /// get an `Err` instead of a panic deep inside a serving process.
     pub fn with_engine_config(mut self, cfg: &EngineConfig) -> Result<Self, String> {
-        cfg.validate()?;
-        self.tile = cfg.tile();
-        Ok(match cfg.pool_threads {
-            0 => self.with_global_pool(),
-            n => self.with_threads(n),
-        })
+        self.exec = self.exec.with_engine_config(cfg)?;
+        Ok(self)
     }
 
-    fn pool(&self) -> Option<&ThreadPool> {
-        match &self.pool {
-            PoolChoice::None => None,
-            PoolChoice::Global => Some(pool::global()),
-            PoolChoice::Owned(p) => Some(p.as_ref()),
-        }
+    /// The underlying executor (plan inspection, `run_into` serving paths).
+    pub fn executor(&self) -> &Executor {
+        &self.exec
+    }
+
+    /// Unwrap into the executor — how this model enters a
+    /// [`crate::server::PlanBackend`].
+    pub fn into_executor(self) -> Executor {
+        self.exec
     }
 
     /// Forward a batch: `x` is `[batch × in_dim]`, returns `[batch × out_dim]`
-    /// logits in logical (un-permuted) class order.
+    /// logits in logical (un-permuted) class order. Allocating convenience —
+    /// serving uses [`crate::exec::Executor::run_into`].
     pub fn forward(&self, x: &[f32], batch: usize) -> Vec<f32> {
-        assert_eq!(x.len(), batch * self.in_dim);
-        let pool = self.pool();
-        let mut act = x.to_vec();
-        let mut dim = self.in_dim;
-        // Ping-pong scratch buffer reused across stages — no per-stage allocs.
-        let mut scratch: Vec<f32> = Vec::new();
-        for stage in &self.stages {
-            match stage {
-                Stage::Gather(g) => {
-                    // out[b][j] = act[b][g[j]]  (g stores source index per dest:
-                    // built from a forward map where dest j pulls from map[j])
-                    // resize without clear: every stage fully overwrites its
-                    // output, so stale prefix data is fine and we skip the
-                    // per-stage memset (same below)
-                    scratch.resize(act.len(), 0.0);
-                    for bi in 0..batch {
-                        let src = &act[bi * dim..(bi + 1) * dim];
-                        let dst = &mut scratch[bi * dim..(bi + 1) * dim];
-                        for (j, &s) in g.iter().enumerate() {
-                            dst[j] = src[s as usize];
-                        }
-                    }
-                    std::mem::swap(&mut act, &mut scratch);
-                }
-                Stage::BlockFc { bd, bias, relu } => {
-                    let out_dim = bd.layout.rows;
-                    scratch.resize(batch * out_dim, 0.0);
-                    // Fused bias + (optional) ReLU epilogue inside the block
-                    // loop; writes every output element exactly once.
-                    bd.forward_fused(&act, &mut scratch, batch, bias, *relu, pool, self.tile);
-                    std::mem::swap(&mut act, &mut scratch);
-                    dim = out_dim;
-                }
-                Stage::DenseFc { w, bias, out_dim, in_dim, relu } => {
-                    scratch.resize(batch * out_dim, 0.0);
-                    for bi in 0..batch {
-                        scratch[bi * out_dim..(bi + 1) * out_dim].copy_from_slice(bias);
-                    }
-                    gemm_a_bt(&act, w, &mut scratch, batch, *in_dim, *out_dim);
-                    if *relu {
-                        scratch.iter_mut().for_each(|v| *v = v.max(0.0));
-                    }
-                    std::mem::swap(&mut act, &mut scratch);
-                    dim = *out_dim;
-                }
-            }
-        }
-        debug_assert_eq!(dim, self.out_dim);
-        act
+        self.exec.run(x, batch)
     }
 
-    /// Total packed storage bytes across stages (weights + biases).
+    /// Total packed storage bytes across ops (weights + biases + gathers).
     pub fn storage_bytes(&self) -> usize {
-        self.stages
-            .iter()
-            .map(|s| match s {
-                Stage::Gather(g) => g.len() * 4,
-                Stage::BlockFc { bd, bias, .. } => bd.storage_bytes() + bias.len() * 4,
-                Stage::DenseFc { w, bias, .. } => (w.len() + bias.len()) * 4,
-            })
-            .sum()
+        self.exec.plan().storage_bytes()
     }
 }
 
@@ -380,5 +233,22 @@ mod tests {
         let x: Vec<f32> = (0..3 * 784).map(|_| rng.next_f32()).collect();
         // tile shape and pool must not change the computed values at all
         assert_eq!(base.forward(&x, 3), tuned.forward(&x, 3));
+    }
+
+    #[test]
+    fn run_into_matches_forward_with_reused_arena() {
+        use crate::exec::ScratchArena;
+        let plan = SparsityPlan::lenet300(10);
+        let (comp, _, weights, biases) = build_trained(&plan, 29);
+        let packed = PackedMlp::build(&comp, &weights, &biases);
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let mut scratch = ScratchArena::for_plan(packed.executor().plan(), 4);
+        for batch in [4usize, 1, 3] {
+            let x: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32()).collect();
+            let want = packed.forward(&x, batch);
+            let mut out = vec![0.0f32; batch * 10];
+            packed.executor().run_into(&x, batch, &mut out, &mut scratch);
+            assert_eq!(out, want, "batch {batch}");
+        }
     }
 }

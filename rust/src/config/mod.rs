@@ -110,7 +110,7 @@ pub struct EngineConfig {
     /// concurrently-serving models* sharing it serialize their layer GEMMs.
     /// That trade is fine for the single-model case; multi-model deployments
     /// should give each serving worker its own pool (`pool_threads > 1`, or
-    /// `PackedBackend::with_pool` with a shared per-worker handle).
+    /// `PlanBackend::with_pool` with a shared per-worker handle).
     pub pool_threads: usize,
     /// Register-tile batch rows (1/2/4/8).
     pub tile_batch: usize,

@@ -1,0 +1,62 @@
+//! Scratch arena for plan execution: two ping-pong f32 activation buffers
+//! plus one i8 staging buffer for quantized GEMM inputs.
+//!
+//! The arena is the *only* memory [`crate::exec::Executor::run_into`]
+//! touches besides the caller's input/output slices: every op writes the
+//! idle half, the halves swap, and quantized ops stage their input in `q`.
+//! Buffers are `Vec`s resized to exact logical lengths per op — `resize`
+//! within capacity never allocates, so after warm-up (either an explicit
+//! [`ScratchArena::warm`] or the first call at the largest batch size) the
+//! hot path performs **zero heap allocations per call**, which
+//! `bin/leak_test.rs` pins down with a counting global allocator.
+//!
+//! One arena belongs to one executing thread at a time (each batcher worker
+//! owns one and reuses it across every batch it serves); arenas are cheap to
+//! create and hold no plan state, so one arena can serve many plans — its
+//! capacity simply grows to the largest.
+
+use crate::exec::plan::ExecPlan;
+
+/// Reusable scratch memory for [`crate::exec::Executor::run_into`].
+pub struct ScratchArena {
+    /// Ping-pong activation halves.
+    pub(crate) a: Vec<f32>,
+    pub(crate) b: Vec<f32>,
+    /// Quantized-input staging buffer.
+    pub(crate) q: Vec<i8>,
+}
+
+impl ScratchArena {
+    /// An empty arena; capacity grows on first use.
+    pub fn new() -> Self {
+        Self { a: Vec::new(), b: Vec::new(), q: Vec::new() }
+    }
+
+    /// An arena pre-sized for `plan` at up to `max_batch` samples.
+    pub fn for_plan(plan: &ExecPlan, max_batch: usize) -> Self {
+        let mut s = Self::new();
+        s.warm(plan, max_batch);
+        s
+    }
+
+    /// Reserve enough capacity that executing `plan` at any batch size up to
+    /// `max_batch` allocates nothing. Idempotent; never shrinks.
+    pub fn warm(&mut self, plan: &ExecPlan, max_batch: usize) {
+        let f32_elems = plan.max_f32_elems_per_sample() * max_batch;
+        let i8_elems = plan.max_i8_elems_per_sample() * max_batch;
+        if self.a.capacity() < f32_elems {
+            self.a.reserve(f32_elems - self.a.len());
+        }
+        if self.b.capacity() < f32_elems {
+            self.b.reserve(f32_elems - self.b.len());
+        }
+        if self.q.capacity() < i8_elems {
+            self.q.reserve(i8_elems - self.q.len());
+        }
+    }
+
+    /// Current heap footprint of the arena (capacity, not logical length).
+    pub fn capacity_bytes(&self) -> usize {
+        (self.a.capacity() + self.b.capacity()) * 4 + self.q.capacity()
+    }
+}

@@ -1,0 +1,354 @@
+//! The one interpreter behind every packed engine.
+//!
+//! [`Executor`] owns an [`ExecPlan`] plus the execution policy (persistent
+//! pool choice + register-tile shape) and walks the op list over a
+//! [`ScratchArena`]. There is exactly one stage-dispatch loop in the crate —
+//! this one — so a new backend (SIMD kernels, a sharded worker, a new layer
+//! type) plugs in once instead of once per engine.
+//!
+//! ## Exactness
+//!
+//! Op application reproduces the pre-refactor engines instruction-for-
+//! instruction: gathers are pure copies, both GEMM kernels keep their
+//! canonical accumulation order, and the ping-pong discipline matches the
+//! old per-engine loops — so plan execution is **bit-identical** to the
+//! engines it replaced (pinned by `tests/exec.rs` and the conv golden
+//! fixture) across tile shapes and thread counts.
+//!
+//! ## Hot path
+//!
+//! [`Executor::run_into`] writes the caller's output slice and touches only
+//! the arena in between: zero heap allocation per call after arena warm-up
+//! (asserted by `bin/leak_test.rs` with a counting global allocator). The
+//! allocating [`Executor::run`] convenience exists for tests, trainers, and
+//! benches where a fresh `Vec` per call is fine.
+
+use crate::config::EngineConfig;
+use crate::exec::arena::ScratchArena;
+use crate::exec::plan::{ExecPlan, Op, PlannedOp, PoolChoice};
+use crate::linalg::blockdiag_mm::TileShape;
+use crate::linalg::blockdiag_mm_i8::quantize_slice_into;
+use crate::linalg::gemm::gemm_a_bt;
+use crate::linalg::im2col::{gather_cols, im2col, maxpool_nchw, rows_to_nchw};
+use crate::linalg::pool::ThreadPool;
+use std::sync::Arc;
+
+/// A runnable compiled model: plan + pool + tile shape.
+pub struct Executor {
+    plan: ExecPlan,
+    pool: PoolChoice,
+    tile: TileShape,
+}
+
+impl Executor {
+    /// Wrap a plan with the default policy (single-threaded, default tile).
+    pub fn new(plan: ExecPlan) -> Self {
+        Self { plan, pool: PoolChoice::None, tile: TileShape::DEFAULT }
+    }
+
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
+    }
+
+    /// Unwrap into the bare plan (structural passes, `mpdc plan` dumps).
+    pub fn into_plan(self) -> ExecPlan {
+        self.plan
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.plan.in_dim
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.plan.out_dim
+    }
+
+    pub fn tile(&self) -> TileShape {
+        self.tile
+    }
+
+    /// Execute on a dedicated persistent pool of `nthreads` lanes
+    /// (`<= 1` reverts to single-threaded).
+    pub fn with_threads(mut self, nthreads: usize) -> Self {
+        self.pool = PoolChoice::threads(nthreads);
+        self
+    }
+
+    /// Execute on a caller-provided (shareable) persistent pool — e.g. one
+    /// pool per serving worker, reused across every batch it handles.
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = PoolChoice::Owned(pool);
+        self
+    }
+
+    /// Execute on the process-global persistent pool.
+    pub fn with_global_pool(mut self) -> Self {
+        self.pool = PoolChoice::Global;
+        self
+    }
+
+    /// Override the register-tile shape. Panics on an unsupported shape —
+    /// use [`Self::with_engine_config`] for the fallible path.
+    pub fn with_tile(mut self, tile: TileShape) -> Self {
+        tile.validate().expect("valid tile shape");
+        self.tile = tile;
+        self
+    }
+
+    /// Apply an [`EngineConfig`]: pool sizing (0 = global pool) + tile
+    /// shape — the one implementation every engine wrapper delegates to.
+    pub fn with_engine_config(mut self, cfg: &EngineConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        self.tile = cfg.tile();
+        Ok(match cfg.pool_threads {
+            0 => self.with_global_pool(),
+            n => self.with_threads(n),
+        })
+    }
+
+    /// Zero-allocation forward: read `x` (`[batch × in_dim]`), write logits
+    /// into `out` (`[batch × out_dim]`), using only `scratch` in between.
+    pub fn run_into(&self, x: &[f32], batch: usize, out: &mut [f32], scratch: &mut ScratchArena) {
+        assert_eq!(x.len(), batch * self.plan.in_dim, "input shape");
+        assert_eq!(out.len(), batch * self.plan.out_dim, "output shape");
+        let pool = self.pool.get();
+        let ScratchArena { a, b, q } = scratch;
+        let (mut cur, mut alt) = (a, b);
+        cur.clear();
+        cur.extend_from_slice(x);
+        for p in &self.plan.ops {
+            self.apply(p, cur, alt, q, batch, pool);
+            std::mem::swap(&mut cur, &mut alt);
+        }
+        out.copy_from_slice(cur);
+    }
+
+    /// Allocating convenience forward (legacy `forward` shape): fresh arena
+    /// + fresh output per call. Tests, trainers, and benches only — serving
+    /// goes through [`Self::run_into`] with a per-worker arena.
+    pub fn run(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        let mut scratch = ScratchArena::new();
+        let mut out = vec![0.0f32; batch * self.plan.out_dim];
+        self.run_into(x, batch, &mut out, &mut scratch);
+        out
+    }
+
+    /// Execute one op: `src` is the current activation, `dst` the idle
+    /// ping-pong half (resized to exact output length — every op fully
+    /// overwrites its output, so stale contents are never read).
+    fn apply(
+        &self,
+        p: &PlannedOp,
+        src: &[f32],
+        dst: &mut Vec<f32>,
+        qbuf: &mut Vec<i8>,
+        batch: usize,
+        pool: Option<&ThreadPool>,
+    ) {
+        let nrows = batch * p.in_rows;
+        debug_assert_eq!(src.len(), batch * p.in_elems(), "{}: src shape", p.op.name());
+        match &p.op {
+            Op::Gather { idx } => {
+                gather_cols(src, nrows, idx.len(), idx, dst);
+            }
+            Op::BlockGemmF32 { bd, bias, relu } => {
+                dst.resize(nrows * bd.layout.rows, 0.0);
+                bd.forward_fused(src, dst, nrows, bias, *relu, pool, self.tile);
+            }
+            Op::BlockGemmI8 { qbd, bias, act_scale, relu } => {
+                quantize_slice_into(src, *act_scale, qbuf);
+                dst.resize(nrows * qbd.layout.rows, 0.0);
+                qbd.forward_fused(qbuf, dst, nrows, *act_scale, bias, *relu, pool, self.tile);
+            }
+            Op::DenseGemm { w, bias, out_dim, in_dim, relu } => {
+                dst.resize(nrows * out_dim, 0.0);
+                for r in 0..nrows {
+                    dst[r * out_dim..(r + 1) * out_dim].copy_from_slice(bias);
+                }
+                gemm_a_bt(src, w, dst, nrows, *in_dim, *out_dim);
+                if *relu {
+                    dst.iter_mut().for_each(|v| *v = v.max(0.0));
+                }
+            }
+            Op::Im2col { shape } => {
+                im2col(src, batch, shape, dst);
+            }
+            Op::RowsToNchw { out_c, oh, ow, chan_src } => {
+                rows_to_nchw(src, batch, *out_c, *oh, *ow, chan_src.as_deref(), dst);
+            }
+            Op::MaxPool { c, h, w, k, stride } => {
+                maxpool_nchw(src, batch, *c, *h, *w, *k, *stride, dst);
+            }
+        }
+        debug_assert_eq!(dst.len(), batch * p.out_elems(), "{}: dst shape", p.op.name());
+    }
+
+    /// Forward plus an analytic per-element worst-case bound on
+    /// `|y − y_f32|`, where `y_f32` is the same plan with every quantized
+    /// GEMM replaced by exact f32 arithmetic. `err0` is an optional incoming
+    /// per-element bound on `x` (defaults to zero).
+    ///
+    /// Per quantized GEMM row `r`, with `ŵ = q_w·s_w`, incoming bound `e`,
+    /// and the exactly-known input quantization residual
+    /// `qerr_p = |x_p − x̂_p|`:
+    ///
+    /// ```text
+    ///   |ŷ_r − y*_r| ≤ Σ_p [ |ŵ_rp|·(qerr_p + e_p) + (s_w[r]/2)·(|x_p| + e_p) ]
+    /// ```
+    ///
+    /// f32 GEMMs propagate the bound linearly (`e_out = |W|·e`), ReLU is
+    /// 1-Lipschitz, gathers/im2col/transposes permute the bound (padded taps
+    /// carry bound 0), and max-pool takes the window max
+    /// (`|max aᵢ − max bᵢ| ≤ maxᵢ|aᵢ − bᵢ|`). The value stream is computed
+    /// by the same [`Self::run_into`] op applications, so it is bit-identical
+    /// to a plain forward. Scalar bound path — diagnostics, not serving.
+    pub fn run_with_bound(
+        &self,
+        x: &[f32],
+        err0: Option<&[f32]>,
+        batch: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(x.len(), batch * self.plan.in_dim, "input shape");
+        if let Some(e) = err0 {
+            assert_eq!(e.len(), x.len(), "incoming bound shape");
+        }
+        let pool = self.pool.get();
+        let mut act = x.to_vec();
+        // The bound stream is lazily materialized: `None` means "identically
+        // zero". Structural ops and f32 GEMMs map a zero bound to a zero
+        // bound, so the stream stays implicit until the first quantized GEMM
+        // introduces error — no input-sized zero vector is ever built (the
+        // old engines allocated one per call).
+        let mut err: Option<Vec<f32>> = err0.map(|e| e.to_vec());
+        let mut scratch: Vec<f32> = Vec::new();
+        let mut err_scratch: Vec<f32> = Vec::new();
+        let mut qbuf: Vec<i8> = Vec::new();
+        for p in &self.plan.ops {
+            // Bound first (it reads the op's *input* values; for i8 ops it
+            // quantizes into qbuf itself — `apply` then re-quantizes the
+            // identical bytes), then the value op, then swap both streams.
+            let wrote = self.apply_bound(p, &act, err.as_deref(), &mut err_scratch, &mut qbuf, batch);
+            self.apply(p, &act, &mut scratch, &mut qbuf, batch, pool);
+            std::mem::swap(&mut act, &mut scratch);
+            if wrote {
+                match &mut err {
+                    Some(e) => std::mem::swap(e, &mut err_scratch),
+                    None => err = Some(std::mem::take(&mut err_scratch)),
+                }
+            }
+        }
+        let bound = err.unwrap_or_else(|| vec![0.0f32; batch * self.plan.out_dim]);
+        (act, bound)
+    }
+
+    /// Propagate the error bound through one op (see [`Self::run_with_bound`]).
+    /// `err = None` means the incoming bound is identically zero; returns
+    /// whether `err_dst` was written (`false` = the outgoing bound is still
+    /// identically zero and stays implicit).
+    fn apply_bound(
+        &self,
+        p: &PlannedOp,
+        act: &[f32],
+        err: Option<&[f32]>,
+        err_dst: &mut Vec<f32>,
+        qbuf: &mut Vec<i8>,
+        batch: usize,
+    ) -> bool {
+        let nrows = batch * p.in_rows;
+        match &p.op {
+            // Structural ops move the bound exactly like the values (and map
+            // an implicit zero bound to an implicit zero bound).
+            Op::Gather { idx } => {
+                let Some(err) = err else { return false };
+                gather_cols(err, nrows, idx.len(), idx, err_dst);
+                true
+            }
+            Op::Im2col { shape } => {
+                let Some(err) = err else { return false };
+                im2col(err, batch, shape, err_dst); // padded taps carry bound 0
+                true
+            }
+            Op::RowsToNchw { out_c, oh, ow, chan_src } => {
+                let Some(err) = err else { return false };
+                rows_to_nchw(err, batch, *out_c, *oh, *ow, chan_src.as_deref(), err_dst);
+                true
+            }
+            Op::MaxPool { c, h, w, k, stride } => {
+                // |max aᵢ − max bᵢ| ≤ maxᵢ|aᵢ − bᵢ|: pool the bound as a max.
+                let Some(err) = err else { return false };
+                maxpool_nchw(err, batch, *c, *h, *w, *k, *stride, err_dst);
+                true
+            }
+            // f32 GEMMs: e_out[r] = Σ_p |w_rp|·e_p (ReLU is 1-Lipschitz) —
+            // exactly zero when the incoming bound is zero.
+            Op::BlockGemmF32 { bd, .. } => {
+                let Some(err) = err else { return false };
+                let (rows, cols) = (bd.layout.rows, bd.layout.cols);
+                err_dst.clear();
+                err_dst.resize(nrows * rows, 0.0);
+                for r in 0..nrows {
+                    for b in 0..bd.nblocks() {
+                        let rs = bd.layout.row_spans[b];
+                        let cs = bd.layout.col_spans[b];
+                        let wb = bd.block(b);
+                        for br in 0..rs.len {
+                            let mut bound = 0.0f64;
+                            for pp in 0..cs.len {
+                                bound += (wb[br * cs.len + pp].abs() as f64)
+                                    * err[r * cols + cs.start + pp] as f64;
+                            }
+                            err_dst[r * rows + rs.start + br] = bound as f32;
+                        }
+                    }
+                }
+                true
+            }
+            Op::DenseGemm { w, out_dim, in_dim, .. } => {
+                let Some(err) = err else { return false };
+                err_dst.clear();
+                err_dst.resize(nrows * out_dim, 0.0);
+                for r in 0..nrows {
+                    for o in 0..*out_dim {
+                        let wrow = &w[o * in_dim..(o + 1) * in_dim];
+                        let erow = &err[r * in_dim..(r + 1) * in_dim];
+                        let mut bound = 0.0f64;
+                        for pp in 0..*in_dim {
+                            bound += wrow[pp].abs() as f64 * erow[pp] as f64;
+                        }
+                        err_dst[r * out_dim + o] = bound as f32;
+                    }
+                }
+                true
+            }
+            // The quantized GEMM — the full formula from the doc comment —
+            // always materializes a bound (quantization introduces error
+            // even when the incoming bound is zero).
+            Op::BlockGemmI8 { qbd, act_scale, .. } => {
+                let (rows, cols) = (qbd.layout.rows, qbd.layout.cols);
+                quantize_slice_into(act, *act_scale, qbuf);
+                err_dst.clear();
+                err_dst.resize(nrows * rows, 0.0);
+                for r in 0..nrows {
+                    for b in 0..qbd.nblocks() {
+                        let rs = qbd.layout.row_spans[b];
+                        let cs = qbd.layout.col_spans[b];
+                        let qb = qbd.block(b);
+                        for br in 0..rs.len {
+                            let s_w = qbd.row_scales[rs.start + br] as f64;
+                            let mut bound = 0.0f64;
+                            for pp in 0..cs.len {
+                                let c = r * cols + cs.start + pp;
+                                let aw = (qb[br * cs.len + pp] as i32).abs() as f64 * s_w;
+                                let qe = (act[c] - qbuf[c] as f32 * *act_scale).abs() as f64;
+                                let e = err.map_or(0.0, |e| e[c] as f64);
+                                bound += aw * (qe + e) + 0.5 * s_w * (act[c].abs() as f64 + e);
+                            }
+                            err_dst[r * rows + rs.start + br] = bound as f32;
+                        }
+                    }
+                }
+                true
+            }
+        }
+    }
+}

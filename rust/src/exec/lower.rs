@@ -1,0 +1,183 @@
+//! MLP lowering: the single copy of the stage-plan walk (gather fusion,
+//! permuted-space tracking, bias re-permutation, output restore) that every
+//! FC front-end compiles through.
+//!
+//! The walk implements the paper's §2 observation: consecutive masked
+//! layers' permutations fuse into a single gather (dropped when it is the
+//! identity), a dense layer folds any residual permutation into its columns
+//! instead, and the final output is restored to logical order at most once.
+//! [`lower_mlp_with`] owns that walk and takes a per-layer closure supplying
+//! the FC op — which is how the f32 engine (fresh weights), the int8 engine
+//! (fresh or deserialized weights), and the **mixed-precision** lowering all
+//! share one structural truth and can never disagree about the pipeline.
+//!
+//! [`lower_mlp`] is the weight-driven entry: per layer it builds the packed
+//! f32 block matrix or its int8 quantization according to a
+//! [`Precision`] vector — per-layer mixed precision on one plan, the
+//! Deep-Compression-style "prune + quantize per layer" shape.
+
+use crate::compress::compressor::MpdCompressor;
+use crate::exec::plan::{ExecPlan, PlanBuilder};
+use crate::linalg::blockdiag_mm::BlockDiagMatrix;
+use crate::linalg::blockdiag_mm_i8::QuantizedBlockDiagMatrix;
+use crate::mask::perm::Permutation;
+use crate::nn::mlp::Mlp;
+use crate::quant::calibrate::Calibration;
+
+/// Per-layer numeric format for [`lower_mlp`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    I8,
+}
+
+/// What a layer lowers to, as supplied by the per-layer closure of
+/// [`lower_mlp_with`]. For dense (unmasked) layers the closure must fold the
+/// current permuted space into the weight columns itself — that fold
+/// *replaces* the gather a masked layer would get.
+pub enum FcOp {
+    /// Masked f32 layer: packed blocks + bias in block-row space.
+    Block { bd: BlockDiagMatrix, bias: Vec<f32> },
+    /// Quantized layer (masked, or dense-as-one-block): i8 blocks + bias +
+    /// calibrated activation scale.
+    BlockI8 { qbd: QuantizedBlockDiagMatrix, bias: Vec<f32>, act_scale: f32 },
+    /// Dense f32 layer, columns already folded with any pending permutation.
+    Dense { w: Vec<f32>, bias: Vec<f32>, out_dim: usize, in_dim: usize },
+}
+
+/// The shared stage walk. `layer_fc(i, &space)` supplies layer `i`'s op;
+/// `space` is the permutation `S` such that `held[j] = logical[S.dest(j)]`
+/// (`None` = identity). ReLU is fused onto every FC except the last.
+pub fn lower_mlp_with(
+    comp: &MpdCompressor,
+    mut layer_fc: impl FnMut(usize, &Option<Permutation>) -> Result<FcOp, String>,
+) -> Result<ExecPlan, String> {
+    let n = comp.nlayers();
+    let mut b = PlanBuilder::new(comp.plan.layers[0].in_dim);
+    let mut space: Option<Permutation> = None;
+    for i in 0..n {
+        let relu = i + 1 < n;
+        if let Some(mask) = &comp.masks[i] {
+            // Required input space: p_col. Emit gather G = S⁻¹∘p_col.
+            let g = match &space {
+                None => mask.p_col.clone(),
+                Some(s) => s.inverse().compose(&mask.p_col),
+            };
+            if !g.is_identity() {
+                b.gather(g.as_slice().to_vec());
+            }
+        }
+        let lp = &comp.plan.layers[i];
+        let fc = layer_fc(i, &space)?;
+        let bias_len = match &fc {
+            FcOp::Block { bias, .. } | FcOp::BlockI8 { bias, .. } | FcOp::Dense { bias, .. } => {
+                bias.len()
+            }
+        };
+        if bias_len != lp.out_dim {
+            return Err(format!(
+                "{}: bias has {} entries, expected {}",
+                lp.name, bias_len, lp.out_dim
+            ));
+        }
+        match fc {
+            FcOp::Block { bd, bias } => b.block_gemm_f32(bd, bias, relu),
+            FcOp::BlockI8 { qbd, bias, act_scale } => b.block_gemm_i8(qbd, bias, act_scale, relu),
+            FcOp::Dense { w, bias, out_dim, in_dim } => b.dense_gemm(w, bias, out_dim, in_dim, relu),
+        }
+        space = comp.masks[i].as_ref().map(|mask| mask.p_row.clone());
+    }
+    // Restore logical order at the output if still permuted.
+    if let Some(s) = space {
+        if !s.is_identity() {
+            b.gather(s.inverse().as_slice().to_vec());
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Weight-driven MLP lowering with per-layer precision. `prec[i]` selects
+/// layer `i`'s format; `calib` is required as soon as any layer is
+/// [`Precision::I8`] (one activation scale per layer — f32 layers simply
+/// ignore theirs). All-`F32` reproduces the `PackedMlp` pipeline
+/// bit-for-bit; all-`I8` reproduces `QuantizedMlp`.
+pub fn lower_mlp(
+    comp: &MpdCompressor,
+    weights: &[Vec<f32>],
+    biases: &[Vec<f32>],
+    calib: Option<&Calibration>,
+    prec: &[Precision],
+) -> Result<ExecPlan, String> {
+    let n = comp.nlayers();
+    if weights.len() != n || biases.len() != n {
+        return Err(format!(
+            "expected {n} weight/bias tensors, got {}/{}",
+            weights.len(),
+            biases.len()
+        ));
+    }
+    if prec.len() != n {
+        return Err(format!("precision vector has {} entries for {n} layers", prec.len()));
+    }
+    let any_i8 = prec.iter().any(|p| *p == Precision::I8);
+    if any_i8 {
+        let cal = calib.ok_or("int8 layers need a calibration")?;
+        cal.validate()?;
+        if cal.act_scales.len() != n {
+            return Err(format!("calibration has {} scales for {n} layers", cal.act_scales.len()));
+        }
+    }
+    lower_mlp_with(comp, |i, space| {
+        let lp = &comp.plan.layers[i];
+        if weights[i].len() != lp.out_dim * lp.in_dim {
+            return Err(format!("{}: weight size {} != {}×{}", lp.name, weights[i].len(), lp.out_dim, lp.in_dim));
+        }
+        Ok(match (&comp.masks[i], prec[i]) {
+            (Some(mask), Precision::F32) => FcOp::Block {
+                bd: BlockDiagMatrix::from_masked_weights(mask, &weights[i]),
+                bias: mask.p_row.inverse().apply_vec(&biases[i]),
+            },
+            (Some(mask), Precision::I8) => {
+                let bd = BlockDiagMatrix::from_masked_weights(mask, &weights[i]);
+                FcOp::BlockI8 {
+                    qbd: QuantizedBlockDiagMatrix::from_f32(&bd),
+                    bias: mask.p_row.inverse().apply_vec(&biases[i]),
+                    act_scale: calib.unwrap().act_scales[i],
+                }
+            }
+            (None, Precision::F32) => {
+                // Fold the current space into the dense layer's columns.
+                let w = match space {
+                    None => weights[i].clone(),
+                    Some(s) => s.inverse().apply_cols(&weights[i], lp.out_dim, lp.in_dim),
+                };
+                FcOp::Dense { w, bias: biases[i].clone(), out_dim: lp.out_dim, in_dim: lp.in_dim }
+            }
+            (None, Precision::I8) => {
+                // Fold *before* quantization, exactly like the f32 engine.
+                let w = match space {
+                    None => weights[i].clone(),
+                    Some(s) => s.inverse().apply_cols(&weights[i], lp.out_dim, lp.in_dim),
+                };
+                FcOp::BlockI8 {
+                    qbd: QuantizedBlockDiagMatrix::from_dense_f32(&w, lp.out_dim, lp.in_dim),
+                    bias: biases[i].clone(),
+                    act_scale: calib.unwrap().act_scales[i],
+                }
+            }
+        })
+    })
+}
+
+/// Lower a native dense [`Mlp`] (no masks, no permutations) to a plan of
+/// [`crate::exec::Op::DenseGemm`] ops — bit-identical to `Mlp::forward`
+/// (same bias-copy + `gemm_a_bt` + ReLU-sweep composition). This is the
+/// uncompressed serving baseline on the same interpreter.
+pub fn lower_dense_mlp(mlp: &Mlp) -> ExecPlan {
+    let n = mlp.layers.len();
+    let mut b = PlanBuilder::new(mlp.dims[0]);
+    for (i, l) in mlp.layers.iter().enumerate() {
+        b.dense_gemm(l.w.clone(), l.b.clone(), l.out_dim, l.in_dim, i + 1 < n);
+    }
+    b.finish()
+}

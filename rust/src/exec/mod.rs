@@ -1,0 +1,34 @@
+//! Unified execution-plan IR and interpreter — the one engine behind every
+//! packed front-end (paper Fig. 3: *one* hardware-desirable block format,
+//! one executor).
+//!
+//! The pre-refactor tree ran the block-diagonal format through four
+//! divergent interpreters (`PackedMlp`, `QuantizedMlp`, `PackedConvNet`,
+//! `QuantizedConvNet`), each re-implementing stage dispatch, ping-pong
+//! scratch, and pool/tile selection. This module collapses them:
+//!
+//! * [`plan`] — the op vocabulary ([`Op`]), compiled plans ([`ExecPlan`]
+//!   with per-op buffer shapes + MAC/storage accounting), the shape-checked
+//!   [`PlanBuilder`], and the shared [`PoolChoice`]
+//! * [`arena`] — the preallocated ping-pong [`ScratchArena`]
+//! * [`executor`] — [`Executor`], the single stage-dispatch loop, with the
+//!   zero-allocation `run_into` hot path and the generic analytic error
+//!   bound walk (`run_with_bound`)
+//! * [`lower`] — the shared MLP stage walk ([`lower_mlp_with`]), the
+//!   precision-parametric [`lower_mlp`] (per-layer f32/i8 **mixed
+//!   precision**), and [`lower_dense_mlp`] for the uncompressed baseline
+//!
+//! Engines keep their public `forward` APIs as thin wrappers; serving runs
+//! plans directly through `server::PlanBackend`. `mpdc plan <model>` dumps
+//! compiled plans. See DESIGN.md §Execution Plan for the lowering contract
+//! and arena lifecycle.
+
+pub mod arena;
+pub mod executor;
+pub mod lower;
+pub mod plan;
+
+pub use arena::ScratchArena;
+pub use executor::Executor;
+pub use lower::{lower_dense_mlp, lower_mlp, lower_mlp_with, FcOp, Precision};
+pub use plan::{ExecPlan, Op, PlanBuilder, PlannedOp, PoolChoice};

@@ -1,0 +1,368 @@
+//! The execution-plan IR: one op vocabulary for every packed engine.
+//!
+//! A compiled model is an [`ExecPlan`] — a straight-line list of
+//! [`PlannedOp`]s, each annotated with its per-sample input/output buffer
+//! shape plus MAC and storage accounting. The four engine front-ends
+//! (`PackedMlp`, `QuantizedMlp`, `PackedConvNet`, `QuantizedConvNet`) are
+//! *lowerings* that build a plan through [`PlanBuilder`]; execution is owned
+//! by one interpreter, [`crate::exec::Executor`].
+//!
+//! ## Op taxonomy
+//!
+//! | op | semantics | who emits it |
+//! |----|-----------|--------------|
+//! | [`Op::Gather`] | row-wise feature gather `out[r][j] = in[r][idx[j]]` | fused inter-layer permutations; conv `P_col` patch gathers |
+//! | [`Op::BlockGemmF32`] | packed block-diagonal GEMM, fused bias+ReLU epilogue | masked FC layers, lowered conv filter matrices |
+//! | [`Op::BlockGemmI8`] | i8×i8→i32 block GEMM, fused dequant+bias+ReLU | quantized FC / conv layers (dense i8 runs as one block) |
+//! | [`Op::DenseGemm`] | dense `X·Wᵀ + b` (+ReLU) | unmasked f32 FC layers |
+//! | [`Op::Im2col`] | NCHW → patch-matrix lowering | conv stage entry |
+//! | [`Op::RowsToNchw`] | GEMM rows → NCHW, optional `P_row⁻¹` channel restore | conv stage exit |
+//! | [`Op::MaxPool`] | stateless NCHW max-pool | conv stages with pooling |
+//!
+//! Rectangular buffers are described per *sample*: an op transforms
+//! `[rows × cols]` (e.g. a conv patch matrix has `rows = oh·ow`); the
+//! interpreter scales rows by the batch size. ReLU and bias never appear as
+//! standalone ops — they are epilogue flags on the GEMM that produces the
+//! activation, so every output element is written exactly once (the fusion
+//! contract, DESIGN.md §Engine).
+
+use crate::linalg::blockdiag_mm::BlockDiagMatrix;
+use crate::linalg::blockdiag_mm_i8::QuantizedBlockDiagMatrix;
+use crate::linalg::im2col::ConvShape;
+use crate::linalg::pool::{self, ThreadPool};
+use std::sync::Arc;
+
+/// One op of the execution IR. Fields are public so structural passes
+/// (serializers, the bound walk, `mpdc plan`) can inspect plans without a
+/// parallel metadata channel.
+pub enum Op {
+    /// Row-wise feature gather: `out[r][j] = in[r][idx[j]]`.
+    Gather { idx: Vec<u32> },
+    /// Packed block-diagonal FC: fused bias (block-row space) + optional ReLU.
+    BlockGemmF32 { bd: BlockDiagMatrix, bias: Vec<f32>, relu: bool },
+    /// Quantized block-diagonal FC: the input rows are quantized with
+    /// `act_scale`, multiplied on the integer kernel, and the epilogue fuses
+    /// dequantize + bias + optional ReLU.
+    BlockGemmI8 { qbd: QuantizedBlockDiagMatrix, bias: Vec<f32>, act_scale: f32, relu: bool },
+    /// Dense FC `Y = X·Wᵀ + b` (+ ReLU), `w` row-major `[out_dim × in_dim]`.
+    DenseGemm { w: Vec<f32>, bias: Vec<f32>, out_dim: usize, in_dim: usize, relu: bool },
+    /// NCHW activations → patch matrix `[oh·ow × patch_dim]` per sample.
+    Im2col { shape: ConvShape },
+    /// GEMM rows `[oh·ow × out_c]` → NCHW `[out_c·oh·ow]` per sample; when
+    /// `chan_src` is set, logical channel `oc` pulls GEMM column
+    /// `chan_src[oc]` (the `P_row⁻¹` restore).
+    RowsToNchw { out_c: usize, oh: usize, ow: usize, chan_src: Option<Vec<u32>> },
+    /// Stateless NCHW max-pool over `[c × h × w]` per sample.
+    MaxPool { c: usize, h: usize, w: usize, k: usize, stride: usize },
+}
+
+impl Op {
+    /// Short human-readable op name for plan dumps.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Gather { .. } => "gather",
+            Op::BlockGemmF32 { .. } => "block_gemm_f32",
+            Op::BlockGemmI8 { .. } => "block_gemm_i8",
+            Op::DenseGemm { .. } => "dense_gemm",
+            Op::Im2col { .. } => "im2col",
+            Op::RowsToNchw { .. } => "rows_to_nchw",
+            Op::MaxPool { .. } => "max_pool",
+        }
+    }
+}
+
+/// An [`Op`] plus its per-sample buffer shapes: the op maps an
+/// `[in_rows × in_cols]` input to an `[out_rows × out_cols]` output, rows
+/// scaling with the batch size at execution time.
+pub struct PlannedOp {
+    pub op: Op,
+    pub in_rows: usize,
+    pub in_cols: usize,
+    pub out_rows: usize,
+    pub out_cols: usize,
+}
+
+impl PlannedOp {
+    /// Input buffer elements per sample.
+    pub fn in_elems(&self) -> usize {
+        self.in_rows * self.in_cols
+    }
+
+    /// Output buffer elements per sample.
+    pub fn out_elems(&self) -> usize {
+        self.out_rows * self.out_cols
+    }
+
+    /// Multiply-accumulates this op contributes per sample.
+    pub fn macs_per_sample(&self) -> usize {
+        match &self.op {
+            Op::BlockGemmF32 { bd, .. } => bd.nnz() * self.in_rows,
+            Op::BlockGemmI8 { qbd, .. } => qbd.nnz() * self.in_rows,
+            Op::DenseGemm { w, .. } => w.len() * self.in_rows,
+            _ => 0,
+        }
+    }
+
+    /// Bytes of model state this op carries (weights, biases, scales,
+    /// gather indices). Activations are not counted — they live in the
+    /// [`crate::exec::ScratchArena`].
+    pub fn storage_bytes(&self) -> usize {
+        match &self.op {
+            Op::Gather { idx } => idx.len() * 4,
+            Op::BlockGemmF32 { bd, bias, .. } => bd.storage_bytes() + bias.len() * 4,
+            Op::BlockGemmI8 { qbd, bias, .. } => qbd.storage_bytes() + bias.len() * 4 + 4,
+            Op::DenseGemm { w, bias, .. } => (w.len() + bias.len()) * 4,
+            Op::Im2col { .. } => 0,
+            Op::RowsToNchw { chan_src, .. } => chan_src.as_ref().map_or(0, |g| g.len() * 4),
+            Op::MaxPool { .. } => 0,
+        }
+    }
+
+    /// Whether this op consumes the i8 staging buffer of the arena.
+    pub fn uses_i8(&self) -> bool {
+        matches!(self.op, Op::BlockGemmI8 { .. })
+    }
+}
+
+/// A compiled model: the op list plus whole-plan accounting. Build through
+/// [`PlanBuilder`] (which validates shape continuity); execute through
+/// [`crate::exec::Executor`].
+pub struct ExecPlan {
+    pub ops: Vec<PlannedOp>,
+    /// Features per input sample.
+    pub in_dim: usize,
+    /// Features per output sample.
+    pub out_dim: usize,
+    /// Gather ops that survived permutation fusion.
+    pub n_gathers: usize,
+    /// Multiply-accumulates per sample across all ops.
+    pub macs_per_sample: usize,
+}
+
+impl ExecPlan {
+    /// Total model storage bytes across ops (weights + biases + scales +
+    /// index vectors).
+    pub fn storage_bytes(&self) -> usize {
+        self.ops.iter().map(|p| p.storage_bytes()).sum()
+    }
+
+    /// Largest f32 activation buffer (elements) any op needs per sample —
+    /// what each ping-pong half of the arena must hold.
+    pub fn max_f32_elems_per_sample(&self) -> usize {
+        self.ops
+            .iter()
+            .flat_map(|p| [p.in_elems(), p.out_elems()])
+            .chain(std::iter::once(self.in_dim))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Largest i8 staging buffer (elements) any quantized op needs per
+    /// sample (0 for all-f32 plans).
+    pub fn max_i8_elems_per_sample(&self) -> usize {
+        self.ops.iter().filter(|p| p.uses_i8()).map(|p| p.in_elems()).max().unwrap_or(0)
+    }
+
+    /// Human-readable plan dump: one row per op with per-sample shapes,
+    /// buffer bytes at `batch`, MACs, and storage — the `mpdc plan` payload.
+    pub fn describe(&self, batch: usize) -> String {
+        let buf_hdr = format!("buf KB @b{batch}");
+        let mut t = crate::util::benchkit::Table::new(&[
+            "#",
+            "op",
+            "in/sample",
+            "out/sample",
+            &buf_hdr,
+            "MACs/sample",
+            "storage B",
+        ]);
+        for (i, p) in self.ops.iter().enumerate() {
+            t.row(&[
+                i.to_string(),
+                p.op.name().to_string(),
+                format!("{}x{}", p.in_rows, p.in_cols),
+                format!("{}x{}", p.out_rows, p.out_cols),
+                format!("{:.1}", (p.out_elems() * batch * 4) as f64 / 1024.0),
+                p.macs_per_sample().to_string(),
+                p.storage_bytes().to_string(),
+            ]);
+        }
+        let arena_bytes =
+            2 * self.max_f32_elems_per_sample() * batch * 4 + self.max_i8_elems_per_sample() * batch;
+        format!(
+            "{}\nplan: {} ops ({} gathers) | in {} → out {} | {} MACs/sample | {} storage bytes | arena ≈{:.1} KB @batch {batch}",
+            t.render(),
+            self.ops.len(),
+            self.n_gathers,
+            self.in_dim,
+            self.out_dim,
+            self.macs_per_sample,
+            self.storage_bytes(),
+            arena_bytes as f64 / 1024.0,
+        )
+    }
+}
+
+/// Incremental, shape-checked plan construction. Each `push` validates that
+/// the op's input shape matches the running activation shape, so a lowering
+/// bug surfaces at build time — not as a slice panic mid-inference.
+pub struct PlanBuilder {
+    ops: Vec<PlannedOp>,
+    in_dim: usize,
+    /// Current activation shape per sample.
+    rows: usize,
+    cols: usize,
+    n_gathers: usize,
+    macs: usize,
+}
+
+impl PlanBuilder {
+    /// Start a plan whose input is `[1 × in_dim]` per sample.
+    pub fn new(in_dim: usize) -> Self {
+        assert!(in_dim > 0, "plan input dim must be ≥ 1");
+        Self { ops: Vec::new(), in_dim, rows: 1, cols: in_dim, n_gathers: 0, macs: 0 }
+    }
+
+    fn push(&mut self, op: Op, out_rows: usize, out_cols: usize) {
+        self.ops.push(PlannedOp {
+            op,
+            in_rows: self.rows,
+            in_cols: self.cols,
+            out_rows,
+            out_cols,
+        });
+        self.rows = out_rows;
+        self.cols = out_cols;
+        let p = self.ops.last().unwrap();
+        self.macs += p.macs_per_sample();
+    }
+
+    /// Row-wise feature gather (`idx.len()` must equal the current width).
+    pub fn gather(&mut self, idx: Vec<u32>) {
+        assert_eq!(idx.len(), self.cols, "gather width mismatch");
+        let w = idx.len();
+        self.n_gathers += 1;
+        let rows = self.rows;
+        self.push(Op::Gather { idx }, rows, w);
+    }
+
+    /// Packed f32 block GEMM with fused bias (block-row space) + ReLU.
+    pub fn block_gemm_f32(&mut self, bd: BlockDiagMatrix, bias: Vec<f32>, relu: bool) {
+        assert_eq!(bd.layout.cols, self.cols, "block GEMM input width mismatch");
+        assert_eq!(bias.len(), bd.layout.rows, "bias must be in block-row space");
+        let (rows, out) = (self.rows, bd.layout.rows);
+        self.push(Op::BlockGemmF32 { bd, bias, relu }, rows, out);
+    }
+
+    /// Quantized block GEMM with fused dequant + bias + ReLU.
+    pub fn block_gemm_i8(
+        &mut self,
+        qbd: QuantizedBlockDiagMatrix,
+        bias: Vec<f32>,
+        act_scale: f32,
+        relu: bool,
+    ) {
+        assert_eq!(qbd.layout.cols, self.cols, "i8 block GEMM input width mismatch");
+        assert_eq!(bias.len(), qbd.layout.rows, "bias must be in block-row space");
+        assert!(act_scale.is_finite() && act_scale > 0.0, "activation scale must be positive");
+        let (rows, out) = (self.rows, qbd.layout.rows);
+        self.push(Op::BlockGemmI8 { qbd, bias, act_scale, relu }, rows, out);
+    }
+
+    /// Dense FC `Y = X·Wᵀ + b` (+ ReLU).
+    pub fn dense_gemm(&mut self, w: Vec<f32>, bias: Vec<f32>, out_dim: usize, in_dim: usize, relu: bool) {
+        assert_eq!(in_dim, self.cols, "dense GEMM input width mismatch");
+        assert_eq!(w.len(), out_dim * in_dim, "dense GEMM weight size");
+        assert_eq!(bias.len(), out_dim, "dense GEMM bias size");
+        let rows = self.rows;
+        self.push(Op::DenseGemm { w, bias, out_dim, in_dim, relu }, rows, out_dim);
+    }
+
+    /// NCHW → patch matrix. Requires flat (`rows == 1`) NCHW input.
+    pub fn im2col(&mut self, shape: ConvShape) {
+        assert_eq!(self.rows, 1, "im2col input must be flat NCHW");
+        assert_eq!(shape.in_dim(), self.cols, "im2col input size mismatch");
+        shape.validate().expect("valid conv shape");
+        let (oh, ow) = shape.out_hw();
+        let pdim = shape.patch_dim();
+        self.push(Op::Im2col { shape }, oh * ow, pdim);
+    }
+
+    /// GEMM rows → flat NCHW (optionally restoring logical channel order).
+    pub fn rows_to_nchw(&mut self, out_c: usize, oh: usize, ow: usize, chan_src: Option<Vec<u32>>) {
+        assert_eq!(self.rows, oh * ow, "rows_to_nchw row-count mismatch");
+        assert_eq!(self.cols, out_c, "rows_to_nchw channel mismatch");
+        if let Some(g) = &chan_src {
+            assert_eq!(g.len(), out_c, "channel gather length");
+        }
+        self.push(Op::RowsToNchw { out_c, oh, ow, chan_src }, 1, out_c * oh * ow);
+    }
+
+    /// NCHW max-pool over the current flat activation.
+    pub fn max_pool(&mut self, c: usize, h: usize, w: usize, k: usize, stride: usize) {
+        assert_eq!(self.rows, 1, "max_pool input must be flat NCHW");
+        assert_eq!(self.cols, c * h * w, "max_pool input size mismatch");
+        assert!(k >= 1 && stride >= 1 && h >= k && w >= k, "max_pool geometry");
+        let (oh, ow) = ((h - k) / stride + 1, (w - k) / stride + 1);
+        self.push(Op::MaxPool { c, h, w, k, stride }, 1, c * oh * ow);
+    }
+
+    /// Splice a complete sub-plan (e.g. the FC head of a conv model) onto
+    /// the current activation. The sub-plan's input dim must match.
+    pub fn append_plan(&mut self, plan: ExecPlan) {
+        assert_eq!(self.rows, 1, "append_plan requires a flat activation");
+        assert_eq!(plan.in_dim, self.cols, "sub-plan input dim mismatch");
+        for p in plan.ops {
+            self.ops.push(p);
+        }
+        self.rows = 1;
+        self.cols = plan.out_dim;
+        self.n_gathers += plan.n_gathers;
+        self.macs += plan.macs_per_sample;
+    }
+
+    /// Finish the plan. The final activation must be flat (one logical
+    /// feature row per sample).
+    pub fn finish(self) -> ExecPlan {
+        assert_eq!(self.rows, 1, "plan must end on a flat activation");
+        assert!(!self.ops.is_empty(), "empty plan");
+        ExecPlan {
+            ops: self.ops,
+            in_dim: self.in_dim,
+            out_dim: self.cols,
+            n_gathers: self.n_gathers,
+            macs_per_sample: self.macs,
+        }
+    }
+}
+
+/// Which persistent pool a plan executes on — the one shared definition
+/// behind every engine (previously four per-engine copies).
+pub enum PoolChoice {
+    /// Single-threaded.
+    None,
+    /// The process-global pool (`linalg::pool::global`).
+    Global,
+    /// An engine-owned (possibly shared) pool.
+    Owned(Arc<ThreadPool>),
+}
+
+impl PoolChoice {
+    /// A dedicated pool of `nthreads` lanes (`<= 1` stays single-threaded).
+    pub fn threads(nthreads: usize) -> Self {
+        if nthreads > 1 {
+            PoolChoice::Owned(Arc::new(ThreadPool::new(nthreads)))
+        } else {
+            PoolChoice::None
+        }
+    }
+
+    /// Resolve to a pool handle (`None` = run inline).
+    pub fn get(&self) -> Option<&ThreadPool> {
+        match self {
+            PoolChoice::None => None,
+            PoolChoice::Global => Some(pool::global()),
+            PoolChoice::Owned(p) => Some(p.as_ref()),
+        }
+    }
+}

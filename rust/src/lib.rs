@@ -13,34 +13,43 @@
 //!   (`linalg::pool`), the register-tiled packed block-diagonal GEMM with
 //!   fused bias+ReLU epilogue (`linalg::blockdiag_mm`), and the im2col
 //!   conv lowering (`linalg::im2col`) that feeds conv layers into it
+//! * [`exec`] — the unified execution-plan IR: the op vocabulary
+//!   ([`exec::Op`]), compiled plans with buffer/MAC/storage accounting
+//!   ([`exec::ExecPlan`]), the preallocated ping-pong
+//!   [`exec::ScratchArena`], and the single interpreter
+//!   ([`exec::Executor`]) with the zero-allocation `run_into` hot path;
+//!   plus the shared MLP lowering incl. per-layer f32/i8 mixed precision
+//!   ([`exec::lower_mlp`])
 //! * [`nn`] — native layers/MLP/conv layers/trainable conv nets, checkpoints
 //! * [`data`] — synthetic datasets + IDX loader
-//! * [`compress`] — plans (FC + mixed conv+dense), compressors, the fused
-//!   packed inference engines (`compress::packed_model` for MLPs,
-//!   `compress::conv_model` for im2col-lowered conv nets, both on the
-//!   pool), pruning baseline
+//! * [`compress`] — plans (FC + mixed conv+dense), compressors, and the
+//!   packed engine front-ends (`compress::packed_model` for MLPs,
+//!   `compress::conv_model` for im2col-lowered conv nets) — thin lowerings
+//!   onto [`exec`] — plus the pruning baseline
 //! * [`quant`] — post-training int8 quantization: activation calibration,
-//!   the i8 packed engines (`quant::QuantizedMlp` / `quant::qconv`, running
-//!   on the register-tiled integer kernel in `linalg::blockdiag_mm_i8`),
-//!   and the checkpoint-v2 i8 serialization
+//!   the i8 engine front-ends (`quant::QuantizedMlp` / `quant::qconv`,
+//!   lowering onto the integer kernel in `linalg::blockdiag_mm_i8`), and
+//!   the checkpoint-v2 i8 serialization
 //! * [`runtime`] — PJRT loader/executor for AOT JAX artifacts (behind the
 //!   `pjrt` feature; stubs out gracefully offline)
 //! * [`train`] — AOT + native trainers, packed-engine evaluation
 //! * [`server`] — serving stack: bounded-queue dynamic batcher, weighted
 //!   A/B router, Prometheus metrics, the dependency-free HTTP/1.1 front-end
 //!   (`server::http`), and the closed/open-loop load generator
-//!   (`server::loadgen`); each batcher worker reuses one persistent pool
-//!   across every batch it executes
+//!   (`server::loadgen`); every compiled model serves through one generic
+//!   [`server::PlanBackend`] whose worker reuses a persistent pool *and* a
+//!   scratch arena across every batch it executes
 //! * [`config`] — TOML-subset config system, incl. [`config::EngineConfig`]
 //!   (pool sizing + kernel tile shape) and [`config::ServerConfig`]
 //!   (`[server]`: HTTP transport + batching policy)
 //! * [`util`] — bench harness, property testing, JSON, PGM, CRC32
 //!
 //! Engine notes — pool lifecycle, tile-shape choice, and the fusion
-//! contract — live in DESIGN.md §Engine; batching policy, backpressure/429
-//! semantics, and metric resolution bounds in DESIGN.md §Serving. The
-//! repo-level overview (quickstart, architecture map, bench index) is in
-//! README.md.
+//! contract — live in DESIGN.md §Engine; the op taxonomy, arena lifecycle,
+//! and lowering contract in DESIGN.md §Execution Plan; batching policy,
+//! backpressure/429 semantics, and metric resolution bounds in DESIGN.md
+//! §Serving. The repo-level overview (quickstart, architecture map, bench
+//! index) is in README.md.
 //
 // Kernel and epilogue code indexes by position on purpose (canonical
 // accumulation order, in-bounds-provable tile offsets), and the fused entry
@@ -50,6 +59,7 @@
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::new_without_default)]
 pub mod compress;
+pub mod exec;
 pub mod quant;
 pub mod runtime;
 pub mod train;

@@ -6,6 +6,8 @@
 //!   report      compression accounting (Table-1 param columns) for a model
 //!   train       train a model with MPD masks via the AOT/PJRT runtime
 //!   quantize    post-training int8 quantization → checkpoint-v2 artifact
+//!   plan        dump a model's compiled execution plan (op list, buffer
+//!               sizes, MAC/storage accounting; f32/int8/mixed precision)
 //!   serve       start the HTTP inference server (dense + MPD + -int8 +
 //!               compressed-conv deep-mnist-mpd variants)
 //!   loadgen     drive closed/open-loop load against a running server
@@ -39,6 +41,7 @@ fn main() {
         "report" => cmd_report(&flags),
         "train" => cmd_train(&flags),
         "quantize" => cmd_quantize(&flags),
+        "plan" => cmd_plan(&flags),
         "serve" => cmd_serve(&flags),
         "loadgen" => cmd_loadgen(&flags),
         "bench-fig1" => cmd_fig1(&flags),
@@ -82,6 +85,14 @@ COMMANDS
                  <model>_k<K>.int8.mpdc (checkpoint v2, i8 + scale
                  sidecars), report compression ratio + accuracy delta
                  ([quant] in TOML tunes calibration)
+  plan           [--model M] [--nblocks K] [--seed S] [--batch N]
+                 [--precision f32|int8|mixed] [--config FILE]
+                 dump the compiled execution plan: one row per op with
+                 per-sample shapes, activation-buffer bytes at --batch,
+                 MACs and storage; deep_mnist additionally dumps the
+                 compressed-conv (deep-mnist-lite) plan. --precision
+                 mixed quantizes masked layers to int8 and keeps dense
+                 layers f32 (per-layer mixed precision on one plan)
   serve          [--port P] [--steps N] [--split dense:0.2,mpd:0.8]
                  [--config FILE]   quick-train a masked LeNet, register
                  dense + csr + mpd (+ mpd-int8/dense-int8 unless
@@ -445,6 +456,89 @@ fn load_mlp_params(
     Ok((weights, biases))
 }
 
+/// Dump a model's compiled execution plan: lower the model (structure only —
+/// weight *values* never change op shapes, MACs, or storage, so
+/// deterministic random masked weights stand in for trained ones) and print
+/// the op list with per-sample buffer shapes, activation-buffer bytes at
+/// `--batch`, MAC and storage accounting.
+fn cmd_plan(flags: &Flags) -> anyhow::Result<()> {
+    use mpdc::compress::compressor::MpdCompressor;
+    use mpdc::compress::conv_model::PackedConvNet;
+    use mpdc::compress::{ConvCompressor, ConvModelPlan};
+    use mpdc::exec::Precision;
+    use mpdc::quant::{Calibration, QuantizedMlp};
+
+    let cfg = cfg_from_flags(flags)?;
+    let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    anyhow::ensure!(batch >= 1, "--batch must be ≥ 1");
+    let precision = flags.get("precision").map(String::as_str).unwrap_or("f32");
+
+    let comp = MpdCompressor::new(cfg.model.plan(cfg.nblocks).map_err(|e| anyhow::anyhow!(e))?, cfg.seed);
+    let (weights, biases) = comp.random_masked_weights(cfg.seed);
+    let n = comp.nlayers();
+    // Unit-range scales: plan structure is scale-independent, so the dump
+    // needs no calibration data.
+    let cal = Calibration::unit_range(n);
+    let (label, plan) = match precision {
+        "f32" => {
+            let engine = mpdc::compress::PackedMlp::build(&comp, &weights, &biases);
+            ("f32 packed", engine.into_executor().into_plan())
+        }
+        "int8" => {
+            let engine = QuantizedMlp::quantize(&comp, &weights, &biases, &cal)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            ("int8 packed", engine.into_executor().into_plan())
+        }
+        "mixed" => {
+            // The natural per-layer policy: int8 for the big masked layers,
+            // f32 for dense (head) layers.
+            let prec: Vec<Precision> = comp
+                .masks
+                .iter()
+                .map(|m| if m.is_some() { Precision::I8 } else { Precision::F32 })
+                .collect();
+            let exec = comp
+                .build_mixed_engine(&weights, &biases, Some(&cal), &prec, &cfg.engine)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            ("mixed f32/int8", exec.into_plan())
+        }
+        other => anyhow::bail!("unknown --precision {other:?} (f32|int8|mixed)"),
+    };
+    println!(
+        "== {} · {} blocks · {} precision ==\n{}\n",
+        cfg.model.name(),
+        cfg.nblocks,
+        label,
+        plan.describe(batch)
+    );
+
+    // The deep-mnist family also has the compressed-conv variant the server
+    // registers as deep-mnist-mpd: dump its plan alongside the FC one.
+    if cfg.model == ModelKind::DeepMnist {
+        let conv_comp = ConvCompressor::new(ConvModelPlan::deep_mnist_lite(cfg.nblocks), cfg.seed);
+        let params = conv_comp.random_masked_params(cfg.seed);
+        let conv_plan = match precision {
+            "int8" | "mixed" => {
+                let ccal = mpdc::quant::ConvCalibration::unit_range(
+                    conv_comp.plan.convs.len(),
+                    conv_comp.fc.nlayers(),
+                );
+                mpdc::quant::QuantizedConvNet::quantize(&conv_comp, &params, &ccal)
+                    .map_err(|e| anyhow::anyhow!(e))?
+                    .into_executor()
+                    .into_plan()
+            }
+            _ => PackedConvNet::build(&conv_comp, &params).into_executor().into_plan(),
+        };
+        println!(
+            "== deep-mnist-lite (compressed conv) · {} blocks ==\n{}",
+            cfg.nblocks,
+            conv_plan.describe(batch)
+        );
+    }
+    Ok(())
+}
+
 fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     use mpdc::compress::compressor::MpdCompressor;
     use mpdc::compress::plan::{LayerPlan, SparsityPlan};
@@ -454,7 +548,8 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     use mpdc::mask::prng::Xoshiro256pp;
     use mpdc::nn::mlp::Mlp;
     use mpdc::quant::calibrate_chunked;
-    use mpdc::server::{spawn, CsrBackend, HttpServer, MlpBackend, PackedBackend, QuantBackend, Router};
+    use mpdc::exec::{lower_dense_mlp, Executor};
+    use mpdc::server::{spawn, CsrBackend, HttpServer, PlanBackend, Router};
     use mpdc::train::native_trainer::fit_native;
     use std::sync::Arc;
 
@@ -487,13 +582,16 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         .map(|((w, b), lp)| (Csr::from_dense(w, lp.out_dim, lp.in_dim), b.clone()))
         .collect();
 
+    // Every model variant serves through the one generic PlanBackend: the
+    // dense baseline is lowered to a plan too, so all four representations
+    // run on the same interpreter with per-worker arenas.
     let bc = cfg.server.batcher_config();
     let mut router = Router::new();
-    let (h, _w1) = spawn(MlpBackend::new(mlp), bc);
+    let (h, _w1) = spawn(PlanBackend::new(Executor::new(lower_dense_mlp(&mlp))).with_max_batch(bc.max_batch).warmed(), bc);
     router.register("dense", h);
     let (h, _w2) = spawn(CsrBackend { layers: csr_layers, feature_dim: 784, out_dim: 10 }, bc);
     router.register("csr", h);
-    let (h, _w3) = spawn(PackedBackend { model: packed }, bc);
+    let (h, _w3) = spawn(PlanBackend::new(packed.into_executor()).with_max_batch(bc.max_batch).warmed(), bc);
     router.register("mpd", h);
 
     // Quantized -int8 variants of the same trained weights ([quant] in TOML):
@@ -507,7 +605,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         let q = comp
             .build_quantized_engine(&weights, &biases, &calib, &cfg.engine)
             .map_err(|e| anyhow::anyhow!(e))?;
-        let (h, _wq1) = spawn(QuantBackend { model: q }, bc);
+        let (h, _wq1) = spawn(PlanBackend::new(q.into_executor()).with_max_batch(bc.max_batch).warmed(), bc);
         router.register("mpd-int8", h);
 
         let dense_plan = SparsityPlan::new(vec![
@@ -522,7 +620,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         let qd = dense_comp
             .build_quantized_engine(&weights, &biases, &calib, &cfg.engine)
             .map_err(|e| anyhow::anyhow!(e))?;
-        let (h, _wq2) = spawn(QuantBackend { model: qd }, bc);
+        let (h, _wq2) = spawn(PlanBackend::new(qd.into_executor()).with_max_batch(bc.max_batch).warmed(), bc);
         router.register("dense-int8", h);
     }
 
@@ -535,7 +633,6 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         use mpdc::compress::conv_model::ConvNetParams;
         use mpdc::compress::{ConvCompressor, ConvModelPlan};
         use mpdc::quant::{calibrate_conv, QuantizedConvNet};
-        use mpdc::server::{ConvBackend, QuantConvBackend};
         use mpdc::train::native_trainer::fit_native_conv;
 
         anyhow::ensure!(cfg.nblocks <= 256, "deep-mnist-mpd supports ≤ 256 blocks");
@@ -563,7 +660,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
             cr.total_kept_params()
         );
         let cpacked = conv_comp.build_engine(&cparams, &cfg.engine).map_err(|e| anyhow::anyhow!(e))?;
-        let (h, _wc1) = spawn(ConvBackend { model: cpacked }, bc);
+        let (h, _wc1) = spawn(PlanBackend::new(cpacked.into_executor()).with_max_batch(bc.max_batch).warmed(), bc);
         router.register("deep-mnist-mpd", h);
 
         if cfg.quant.enabled {
@@ -579,7 +676,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
                 .map_err(|e| anyhow::anyhow!(e))?
                 .with_engine_config(&cfg.engine)
                 .map_err(|e| anyhow::anyhow!(e))?;
-            let (h, _wc2) = spawn(QuantConvBackend { model: cq }, bc);
+            let (h, _wc2) = spawn(PlanBackend::new(cq.into_executor()).with_max_batch(bc.max_batch).warmed(), bc);
             router.register("deep-mnist-mpd-int8", h);
         }
     }

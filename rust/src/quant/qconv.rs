@@ -1,33 +1,36 @@
 //! Int8 compressed-conv inference — the quantized twin of
 //! [`crate::compress::conv_model::PackedConvNet`].
 //!
-//! Conv stages lower through the same im2col pipeline, with the GEMM run by
-//! the i8×i8→i32 kernel ([`QuantizedBlockDiagMatrix`]) and a fused
-//! dequantize+bias+ReLU epilogue; the FC head is a [`QuantizedMlp`]. Each
-//! stage quantizes its im2col patches with one calibrated symmetric scale —
-//! legitimate because im2col only *copies* activations (and inserts zeros),
-//! so the patch max-abs equals the activation max-abs the calibrator saw.
+//! Conv stages lower through the same stage builder and crate-internal
+//! `lower_conv_stages` walk as the f32 engine — the only difference is the
+//! GEMM op: each stage's block matrix
+//! is quantized ([`QuantizedBlockDiagMatrix::from_f32`]) and emitted as
+//! [`crate::exec::Op::BlockGemmI8`], whose epilogue fuses
+//! dequantize+bias+ReLU; the FC head appends
+//! [`crate::quant::QuantizedMlp`]'s op sequence. Each stage quantizes its im2col patches with one calibrated
+//! symmetric scale — legitimate because im2col only *copies* activations
+//! (and inserts zeros), so the patch max-abs equals the activation max-abs
+//! the calibrator saw.
 //!
 //! ## Error accounting
 //!
-//! [`QuantizedConvNet::forward_with_bound`] extends the per-element
-//! worst-case bound of `QuantizedMlp` through the conv pipeline:
-//! im2col routes the incoming bound alongside the values (padded taps carry
-//! bound 0), the FC-stage formula applies per patch row, the NCHW transpose
+//! [`QuantizedConvNet::forward_with_bound`] delegates to the generic bound
+//! walk [`crate::exec::Executor::run_with_bound`]: im2col routes the
+//! incoming bound alongside the values (padded taps carry bound 0), the
+//! quantized-GEMM formula applies per patch row, the NCHW transpose
 //! permutes the bound, and max-pool propagates it as the window max
 //! (`|max aᵢ − max bᵢ| ≤ maxᵢ|aᵢ − bᵢ|`). ReLU is 1-Lipschitz as before.
-//! The golden-fixture test asserts the int8 logits never leave this envelope
-//! of the stored f32 goldens.
+//! The golden-fixture test asserts the int8 logits never leave this
+//! envelope of the stored f32 goldens.
 
-use crate::compress::conv_model::{ConvCompressor, ConvNetParams, PackedConvNet};
+use crate::compress::conv_model::{lower_conv_stages, ConvCompressor, ConvNetParams, PackedConvNet};
 use crate::config::EngineConfig;
-use crate::linalg::blockdiag_mm::TileShape;
-use crate::linalg::blockdiag_mm_i8::{quantize_slice_into, QuantizedBlockDiagMatrix};
+use crate::exec::{lower_mlp, Executor, PlanBuilder, Precision};
+use crate::linalg::blockdiag_mm_i8::QuantizedBlockDiagMatrix;
 use crate::linalg::gemm::gemm_a_bt;
-use crate::linalg::im2col::{gather_cols, im2col, maxpool_nchw, rows_to_nchw, ConvShape};
-use crate::linalg::pool::{self, ThreadPool};
+use crate::linalg::im2col::{im2col, maxpool_nchw, rows_to_nchw};
+use crate::linalg::pool::ThreadPool;
 use crate::quant::calibrate::{calibrate, Calibration};
-use crate::quant::qmodel::QuantizedMlp;
 use std::sync::Arc;
 
 /// Per-stage activation scales for a conv model: one per conv stage input,
@@ -132,42 +135,22 @@ pub fn calibrate_conv(
     merged.expect("samples > 0")
 }
 
-/// One quantized conv inference stage.
-struct QConvStage {
-    qbd: QuantizedBlockDiagMatrix,
-    col_gather: Option<Vec<u32>>,
-    chan_src: Option<Vec<u32>>,
-    bias: Vec<f32>,
-    act_scale: f32,
-    shape: ConvShape,
-    pool_k: usize,
-    pool_stride: usize,
-}
-
-/// Which persistent pool the quantized conv model executes on.
-enum PoolChoice {
-    None,
-    Global,
-    Owned(Arc<ThreadPool>),
-}
-
-/// A compiled int8 compressed conv model.
+/// A compiled int8 compressed conv model: one [`Executor`] over the whole
+/// lowered plan (quantized conv stages + quantized MLP head).
 pub struct QuantizedConvNet {
-    stages: Vec<QConvStage>,
-    head: QuantizedMlp,
+    exec: Executor,
     pub in_dim: usize,
     pub out_dim: usize,
     /// Integer multiply-accumulates per sample.
     pub macs_per_sample: usize,
-    pool: PoolChoice,
-    tile: TileShape,
 }
 
 impl QuantizedConvNet {
     /// Quantize a trained conv model against a [`ConvCalibration`]. The conv
     /// stage structure (gathers, bias permutation, geometry) comes from the
-    /// f32 [`PackedConvNet`] stage builder, so the two engines can never
-    /// disagree about the pipeline — without paying for an f32 FC head this
+    /// f32 [`PackedConvNet`] stage builder and the shared
+    /// `lower_conv_stages` walk, so the two engines can never disagree
+    /// about the pipeline — without paying for an f32 FC head this
     /// constructor would immediately discard.
     pub fn quantize(
         comp: &ConvCompressor,
@@ -183,58 +166,36 @@ impl QuantizedConvNet {
             ));
         }
         let (f32_stages, _) = PackedConvNet::build_stages(comp, params);
-        let mut stages = Vec::new();
-        let mut macs = 0usize;
-        for (st, &act_scale) in f32_stages.iter().zip(&calib.conv_scales) {
-            let qbd = QuantizedBlockDiagMatrix::from_f32(&st.bd);
-            macs += qbd.nnz() * st.shape.patches_per_sample();
-            stages.push(QConvStage {
-                qbd,
-                col_gather: st.col_gather.clone(),
-                chan_src: st.chan_src.clone(),
-                bias: st.bias.clone(),
-                act_scale,
-                shape: st.shape,
-                pool_k: st.pool_k,
-                pool_stride: st.pool_stride,
-            });
-        }
-        let head = QuantizedMlp::quantize(&comp.fc, &params.fc_w, &params.fc_b, &calib.fc)?;
-        macs += head.macs_per_sample;
-        Ok(Self {
-            stages,
-            in_dim: comp.plan.net_spec().in_dim(),
-            out_dim: head.out_dim,
-            macs_per_sample: macs,
-            head,
-            pool: PoolChoice::None,
-            tile: TileShape::DEFAULT,
-        })
+        let nfc = comp.fc.nlayers();
+        let head =
+            lower_mlp(&comp.fc, &params.fc_w, &params.fc_b, Some(&calib.fc), &vec![Precision::I8; nfc])?;
+        let mut b = PlanBuilder::new(comp.plan.net_spec().in_dim());
+        lower_conv_stages(&mut b, f32_stages, |b, i, bd, bias| {
+            b.block_gemm_i8(QuantizedBlockDiagMatrix::from_f32(&bd), bias, calib.conv_scales[i], true);
+        });
+        b.append_plan(head);
+        let exec = Executor::new(b.finish());
+        let p = exec.plan();
+        let (in_dim, out_dim, macs) = (p.in_dim, p.out_dim, p.macs_per_sample);
+        Ok(Self { exec, in_dim, out_dim, macs_per_sample: macs })
     }
 
     /// Execute on a dedicated persistent pool of `nthreads` lanes (shared
     /// with the head; `<= 1` reverts to single-threaded).
-    pub fn with_threads(self, nthreads: usize) -> Self {
-        if nthreads > 1 {
-            self.with_pool(Arc::new(ThreadPool::new(nthreads)))
-        } else {
-            let mut s = self;
-            s.pool = PoolChoice::None;
-            s
-        }
+    pub fn with_threads(mut self, nthreads: usize) -> Self {
+        self.exec = self.exec.with_threads(nthreads);
+        self
     }
 
     /// Execute on a caller-provided (shareable) persistent pool.
     pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
-        self.head = self.head.with_pool(pool.clone());
-        self.pool = PoolChoice::Owned(pool);
+        self.exec = self.exec.with_pool(pool);
         self
     }
 
     /// Execute on the process-global persistent pool.
     pub fn with_global_pool(mut self) -> Self {
-        self.head = self.head.with_global_pool();
-        self.pool = PoolChoice::Global;
+        self.exec = self.exec.with_global_pool();
         self
     }
 
@@ -242,152 +203,36 @@ impl QuantizedConvNet {
     /// plus the register-tile shape (same policy and structure as
     /// `PackedConvNet::with_engine_config`).
     pub fn with_engine_config(mut self, cfg: &EngineConfig) -> Result<Self, String> {
-        cfg.validate()?;
-        self.tile = cfg.tile();
-        self.head = self.head.with_tile(cfg.tile());
-        Ok(match cfg.pool_threads {
-            0 => self.with_global_pool(),
-            n => self.with_threads(n),
-        })
+        self.exec = self.exec.with_engine_config(cfg)?;
+        Ok(self)
     }
 
-    fn pool(&self) -> Option<&ThreadPool> {
-        match &self.pool {
-            PoolChoice::None => None,
-            PoolChoice::Global => Some(pool::global()),
-            PoolChoice::Owned(p) => Some(p.as_ref()),
-        }
+    /// The underlying executor (plan inspection, `run_into` serving paths).
+    pub fn executor(&self) -> &Executor {
+        &self.exec
     }
 
-    /// Run the conv stages over flattened NCHW input, returning the head
-    /// input activations (shared by [`Self::forward`] and the bound walk).
-    fn conv_stages_forward(&self, x: &[f32], batch: usize) -> Vec<f32> {
-        let pool = self.pool();
-        let mut act = x.to_vec();
-        let mut patches = Vec::new();
-        let mut gathered = Vec::new();
-        let mut qbuf: Vec<i8> = Vec::new();
-        let mut rows_out = Vec::new();
-        let mut nchw = Vec::new();
-        for st in &self.stages {
-            let s = &st.shape;
-            let (oh, ow) = s.out_hw();
-            let out_c = st.qbd.layout.rows;
-            let pdim = s.patch_dim();
-            im2col(&act, batch, s, &mut patches);
-            let nrows = batch * oh * ow;
-            let gemm_in: &[f32] = match &st.col_gather {
-                Some(g) => {
-                    gather_cols(&patches, nrows, pdim, g, &mut gathered);
-                    &gathered
-                }
-                None => &patches,
-            };
-            quantize_slice_into(gemm_in, st.act_scale, &mut qbuf);
-            rows_out.resize(nrows * out_c, 0.0);
-            st.qbd.forward_fused(&qbuf, &mut rows_out, nrows, st.act_scale, &st.bias, true, pool, self.tile);
-            rows_to_nchw(&rows_out, batch, out_c, oh, ow, st.chan_src.as_deref(), &mut nchw);
-            if st.pool_k > 0 {
-                maxpool_nchw(&nchw, batch, out_c, oh, ow, st.pool_k, st.pool_stride, &mut act);
-            } else {
-                std::mem::swap(&mut act, &mut nchw);
-            }
-        }
-        act
+    /// Unwrap into the executor — how this model enters a
+    /// [`crate::server::PlanBackend`].
+    pub fn into_executor(self) -> Executor {
+        self.exec
     }
 
     /// Forward a batch of flattened NCHW inputs `[batch × in_dim]`, returns
     /// `[batch × out_dim]` logits in logical class order.
     pub fn forward(&self, x: &[f32], batch: usize) -> Vec<f32> {
-        assert_eq!(x.len(), batch * self.in_dim);
-        let act = self.conv_stages_forward(x, batch);
-        self.head.forward(&act, batch)
+        self.exec.run(x, batch)
     }
 
     /// [`Self::forward`] plus the analytic per-element worst-case bound on
     /// `|y_int8 − y_f32|` (module docs). Scalar-path; not a serving hot path.
     pub fn forward_with_bound(&self, x: &[f32], batch: usize) -> (Vec<f32>, Vec<f32>) {
-        assert_eq!(x.len(), batch * self.in_dim);
-        let pool = self.pool();
-        let mut act = x.to_vec();
-        let mut err = vec![0.0f32; x.len()];
-        let mut patches = Vec::new();
-        let mut err_patches = Vec::new();
-        let mut gathered = Vec::new();
-        let mut err_gathered = Vec::new();
-        let mut qbuf: Vec<i8> = Vec::new();
-        let mut rows_out = Vec::new();
-        let mut err_rows = Vec::new();
-        let mut nchw = Vec::new();
-        let mut err_nchw = Vec::new();
-        for st in &self.stages {
-            let s = &st.shape;
-            let (oh, ow) = s.out_hw();
-            let out_c = st.qbd.layout.rows;
-            let pdim = s.patch_dim();
-            im2col(&act, batch, s, &mut patches);
-            im2col(&err, batch, s, &mut err_patches); // padded taps carry bound 0
-            let nrows = batch * oh * ow;
-            let (pvals, perrs): (&[f32], &[f32]) = match &st.col_gather {
-                Some(g) => {
-                    gather_cols(&patches, nrows, pdim, g, &mut gathered);
-                    gather_cols(&err_patches, nrows, pdim, g, &mut err_gathered);
-                    (&gathered, &err_gathered)
-                }
-                None => (&patches, &err_patches),
-            };
-            quantize_slice_into(pvals, st.act_scale, &mut qbuf);
-            // per-row bound, mirroring QuantizedMlp::forward_with_bound
-            err_rows.clear();
-            err_rows.resize(nrows * out_c, 0.0);
-            for r in 0..nrows {
-                for b in 0..st.qbd.nblocks() {
-                    let rs = st.qbd.layout.row_spans[b];
-                    let cs = st.qbd.layout.col_spans[b];
-                    let qb = st.qbd.block(b);
-                    for br in 0..rs.len {
-                        let s_w = st.qbd.row_scales[rs.start + br] as f64;
-                        let mut bound = 0.0f64;
-                        for p in 0..cs.len {
-                            let c = r * pdim + cs.start + p;
-                            let aw = (qb[br * cs.len + p] as i32).abs() as f64 * s_w;
-                            let qe = (pvals[c] - qbuf[c] as f32 * st.act_scale).abs() as f64;
-                            let e = perrs[c] as f64;
-                            bound += aw * (qe + e) + 0.5 * s_w * (pvals[c].abs() as f64 + e);
-                        }
-                        err_rows[r * out_c + rs.start + br] = bound as f32;
-                    }
-                }
-            }
-            rows_out.resize(nrows * out_c, 0.0);
-            st.qbd.forward_fused(&qbuf, &mut rows_out, nrows, st.act_scale, &st.bias, true, pool, self.tile);
-            rows_to_nchw(&rows_out, batch, out_c, oh, ow, st.chan_src.as_deref(), &mut nchw);
-            rows_to_nchw(&err_rows, batch, out_c, oh, ow, st.chan_src.as_deref(), &mut err_nchw);
-            if st.pool_k > 0 {
-                maxpool_nchw(&nchw, batch, out_c, oh, ow, st.pool_k, st.pool_stride, &mut act);
-                // |max aᵢ − max bᵢ| ≤ maxᵢ|aᵢ − bᵢ|: pool the bound as a max
-                maxpool_nchw(&err_nchw, batch, out_c, oh, ow, st.pool_k, st.pool_stride, &mut err);
-            } else {
-                std::mem::swap(&mut act, &mut nchw);
-                std::mem::swap(&mut err, &mut err_nchw);
-            }
-        }
-        self.head.forward_with_bound_from(&act, &err, batch)
+        self.exec.run_with_bound(x, None, batch)
     }
 
     /// Total storage bytes across conv stages + head.
     pub fn storage_bytes(&self) -> usize {
-        self.stages
-            .iter()
-            .map(|st| {
-                st.qbd.storage_bytes()
-                    + st.bias.len() * 4
-                    + 4
-                    + st.col_gather.as_ref().map_or(0, |g| g.len() * 4)
-                    + st.chan_src.as_ref().map_or(0, |g| g.len() * 4)
-            })
-            .sum::<usize>()
-            + self.head.storage_bytes()
+        self.exec.plan().storage_bytes()
     }
 }
 
@@ -396,6 +241,7 @@ mod tests {
     use super::*;
     use crate::compress::plan::{ConvLayerPlan, ConvModelPlan, LayerPlan, SparsityPlan};
     use crate::mask::prng::Xoshiro256pp;
+    use crate::quant::qmodel::QuantizedMlp;
 
     fn tiny() -> (ConvCompressor, ConvNetParams) {
         let plan = ConvModelPlan::new(
@@ -478,5 +324,23 @@ mod tests {
         let q = QuantizedConvNet::quantize(&comp, &params, &ConvCalibration::unit_range(2, 2)).unwrap();
         assert_eq!(q.macs_per_sample, packed.macs_per_sample);
         assert!(q.storage_bytes() * 2 < packed.storage_bytes(), "{} vs {}", q.storage_bytes(), packed.storage_bytes());
+    }
+
+    #[test]
+    fn head_structure_matches_quantized_mlp() {
+        // The conv plan's head ops must be the same op sequence a standalone
+        // QuantizedMlp lowers to (shared walk — structural, not numeric).
+        let (comp, params) = tiny();
+        let calib = ConvCalibration::unit_range(2, 2);
+        let q = QuantizedConvNet::quantize(&comp, &params, &calib).unwrap();
+        let head = QuantizedMlp::quantize(&comp.fc, &params.fc_w, &params.fc_b, &calib.fc).unwrap();
+        let conv_ops = &q.executor().plan().ops;
+        let head_ops = &head.executor().plan().ops;
+        let tail = &conv_ops[conv_ops.len() - head_ops.len()..];
+        for (a, b) in tail.iter().zip(head_ops) {
+            assert_eq!(a.op.name(), b.op.name());
+            assert_eq!((a.in_rows, a.in_cols, a.out_rows, a.out_cols),
+                       (b.in_rows, b.in_cols, b.out_rows, b.out_cols));
+        }
     }
 }

@@ -1,150 +1,56 @@
 //! `QuantizedMlp` — the int8 twin of
 //! [`crate::compress::packed_model::PackedMlp`].
 //!
-//! The builder reuses the packed engine's stage machinery one-for-one: it
-//! tracks which permuted space the activation vector lives in, fuses adjacent
-//! permutations into single gathers (dropping identities), folds any residual
-//! permutation into a dense layer's columns **before** quantizing it, and
-//! re-permutes biases once at build time. The only difference is the FC
-//! stage: weights are i8 with symmetric per-block-row scales, the stage input
-//! is quantized once per layer with a calibrated activation scale, and the
-//! integer GEMM's epilogue fuses dequantize + bias + ReLU
-//! ([`QuantizedBlockDiagMatrix::forward_fused`]). Activations stay f32
-//! between stages, so gathers are unchanged.
-//!
-//! Dense (unmasked) layers run through the same integer kernel as a single
-//! block — one code path, one storage format, one serializer.
+//! Both front-ends compile through the *same* stage walk
+//! ([`crate::exec::lower_mlp_with`]): permuted-space tracking, gather
+//! fusion, dense-layer column folding (applied **before** quantization),
+//! and bias re-permutation are one piece of code — so a quantized model can
+//! never disagree with the f32 engine about pipeline structure. The only
+//! per-layer difference is the FC op: [`crate::exec::Op::BlockGemmI8`]
+//! quantizes the stage input once with a calibrated activation scale, runs
+//! the i8×i8→i32 register-tiled kernel, and fuses dequantize + bias + ReLU
+//! in the epilogue. Activations stay f32 between ops, so gathers are
+//! unchanged. Dense (unmasked) layers run through the same integer kernel
+//! as a single block — one code path, one storage format, one serializer.
 //!
 //! ## Error accounting
 //!
-//! [`QuantizedMlp::forward_with_bound`] propagates a per-element worst-case
-//! bound on `|y_int8 − y_f32|` alongside the forward pass. Per FC stage, with
-//! `ŵ = q_w·s_w`, `x̂ = q_x·s_x`, incoming bound `e`, and the exactly-known
-//! input quantization residual `qerr_p = |x_p − x̂_p|`:
-//!
-//! ```text
-//!   |ŷ_r − y*_r| ≤ Σ_p [ |ŵ_rp|·(qerr_p + e_p) + (s_w[r]/2)·(|x_p| + e_p) ]
-//! ```
-//!
-//! (weight rounding error ≤ s_w/2 per entry; ReLU is 1-Lipschitz so the
-//! bound passes through activations unchanged; gathers permute it). The
-//! quant property tests assert the quantized output never leaves this
-//! envelope of the f32 `PackedMlp` reference — see DESIGN.md §Quantization.
+//! [`QuantizedMlp::forward_with_bound`] delegates to the generic bound walk
+//! [`crate::exec::Executor::run_with_bound`], which propagates a
+//! per-element worst-case bound on `|y_int8 − y_f32|` alongside the forward
+//! pass (see its docs for the per-op formulas — the i8 GEMM bound is the
+//! one derived here originally). The quant property tests assert the
+//! quantized output never leaves this envelope of the f32 `PackedMlp`
+//! reference — see DESIGN.md §Quantization.
 
 use crate::compress::compressor::MpdCompressor;
 use crate::config::EngineConfig;
-use crate::linalg::blockdiag_mm::{BlockDiagMatrix, TileShape};
-use crate::linalg::blockdiag_mm_i8::{quantize_slice_into, QuantizedBlockDiagMatrix};
-use crate::linalg::pool::{self, ThreadPool};
+use crate::exec::{lower_mlp, lower_mlp_with, Executor, FcOp, Op, Precision};
+use crate::linalg::blockdiag_mm::TileShape;
+use crate::linalg::blockdiag_mm_i8::QuantizedBlockDiagMatrix;
+use crate::linalg::pool::ThreadPool;
 use crate::mask::blockdiag::BlockDiagLayout;
-use crate::mask::mask::MpdMask;
-use crate::mask::perm::Permutation;
 use crate::nn::checkpoint::NamedTensor;
 use crate::quant::calibrate::Calibration;
 use std::sync::Arc;
 
-/// One fused quantized inference stage.
-enum QStage {
-    /// Gather activation features: `out[j] = in[g[j]]`.
-    Gather(Vec<u32>),
-    /// Quantize input with `act_scale`, run the i8 block GEMM, dequantize +
-    /// bias (+ ReLU) in the epilogue. Dense layers are a single-block `qbd`.
-    QFc { qbd: QuantizedBlockDiagMatrix, bias: Vec<f32>, act_scale: f32, relu: bool },
-}
-
-/// Which persistent pool the quantized model executes on.
-enum PoolChoice {
-    None,
-    Global,
-    Owned(Arc<ThreadPool>),
-}
-
-/// A compiled int8 packed model: a list of fused stages.
+/// A compiled int8 packed model: an [`Executor`] over the lowered plan.
 pub struct QuantizedMlp {
-    stages: Vec<QStage>,
+    exec: Executor,
     pub in_dim: usize,
     pub out_dim: usize,
-    /// Feature-gather stages that survived fusion.
+    /// Feature-gather ops that survived fusion.
     pub n_gathers: usize,
     /// Integer multiply-accumulates per sample.
     pub macs_per_sample: usize,
-    pool: PoolChoice,
-    tile: TileShape,
-}
-
-/// Gather needed to move from `space` into the mask's column space
-/// (`None` when it fuses to the identity) — the packed engine's rule.
-fn gather_for(space: &Option<Permutation>, mask: &MpdMask) -> Option<Vec<u32>> {
-    let g = match space {
-        None => mask.p_col.clone(),
-        Some(s) => s.inverse().compose(&mask.p_col),
-    };
-    if g.is_identity() {
-        None
-    } else {
-        Some(g.as_slice().to_vec())
-    }
 }
 
 impl QuantizedMlp {
-    /// The single copy of the stage-plan walk (gather fusion, permuted-space
-    /// tracking, output restore): both [`Self::quantize`] (fresh parts) and
-    /// [`Self::from_tensors`] (deserialized parts) build through here, so a
-    /// saved artifact can never disagree with a freshly quantized model about
-    /// the pipeline structure. `layer_fc(i, &space)` supplies layer `i`'s
-    /// quantized weights, bias (block-row space), and activation scale; for
-    /// dense layers it must fold `space` into the columns itself (that fold
-    /// *replaces* the gather a masked layer would get).
-    fn build_stages(
-        comp: &MpdCompressor,
-        mut layer_fc: impl FnMut(
-            usize,
-            &Option<Permutation>,
-        ) -> Result<(QuantizedBlockDiagMatrix, Vec<f32>, f32), String>,
-    ) -> Result<Self, String> {
-        let n = comp.nlayers();
-        let mut stages = Vec::new();
-        let mut n_gathers = 0usize;
-        let mut macs = 0usize;
-        // `space`: permutation S such that held[j] = logical[S.dest(j)].
-        let mut space: Option<Permutation> = None;
-        for i in 0..n {
-            let relu = i + 1 < n;
-            if let Some(mask) = &comp.masks[i] {
-                if let Some(g) = gather_for(&space, mask) {
-                    stages.push(QStage::Gather(g));
-                    n_gathers += 1;
-                }
-            }
-            let (qbd, bias, act_scale) = layer_fc(i, &space)?;
-            if bias.len() != comp.plan.layers[i].out_dim {
-                return Err(format!(
-                    "{}: bias has {} entries, expected {}",
-                    comp.plan.layers[i].name,
-                    bias.len(),
-                    comp.plan.layers[i].out_dim
-                ));
-            }
-            macs += qbd.nnz();
-            stages.push(QStage::QFc { qbd, bias, act_scale, relu });
-            space = comp.masks[i].as_ref().map(|mask| mask.p_row.clone());
-        }
-        // Restore logical order at the output if still permuted.
-        if let Some(s) = space {
-            if !s.is_identity() {
-                stages.push(QStage::Gather(s.inverse().as_slice().to_vec()));
-                n_gathers += 1;
-            }
-        }
-        Ok(Self {
-            stages,
-            in_dim: comp.plan.layers[0].in_dim,
-            out_dim: comp.plan.layers[n - 1].out_dim,
-            n_gathers,
-            macs_per_sample: macs,
-            pool: PoolChoice::None,
-            tile: TileShape::DEFAULT,
-        })
+    fn from_executor(exec: Executor) -> Self {
+        let p = exec.plan();
+        let (in_dim, out_dim) = (p.in_dim, p.out_dim);
+        let (n_gathers, macs_per_sample) = (p.n_gathers, p.macs_per_sample);
+        Self { exec, in_dim, out_dim, n_gathers, macs_per_sample }
     }
 
     /// Quantize a trained masked model: same inputs as
@@ -159,128 +65,66 @@ impl QuantizedMlp {
         let n = comp.nlayers();
         assert_eq!(weights.len(), n);
         assert_eq!(biases.len(), n);
-        calib.validate()?;
-        if calib.act_scales.len() != n {
-            return Err(format!("calibration has {} scales for {n} layers", calib.act_scales.len()));
-        }
-        Self::build_stages(comp, |i, space| {
-            let lp = &comp.plan.layers[i];
-            let act_scale = calib.act_scales[i];
-            Ok(match &comp.masks[i] {
-                Some(mask) => {
-                    let bd = BlockDiagMatrix::from_masked_weights(mask, &weights[i]);
-                    let bias = mask.p_row.inverse().apply_vec(&biases[i]);
-                    (QuantizedBlockDiagMatrix::from_f32(&bd), bias, act_scale)
-                }
-                None => {
-                    // Fold the current space into the dense layer's columns
-                    // *before* quantization, exactly like the f32 engine.
-                    let w = match space {
-                        None => weights[i].clone(),
-                        Some(s) => s.inverse().apply_cols(&weights[i], lp.out_dim, lp.in_dim),
-                    };
-                    let qbd = QuantizedBlockDiagMatrix::from_dense_f32(&w, lp.out_dim, lp.in_dim);
-                    (qbd, biases[i].clone(), act_scale)
-                }
-            })
-        })
+        let plan = lower_mlp(comp, weights, biases, Some(calib), &vec![Precision::I8; n])?;
+        Ok(Self::from_executor(Executor::new(plan)))
     }
 
     /// Execute on a dedicated persistent pool of `nthreads` lanes
     /// (`<= 1` reverts to single-threaded).
     pub fn with_threads(mut self, nthreads: usize) -> Self {
-        self.pool = if nthreads > 1 {
-            PoolChoice::Owned(Arc::new(ThreadPool::new(nthreads)))
-        } else {
-            PoolChoice::None
-        };
+        self.exec = self.exec.with_threads(nthreads);
         self
     }
 
     /// Execute on a caller-provided (shareable) persistent pool.
     pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
-        self.pool = PoolChoice::Owned(pool);
+        self.exec = self.exec.with_pool(pool);
         self
     }
 
     /// Execute on the process-global persistent pool.
     pub fn with_global_pool(mut self) -> Self {
-        self.pool = PoolChoice::Global;
+        self.exec = self.exec.with_global_pool();
         self
     }
 
     /// Override the register-tile shape. Panics on an unsupported shape —
-    /// use [`Self::with_engine_config`] for the fallible path. (Mirror of
-    /// `PackedMlp::with_tile`, used by the conv engine to propagate its tile
-    /// without disturbing pool wiring.)
+    /// use [`Self::with_engine_config`] for the fallible path.
     pub fn with_tile(mut self, tile: TileShape) -> Self {
-        tile.validate().expect("valid tile shape");
-        self.tile = tile;
+        self.exec = self.exec.with_tile(tile);
         self
     }
 
     /// Apply an [`EngineConfig`]: pool sizing (0 = global pool) + tile shape.
     pub fn with_engine_config(mut self, cfg: &EngineConfig) -> Result<Self, String> {
-        cfg.validate()?;
-        self.tile = cfg.tile();
-        Ok(match cfg.pool_threads {
-            0 => self.with_global_pool(),
-            n => self.with_threads(n),
-        })
+        self.exec = self.exec.with_engine_config(cfg)?;
+        Ok(self)
     }
 
-    fn pool(&self) -> Option<&ThreadPool> {
-        match &self.pool {
-            PoolChoice::None => None,
-            PoolChoice::Global => Some(pool::global()),
-            PoolChoice::Owned(p) => Some(p.as_ref()),
-        }
+    /// The underlying executor (plan inspection, `run_into` serving paths).
+    pub fn executor(&self) -> &Executor {
+        &self.exec
+    }
+
+    /// Unwrap into the executor — how this model enters a
+    /// [`crate::server::PlanBackend`].
+    pub fn into_executor(self) -> Executor {
+        self.exec
     }
 
     /// Forward a batch: `x` is `[batch × in_dim]`, returns `[batch × out_dim]`
     /// logits in logical (un-permuted) class order.
     pub fn forward(&self, x: &[f32], batch: usize) -> Vec<f32> {
-        assert_eq!(x.len(), batch * self.in_dim);
-        let pool = self.pool();
-        let mut act = x.to_vec();
-        let mut dim = self.in_dim;
-        let mut scratch: Vec<f32> = Vec::new();
-        let mut qbuf: Vec<i8> = Vec::new();
-        for stage in &self.stages {
-            match stage {
-                QStage::Gather(g) => {
-                    scratch.resize(act.len(), 0.0);
-                    for bi in 0..batch {
-                        let src = &act[bi * dim..(bi + 1) * dim];
-                        let dst = &mut scratch[bi * dim..(bi + 1) * dim];
-                        for (j, &s) in g.iter().enumerate() {
-                            dst[j] = src[s as usize];
-                        }
-                    }
-                    std::mem::swap(&mut act, &mut scratch);
-                }
-                QStage::QFc { qbd, bias, act_scale, relu } => {
-                    let out_dim = qbd.layout.rows;
-                    // Quantize the stage input once, then run the integer
-                    // kernel with the fused dequant+bias+ReLU epilogue.
-                    quantize_slice_into(&act, *act_scale, &mut qbuf);
-                    scratch.resize(batch * out_dim, 0.0);
-                    qbd.forward_fused(&qbuf, &mut scratch, batch, *act_scale, bias, *relu, pool, self.tile);
-                    std::mem::swap(&mut act, &mut scratch);
-                    dim = out_dim;
-                }
-            }
-        }
-        debug_assert_eq!(dim, self.out_dim);
-        act
+        self.exec.run(x, batch)
     }
 
     /// [`Self::forward`] plus an analytic per-element worst-case bound on
-    /// `|y_int8 − y_f32|` (see module docs for the derivation). Returns
-    /// `(logits, bound)`, both `[batch × out_dim]`. Used by the accuracy-bound
-    /// property tests; scalar-path, not a serving hot path.
+    /// `|y_int8 − y_f32|` (module docs). Returns `(logits, bound)`, both
+    /// `[batch × out_dim]`. The bound stream starts as an *implicit* zero:
+    /// the walk materializes a bound buffer only at the first quantized op,
+    /// so the old per-call `vec![0.0; x.len()]` zero-vector is gone.
     pub fn forward_with_bound(&self, x: &[f32], batch: usize) -> (Vec<f32>, Vec<f32>) {
-        self.forward_with_bound_from(x, &vec![0.0; x.len()], batch)
+        self.exec.run_with_bound(x, None, batch)
     }
 
     /// [`Self::forward_with_bound`] with a non-zero *incoming* per-element
@@ -288,77 +132,13 @@ impl QuantizedMlp {
     /// conv stages of `quant::qconv::QuantizedConvNet`) chains its
     /// accumulated bound through this FC head.
     pub fn forward_with_bound_from(&self, x: &[f32], err0: &[f32], batch: usize) -> (Vec<f32>, Vec<f32>) {
-        assert_eq!(x.len(), batch * self.in_dim);
-        assert_eq!(err0.len(), x.len(), "incoming bound shape");
-        let pool = self.pool();
-        let mut act = x.to_vec();
-        let mut err = err0.to_vec();
-        let mut dim = self.in_dim;
-        let mut scratch: Vec<f32> = Vec::new();
-        let mut err_scratch: Vec<f32> = Vec::new();
-        let mut qbuf: Vec<i8> = Vec::new();
-        for stage in &self.stages {
-            match stage {
-                QStage::Gather(g) => {
-                    scratch.resize(act.len(), 0.0);
-                    err_scratch.resize(err.len(), 0.0);
-                    for bi in 0..batch {
-                        let (a0, e0) = (bi * dim, (bi + 1) * dim);
-                        for (j, &s) in g.iter().enumerate() {
-                            scratch[a0 + j] = act[a0..e0][s as usize];
-                            err_scratch[a0 + j] = err[a0..e0][s as usize];
-                        }
-                    }
-                    std::mem::swap(&mut act, &mut scratch);
-                    std::mem::swap(&mut err, &mut err_scratch);
-                }
-                QStage::QFc { qbd, bias, act_scale, relu } => {
-                    let (rows, cols) = (qbd.layout.rows, qbd.layout.cols);
-                    quantize_slice_into(&act, *act_scale, &mut qbuf);
-                    // propagate the bound before overwriting `act`
-                    err_scratch.resize(batch * rows, 0.0);
-                    for bi in 0..batch {
-                        for b in 0..qbd.nblocks() {
-                            let rs = qbd.layout.row_spans[b];
-                            let cs = qbd.layout.col_spans[b];
-                            let qb = qbd.block(b);
-                            for r in 0..rs.len {
-                                let s_w = qbd.row_scales[rs.start + r] as f64;
-                                let mut bound = 0.0f64;
-                                for p in 0..cs.len {
-                                    let c = bi * cols + cs.start + p;
-                                    let aw = (qb[r * cs.len + p] as i32).abs() as f64 * s_w;
-                                    let qe =
-                                        (act[c] - qbuf[c] as f32 * *act_scale).abs() as f64;
-                                    let e = err[c] as f64;
-                                    bound += aw * (qe + e) + 0.5 * s_w * (act[c].abs() as f64 + e);
-                                }
-                                err_scratch[bi * rows + rs.start + r] = bound as f32;
-                            }
-                        }
-                    }
-                    scratch.resize(batch * rows, 0.0);
-                    qbd.forward_fused(&qbuf, &mut scratch, batch, *act_scale, bias, *relu, pool, self.tile);
-                    std::mem::swap(&mut act, &mut scratch);
-                    std::mem::swap(&mut err, &mut err_scratch);
-                    dim = rows;
-                }
-            }
-        }
-        debug_assert_eq!(dim, self.out_dim);
-        (act, err)
+        self.exec.run_with_bound(x, Some(err0), batch)
     }
 
-    /// Total storage bytes across stages (i8 weights + f32 scales/biases +
+    /// Total storage bytes across ops (i8 weights + f32 scales/biases +
     /// gather indices).
     pub fn storage_bytes(&self) -> usize {
-        self.stages
-            .iter()
-            .map(|s| match s {
-                QStage::Gather(g) => g.len() * 4,
-                QStage::QFc { qbd, bias, .. } => qbd.storage_bytes() + bias.len() * 4 + 4,
-            })
-            .sum()
+        self.exec.plan().storage_bytes()
     }
 
     /// Serialize to checkpoint tensors (format v2): per FC layer `i`,
@@ -369,8 +149,8 @@ impl QuantizedMlp {
     pub fn to_tensors(&self) -> Vec<NamedTensor> {
         let mut out = Vec::new();
         let mut i = 0usize;
-        for stage in &self.stages {
-            if let QStage::QFc { qbd, bias, act_scale, .. } = stage {
+        for p in &self.exec.plan().ops {
+            if let Op::BlockGemmI8 { qbd, bias, act_scale, .. } = &p.op {
                 out.push(NamedTensor::i8(format!("fc{i}.wq"), vec![qbd.packed.len()], qbd.packed.clone()));
                 out.push(NamedTensor::f32(
                     format!("fc{i}.wq.scale"),
@@ -388,13 +168,14 @@ impl QuantizedMlp {
     /// Rebuild from checkpoint tensors saved by [`Self::to_tensors`]. `comp`
     /// must be the same plan + seed the model was quantized under (masks are
     /// regenerated from it; every shape is cross-checked). Runs the same
-    /// [`Self::build_stages`] walk as [`Self::quantize`] — the dense weights
-    /// in the file were saved post-fold, so the provider passes them through.
+    /// [`crate::exec::lower_mlp_with`] walk as [`Self::quantize`] — the
+    /// dense weights in the file were saved post-fold, so the provider
+    /// passes them through.
     pub fn from_tensors(comp: &MpdCompressor, tensors: &[NamedTensor]) -> Result<Self, String> {
         let find = |name: &str| -> Result<&NamedTensor, String> {
             tensors.iter().find(|t| t.name == name).ok_or_else(|| format!("missing tensor {name}"))
         };
-        Self::build_stages(comp, |i, _space| {
+        let plan = lower_mlp_with(comp, |i, _space| {
             let lp = &comp.plan.layers[i];
             let layout = match &comp.masks[i] {
                 Some(mask) => mask.layout.clone(),
@@ -420,8 +201,9 @@ impl QuantizedMlp {
             }
             let qbd = QuantizedBlockDiagMatrix::from_parts(layout, packed, row_scales)
                 .map_err(|e| format!("fc{i}.wq: {e}"))?;
-            Ok((qbd, bias, act[0]))
-        })
+            Ok(FcOp::BlockI8 { qbd, bias, act_scale: act[0] })
+        })?;
+        Ok(Self::from_executor(Executor::new(plan)))
     }
 }
 
@@ -548,5 +330,35 @@ mod tests {
         // ≥3× smaller in-memory (the on-disk artifact ratio is checked by
         // `mpdc quantize` and the checkpoint tests)
         assert!(q.storage_bytes() * 3 < packed.storage_bytes(), "{} vs {}", q.storage_bytes(), packed.storage_bytes());
+    }
+
+    #[test]
+    fn mixed_precision_lowering_stays_within_i8_bound() {
+        // Per-layer mixed precision on one plan: quantize the big masked
+        // layers, keep the dense head f32 — the error must stay inside the
+        // plan's own analytic bound envelope of the all-f32 reference.
+        let plan = SparsityPlan::new(vec![
+            LayerPlan::masked("a", 32, 24, 4),
+            LayerPlan::masked("b", 16, 32, 4),
+            LayerPlan::dense("c", 8, 16),
+        ])
+        .unwrap();
+        let (comp, weights, biases) = setup(&plan, 33);
+        let packed = PackedMlp::build(&comp, &weights, &biases);
+        let mut rng = Xoshiro256pp::seed_from_u64(34);
+        let batch = 4;
+        let x: Vec<f32> = (0..batch * 24).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let cal = calibrate(&comp, &weights, &biases, &x, batch);
+        let prec = [Precision::I8, Precision::I8, Precision::F32];
+        let mixed = Executor::new(
+            lower_mlp(&comp, &weights, &biases, Some(&cal), &prec).unwrap(),
+        );
+        let y_f = packed.forward(&x, batch);
+        let (y_m, bound) = mixed.run_with_bound(&x, None, batch);
+        assert_eq!(y_m, mixed.run(&x, batch), "bound walk must not change values");
+        for i in 0..y_m.len() {
+            let err = (y_m[i] - y_f[i]).abs();
+            assert!(err <= bound[i] * 1.001 + 1e-4, "elem {i}: err {err} > bound {}", bound[i]);
+        }
     }
 }

@@ -8,6 +8,16 @@
 //! the backend's per-batch cost ~1/c of dense — the batcher is how that
 //! translates into serving throughput.
 //!
+//! The worker is allocation-frugal by design: the stacked-input buffer, the
+//! batch output buffer, and the request list are all reused across batches,
+//! and [`InferBackend::infer_into`] writes into the preallocated output —
+//! with [`PlanBackend`] (a compiled [`crate::exec::ExecPlan`] + per-worker
+//! [`crate::exec::ScratchArena`]) the model forward itself performs zero
+//! heap allocation per batch after warm-up (`bin/leak_test.rs` asserts
+//! this with a counting allocator). Per-request response vectors are the
+//! only steady-state allocation left, and they are owned by the reply
+//! channel.
+//!
 //! ```
 //! use mpdc::server::{spawn, BatcherConfig, ConstBackend};
 //!
@@ -32,8 +42,10 @@ pub trait InferBackend: 'static {
     fn out_dim(&self) -> usize;
     /// Largest batch the backend accepts at once.
     fn max_batch(&self) -> usize;
-    /// Run `batch` stacked samples; returns `[batch × out_dim]` flattened.
-    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>>;
+    /// Run `batch` stacked samples, writing `[batch × out_dim]` flattened
+    /// logits into `out` (pre-sized by the worker; every element must be
+    /// written). Steady-state implementations should not allocate.
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> anyhow::Result<()>;
 }
 
 struct Request {
@@ -163,6 +175,11 @@ where
             let max_batch = cfg.max_batch.min(backend.max_batch());
             let feature_dim = backend.feature_dim();
             let out_dim = backend.out_dim();
+            // Reused across every batch this worker ever executes: request
+            // list, stacked-input buffer, batch output buffer.
+            let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
+            let mut x: Vec<f32> = Vec::with_capacity(max_batch * feature_dim);
+            let mut y: Vec<f32> = Vec::with_capacity(max_batch * out_dim);
             loop {
                 // block for the first request of a batch
                 let first = match rx.recv() {
@@ -170,7 +187,8 @@ where
                     Err(_) => return, // all senders dropped
                 };
                 let deadline = Instant::now() + cfg.max_wait;
-                let mut batch = vec![first];
+                batch.clear();
+                batch.push(first);
                 while batch.len() < max_batch {
                     let now = Instant::now();
                     if now >= deadline {
@@ -184,28 +202,25 @@ where
                 }
                 // assemble
                 let n = batch.len();
-                let mut x = Vec::with_capacity(n * feature_dim);
-                for r in &batch {
+                x.clear();
+                for r in batch.iter() {
                     metrics.queue_wait.record(r.enqueued.elapsed());
                     x.extend_from_slice(&r.input);
                 }
                 metrics.batches.fetch_add(1, Ordering::Relaxed);
                 metrics.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
-                let t0 = Instant::now();
-                let result = backend.infer(&x, n);
-                let dt = t0.elapsed();
+                y.resize(n * out_dim, 0.0);
+                let result = backend.infer_into(&x, n, &mut y[..n * out_dim]);
                 match result {
-                    Ok(y) => {
-                        debug_assert_eq!(y.len(), n * out_dim);
-                        for (i, r) in batch.into_iter().enumerate() {
+                    Ok(()) => {
+                        for (i, r) in batch.drain(..).enumerate() {
                             metrics.latency.record(r.enqueued.elapsed());
                             let _ = r.resp.send(Ok(y[i * out_dim..(i + 1) * out_dim].to_vec()));
                         }
-                        let _ = dt;
                     }
                     Err(e) => {
                         let msg = e.to_string();
-                        for r in batch {
+                        for r in batch.drain(..) {
                             metrics.latency.record(r.enqueued.elapsed());
                             let _ = r.resp.send(Err(msg.clone()));
                         }
@@ -225,6 +240,78 @@ where
 // ---------------------------------------------------------------------------
 // backends
 // ---------------------------------------------------------------------------
+
+/// The one generic model backend: any compiled [`crate::exec::ExecPlan`]
+/// (f32-packed, int8, conv, mixed-precision, or the lowered dense baseline)
+/// served through the single interpreter. Replaces the former per-engine
+/// `MlpBackend`/`PackedBackend`/`QuantBackend`/`ConvBackend`/
+/// `QuantConvBackend` quintet.
+///
+/// The executor carries its persistent [`crate::linalg::ThreadPool`] handle
+/// (global, dedicated, or shared — see `Executor::with_pool`), and the
+/// backend owns a per-worker [`crate::exec::ScratchArena`] reused across
+/// every batch: no thread spawn/join and (after arena warm-up) no heap
+/// allocation anywhere on the model's forward path.
+pub struct PlanBackend {
+    exec: crate::exec::Executor,
+    scratch: crate::exec::ScratchArena,
+    max_batch: usize,
+}
+
+impl PlanBackend {
+    /// Wrap a compiled executor (obtain one via an engine's
+    /// `into_executor()` or a `lower_*` call).
+    pub fn new(exec: crate::exec::Executor) -> Self {
+        Self { exec, scratch: crate::exec::ScratchArena::new(), max_batch: 256 }
+    }
+
+    /// Convenience: wrap an executor and point it at a shared persistent
+    /// pool (e.g. one pool per serving worker).
+    pub fn with_pool(
+        exec: crate::exec::Executor,
+        pool: std::sync::Arc<crate::linalg::ThreadPool>,
+    ) -> Self {
+        Self::new(exec.with_pool(pool))
+    }
+
+    /// Override the per-batch cap this backend advertises to the batcher
+    /// (default 256).
+    pub fn with_max_batch(mut self, max_batch: usize) -> Self {
+        assert!(max_batch >= 1);
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Pre-size the scratch arena for batches up to `max_batch`, so even the
+    /// first request allocates nothing.
+    pub fn warmed(mut self) -> Self {
+        self.scratch.warm(self.exec.plan(), self.max_batch);
+        self
+    }
+
+    pub fn executor(&self) -> &crate::exec::Executor {
+        &self.exec
+    }
+}
+
+impl InferBackend for PlanBackend {
+    fn feature_dim(&self) -> usize {
+        self.exec.in_dim()
+    }
+
+    fn out_dim(&self) -> usize {
+        self.exec.out_dim()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
+        self.exec.run_into(x, batch, out, &mut self.scratch);
+        Ok(())
+    }
+}
 
 /// Fixed-output backend: every sample maps to `[value; out]`. Useful for
 /// doctests, wiring checks, and load-generator self-tests where the serving
@@ -248,45 +335,16 @@ impl InferBackend for ConstBackend {
         64
     }
 
-    fn infer(&mut self, _x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
-        Ok(vec![self.value; batch * self.out])
-    }
-}
-
-/// Backend over the native dense [`crate::nn::mlp::Mlp`] — the uncompressed
-/// baseline variant in A/B serving comparisons against [`PackedBackend`].
-pub struct MlpBackend {
-    pub mlp: crate::nn::mlp::Mlp,
-    pub max_batch: usize,
-}
-
-impl MlpBackend {
-    pub fn new(mlp: crate::nn::mlp::Mlp) -> Self {
-        Self { mlp, max_batch: 256 }
-    }
-}
-
-impl InferBackend for MlpBackend {
-    fn feature_dim(&self) -> usize {
-        self.mlp.dims[0]
-    }
-
-    fn out_dim(&self) -> usize {
-        *self.mlp.dims.last().unwrap()
-    }
-
-    fn max_batch(&self) -> usize {
-        self.max_batch
-    }
-
-    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
-        Ok(self.mlp.forward(x, batch))
+    fn infer_into(&mut self, _x: &[f32], _batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
+        out.fill(self.value);
+        Ok(())
     }
 }
 
 /// Backend over the CSR (irregular-sparse) representation of the same masked
 /// weights — the §3.3 comparator variant in A/B serving demos. ReLU between
-/// layers, none after the last.
+/// layers, none after the last. (Deliberately *not* a plan lowering: CSR is
+/// the irregular format the paper argues against, so it keeps its own path.)
 pub struct CsrBackend {
     /// Per-layer `(weights, bias)`.
     pub layers: Vec<(crate::linalg::csr::Csr, Vec<f32>)>,
@@ -307,7 +365,7 @@ impl InferBackend for CsrBackend {
         256
     }
 
-    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
         let mut act = x.to_vec();
         let n = self.layers.len();
         for (i, (w, b)) in self.layers.iter().enumerate() {
@@ -321,142 +379,8 @@ impl InferBackend for CsrBackend {
             }
             act = y;
         }
-        Ok(act)
-    }
-}
-
-/// Backend over the native packed block-diagonal model (MPD inference).
-///
-/// The model carries its persistent [`crate::linalg::ThreadPool`] handle
-/// (global, dedicated, or shared — see `PackedMlp::with_pool`), so the
-/// batcher worker that owns this backend reuses one warm pool across every
-/// batch it executes: no thread spawn/join anywhere on the request path.
-pub struct PackedBackend {
-    pub model: crate::compress::packed_model::PackedMlp,
-}
-
-impl PackedBackend {
-    /// Convenience: wrap a model and point it at a shared persistent pool.
-    pub fn with_pool(
-        model: crate::compress::packed_model::PackedMlp,
-        pool: std::sync::Arc<crate::linalg::ThreadPool>,
-    ) -> Self {
-        Self { model: model.with_pool(pool) }
-    }
-}
-
-impl InferBackend for PackedBackend {
-    fn feature_dim(&self) -> usize {
-        self.model.in_dim
-    }
-
-    fn out_dim(&self) -> usize {
-        self.model.out_dim
-    }
-
-    fn max_batch(&self) -> usize {
-        1024
-    }
-
-    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
-        Ok(self.model.forward(x, batch))
-    }
-}
-
-/// Backend over the int8 quantized packed model (`quant::QuantizedMlp`) —
-/// the `-int8` serving variant: same stage pipeline as [`PackedBackend`],
-/// with each layer executed by the i8×i8→i32 kernel and a fused
-/// dequantize+bias+ReLU epilogue. Carries its persistent pool handle the same
-/// way the f32 engine does.
-pub struct QuantBackend {
-    pub model: crate::quant::QuantizedMlp,
-}
-
-impl QuantBackend {
-    /// Wrap a quantized model and point it at a shared persistent pool.
-    pub fn with_pool(
-        model: crate::quant::QuantizedMlp,
-        pool: std::sync::Arc<crate::linalg::ThreadPool>,
-    ) -> Self {
-        Self { model: model.with_pool(pool) }
-    }
-}
-
-impl InferBackend for QuantBackend {
-    fn feature_dim(&self) -> usize {
-        self.model.in_dim
-    }
-
-    fn out_dim(&self) -> usize {
-        self.model.out_dim
-    }
-
-    fn max_batch(&self) -> usize {
-        1024
-    }
-
-    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
-        Ok(self.model.forward(x, batch))
-    }
-}
-
-/// Backend over the im2col-lowered packed conv engine
-/// (`compress::conv_model::PackedConvNet`) — the compressed-conv serving
-/// variant (e.g. `deep-mnist-mpd`). Inputs are flattened NCHW images; the
-/// engine carries its persistent pool handle like [`PackedBackend`].
-pub struct ConvBackend {
-    pub model: crate::compress::conv_model::PackedConvNet,
-}
-
-impl ConvBackend {
-    /// Wrap a conv model and point it at a shared persistent pool.
-    pub fn with_pool(
-        model: crate::compress::conv_model::PackedConvNet,
-        pool: std::sync::Arc<crate::linalg::ThreadPool>,
-    ) -> Self {
-        Self { model: model.with_pool(pool) }
-    }
-}
-
-impl InferBackend for ConvBackend {
-    fn feature_dim(&self) -> usize {
-        self.model.in_dim
-    }
-
-    fn out_dim(&self) -> usize {
-        self.model.out_dim
-    }
-
-    fn max_batch(&self) -> usize {
-        256
-    }
-
-    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
-        Ok(self.model.forward(x, batch))
-    }
-}
-
-/// Backend over the int8 compressed conv engine (`quant::QuantizedConvNet`)
-/// — the `deep-mnist-mpd-int8` serving variant.
-pub struct QuantConvBackend {
-    pub model: crate::quant::QuantizedConvNet,
-}
-
-impl InferBackend for QuantConvBackend {
-    fn feature_dim(&self) -> usize {
-        self.model.in_dim
-    }
-
-    fn out_dim(&self) -> usize {
-        self.model.out_dim
-    }
-
-    fn max_batch(&self) -> usize {
-        256
-    }
-
-    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
-        Ok(self.model.forward(x, batch))
+        out.copy_from_slice(&act);
+        Ok(())
     }
 }
 
@@ -510,7 +434,7 @@ impl InferBackend for AotBackend {
         self.static_batch
     }
 
-    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
         use crate::runtime::engine::Value;
         anyhow::ensure!(batch <= self.static_batch);
         let mut xp = vec![0.0f32; self.static_batch * self.feature_dim];
@@ -519,8 +443,9 @@ impl InferBackend for AotBackend {
         shape.extend_from_slice(&self.x_feat_shape);
         let mut args = self.params.clone();
         args.push(Value::F32(xp, shape));
-        let out = self.exec.run(&args)?;
-        Ok(out[0].as_f32()[..batch * self.out_dim].to_vec())
+        let result = self.exec.run(&args)?;
+        out.copy_from_slice(&result[0].as_f32()[..batch * self.out_dim]);
+        Ok(())
     }
 }
 
@@ -549,13 +474,16 @@ mod tests {
             64
         }
 
-        fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
             if self.fail {
                 anyhow::bail!("injected failure");
             }
             std::thread::sleep(self.delay);
             self.batches.lock().unwrap().push(batch);
-            Ok(x.iter().map(|v| v * 2.0).collect())
+            for (o, v) in out.iter_mut().zip(x) {
+                *o = v * 2.0;
+            }
+            Ok(())
         }
     }
 
@@ -641,6 +569,27 @@ mod tests {
             t.join().unwrap();
         }
         assert!(rejected.load(Ordering::Relaxed) > 0, "expected backpressure rejections");
+        drop(h);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn plan_backend_serves_packed_model_bit_exact() {
+        use crate::compress::compressor::MpdCompressor;
+        use crate::compress::packed_model::PackedMlp;
+        use crate::compress::plan::SparsityPlan;
+
+        let comp = MpdCompressor::new(SparsityPlan::lenet300(10), 51);
+        let (weights, biases) = comp.random_masked_weights(51);
+        let oracle = PackedMlp::build(&comp, &weights, &biases);
+        let backend =
+            PlanBackend::new(PackedMlp::build(&comp, &weights, &biases).into_executor())
+                .with_max_batch(BatcherConfig::default().max_batch)
+                .warmed();
+        let (h, join) = spawn(backend, BatcherConfig::default());
+        let x: Vec<f32> = (0..784).map(|i| (i as f32 * 0.01).sin()).collect();
+        let want = oracle.forward(&x, 1);
+        assert_eq!(h.infer(x).unwrap(), want);
         drop(h);
         join.join().unwrap();
     }

@@ -5,12 +5,16 @@
 //!
 //! ```text
 //!   HTTP client ── http::HttpServer ── Router ── BatcherHandle ── InferBackend
-//!                  (socket front-end)  (A/B split) (bounded queue,  (Packed / Mlp /
+//!                  (socket front-end)  (A/B split) (bounded queue,  (Plan / Csr /
 //!                                                   dynamic batch)   Aot / Const)
 //! ```
 //!
-//! See DESIGN.md §Serving for the batching policy, backpressure semantics,
-//! and metric resolution bounds.
+//! Every compiled model — dense baseline, f32 packed, int8, conv, mixed
+//! precision — serves through one generic [`PlanBackend`]: an
+//! [`crate::exec::Executor`] plus a per-worker scratch arena reused across
+//! batches. See DESIGN.md §Serving for the batching policy, backpressure
+//! semantics, and metric resolution bounds; DESIGN.md §Execution Plan for
+//! the plan/arena contract.
 pub mod batcher;
 pub mod http;
 pub mod loadgen;
@@ -18,8 +22,8 @@ pub mod metrics;
 pub mod router;
 
 pub use batcher::{
-    spawn, AotBackend, BatcherConfig, BatcherHandle, ConstBackend, ConvBackend, CsrBackend,
-    InferBackend, MlpBackend, PackedBackend, QuantBackend, QuantConvBackend, ServeError,
+    spawn, AotBackend, BatcherConfig, BatcherHandle, ConstBackend, CsrBackend, InferBackend,
+    PlanBackend, ServeError,
 };
 pub use http::{FrontendStats, HttpConfig, HttpServer};
 pub use loadgen::{Arrival, HttpClient, LoadgenConfig, LoadgenReport};

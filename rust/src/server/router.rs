@@ -152,8 +152,9 @@ mod tests {
             16
         }
 
-        fn infer(&mut self, _x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
-            Ok(vec![self.value; batch])
+        fn infer_into(&mut self, _x: &[f32], _batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
+            out.fill(self.value);
+            Ok(())
         }
     }
 

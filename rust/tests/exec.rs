@@ -1,0 +1,262 @@
+//! Plan-equivalence suite for the unified execution IR (ISSUE 5 acceptance):
+//! every engine front-end's `forward` must be bit-identical to executing its
+//! compiled [`mpdc::exec::ExecPlan`] directly through
+//! [`mpdc::exec::Executor::run_into`] — across 1/2/8-lane pools and multiple
+//! register-tile shapes, for all four engine variants plus the lowered dense
+//! baseline — and the mixed-precision lowering must stay inside the analytic
+//! i8 error bound of the f32 reference.
+
+use mpdc::compress::compressor::MpdCompressor;
+use mpdc::compress::conv_model::{ConvCompressor, PackedConvNet};
+use mpdc::compress::packed_model::PackedMlp;
+use mpdc::compress::plan::{ConvLayerPlan, ConvModelPlan, LayerPlan, SparsityPlan};
+use mpdc::config::EngineConfig;
+use mpdc::exec::{lower_dense_mlp, lower_mlp, Executor, Op, Precision, ScratchArena};
+use mpdc::mask::prng::Xoshiro256pp;
+use mpdc::nn::mlp::Mlp;
+use mpdc::quant::{Calibration, ConvCalibration, QuantizedConvNet, QuantizedMlp};
+
+fn mlp_fixture() -> (MpdCompressor, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let plan = SparsityPlan::new(vec![
+        LayerPlan::masked("fc1", 48, 36, 6),
+        LayerPlan::masked("fc2", 24, 48, 4),
+        LayerPlan::dense("fc3", 7, 24),
+    ])
+    .unwrap();
+    let comp = MpdCompressor::new(plan, 61);
+    let (weights, biases) = comp.random_masked_weights(61);
+    (comp, weights, biases)
+}
+
+fn conv_fixture() -> (ConvCompressor, mpdc::compress::ConvNetParams) {
+    let plan = ConvModelPlan::new(
+        (1, 8, 8),
+        vec![ConvLayerPlan::dense("c1", 4, 3, 2), ConvLayerPlan::masked("c2", 6, 3, 2, 3)],
+        SparsityPlan::new(vec![LayerPlan::masked("fc1", 16, 24, 4), LayerPlan::dense("fc2", 5, 16)])
+            .unwrap(),
+    )
+    .unwrap();
+    let comp = ConvCompressor::new(plan, 67);
+    let params = comp.random_masked_params(67);
+    (comp, params)
+}
+
+/// The engine-config matrix the equivalence sweeps run under: single-lane,
+/// 2-lane, and 8-lane pools crossed with two register-tile shapes beyond
+/// the default.
+fn config_matrix() -> Vec<EngineConfig> {
+    vec![
+        EngineConfig { pool_threads: 1, tile_batch: 4, tile_rows: 8 },
+        EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 4 },
+        EngineConfig { pool_threads: 8, tile_batch: 1, tile_rows: 1 },
+        EngineConfig { pool_threads: 8, tile_batch: 8, tile_rows: 8 },
+    ]
+}
+
+/// Run `exec` through `run_into` with a reused arena and compare bit-exactly
+/// against `want`.
+fn assert_run_into_exact(exec: &Executor, x: &[f32], batch: usize, want: &[f32], tag: &str) {
+    let mut scratch = ScratchArena::for_plan(exec.plan(), batch);
+    let mut out = vec![0.0f32; batch * exec.out_dim()];
+    // twice through the same arena: reuse must not perturb anything
+    exec.run_into(x, batch, &mut out, &mut scratch);
+    exec.run_into(x, batch, &mut out, &mut scratch);
+    assert_eq!(out.len(), want.len(), "{tag}: output shape");
+    for (i, (a, b)) in out.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: elem {i}: plan {a} != engine {b}");
+    }
+}
+
+#[test]
+fn packed_mlp_forward_equals_plan_execution_across_pools_and_tiles() {
+    let (comp, weights, biases) = mlp_fixture();
+    let mut rng = Xoshiro256pp::seed_from_u64(71);
+    let batch = 5;
+    let x: Vec<f32> = (0..batch * 36).map(|_| rng.next_f32() - 0.5).collect();
+    let want = PackedMlp::build(&comp, &weights, &biases).forward(&x, batch);
+    for cfg in config_matrix() {
+        let engine = PackedMlp::build(&comp, &weights, &biases).with_engine_config(&cfg).unwrap();
+        assert_eq!(engine.forward(&x, batch), want, "wrapper drifted under {cfg:?}");
+        assert_run_into_exact(engine.executor(), &x, batch, &want, &format!("mpd-f32 {cfg:?}"));
+    }
+}
+
+#[test]
+fn quantized_mlp_forward_equals_plan_execution_across_pools_and_tiles() {
+    let (comp, weights, biases) = mlp_fixture();
+    let cal = Calibration::unit_range(3);
+    let mut rng = Xoshiro256pp::seed_from_u64(73);
+    let batch = 4;
+    let x: Vec<f32> = (0..batch * 36).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let want = QuantizedMlp::quantize(&comp, &weights, &biases, &cal).unwrap().forward(&x, batch);
+    for cfg in config_matrix() {
+        let engine = QuantizedMlp::quantize(&comp, &weights, &biases, &cal)
+            .unwrap()
+            .with_engine_config(&cfg)
+            .unwrap();
+        assert_eq!(engine.forward(&x, batch), want, "wrapper drifted under {cfg:?}");
+        assert_run_into_exact(engine.executor(), &x, batch, &want, &format!("mpd-int8 {cfg:?}"));
+    }
+}
+
+#[test]
+fn packed_conv_forward_equals_plan_execution_across_pools_and_tiles() {
+    let (comp, params) = conv_fixture();
+    let mut rng = Xoshiro256pp::seed_from_u64(79);
+    let batch = 3;
+    let x: Vec<f32> = (0..batch * 64).map(|_| rng.next_f32() - 0.5).collect();
+    let want = PackedConvNet::build(&comp, &params).forward(&x, batch);
+    for cfg in config_matrix() {
+        let engine = PackedConvNet::build(&comp, &params).with_engine_config(&cfg).unwrap();
+        assert_eq!(engine.forward(&x, batch), want, "wrapper drifted under {cfg:?}");
+        assert_run_into_exact(engine.executor(), &x, batch, &want, &format!("conv-f32 {cfg:?}"));
+    }
+}
+
+#[test]
+fn quantized_conv_forward_equals_plan_execution_across_pools_and_tiles() {
+    let (comp, params) = conv_fixture();
+    let cal = ConvCalibration::unit_range(2, 2);
+    let mut rng = Xoshiro256pp::seed_from_u64(83);
+    let batch = 2;
+    let x: Vec<f32> = (0..batch * 64).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let want = QuantizedConvNet::quantize(&comp, &params, &cal).unwrap().forward(&x, batch);
+    for cfg in config_matrix() {
+        let engine = QuantizedConvNet::quantize(&comp, &params, &cal)
+            .unwrap()
+            .with_engine_config(&cfg)
+            .unwrap();
+        assert_eq!(engine.forward(&x, batch), want, "wrapper drifted under {cfg:?}");
+        assert_run_into_exact(engine.executor(), &x, batch, &want, &format!("conv-int8 {cfg:?}"));
+    }
+}
+
+#[test]
+fn lowered_dense_mlp_is_bit_identical_to_native_forward() {
+    let mut rng = Xoshiro256pp::seed_from_u64(89);
+    let mut mlp = Mlp::new(&[20, 16, 9], &mut rng);
+    for l in mlp.layers.iter_mut() {
+        for b in l.b.iter_mut() {
+            *b = rng.next_f32() - 0.5;
+        }
+    }
+    let exec = Executor::new(lower_dense_mlp(&mlp));
+    let batch = 6;
+    let x: Vec<f32> = (0..batch * 20).map(|_| rng.next_f32() - 0.5).collect();
+    let want = mlp.forward(&x, batch);
+    assert_eq!(exec.run(&x, batch), want, "dense lowering must be bit-exact");
+    assert_run_into_exact(&exec, &x, batch, &want, "dense-f32");
+}
+
+#[test]
+fn mixed_precision_plan_stays_within_analytic_bound() {
+    let (comp, weights, biases) = mlp_fixture();
+    let mut rng = Xoshiro256pp::seed_from_u64(97);
+    let batch = 4;
+    let x: Vec<f32> = (0..batch * 36).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let f32_ref = PackedMlp::build(&comp, &weights, &biases).forward(&x, batch);
+    let cal = Calibration::unit_range(3);
+    // Every per-layer precision pattern with at least one i8 layer.
+    for pattern in 1u32..8 {
+        let prec: Vec<Precision> = (0..3)
+            .map(|i| if pattern & (1 << i) != 0 { Precision::I8 } else { Precision::F32 })
+            .collect();
+        let exec = comp
+            .build_mixed_engine(&weights, &biases, Some(&cal), &prec, &EngineConfig::default())
+            .unwrap();
+        let (y, bound) = exec.run_with_bound(&x, None, batch);
+        assert_eq!(y, exec.run(&x, batch), "{prec:?}: bound walk changed values");
+        assert_run_into_exact(&exec, &x, batch, &y, &format!("mixed {prec:?}"));
+        for i in 0..y.len() {
+            let err = (y[i] - f32_ref[i]).abs();
+            assert!(
+                err <= bound[i] * 1.001 + 1e-4,
+                "{prec:?}: elem {i}: err {err} > bound {}",
+                bound[i]
+            );
+            assert!(bound[i].is_finite());
+        }
+    }
+    // All-f32 "mixed" plan degenerates to the packed engine bit-for-bit,
+    // with an identically-zero bound.
+    let exec = comp
+        .build_mixed_engine(&weights, &biases, None, &[Precision::F32; 3], &EngineConfig::default())
+        .unwrap();
+    let (y, bound) = exec.run_with_bound(&x, None, batch);
+    assert_eq!(y, f32_ref);
+    assert!(bound.iter().all(|&b| b == 0.0), "f32-only plan must carry a zero bound");
+}
+
+#[test]
+fn plan_accounting_matches_engine_wrappers() {
+    let (comp, weights, biases) = mlp_fixture();
+    let packed = PackedMlp::build(&comp, &weights, &biases);
+    let plan = packed.executor().plan();
+    assert_eq!(plan.macs_per_sample, packed.macs_per_sample);
+    assert_eq!(plan.storage_bytes(), packed.storage_bytes());
+    assert_eq!(plan.n_gathers, packed.n_gathers);
+    assert_eq!((plan.in_dim, plan.out_dim), (packed.in_dim, packed.out_dim));
+    // the dump names every op and reports the totals
+    let dump = plan.describe(32);
+    for p in &plan.ops {
+        assert!(dump.contains(p.op.name()), "describe() missing op {}", p.op.name());
+    }
+    assert!(dump.contains("MACs/sample"));
+    assert!(dump.contains(&plan.macs_per_sample.to_string()));
+
+    // conv plans account im2col'd GEMM work (MACs scale with patch rows)
+    let (ccomp, params) = conv_fixture();
+    let conv = PackedConvNet::build(&ccomp, &params);
+    let cplan = conv.executor().plan();
+    assert_eq!(cplan.macs_per_sample, conv.macs_per_sample);
+    assert!(cplan.ops.iter().any(|p| matches!(p.op, Op::Im2col { .. })));
+    assert!(cplan.ops.iter().any(|p| matches!(p.op, Op::MaxPool { .. })));
+}
+
+#[test]
+fn arena_is_shareable_across_plans_and_batches() {
+    // One arena serving two different plans at varying batch sizes — the
+    // per-worker reuse pattern PlanBackend relies on.
+    let (comp, weights, biases) = mlp_fixture();
+    let f32_exec = PackedMlp::build(&comp, &weights, &biases).into_executor();
+    let i8_exec = QuantizedMlp::quantize(&comp, &weights, &biases, &Calibration::unit_range(3))
+        .unwrap()
+        .into_executor();
+    let mut rng = Xoshiro256pp::seed_from_u64(101);
+    let mut scratch = ScratchArena::new();
+    for batch in [1usize, 7, 2, 5] {
+        let x: Vec<f32> = (0..batch * 36).map(|_| rng.next_f32() - 0.5).collect();
+        for exec in [&f32_exec, &i8_exec] {
+            let want = exec.run(&x, batch);
+            let mut out = vec![0.0f32; batch * exec.out_dim()];
+            exec.run_into(&x, batch, &mut out, &mut scratch);
+            assert_eq!(out, want, "batch {batch}");
+        }
+    }
+    assert!(scratch.capacity_bytes() > 0);
+}
+
+#[test]
+fn mixed_lowering_rejects_missing_or_bad_calibration() {
+    let (comp, weights, biases) = mlp_fixture();
+    // i8 without calibration
+    assert!(lower_mlp(&comp, &weights, &biases, None, &[Precision::I8; 3]).is_err());
+    // wrong precision-vector length
+    assert!(lower_mlp(
+        &comp,
+        &weights,
+        &biases,
+        Some(&Calibration::unit_range(3)),
+        &[Precision::F32; 2]
+    )
+    .is_err());
+    // wrong calibration length
+    assert!(lower_mlp(
+        &comp,
+        &weights,
+        &biases,
+        Some(&Calibration::unit_range(2)),
+        &[Precision::I8; 3]
+    )
+    .is_err());
+}

@@ -15,7 +15,7 @@ use mpdc::experiments::common;
 use mpdc::mask::prng::Xoshiro256pp;
 use mpdc::nn::mlp::Mlp;
 use mpdc::runtime::engine::{Engine, Value};
-use mpdc::server::batcher::{spawn, BatcherConfig, PackedBackend};
+use mpdc::server::batcher::{spawn, BatcherConfig, PlanBackend};
 use mpdc::train::aot_trainer::{evaluate_aot, AotTrainer, TrainConfig};
 use mpdc::train::native_trainer::{evaluate_native, fit_native};
 
@@ -144,7 +144,7 @@ fn batched_serving_is_consistent() {
 
     let packed2 = PackedMlp::build(&comp, &weights, &biases);
     let (h, join) = spawn(
-        PackedBackend { model: packed2 },
+        PlanBackend::new(packed2.into_executor()),
         BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(1), queue_depth: 128 },
     );
     std::thread::scope(|s| {

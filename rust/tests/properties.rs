@@ -276,8 +276,11 @@ fn prop_batcher_serves_every_request_exactly_once() {
         fn max_batch(&self) -> usize {
             7
         }
-        fn infer(&mut self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
-            Ok(x.iter().map(|v| v + 1000.0).collect())
+        fn infer_into(&mut self, x: &[f32], _batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
+            for (o, v) in out.iter_mut().zip(x) {
+                *o = v + 1000.0;
+            }
+            Ok(())
         }
     }
 
@@ -321,7 +324,7 @@ fn prop_batcher_exactly_once_under_shared_persistent_pool() {
     // once with the same logits direct forward produces, and dropping the
     // handle must cleanly join the batcher worker while the shared pool's
     // threads survive for the next case (then join on drop).
-    use mpdc::server::batcher::{spawn, BatcherConfig, PackedBackend};
+    use mpdc::server::batcher::{spawn, BatcherConfig, PlanBackend};
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
 
@@ -342,7 +345,7 @@ fn prop_batcher_exactly_once_under_shared_persistent_pool() {
             queue_depth: 128,
         };
         let model = PackedMlp::build(&comp, &weights, &biases);
-        let backend = PackedBackend::with_pool(model, pool.clone());
+        let backend = PlanBackend::with_pool(model.into_executor(), pool.clone());
         let (h, join) = spawn(backend, cfg);
 
         // distinct inputs per request so cross-routing would be caught

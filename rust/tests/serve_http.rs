@@ -11,7 +11,7 @@ use mpdc::compress::plan::{ConvLayerPlan, ConvModelPlan, LayerPlan, SparsityPlan
 use mpdc::mask::prng::Xoshiro256pp;
 use mpdc::server::http::{HttpConfig, HttpServer};
 use mpdc::server::loadgen::{self, Arrival, HttpClient, LoadgenConfig};
-use mpdc::server::{spawn, BatcherConfig, ConvBackend, InferBackend, PackedBackend, Router};
+use mpdc::server::{spawn, BatcherConfig, InferBackend, PlanBackend, Router};
 use mpdc::util::json::Json;
 use std::sync::Arc;
 use std::time::Duration;
@@ -46,7 +46,7 @@ fn ephemeral(accept_threads: usize) -> HttpConfig {
 fn concurrent_infer_matches_direct_inference_bit_for_bit() {
     let (serve_model, oracle) = packed_pair();
     let mut router = Router::new();
-    let (h, _worker) = spawn(PackedBackend { model: serve_model }, BatcherConfig::default());
+    let (h, _worker) = spawn(PlanBackend::new(serve_model.into_executor()), BatcherConfig::default());
     router.register("mpd", h);
     let server = HttpServer::start(Arc::new(router), ephemeral(4)).unwrap();
     let addr = server.addr();
@@ -107,9 +107,10 @@ impl InferBackend for SlowBackend {
         1
     }
 
-    fn infer(&mut self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
         std::thread::sleep(Duration::from_millis(30));
-        Ok(x[..batch].to_vec())
+        out.copy_from_slice(&x[..batch]);
+        Ok(())
     }
 }
 
@@ -157,7 +158,7 @@ fn queue_saturation_maps_to_429() {
 fn metrics_scrape_is_well_formed_prometheus() {
     let (serve_model, _) = packed_pair();
     let mut router = Router::new();
-    let (h, _worker) = spawn(PackedBackend { model: serve_model }, BatcherConfig::default());
+    let (h, _worker) = spawn(PlanBackend::new(serve_model.into_executor()), BatcherConfig::default());
     router.register("mpd", h);
     let server = HttpServer::start(Arc::new(router), ephemeral(4)).unwrap();
 
@@ -208,7 +209,7 @@ fn metrics_scrape_is_well_formed_prometheus() {
 fn discovery_health_and_error_statuses() {
     let (serve_model, _) = packed_pair();
     let mut router = Router::new();
-    let (h, _worker) = spawn(PackedBackend { model: serve_model }, BatcherConfig::default());
+    let (h, _worker) = spawn(PlanBackend::new(serve_model.into_executor()), BatcherConfig::default());
     router.register("mpd", h);
     let mut cfg = ephemeral(4);
     cfg.max_body_bytes = 512; // provoke 413 below
@@ -268,7 +269,7 @@ fn conv_pair() -> (PackedConvNet, PackedConvNet) {
 fn conv_variant_roundtrip_and_404_when_disabled() {
     let (serve_model, oracle) = conv_pair();
     let mut router = Router::new();
-    let (h, _worker) = spawn(ConvBackend { model: serve_model }, BatcherConfig::default());
+    let (h, _worker) = spawn(PlanBackend::new(serve_model.into_executor()), BatcherConfig::default());
     router.register("deep-mnist-mpd", h);
     let server = HttpServer::start(Arc::new(router), ephemeral(4)).unwrap();
     let mut client = HttpClient::new(server.addr());
@@ -307,7 +308,7 @@ fn conv_variant_roundtrip_and_404_when_disabled() {
     // variant — the route must 404 while the FC variant keeps serving.
     let (mlp_model, _) = packed_pair();
     let mut router = Router::new();
-    let (h, _worker) = spawn(PackedBackend { model: mlp_model }, BatcherConfig::default());
+    let (h, _worker) = spawn(PlanBackend::new(mlp_model.into_executor()), BatcherConfig::default());
     router.register("mpd", h);
     let server = HttpServer::start(Arc::new(router), ephemeral(2)).unwrap();
     let mut client = HttpClient::new(server.addr());
@@ -325,7 +326,7 @@ fn conv_variant_roundtrip_and_404_when_disabled() {
 fn loadgen_closed_and_open_loop_roundtrip() {
     let (serve_model, _) = packed_pair();
     let mut router = Router::new();
-    let (h, _worker) = spawn(PackedBackend { model: serve_model }, BatcherConfig::default());
+    let (h, _worker) = spawn(PlanBackend::new(serve_model.into_executor()), BatcherConfig::default());
     router.register("mpd", h);
     let server = HttpServer::start(Arc::new(router), ephemeral(6)).unwrap();
 
