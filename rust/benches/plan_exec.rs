@@ -1,9 +1,11 @@
-//! Plan-executor smoke bench (ISSUE 5): per-call latency of the four model
-//! variants under the unified interpreter, comparing the allocating legacy
-//! wrapper path (`forward`: fresh arena + fresh output per call) against
-//! the serving hot path (`run_into` with a reused [`ScratchArena`]).
-//! Emits the machine-readable `results/BENCH_5.json` that CI uploads as a
-//! workflow artifact, so the perf trajectory is tracked per commit.
+//! Plan-executor smoke bench (ISSUE 5, extended by ISSUE 6): per-call
+//! latency of the five model variants under the unified interpreter, now as
+//! a kernel-dispatch matrix — the allocating legacy wrapper path plus the
+//! serving hot path (`run_into` with a reused [`ScratchArena`]) under both
+//! the forced-scalar oracle and the detected-SIMD kernels. Emits the
+//! machine-readable `results/BENCH_6.json` (repo root, CWD-independent)
+//! with per-variant scalar-vs-SIMD deltas and the host CPU feature set,
+//! which CI validates and uploads as a workflow artifact.
 //!
 //! ```bash
 //! cargo bench --bench plan_exec                 # quick (CI) preset
@@ -16,10 +18,11 @@ use mpdc::compress::packed_model::PackedMlp;
 use mpdc::compress::plan::SparsityPlan;
 use mpdc::compress::{ConvCompressor, ConvModelPlan};
 use mpdc::exec::{lower_dense_mlp, Executor, ScratchArena};
+use mpdc::linalg::kernel::{cpu_features, KernelChoice};
 use mpdc::mask::prng::Xoshiro256pp;
 use mpdc::nn::mlp::Mlp;
 use mpdc::quant::{Calibration, ConvCalibration, QuantizedConvNet, QuantizedMlp};
-use mpdc::util::benchkit::{black_box, Table};
+use mpdc::util::benchkit::{black_box, results_dir, Table};
 use mpdc::util::json::Json;
 use std::time::Instant;
 
@@ -60,6 +63,28 @@ fn measure(variant: &str, mode: &str, iters: usize, mut call: impl FnMut()) -> C
     }
 }
 
+/// Run the serving hot path (`run_into`, warmed arena) for every variant
+/// under one kernel choice; returns one cell per variant labelled `mode`.
+fn measure_dispatch(
+    execs: Vec<(&'static str, Executor)>,
+    kernel: KernelChoice,
+    mode: &str,
+    iters: usize,
+) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for (variant, exec) in execs {
+        let exec = exec.with_kernel(kernel);
+        let x: Vec<f32> = (0..exec.in_dim()).map(|i| (i as f32 * 0.013).sin()).collect();
+        let mut scratch = ScratchArena::for_plan(exec.plan(), 1);
+        let mut out = vec![0.0f32; exec.out_dim()];
+        cells.push(measure(variant, mode, iters, || {
+            exec.run_into(&x, 1, &mut out, &mut scratch);
+            black_box(&out);
+        }));
+    }
+    cells
+}
+
 fn main() {
     let iters: usize = std::env::var("MPDC_PLAN_ITERS")
         .ok()
@@ -79,43 +104,69 @@ fn main() {
     let conv_comp = ConvCompressor::new(ConvModelPlan::deep_mnist_lite(8), 42);
     let conv_params = conv_comp.random_masked_params(7);
 
-    let execs: Vec<(&'static str, Executor)> = vec![
-        ("dense-f32", Executor::new(lower_dense_mlp(&mlp))),
-        ("mpd-f32", PackedMlp::build(&comp, &weights, &biases).into_executor()),
-        (
-            "mpd-int8",
-            QuantizedMlp::quantize(&comp, &weights, &biases, &Calibration::unit_range(3))
-                .expect("quantize")
-                .into_executor(),
-        ),
-        ("conv", PackedConvNet::build(&conv_comp, &conv_params).into_executor()),
-        (
-            "conv-int8",
-            QuantizedConvNet::quantize(&conv_comp, &conv_params, &ConvCalibration::unit_range(2, 2))
+    let build_execs = || -> Vec<(&'static str, Executor)> {
+        vec![
+            ("dense-f32", Executor::new(lower_dense_mlp(&mlp))),
+            ("mpd-f32", PackedMlp::build(&comp, &weights, &biases).into_executor()),
+            (
+                "mpd-int8",
+                QuantizedMlp::quantize(&comp, &weights, &biases, &Calibration::unit_range(3))
+                    .expect("quantize")
+                    .into_executor(),
+            ),
+            ("conv", PackedConvNet::build(&conv_comp, &conv_params).into_executor()),
+            (
+                "conv-int8",
+                QuantizedConvNet::quantize(
+                    &conv_comp,
+                    &conv_params,
+                    &ConvCalibration::unit_range(2, 2),
+                )
                 .expect("conv quantize")
                 .into_executor(),
-        ),
-    ];
+            ),
+        ]
+    };
 
-    println!("plan_exec bench: {iters} single-sample calls per cell\n");
-    let mut table = Table::new(&["variant", "mode", "p50 µs", "p99 µs", "req/s"]);
+    let detected = KernelChoice::detected();
+    println!(
+        "plan_exec bench: {iters} single-sample calls per cell · dispatch {} · cpu [{}]\n",
+        detected.describe(),
+        cpu_features().join(",")
+    );
+
+    // legacy path: the allocating wrapper (fresh arena + output per call),
+    // auto dispatch — continuity with the BENCH_5 series.
     let mut cells: Vec<Cell> = Vec::new();
-    for (variant, exec) in &execs {
+    for (variant, exec) in build_execs() {
         let x: Vec<f32> = (0..exec.in_dim()).map(|i| (i as f32 * 0.013).sin()).collect();
-
-        // legacy path: the allocating wrapper (fresh arena + output per call)
         cells.push(measure(variant, "legacy", iters, || {
             black_box(exec.run(&x, 1));
         }));
-
-        // plan path: run_into with a per-worker arena (serving hot path)
-        let mut scratch = ScratchArena::for_plan(exec.plan(), 1);
-        let mut out = vec![0.0f32; exec.out_dim()];
-        cells.push(measure(variant, "plan", iters, || {
-            exec.run_into(&x, 1, &mut out, &mut scratch);
-            black_box(&out);
-        }));
     }
+
+    // serving hot path under both kernel dispatches: the ISSUE 6 matrix.
+    let scalar_cells = measure_dispatch(build_execs(), KernelChoice::scalar(), "scalar", iters);
+    let simd_cells = measure_dispatch(build_execs(), detected, "simd", iters);
+
+    // per-variant scalar-vs-SIMD deltas on the hot path
+    let deltas: Vec<Json> = scalar_cells
+        .iter()
+        .zip(&simd_cells)
+        .map(|(s, v)| {
+            assert_eq!(s.variant, v.variant);
+            Json::obj(vec![
+                ("variant", Json::str(s.variant.clone())),
+                ("scalar_p50_us", Json::num(s.p50_us)),
+                ("simd_p50_us", Json::num(v.p50_us)),
+                ("speedup_vs_scalar", Json::num(s.p50_us / v.p50_us.max(1e-9))),
+            ])
+        })
+        .collect();
+
+    cells.extend(scalar_cells);
+    cells.extend(simd_cells);
+    let mut table = Table::new(&["variant", "mode", "p50 µs", "p99 µs", "req/s"]);
     for c in &cells {
         table.row(&[
             c.variant.clone(),
@@ -127,7 +178,7 @@ fn main() {
     }
     println!("{}", table.render());
 
-    // Machine-readable artifact: results/BENCH_5.json
+    // Machine-readable artifact: <repo root>/results/BENCH_6.json
     let rows: Vec<Json> = cells
         .iter()
         .map(|c| {
@@ -140,13 +191,17 @@ fn main() {
             ])
         })
         .collect();
+    let features: Vec<Json> = cpu_features().iter().map(|f| Json::str(*f)).collect();
     let doc = Json::obj(vec![
         ("bench", Json::str("plan_exec")),
         ("batch", Json::num(1.0)),
         ("iters", Json::num(iters as f64)),
+        ("dispatch", Json::str(detected.describe())),
+        ("cpu_features", Json::Arr(features)),
         ("results", Json::Arr(rows)),
+        ("deltas", Json::Arr(deltas)),
     ]);
-    std::fs::create_dir_all("results").expect("mkdir results");
-    std::fs::write("results/BENCH_5.json", doc.to_string()).expect("write BENCH_5.json");
-    println!("wrote results/BENCH_5.json");
+    let path = results_dir().join("BENCH_6.json");
+    std::fs::write(&path, doc.to_string()).expect("write BENCH_6.json");
+    println!("wrote {}", path.display());
 }

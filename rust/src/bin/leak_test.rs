@@ -72,16 +72,40 @@ fn run_into_zero_alloc_check() -> anyhow::Result<()> {
     let (weights, biases) = comp.random_masked_weights(7);
     let conv_comp = ConvCompressor::new(ConvModelPlan::deep_mnist_lite(8), 7);
     let cparams = conv_comp.random_masked_params(7);
+    // The kernel choice is resolved once at executor construction (ISSUE 6);
+    // both the forced-scalar and the detected-SIMD dispatch must stay
+    // zero-alloc on the warmed path — no per-call feature probes or
+    // environment reads.
+    use mpdc::linalg::KernelChoice;
     let execs = [
         (
             "mpd-f32",
             mpdc::compress::PackedMlp::build(&comp, &weights, &biases).into_executor(),
         ),
         (
+            "mpd-f32-scalar",
+            mpdc::compress::PackedMlp::build(&comp, &weights, &biases)
+                .into_executor()
+                .with_kernel(KernelChoice::scalar()),
+        ),
+        (
+            "mpd-f32-simd",
+            mpdc::compress::PackedMlp::build(&comp, &weights, &biases)
+                .into_executor()
+                .with_kernel(KernelChoice::detected()),
+        ),
+        (
             "mpd-int8",
             QuantizedMlp::quantize(&comp, &weights, &biases, &Calibration::unit_range(3))
                 .map_err(anyhow::Error::msg)?
                 .into_executor(),
+        ),
+        (
+            "mpd-int8-simd",
+            QuantizedMlp::quantize(&comp, &weights, &biases, &Calibration::unit_range(3))
+                .map_err(anyhow::Error::msg)?
+                .into_executor()
+                .with_kernel(KernelChoice::detected()),
         ),
         ("conv-f32", PackedConvNet::build(&conv_comp, &cparams).into_executor()),
     ];

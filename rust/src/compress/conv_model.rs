@@ -475,7 +475,12 @@ mod tests {
         let pooled = PackedConvNet::build(&comp, &params).with_threads(4);
         assert_eq!(pooled.forward(&x, batch), want);
         let tiled = PackedConvNet::build(&comp, &params)
-            .with_engine_config(&EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 2 })
+            .with_engine_config(&EngineConfig {
+                pool_threads: 2,
+                tile_batch: 2,
+                tile_rows: 2,
+                ..Default::default()
+            })
             .unwrap();
         assert_eq!(tiled.forward(&x, batch), want);
     }

@@ -225,7 +225,7 @@ mod tests {
         let plan = SparsityPlan::lenet300(10);
         let (comp, _, weights, biases) = build_trained(&plan, 23);
         let base = PackedMlp::build(&comp, &weights, &biases);
-        let cfg = EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 4 };
+        let cfg = EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 4, ..Default::default() };
         let tuned = PackedMlp::build(&comp, &weights, &biases).with_engine_config(&cfg).unwrap();
         let bad = EngineConfig { tile_rows: 5, ..EngineConfig::default() };
         assert!(PackedMlp::build(&comp, &weights, &biases).with_engine_config(&bad).is_err());

@@ -116,6 +116,12 @@ pub struct EngineConfig {
     pub tile_batch: usize,
     /// Register-tile output rows (1/2/4/8).
     pub tile_rows: usize,
+    /// SIMD kernel dispatch: `true` (default) resolves the best detected ISA
+    /// at engine build time (still subject to the `MPDC_FORCE_SCALAR` env
+    /// override); `false` pins the scalar oracle kernels. i8 output is
+    /// bit-identical either way; f32 differs by the pinned-reorder bound
+    /// (see DESIGN.md §SIMD).
+    pub simd: bool,
 }
 
 impl Default for EngineConfig {
@@ -124,6 +130,7 @@ impl Default for EngineConfig {
             pool_threads: 0,
             tile_batch: crate::linalg::TileShape::DEFAULT.batch,
             tile_rows: crate::linalg::TileShape::DEFAULT.rows,
+            simd: true,
         }
     }
 }
@@ -378,6 +385,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_int("engine.tile_rows") {
             cfg.engine.tile_rows = v as usize;
         }
+        if let Some(v) = doc.get_bool("engine.simd") {
+            cfg.engine.simd = v;
+        }
         if let Some(v) = doc.get_str("server.host") {
             cfg.server.host = v.to_string();
         }
@@ -520,13 +530,18 @@ out = "results/custom"
 pool_threads = 4
 tile_batch = 2
 tile_rows = 8
+simd = false
 "#;
         let cfg = ExperimentConfig::from_toml(text).unwrap();
-        assert_eq!(cfg.engine, EngineConfig { pool_threads: 4, tile_batch: 2, tile_rows: 8 });
+        assert_eq!(
+            cfg.engine,
+            EngineConfig { pool_threads: 4, tile_batch: 2, tile_rows: 8, simd: false }
+        );
         assert_eq!(cfg.engine.tile(), crate::linalg::TileShape { batch: 2, rows: 8 });
-        // defaults when the table is absent
+        // defaults when the table is absent (simd defaults on)
         let cfg = ExperimentConfig::from_toml("").unwrap();
         assert_eq!(cfg.engine, EngineConfig::default());
+        assert!(cfg.engine.simd);
         // bad tile shapes are rejected
         assert!(ExperimentConfig::from_toml("[engine]\ntile_batch = 3\n").is_err());
         let mut bad = ExperimentConfig::default();

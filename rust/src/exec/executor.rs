@@ -15,6 +15,17 @@
 //! engines it replaced (pinned by `tests/exec.rs` and the conv golden
 //! fixture) across tile shapes and thread counts.
 //!
+//! ## Kernel dispatch (ISSUE 6)
+//!
+//! Each executor resolves a [`KernelChoice`] **once at construction**
+//! (runtime feature detection + the `MPDC_FORCE_SCALAR` override; see
+//! `linalg/kernel.rs`) and dispatches every op through it — the hot path
+//! never re-detects. The i8 GEMM and the gather are bit-identical across
+//! ISAs; the f32 GEMM under a SIMD ISA differs from the scalar oracle only
+//! by the pinned-reorder bound, which [`Self::run_with_bound`] accounts for
+//! (the `DenseGemm` baseline op intentionally stays scalar — it exists to
+//! measure the uncompressed model, not to win benchmarks).
+//!
 //! ## Hot path
 //!
 //! [`Executor::run_into`] writes the caller's output slice and touches only
@@ -29,21 +40,24 @@ use crate::exec::plan::{ExecPlan, Op, PlannedOp, PoolChoice};
 use crate::linalg::blockdiag_mm::TileShape;
 use crate::linalg::blockdiag_mm_i8::quantize_slice_into;
 use crate::linalg::gemm::gemm_a_bt;
-use crate::linalg::im2col::{gather_cols, im2col, maxpool_nchw, rows_to_nchw};
+use crate::linalg::im2col::{gather_cols, gather_cols_isa, im2col, maxpool_nchw, rows_to_nchw};
+use crate::linalg::kernel::{self, KernelChoice};
 use crate::linalg::pool::ThreadPool;
 use std::sync::Arc;
 
-/// A runnable compiled model: plan + pool + tile shape.
+/// A runnable compiled model: plan + pool + tile shape + kernel ISA.
 pub struct Executor {
     plan: ExecPlan,
     pool: PoolChoice,
     tile: TileShape,
+    kernel: KernelChoice,
 }
 
 impl Executor {
-    /// Wrap a plan with the default policy (single-threaded, default tile).
+    /// Wrap a plan with the default policy (single-threaded, default tile,
+    /// auto-detected SIMD kernels — scalar under `MPDC_FORCE_SCALAR`).
     pub fn new(plan: ExecPlan) -> Self {
-        Self { plan, pool: PoolChoice::None, tile: TileShape::DEFAULT }
+        Self { plan, pool: PoolChoice::None, tile: TileShape::DEFAULT, kernel: KernelChoice::auto() }
     }
 
     pub fn plan(&self) -> &ExecPlan {
@@ -65,6 +79,26 @@ impl Executor {
 
     pub fn tile(&self) -> TileShape {
         self.tile
+    }
+
+    /// The kernel ISA pair this executor dispatches with (resolved once, at
+    /// construction / configuration time).
+    pub fn kernel(&self) -> KernelChoice {
+        self.kernel
+    }
+
+    /// Override the kernel choice — tests use this to pin the scalar oracle
+    /// (`KernelChoice::scalar()`) or force SIMD (`KernelChoice::detected()`)
+    /// independent of the `MPDC_FORCE_SCALAR` environment.
+    pub fn with_kernel(mut self, kernel: KernelChoice) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Plan description with kernel-choice accounting (the `mpdc plan`
+    /// output): per-op kernel column + a dispatch summary line.
+    pub fn describe(&self, batch: usize) -> String {
+        self.plan.describe_with_kernel(batch, Some(&self.kernel))
     }
 
     /// Execute on a dedicated persistent pool of `nthreads` lanes
@@ -96,10 +130,12 @@ impl Executor {
     }
 
     /// Apply an [`EngineConfig`]: pool sizing (0 = global pool) + tile
-    /// shape — the one implementation every engine wrapper delegates to.
+    /// shape + kernel dispatch (`simd = false` pins the scalar oracle) —
+    /// the one implementation every engine wrapper delegates to.
     pub fn with_engine_config(mut self, cfg: &EngineConfig) -> Result<Self, String> {
         cfg.validate()?;
         self.tile = cfg.tile();
+        self.kernel = if cfg.simd { KernelChoice::auto() } else { KernelChoice::scalar() };
         Ok(match cfg.pool_threads {
             0 => self.with_global_pool(),
             n => self.with_threads(n),
@@ -149,16 +185,16 @@ impl Executor {
         debug_assert_eq!(src.len(), batch * p.in_elems(), "{}: src shape", p.op.name());
         match &p.op {
             Op::Gather { idx } => {
-                gather_cols(src, nrows, idx.len(), idx, dst);
+                gather_cols_isa(src, nrows, idx.len(), idx, dst, self.kernel.f32_isa());
             }
             Op::BlockGemmF32 { bd, bias, relu } => {
                 dst.resize(nrows * bd.layout.rows, 0.0);
-                bd.forward_fused(src, dst, nrows, bias, *relu, pool, self.tile);
+                bd.forward_fused_isa(src, dst, nrows, bias, *relu, pool, self.tile, self.kernel.f32_isa());
             }
             Op::BlockGemmI8 { qbd, bias, act_scale, relu } => {
                 quantize_slice_into(src, *act_scale, qbuf);
                 dst.resize(nrows * qbd.layout.rows, 0.0);
-                qbd.forward_fused(qbuf, dst, nrows, *act_scale, bias, *relu, pool, self.tile);
+                qbd.forward_fused_isa(qbuf, dst, nrows, *act_scale, bias, *relu, pool, self.tile, self.kernel.i8_isa());
             }
             Op::DenseGemm { w, bias, out_dim, in_dim, relu } => {
                 dst.resize(nrows * out_dim, 0.0);
@@ -202,6 +238,14 @@ impl Executor {
     /// (`|max aᵢ − max bᵢ| ≤ maxᵢ|aᵢ − bᵢ|`). The value stream is computed
     /// by the same [`Self::run_into`] op applications, so it is bit-identical
     /// to a plain forward. Scalar bound path — diagnostics, not serving.
+    ///
+    /// When the executor dispatches f32 SIMD kernels, the reference point is
+    /// the **scalar-canonical** f32 plan, so each `BlockGemmF32` row
+    /// additionally accrues the pinned-reorder term (see
+    /// `kernel::f32_reorder_bound`): `γ(n)·Σ_p |w_rp|·(|x_p| + e_p)` with
+    /// `γ(n) = 2(n+4)·2⁻²⁴` over the block inner dimension `n`. Under
+    /// scalar dispatch (`simd = false` / `MPDC_FORCE_SCALAR`) that term is
+    /// zero and an all-f32 plan keeps its identically-zero bound.
     pub fn run_with_bound(
         &self,
         x: &[f32],
@@ -279,10 +323,16 @@ impl Executor {
                 maxpool_nchw(err, batch, *c, *h, *w, *k, *stride, err_dst);
                 true
             }
-            // f32 GEMMs: e_out[r] = Σ_p |w_rp|·e_p (ReLU is 1-Lipschitz) —
-            // exactly zero when the incoming bound is zero.
+            // f32 GEMMs: e_out[r] = Σ_p |w_rp|·e_p (ReLU is 1-Lipschitz).
+            // Under SIMD dispatch the row also accrues the pinned-reorder
+            // term γ(n)·Σ_p |w_rp|·(|x_p| + e_p) versus the scalar-canonical
+            // reference, so the bound materializes even from an implicit
+            // zero; under scalar dispatch a zero bound stays implicit.
             Op::BlockGemmF32 { bd, .. } => {
-                let Some(err) = err else { return false };
+                let gamma_on = self.kernel.f32_isa().is_simd();
+                if err.is_none() && !gamma_on {
+                    return false;
+                }
                 let (rows, cols) = (bd.layout.rows, bd.layout.cols);
                 err_dst.clear();
                 err_dst.resize(nrows * rows, 0.0);
@@ -291,11 +341,14 @@ impl Executor {
                         let rs = bd.layout.row_spans[b];
                         let cs = bd.layout.col_spans[b];
                         let wb = bd.block(b);
+                        let gamma = if gamma_on { kernel::f32_reorder_bound(cs.len) as f64 } else { 0.0 };
                         for br in 0..rs.len {
                             let mut bound = 0.0f64;
                             for pp in 0..cs.len {
-                                bound += (wb[br * cs.len + pp].abs() as f64)
-                                    * err[r * cols + cs.start + pp] as f64;
+                                let c = r * cols + cs.start + pp;
+                                let aw = wb[br * cs.len + pp].abs() as f64;
+                                let e = err.map_or(0.0, |e| e[c] as f64);
+                                bound += aw * (e + gamma * (act[c].abs() as f64 + e));
                             }
                             err_dst[r * rows + rs.start + br] = bound as f32;
                         }

@@ -166,18 +166,35 @@ impl ExecPlan {
     /// Human-readable plan dump: one row per op with per-sample shapes,
     /// buffer bytes at `batch`, MACs, and storage — the `mpdc plan` payload.
     pub fn describe(&self, batch: usize) -> String {
+        self.describe_with_kernel(batch, None)
+    }
+
+    /// [`Self::describe`] plus kernel-choice accounting: with a
+    /// [`KernelChoice`], each op row gains a `kernel` column naming the ISA
+    /// it dispatches to (`-` for structural ops that only move bytes), and
+    /// the summary line reports the resolved dispatch. `Executor::describe`
+    /// calls this with its construction-time choice.
+    pub fn describe_with_kernel(
+        &self,
+        batch: usize,
+        kernel: Option<&crate::linalg::kernel::KernelChoice>,
+    ) -> String {
         let buf_hdr = format!("buf KB @b{batch}");
-        let mut t = crate::util::benchkit::Table::new(&[
+        let mut headers = vec![
             "#",
             "op",
             "in/sample",
             "out/sample",
-            &buf_hdr,
+            buf_hdr.as_str(),
             "MACs/sample",
             "storage B",
-        ]);
+        ];
+        if kernel.is_some() {
+            headers.push("kernel");
+        }
+        let mut t = crate::util::benchkit::Table::new(&headers);
         for (i, p) in self.ops.iter().enumerate() {
-            t.row(&[
+            let mut cells = vec![
                 i.to_string(),
                 p.op.name().to_string(),
                 format!("{}x{}", p.in_rows, p.in_cols),
@@ -185,12 +202,30 @@ impl ExecPlan {
                 format!("{:.1}", (p.out_elems() * batch * 4) as f64 / 1024.0),
                 p.macs_per_sample().to_string(),
                 p.storage_bytes().to_string(),
-            ]);
+            ];
+            if let Some(k) = kernel {
+                cells.push(
+                    match &p.op {
+                        Op::BlockGemmF32 { .. } => k.f32_isa().name(),
+                        Op::BlockGemmI8 { .. } => k.i8_isa().name(),
+                        Op::Gather { .. } => k.f32_isa().name(),
+                        // the uncompressed baseline intentionally stays scalar
+                        Op::DenseGemm { .. } => "scalar",
+                        _ => "-",
+                    }
+                    .to_string(),
+                );
+            }
+            t.row(&cells);
         }
         let arena_bytes =
             2 * self.max_f32_elems_per_sample() * batch * 4 + self.max_i8_elems_per_sample() * batch;
+        let kernel_note = match kernel {
+            Some(k) => format!(" | dispatch {}", k.describe()),
+            None => String::new(),
+        };
         format!(
-            "{}\nplan: {} ops ({} gathers) | in {} → out {} | {} MACs/sample | {} storage bytes | arena ≈{:.1} KB @batch {batch}",
+            "{}\nplan: {} ops ({} gathers) | in {} → out {} | {} MACs/sample | {} storage bytes | arena ≈{:.1} KB @batch {batch}{kernel_note}",
             t.render(),
             self.ops.len(),
             self.n_gathers,
@@ -237,9 +272,15 @@ impl PlanBuilder {
         self.macs += p.macs_per_sample();
     }
 
-    /// Row-wise feature gather (`idx.len()` must equal the current width).
+    /// Row-wise feature gather (`idx.len()` must equal the current width,
+    /// and every index must be in range — the SIMD gather kernel relies on
+    /// build-time validation rather than per-lane bounds checks).
     pub fn gather(&mut self, idx: Vec<u32>) {
         assert_eq!(idx.len(), self.cols, "gather width mismatch");
+        assert!(
+            idx.iter().all(|&s| (s as usize) < self.cols),
+            "gather index out of range"
+        );
         let w = idx.len();
         self.n_gathers += 1;
         let rows = self.rows;

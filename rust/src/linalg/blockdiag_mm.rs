@@ -268,6 +268,81 @@ impl BlockDiagMatrix {
         self.run_blocks(x, y, batch, bias, Epilogue::Fused { relu }, tile, pool.map(|p| (p, usize::MAX)));
     }
 
+    /// [`Self::forward_fused`] with an explicit kernel ISA — the entry the
+    /// executor dispatches through. `Isa::Scalar` is exactly the tiled
+    /// scalar oracle above. SIMD ISAs switch to one vectorized dot product
+    /// per output element (the vector register *is* the tile, so `tile` is
+    /// ignored): the accumulation order then depends only on the ISA and the
+    /// block inner dimension — never on tile shape, thread count, or batch —
+    /// and differs from the oracle by at most the reassociation bound
+    /// `kernel::f32_reorder_bound`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_fused_isa(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        batch: usize,
+        bias: &[f32],
+        relu: bool,
+        pool: Option<&ThreadPool>,
+        tile: TileShape,
+        isa: crate::linalg::kernel::Isa,
+    ) {
+        if !isa.is_simd() {
+            return self.forward_fused(x, y, batch, bias, relu, pool, tile);
+        }
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        assert_eq!(x.len(), batch * cols, "X shape mismatch");
+        assert_eq!(y.len(), batch * rows, "Y shape mismatch");
+        assert_eq!(bias.len(), rows, "bias must be in block-row space");
+        let nblocks = self.nblocks();
+        let yp = OutPtr { ptr: y.as_mut_ptr(), len: y.len() };
+        let parallel = pool.map(|p| p.lanes() > 1 && nblocks > 1).unwrap_or(false);
+        if !parallel {
+            for b in 0..nblocks {
+                self.block_forward_simd(b, x, yp, batch, bias, relu, isa);
+            }
+            return;
+        }
+        // SAFETY of sharing yp: identical to run_blocks — blocks write
+        // disjoint row spans and the pool joins before `y`'s borrow returns.
+        pool.unwrap().run(nblocks, |b| {
+            self.block_forward_simd(b, x, yp, batch, bias, relu, isa);
+        });
+    }
+
+    /// SIMD per-block kernel: one vectorized dot per output element with the
+    /// fused bias + ReLU epilogue (same scalar epilogue as the tiled path).
+    fn block_forward_simd(
+        &self,
+        b: usize,
+        x: &[f32],
+        yp: OutPtr,
+        batch: usize,
+        bias: &[f32],
+        relu: bool,
+        isa: crate::linalg::kernel::Isa,
+    ) {
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        let rs = self.layout.row_spans[b];
+        let cs = self.layout.col_spans[b];
+        let (out_b, in_b) = (rs.len, cs.len);
+        let wb = self.block(b);
+        for bi in 0..batch {
+            let xrow = &x[bi * cols + cs.start..bi * cols + cs.end()];
+            // SAFETY: rows of block b only — disjoint from all other tasks.
+            let yrow = unsafe { yp.seg_mut(bi * rows + rs.start, out_b) };
+            for (r, yv) in yrow.iter_mut().enumerate() {
+                let wrow = &wb[r * in_b..(r + 1) * in_b];
+                let mut v = crate::linalg::kernel::dot_f32(isa, xrow, wrow) + bias[rs.start + r];
+                if relu && v < 0.0 {
+                    v = 0.0;
+                }
+                *yv = v;
+            }
+        }
+    }
+
     /// Shared driver: run every block through the kernel, sequentially or on
     /// a pool.
     fn run_blocks(

@@ -261,6 +261,100 @@ impl QuantizedBlockDiagMatrix {
         });
     }
 
+    /// [`Self::forward_fused`] with an explicit kernel ISA — the entry the
+    /// executor dispatches through. Unlike the f32 engine, the choice never
+    /// changes the output bits: i8×i8→i32 accumulation is order-free (and
+    /// overflow-free under `MAX_IN_B`) and the SIMD dequant epilogue
+    /// reproduces [`dequant`] exactly, so SIMD vs scalar — and any tile or
+    /// thread count — are bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_fused_isa(
+        &self,
+        xq: &[i8],
+        y: &mut [f32],
+        batch: usize,
+        act_scale: f32,
+        bias: &[f32],
+        relu: bool,
+        pool: Option<&ThreadPool>,
+        tile: TileShape,
+        isa: crate::linalg::kernel::Isa,
+    ) {
+        if !isa.is_simd() {
+            return self.forward_fused(xq, y, batch, act_scale, bias, relu, pool, tile);
+        }
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        assert_eq!(xq.len(), batch * cols, "Xq shape mismatch");
+        assert_eq!(y.len(), batch * rows, "Y shape mismatch");
+        assert_eq!(bias.len(), rows, "bias must be in block-row space");
+        let ep = QEpilogue { act_scale, relu };
+        let nblocks = self.nblocks();
+        let yp = QOutPtr { ptr: y.as_mut_ptr(), len: y.len() };
+        let parallel = pool.map(|p| p.lanes() > 1 && nblocks > 1).unwrap_or(false);
+        if !parallel {
+            for b in 0..nblocks {
+                self.block_forward_simd(b, xq, yp, batch, bias, ep, isa);
+            }
+            return;
+        }
+        // SAFETY of sharing yp: same argument as forward_fused — disjoint
+        // row spans per block, pool joins before the borrow of `y` resumes.
+        pool.unwrap().run(nblocks, |b| {
+            self.block_forward_simd(b, xq, yp, batch, bias, ep, isa);
+        });
+    }
+
+    /// SIMD per-block kernel: one vectorized i8 dot per output element, with
+    /// the dequant epilogue applied four rows at a time.
+    fn block_forward_simd(
+        &self,
+        b: usize,
+        xq: &[i8],
+        yp: QOutPtr,
+        batch: usize,
+        bias: &[f32],
+        ep: QEpilogue,
+        isa: crate::linalg::kernel::Isa,
+    ) {
+        use crate::linalg::kernel;
+        let rs = self.layout.row_spans[b];
+        let cs = self.layout.col_spans[b];
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        let qb = self.block(b);
+        let (out_b, in_b) = (rs.len, cs.len);
+        for bi in 0..batch {
+            let xrow = &xq[bi * cols + cs.start..bi * cols + cs.end()];
+            // SAFETY: rows of block b only — disjoint from all other tasks.
+            let yrow = unsafe { yp.seg_mut(bi * rows + rs.start, out_b) };
+            let mut r = 0;
+            while r + 4 <= out_b {
+                let accs = [
+                    kernel::dot_i8(isa, xrow, &qb[r * in_b..(r + 1) * in_b]),
+                    kernel::dot_i8(isa, xrow, &qb[(r + 1) * in_b..(r + 2) * in_b]),
+                    kernel::dot_i8(isa, xrow, &qb[(r + 2) * in_b..(r + 3) * in_b]),
+                    kernel::dot_i8(isa, xrow, &qb[(r + 3) * in_b..(r + 4) * in_b]),
+                ];
+                let gr = rs.start + r;
+                kernel::dequant4(
+                    isa,
+                    accs,
+                    ep.act_scale,
+                    &self.row_scales[gr..gr + 4],
+                    &bias[gr..gr + 4],
+                    ep.relu,
+                    &mut yrow[r..r + 4],
+                );
+                r += 4;
+            }
+            while r < out_b {
+                let acc = kernel::dot_i8(isa, xrow, &qb[r * in_b..(r + 1) * in_b]);
+                let gr = rs.start + r;
+                yrow[r] = dequant(acc, ep, self.row_scales[gr], bias[gr]);
+                r += 1;
+            }
+        }
+    }
+
     /// Scalar reference kernel (the oracle the tiled/pooled paths are tested
     /// against — equality is exact, integer accumulation is order-free).
     pub fn forward_fused_reference(
@@ -429,16 +523,12 @@ impl QuantizedBlockDiagMatrix {
 /// The dequantize + bias + ReLU epilogue applied to one finished integer
 /// accumulator. The scale product runs in f64 so the epilogue's own rounding
 /// stays far below the quantization error the bound accounts for; every code
-/// path (tiled, scalar remainder, reference) funnels through this one
-/// function, which is what makes cross-path equality exact.
+/// path (tiled, scalar remainder, reference — and, bit-for-bit, the SIMD
+/// `kernel::dequant4`) funnels through the single definition in
+/// `kernel::dequant_one`, which is what makes cross-path equality exact.
 #[inline]
 fn dequant(acc: i32, ep: QEpilogue, row_scale: f32, bias: f32) -> f32 {
-    let v = (acc as f64 * (ep.act_scale as f64 * row_scale as f64)) as f32 + bias;
-    if ep.relu && v < 0.0 {
-        0.0
-    } else {
-        v
-    }
+    crate::linalg::kernel::dequant_one(acc, ep.act_scale, row_scale, bias, ep.relu)
 }
 
 #[cfg(test)]

@@ -81,7 +81,52 @@ impl ConvShape {
 /// `[batch·oh·ow × patch_dim]` (row-major, reusing `out`'s allocation).
 /// Row `(bi·oh + oy)·ow + ox` holds the receptive field of output pixel
 /// `(oy, ox)` of sample `bi`; out-of-bounds (padded) taps are `0.0`.
+///
+/// The inner `kx` loop is a contiguous run in the input row (`ix` advances
+/// by exactly 1 per tap), so after clipping the in-bounds `[kx_lo, kx_hi)`
+/// window against the padding borders the taps move as one `copy_from_slice`
+/// — byte-identical to the per-tap [`im2col_reference`] loop, which
+/// `tests/simd_kernels.rs` pins across padding borders, stride tails, and
+/// single-column images.
 pub fn im2col(x: &[f32], batch: usize, s: &ConvShape, out: &mut Vec<f32>) {
+    assert_eq!(x.len(), batch * s.in_dim(), "im2col input shape");
+    let (oh, ow) = s.out_hw();
+    let pdim = s.patch_dim();
+    out.clear();
+    out.resize(batch * oh * ow * pdim, 0.0);
+    for bi in 0..batch {
+        let xs = &x[bi * s.in_dim()..(bi + 1) * s.in_dim()];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = &mut out[((bi * oh + oy) * ow + ox) * pdim..][..pdim];
+                // in-bounds kx window: pad ≤ ox·stride + kx < w + pad
+                let kx_lo = s.pad.saturating_sub(ox * s.stride);
+                let kx_hi = s.kw.min((s.w + s.pad).saturating_sub(ox * s.stride));
+                if kx_lo >= kx_hi {
+                    continue; // fully padded column range — row stays 0.0
+                }
+                let ix0 = ox * s.stride + kx_lo - s.pad;
+                let run = kx_hi - kx_lo;
+                for ic in 0..s.in_c {
+                    for ky in 0..s.kh {
+                        let iy = oy * s.stride + ky;
+                        if iy < s.pad || iy - s.pad >= s.h {
+                            continue; // row stays 0.0 (padded)
+                        }
+                        let iy = iy - s.pad;
+                        let xrow = &xs[(ic * s.h + iy) * s.w..][..s.w];
+                        let prow = &mut row[(ic * s.kh + ky) * s.kw..][..s.kw];
+                        prow[kx_lo..kx_hi].copy_from_slice(&xrow[ix0..ix0 + run]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The seed's per-tap im2col loop, kept as the oracle the run-copy
+/// [`im2col`] above is differentially tested against (byte-for-byte).
+pub fn im2col_reference(x: &[f32], batch: usize, s: &ConvShape, out: &mut Vec<f32>) {
     assert_eq!(x.len(), batch * s.in_dim(), "im2col input shape");
     let (oh, ow) = s.out_hw();
     let pdim = s.patch_dim();
@@ -120,15 +165,30 @@ pub fn im2col(x: &[f32], batch: usize, s: &ConvShape, out: &mut Vec<f32>) {
 /// columns into `P_col` (block) space before the packed GEMM. Shared by the
 /// f32 and i8 conv engines so the gather semantics cannot drift.
 pub fn gather_cols(rows: &[f32], nrows: usize, dim: usize, gather: &[u32], out: &mut Vec<f32>) {
+    gather_cols_isa(rows, nrows, dim, gather, out, crate::linalg::kernel::Isa::Scalar);
+}
+
+/// [`gather_cols`] with an explicit kernel ISA — the entry the executor
+/// dispatches through. A gather moves bits without rounding, so every ISA
+/// is byte-identical; the AVX2 form uses `vgatherdps` eight columns at a
+/// time. Index bounds are asserted **once up front** (the SIMD gather has no
+/// per-lane bounds check, unlike the scalar indexing).
+pub fn gather_cols_isa(
+    rows: &[f32],
+    nrows: usize,
+    dim: usize,
+    gather: &[u32],
+    out: &mut Vec<f32>,
+    isa: crate::linalg::kernel::Isa,
+) {
     assert_eq!(rows.len(), nrows * dim, "gather input shape");
     assert_eq!(gather.len(), dim, "gather length");
+    assert!(gather.iter().all(|&s| (s as usize) < dim), "gather index out of range");
     out.resize(rows.len(), 0.0);
     for r in 0..nrows {
         let src = &rows[r * dim..(r + 1) * dim];
         let dst = &mut out[r * dim..(r + 1) * dim];
-        for (j, &s) in gather.iter().enumerate() {
-            dst[j] = src[s as usize];
-        }
+        crate::linalg::kernel::gather_row_f32(isa, src, gather, dst);
     }
 }
 

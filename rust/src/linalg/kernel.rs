@@ -1,0 +1,664 @@
+//! SIMD micro-kernel registry (ISSUE 6): runtime ISA detection, the
+//! `MPDC_FORCE_SCALAR` override, and the per-ISA inner kernels the executor
+//! dispatches to — f32 dot products, i8×i8→i32 dot products, the fused
+//! dequant+bias+ReLU epilogue, and the im2col column gather.
+//!
+//! ## Dispatch contract
+//!
+//! A [`KernelChoice`] is resolved **once**, when an [`crate::exec::Executor`]
+//! is built (`KernelChoice::auto()` by default, `scalar()` when the
+//! `[engine] simd = false` config knob or the `MPDC_FORCE_SCALAR` env var is
+//! set). The hot path never re-detects features and never reads the
+//! environment — `leak_test` pins `run_into` at exactly zero allocations and
+//! `std::env::var` allocates, so the env flag is read through a `OnceLock`.
+//!
+//! `Isa` values only ever come from the validated constructors below
+//! (`scalar`/`detected`/`auto`), so every SIMD entry point's
+//! `#[target_feature]` precondition is established at construction time.
+//! Fields of [`KernelChoice`] are private for exactly this reason.
+//!
+//! ## Pinned f32 accumulation order
+//!
+//! Every f32 SIMD dot kernel uses the same shape: **two lane-strided vector
+//! partial sums** (`v0`, `v1`, fed by FMA in strides of `2·W` where `W` is
+//! the vector width), folded as `v0 + v1`, then a **fixed horizontal
+//! reduction** (pairwise within the register, documented per ISA below), and
+//! finally a scalar tail in ascending `p`. This order is deterministic for a
+//! given ISA and input length — independent of tile shape, thread count and
+//! batch — so SIMD results are bit-stable run-to-run; they differ from the
+//! scalar oracle (strictly ascending-`p` accumulation) only by the
+//! reassociation error bounded in [`f32_reorder_bound`].
+//!
+//! i8 kernels accumulate exactly in i32 (order-free: `MAX_IN_B` caps the
+//! block inner dimension so no partial sum can overflow), and the dequant
+//! epilogue reproduces the scalar f64-product rounding bit-for-bit, so the
+//! whole int8 path is bit-identical to the scalar oracle.
+
+use std::sync::OnceLock;
+
+/// Instruction set a kernel is compiled for. Only constructed by the
+/// validated [`KernelChoice`] constructors; `Scalar` is always available.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar oracle (ascending-`p` accumulation).
+    Scalar,
+    /// x86-64 AVX2 + FMA: 8-lane f32 FMA dots, 16-lane i8 `madd` dots,
+    /// 4-lane f64 dequant epilogue, 8-lane `i32gather` column gather.
+    Avx2Fma,
+    /// x86-64 AVX-512F: 16-lane f32 FMA dots (i8 + epilogue stay on the
+    /// AVX2 forms, which every AVX-512F host also provides).
+    Avx512f,
+    /// aarch64 NEON: 4-lane f32 FMA dots, 8-lane `smull`/`sadalp` i8 dots
+    /// (dequant epilogue and gather stay scalar — no f64×4 or gather unit).
+    Neon,
+}
+
+impl Isa {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2Fma => "avx2+fma",
+            Isa::Avx512f => "avx512f",
+            Isa::Neon => "neon",
+        }
+    }
+
+    pub fn is_simd(&self) -> bool {
+        *self != Isa::Scalar
+    }
+}
+
+/// The ISA pair an executor dispatches with: one choice for the f32 kernels
+/// (block GEMM + gather), one for the i8 kernels (block GEMM + dequant
+/// epilogue). Private fields: values are only built by the constructors, so
+/// holding a `KernelChoice` proves the features were detected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelChoice {
+    f32_isa: Isa,
+    i8_isa: Isa,
+}
+
+impl KernelChoice {
+    /// The always-available scalar oracle.
+    pub fn scalar() -> Self {
+        KernelChoice { f32_isa: Isa::Scalar, i8_isa: Isa::Scalar }
+    }
+
+    /// Raw runtime feature detection, ignoring `MPDC_FORCE_SCALAR`. Use in
+    /// tests that must exercise the SIMD path regardless of environment.
+    pub fn detected() -> Self {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                let f32_isa = if is_x86_feature_detected!("avx512f") { Isa::Avx512f } else { Isa::Avx2Fma };
+                // i8 madd + dequant epilogue use the AVX2 forms even on
+                // AVX-512 hosts: detection above guarantees avx2+fma.
+                return KernelChoice { f32_isa, i8_isa: Isa::Avx2Fma };
+            }
+            KernelChoice::scalar()
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return KernelChoice { f32_isa: Isa::Neon, i8_isa: Isa::Neon };
+            }
+            KernelChoice::scalar()
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            KernelChoice::scalar()
+        }
+    }
+
+    /// What `Executor::new` resolves: [`Self::detected`] unless
+    /// `MPDC_FORCE_SCALAR` is set to a truthy value (anything but
+    /// `""`/`"0"`/`"false"`/`"no"`/`"off"`).
+    pub fn auto() -> Self {
+        if force_scalar_env() {
+            KernelChoice::scalar()
+        } else {
+            KernelChoice::detected()
+        }
+    }
+
+    pub fn f32_isa(&self) -> Isa {
+        self.f32_isa
+    }
+
+    pub fn i8_isa(&self) -> Isa {
+        self.i8_isa
+    }
+
+    pub fn is_simd(&self) -> bool {
+        self.f32_isa.is_simd() || self.i8_isa.is_simd()
+    }
+
+    /// Short human-readable form, e.g. `f32=avx2+fma i8=avx2+fma`.
+    pub fn describe(&self) -> String {
+        format!("f32={} i8={}", self.f32_isa.name(), self.i8_isa.name())
+    }
+}
+
+/// Cached read of `MPDC_FORCE_SCALAR` (the env lookup allocates, so it runs
+/// at most once per process — never on the `run_into` hot path).
+pub fn force_scalar_env() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| match std::env::var("MPDC_FORCE_SCALAR") {
+        Ok(v) => !matches!(v.trim(), "" | "0" | "false" | "no" | "off"),
+        Err(_) => false,
+    })
+}
+
+/// The SIMD features this host actually reports, for bench provenance
+/// (`results/BENCH_6.json` records them so snapshots are comparable).
+pub fn cpu_features() -> Vec<&'static str> {
+    #[allow(unused_mut)]
+    let mut feats: Vec<&'static str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        for (name, have) in [
+            ("avx2", is_x86_feature_detected!("avx2")),
+            ("fma", is_x86_feature_detected!("fma")),
+            ("avx512f", is_x86_feature_detected!("avx512f")),
+        ] {
+            if have {
+                feats.push(name);
+            }
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            feats.push("neon");
+        }
+    }
+    feats
+}
+
+// ---------------------------------------------------------------------------
+// f32 dot kernels
+// ---------------------------------------------------------------------------
+
+/// Unit roundoff of f32 (half an ULP at 1.0): `2^-24`.
+pub const F32_UNIT_ROUNDOFF: f64 = f32::EPSILON as f64 / 2.0;
+
+/// Per-element factor of the analytic bound on `|simd_dot − scalar_dot|`
+/// for a length-`n` f32 dot product: multiply by `Σ_p |x_p|·|w_p|`.
+///
+/// Derivation: both the scalar oracle and every SIMD kernel compute some
+/// summation order of the same `n` products (FMA only *removes* product
+/// roundings). Standard forward error analysis gives, for either order,
+/// `|ŝ − s_exact| ≤ γ_{n+1} · Σ|x_p w_p|` with `γ_k = k·u/(1−k·u) ≈ k·u`,
+/// `u = 2^-24`. Triangle inequality across the two orders, plus slack for
+/// the bias add and the epilogue, gives `|simd − scalar| ≤ 2(n+4)·u·Σ|x w|`.
+pub fn f32_reorder_bound(n: usize) -> f32 {
+    (2.0 * (n as f64 + 4.0) * F32_UNIT_ROUNDOFF) as f32
+}
+
+/// Dot product of two equal-length f32 slices under the given ISA.
+///
+/// `Scalar` is the oracle order (strictly ascending `p`); SIMD ISAs use the
+/// pinned lane-strided order documented at module level.
+#[inline]
+pub fn dot_f32(isa: Isa, x: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), w.len());
+    match isa {
+        Isa::Scalar => dot_f32_scalar(x, w),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma/Avx512f only reach here via KernelChoice::detected.
+        Isa::Avx2Fma => unsafe { dot_f32_avx2(x, w) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512f => unsafe { dot_f32_avx512(x, w) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { dot_f32_neon(x, w) },
+        #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+        _ => dot_f32_scalar(x, w),
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        _ => dot_f32_scalar(x, w),
+    }
+}
+
+/// The scalar oracle: ascending-`p` accumulation, two roundings per term —
+/// exactly the order `block_forward_t` and `block_scalar` use.
+#[inline]
+pub fn dot_f32_scalar(x: &[f32], w: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for p in 0..x.len() {
+        acc += x[p] * w[p];
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_f32_avx2(x: &[f32], w: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let (xp, wp) = (x.as_ptr(), w.as_ptr());
+    // two lane-strided partials: v0 takes p ≡ 0..8 (mod 16), v1 takes 8..16
+    let mut v0 = _mm256_setzero_ps();
+    let mut v1 = _mm256_setzero_ps();
+    let mut p = 0;
+    while p + 16 <= n {
+        v0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(p)), _mm256_loadu_ps(wp.add(p)), v0);
+        v1 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(p + 8)), _mm256_loadu_ps(wp.add(p + 8)), v1);
+        p += 16;
+    }
+    if p + 8 <= n {
+        v0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(p)), _mm256_loadu_ps(wp.add(p)), v0);
+        p += 8;
+    }
+    // fixed horizontal reduction: (lo128 + hi128), then movehl fold, then
+    // lane-1 shuffle fold — pinned so results are reproducible run-to-run
+    let mut acc = hsum256_f32(_mm256_add_ps(v0, v1));
+    while p < n {
+        acc += *xp.add(p) * *wp.add(p);
+        p += 1;
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum256_f32(v: std::arch::x86_64::__m256) -> f32 {
+    use std::arch::x86_64::*;
+    let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<0b01>(s, s));
+    _mm_cvtss_f32(s)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn dot_f32_avx512(x: &[f32], w: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let (xp, wp) = (x.as_ptr(), w.as_ptr());
+    let mut v0 = _mm512_setzero_ps();
+    let mut v1 = _mm512_setzero_ps();
+    let mut p = 0;
+    while p + 32 <= n {
+        v0 = _mm512_fmadd_ps(_mm512_loadu_ps(xp.add(p)), _mm512_loadu_ps(wp.add(p)), v0);
+        v1 = _mm512_fmadd_ps(_mm512_loadu_ps(xp.add(p + 16)), _mm512_loadu_ps(wp.add(p + 16)), v1);
+        p += 32;
+    }
+    if p + 16 <= n {
+        v0 = _mm512_fmadd_ps(_mm512_loadu_ps(xp.add(p)), _mm512_loadu_ps(wp.add(p)), v0);
+        p += 16;
+    }
+    // fixed reduction: (q0+q1) + (q2+q3) over 128-bit quarters, then the
+    // same movehl/shuffle fold as the AVX2 kernel
+    let v = _mm512_add_ps(v0, v1);
+    let s = _mm_add_ps(
+        _mm_add_ps(_mm512_extractf32x4_ps::<0>(v), _mm512_extractf32x4_ps::<1>(v)),
+        _mm_add_ps(_mm512_extractf32x4_ps::<2>(v), _mm512_extractf32x4_ps::<3>(v)),
+    );
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<0b01>(s, s));
+    let mut acc = _mm_cvtss_f32(s);
+    while p < n {
+        acc += *xp.add(p) * *wp.add(p);
+        p += 1;
+    }
+    acc
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_f32_neon(x: &[f32], w: &[f32]) -> f32 {
+    use std::arch::aarch64::*;
+    let n = x.len();
+    let (xp, wp) = (x.as_ptr(), w.as_ptr());
+    let mut v0 = vdupq_n_f32(0.0);
+    let mut v1 = vdupq_n_f32(0.0);
+    let mut p = 0;
+    while p + 8 <= n {
+        v0 = vfmaq_f32(v0, vld1q_f32(xp.add(p)), vld1q_f32(wp.add(p)));
+        v1 = vfmaq_f32(v1, vld1q_f32(xp.add(p + 4)), vld1q_f32(wp.add(p + 4)));
+        p += 8;
+    }
+    if p + 4 <= n {
+        v0 = vfmaq_f32(v0, vld1q_f32(xp.add(p)), vld1q_f32(wp.add(p)));
+        p += 4;
+    }
+    // fixed reduction: (l0+l2) + (l1+l3)
+    let s = vaddq_f32(v0, v1);
+    let mut acc = (vgetq_lane_f32::<0>(s) + vgetq_lane_f32::<2>(s))
+        + (vgetq_lane_f32::<1>(s) + vgetq_lane_f32::<3>(s));
+    while p < n {
+        acc += *xp.add(p) * *wp.add(p);
+        p += 1;
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
+// i8 dot kernels (exact: i8×i8→i32, order-free)
+// ---------------------------------------------------------------------------
+
+/// Dot product of two equal-length i8 slices, accumulated exactly in i32.
+///
+/// Exactness argument: every product fits `|x·w| ≤ 127² = 16129`, and the
+/// packed format caps block inner dims at `MAX_IN_B = i32::MAX / 127²`, so
+/// the total — and a fortiori every lane partial and every `madd` pair sum —
+/// stays inside i32. Integer addition is associative, so every ISA returns
+/// the same bits.
+#[inline]
+pub fn dot_i8(isa: Isa, x: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    match isa {
+        Isa::Scalar => dot_i8_scalar(x, w),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SIMD variants only reach here via KernelChoice::detected.
+        Isa::Avx2Fma | Isa::Avx512f => unsafe { dot_i8_avx2(x, w) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { dot_i8_neon(x, w) },
+        #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+        _ => dot_i8_scalar(x, w),
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        _ => dot_i8_scalar(x, w),
+    }
+}
+
+#[inline]
+pub fn dot_i8_scalar(x: &[i8], w: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    for p in 0..x.len() {
+        acc += x[p] as i32 * w[p] as i32;
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2(x: &[i8], w: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let (xp, wp) = (x.as_ptr(), w.as_ptr());
+    let mut acc = _mm256_setzero_si256();
+    let mut p = 0;
+    while p + 16 <= n {
+        // widen 16×i8 → 16×i16, multiply-add adjacent pairs → 8×i32
+        let xv = _mm256_cvtepi8_epi16(_mm_loadu_si128(xp.add(p) as *const __m128i));
+        let wv = _mm256_cvtepi8_epi16(_mm_loadu_si128(wp.add(p) as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(xv, wv));
+        p += 16;
+    }
+    let s = _mm_add_epi32(_mm256_castsi256_si128(acc), _mm256_extracti128_si256::<1>(acc));
+    let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b01>(s));
+    let mut sum = _mm_cvtsi128_si32(s);
+    while p < n {
+        sum += *xp.add(p) as i32 * *wp.add(p) as i32;
+        p += 1;
+    }
+    sum
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_i8_neon(x: &[i8], w: &[i8]) -> i32 {
+    use std::arch::aarch64::*;
+    let n = x.len();
+    let (xp, wp) = (x.as_ptr(), w.as_ptr());
+    let mut acc = vdupq_n_s32(0);
+    let mut p = 0;
+    while p + 8 <= n {
+        // 8×i8 widening multiply → 8×i16, pairwise-add-accumulate → 4×i32
+        let prod = vmull_s8(vld1_s8(xp.add(p)), vld1_s8(wp.add(p)));
+        acc = vpadalq_s16(acc, prod);
+        p += 8;
+    }
+    let mut sum = vaddvq_s32(acc);
+    while p < n {
+        sum += *xp.add(p) as i32 * *wp.add(p) as i32;
+        p += 1;
+    }
+    sum
+}
+
+// ---------------------------------------------------------------------------
+// Fused dequant + bias + ReLU epilogue
+// ---------------------------------------------------------------------------
+
+/// The scalar dequantization epilogue — the single definition every i8 path
+/// (scalar or SIMD) must reproduce bit-for-bit:
+/// `y = (acc · (act_scale ·_f64 row_scale)) rounded to f32, + bias`, with
+/// `relu` clamping strictly negative values to `+0.0` (and leaving `-0.0`
+/// and NaN untouched, matching `v < 0.0`).
+#[inline]
+pub fn dequant_one(acc: i32, act_scale: f32, row_scale: f32, bias: f32, relu: bool) -> f32 {
+    let v = (acc as f64 * (act_scale as f64 * row_scale as f64)) as f32 + bias;
+    if relu && v < 0.0 {
+        0.0
+    } else {
+        v
+    }
+}
+
+/// Dequantize four accumulators at once. Bit-identical to four
+/// [`dequant_one`] calls on every ISA:
+///
+/// * i32→f64 conversion is exact; `f64 × f64` and f64→f32 rounding are
+///   IEEE round-to-nearest-even in both scalar Rust and `vcvtpd2ps`;
+/// * the ReLU uses a `v < 0` compare mask (not `max`), so `-0.0` and NaN
+///   propagate exactly as the scalar branch does.
+#[inline]
+pub fn dequant4(
+    isa: Isa,
+    accs: [i32; 4],
+    act_scale: f32,
+    row_scales: &[f32],
+    biases: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) {
+    debug_assert!(row_scales.len() >= 4 && biases.len() >= 4 && out.len() >= 4);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SIMD variants only reach here via KernelChoice::detected.
+        Isa::Avx2Fma | Isa::Avx512f => unsafe {
+            dequant4_avx2(accs, act_scale, row_scales, biases, relu, out)
+        },
+        _ => {
+            for j in 0..4 {
+                out[j] = dequant_one(accs[j], act_scale, row_scales[j], biases[j], relu);
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dequant4_avx2(
+    accs: [i32; 4],
+    act_scale: f32,
+    row_scales: &[f32],
+    biases: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let acc_d = _mm256_cvtepi32_pd(_mm_set_epi32(accs[3], accs[2], accs[1], accs[0]));
+    let scale_d = _mm256_mul_pd(
+        _mm256_set1_pd(act_scale as f64),
+        _mm256_cvtps_pd(_mm_loadu_ps(row_scales.as_ptr())),
+    );
+    let v = _mm_add_ps(
+        _mm256_cvtpd_ps(_mm256_mul_pd(acc_d, scale_d)),
+        _mm_loadu_ps(biases.as_ptr()),
+    );
+    let v = if relu {
+        // zero exactly the lanes with v < 0.0 — keeps -0.0 and NaN like the
+        // scalar `if v < 0.0` branch (a max would flip -0.0 to +0.0)
+        _mm_andnot_ps(_mm_cmplt_ps(v, _mm_setzero_ps()), v)
+    } else {
+        v
+    };
+    _mm_storeu_ps(out.as_mut_ptr(), v);
+}
+
+// ---------------------------------------------------------------------------
+// Column gather (exact: pure copy, any ISA)
+// ---------------------------------------------------------------------------
+
+/// Gather `dst[j] = src[idx[j]]` for one row. Exact on every ISA (a gather
+/// moves bits, it never rounds). Caller must have bounds-checked `idx`
+/// against `src.len()` — `gather_cols` in `im2col.rs` asserts once per call.
+#[inline]
+pub fn gather_row_f32(isa: Isa, src: &[f32], idx: &[u32], dst: &mut [f32]) {
+    debug_assert_eq!(idx.len(), dst.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SIMD variants only via KernelChoice::detected; idx was
+        // bounds-checked by the caller per the function contract.
+        Isa::Avx2Fma | Isa::Avx512f => unsafe { gather_row_avx2(src, idx, dst) },
+        _ => {
+            for (d, &s) in dst.iter_mut().zip(idx) {
+                *d = src[s as usize];
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gather_row_avx2(src: &[f32], idx: &[u32], dst: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = idx.len();
+    let mut j = 0;
+    while j + 8 <= n {
+        let iv = _mm256_loadu_si256(idx.as_ptr().add(j) as *const __m256i);
+        let g = _mm256_i32gather_ps::<4>(src.as_ptr(), iv);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(j), g);
+        j += 8;
+    }
+    while j < n {
+        *dst.get_unchecked_mut(j) = *src.get_unchecked(*idx.get_unchecked(j) as usize);
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xorshift(state: &mut u64) -> u64 {
+        *state ^= *state << 13;
+        *state ^= *state >> 7;
+        *state ^= *state << 17;
+        *state
+    }
+
+    fn rand_f32(state: &mut u64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (xorshift(state) % 2000) as f32 / 500.0 - 2.0).collect()
+    }
+
+    fn rand_i8(state: &mut u64, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (xorshift(state) % 255) as i8).collect()
+    }
+
+    #[test]
+    fn constructors_are_consistent() {
+        let s = KernelChoice::scalar();
+        assert_eq!(s.f32_isa(), Isa::Scalar);
+        assert_eq!(s.i8_isa(), Isa::Scalar);
+        assert!(!s.is_simd());
+        // auto is either scalar (forced / unsupported host) or detected
+        let a = KernelChoice::auto();
+        assert!(a == KernelChoice::scalar() || a == KernelChoice::detected());
+        let d = KernelChoice::detected();
+        assert!(d.describe().starts_with("f32="));
+    }
+
+    #[test]
+    fn f32_dot_within_reorder_bound_on_remainder_lengths() {
+        let d = KernelChoice::detected();
+        let mut st = 0x12345u64;
+        // deliberately awkward lengths around every vector width
+        for n in [0, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 23, 31, 32, 33, 63, 100, 257] {
+            let x = rand_f32(&mut st, n);
+            let w = rand_f32(&mut st, n);
+            let want = dot_f32_scalar(&x, &w);
+            let got = dot_f32(d.f32_isa(), &x, &w);
+            let mag: f32 = x.iter().zip(&w).map(|(a, b)| (a * b).abs()).sum();
+            let bound = f32_reorder_bound(n) * mag;
+            assert!(
+                (got - want).abs() <= bound + 1e-12,
+                "n={n}: |{got} - {want}| > {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn i8_dot_bit_identical_on_remainder_lengths() {
+        let d = KernelChoice::detected();
+        let mut st = 0xBEEFu64;
+        for n in [0, 1, 7, 8, 9, 15, 16, 17, 31, 32, 33, 100, 255] {
+            let x = rand_i8(&mut st, n);
+            let w = rand_i8(&mut st, n);
+            assert_eq!(dot_i8(d.i8_isa(), &x, &w), dot_i8_scalar(&x, &w), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dequant4_bit_identical_incl_negzero_and_relu() {
+        let d = KernelChoice::detected();
+        let mut st = 0xD00Du64;
+        for _ in 0..200 {
+            let accs = [
+                xorshift(&mut st) as i32 % 100_000,
+                xorshift(&mut st) as i32 % 100_000,
+                xorshift(&mut st) as i32 % 100_000,
+                xorshift(&mut st) as i32 % 100_000,
+            ];
+            let act = (xorshift(&mut st) % 1000) as f32 / 997.0 + 1e-4;
+            let rs = rand_f32(&mut st, 4).iter().map(|v| v.abs() + 1e-4).collect::<Vec<_>>();
+            let bias = rand_f32(&mut st, 4);
+            for relu in [false, true] {
+                let mut got = [0.0f32; 4];
+                dequant4(d.i8_isa(), accs, act, &rs, &bias, relu, &mut got);
+                for j in 0..4 {
+                    let want = dequant_one(accs[j], act, rs[j], bias[j], relu);
+                    assert_eq!(got[j].to_bits(), want.to_bits(), "lane {j} relu={relu}");
+                }
+            }
+        }
+        // -0.0 edge: acc 0 with -0.0 bias must survive ReLU with sign intact
+        let mut got = [1.0f32; 4];
+        dequant4(d.i8_isa(), [0, 0, 0, 0], 0.5, &[1.0; 4], &[-0.0; 4], true, &mut got);
+        for j in 0..4 {
+            let want = dequant_one(0, 0.5, 1.0, -0.0, true);
+            assert_eq!(got[j].to_bits(), want.to_bits(), "-0.0 lane {j}");
+        }
+    }
+
+    #[test]
+    fn gather_row_matches_scalar_copy() {
+        let d = KernelChoice::detected();
+        let mut st = 0xF00Du64;
+        let src = rand_f32(&mut st, 300);
+        for n in [0, 1, 3, 7, 8, 9, 16, 25, 64, 129] {
+            let idx: Vec<u32> = (0..n).map(|_| (xorshift(&mut st) % 300) as u32).collect();
+            let mut got = vec![0.0f32; n];
+            let mut want = vec![0.0f32; n];
+            gather_row_f32(d.f32_isa(), &src, &idx, &mut got);
+            for (w, &s) in want.iter_mut().zip(&idx) {
+                *w = src[s as usize];
+            }
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn force_scalar_env_parses_truthiness() {
+        // can't mutate the process env reliably under the cached OnceLock;
+        // just pin the parse rule the cache applies
+        let truthy = |v: &str| !matches!(v.trim(), "" | "0" | "false" | "no" | "off");
+        assert!(truthy("1"));
+        assert!(truthy("yes"));
+        assert!(!truthy("0"));
+        assert!(!truthy(""));
+        assert!(!truthy("off"));
+    }
+}

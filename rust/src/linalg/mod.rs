@@ -7,10 +7,12 @@ pub mod blockdiag_mm_i8;
 pub mod csr;
 pub mod gemm;
 pub mod im2col;
+pub mod kernel;
 pub mod pool;
 pub mod tensor;
 
 pub use blockdiag_mm::{BlockDiagMatrix, TileShape};
+pub use kernel::{Isa, KernelChoice};
 pub use im2col::ConvShape;
 pub use blockdiag_mm_i8::QuantizedBlockDiagMatrix;
 pub use csr::Csr;

@@ -479,15 +479,15 @@ fn cmd_plan(flags: &Flags) -> anyhow::Result<()> {
     // Unit-range scales: plan structure is scale-independent, so the dump
     // needs no calibration data.
     let cal = Calibration::unit_range(n);
-    let (label, plan) = match precision {
+    let (label, exec) = match precision {
         "f32" => {
             let engine = mpdc::compress::PackedMlp::build(&comp, &weights, &biases);
-            ("f32 packed", engine.into_executor().into_plan())
+            ("f32 packed", engine.into_executor())
         }
         "int8" => {
             let engine = QuantizedMlp::quantize(&comp, &weights, &biases, &cal)
                 .map_err(|e| anyhow::anyhow!(e))?;
-            ("int8 packed", engine.into_executor().into_plan())
+            ("int8 packed", engine.into_executor())
         }
         "mixed" => {
             // The natural per-layer policy: int8 for the big masked layers,
@@ -500,16 +500,18 @@ fn cmd_plan(flags: &Flags) -> anyhow::Result<()> {
             let exec = comp
                 .build_mixed_engine(&weights, &biases, Some(&cal), &prec, &cfg.engine)
                 .map_err(|e| anyhow::anyhow!(e))?;
-            ("mixed f32/int8", exec.into_plan())
+            ("mixed f32/int8", exec)
         }
         other => anyhow::bail!("unknown --precision {other:?} (f32|int8|mixed)"),
     };
+    // Executor-level describe: adds the per-op kernel column + dispatch
+    // summary on top of the structural plan dump.
     println!(
         "== {} · {} blocks · {} precision ==\n{}\n",
         cfg.model.name(),
         cfg.nblocks,
         label,
-        plan.describe(batch)
+        exec.describe(batch)
     );
 
     // The deep-mnist family also has the compressed-conv variant the server
@@ -517,7 +519,7 @@ fn cmd_plan(flags: &Flags) -> anyhow::Result<()> {
     if cfg.model == ModelKind::DeepMnist {
         let conv_comp = ConvCompressor::new(ConvModelPlan::deep_mnist_lite(cfg.nblocks), cfg.seed);
         let params = conv_comp.random_masked_params(cfg.seed);
-        let conv_plan = match precision {
+        let conv_exec = match precision {
             "int8" | "mixed" => {
                 let ccal = mpdc::quant::ConvCalibration::unit_range(
                     conv_comp.plan.convs.len(),
@@ -526,14 +528,13 @@ fn cmd_plan(flags: &Flags) -> anyhow::Result<()> {
                 mpdc::quant::QuantizedConvNet::quantize(&conv_comp, &params, &ccal)
                     .map_err(|e| anyhow::anyhow!(e))?
                     .into_executor()
-                    .into_plan()
             }
-            _ => PackedConvNet::build(&conv_comp, &params).into_executor().into_plan(),
+            _ => PackedConvNet::build(&conv_comp, &params).into_executor(),
         };
         println!(
             "== deep-mnist-lite (compressed conv) · {} blocks ==\n{}",
             cfg.nblocks,
-            conv_plan.describe(batch)
+            conv_exec.describe(batch)
         );
     }
     Ok(())

@@ -264,9 +264,9 @@ mod tests {
         let base = QuantizedMlp::quantize(&comp, &weights, &biases, &cal).unwrap();
         let want = base.forward(&x, 2);
         for cfg in [
-            EngineConfig { pool_threads: 1, tile_batch: 1, tile_rows: 1 },
-            EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 4 },
-            EngineConfig { pool_threads: 8, tile_batch: 8, tile_rows: 8 },
+            EngineConfig { pool_threads: 1, tile_batch: 1, tile_rows: 1, ..Default::default() },
+            EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 4, ..Default::default() },
+            EngineConfig { pool_threads: 8, tile_batch: 8, tile_rows: 8, ..Default::default() },
         ] {
             let q = QuantizedMlp::quantize(&comp, &weights, &biases, &cal)
                 .unwrap()

@@ -8,6 +8,16 @@
 
 use std::time::{Duration, Instant};
 
+/// Repo-root `results/` directory, resolved from the crate manifest so bench
+/// binaries write the same place regardless of the invocation CWD (cargo
+/// runs benches from `rust/`; the committed `results/BENCH_*.json` artifacts
+/// live at the repository root). Creates the directory if missing.
+pub fn results_dir() -> std::path::PathBuf {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../results");
+    std::fs::create_dir_all(&dir).expect("create results dir");
+    dir
+}
+
 #[derive(Clone, Debug)]
 pub struct BenchStats {
     pub name: String,

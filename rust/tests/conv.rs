@@ -21,7 +21,7 @@ use mpdc::compress::conv_model::{ConvCompressor, ConvNetParams, PackedConvNet};
 use mpdc::compress::plan::{ConvLayerPlan, ConvModelPlan, LayerPlan, SparsityPlan};
 use mpdc::config::EngineConfig;
 use mpdc::linalg::pool::ThreadPool;
-use mpdc::linalg::TileShape;
+use mpdc::linalg::{KernelChoice, TileShape};
 use mpdc::mask::prng::Xoshiro256pp;
 use mpdc::nn::checkpoint;
 use mpdc::quant::{Calibration, ConvCalibration, QuantizedConvNet};
@@ -122,16 +122,34 @@ fn prop_lowered_conv_bit_identical_to_direct_loop() {
         let want = net.forward(&x, batch);
         for pool in &pools {
             for tile in tiles {
-                let packed = PackedConvNet::build(&comp, &params)
+                // bit-exactness is a property of the *scalar* canonical
+                // kernel — pin it regardless of host SIMD / MPDC_FORCE_SCALAR
+                let exec = PackedConvNet::build(&comp, &params)
                     .with_pool(pool.clone())
-                    .with_tile(tile);
-                let got = packed.forward(&x, batch);
+                    .with_tile(tile)
+                    .into_executor()
+                    .with_kernel(KernelChoice::scalar());
+                let got = exec.run(&x, batch);
                 assert_eq!(
                     got, want,
                     "packed != direct (non_permuted={non_permuted}, lanes={}, tile {tile:?})",
                     pool.lanes()
                 );
             }
+        }
+        // SIMD leg: whatever the host supports must stay within the pinned
+        // reorder bound of the scalar-canonical result (bit-equal when the
+        // host has no SIMD, since detected() degrades to scalar).
+        let simd_exec = PackedConvNet::build(&comp, &params)
+            .into_executor()
+            .with_kernel(KernelChoice::detected());
+        let (y_v, bound_v) = simd_exec.run_with_bound(&x, None, batch);
+        for (i, (g, w)) in y_v.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= bound_v[i] + 1e-6,
+                "SIMD logit {i}: {g} vs scalar {w}, bound {}",
+                bound_v[i]
+            );
         }
     });
 }
@@ -212,11 +230,13 @@ fn golden_fixture_f32_logits_bit_exact() {
     let want = fixture_tensor(&tensors, "golden.y");
     assert_eq!(x.len(), 2 * 64);
     assert_eq!(want.len(), 2 * 10);
+    // the goldens were generated against the scalar-canonical accumulation
+    // order, so pin `simd: false` for the exact-bit comparison
     for cfg in [
-        EngineConfig { pool_threads: 1, tile_batch: 4, tile_rows: 8 },
-        EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 2 },
-        EngineConfig { pool_threads: 8, tile_batch: 1, tile_rows: 1 },
-        EngineConfig { pool_threads: 8, tile_batch: 8, tile_rows: 8 },
+        EngineConfig { pool_threads: 1, tile_batch: 4, tile_rows: 8, simd: false },
+        EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 2, simd: false },
+        EngineConfig { pool_threads: 8, tile_batch: 1, tile_rows: 1, simd: false },
+        EngineConfig { pool_threads: 8, tile_batch: 8, tile_rows: 8, simd: false },
     ] {
         let packed = comp.build_engine(&params, &cfg).unwrap();
         let got = packed.forward(&x, 2);
@@ -228,6 +248,22 @@ fn golden_fixture_f32_logits_bit_exact() {
                 "logit {i}: engine {g} != golden {w} under {cfg:?} — kernel numerics changed"
             );
         }
+    }
+    // SIMD leg: the detected kernels must track the scalar goldens within
+    // the executor's analytic reorder bound (zero ⇒ bit-equal on hosts
+    // where detection degrades to scalar).
+    let simd_exec = comp
+        .build_engine(&params, &EngineConfig::default())
+        .unwrap()
+        .into_executor()
+        .with_kernel(KernelChoice::detected());
+    let (y_v, bound_v) = simd_exec.run_with_bound(&x, None, 2);
+    for (i, (g, w)) in y_v.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() <= bound_v[i] + 1e-6,
+            "SIMD logit {i}: {g} vs golden {w}, bound {}",
+            bound_v[i]
+        );
     }
 }
 
@@ -259,8 +295,8 @@ fn golden_fixture_i8_within_analytic_bound() {
     }
     // order-free integer kernel: exact across thread counts / tiles
     for cfg in [
-        EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 4 },
-        EngineConfig { pool_threads: 8, tile_batch: 8, tile_rows: 8 },
+        EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 4, ..Default::default() },
+        EngineConfig { pool_threads: 8, tile_batch: 8, tile_rows: 8, ..Default::default() },
     ] {
         let q2 = QuantizedConvNet::quantize(&comp, &params, &calib)
             .unwrap()

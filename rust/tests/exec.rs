@@ -12,6 +12,7 @@ use mpdc::compress::packed_model::PackedMlp;
 use mpdc::compress::plan::{ConvLayerPlan, ConvModelPlan, LayerPlan, SparsityPlan};
 use mpdc::config::EngineConfig;
 use mpdc::exec::{lower_dense_mlp, lower_mlp, Executor, Op, Precision, ScratchArena};
+use mpdc::linalg::KernelChoice;
 use mpdc::mask::prng::Xoshiro256pp;
 use mpdc::nn::mlp::Mlp;
 use mpdc::quant::{Calibration, ConvCalibration, QuantizedConvNet, QuantizedMlp};
@@ -45,11 +46,14 @@ fn conv_fixture() -> (ConvCompressor, mpdc::compress::ConvNetParams) {
 /// 2-lane, and 8-lane pools crossed with two register-tile shapes beyond
 /// the default.
 fn config_matrix() -> Vec<EngineConfig> {
+    // `simd: true` throughout: the default-built `want` engines resolve the
+    // same auto dispatch, so wrapper-vs-plan equality stays bit-exact under
+    // both CI dispatch legs (MPDC_FORCE_SCALAR=0 and =1).
     vec![
-        EngineConfig { pool_threads: 1, tile_batch: 4, tile_rows: 8 },
-        EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 4 },
-        EngineConfig { pool_threads: 8, tile_batch: 1, tile_rows: 1 },
-        EngineConfig { pool_threads: 8, tile_batch: 8, tile_rows: 8 },
+        EngineConfig { pool_threads: 1, tile_batch: 4, tile_rows: 8, ..Default::default() },
+        EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 4, ..Default::default() },
+        EngineConfig { pool_threads: 8, tile_batch: 1, tile_rows: 1, ..Default::default() },
+        EngineConfig { pool_threads: 8, tile_batch: 8, tile_rows: 8, ..Default::default() },
     ]
 }
 
@@ -177,14 +181,34 @@ fn mixed_precision_plan_stays_within_analytic_bound() {
             assert!(bound[i].is_finite());
         }
     }
-    // All-f32 "mixed" plan degenerates to the packed engine bit-for-bit,
-    // with an identically-zero bound.
-    let exec = comp
-        .build_mixed_engine(&weights, &biases, None, &[Precision::F32; 3], &EngineConfig::default())
+    // All-f32 "mixed" plan degenerates to the packed engine bit-for-bit.
+    // Under pinned scalar dispatch the bound stays identically zero; under
+    // forced SIMD dispatch it is the pure pinned-reorder term and must cover
+    // the actual SIMD-vs-scalar drift (ISSUE 6).
+    let scalar_cfg = EngineConfig { simd: false, ..Default::default() };
+    let exec_s = comp
+        .build_mixed_engine(&weights, &biases, None, &[Precision::F32; 3], &scalar_cfg)
         .unwrap();
-    let (y, bound) = exec.run_with_bound(&x, None, batch);
-    assert_eq!(y, f32_ref);
-    assert!(bound.iter().all(|&b| b == 0.0), "f32-only plan must carry a zero bound");
+    let (y_s, bound_s) = exec_s.run_with_bound(&x, None, batch);
+    let scalar_ref = PackedMlp::build(&comp, &weights, &biases)
+        .with_engine_config(&scalar_cfg)
+        .unwrap()
+        .forward(&x, batch);
+    assert_eq!(y_s, scalar_ref);
+    assert!(bound_s.iter().all(|&b| b == 0.0), "scalar f32-only plan must carry a zero bound");
+    let exec_v = comp
+        .build_mixed_engine(&weights, &biases, None, &[Precision::F32; 3], &EngineConfig::default())
+        .unwrap()
+        .with_kernel(KernelChoice::detected());
+    let (y_v, bound_v) = exec_v.run_with_bound(&x, None, batch);
+    for i in 0..y_v.len() {
+        let err = (y_v[i] - y_s[i]).abs();
+        assert!(
+            err <= bound_v[i] + 1e-6,
+            "elem {i}: simd drift {err} > reorder bound {}",
+            bound_v[i]
+        );
+    }
 }
 
 #[test]
@@ -203,6 +227,12 @@ fn plan_accounting_matches_engine_wrappers() {
     }
     assert!(dump.contains("MACs/sample"));
     assert!(dump.contains(&plan.macs_per_sample.to_string()));
+    // kernel-choice accounting: the executor dump adds a kernel column and a
+    // dispatch summary naming the resolved ISA pair
+    let kdump = packed.executor().describe(32);
+    assert!(kdump.contains("kernel"), "executor describe() missing kernel column");
+    assert!(kdump.contains("dispatch f32="), "executor describe() missing dispatch summary");
+    assert!(kdump.contains(packed.executor().kernel().f32_isa().name()));
 
     // conv plans account im2col'd GEMM work (MACs scale with patch rows)
     let (ccomp, params) = conv_fixture();

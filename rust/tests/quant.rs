@@ -46,7 +46,11 @@ fn prop_quantized_within_analytic_error_bound() {
         // calibrate on the eval inputs themselves: activation quantization
         // then never clips, which is the regime the bound is tightest in
         let cal = calibrate(&comp, &weights, &biases, &x, batch);
-        let packed = PackedMlp::build(&comp, &weights, &biases);
+        // the analytic bound references the scalar-canonical f32 plan, so
+        // pin the comparator's kernel regardless of host SIMD support
+        let scalar_cfg = EngineConfig { simd: false, ..Default::default() };
+        let packed =
+            PackedMlp::build(&comp, &weights, &biases).with_engine_config(&scalar_cfg).unwrap();
         let y_f = packed.forward(&x, batch);
         let q = QuantizedMlp::quantize(&comp, &weights, &biases, &cal).unwrap();
         let (y_q, bound) = q.forward_with_bound(&x, batch);
@@ -78,7 +82,8 @@ fn prop_quantized_exact_across_tiles_and_threads() {
             .unwrap()
             .forward(&x, batch);
         for (threads, tb, tr) in [(1usize, 1usize, 2usize), (2, 4, 4), (8, 8, 1), (2, 2, 8)] {
-            let cfg = EngineConfig { pool_threads: threads, tile_batch: tb, tile_rows: tr };
+            let cfg =
+                EngineConfig { pool_threads: threads, tile_batch: tb, tile_rows: tr, ..Default::default() };
             let q = QuantizedMlp::quantize(&comp, &weights, &biases, &cal)
                 .unwrap()
                 .with_engine_config(&cfg)

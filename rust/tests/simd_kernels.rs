@@ -1,0 +1,313 @@
+//! SIMD micro-kernel differential suite (ISSUE 6 acceptance): every SIMD
+//! kernel behind the exec IR is locked to the always-compiled scalar oracle.
+//!
+//! - **f32 block GEMM**: the detected-ISA engine stays within the executor's
+//!   analytic reorder bound of the scalar-canonical result, and its output is
+//!   *bit-stable* across tile shapes and 1/2/8-lane pools (the vectorized
+//!   path computes one pinned-order dot per output element, so tiling and
+//!   threading cannot reorder its accumulation).
+//! - **i8 block GEMM + dequant epilogue**: bit-identical to scalar under
+//!   every dispatch — integer accumulation is associative and the dequant
+//!   epilogue reproduces `kernel::dequant_one` exactly.
+//! - **im2col run-copy**: byte-for-byte equal to the seed's per-tap
+//!   reference loop across padding borders, stride tails, fully-clipped
+//!   windows, and single-column images.
+//! - **column gather**: the SIMD `vgatherdps` path moves bits without
+//!   rounding — byte-identical to scalar on misaligned/remainder widths.
+//! - **serving**: forced-scalar vs auto-dispatch [`PlanBackend`]s agree
+//!   (within bound for f32, exactly for i8) whatever `MPDC_FORCE_SCALAR`
+//!   the CI leg runs under.
+//!
+//! The deliberately awkward shapes (inner dims 3, 10, 67, 96, …) cover the
+//! wide-stride main loops, the single 8-wide step, and the scalar tails of
+//! every vector kernel.
+
+use mpdc::compress::compressor::MpdCompressor;
+use mpdc::compress::packed_model::PackedMlp;
+use mpdc::compress::plan::{LayerPlan, SparsityPlan};
+use mpdc::linalg::im2col::{gather_cols_isa, im2col, im2col_reference, ConvShape};
+use mpdc::linalg::{Isa, KernelChoice, TileShape};
+use mpdc::mask::prng::Xoshiro256pp;
+use mpdc::quant::{Calibration, QuantizedMlp};
+use mpdc::server::{InferBackend, PlanBackend};
+use mpdc::util::prop::{for_all, gen_range};
+
+/// Layer stacks chosen to exercise every code path of the vector kernels:
+/// block inner dims that are multiples of 32 (full wide-stride loops), odd
+/// tails (67 → 64 + 3), a single 8-wide step (10), pure scalar tails (3),
+/// chained masked layers (internal gathers), and a dense head.
+fn plans() -> Vec<(SparsityPlan, usize, u64)> {
+    vec![
+        (SparsityPlan::new(vec![LayerPlan::masked("wide", 8, 96, 1)]).unwrap(), 96, 11),
+        (SparsityPlan::new(vec![LayerPlan::masked("tail", 8, 67, 1)]).unwrap(), 67, 13),
+        (SparsityPlan::new(vec![LayerPlan::masked("blk", 12, 40, 4)]).unwrap(), 40, 17),
+        (SparsityPlan::new(vec![LayerPlan::masked("tiny", 9, 9, 3)]).unwrap(), 9, 19),
+        (
+            SparsityPlan::new(vec![
+                LayerPlan::masked("a", 24, 96, 2),
+                LayerPlan::masked("b", 10, 24, 2),
+            ])
+            .unwrap(),
+            96,
+            23,
+        ),
+        (
+            SparsityPlan::new(vec![
+                LayerPlan::dense("d0", 20, 33),
+                LayerPlan::masked("d1", 7, 20, 1),
+            ])
+            .unwrap(),
+            33,
+            29,
+        ),
+    ]
+}
+
+fn rand_x(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+}
+
+/// f32 tentpole property: detected-ISA engine ⊆ analytic reorder bound of
+/// the scalar oracle, and bit-stable across tiles × 1/2/8-lane pools.
+#[test]
+fn f32_simd_within_reorder_bound_and_bit_stable_across_engines() {
+    let tiles = [
+        TileShape::DEFAULT,
+        TileShape { batch: 2, rows: 2 },
+        TileShape { batch: 1, rows: 8 },
+    ];
+    for (plan, in_dim, seed) in plans() {
+        let comp = MpdCompressor::new(plan, seed);
+        let (w, b) = comp.random_masked_weights(seed ^ 0x9E);
+        for batch in [1usize, 3] {
+            let x = rand_x(seed ^ batch as u64, batch * in_dim);
+            let y_s = PackedMlp::build(&comp, &w, &b)
+                .into_executor()
+                .with_kernel(KernelChoice::scalar())
+                .run(&x, batch);
+            let simd = PackedMlp::build(&comp, &w, &b)
+                .into_executor()
+                .with_kernel(KernelChoice::detected());
+            let (y_v, bound) = simd.run_with_bound(&x, None, batch);
+            assert_eq!(y_v, simd.run(&x, batch), "bound walk must not change values");
+            for i in 0..y_s.len() {
+                assert!(
+                    (y_v[i] - y_s[i]).abs() <= bound[i] + 1e-6,
+                    "seed {seed} batch {batch} elem {i}: simd {} vs scalar {}, bound {}",
+                    y_v[i],
+                    y_s[i],
+                    bound[i]
+                );
+            }
+            for lanes in [1usize, 2, 8] {
+                for tile in tiles {
+                    let e = PackedMlp::build(&comp, &w, &b)
+                        .into_executor()
+                        .with_kernel(KernelChoice::detected())
+                        .with_threads(lanes)
+                        .with_tile(tile);
+                    assert_eq!(
+                        e.run(&x, batch),
+                        y_v,
+                        "seed {seed}: SIMD result not bit-stable (lanes={lanes}, tile {tile:?})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// i8 tentpole property: the quantized engine (SIMD i8 dot + SIMD dequant
+/// epilogue) is bit-identical to the scalar oracle under every tile/pool.
+#[test]
+fn i8_simd_bit_identical_to_scalar_across_engines() {
+    let tiles = [TileShape::DEFAULT, TileShape { batch: 2, rows: 4 }];
+    for (plan, in_dim, seed) in plans() {
+        let comp = MpdCompressor::new(plan, seed ^ 0x51);
+        let (w, b) = comp.random_masked_weights(seed ^ 0xA7);
+        let cal = Calibration::unit_range(comp.nlayers());
+        for batch in [1usize, 5] {
+            let x = rand_x(seed ^ ((batch as u64) << 8), batch * in_dim);
+            let y_s = QuantizedMlp::quantize(&comp, &w, &b, &cal)
+                .unwrap()
+                .into_executor()
+                .with_kernel(KernelChoice::scalar())
+                .run(&x, batch);
+            for lanes in [1usize, 2, 8] {
+                for tile in tiles {
+                    let y_v = QuantizedMlp::quantize(&comp, &w, &b, &cal)
+                        .unwrap()
+                        .into_executor()
+                        .with_kernel(KernelChoice::detected())
+                        .with_threads(lanes)
+                        .with_tile(tile)
+                        .run(&x, batch);
+                    for (i, (a, s)) in y_v.iter().zip(&y_s).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            s.to_bits(),
+                            "seed {seed} batch {batch} elem {i}: i8 SIMD {a} != scalar {s} \
+                             (lanes={lanes}, tile {tile:?})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// im2col run-copy vs the per-tap reference, pinned on the edge geometries:
+/// single-column images, stride tails, pad ≥ kernel width (fully clipped
+/// windows at both borders), and the `saturating_sub` underflow guard.
+#[test]
+fn im2col_run_copy_byte_identical_on_edge_geometries() {
+    let shapes = [
+        // single-column image, 1-wide kernel
+        ConvShape { in_c: 2, h: 5, w: 1, kh: 3, kw: 1, stride: 1, pad: 0 },
+        // single-column image with padding on both sides
+        ConvShape { in_c: 1, h: 4, w: 1, kh: 2, kw: 2, stride: 1, pad: 1 },
+        // stride tail: last window clipped on the right border
+        ConvShape { in_c: 1, h: 7, w: 7, kh: 3, kw: 3, stride: 2, pad: 1 },
+        // pad == kw: leftmost/rightmost windows are fully padded columns
+        ConvShape { in_c: 1, h: 3, w: 3, kh: 3, kw: 2, stride: 1, pad: 2 },
+        // pad > kw: exercises the usize-underflow guard in the window clip
+        ConvShape { in_c: 1, h: 3, w: 3, kh: 3, kw: 2, stride: 1, pad: 3 },
+        // coarse stride skips most of the image
+        ConvShape { in_c: 2, h: 8, w: 9, kh: 2, kw: 2, stride: 3, pad: 0 },
+        // kernel exactly the padded width
+        ConvShape { in_c: 1, h: 2, w: 2, kh: 4, kw: 4, stride: 1, pad: 1 },
+    ];
+    for (si, s) in shapes.iter().enumerate() {
+        s.validate().unwrap_or_else(|e| panic!("shape {si}: {e}"));
+        for batch in [1usize, 3] {
+            let x = rand_x(0xC0DE + si as u64, batch * s.in_dim());
+            let (mut got, mut want) = (Vec::new(), Vec::new());
+            im2col(&x, batch, s, &mut got);
+            im2col_reference(&x, batch, s, &mut want);
+            assert_eq!(got.len(), want.len(), "shape {si}");
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "shape {si} batch {batch} elem {i}: run-copy {g} != reference {w}"
+                );
+            }
+        }
+    }
+}
+
+/// Random-geometry sweep of the same byte-identity (kernel/stride/pad
+/// product space beyond the hand-picked edges).
+#[test]
+fn prop_im2col_run_copy_byte_identical_random_geometry() {
+    for_all("im2col run-copy == per-tap reference", |rng, case| {
+        let in_c = gen_range(rng, 1, 3);
+        let h = gen_range(rng, 1, 9);
+        let w = gen_range(rng, 1, 9);
+        let kh = gen_range(rng, 1, h.min(4));
+        let kw = gen_range(rng, 1, w.min(4));
+        let s = ConvShape {
+            in_c,
+            h,
+            w,
+            kh,
+            kw,
+            stride: gen_range(rng, 1, 3),
+            pad: gen_range(rng, 0, kw),
+        };
+        s.validate().unwrap();
+        let batch = gen_range(rng, 1, 3);
+        let x = rand_x(case as u64 ^ 0xF00D, batch * s.in_dim());
+        let (mut got, mut want) = (Vec::new(), Vec::new());
+        im2col(&x, batch, &s, &mut got);
+        im2col_reference(&x, batch, &s, &mut want);
+        assert_eq!(got, want, "case {case} shape {s:?}");
+    });
+}
+
+/// The SIMD column gather moves bits, never rounds: byte-identical to the
+/// scalar path on remainder widths (below, at, and straddling the 8-lane
+/// vector width), including repeated indices.
+#[test]
+fn gather_cols_simd_byte_identical_to_scalar() {
+    let simd = KernelChoice::detected().f32_isa();
+    for dim in [1usize, 2, 3, 7, 8, 9, 15, 16, 17, 31, 33, 64, 100] {
+        let nrows = 3;
+        let rows = rand_x(0x6A7 + dim as u64, nrows * dim);
+        // a deterministic shuffle with repeats: j → (3j + 1) mod dim
+        let gather: Vec<u32> =
+            (0..dim).map(|j| ((3 * j + 1) % dim) as u32).collect();
+        let (mut want, mut got) = (Vec::new(), Vec::new());
+        gather_cols_isa(&rows, nrows, dim, &gather, &mut want, Isa::Scalar);
+        gather_cols_isa(&rows, nrows, dim, &gather, &mut got, simd);
+        assert_eq!(got, want, "dim {dim} ({})", simd.name());
+    }
+}
+
+/// Serving-level dispatch equivalence: a forced-scalar [`PlanBackend`] and
+/// an auto-dispatch one agree through `infer_into` — within the analytic
+/// reorder bound for the f32 plan, bit-exactly for the i8 plan. Holds under
+/// both CI legs (`MPDC_FORCE_SCALAR=0` and `=1`), since auto resolves to one
+/// of the two kernels the bound already brackets.
+#[test]
+fn plan_backend_scalar_and_auto_dispatch_agree() {
+    let plan = SparsityPlan::new(vec![
+        LayerPlan::masked("a", 24, 96, 2),
+        LayerPlan::masked("b", 10, 24, 2),
+    ])
+    .unwrap();
+    let comp = MpdCompressor::new(plan, 37);
+    let (w, b) = comp.random_masked_weights(41);
+    let max_batch = 8;
+
+    // f32 plan: |auto − scalar| ≤ detected-ISA reorder bound
+    let mut be_scalar = PlanBackend::new(
+        PackedMlp::build(&comp, &w, &b).into_executor().with_kernel(KernelChoice::scalar()),
+    )
+    .with_max_batch(max_batch)
+    .warmed();
+    let mut be_auto = PlanBackend::new(PackedMlp::build(&comp, &w, &b).into_executor())
+        .with_max_batch(max_batch)
+        .warmed();
+    let bound_exec =
+        PackedMlp::build(&comp, &w, &b).into_executor().with_kernel(KernelChoice::detected());
+    for batch in [1usize, 3, 8] {
+        let x = rand_x(0xBEEF ^ batch as u64, batch * 96);
+        let (mut y_s, mut y_a) = (vec![0.0f32; batch * 10], vec![0.0f32; batch * 10]);
+        be_scalar.infer_into(&x, batch, &mut y_s).unwrap();
+        be_auto.infer_into(&x, batch, &mut y_a).unwrap();
+        let (_, bound) = bound_exec.run_with_bound(&x, None, batch);
+        for i in 0..y_s.len() {
+            assert!(
+                (y_a[i] - y_s[i]).abs() <= bound[i] + 1e-6,
+                "batch {batch} elem {i}: auto {} vs scalar {}, bound {}",
+                y_a[i],
+                y_s[i],
+                bound[i]
+            );
+        }
+    }
+
+    // i8 plan: bit-exact whatever auto resolves to
+    let cal = Calibration::unit_range(comp.nlayers());
+    let mut qb_scalar = PlanBackend::new(
+        QuantizedMlp::quantize(&comp, &w, &b, &cal)
+            .unwrap()
+            .into_executor()
+            .with_kernel(KernelChoice::scalar()),
+    )
+    .with_max_batch(max_batch)
+    .warmed();
+    let mut qb_auto =
+        PlanBackend::new(QuantizedMlp::quantize(&comp, &w, &b, &cal).unwrap().into_executor())
+            .with_max_batch(max_batch)
+            .warmed();
+    for batch in [1usize, 4] {
+        let x = rand_x(0xFACE ^ batch as u64, batch * 96);
+        let (mut y_s, mut y_a) = (vec![0.0f32; batch * 10], vec![0.0f32; batch * 10]);
+        qb_scalar.infer_into(&x, batch, &mut y_s).unwrap();
+        qb_auto.infer_into(&x, batch, &mut y_a).unwrap();
+        assert_eq!(y_a, y_s, "i8 dispatch modes disagree at batch {batch}");
+    }
+}
