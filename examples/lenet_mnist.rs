@@ -80,7 +80,12 @@ fn main() -> anyhow::Result<()> {
     let artifacts_dir = engine.manifest.dir.clone();
     std::env::set_var("MPDC_ARTIFACTS", &artifacts_dir);
 
-    let bc = BatcherConfig { max_batch: 32, max_wait: std::time::Duration::from_micros(500), queue_depth: 512 };
+    let bc = BatcherConfig {
+        max_batch: 32,
+        max_wait: std::time::Duration::from_micros(500),
+        deadline: std::time::Duration::ZERO,
+        queue_depth: 512,
+    };
     let (dense_h, _dj) = spawn_with(
         move || {
             let eng = common::try_engine().ok_or_else(|| anyhow::anyhow!("artifacts missing"))?;

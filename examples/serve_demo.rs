@@ -58,7 +58,12 @@ fn main() -> anyhow::Result<()> {
         .map(|((w, b), lp)| (Csr::from_dense(w, lp.out_dim, lp.in_dim), b.clone()))
         .collect();
 
-    let bc = BatcherConfig { max_batch: 16, max_wait: std::time::Duration::from_micros(300), queue_depth: 256 };
+    let bc = BatcherConfig {
+        max_batch: 16,
+        max_wait: std::time::Duration::from_micros(300),
+        deadline: std::time::Duration::from_millis(2),
+        queue_depth: 256,
+    };
     let mut router = Router::new();
     let (h, _j1) = spawn(PlanBackend::new(Executor::new(lower_dense_mlp(&mlp))).with_max_batch(bc.max_batch).warmed(), bc);
     router.register("dense", h);

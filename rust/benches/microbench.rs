@@ -152,7 +152,15 @@ fn main() {
     );
 
     println!("\n--- batcher round-trip overhead (noop backend) ---");
-    let (h, _j) = spawn(Noop, BatcherConfig { max_batch: 1, max_wait: std::time::Duration::ZERO, queue_depth: 16 });
+    let (h, _j) = spawn(
+        Noop,
+        BatcherConfig {
+            max_batch: 1,
+            max_wait: std::time::Duration::ZERO,
+            deadline: std::time::Duration::ZERO,
+            queue_depth: 16,
+        },
+    );
     let s = bench_quick("batcher roundtrip", || {
         black_box(h.infer(vec![0.0; 8]).unwrap());
     });

@@ -1,9 +1,17 @@
-//! Serving smoke bench: dense vs MPD packed variants behind the real HTTP
-//! front-end, measured by the in-repo load generator. Reports p50/p99 and
-//! throughput per variant in both arrival disciplines — the repo's standing
-//! serving benchmark (ISSUE 2). Artifact-free and training-free: weights are
-//! random (identical shapes to trained LeNet-300-100), which is what serving
-//! cost depends on.
+//! Serving bench (ISSUE 2, rebuilt by ISSUE 7): dense vs MPD packed variants
+//! behind the real HTTP front-end, measured by the in-repo load generator in
+//! three disciplines:
+//!
+//! 1. closed-loop under the **blocking** accept-pool (the baseline),
+//! 2. closed-loop under the **event-driven** readiness loop (the default),
+//! 3. an open-loop **offered-load sweep** against the event loop — the
+//!    latency-vs-load curve with an explicit p99 SLO annotation.
+//!
+//! Emits the machine-readable `results/BENCH_7.json` (repo root,
+//! CWD-independent) with the per-mode comparison and the sweep curve, which
+//! CI validates and uploads as a workflow artifact. Artifact-free and
+//! training-free: weights are random (identical shapes to trained
+//! LeNet-300-100), which is what serving cost depends on.
 //!
 //! ```bash
 //! cargo bench --bench serve_http              # quick (CI) preset
@@ -13,16 +21,30 @@
 use mpdc::compress::compressor::MpdCompressor;
 use mpdc::compress::plan::SparsityPlan;
 use mpdc::config::EngineConfig;
+use mpdc::exec::{lower_dense_mlp, Executor};
 use mpdc::mask::prng::Xoshiro256pp;
 use mpdc::nn::mlp::Mlp;
-use mpdc::server::http::{HttpConfig, HttpServer};
-use mpdc::server::loadgen::{self, Arrival, LoadgenConfig};
-use mpdc::exec::{lower_dense_mlp, Executor};
+use mpdc::server::http::{HttpConfig, HttpServer, ServeMode};
+use mpdc::server::loadgen::{self, Arrival, LoadgenConfig, SweepConfig};
 use mpdc::server::{spawn, BatcherConfig, PlanBackend, Router};
-use mpdc::util::benchkit::Table;
+use mpdc::util::benchkit::{results_dir, Table};
 use mpdc::util::json::{append_jsonl, Json};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// p99 service-level objective for the sweep annotation: a load point
+/// "meets SLO" when its 2xx p99 stays under this budget.
+const SLO_P99_US: f64 = 50_000.0;
+
+struct ModeCell {
+    mode: &'static str,
+    variant: &'static str,
+    ok: u64,
+    rejected: u64,
+    rps: f64,
+    p50_us: f64,
+    p99_us: f64,
+}
 
 fn main() {
     let requests: usize = std::env::var("MPDC_SERVE_REQUESTS")
@@ -44,55 +66,168 @@ fn main() {
         l.b = b.clone();
     }
 
-    let bc = BatcherConfig { max_batch: 32, max_wait: Duration::from_micros(300), queue_depth: 1024 };
+    let bc = BatcherConfig {
+        max_batch: 32,
+        max_wait: Duration::from_millis(2),
+        deadline: Duration::from_millis(2),
+        queue_depth: 1024,
+    };
     let mut router = Router::new();
-    let (h, _w1) = spawn(PlanBackend::new(Executor::new(lower_dense_mlp(&mlp))).with_max_batch(bc.max_batch).warmed(), bc);
+    let (h, _w1) = spawn(
+        PlanBackend::new(Executor::new(lower_dense_mlp(&mlp))).with_max_batch(bc.max_batch).warmed(),
+        bc,
+    );
     router.register("dense", h);
-    let (h, _w2) = spawn(PlanBackend::new(packed.into_executor()).with_max_batch(bc.max_batch).warmed(), bc);
+    let (h, _w2) =
+        spawn(PlanBackend::new(packed.into_executor()).with_max_batch(bc.max_batch).warmed(), bc);
     router.register("mpd", h);
+    let router = Arc::new(router);
 
-    let cfg = HttpConfig { addr: "127.0.0.1:0".into(), accept_threads: 8, ..HttpConfig::default() };
-    let server = HttpServer::start(Arc::new(router), cfg).expect("bind ephemeral port");
-    println!("serve_http bench on {} ({requests} requests per cell)\n", server.url());
+    let http_cfg = |mode: ServeMode| HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        mode,
+        accept_threads: 8,
+        event_threads: 2,
+        ..HttpConfig::default()
+    };
 
-    let mut table = Table::new(&["variant", "arrival", "ok", "429", "req/s", "p50 µs", "p90 µs", "p99 µs"]);
-    for variant in ["dense", "mpd"] {
-        for (mode, arrival) in
-            [("closed", Arrival::Closed), ("open-500qps", Arrival::Poisson { target_qps: 500.0 })]
-        {
-            let lg = LoadgenConfig {
-                concurrency: 6,
-                requests: if mode == "closed" { requests } else { requests.min(1500) },
-                arrival,
-                seed: 42,
-            };
+    // ── Phase 1/2: closed-loop, blocking baseline vs event loop ──────────
+    println!("serve_http bench ({requests} requests per cell)\n");
+    let mut cells: Vec<ModeCell> = Vec::new();
+    let mut table =
+        Table::new(&["mode", "variant", "ok", "429", "req/s", "p50 µs", "p99 µs"]);
+    for (mode_name, mode) in [("blocking", ServeMode::Blocking), ("event", ServeMode::Event)] {
+        let server = HttpServer::start(router.clone(), http_cfg(mode)).expect("bind ephemeral port");
+        for variant in ["dense", "mpd"] {
+            let lg = LoadgenConfig { concurrency: 6, requests, arrival: Arrival::Closed, seed: 42 };
             let r = loadgen::run_http(server.addr(), variant, 784, &lg);
-            assert_eq!(r.errors, 0, "{variant}/{mode}: transport errors under smoke load");
+            assert_eq!(r.errors, 0, "{mode_name}/{variant}: transport errors under smoke load");
+            let cell = ModeCell {
+                mode: mode_name,
+                variant,
+                ok: r.ok,
+                rejected: r.rejected,
+                rps: r.throughput_rps(),
+                p50_us: r.latency.percentile_us(0.5),
+                p99_us: r.latency.percentile_us(0.99),
+            };
             table.row(&[
-                variant.to_string(),
-                mode.to_string(),
-                r.ok.to_string(),
-                r.rejected.to_string(),
-                format!("{:.0}", r.throughput_rps()),
-                format!("{:.0}", r.latency.percentile_us(0.5)),
-                format!("{:.0}", r.latency.percentile_us(0.9)),
-                format!("{:.0}", r.latency.percentile_us(0.99)),
+                cell.mode.to_string(),
+                cell.variant.to_string(),
+                cell.ok.to_string(),
+                cell.rejected.to_string(),
+                format!("{:.0}", cell.rps),
+                format!("{:.0}", cell.p50_us),
+                format!("{:.0}", cell.p99_us),
             ]);
             let _ = append_jsonl(
                 std::path::Path::new("results/serve_http.jsonl"),
                 &Json::obj(vec![
-                    ("variant", Json::str(variant)),
-                    ("arrival", Json::str(mode)),
-                    ("ok", Json::num(r.ok as f64)),
-                    ("rejected", Json::num(r.rejected as f64)),
-                    ("rps", Json::num(r.throughput_rps())),
-                    ("p50_us", Json::num(r.latency.percentile_us(0.5))),
-                    ("p99_us", Json::num(r.latency.percentile_us(0.99))),
+                    ("mode", Json::str(cell.mode)),
+                    ("variant", Json::str(cell.variant)),
+                    ("ok", Json::num(cell.ok as f64)),
+                    ("rejected", Json::num(cell.rejected as f64)),
+                    ("rps", Json::num(cell.rps)),
+                    ("p50_us", Json::num(cell.p50_us)),
+                    ("p99_us", Json::num(cell.p99_us)),
                 ]),
             );
+            cells.push(cell);
         }
+        server.shutdown();
     }
     println!("{}", table.render());
+
+    // headline comparison on the mpd variant: the event loop must not cost
+    // throughput relative to the blocking pool at comparable tail latency
+    let find = |mode: &str| cells.iter().find(|c| c.mode == mode && c.variant == "mpd").unwrap();
+    let (blocking, event) = (find("blocking"), find("event"));
+    let ratio = if blocking.rps > 0.0 { event.rps / blocking.rps } else { 1.0 };
+    println!(
+        "event vs blocking (mpd, closed): {:.0} vs {:.0} req/s ({ratio:.2}×), p99 {:.0} vs {:.0} µs\n",
+        event.rps, blocking.rps, event.p99_us, blocking.p99_us
+    );
+
+    // ── Phase 3: open-loop offered-load sweep against the event loop ─────
+    let server = HttpServer::start(router.clone(), http_cfg(ServeMode::Event))
+        .expect("bind ephemeral port");
+    let sweep_cfg = SweepConfig {
+        concurrencies: vec![6],
+        qps_points: vec![250.0, 1000.0, 4000.0],
+        requests_per_point: requests.min(1200),
+        seed: 42,
+    };
+    let points = loadgen::sweep(server.addr(), "mpd", 784, &sweep_cfg);
     server.shutdown();
+
+    let mut sweep_table = Table::new(&[
+        "offered q/s", "achieved q/s", "ok", "non-200 %", "p50 µs", "p99 µs", "non-200 p99 µs",
+        "SLO",
+    ]);
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    for p in &points {
+        let meets = p.p99_us <= SLO_P99_US;
+        sweep_table.row(&[
+            format!("{:.0}", p.offered_qps),
+            format!("{:.0}", p.achieved_rps),
+            p.ok.to_string(),
+            format!("{:.2}", p.non_200_rate * 100.0),
+            format!("{:.0}", p.p50_us),
+            format!("{:.0}", p.p99_us),
+            format!("{:.0}", p.non200_p99_us),
+            if meets { "meets".into() } else { "misses".into() },
+        ]);
+        sweep_rows.push(Json::obj(vec![
+            ("concurrency", Json::num(p.concurrency as f64)),
+            ("offered_qps", Json::num(p.offered_qps)),
+            ("achieved_rps", Json::num(p.achieved_rps)),
+            ("sent", Json::num(p.sent as f64)),
+            ("ok", Json::num(p.ok as f64)),
+            ("non_200_rate", Json::num(p.non_200_rate)),
+            ("p50_us", Json::num(p.p50_us)),
+            ("p99_us", Json::num(p.p99_us)),
+            ("non200_p99_us", Json::num(p.non200_p99_us)),
+            ("meets_slo", Json::Bool(meets)),
+        ]));
+    }
+    println!("open-loop sweep (event, mpd) — SLO: p99 ≤ {SLO_P99_US:.0} µs");
+    println!("{}", sweep_table.render());
+
+    // ── Machine-readable artifact: <repo root>/results/BENCH_7.json ──────
+    let mode_rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("mode", Json::str(c.mode)),
+                ("variant", Json::str(c.variant)),
+                ("ok", Json::num(c.ok as f64)),
+                ("rejected", Json::num(c.rejected as f64)),
+                ("rps", Json::num(c.rps)),
+                ("p50_us", Json::num(c.p50_us)),
+                ("p99_us", Json::num(c.p99_us)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_http")),
+        ("requests", Json::num(requests as f64)),
+        ("slo_p99_us", Json::num(SLO_P99_US)),
+        ("modes", Json::Arr(mode_rows)),
+        (
+            "comparison",
+            Json::obj(vec![
+                ("variant", Json::str("mpd")),
+                ("blocking_rps", Json::num(blocking.rps)),
+                ("event_rps", Json::num(event.rps)),
+                ("event_over_blocking", Json::num(ratio)),
+                ("blocking_p99_us", Json::num(blocking.p99_us)),
+                ("event_p99_us", Json::num(event.p99_us)),
+            ]),
+        ),
+        ("sweep", Json::Arr(sweep_rows)),
+    ]);
+    let path = results_dir().join("BENCH_7.json");
+    std::fs::write(&path, doc.to_string()).expect("write BENCH_7.json");
+    println!("wrote {}", path.display());
     println!("OK");
 }

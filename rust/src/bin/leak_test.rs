@@ -201,7 +201,12 @@ fn batcher_pool_check() -> anyhow::Result<()> {
 
     let (h, join) = spawn(
         backend,
-        BatcherConfig { max_batch: 16, max_wait: std::time::Duration::from_micros(200), queue_depth: 256 },
+        BatcherConfig {
+            max_batch: 16,
+            max_wait: std::time::Duration::from_micros(200),
+            deadline: std::time::Duration::ZERO,
+            queue_depth: 256,
+        },
     );
     // warmup then measure
     let x: Vec<f32> = (0..784).map(|i| (i as f32 * 0.01).sin()).collect();

@@ -217,23 +217,50 @@ pub struct ServerConfig {
     pub host: String,
     /// TCP port; 0 picks an ephemeral port.
     pub port: u16,
-    /// Fixed accept/worker thread count — the hard bound on concurrently
-    /// served connections (excess connections wait in the kernel backlog).
+    /// Front-end mode: `"event"` (nonblocking readiness loop, the default)
+    /// or `"blocking"` (thread-per-connection accept pool, the benchmark
+    /// baseline).
+    pub mode: String,
+    /// Blocking mode only: fixed accept/worker thread count — the hard bound
+    /// on concurrently served connections (excess connections wait in the
+    /// kernel backlog).
     pub accept_threads: usize,
-    /// Secondary cap that 503s connections beyond it; since each accept
-    /// thread serves one connection at a time, this only takes effect when
-    /// set *below* `accept_threads`. Raise `accept_threads` to raise
-    /// concurrency.
+    /// Event mode only: number of event-loop threads (connections are
+    /// sharded across them at accept time).
+    pub event_threads: usize,
+    /// Connections beyond this are shed with 503 + `Retry-After` before any
+    /// bytes are read.
     pub max_connections: usize,
+    /// Requests beyond this many concurrently dispatched inferences are shed
+    /// with 429 + `Retry-After` before the body is read (0 = unlimited).
+    pub max_inflight: usize,
+    /// Per-client-IP in-flight cap so one hot client cannot monopolise the
+    /// admission budget (0 = disabled).
+    pub per_client_inflight: usize,
     pub keep_alive: bool,
-    /// Per-read socket timeout (idle keep-alive reaper), in ms.
+    /// Deadline for reading a request (head + body), in ms; expiry → 408.
     pub read_timeout_ms: u64,
+    /// Deadline for writing a queued response, in ms; expiry closes the
+    /// connection.
+    pub write_timeout_ms: u64,
+    /// Idle keep-alive reaper: connections with no request in progress are
+    /// closed after this long, in ms.
+    pub idle_timeout_ms: u64,
+    /// `Retry-After` header value attached to 429/503 shed responses, in
+    /// seconds (0 omits the header).
+    pub retry_after_s: u32,
     /// Request bodies above this return 413, in KiB.
     pub max_body_kb: usize,
     /// Dynamic batching: largest batch assembled per worker dispatch.
     pub max_batch: usize,
-    /// Dynamic batching: wait after the first queued request, in µs.
+    /// Dynamic batching: wait after the first queued request, in µs
+    /// (legacy fixed-window policy; used when `deadline_us` = 0).
     pub max_wait_us: u64,
+    /// Dynamic batching: per-request latency budget in µs — the batcher
+    /// waits `deadline − est(exec)` after the first queued request, capped
+    /// by `max_wait_us`. 0 disables the budget and falls back to the fixed
+    /// `max_wait_us` window.
+    pub deadline_us: u64,
     /// Bounded admission queue per variant (backpressure → 429).
     pub queue_depth: usize,
 }
@@ -243,13 +270,21 @@ impl Default for ServerConfig {
         Self {
             host: "127.0.0.1".into(),
             port: 8077,
+            mode: "event".into(),
             accept_threads: 8,
-            max_connections: 64,
+            event_threads: 2,
+            max_connections: 1024,
+            max_inflight: 256,
+            per_client_inflight: 0,
             keep_alive: true,
             read_timeout_ms: 5_000,
+            write_timeout_ms: 5_000,
+            idle_timeout_ms: 10_000,
+            retry_after_s: 1,
             max_body_kb: 1024,
             max_batch: 32,
-            max_wait_us: 300,
+            max_wait_us: 2_000,
+            deadline_us: 2_000,
             queue_depth: 256,
         }
     }
@@ -263,11 +298,18 @@ impl ServerConfig {
     pub fn http_config(&self) -> crate::server::HttpConfig {
         crate::server::HttpConfig {
             addr: self.addr(),
+            mode: crate::server::ServeMode::parse(&self.mode).unwrap_or_default(),
             accept_threads: self.accept_threads,
+            event_threads: self.event_threads,
             max_connections: self.max_connections,
+            max_inflight: self.max_inflight,
+            per_client_inflight: self.per_client_inflight,
             keep_alive: self.keep_alive,
             read_timeout: std::time::Duration::from_millis(self.read_timeout_ms),
+            write_timeout: std::time::Duration::from_millis(self.write_timeout_ms),
+            idle_timeout: std::time::Duration::from_millis(self.idle_timeout_ms),
             max_body_bytes: self.max_body_kb * 1024,
+            retry_after_s: self.retry_after_s,
         }
     }
 
@@ -275,6 +317,7 @@ impl ServerConfig {
         crate::server::BatcherConfig {
             max_batch: self.max_batch,
             max_wait: std::time::Duration::from_micros(self.max_wait_us),
+            deadline: std::time::Duration::from_micros(self.deadline_us),
             queue_depth: self.queue_depth,
         }
     }
@@ -283,8 +326,14 @@ impl ServerConfig {
         if self.host.is_empty() {
             return Err("server.host must not be empty".into());
         }
+        if crate::server::ServeMode::parse(&self.mode).is_none() {
+            return Err(format!("server.mode {:?} must be \"event\" or \"blocking\"", self.mode));
+        }
         if self.accept_threads == 0 || self.accept_threads > 1024 {
             return Err(format!("server.accept_threads {} out of range 1..=1024", self.accept_threads));
+        }
+        if self.event_threads == 0 || self.event_threads > 1024 {
+            return Err(format!("server.event_threads {} out of range 1..=1024", self.event_threads));
         }
         if self.max_connections == 0 {
             return Err("server.max_connections must be ≥ 1".into());
@@ -395,17 +444,39 @@ impl ExperimentConfig {
             cfg.server.port =
                 u16::try_from(v).map_err(|_| format!("server.port {v} out of range 0..=65535"))?;
         }
+        if let Some(v) = doc.get_str("server.mode") {
+            cfg.server.mode = v.to_string();
+        }
         if let Some(v) = doc.get_int("server.accept_threads") {
             cfg.server.accept_threads = v as usize;
         }
+        if let Some(v) = doc.get_int("server.event_threads") {
+            cfg.server.event_threads = v as usize;
+        }
         if let Some(v) = doc.get_int("server.max_connections") {
             cfg.server.max_connections = v as usize;
+        }
+        if let Some(v) = doc.get_int("server.max_inflight") {
+            cfg.server.max_inflight = v as usize;
+        }
+        if let Some(v) = doc.get_int("server.per_client_inflight") {
+            cfg.server.per_client_inflight = v as usize;
         }
         if let Some(v) = doc.get_bool("server.keep_alive") {
             cfg.server.keep_alive = v;
         }
         if let Some(v) = doc.get_int("server.read_timeout_ms") {
             cfg.server.read_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.get_int("server.write_timeout_ms") {
+            cfg.server.write_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.get_int("server.idle_timeout_ms") {
+            cfg.server.idle_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.get_int("server.retry_after_s") {
+            cfg.server.retry_after_s = u32::try_from(v)
+                .map_err(|_| format!("server.retry_after_s {v} out of range"))?;
         }
         if let Some(v) = doc.get_int("server.max_body_kb") {
             cfg.server.max_body_kb = v as usize;
@@ -415,6 +486,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_int("server.max_wait_us") {
             cfg.server.max_wait_us = v as u64;
+        }
+        if let Some(v) = doc.get_int("server.deadline_us") {
+            cfg.server.deadline_us = v as u64;
         }
         if let Some(v) = doc.get_int("server.queue_depth") {
             cfg.server.queue_depth = v as usize;
@@ -555,15 +629,25 @@ simd = false
 [server]
 host = "0.0.0.0"
 port = 9000
+mode = "blocking"
 accept_threads = 16
+event_threads = 4
+max_inflight = 32
+per_client_inflight = 4
 max_batch = 64
 max_wait_us = 500
+deadline_us = 1500
 queue_depth = 512
 keep_alive = false
+write_timeout_ms = 750
+idle_timeout_ms = 2500
+retry_after_s = 3
 "#;
         let cfg = ExperimentConfig::from_toml(text).unwrap();
         assert_eq!(cfg.server.addr(), "0.0.0.0:9000");
+        assert_eq!(cfg.server.mode, "blocking");
         assert_eq!(cfg.server.accept_threads, 16);
+        assert_eq!(cfg.server.event_threads, 4);
         assert_eq!(cfg.server.max_batch, 64);
         assert!(!cfg.server.keep_alive);
         // unspecified keys keep defaults
@@ -573,11 +657,26 @@ keep_alive = false
         let bc = cfg.server.batcher_config();
         assert_eq!(bc.max_batch, 64);
         assert_eq!(bc.max_wait, std::time::Duration::from_micros(500));
+        assert_eq!(bc.deadline, std::time::Duration::from_micros(1500));
         let hc = cfg.server.http_config();
+        assert_eq!(hc.mode, crate::server::ServeMode::Blocking);
         assert_eq!(hc.accept_threads, 16);
+        assert_eq!(hc.event_threads, 4);
+        assert_eq!(hc.max_inflight, 32);
+        assert_eq!(hc.per_client_inflight, 4);
+        assert_eq!(hc.write_timeout, std::time::Duration::from_millis(750));
+        assert_eq!(hc.idle_timeout, std::time::Duration::from_millis(2500));
+        assert_eq!(hc.retry_after_s, 3);
         assert!(!hc.keep_alive);
+        // the default mode is the event loop
+        assert_eq!(
+            ExperimentConfig::from_toml("").unwrap().server.http_config().mode,
+            crate::server::ServeMode::Event
+        );
         // invalid combinations rejected
         assert!(ExperimentConfig::from_toml("[server]\naccept_threads = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml("[server]\nevent_threads = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml("[server]\nmode = \"threaded\"\n").is_err());
         assert!(ExperimentConfig::from_toml("[server]\nqueue_depth = 0\n").is_err());
         assert!(ExperimentConfig::from_toml("[server]\nport = 70000\n").is_err());
         assert!(ExperimentConfig::from_toml("[server]\nport = -1\n").is_err());

@@ -93,15 +93,18 @@ COMMANDS
                  compressed-conv (deep-mnist-lite) plan. --precision
                  mixed quantizes masked layers to int8 and keeps dense
                  layers f32 (per-layer mixed precision on one plan)
-  serve          [--port P] [--steps N] [--split dense:0.2,mpd:0.8]
-                 [--config FILE]   quick-train a masked LeNet, register
-                 dense + csr + mpd (+ mpd-int8/dense-int8 unless
-                 quant.enabled=false; + deep-mnist-mpd[-int8] conv variants
-                 unless conv.enabled=false), serve HTTP ([server] in TOML)
-  loadgen        [--host H] [--port P] [--variant V] [--mode closed|open]
-                 [--qps F] [--concurrency N] [--requests N] [--seed S]
-                 drive load against a running server; prints p50/p99 +
-                 req/s + the non-200 fraction by status class
+  serve          [--port P] [--serve-mode event|blocking] [--steps N]
+                 [--split dense:0.2,mpd:0.8] [--config FILE]
+                 quick-train a masked LeNet, register dense + csr + mpd
+                 (+ mpd-int8/dense-int8 unless quant.enabled=false;
+                 + deep-mnist-mpd[-int8] conv variants unless
+                 conv.enabled=false), serve HTTP ([server] in TOML)
+  loadgen        [--host H] [--port P] [--variant V]
+                 [--mode closed|open|sweep] [--qps F] [--concurrency N]
+                 [--requests N] [--seed S] [--qps-points F,F,…]
+                 [--concurrencies N,N,…]   drive load against a running
+                 server; prints p50/p99 + req/s + per-status-class
+                 latency; sweep mode walks an offered-load grid
   bench-fig1     [--out DIR]
   bench-fig4a    [--masks N] [--steps N] [--config FILE]
   bench-fig4b    [--masks N] [--out DIR]
@@ -558,6 +561,10 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     if let Some(p) = flags.get("port") {
         cfg.server.port = p.parse()?;
     }
+    if let Some(m) = flags.get("serve-mode") {
+        cfg.server.mode = m.clone();
+        cfg.server.validate().map_err(|e| anyhow::anyhow!(e))?;
+    }
     let steps: usize = flags.get("steps").map(|s| s.parse()).transpose()?.unwrap_or(150);
 
     // Quick native training on synthetic MNIST-like data: enough to make the
@@ -698,8 +705,10 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     }
 
     let variants = router.variant_names().join("/");
-    let server = HttpServer::start(Arc::new(router), cfg.server.http_config())?;
-    println!("serving {variants} on {}", server.url());
+    let hc = cfg.server.http_config();
+    let mode_name = hc.mode.name();
+    let server = HttpServer::start(Arc::new(router), hc)?;
+    println!("serving {variants} on {} ({mode_name} front-end)", server.url());
     println!("  curl {}/healthz", server.url());
     println!("  curl {}/variants", server.url());
     println!("  curl {}/metrics", server.url());
@@ -710,7 +719,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
 }
 
 fn cmd_loadgen(flags: &Flags) -> anyhow::Result<()> {
-    use mpdc::server::loadgen::{self, Arrival, LoadgenConfig};
+    use mpdc::server::loadgen::{self, Arrival, LoadgenConfig, SweepConfig};
     use std::net::ToSocketAddrs;
 
     let host = flags.get("host").map(String::as_str).unwrap_or("127.0.0.1");
@@ -722,10 +731,79 @@ fn cmd_loadgen(flags: &Flags) -> anyhow::Result<()> {
     let variant = flags.get("variant").cloned().unwrap_or_else(|| "mpd".into());
     let mode = flags.get("mode").map(String::as_str).unwrap_or("closed");
     let qps: f64 = flags.get("qps").map(|s| s.parse()).transpose()?.unwrap_or(500.0);
+
+    fn parse_list<T: std::str::FromStr>(s: &str, what: &str) -> anyhow::Result<Vec<T>> {
+        s.split(',')
+            .map(|v| v.trim().parse::<T>().map_err(|_| anyhow::anyhow!("bad {what} entry {v:?}")))
+            .collect()
+    }
+
+    if mode == "sweep" {
+        // Open-loop sweep over a grid of offered loads: the latency-vs-load
+        // curve behind results/BENCH_7.json, driven manually.
+        let mut sweep_cfg = SweepConfig::default();
+        if let Some(s) = flags.get("qps-points") {
+            sweep_cfg.qps_points = parse_list(s, "--qps-points")?;
+        }
+        if let Some(s) = flags.get("concurrencies") {
+            sweep_cfg.concurrencies = parse_list(s, "--concurrencies")?;
+        }
+        if let Some(s) = flags.get("requests") {
+            sweep_cfg.requests_per_point = s.parse()?;
+        }
+        if let Some(s) = flags.get("seed") {
+            sweep_cfg.seed = s.parse()?;
+        }
+        let variants = loadgen::discover_variants(addr).map_err(|e| anyhow::anyhow!(e))?;
+        let Some((_, feature_dim, _)) = variants.iter().find(|(n, _, _)| *n == variant) else {
+            anyhow::bail!(
+                "variant {variant:?} not served (have: {})",
+                variants.iter().map(|(n, _, _)| n.as_str()).collect::<Vec<_>>().join(", ")
+            );
+        };
+        println!("sweeping open load at http://{addr}/infer/{variant} ({feature_dim} features)…");
+        let points = loadgen::sweep(addr, &variant, *feature_dim, &sweep_cfg);
+        let mut t = Table::new(&[
+            "conc", "offered q/s", "achieved q/s", "sent", "ok", "non-200 %", "p50 µs", "p99 µs",
+            "non-200 p99 µs",
+        ]);
+        for p in &points {
+            t.row(&[
+                p.concurrency.to_string(),
+                format!("{:.0}", p.offered_qps),
+                format!("{:.0}", p.achieved_rps),
+                p.sent.to_string(),
+                p.ok.to_string(),
+                format!("{:.2}", p.non_200_rate * 100.0),
+                format!("{:.0}", p.p50_us),
+                format!("{:.0}", p.p99_us),
+                format!("{:.0}", p.non200_p99_us),
+            ]);
+            mpdc::util::json::append_jsonl(
+                std::path::Path::new("results/serve_loadgen.jsonl"),
+                &Json::obj(vec![
+                    ("variant", Json::str(variant.as_str())),
+                    ("mode", Json::str("sweep")),
+                    ("concurrency", Json::num(p.concurrency as f64)),
+                    ("offered_qps", Json::num(p.offered_qps)),
+                    ("achieved_rps", Json::num(p.achieved_rps)),
+                    ("sent", Json::num(p.sent as f64)),
+                    ("ok", Json::num(p.ok as f64)),
+                    ("non200_rate", Json::num(p.non_200_rate)),
+                    ("p50_us", Json::num(p.p50_us)),
+                    ("p99_us", Json::num(p.p99_us)),
+                    ("non200_p99_us", Json::num(p.non200_p99_us)),
+                ]),
+            )?;
+        }
+        println!("{}", t.render());
+        return Ok(());
+    }
+
     let arrival = match mode {
         "closed" => Arrival::Closed,
         "open" => Arrival::Poisson { target_qps: qps },
-        other => anyhow::bail!("unknown --mode {other:?} (closed|open)"),
+        other => anyhow::bail!("unknown --mode {other:?} (closed|open|sweep)"),
     };
     let cfg = LoadgenConfig {
         concurrency: flags.get("concurrency").map(|s| s.parse()).transpose()?.unwrap_or(4),
@@ -743,7 +821,10 @@ fn cmd_loadgen(flags: &Flags) -> anyhow::Result<()> {
     };
     println!("driving {mode} load at http://{addr}/infer/{variant} ({} features)…", feature_dim);
     let report = loadgen::run_http(addr, &variant, *feature_dim, &cfg);
-    let mut t = Table::new(&["variant", "mode", "sent", "ok", "429", "err", "req/s", "p50 µs", "p90 µs", "p99 µs"]);
+    let mut t = Table::new(&[
+        "variant", "mode", "sent", "ok", "429", "err", "req/s", "p50 µs", "p90 µs", "p99 µs",
+        "non-200 p99 µs",
+    ]);
     t.row(&[
         variant.clone(),
         mode.to_string(),
@@ -755,6 +836,7 @@ fn cmd_loadgen(flags: &Flags) -> anyhow::Result<()> {
         format!("{:.0}", report.latency.percentile_us(0.5)),
         format!("{:.0}", report.latency.percentile_us(0.9)),
         format!("{:.0}", report.latency.percentile_us(0.99)),
+        format!("{:.0}", report.latency_non200.percentile_us(0.99)),
     ]);
     println!("{}", t.render());
     println!(
@@ -779,6 +861,8 @@ fn cmd_loadgen(flags: &Flags) -> anyhow::Result<()> {
             ("rps", Json::num(report.throughput_rps())),
             ("p50_us", Json::num(report.latency.percentile_us(0.5))),
             ("p99_us", Json::num(report.latency.percentile_us(0.99))),
+            ("non200_p50_us", Json::num(report.latency_non200.percentile_us(0.5))),
+            ("non200_p99_us", Json::num(report.latency_non200.percentile_us(0.99))),
         ]),
     )?;
     Ok(())

@@ -2,11 +2,24 @@
 //!
 //! Requests are admitted through a *bounded* queue (backpressure: a full
 //! queue rejects instead of buffering unboundedly), collected by a worker
-//! thread into batches of at most `max_batch`, waiting at most `max_wait`
-//! after the first request arrives (the classic dynamic-batching policy), and
-//! executed on an [`InferBackend`]. MPDCompress's block-diagonal layers make
-//! the backend's per-batch cost ~1/c of dense — the batcher is how that
-//! translates into serving throughput.
+//! thread into batches of at most `max_batch`, and executed on an
+//! [`InferBackend`]. MPDCompress's block-diagonal layers make the backend's
+//! per-batch cost ~1/c of dense — the batcher is how that translates into
+//! serving throughput.
+//!
+//! Batch close time is **deadline-budget based** (see [`wait_budget`]): with
+//! `deadline` set, a batch closes when the oldest request's remaining
+//! latency budget — deadline minus an EWMA estimate of the backend's batch
+//! execution time, measured from *enqueue* — is spent. Under light load
+//! that waits nearly the full budget (maximum batching), under heavy load
+//! queue wait eats the budget and batches close immediately (minimum added
+//! latency). `deadline == 0` falls back to the classic fixed `max_wait`
+//! window.
+//!
+//! Callers dispatch either synchronously ([`BatcherHandle::infer`], blocks
+//! the calling thread) or asynchronously ([`BatcherHandle::infer_async`],
+//! results land in a [`CompletionQueue`] that wakes the owning event loop —
+//! the path `server/http.rs` uses).
 //!
 //! The worker is allocation-frugal by design: the stacked-input buffer, the
 //! batch output buffer, and the request list are all reused across batches,
@@ -31,7 +44,7 @@
 use crate::server::metrics::ServerMetrics;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// An inference backend consumed by one worker thread. Backends need not be
@@ -48,25 +61,96 @@ pub trait InferBackend: 'static {
     fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> anyhow::Result<()>;
 }
 
+/// Where a finished request's result goes: a blocking caller's reply channel
+/// ([`BatcherHandle::infer`]) or an event loop's [`CompletionQueue`]
+/// ([`BatcherHandle::infer_async`]).
+enum Responder {
+    Sync(std::sync::mpsc::Sender<Result<Vec<f32>, String>>),
+    Async { sink: Arc<CompletionQueue>, token: u64 },
+}
+
+impl Responder {
+    fn send(self, result: Result<Vec<f32>, String>) {
+        match self {
+            Responder::Sync(tx) => {
+                let _ = tx.send(result);
+            }
+            Responder::Async { sink, token } => sink.push(token, result),
+        }
+    }
+}
+
+/// Completion mailbox for non-blocking dispatch: batcher workers push
+/// `(token, result)` pairs and fire the wake callback; the owning event loop
+/// drains on its next turn. The wake callback is any `Fn` (the HTTP front-end
+/// passes an [`crate::server::evloop::Waker`]), so this module stays free of
+/// platform readiness details.
+pub struct CompletionQueue {
+    queue: Mutex<Vec<(u64, Result<Vec<f32>, String>)>>,
+    wake: Box<dyn Fn() + Send + Sync>,
+}
+
+impl CompletionQueue {
+    pub fn new(wake: impl Fn() + Send + Sync + 'static) -> Arc<Self> {
+        Arc::new(Self { queue: Mutex::new(Vec::new()), wake: Box::new(wake) })
+    }
+
+    fn push(&self, token: u64, result: Result<Vec<f32>, String>) {
+        self.queue.lock().unwrap().push((token, result));
+        (self.wake)();
+    }
+
+    /// Move all pending completions into `out` (appended; not cleared).
+    pub fn drain_into(&self, out: &mut Vec<(u64, Result<Vec<f32>, String>)>) {
+        out.append(&mut self.queue.lock().unwrap());
+    }
+}
+
 struct Request {
     input: Vec<f32>,
     enqueued: Instant,
-    resp: std::sync::mpsc::Sender<Result<Vec<f32>, String>>,
+    resp: Responder,
 }
 
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     pub max_batch: usize,
+    /// Fixed-window policy: wait at most this long after the first queued
+    /// request. With `deadline` set this becomes inert (see [`wait_budget`]).
     pub max_wait: Duration,
+    /// Deadline-budget policy: a batch closes when the *oldest* request's
+    /// latency budget is spent — at `enqueue + deadline − exec_estimate`,
+    /// where the execution estimate is an EWMA of recent backend batch
+    /// times. `ZERO` disables the policy and falls back to `max_wait`.
+    pub deadline: Duration,
     /// Bounded admission queue length (backpressure).
     pub queue_depth: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { max_batch: 32, max_wait: Duration::from_millis(2), queue_depth: 256 }
+        Self {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            deadline: Duration::from_millis(2),
+            queue_depth: 256,
+        }
     }
+}
+
+/// How long the worker may keep a batch open, measured from the oldest
+/// request's enqueue time. Pure policy — unit-tested exactly:
+///
+/// * `deadline == 0`: the legacy fixed window (`max_wait`).
+/// * otherwise: whatever remains of the oldest request's deadline budget
+///   after reserving the estimated execution time. Saturates at zero — an
+///   over-budget request dispatches immediately rather than waiting.
+pub(crate) fn wait_budget(deadline: Duration, exec_est: Duration, max_wait: Duration) -> Duration {
+    if deadline.is_zero() {
+        return max_wait;
+    }
+    deadline.saturating_sub(exec_est)
 }
 
 /// Handle to a running batcher. Cloneable; dropping all clones shuts the
@@ -115,19 +199,44 @@ impl BatcherHandle {
             return Err(ServeError::BadInput { got: input.len(), expected: self.feature_dim });
         }
         let (rtx, rrx) = std::sync::mpsc::channel();
-        let req = Request { input, enqueued: Instant::now(), resp: rtx };
-        match self.tx.try_send(req) {
-            Ok(()) => {}
-            Err(TrySendError::Full(_)) => {
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                return Err(ServeError::Overloaded);
-            }
-            Err(TrySendError::Disconnected(_)) => return Err(ServeError::Closed),
-        }
+        self.enqueue(Request { input, enqueued: Instant::now(), resp: Responder::Sync(rtx) })?;
         match rrx.recv() {
             Ok(Ok(v)) => Ok(v),
             Ok(Err(e)) => Err(ServeError::Backend(e)),
             Err(_) => Err(ServeError::Closed),
+        }
+    }
+
+    /// Non-blocking inference for event-driven callers: enqueue and return
+    /// immediately; the result lands in `sink` tagged with `token` (and the
+    /// sink's wake callback fires). Admission errors — bad input size, queue
+    /// full, worker gone — are returned synchronously and nothing reaches
+    /// the sink.
+    pub fn infer_async(
+        &self,
+        input: Vec<f32>,
+        sink: &Arc<CompletionQueue>,
+        token: u64,
+    ) -> Result<(), ServeError> {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        if input.len() != self.feature_dim {
+            return Err(ServeError::BadInput { got: input.len(), expected: self.feature_dim });
+        }
+        self.enqueue(Request {
+            input,
+            enqueued: Instant::now(),
+            resp: Responder::Async { sink: sink.clone(), token },
+        })
+    }
+
+    fn enqueue(&self, req: Request) -> Result<(), ServeError> {
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(ServeError::Overloaded)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(ServeError::Closed),
         }
     }
 
@@ -180,21 +289,28 @@ where
             let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
             let mut x: Vec<f32> = Vec::with_capacity(max_batch * feature_dim);
             let mut y: Vec<f32> = Vec::with_capacity(max_batch * out_dim);
+            // EWMA of backend batch execution time; reserves headroom so a
+            // deadline-budget batch still finishes inside its deadline.
+            let mut exec_est = Duration::ZERO;
             loop {
                 // block for the first request of a batch
                 let first = match rx.recv() {
                     Ok(r) => r,
                     Err(_) => return, // all senders dropped
                 };
-                let deadline = Instant::now() + cfg.max_wait;
+                // The close time is anchored at the oldest request's enqueue
+                // (not dequeue) — queue wait already spent counts against
+                // the budget.
+                let close_at =
+                    first.enqueued + wait_budget(cfg.deadline, exec_est, cfg.max_wait);
                 batch.clear();
                 batch.push(first);
                 while batch.len() < max_batch {
                     let now = Instant::now();
-                    if now >= deadline {
+                    if now >= close_at {
                         break;
                     }
-                    match rx.recv_timeout(deadline - now) {
+                    match rx.recv_timeout(close_at - now) {
                         Ok(r) => batch.push(r),
                         Err(RecvTimeoutError::Timeout) => break,
                         Err(RecvTimeoutError::Disconnected) => break,
@@ -209,20 +325,24 @@ where
                 }
                 metrics.batches.fetch_add(1, Ordering::Relaxed);
                 metrics.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
+                metrics.batch_fill.record(n as u64);
                 y.resize(n * out_dim, 0.0);
+                let exec_start = Instant::now();
                 let result = backend.infer_into(&x, n, &mut y[..n * out_dim]);
+                let exec = exec_start.elapsed();
+                exec_est = if exec_est.is_zero() { exec } else { (exec_est * 3 + exec) / 4 };
                 match result {
                     Ok(()) => {
                         for (i, r) in batch.drain(..).enumerate() {
                             metrics.latency.record(r.enqueued.elapsed());
-                            let _ = r.resp.send(Ok(y[i * out_dim..(i + 1) * out_dim].to_vec()));
+                            r.resp.send(Ok(y[i * out_dim..(i + 1) * out_dim].to_vec()));
                         }
                     }
                     Err(e) => {
                         let msg = e.to_string();
                         for r in batch.drain(..) {
                             metrics.latency.record(r.enqueued.elapsed());
-                            let _ = r.resp.send(Err(msg.clone()));
+                            r.resp.send(Err(msg.clone()));
                         }
                     }
                 }
@@ -523,7 +643,12 @@ mod tests {
     fn concurrent_requests_get_batched() {
         let batches = Arc::new(std::sync::Mutex::new(Vec::new()));
         let b = Echo { dim: 2, batches: batches.clone(), fail: false, delay: Duration::from_millis(1) };
-        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20), queue_depth: 64 };
+        let cfg = BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            deadline: Duration::ZERO,
+            queue_depth: 64,
+        };
         let (h, join) = spawn(b, cfg);
         let mut threads = Vec::new();
         for i in 0..16 {
@@ -550,7 +675,12 @@ mod tests {
     fn backpressure_rejects_when_full() {
         // slow backend + tiny queue + many concurrent callers ⇒ some Overloaded
         let b = Echo { dim: 1, batches: Default::default(), fail: false, delay: Duration::from_millis(30) };
-        let cfg = BatcherConfig { max_batch: 1, max_wait: Duration::ZERO, queue_depth: 1 };
+        let cfg = BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            deadline: Duration::ZERO,
+            queue_depth: 1,
+        };
         let (h, join) = spawn(b, cfg);
         let mut threads = Vec::new();
         let rejected = Arc::new(std::sync::atomic::AtomicU64::new(0));
@@ -569,6 +699,70 @@ mod tests {
             t.join().unwrap();
         }
         assert!(rejected.load(Ordering::Relaxed) > 0, "expected backpressure rejections");
+        drop(h);
+        join.join().unwrap();
+    }
+
+    /// The deadline-budget policy is pure arithmetic — test it exactly
+    /// instead of racing wall clocks.
+    #[test]
+    fn wait_budget_schedule() {
+        let ms = Duration::from_millis;
+        // legacy fixed window when no deadline is set
+        assert_eq!(wait_budget(Duration::ZERO, ms(1), ms(2)), ms(2));
+        // fresh worker (no exec estimate yet): full budget
+        assert_eq!(wait_budget(ms(5), Duration::ZERO, ms(2)), ms(5));
+        // estimate reserves headroom out of the budget
+        assert_eq!(wait_budget(ms(5), ms(3), ms(2)), ms(2));
+        // over-budget: saturate to zero (dispatch immediately), never panic
+        assert_eq!(wait_budget(ms(5), ms(9), ms(2)), Duration::ZERO);
+        // max_wait is inert once a deadline is set
+        assert_eq!(wait_budget(ms(10), ms(1), Duration::ZERO), ms(9));
+    }
+
+    #[test]
+    fn async_completions_land_in_sink_with_wake() {
+        let b = Echo { dim: 2, batches: Default::default(), fail: false, delay: Duration::ZERO };
+        let (h, join) = spawn(b, BatcherConfig::default());
+        let wakes = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let wakes2 = wakes.clone();
+        let sink = CompletionQueue::new(move || {
+            wakes2.fetch_add(1, Ordering::Relaxed);
+        });
+        h.infer_async(vec![1.0, 2.0], &sink, 77).unwrap();
+        h.infer_async(vec![3.0, 4.0], &sink, 78).unwrap();
+        // admission errors are synchronous and never reach the sink
+        assert_eq!(
+            h.infer_async(vec![1.0], &sink, 99),
+            Err(ServeError::BadInput { got: 1, expected: 2 })
+        );
+        let mut done = Vec::new();
+        let t0 = Instant::now();
+        while done.len() < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "completions never arrived");
+            sink.drain_into(&mut done);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        done.sort_by_key(|(t, _)| *t);
+        assert_eq!(done[0].0, 77);
+        assert_eq!(done[0].1.as_ref().unwrap(), &vec![2.0, 4.0]);
+        assert_eq!(done[1].0, 78);
+        assert_eq!(done[1].1.as_ref().unwrap(), &vec![6.0, 8.0]);
+        assert!(wakes.load(Ordering::Relaxed) >= 2, "each completion fires the wake callback");
+        drop(h);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn batch_fill_histogram_counts_every_batch() {
+        let b = Echo { dim: 1, batches: Default::default(), fail: false, delay: Duration::ZERO };
+        let (h, join) = spawn(b, BatcherConfig::default());
+        for _ in 0..5 {
+            h.infer(vec![1.0]).unwrap();
+        }
+        let batches = h.metrics.batches.load(Ordering::Relaxed);
+        assert_eq!(h.metrics.batch_fill.count(), batches);
+        assert_eq!(h.metrics.batch_fill.sum(), h.metrics.batched_requests.load(Ordering::Relaxed));
         drop(h);
         join.join().unwrap();
     }

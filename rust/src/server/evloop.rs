@@ -1,0 +1,529 @@
+//! Minimal readiness-polling shim for the event-driven HTTP front-end.
+//!
+//! The no-external-deps rule means no `mio`/`libc` crates, so this module
+//! declares the handful of raw syscalls the front-end needs itself:
+//!
+//! * **Linux**: `epoll_create1` / `epoll_ctl` / `epoll_wait` (level-
+//!   triggered). The `epoll_event` struct is `repr(C, packed)` on x86-64,
+//!   matching the kernel ABI.
+//! * **Other Unix**: a portable `poll(2)` fallback that rebuilds the pollfd
+//!   array from the registration table on every wait — O(n) per wait, fine
+//!   for the connection counts a dev laptop sees.
+//!
+//! [`Poller`] is the thin abstraction over both: register a raw fd with a
+//! `u64` token and an interest mask ([`EV_READ`] / [`EV_WRITE`]), then
+//! [`Poller::wait`] for [`Event`]s. All registration methods take `&self`
+//! (epoll is thread-safe; the fallback uses a mutex) so the poller can sit
+//! behind a shared loop context.
+//!
+//! [`waker_pair`] builds the cross-thread wake channel out of a nonblocking
+//! `UnixStream::pair` — pure std, no raw pipes — used by batcher workers to
+//! nudge an event loop parked in `wait` when a completion lands.
+//!
+//! [`Backoff`] is the accept-error backoff policy: exponential envelope with
+//! deterministic seeded jitter (the repo's own [`Xoshiro256pp`]), replacing
+//! the old fixed 10 ms sleep. It is pure state → the schedule is unit-tested
+//! exactly.
+
+use crate::mask::prng::Xoshiro256pp;
+use std::time::Duration;
+
+/// Interest: readable readiness.
+pub const EV_READ: u32 = 0b01;
+/// Interest: writable readiness.
+pub const EV_WRITE: u32 = 0b10;
+
+/// One readiness event delivered by [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token the fd was registered under.
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Error/hangup on the fd (delivered even without interest).
+    pub hangup: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Linux backend: epoll
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::{Event, EV_READ, EV_WRITE};
+    use std::io;
+    use std::os::raw::c_int;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    // Kernel ABI: on x86-64 epoll_event is packed (no padding between the
+    // u32 mask and the u64 payload); other architectures use natural layout.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(epfd: c_int, events: *mut EpollEvent, maxevents: c_int, timeout: c_int) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    /// Level-triggered epoll instance.
+    pub struct Poller {
+        epfd: c_int,
+    }
+
+    fn mask_of(interest: u32) -> u32 {
+        let mut m = 0;
+        if interest & EV_READ != 0 {
+            // RDHUP: peer shut down its write half — surfaces as readable
+            // (read returns 0), which is how the state machines detect
+            // half-close.
+            m |= EPOLLIN | EPOLLRDHUP;
+        }
+        if interest & EV_WRITE != 0 {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Self> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Self { epfd })
+        }
+
+        fn ctl(&self, op: c_int, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+            let mut ev = EpollEvent { events: mask_of(interest), data: token };
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(&self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        /// Wait for readiness; fills `out` (cleared first). `None` blocks
+        /// until an event arrives. EINTR is not an error — it returns with
+        /// zero events so the caller can re-check deadlines.
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let ms: c_int = match timeout {
+                None => -1,
+                Some(d) => {
+                    let ms = d.as_millis().min(i32::MAX as u128) as i64;
+                    // round zero-but-nonempty timeouts up so we don't spin
+                    if ms == 0 && !d.is_zero() { 1 } else { ms as c_int }
+                }
+            };
+            let mut buf = [EpollEvent { events: 0, data: 0 }; 256];
+            let n = unsafe { epoll_wait(self.epfd, buf.as_mut_ptr(), buf.len() as c_int, ms) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in buf.iter().take(n as usize) {
+                // copy out of the (possibly packed) struct before use
+                let bits = { ev.events };
+                let token = { ev.data };
+                out.push(Event {
+                    token,
+                    readable: bits & (EPOLLIN | EPOLLRDHUP) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    hangup: bits & (EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// portable Unix fallback: poll(2)
+// ---------------------------------------------------------------------------
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod imp {
+    use super::{Event, EV_READ, EV_WRITE};
+    use std::io;
+    use std::os::raw::{c_int, c_short};
+    use std::os::unix::io::RawFd;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    #[cfg(any(target_os = "macos", target_os = "ios"))]
+    type NfdsT = std::os::raw::c_uint;
+    #[cfg(not(any(target_os = "macos", target_os = "ios")))]
+    type NfdsT = std::os::raw::c_ulong;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+    }
+
+    const POLLIN: c_short = 0x001;
+    const POLLOUT: c_short = 0x004;
+    const POLLERR: c_short = 0x008;
+    const POLLHUP: c_short = 0x010;
+
+    struct Reg {
+        fd: RawFd,
+        token: u64,
+        interest: u32,
+    }
+
+    /// `poll(2)`-backed poller: the registration table is rebuilt into a
+    /// pollfd array on every wait.
+    pub struct Poller {
+        regs: Mutex<Vec<Reg>>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Self> {
+            Ok(Self { regs: Mutex::new(Vec::new()) })
+        }
+
+        pub fn register(&self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+            let mut regs = self.regs.lock().unwrap();
+            if regs.iter().any(|r| r.fd == fd) {
+                return Err(io::Error::new(io::ErrorKind::AlreadyExists, "fd already registered"));
+            }
+            regs.push(Reg { fd, token, interest });
+            Ok(())
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+            let mut regs = self.regs.lock().unwrap();
+            match regs.iter_mut().find(|r| r.fd == fd) {
+                Some(r) => {
+                    r.token = token;
+                    r.interest = interest;
+                    Ok(())
+                }
+                None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+            }
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            let mut regs = self.regs.lock().unwrap();
+            let before = regs.len();
+            regs.retain(|r| r.fd != fd);
+            if regs.len() == before {
+                return Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"));
+            }
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let (mut fds, tokens): (Vec<PollFd>, Vec<u64>) = {
+                let regs = self.regs.lock().unwrap();
+                let fds = regs
+                    .iter()
+                    .map(|r| {
+                        let mut ev: c_short = 0;
+                        if r.interest & EV_READ != 0 {
+                            ev |= POLLIN;
+                        }
+                        if r.interest & EV_WRITE != 0 {
+                            ev |= POLLOUT;
+                        }
+                        PollFd { fd: r.fd, events: ev, revents: 0 }
+                    })
+                    .collect();
+                (fds, regs.iter().map(|r| r.token).collect())
+            };
+            let ms: c_int = match timeout {
+                None => -1,
+                Some(d) => {
+                    let ms = d.as_millis().min(i32::MAX as u128) as i64;
+                    if ms == 0 && !d.is_zero() { 1 } else { ms as c_int }
+                }
+            };
+            let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, ms) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for (pfd, &token) in fds.iter().zip(&tokens) {
+                let r = pfd.revents;
+                if r == 0 {
+                    continue;
+                }
+                out.push(Event {
+                    token,
+                    readable: r & POLLIN != 0,
+                    writable: r & POLLOUT != 0,
+                    hangup: r & (POLLERR | POLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(unix)]
+pub use imp::Poller;
+
+// ---------------------------------------------------------------------------
+// cross-thread waker
+// ---------------------------------------------------------------------------
+
+/// Write end of the wake channel. Cheap, lock-free, safe to call from any
+/// thread (batcher workers, shutdown paths). A full pipe is fine — the loop
+/// only needs *a* pending byte to wake, not one per call.
+#[cfg(unix)]
+pub struct Waker {
+    tx: std::os::unix::net::UnixStream,
+}
+
+#[cfg(unix)]
+impl Waker {
+    pub fn wake(&self) {
+        use std::io::Write as _;
+        let _ = (&self.tx).write(&[1u8]);
+    }
+}
+
+/// Build the wake channel: returns the [`Waker`] (write end) and the read
+/// end to register with the loop's poller. Both ends are nonblocking.
+#[cfg(unix)]
+pub fn waker_pair() -> std::io::Result<(Waker, std::os::unix::net::UnixStream)> {
+    let (tx, rx) = std::os::unix::net::UnixStream::pair()?;
+    tx.set_nonblocking(true)?;
+    rx.set_nonblocking(true)?;
+    Ok((Waker { tx }, rx))
+}
+
+/// Drain all pending wake bytes from the read end (level-triggered pollers
+/// would otherwise re-report it forever).
+#[cfg(unix)]
+pub fn drain_waker(rx: &std::os::unix::net::UnixStream) {
+    use std::io::Read as _;
+    let mut buf = [0u8; 64];
+    while let Ok(n) = (&*rx).read(&mut buf) {
+        if n == 0 {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// accept-error backoff
+// ---------------------------------------------------------------------------
+
+/// Exponential backoff with deterministic seeded jitter for accept-loop
+/// errors (EMFILE under fd exhaustion and friends). The k-th delay since the
+/// last [`Backoff::reset`] is uniform in `[e/2, e]` where
+/// `e = min(base·2^k, max)` — the envelope doubles, the jitter decorrelates
+/// the retry times of parallel accept loops, and the same seed replays the
+/// same schedule (unit-tested below).
+pub struct Backoff {
+    base: Duration,
+    max: Duration,
+    attempt: u32,
+    rng: Xoshiro256pp,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, max: Duration, seed: u64) -> Self {
+        assert!(!base.is_zero(), "backoff base must be nonzero");
+        assert!(max >= base, "backoff max must be ≥ base");
+        Self { base, max, attempt: 0, rng: Xoshiro256pp::seed_from_u64(seed) }
+    }
+
+    /// Defaults used by the HTTP front-end: 1 ms → 250 ms.
+    pub fn for_accept(seed: u64) -> Self {
+        Self::new(Duration::from_millis(1), Duration::from_millis(250), seed)
+    }
+
+    /// Next delay in the schedule (advances the attempt counter).
+    pub fn next_delay(&mut self) -> Duration {
+        let shift = self.attempt.min(20);
+        let envelope = self.base.saturating_mul(1u32 << shift).min(self.max);
+        self.attempt = self.attempt.saturating_add(1);
+        let env_ns = envelope.as_nanos() as u64;
+        let half = (env_ns / 2).max(1);
+        Duration::from_nanos(half + self.rng.next_below(env_ns - half + 1))
+    }
+
+    /// Successful accept: restart the schedule from `base`.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedule_is_deterministic() {
+        let mut a = Backoff::for_accept(7);
+        let mut b = Backoff::for_accept(7);
+        let sa: Vec<Duration> = (0..12).map(|_| a.next_delay()).collect();
+        let sb: Vec<Duration> = (0..12).map(|_| b.next_delay()).collect();
+        assert_eq!(sa, sb, "same seed must replay the same schedule");
+        let mut c = Backoff::for_accept(8);
+        let sc: Vec<Duration> = (0..12).map(|_| c.next_delay()).collect();
+        assert_ne!(sa, sc, "different seeds should jitter differently");
+    }
+
+    #[test]
+    fn backoff_envelope_doubles_then_caps() {
+        let base = Duration::from_millis(1);
+        let max = Duration::from_millis(250);
+        let mut b = Backoff::new(base, max, 42);
+        for k in 0..16u32 {
+            let envelope = base.saturating_mul(1u32 << k.min(20)).min(max);
+            let d = b.next_delay();
+            assert!(
+                d >= envelope / 2 && d <= envelope,
+                "attempt {k}: delay {d:?} outside [{:?}, {envelope:?}]",
+                envelope / 2
+            );
+        }
+        // deep into the schedule, delays stay bounded by max
+        for _ in 0..100 {
+            assert!(b.next_delay() <= max);
+        }
+    }
+
+    #[test]
+    fn backoff_reset_restarts_schedule() {
+        let mut b = Backoff::for_accept(3);
+        for _ in 0..8 {
+            let _ = b.next_delay();
+        }
+        assert_eq!(b.attempt(), 8);
+        b.reset();
+        assert_eq!(b.attempt(), 0);
+        let d = b.next_delay();
+        assert!(d <= Duration::from_millis(1), "post-reset delay back inside first envelope: {d:?}");
+        assert!(d >= Duration::from_micros(500));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn poller_reports_readable_after_write() {
+        use std::io::Write as _;
+        use std::os::unix::io::AsRawFd as _;
+        let poller = Poller::new().unwrap();
+        let (a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        b.set_nonblocking(true).unwrap();
+        poller.register(b.as_raw_fd(), 55, EV_READ).unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty(), "no data yet: {events:?}");
+        (&a).write_all(b"x").unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(500))).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 55);
+        assert!(events[0].readable);
+        poller.deregister(b.as_raw_fd()).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty(), "deregistered fd must stay silent");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn poller_reports_writable_and_modify_switches_interest() {
+        use std::os::unix::io::AsRawFd as _;
+        let poller = Poller::new().unwrap();
+        let (_a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        b.set_nonblocking(true).unwrap();
+        poller.register(b.as_raw_fd(), 9, EV_WRITE).unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(500))).unwrap();
+        assert!(events.iter().any(|e| e.token == 9 && e.writable), "{events:?}");
+        // switch to read interest: idle socket → no events
+        poller.modify(b.as_raw_fd(), 9, EV_READ).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.iter().all(|e| !e.writable), "{events:?}");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn waker_wakes_a_parked_poller() {
+        use std::os::unix::io::AsRawFd as _;
+        let poller = Poller::new().unwrap();
+        let (waker, rx) = waker_pair().unwrap();
+        poller.register(rx.as_raw_fd(), 1, EV_READ).unwrap();
+        waker.wake();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+        assert!(events.iter().any(|e| e.token == 1 && e.readable));
+        drain_waker(&rx);
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty(), "drained waker must stay quiet");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn poller_sees_peer_hangup_as_readable() {
+        use std::os::unix::io::AsRawFd as _;
+        let poller = Poller::new().unwrap();
+        let (a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        b.set_nonblocking(true).unwrap();
+        poller.register(b.as_raw_fd(), 2, EV_READ).unwrap();
+        drop(a); // peer closes
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+        let ev = events.iter().find(|e| e.token == 2).expect("hangup event");
+        assert!(ev.readable || ev.hangup, "{ev:?}");
+    }
+}

@@ -1,10 +1,19 @@
 //! Dependency-free HTTP/1.1 front-end over the router → batcher serving core.
 //!
-//! This is the layer that turns the in-process engine into a system a client
-//! can hit over a socket: a `std::net::TcpListener` shared by a **fixed
-//! accept-thread pool** (each worker accepts a connection and serves it with
-//! keep-alive until close/timeout, so the pool size bounds concurrent
-//! connections), no async runtime, no external crates.
+//! Two transport modes share one parser, one router and one response encoder:
+//!
+//! * [`ServeMode::Event`] (default, Unix): an event-driven readiness loop per
+//!   [`HttpConfig::event_threads`] thread — nonblocking sockets multiplexed
+//!   through the vendored [`crate::server::evloop::Poller`] (epoll on Linux,
+//!   `poll(2)` elsewhere), an explicit per-connection state machine
+//!   (idle → reading-head → reading-body → dispatched → writing), buffered
+//!   partial reads/writes, and per-state deadlines. Inference is dispatched
+//!   **asynchronously** into the batcher ([`Router::infer_async`]) so a slow
+//!   backend never blocks the loop; completions come back through a
+//!   [`crate::server::batcher::CompletionQueue`] that wakes the loop.
+//! * [`ServeMode::Blocking`]: the original fixed accept-thread pool (each
+//!   worker accepts and serves one connection at a time). Kept as the
+//!   baseline the event loop is benchmarked against.
 //!
 //! Endpoints:
 //!
@@ -16,10 +25,18 @@
 //! | `GET /healthz`         | liveness probe                                         |
 //! | `GET /variants`        | variant names + feature/output dims (client discovery) |
 //!
+//! **Admission control** (event mode) rejects work *before* the body is read:
+//! a global in-flight cap ([`HttpConfig::max_inflight`]) and an optional
+//! per-client fairness cap ([`HttpConfig::per_client_inflight`]) answer 429
+//! with a `Retry-After` header as soon as the request head is parsed; the
+//! connection cap answers 503 at accept time. Sheds, per-state connection
+//! gauges and timeout counters are surfaced on `/metrics`.
+//!
 //! Error mapping follows [`ServeError`]: bounded-queue backpressure surfaces
 //! as **429 Too Many Requests** (the batcher rejected, nothing was queued),
 //! unknown variants as **404**, malformed bodies as **400**, oversized bodies
-//! as **413**, backend failures as **500**, shutdown as **503**.
+//! as **413**, read-deadline expiry mid-request as **408**, backend failures
+//! as **500**, shutdown as **503**.
 //!
 //! ```no_run
 //! use mpdc::server::{spawn, BatcherConfig, ConstBackend, HttpConfig, HttpServer, Router};
@@ -34,6 +51,7 @@
 //! ```
 
 use crate::server::batcher::ServeError;
+use crate::server::evloop::Backoff;
 use crate::server::metrics;
 use crate::server::router::Router;
 use crate::util::json::Json;
@@ -43,52 +61,126 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+/// Transport mode for [`HttpServer::start`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ServeMode {
+    /// Event-driven readiness loop (nonblocking sockets, per-connection state
+    /// machines). Falls back to [`ServeMode::Blocking`] on non-Unix targets.
+    #[default]
+    Event,
+    /// Fixed accept-thread pool, one blocking connection per worker.
+    Blocking,
+}
+
+impl ServeMode {
+    /// Parse the TOML-facing name (`"event"` / `"blocking"`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "event" => Some(Self::Event),
+            "blocking" => Some(Self::Blocking),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Event => "event",
+            Self::Blocking => "blocking",
+        }
+    }
+}
+
 /// Front-end knobs. See `[server]` in [`crate::config::ServerConfig`] for the
 /// TOML-facing equivalent.
 #[derive(Clone, Debug)]
 pub struct HttpConfig {
     /// Bind address; port 0 picks an ephemeral port (tests, benches).
     pub addr: String,
-    /// Fixed worker count: each thread accepts + serves one connection at a
-    /// time, so this is the hard bound on concurrently-served connections.
+    /// Transport mode (event loop vs blocking pool).
+    pub mode: ServeMode,
+    /// Blocking mode: fixed worker count — each thread accepts + serves one
+    /// connection at a time, so this bounds concurrently-served connections.
     pub accept_threads: usize,
-    /// Secondary cap on concurrently-served connections (excess gets 503);
-    /// only binds when set below `accept_threads`.
+    /// Event mode: number of event-loop threads sharing the listener.
+    pub event_threads: usize,
+    /// Cap on concurrently-open connections (excess gets 503 + Retry-After).
     pub max_connections: usize,
+    /// Event mode: global cap on in-flight inference requests; excess gets
+    /// 429 + Retry-After *before the body is read*. `0` = unlimited.
+    pub max_inflight: usize,
+    /// Event mode: per-client-IP in-flight fairness cap. `0` = disabled
+    /// (loopback load generators would otherwise trip it immediately).
+    pub per_client_inflight: usize,
     /// Honor HTTP keep-alive (`false` forces `Connection: close`).
     pub keep_alive: bool,
-    /// Per-read socket timeout; an idle keep-alive connection is closed after
-    /// this long, freeing its worker.
+    /// Deadline for receiving a started request (head + body). Anchored when
+    /// the first byte arrives — a slowloris trickling bytes cannot extend it —
+    /// and answered with 408 on expiry.
     pub read_timeout: Duration,
+    /// Event mode: deadline for flushing a response to a slow reader.
+    pub write_timeout: Duration,
+    /// Event mode: idle keep-alive connections are closed after this long.
+    pub idle_timeout: Duration,
     /// Request bodies above this return 413.
     pub max_body_bytes: usize,
+    /// `Retry-After` value (seconds) attached to 429/503 shed responses.
+    pub retry_after_s: u32,
 }
 
 impl Default for HttpConfig {
     fn default() -> Self {
         Self {
             addr: "127.0.0.1:8077".into(),
+            mode: ServeMode::Event,
             accept_threads: 8,
-            max_connections: 64,
+            event_threads: 2,
+            max_connections: 1024,
+            max_inflight: 256,
+            per_client_inflight: 0,
             keep_alive: true,
             read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            idle_timeout: Duration::from_secs(10),
             max_body_bytes: 1 << 20,
+            retry_after_s: 1,
         }
     }
 }
 
-/// Front-end (transport-level) counters, served alongside the per-variant
-/// batcher metrics on `/metrics`.
+/// Front-end (transport-level) counters and gauges, served alongside the
+/// per-variant batcher metrics on `/metrics`.
 #[derive(Default)]
 pub struct FrontendStats {
     /// Connections accepted over the server's lifetime.
     pub connections: AtomicU64,
-    /// Connections currently being served.
+    /// Connections currently open.
     pub active: AtomicUsize,
     /// HTTP requests parsed (all endpoints, all statuses).
     pub http_requests: AtomicU64,
     /// Requests rejected before routing (malformed, oversized).
     pub bad_requests: AtomicU64,
+    /// Inference requests currently admitted and in flight (event mode).
+    pub inflight: AtomicUsize,
+    /// Connection-state gauges (event mode): idle keep-alive.
+    pub st_idle: AtomicUsize,
+    /// Reading a request head or body (includes post-shed body draining).
+    pub st_reading: AtomicUsize,
+    /// Dispatched into the batcher, awaiting the completion.
+    pub st_dispatched: AtomicUsize,
+    /// Flushing a response.
+    pub st_writing: AtomicUsize,
+    /// Connections shed at accept time (connection cap, 503).
+    pub shed_connections: AtomicU64,
+    /// Requests shed by the global in-flight cap (429).
+    pub shed_inflight: AtomicU64,
+    /// Requests shed by the per-client fairness cap (429).
+    pub shed_fairness: AtomicU64,
+    /// Read deadlines hit mid-request (408) or while draining.
+    pub read_timeouts: AtomicU64,
+    /// Write deadlines hit flushing to a slow reader.
+    pub write_timeouts: AtomicU64,
+    /// Idle keep-alive connections reaped by the idle deadline.
+    pub idle_closed: AtomicU64,
 }
 
 impl FrontendStats {
@@ -108,9 +200,40 @@ impl FrontendStats {
             let _ = writeln!(out, "# TYPE {name} counter");
             let _ = writeln!(out, "{name} {v}");
         }
+        let _ = writeln!(out, "# HELP mpdc_http_shed_total Work shed by admission control.");
+        let _ = writeln!(out, "# TYPE mpdc_http_shed_total counter");
+        for (reason, v) in [
+            ("connections", self.shed_connections.load(Ordering::Relaxed)),
+            ("inflight", self.shed_inflight.load(Ordering::Relaxed)),
+            ("fairness", self.shed_fairness.load(Ordering::Relaxed)),
+        ] {
+            let _ = writeln!(out, "mpdc_http_shed_total{{reason=\"{reason}\"}} {v}");
+        }
+        let _ = writeln!(out, "# HELP mpdc_http_timeouts_total Connection deadlines hit.");
+        let _ = writeln!(out, "# TYPE mpdc_http_timeouts_total counter");
+        for (kind, v) in [
+            ("read", self.read_timeouts.load(Ordering::Relaxed)),
+            ("write", self.write_timeouts.load(Ordering::Relaxed)),
+            ("idle", self.idle_closed.load(Ordering::Relaxed)),
+        ] {
+            let _ = writeln!(out, "mpdc_http_timeouts_total{{kind=\"{kind}\"}} {v}");
+        }
+        let _ = writeln!(out, "# HELP mpdc_http_conn_state Connections per state-machine state.");
+        let _ = writeln!(out, "# TYPE mpdc_http_conn_state gauge");
+        for (state, v) in [
+            ("idle", self.st_idle.load(Ordering::Relaxed)),
+            ("reading", self.st_reading.load(Ordering::Relaxed)),
+            ("dispatched", self.st_dispatched.load(Ordering::Relaxed)),
+            ("writing", self.st_writing.load(Ordering::Relaxed)),
+        ] {
+            let _ = writeln!(out, "mpdc_http_conn_state{{state=\"{state}\"}} {v}");
+        }
         let _ = writeln!(out, "# HELP mpdc_http_active_connections Connections currently served.");
         let _ = writeln!(out, "# TYPE mpdc_http_active_connections gauge");
         let _ = writeln!(out, "mpdc_http_active_connections {}", self.active.load(Ordering::Relaxed));
+        let _ = writeln!(out, "# HELP mpdc_http_inflight Admitted inference requests in flight.");
+        let _ = writeln!(out, "# TYPE mpdc_http_inflight gauge");
+        let _ = writeln!(out, "mpdc_http_inflight {}", self.inflight.load(Ordering::Relaxed));
         out
     }
 }
@@ -123,13 +246,26 @@ pub struct HttpServer {
     shutdown: Arc<AtomicBool>,
     joins: Vec<std::thread::JoinHandle<()>>,
     stats: Arc<FrontendStats>,
+    /// Event-loop wakers (empty in blocking mode): shutdown must nudge loops
+    /// that are parked in `Poller::wait`.
+    wake_fns: Vec<Box<dyn Fn() + Send + Sync>>,
 }
 
 impl HttpServer {
-    /// Bind and spawn the accept-thread pool. The router is shared read-only
-    /// across workers — register variants and configure splits *before*
-    /// starting the server.
+    /// Bind and spawn the configured transport. The router is shared
+    /// read-only across workers — register variants and configure splits
+    /// *before* starting the server.
     pub fn start(router: Arc<Router>, cfg: HttpConfig) -> std::io::Result<Self> {
+        #[cfg(unix)]
+        {
+            if cfg.mode == ServeMode::Event {
+                return event::start_event(router, cfg);
+            }
+        }
+        Self::start_blocking(router, cfg)
+    }
+
+    fn start_blocking(router: Arc<Router>, cfg: HttpConfig) -> std::io::Result<Self> {
         let listener = TcpListener::bind(cfg.addr.as_str())?;
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -145,11 +281,11 @@ impl HttpServer {
             joins.push(
                 std::thread::Builder::new()
                     .name(format!("mpdc-http-{t}"))
-                    .spawn(move || accept_loop(&listener, &router, &cfg, &shutdown, &stats))
+                    .spawn(move || accept_loop(&listener, &router, &cfg, &shutdown, &stats, 0x5EED ^ t as u64))
                     .expect("spawn http worker"),
             );
         }
-        Ok(Self { addr, shutdown, joins, stats })
+        Ok(Self { addr, shutdown, joins, stats, wake_fns: Vec::new() })
     }
 
     /// The bound address (resolves port 0 to the actual ephemeral port).
@@ -165,13 +301,17 @@ impl HttpServer {
         &self.stats
     }
 
-    /// Stop accepting, wake blocked workers, and join the pool. Workers
-    /// serving a live keep-alive connection exit at the next request
-    /// boundary or read timeout, whichever comes first.
+    /// Stop accepting, wake parked workers/loops, and join them. Event loops
+    /// tear down their connections immediately; blocking workers exit at the
+    /// next request boundary or read timeout.
     pub fn shutdown(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        // Each no-op connection unblocks one worker parked in accept().
-        for _ in 0..self.joins.len() {
+        for wake in &self.wake_fns {
+            wake();
+        }
+        // Each no-op connection unblocks one worker parked in accept() and
+        // (level-triggered) nudges every event loop sharing the listener.
+        for _ in 0..self.joins.len().max(1) {
             let _ = TcpStream::connect(self.addr);
         }
         for j in self.joins.drain(..) {
@@ -187,23 +327,33 @@ impl HttpServer {
     }
 }
 
+// ---------------------------------------------------------------------------
+// blocking mode (baseline)
+// ---------------------------------------------------------------------------
+
 fn accept_loop(
     listener: &TcpListener,
     router: &Router,
     cfg: &HttpConfig,
     shutdown: &AtomicBool,
     stats: &FrontendStats,
+    backoff_seed: u64,
 ) {
+    let mut backoff = Backoff::for_accept(backoff_seed);
     loop {
         if shutdown.load(Ordering::SeqCst) {
             return;
         }
         let mut stream = match listener.accept() {
-            Ok((s, _)) => s,
+            Ok((s, _)) => {
+                backoff.reset();
+                s
+            }
             Err(_) => {
                 // Transient failures (EMFILE under fd exhaustion, EINTR…):
-                // back off briefly instead of busy-spinning the whole pool.
-                std::thread::sleep(Duration::from_millis(10));
+                // exponential jittered backoff instead of busy-spinning the
+                // whole pool in lock-step.
+                std::thread::sleep(backoff.next_delay());
                 continue;
             }
         };
@@ -213,7 +363,9 @@ fn accept_loop(
         stats.connections.fetch_add(1, Ordering::Relaxed);
         let active = stats.active.fetch_add(1, Ordering::Relaxed) + 1;
         if active > cfg.max_connections {
-            let _ = write_response(&mut stream, &Response::text(503, "connection limit reached"), false);
+            stats.shed_connections.fetch_add(1, Ordering::Relaxed);
+            let resp = Response::text(503, "connection limit reached").with_retry_after(cfg.retry_after_s);
+            let _ = write_response(&mut stream, &resp, false);
             stats.active.fetch_sub(1, Ordering::Relaxed);
             continue;
         }
@@ -255,7 +407,7 @@ fn handle_connection(
         };
         stats.http_requests.fetch_add(1, Ordering::Relaxed);
         let keep = cfg.keep_alive && req.keep_alive;
-        let resp = route(router, stats, &req);
+        let resp = route(router, stats, &req, cfg.retry_after_s);
         // HEAD: full headers (including the would-be Content-Length), no body.
         let head_only = req.method == "HEAD";
         if write_response_inner(&mut stream, &resp, keep, head_only).is_err() || !keep {
@@ -265,7 +417,7 @@ fn handle_connection(
 }
 
 // ---------------------------------------------------------------------------
-// request parsing
+// request parsing (shared by both modes)
 // ---------------------------------------------------------------------------
 
 struct Request {
@@ -287,9 +439,93 @@ enum ReadError {
 }
 
 const MAX_HEAD_BYTES: usize = 64 * 1024;
+/// Cap on how much of an oversized/rejected body gets drained before close
+/// (draining avoids the TCP RST that would destroy the error response).
+const MAX_DRAIN_BYTES: usize = 64 * 1024;
 
 pub(crate) fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
     haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// A parsed request head. `head_len` counts the bytes through the
+/// `\r\n\r\n` terminator, so `head_len + content_length` is the full wire
+/// size of the request.
+#[derive(Clone, Debug)]
+struct Head {
+    method: String,
+    path: String,
+    head_len: usize,
+    content_length: usize,
+    keep_alive: bool,
+    expect_continue: bool,
+}
+
+impl Head {
+    /// Routes that dispatch into the batcher and are therefore subject to
+    /// admission control.
+    fn is_infer(&self) -> bool {
+        self.method == "POST" && (self.path == "/infer" || self.path.starts_with("/infer/"))
+    }
+}
+
+enum HeadParse {
+    /// Terminator not seen yet — read more.
+    NeedMore,
+    /// Head exceeds `max_head` without terminating.
+    TooLarge,
+    Malformed(String),
+    Parsed(Head),
+}
+
+/// Incremental head parser over a growing buffer: pure function of the bytes
+/// seen so far, shared by the blocking reader and the event-loop state
+/// machine.
+fn parse_head(buf: &[u8], max_head: usize) -> HeadParse {
+    let Some(head_end) = find_subsequence(buf, b"\r\n\r\n") else {
+        return if buf.len() > max_head { HeadParse::TooLarge } else { HeadParse::NeedMore };
+    };
+    if head_end > max_head {
+        return HeadParse::TooLarge;
+    }
+    let head = String::from_utf8_lossy(&buf[..head_end]);
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || !path.starts_with('/') || !version.starts_with("HTTP/") {
+        return HeadParse::Malformed(format!("bad request line {request_line:?}"));
+    }
+    let mut content_length = 0usize;
+    let mut connection = String::new();
+    let mut expect_continue = false;
+    for line in lines {
+        let Some((k, v)) = line.split_once(':') else { continue };
+        let v = v.trim();
+        match k.trim().to_ascii_lowercase().as_str() {
+            "content-length" => match v.parse() {
+                Ok(n) => content_length = n,
+                Err(_) => return HeadParse::Malformed(format!("bad content-length {v:?}")),
+            },
+            "connection" => connection = v.to_ascii_lowercase(),
+            "expect" => expect_continue = v.eq_ignore_ascii_case("100-continue"),
+            _ => {}
+        }
+    }
+    let keep_alive = match connection.as_str() {
+        "close" => false,
+        "keep-alive" => true,
+        _ => version.eq_ignore_ascii_case("HTTP/1.1"),
+    };
+    HeadParse::Parsed(Head {
+        method,
+        path,
+        head_len: head_end + 4,
+        content_length,
+        keep_alive,
+        expect_continue,
+    })
 }
 
 /// Fill `buf` from `stream` until `want(buf)` is satisfied. Returns false on
@@ -314,97 +550,91 @@ fn read_until<S: Read>(
     Ok(true)
 }
 
-/// Read one HTTP/1.1 request. `buf` carries residual bytes between calls on
-/// the same connection. `Ok(None)` = clean EOF with no request started.
+/// Read one HTTP/1.1 request (blocking mode). `buf` carries residual bytes
+/// between calls on the same connection. `Ok(None)` = clean EOF with no
+/// request started.
 fn read_request<S: Read + Write>(
     stream: &mut S,
     buf: &mut Vec<u8>,
     max_body: usize,
 ) -> Result<Option<Request>, ReadError> {
-    // --- head ---
-    let complete = read_until(stream, buf, |b| {
-        find_subsequence(b, b"\r\n\r\n").is_some() || b.len() > MAX_HEAD_BYTES
-    })?;
-    if buf.len() > MAX_HEAD_BYTES && find_subsequence(buf, b"\r\n\r\n").is_none() {
-        return Err(ReadError::TooLarge);
-    }
-    if !complete {
-        return if buf.is_empty() {
-            Ok(None)
-        } else {
-            Err(ReadError::Malformed("truncated request head".into()))
-        };
-    }
-    let head_end = find_subsequence(buf, b"\r\n\r\n").expect("loop ensures terminator");
-    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
-    let mut lines = head.split("\r\n");
-    let request_line = lines.next().unwrap_or("");
-    let mut parts = request_line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_ascii_uppercase();
-    let path = parts.next().unwrap_or("").to_string();
-    let version = parts.next().unwrap_or("");
-    if method.is_empty() || !path.starts_with('/') || !version.starts_with("HTTP/") {
-        return Err(ReadError::Malformed(format!("bad request line {request_line:?}")));
-    }
-    let mut content_length = 0usize;
-    let mut connection = String::new();
-    let mut expect_continue = false;
-    for line in lines {
-        let Some((k, v)) = line.split_once(':') else { continue };
-        let v = v.trim();
-        match k.trim().to_ascii_lowercase().as_str() {
-            "content-length" => {
-                content_length =
-                    v.parse().map_err(|_| ReadError::Malformed(format!("bad content-length {v:?}")))?;
+    loop {
+        match parse_head(buf, MAX_HEAD_BYTES) {
+            HeadParse::Parsed(head) => {
+                if head.content_length > max_body {
+                    // Drain a bounded amount of the in-flight body first:
+                    // closing with unread data in the receive buffer sends an
+                    // RST that can destroy the 413 before the client reads it.
+                    let cap = head.head_len.saturating_add(head.content_length.min(MAX_DRAIN_BYTES));
+                    let _ = read_until(stream, buf, |b| b.len() >= cap);
+                    buf.clear();
+                    return Err(ReadError::TooLarge);
+                }
+                let total = head.head_len + head.content_length;
+                if head.expect_continue && buf.len() < total {
+                    // client is waiting for the interim response before
+                    // sending the body
+                    let _ = stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
+                    let _ = stream.flush();
+                }
+                let complete = read_until(stream, buf, |b| b.len() >= total)?;
+                if !complete {
+                    return Err(ReadError::Malformed("truncated request body".into()));
+                }
+                let body = buf[head.head_len..total].to_vec();
+                buf.drain(..total);
+                return Ok(Some(Request {
+                    method: head.method,
+                    path: head.path,
+                    keep_alive: head.keep_alive,
+                    body,
+                }));
             }
-            "connection" => connection = v.to_ascii_lowercase(),
-            "expect" => expect_continue = v.eq_ignore_ascii_case("100-continue"),
-            _ => {}
+            HeadParse::TooLarge => return Err(ReadError::TooLarge),
+            HeadParse::Malformed(msg) => return Err(ReadError::Malformed(msg)),
+            HeadParse::NeedMore => {
+                let mut tmp = [0u8; 4096];
+                let got = loop {
+                    match stream.read(&mut tmp) {
+                        Ok(0) => break 0,
+                        Ok(n) => {
+                            buf.extend_from_slice(&tmp[..n]);
+                            break n;
+                        }
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                            return Err(if buf.is_empty() { ReadError::Timeout } else { ReadError::Io });
+                        }
+                        Err(_) => return Err(ReadError::Io),
+                    }
+                };
+                if got == 0 {
+                    return if buf.is_empty() {
+                        Ok(None)
+                    } else {
+                        Err(ReadError::Malformed("truncated request head".into()))
+                    };
+                }
+            }
         }
     }
-    if content_length > max_body {
-        // Drain a bounded amount of the in-flight body first: closing with
-        // unread data in the receive buffer sends an RST that can destroy
-        // the 413 response before the client reads it.
-        let cap = (head_end + 4).saturating_add(content_length.min(64 * 1024));
-        let _ = read_until(stream, buf, |b| b.len() >= cap);
-        buf.clear();
-        return Err(ReadError::TooLarge);
-    }
-    if expect_continue && buf.len() < head_end + 4 + content_length {
-        // client is waiting for the interim response before sending the body
-        let _ = stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
-        let _ = stream.flush();
-    }
-    // --- body ---
-    let total = head_end + 4 + content_length;
-    let complete = read_until(stream, buf, |b| b.len() >= total)?;
-    if !complete {
-        return Err(ReadError::Malformed("truncated request body".into()));
-    }
-    let body = buf[head_end + 4..total].to_vec();
-    buf.drain(..total);
-    let keep_alive = match connection.as_str() {
-        "close" => false,
-        "keep-alive" => true,
-        _ => version.eq_ignore_ascii_case("HTTP/1.1"),
-    };
-    Ok(Some(Request { method, path, keep_alive, body }))
 }
 
 // ---------------------------------------------------------------------------
-// responses + routing
+// responses + routing (shared by both modes)
 // ---------------------------------------------------------------------------
 
 struct Response {
     status: u16,
     content_type: &'static str,
     body: String,
+    /// Emits a `Retry-After: N` header (shed responses: 429/503).
+    retry_after: Option<u32>,
 }
 
 impl Response {
     fn json(status: u16, v: &Json) -> Self {
-        Self { status, content_type: "application/json", body: v.to_string() }
+        Self { status, content_type: "application/json", body: v.to_string(), retry_after: None }
     }
 
     fn error(status: u16, msg: &str) -> Self {
@@ -415,7 +645,19 @@ impl Response {
         if status >= 400 {
             return Self::error(status, body);
         }
-        Self { status, content_type: "text/plain; charset=utf-8", body: body.to_string() }
+        Self {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.to_string(),
+            retry_after: None,
+        }
+    }
+
+    fn with_retry_after(mut self, secs: u32) -> Self {
+        if secs > 0 {
+            self.retry_after = Some(secs);
+        }
+        self
     }
 }
 
@@ -425,11 +667,33 @@ fn status_text(code: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",
+    }
+}
+
+/// Serialize a response into `out` (append). HEAD keeps the full headers —
+/// including the would-be `Content-Length` — and suppresses the body.
+fn encode_response_into(out: &mut Vec<u8>, resp: &Response, keep_alive: bool, head_only: bool) {
+    use std::fmt::Write as _;
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len(),
+    );
+    if let Some(secs) = resp.retry_after {
+        let _ = write!(head, "Retry-After: {secs}\r\n");
+    }
+    let _ = write!(head, "Connection: {}\r\n\r\n", if keep_alive { "keep-alive" } else { "close" });
+    out.extend_from_slice(head.as_bytes());
+    if !head_only {
+        out.extend_from_slice(resp.body.as_bytes());
     }
 }
 
@@ -443,45 +707,52 @@ fn write_response_inner<W: Write>(
     keep_alive: bool,
     head_only: bool,
 ) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
-        resp.status,
-        status_text(resp.status),
-        resp.content_type,
-        resp.body.len(),
-        if keep_alive { "keep-alive" } else { "close" },
-    );
-    stream.write_all(head.as_bytes())?;
-    if !head_only {
-        stream.write_all(resp.body.as_bytes())?;
-    }
+    let mut bytes = Vec::new();
+    encode_response_into(&mut bytes, resp, keep_alive, head_only);
+    stream.write_all(&bytes)?;
     stream.flush()
 }
 
-fn route(router: &Router, stats: &FrontendStats, req: &Request) -> Response {
-    // HEAD is GET with the body suppressed at write time (RFC 9110 §9.3.2);
-    // probes commonly use `HEAD /healthz`.
-    let method = if req.method == "HEAD" { "GET" } else { req.method.as_str() };
-    match (method, req.path.as_str()) {
-        ("GET", "/healthz") => Response::json(200, &Json::obj(vec![("status", Json::str("ok"))])),
-        ("GET", "/variants") => variants_response(router),
+/// Routing decision: endpoints answered inline vs inference dispatched into
+/// the batcher (the event loop must not block on the latter).
+enum Routed {
+    Immediate(Response),
+    Infer { variant: Option<String> },
+}
+
+fn route_event(router: &Router, stats: &FrontendStats, method: &str, path: &str) -> Routed {
+    match (method, path) {
+        ("GET", "/healthz") => {
+            Routed::Immediate(Response::json(200, &Json::obj(vec![("status", Json::str("ok"))])))
+        }
+        ("GET", "/variants") => Routed::Immediate(variants_response(router)),
         ("GET", "/metrics") => {
             let mut page = metrics::render_prometheus(&router.metrics_handles());
             page.push_str(&stats.render_prometheus());
-            Response { status: 200, content_type: "text/plain; version=0.0.4", body: page }
+            Routed::Immediate(Response {
+                status: 200,
+                content_type: "text/plain; version=0.0.4",
+                body: page,
+                retry_after: None,
+            })
         }
-        ("POST", "/infer") => {
-            if !router.has_split() {
-                return Response::error(404, "no traffic split configured; POST /infer/{variant}");
-            }
-            infer_response(router, None, &req.body)
-        }
-        ("POST", path) => match path.strip_prefix("/infer/") {
-            Some(variant) if !variant.is_empty() => infer_response(router, Some(variant), &req.body),
-            _ => Response::error(404, "not found"),
+        ("POST", "/infer") => Routed::Infer { variant: None },
+        ("POST", p) => match p.strip_prefix("/infer/") {
+            Some(v) if !v.is_empty() => Routed::Infer { variant: Some(v.to_string()) },
+            _ => Routed::Immediate(Response::error(404, "not found")),
         },
-        ("GET", _) => Response::error(404, "not found"),
-        _ => Response::error(405, "method not allowed"),
+        ("GET", _) => Routed::Immediate(Response::error(404, "not found")),
+        _ => Routed::Immediate(Response::error(405, "method not allowed")),
+    }
+}
+
+fn route(router: &Router, stats: &FrontendStats, req: &Request, retry_after_s: u32) -> Response {
+    // HEAD is GET with the body suppressed at write time (RFC 9110 §9.3.2);
+    // probes commonly use `HEAD /healthz`.
+    let method = if req.method == "HEAD" { "GET" } else { req.method.as_str() };
+    match route_event(router, stats, method, &req.path) {
+        Routed::Immediate(r) => r,
+        Routed::Infer { variant } => infer_response(router, variant.as_deref(), &req.body, retry_after_s),
     }
 }
 
@@ -501,50 +772,998 @@ fn variants_response(router: &Router) -> Response {
     Response::json(200, &Json::obj(vec![("variants", Json::Arr(items))]))
 }
 
-/// Parse `{"input": [f32…]}` and dispatch to an explicit variant or the
-/// weighted split. JSON float round-trip is exact for f32 (values are
-/// serialized as shortest-roundtrip f64), so the HTTP path adds no numeric
-/// error over direct in-process inference.
-fn infer_response(router: &Router, variant: Option<&str>, body: &[u8]) -> Response {
+/// Parse `{"input": [f32…]}`. JSON float round-trip is exact for f32 (values
+/// are serialized as shortest-roundtrip f64), so the HTTP path adds no
+/// numeric error over direct in-process inference.
+fn parse_infer_input(body: &[u8]) -> Result<Vec<f32>, Response> {
     let text = match std::str::from_utf8(body) {
         Ok(t) => t,
-        Err(_) => return Response::error(400, "body is not UTF-8"),
+        Err(_) => return Err(Response::error(400, "body is not UTF-8")),
     };
     let parsed = match Json::parse(text) {
         Ok(j) => j,
-        Err(e) => return Response::error(400, &format!("invalid JSON body: {e}")),
+        Err(e) => return Err(Response::error(400, &format!("invalid JSON body: {e}"))),
     };
     let Some(arr) = parsed.get("input").and_then(|j| j.as_arr()) else {
-        return Response::error(400, "body must be {\"input\": [number, ...]}");
+        return Err(Response::error(400, "body must be {\"input\": [number, ...]}"));
     };
     let mut x = Vec::with_capacity(arr.len());
     for item in arr {
         match item.as_f64() {
             Some(v) => x.push(v as f32),
-            None => return Response::error(400, "input must contain only numbers"),
+            None => return Err(Response::error(400, "input must contain only numbers")),
         }
     }
+    Ok(x)
+}
+
+fn infer_ok_response(name: &str, y: &[f32]) -> Response {
+    let out: Vec<Json> = y.iter().map(|&v| Json::num(v as f64)).collect();
+    Response::json(
+        200,
+        &Json::obj(vec![("variant", Json::str(name)), ("output", Json::Arr(out))]),
+    )
+}
+
+fn serve_error_response(e: &ServeError, retry_after_s: u32) -> Response {
+    let status = match e {
+        ServeError::Overloaded => 429,
+        ServeError::UnknownVariant(_) => 404,
+        ServeError::BadInput { .. } => 400,
+        ServeError::Closed => 503,
+        ServeError::Backend(_) => 500,
+    };
+    let resp = Response::error(status, &e.to_string());
+    if status == 429 {
+        resp.with_retry_after(retry_after_s)
+    } else {
+        resp
+    }
+}
+
+/// Blocking-mode inference dispatch (synchronous round trip).
+fn infer_response(router: &Router, variant: Option<&str>, body: &[u8], retry_after_s: u32) -> Response {
+    let x = match parse_infer_input(body) {
+        Ok(x) => x,
+        Err(r) => return r,
+    };
     let result = match variant {
         Some(v) => router.infer(v, x).map(|y| (v.to_string(), y)),
-        None => router.infer_weighted(x),
+        None => {
+            if !router.has_split() {
+                return Response::error(404, "no traffic split configured; POST /infer/{variant}");
+            }
+            router.infer_weighted(x)
+        }
     };
     match result {
-        Ok((name, y)) => {
-            let out: Vec<Json> = y.iter().map(|&v| Json::num(v as f64)).collect();
-            Response::json(
-                200,
-                &Json::obj(vec![("variant", Json::str(name)), ("output", Json::Arr(out))]),
-            )
-        }
-        Err(e) => {
-            let status = match &e {
-                ServeError::Overloaded => 429,
-                ServeError::UnknownVariant(_) => 404,
-                ServeError::BadInput { .. } => 400,
-                ServeError::Closed => 503,
-                ServeError::Backend(_) => 500,
+        Ok((name, y)) => infer_ok_response(&name, &y),
+        Err(e) => serve_error_response(&e, retry_after_s),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// event mode
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+mod event {
+    use super::*;
+    use crate::server::batcher::CompletionQueue;
+    use crate::server::evloop::{drain_waker, waker_pair, Event, Poller, EV_READ, EV_WRITE};
+    use std::collections::HashMap;
+    use std::net::{IpAddr, Shutdown};
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+    use std::sync::Mutex;
+    use std::time::Instant;
+
+    const TOK_LISTENER: u64 = u64::MAX;
+    const TOK_WAKER: u64 = u64::MAX - 1;
+    /// Safety net for a dispatched request whose completion never arrives
+    /// (dead batcher worker): answer 503 and free the slot.
+    const DISPATCH_GUARD: Duration = Duration::from_secs(30);
+    /// Per-wakeup read budget: level-triggered polling re-reports leftover
+    /// data, so capping one connection's reads keeps the loop fair under a
+    /// client that streams without pause.
+    const READ_BUDGET: usize = 256 * 1024;
+
+    pub(super) fn start_event(router: Arc<Router>, cfg: HttpConfig) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(cfg.addr.as_str())?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(FrontendStats::new());
+        let per_client: Arc<Mutex<HashMap<IpAddr, usize>>> = Arc::new(Mutex::new(HashMap::new()));
+        let nloops = cfg.event_threads.max(1);
+        let mut joins = Vec::with_capacity(nloops);
+        let mut wake_fns: Vec<Box<dyn Fn() + Send + Sync>> = Vec::with_capacity(nloops);
+        for t in 0..nloops {
+            let listener = listener.try_clone()?;
+            let poller = Poller::new()?;
+            let (waker, waker_rx) = waker_pair()?;
+            let waker = Arc::new(waker);
+            poller.register(listener.as_raw_fd(), TOK_LISTENER, EV_READ)?;
+            poller.register(waker_rx.as_raw_fd(), TOK_WAKER, EV_READ)?;
+            let completions = CompletionQueue::new({
+                let w = waker.clone();
+                move || w.wake()
+            });
+            let ctx = Ctx {
+                router: router.clone(),
+                cfg: cfg.clone(),
+                stats: stats.clone(),
+                per_client: per_client.clone(),
+                shutdown: shutdown.clone(),
+                completions,
             };
-            Response::error(status, &e.to_string())
+            let el = EventLoop {
+                poller,
+                listener,
+                waker_rx,
+                ctx,
+                conns: Slab::new(),
+                pending: HashMap::new(),
+                events: Vec::new(),
+                completions_buf: Vec::new(),
+                backoff: Backoff::for_accept(0xACCE_u64 ^ t as u64),
+                accept_paused: false,
+                accept_resume: None,
+            };
+            wake_fns.push(Box::new({
+                let w = waker.clone();
+                move || w.wake()
+            }));
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("mpdc-evloop-{t}"))
+                    .spawn(move || el.run())
+                    .expect("spawn event loop"),
+            );
+        }
+        Ok(HttpServer { addr, shutdown, joins, stats, wake_fns })
+    }
+
+    /// Shared read-only loop context (everything but the per-loop mutable
+    /// state), so the borrow checker can split it from the connection slab.
+    pub(super) struct Ctx {
+        router: Arc<Router>,
+        cfg: HttpConfig,
+        stats: Arc<FrontendStats>,
+        /// Per-client in-flight counters for the fairness cap (shared across
+        /// loops — one client's connections may land on different loops).
+        per_client: Arc<Mutex<HashMap<IpAddr, usize>>>,
+        shutdown: Arc<AtomicBool>,
+        /// This loop's completion sink; batcher workers push results here and
+        /// wake the loop.
+        completions: Arc<CompletionQueue>,
+    }
+
+    #[derive(Clone, Copy, PartialEq, Eq, Debug)]
+    enum ConnState {
+        /// Keep-alive, no request in flight.
+        Idle,
+        /// Bytes received, head terminator not yet seen.
+        ReadingHead,
+        /// Head parsed, body incomplete.
+        ReadingBody,
+        /// Request handed to the batcher; awaiting the completion.
+        Dispatched,
+        /// Consuming (discarding) the body of a rejected request so the close
+        /// doesn't RST the error response.
+        Draining,
+        /// Flushing a response.
+        Writing,
+    }
+
+    #[derive(Clone, Copy, PartialEq, Eq)]
+    enum AfterWrite {
+        /// Nothing queued, or interim bytes only (100-continue).
+        None,
+        KeepAlive,
+        Close,
+    }
+
+    struct Conn {
+        stream: TcpStream,
+        peer_ip: IpAddr,
+        state: ConnState,
+        /// Parsed head while the body is still arriving (`ReadingBody`).
+        cur_head: Option<Head>,
+        /// Bytes of a rejected body left to discard (`Draining`).
+        drain_remaining: usize,
+        rbuf: Vec<u8>,
+        wbuf: Vec<u8>,
+        wpos: usize,
+        after_write: AfterWrite,
+        /// Current state's deadline: anchored at the state *transition*, never
+        /// refreshed per byte — that anchor is what defeats slowloris clients.
+        deadline: Instant,
+        /// Interest mask currently registered with the poller.
+        interest: u32,
+        read_eof: bool,
+    }
+
+    impl Conn {
+        fn new(stream: TcpStream, peer_ip: IpAddr, cfg: &HttpConfig) -> Self {
+            Self {
+                stream,
+                peer_ip,
+                state: ConnState::Idle,
+                cur_head: None,
+                drain_remaining: 0,
+                rbuf: Vec::new(),
+                wbuf: Vec::new(),
+                wpos: 0,
+                after_write: AfterWrite::None,
+                deadline: Instant::now() + cfg.idle_timeout,
+                interest: EV_READ,
+                read_eof: false,
+            }
+        }
+    }
+
+    /// Generational slab: slot reuse bumps the generation so a stale token
+    /// (e.g. a completion for a connection that died and whose slot was
+    /// recycled) can never address the new occupant.
+    pub(super) struct Slab {
+        slots: Vec<Option<Conn>>,
+        gens: Vec<u32>,
+        free: Vec<usize>,
+    }
+
+    impl Slab {
+        fn new() -> Self {
+            Self { slots: Vec::new(), gens: Vec::new(), free: Vec::new() }
+        }
+
+        fn insert(&mut self, conn: Conn) -> usize {
+            match self.free.pop() {
+                Some(idx) => {
+                    self.slots[idx] = Some(conn);
+                    idx
+                }
+                None => {
+                    self.slots.push(Some(conn));
+                    self.gens.push(0);
+                    self.slots.len() - 1
+                }
+            }
+        }
+
+        fn token_of(&self, idx: usize) -> u64 {
+            ((self.gens[idx] as u64) << 32) | idx as u64
+        }
+
+        fn resolve(&self, token: u64) -> Option<usize> {
+            let idx = (token & 0xFFFF_FFFF) as usize;
+            let gen = (token >> 32) as u32;
+            if idx < self.slots.len() && self.gens[idx] == gen && self.slots[idx].is_some() {
+                Some(idx)
+            } else {
+                None
+            }
+        }
+
+        fn get(&self, idx: usize) -> Option<&Conn> {
+            self.slots.get(idx).and_then(|s| s.as_ref())
+        }
+
+        fn get_mut(&mut self, idx: usize) -> Option<&mut Conn> {
+            self.slots.get_mut(idx).and_then(|s| s.as_mut())
+        }
+
+        fn remove(&mut self, idx: usize) -> Option<Conn> {
+            let conn = self.slots.get_mut(idx).and_then(|s| s.take())?;
+            self.gens[idx] = self.gens[idx].wrapping_add(1);
+            self.free.push(idx);
+            Some(conn)
+        }
+
+        fn live_indices(&self) -> Vec<usize> {
+            (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect()
+        }
+    }
+
+    /// Bookkeeping for a dispatched inference: kept outside the connection so
+    /// admission is released even if the client disconnects before the
+    /// completion lands.
+    struct PendingInfo {
+        ip: IpAddr,
+        variant: String,
+        keep: bool,
+        head_only: bool,
+    }
+
+    enum Action {
+        None,
+        Close,
+    }
+
+    struct EventLoop {
+        poller: Poller,
+        listener: TcpListener,
+        waker_rx: UnixStream,
+        ctx: Ctx,
+        conns: Slab,
+        pending: HashMap<u64, PendingInfo>,
+        events: Vec<Event>,
+        completions_buf: Vec<(u64, Result<Vec<f32>, String>)>,
+        backoff: Backoff,
+        accept_paused: bool,
+        accept_resume: Option<Instant>,
+    }
+
+    impl EventLoop {
+        fn run(mut self) {
+            loop {
+                if self.ctx.shutdown.load(Ordering::SeqCst) {
+                    self.teardown();
+                    return;
+                }
+                self.maybe_resume_accept();
+                let timeout = self.next_timeout();
+                let mut events = std::mem::take(&mut self.events);
+                if self.poller.wait(&mut events, timeout).is_err() {
+                    self.events = events;
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
+                }
+                for ev in &events {
+                    match ev.token {
+                        TOK_LISTENER => self.accept_ready(),
+                        TOK_WAKER => drain_waker(&self.waker_rx),
+                        token => self.conn_event(token, ev.readable, ev.writable, ev.hangup),
+                    }
+                }
+                self.events = events;
+                self.drain_completions();
+                self.sweep_deadlines();
+            }
+        }
+
+        /// Earliest pending deadline (connection deadlines, accept resume)
+        /// as a wait timeout; `None` blocks until an event or wake.
+        fn next_timeout(&self) -> Option<Duration> {
+            let mut earliest: Option<Instant> = self.accept_resume;
+            for idx in self.conns.live_indices() {
+                if let Some(conn) = self.conns.get(idx) {
+                    earliest = Some(match earliest {
+                        Some(t) => t.min(conn.deadline),
+                        None => conn.deadline,
+                    });
+                }
+            }
+            earliest.map(|t| t.saturating_duration_since(Instant::now()))
+        }
+
+        fn accept_ready(&mut self) {
+            loop {
+                match self.listener.accept() {
+                    Ok((stream, peer)) => {
+                        self.backoff.reset();
+                        self.ctx.stats.connections.fetch_add(1, Ordering::Relaxed);
+                        let active = self.ctx.stats.active.fetch_add(1, Ordering::Relaxed) + 1;
+                        if active > self.ctx.cfg.max_connections {
+                            self.ctx.stats.active.fetch_sub(1, Ordering::Relaxed);
+                            self.ctx.stats.shed_connections.fetch_add(1, Ordering::Relaxed);
+                            shed_connection(stream, self.ctx.cfg.retry_after_s);
+                            continue;
+                        }
+                        if stream.set_nonblocking(true).is_err() {
+                            self.ctx.stats.active.fetch_sub(1, Ordering::Relaxed);
+                            continue;
+                        }
+                        let _ = stream.set_nodelay(true);
+                        let fd = stream.as_raw_fd();
+                        let ip = peer.ip();
+                        let idx = self.conns.insert(Conn::new(stream, ip, &self.ctx.cfg));
+                        self.ctx.stats.st_idle.fetch_add(1, Ordering::Relaxed);
+                        let token = self.conns.token_of(idx);
+                        if self.poller.register(fd, token, EV_READ).is_err() {
+                            self.close(idx);
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        // fd exhaustion and friends: stop polling the
+                        // listener and retry after a jittered backoff delay.
+                        let _ = self.poller.deregister(self.listener.as_raw_fd());
+                        self.accept_paused = true;
+                        self.accept_resume = Some(Instant::now() + self.backoff.next_delay());
+                        return;
+                    }
+                }
+            }
+        }
+
+        fn maybe_resume_accept(&mut self) {
+            if !self.accept_paused {
+                return;
+            }
+            let due = self.accept_resume.map(|t| Instant::now() >= t).unwrap_or(true);
+            if !due {
+                return;
+            }
+            if self.poller.register(self.listener.as_raw_fd(), TOK_LISTENER, EV_READ).is_ok() {
+                self.accept_paused = false;
+                self.accept_resume = None;
+            } else {
+                self.accept_resume = Some(Instant::now() + self.backoff.next_delay());
+            }
+        }
+
+        fn conn_event(&mut self, token: u64, readable: bool, writable: bool, hangup: bool) {
+            let Some(idx) = self.conns.resolve(token) else { return };
+            if hangup {
+                self.close(idx);
+                return;
+            }
+            if readable {
+                if let Action::Close = self.conn_read(idx) {
+                    self.close(idx);
+                    return;
+                }
+            }
+            let _ = writable; // flush is attempted unconditionally below
+            if let Action::Close = self.conn_flush(idx) {
+                self.close(idx);
+                return;
+            }
+            self.sync(idx);
+        }
+
+        fn conn_read(&mut self, idx: usize) -> Action {
+            let token = self.conns.token_of(idx);
+            match self.conns.get_mut(idx) {
+                Some(conn) => do_read(conn, token, &self.ctx, &mut self.pending),
+                None => Action::None,
+            }
+        }
+
+        fn conn_flush(&mut self, idx: usize) -> Action {
+            let token = self.conns.token_of(idx);
+            match self.conns.get_mut(idx) {
+                Some(conn) => do_flush(conn, token, &self.ctx, &mut self.pending),
+                None => Action::None,
+            }
+        }
+
+        /// Re-register the poller interest to match the connection's state
+        /// (read interest while receiving/draining, write interest only while
+        /// a partial response is buffered, nothing while dispatched).
+        fn sync(&mut self, idx: usize) {
+            let token = self.conns.token_of(idx);
+            let Some(conn) = self.conns.get_mut(idx) else { return };
+            let mut want = match conn.state {
+                ConnState::Idle
+                | ConnState::ReadingHead
+                | ConnState::ReadingBody
+                | ConnState::Draining => EV_READ,
+                ConnState::Dispatched | ConnState::Writing => 0,
+            };
+            if conn.wpos < conn.wbuf.len() {
+                want |= EV_WRITE;
+            }
+            if want != conn.interest {
+                conn.interest = want;
+                let _ = self.poller.modify(conn.stream.as_raw_fd(), token, want);
+            }
+        }
+
+        fn close(&mut self, idx: usize) {
+            // Any pending dispatch entry is left in place: drain_completions
+            // releases its admission slot when the result arrives.
+            if let Some(conn) = self.conns.remove(idx) {
+                gauge_for(&self.ctx.stats, conn.state).fetch_sub(1, Ordering::Relaxed);
+                self.ctx.stats.active.fetch_sub(1, Ordering::Relaxed);
+                let _ = self.poller.deregister(conn.stream.as_raw_fd());
+                let _ = conn.stream.shutdown(Shutdown::Both);
+            }
+        }
+
+        fn drain_completions(&mut self) {
+            let mut buf = std::mem::take(&mut self.completions_buf);
+            self.ctx.completions.drain_into(&mut buf);
+            for (token, result) in buf.drain(..) {
+                let Some(info) = self.pending.remove(&token) else { continue };
+                release_admission(&self.ctx, info.ip);
+                let Some(idx) = self.conns.resolve(token) else { continue };
+                if self.conns.get(idx).map(|c| c.state) != Some(ConnState::Dispatched) {
+                    continue;
+                }
+                let resp = match result {
+                    Ok(y) => infer_ok_response(&info.variant, &y),
+                    Err(msg) => {
+                        serve_error_response(&ServeError::Backend(msg), self.ctx.cfg.retry_after_s)
+                    }
+                };
+                respond(
+                    self.conns.get_mut(idx).expect("resolved index is live"),
+                    &self.ctx,
+                    &resp,
+                    info.keep,
+                    info.head_only,
+                );
+                if let Action::Close = self.conn_flush(idx) {
+                    self.close(idx);
+                } else {
+                    self.sync(idx);
+                }
+            }
+            self.completions_buf = buf;
+        }
+
+        fn sweep_deadlines(&mut self) {
+            let now = Instant::now();
+            for idx in self.conns.live_indices() {
+                let token = self.conns.token_of(idx);
+                let Some((state, deadline)) = self.conns.get(idx).map(|c| (c.state, c.deadline))
+                else {
+                    continue;
+                };
+                if now < deadline {
+                    continue;
+                }
+                match state {
+                    ConnState::Idle => {
+                        self.ctx.stats.idle_closed.fetch_add(1, Ordering::Relaxed);
+                        self.close(idx);
+                    }
+                    ConnState::ReadingHead | ConnState::ReadingBody => {
+                        self.ctx.stats.read_timeouts.fetch_add(1, Ordering::Relaxed);
+                        self.respond_and_flush(idx, &Response::error(408, "request timed out"));
+                    }
+                    ConnState::Draining => {
+                        self.ctx.stats.read_timeouts.fetch_add(1, Ordering::Relaxed);
+                        self.close(idx);
+                    }
+                    ConnState::Dispatched => {
+                        if let Some(info) = self.pending.remove(&token) {
+                            release_admission(&self.ctx, info.ip);
+                        }
+                        self.respond_and_flush(idx, &Response::error(503, "backend timed out"));
+                    }
+                    ConnState::Writing => {
+                        self.ctx.stats.write_timeouts.fetch_add(1, Ordering::Relaxed);
+                        self.close(idx);
+                    }
+                }
+            }
+        }
+
+        /// Queue a connection-terminating error response and try to flush it.
+        fn respond_and_flush(&mut self, idx: usize, resp: &Response) {
+            if let Some(conn) = self.conns.get_mut(idx) {
+                respond(conn, &self.ctx, resp, false, false);
+            }
+            if let Action::Close = self.conn_flush(idx) {
+                self.close(idx);
+            } else {
+                self.sync(idx);
+            }
+        }
+
+        fn teardown(&mut self) {
+            for idx in self.conns.live_indices() {
+                self.close(idx);
+            }
+            let _ = self.poller.deregister(self.listener.as_raw_fd());
+        }
+    }
+
+    /// Best-effort 503 on a connection shed at accept time (the socket is
+    /// still blocking here; one short write, then drop).
+    fn shed_connection(mut stream: TcpStream, retry_after_s: u32) {
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(100)));
+        let resp = Response::text(503, "connection limit reached").with_retry_after(retry_after_s);
+        let _ = write_response(&mut stream, &resp, false);
+    }
+
+    fn gauge_for(stats: &FrontendStats, state: ConnState) -> &AtomicUsize {
+        match state {
+            ConnState::Idle => &stats.st_idle,
+            ConnState::ReadingHead | ConnState::ReadingBody | ConnState::Draining => {
+                &stats.st_reading
+            }
+            ConnState::Dispatched => &stats.st_dispatched,
+            ConnState::Writing => &stats.st_writing,
+        }
+    }
+
+    fn deadline_for(cfg: &HttpConfig, state: ConnState) -> Duration {
+        match state {
+            ConnState::Idle => cfg.idle_timeout,
+            ConnState::ReadingHead | ConnState::ReadingBody | ConnState::Draining => {
+                cfg.read_timeout
+            }
+            ConnState::Dispatched => DISPATCH_GUARD,
+            ConnState::Writing => cfg.write_timeout,
+        }
+    }
+
+    /// State transition: moves the gauges and re-anchors the deadline. A
+    /// no-op when the state is unchanged — deliberately, so trickling bytes
+    /// never refresh a read deadline.
+    fn set_state(conn: &mut Conn, ctx: &Ctx, new: ConnState) {
+        if conn.state == new {
+            return;
+        }
+        gauge_for(&ctx.stats, conn.state).fetch_sub(1, Ordering::Relaxed);
+        gauge_for(&ctx.stats, new).fetch_add(1, Ordering::Relaxed);
+        conn.state = new;
+        conn.deadline = Instant::now() + deadline_for(&ctx.cfg, new);
+    }
+
+    /// Queue a response and switch to `Writing` (unless the connection is
+    /// draining a rejected body, in which case the flush/drain interplay
+    /// keeps the `Draining` state until both finish).
+    fn respond(conn: &mut Conn, ctx: &Ctx, resp: &Response, keep: bool, head_only: bool) {
+        encode_response_into(&mut conn.wbuf, resp, keep, head_only);
+        conn.after_write = if keep { AfterWrite::KeepAlive } else { AfterWrite::Close };
+        if conn.state != ConnState::Draining {
+            set_state(conn, ctx, ConnState::Writing);
+        }
+    }
+
+    fn draining_done(conn: &Conn) -> bool {
+        conn.drain_remaining == 0 || conn.read_eof
+    }
+
+    /// Global + per-client admission check, done as soon as the request head
+    /// parses (before the body is read). Returns the shed message if the
+    /// request must be rejected.
+    fn admission_check(ctx: &Ctx, ip: IpAddr) -> Option<String> {
+        let max = ctx.cfg.max_inflight;
+        if max > 0 && ctx.stats.inflight.load(Ordering::Relaxed) >= max {
+            ctx.stats.shed_inflight.fetch_add(1, Ordering::Relaxed);
+            return Some(format!("server at capacity ({max} requests in flight)"));
+        }
+        let per = ctx.cfg.per_client_inflight;
+        if per > 0 {
+            let over = {
+                let map = ctx.per_client.lock().unwrap();
+                map.get(&ip).copied().unwrap_or(0) >= per
+            };
+            if over {
+                ctx.stats.shed_fairness.fetch_add(1, Ordering::Relaxed);
+                return Some(format!("per-client in-flight limit ({per}) reached"));
+            }
+        }
+        None
+    }
+
+    fn acquire_admission(ctx: &Ctx, ip: IpAddr) {
+        ctx.stats.inflight.fetch_add(1, Ordering::Relaxed);
+        *ctx.per_client.lock().unwrap().entry(ip).or_insert(0) += 1;
+    }
+
+    fn release_admission(ctx: &Ctx, ip: IpAddr) {
+        ctx.stats.inflight.fetch_sub(1, Ordering::Relaxed);
+        let mut map = ctx.per_client.lock().unwrap();
+        if let Some(n) = map.get_mut(&ip) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                map.remove(&ip);
+            }
+        }
+    }
+
+    /// Nonblocking read pump: pull bytes until `WouldBlock`/EOF/budget, then
+    /// advance the state machine.
+    fn do_read(
+        conn: &mut Conn,
+        token: u64,
+        ctx: &Ctx,
+        pending: &mut HashMap<u64, PendingInfo>,
+    ) -> Action {
+        let mut tmp = [0u8; 16 * 1024];
+        let mut budget = READ_BUDGET;
+        loop {
+            if budget == 0 {
+                break;
+            }
+            match conn.stream.read(&mut tmp) {
+                Ok(0) => {
+                    conn.read_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    budget = budget.saturating_sub(n);
+                    if conn.state == ConnState::Draining {
+                        conn.drain_remaining = conn.drain_remaining.saturating_sub(n);
+                    } else {
+                        conn.rbuf.extend_from_slice(&tmp[..n]);
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return Action::Close,
+            }
+        }
+        if conn.state == ConnState::Draining {
+            if draining_done(conn) && conn.wpos >= conn.wbuf.len() {
+                return Action::Close;
+            }
+            return Action::None;
+        }
+        do_advance(conn, token, ctx, pending)
+    }
+
+    /// Nonblocking write pump; on completing a response, either closes, or
+    /// returns to `Idle` and advances (pipelined requests already buffered).
+    fn do_flush(
+        conn: &mut Conn,
+        token: u64,
+        ctx: &Ctx,
+        pending: &mut HashMap<u64, PendingInfo>,
+    ) -> Action {
+        loop {
+            while conn.wpos < conn.wbuf.len() {
+                match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                    Ok(0) => return Action::Close,
+                    Ok(n) => conn.wpos += n,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return Action::None,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => return Action::Close,
+                }
+            }
+            conn.wbuf.clear();
+            conn.wpos = 0;
+            match conn.after_write {
+                AfterWrite::None => return Action::None,
+                AfterWrite::Close => {
+                    if conn.state == ConnState::Draining && !draining_done(conn) {
+                        // response flushed; keep consuming the rejected body
+                        return Action::None;
+                    }
+                    return Action::Close;
+                }
+                AfterWrite::KeepAlive => {
+                    conn.after_write = AfterWrite::None;
+                    set_state(conn, ctx, ConnState::Idle);
+                    if let Action::Close = do_advance(conn, token, ctx, pending) {
+                        return Action::Close;
+                    }
+                    if conn.wbuf.is_empty() {
+                        return Action::None;
+                    }
+                    // a pipelined request produced another response — loop to
+                    // write it out too
+                }
+            }
+        }
+    }
+
+    /// The per-connection state machine: run as far as the buffered bytes
+    /// allow.
+    fn do_advance(
+        conn: &mut Conn,
+        token: u64,
+        ctx: &Ctx,
+        pending: &mut HashMap<u64, PendingInfo>,
+    ) -> Action {
+        loop {
+            match conn.state {
+                ConnState::Idle => {
+                    if !conn.rbuf.is_empty() {
+                        set_state(conn, ctx, ConnState::ReadingHead);
+                        continue;
+                    }
+                    if conn.read_eof {
+                        return Action::Close;
+                    }
+                    return Action::None;
+                }
+                ConnState::ReadingHead => match parse_head(&conn.rbuf, MAX_HEAD_BYTES) {
+                    HeadParse::NeedMore => {
+                        if conn.read_eof {
+                            if conn.rbuf.is_empty() {
+                                return Action::Close;
+                            }
+                            ctx.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                            respond(conn, ctx, &Response::error(400, "truncated request head"), false, false);
+                        }
+                        return Action::None;
+                    }
+                    HeadParse::TooLarge => {
+                        ctx.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                        respond(conn, ctx, &Response::error(413, "request head too large"), false, false);
+                        return Action::None;
+                    }
+                    HeadParse::Malformed(msg) => {
+                        ctx.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                        respond(conn, ctx, &Response::error(400, &msg), false, false);
+                        return Action::None;
+                    }
+                    HeadParse::Parsed(head) => {
+                        let total = head.head_len + head.content_length;
+                        if head.content_length > ctx.cfg.max_body_bytes {
+                            ctx.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                            return reject_with_drain(
+                                conn,
+                                ctx,
+                                total,
+                                &Response::error(413, "payload too large"),
+                            );
+                        }
+                        if head.is_infer() {
+                            if let Some(msg) = admission_check(ctx, conn.peer_ip) {
+                                let resp = Response::error(429, &msg)
+                                    .with_retry_after(ctx.cfg.retry_after_s);
+                                return reject_with_drain(conn, ctx, total, &resp);
+                            }
+                        }
+                        if head.expect_continue && conn.rbuf.len() < total {
+                            conn.wbuf.extend_from_slice(b"HTTP/1.1 100 Continue\r\n\r\n");
+                        }
+                        conn.cur_head = Some(head);
+                        if conn.rbuf.len() >= total {
+                            return process_request(conn, token, ctx, pending);
+                        }
+                        set_state(conn, ctx, ConnState::ReadingBody);
+                        return Action::None;
+                    }
+                },
+                ConnState::ReadingBody => {
+                    let total = {
+                        let h = conn.cur_head.as_ref().expect("ReadingBody implies parsed head");
+                        h.head_len + h.content_length
+                    };
+                    if conn.rbuf.len() >= total {
+                        return process_request(conn, token, ctx, pending);
+                    }
+                    if conn.read_eof {
+                        // half-close mid-body: the client can still read
+                        ctx.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                        respond(conn, ctx, &Response::error(400, "truncated request body"), false, false);
+                    }
+                    return Action::None;
+                }
+                ConnState::Dispatched | ConnState::Draining | ConnState::Writing => {
+                    return Action::None;
+                }
+            }
+        }
+    }
+
+    /// Reject a request whose body may still be arriving: queue the error
+    /// response, discard what's buffered, and drain a bounded remainder so
+    /// closing doesn't RST the response off the wire.
+    fn reject_with_drain(conn: &mut Conn, ctx: &Ctx, total: usize, resp: &Response) -> Action {
+        let remaining = total.saturating_sub(conn.rbuf.len());
+        conn.rbuf.clear();
+        conn.drain_remaining = remaining.min(MAX_DRAIN_BYTES);
+        respond(conn, ctx, resp, false, false);
+        if conn.drain_remaining > 0 && !conn.read_eof {
+            set_state(conn, ctx, ConnState::Draining);
+        }
+        Action::None
+    }
+
+    /// A complete request is buffered: consume it and either answer inline or
+    /// dispatch into the batcher.
+    fn process_request(
+        conn: &mut Conn,
+        token: u64,
+        ctx: &Ctx,
+        pending: &mut HashMap<u64, PendingInfo>,
+    ) -> Action {
+        let head = conn.cur_head.take().expect("process_request requires a parsed head");
+        ctx.stats.http_requests.fetch_add(1, Ordering::Relaxed);
+        let total = head.head_len + head.content_length;
+        let body = conn.rbuf[head.head_len..total].to_vec();
+        conn.rbuf.drain(..total);
+        let keep = ctx.cfg.keep_alive && head.keep_alive;
+        let head_only = head.method == "HEAD";
+        let method = if head_only { "GET" } else { head.method.as_str() };
+        match route_event(&ctx.router, &ctx.stats, method, &head.path) {
+            Routed::Immediate(resp) => {
+                respond(conn, ctx, &resp, keep, head_only);
+                Action::None
+            }
+            Routed::Infer { variant } => {
+                let x = match parse_infer_input(&body) {
+                    Ok(x) => x,
+                    Err(resp) => {
+                        respond(conn, ctx, &resp, keep, head_only);
+                        return Action::None;
+                    }
+                };
+                let name = match variant {
+                    Some(v) => v,
+                    None => {
+                        if !ctx.router.has_split() {
+                            let resp = Response::error(
+                                404,
+                                "no traffic split configured; POST /infer/{variant}",
+                            );
+                            respond(conn, ctx, &resp, keep, head_only);
+                            return Action::None;
+                        }
+                        match ctx.router.pick_weighted() {
+                            Ok(n) => n,
+                            Err(e) => {
+                                let resp = serve_error_response(&e, ctx.cfg.retry_after_s);
+                                respond(conn, ctx, &resp, keep, head_only);
+                                return Action::None;
+                            }
+                        }
+                    }
+                };
+                match ctx.router.infer_async(&name, x, &ctx.completions, token) {
+                    Ok(()) => {
+                        acquire_admission(ctx, conn.peer_ip);
+                        pending.insert(token, PendingInfo { ip: conn.peer_ip, variant: name, keep, head_only });
+                        set_state(conn, ctx, ConnState::Dispatched);
+                        Action::None
+                    }
+                    Err(e) => {
+                        respond(conn, ctx, &serve_error_response(&e, ctx.cfg.retry_after_s), keep, head_only);
+                        Action::None
+                    }
+                }
+            }
+        }
+    }
+
+    /// Test-only shims exposing the private slab/admission internals to the
+    /// sibling `event_tests` module.
+    #[cfg(test)]
+    pub(super) mod test_support {
+        use super::*;
+
+        pub fn new_slab() -> Slab {
+            Slab::new()
+        }
+
+        pub fn slab_insert(slab: &mut Slab, stream: TcpStream, ip: IpAddr, cfg: &HttpConfig) -> usize {
+            slab.insert(Conn::new(stream, ip, cfg))
+        }
+
+        pub fn slab_token(slab: &Slab, idx: usize) -> u64 {
+            slab.token_of(idx)
+        }
+
+        pub fn slab_resolve(slab: &Slab, token: u64) -> Option<usize> {
+            slab.resolve(token)
+        }
+
+        pub fn slab_remove(slab: &mut Slab, idx: usize) {
+            let _ = slab.remove(idx);
+        }
+
+        pub fn test_ctx(cfg: HttpConfig) -> Ctx {
+            Ctx {
+                router: Arc::new(Router::new()),
+                cfg,
+                stats: Arc::new(FrontendStats::new()),
+                per_client: Arc::new(Mutex::new(HashMap::new())),
+                shutdown: Arc::new(AtomicBool::new(false)),
+                completions: CompletionQueue::new(|| {}),
+            }
+        }
+
+        pub fn check(ctx: &Ctx, ip: IpAddr) -> Option<String> {
+            admission_check(ctx, ip)
+        }
+
+        pub fn acquire(ctx: &Ctx, ip: IpAddr) {
+            acquire_admission(ctx, ip)
+        }
+
+        pub fn release(ctx: &Ctx, ip: IpAddr) {
+            release_admission(ctx, ip)
+        }
+
+        pub fn ctx_stats(ctx: &Ctx) -> &FrontendStats {
+            &ctx.stats
+        }
+
+        pub fn per_client_empty(ctx: &Ctx) -> bool {
+            ctx.per_client.lock().unwrap().is_empty()
         }
     }
 }
@@ -623,6 +1842,33 @@ mod tests {
     }
 
     #[test]
+    fn parse_head_is_incremental() {
+        // byte-at-a-time (slowloris-shaped) input: NeedMore until the
+        // terminator, then a full parse with the right head_len
+        let raw = b"POST /infer/mpd HTTP/1.1\r\nContent-Length: 5\r\n\r\n";
+        for cut in 0..raw.len() - 1 {
+            assert!(
+                matches!(parse_head(&raw[..cut], MAX_HEAD_BYTES), HeadParse::NeedMore),
+                "cut at {cut} should be incomplete"
+            );
+        }
+        match parse_head(raw, MAX_HEAD_BYTES) {
+            HeadParse::Parsed(h) => {
+                assert_eq!(h.method, "POST");
+                assert_eq!(h.path, "/infer/mpd");
+                assert_eq!(h.head_len, raw.len());
+                assert_eq!(h.content_length, 5);
+                assert!(h.keep_alive);
+                assert!(h.is_infer());
+            }
+            other => panic!("expected Parsed, got {:?}", std::mem::discriminant(&other)),
+        }
+        // head that never terminates trips the size guard
+        let long = vec![b'a'; 100];
+        assert!(matches!(parse_head(&long, 50), HeadParse::TooLarge));
+    }
+
+    #[test]
     fn response_bytes_have_content_length() {
         let mut s = Duplex::new(b"");
         write_response(&mut s, &Response::text(200, "hello"), true).unwrap();
@@ -642,6 +1888,45 @@ mod tests {
     }
 
     #[test]
+    fn retry_after_header_is_emitted_on_shed_responses() {
+        let mut out = Vec::new();
+        let resp = Response::error(429, "at capacity").with_retry_after(2);
+        encode_response_into(&mut out, &resp, false, false);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Retry-After: 2\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        // retry_after(0) stays silent
+        let mut out = Vec::new();
+        encode_response_into(&mut out, &Response::error(429, "x").with_retry_after(0), false, false);
+        assert!(!String::from_utf8(out).unwrap().contains("Retry-After"));
+        // 408 has a status line
+        assert_eq!(status_text(408), "Request Timeout");
+    }
+
+    #[test]
+    fn serve_error_mapping_attaches_retry_after_to_429_only() {
+        let r = serve_error_response(&ServeError::Overloaded, 3);
+        assert_eq!(r.status, 429);
+        assert_eq!(r.retry_after, Some(3));
+        let r = serve_error_response(&ServeError::UnknownVariant("x".into()), 3);
+        assert_eq!(r.status, 404);
+        assert_eq!(r.retry_after, None);
+        let r = serve_error_response(&ServeError::Backend("boom".into()), 3);
+        assert_eq!(r.status, 500);
+        assert_eq!(r.retry_after, None);
+    }
+
+    #[test]
+    fn serve_mode_parses_toml_names() {
+        assert_eq!(ServeMode::parse("event"), Some(ServeMode::Event));
+        assert_eq!(ServeMode::parse("blocking"), Some(ServeMode::Blocking));
+        assert_eq!(ServeMode::parse("async"), None);
+        assert_eq!(ServeMode::Event.name(), "event");
+        assert_eq!(ServeMode::default(), ServeMode::Event);
+    }
+
+    #[test]
     fn routing_on_empty_router() {
         // full error mapping is exercised end-to-end in tests/serve_http.rs;
         // this covers the routes that need no live batcher
@@ -653,19 +1938,96 @@ mod tests {
             keep_alive: true,
             body: body.to_vec(),
         };
-        assert_eq!(route(&router, &stats, &req("GET", "/healthz", b"")).status, 200);
-        assert_eq!(route(&router, &stats, &req("HEAD", "/healthz", b"")).status, 200);
-        assert_eq!(route(&router, &stats, &req("GET", "/variants", b"")).status, 200);
-        assert_eq!(route(&router, &stats, &req("GET", "/metrics", b"")).status, 200);
-        assert_eq!(route(&router, &stats, &req("GET", "/nope", b"")).status, 404);
-        assert_eq!(route(&router, &stats, &req("DELETE", "/healthz", b"")).status, 405);
+        assert_eq!(route(&router, &stats, &req("GET", "/healthz", b""), 1).status, 200);
+        assert_eq!(route(&router, &stats, &req("HEAD", "/healthz", b""), 1).status, 200);
+        assert_eq!(route(&router, &stats, &req("GET", "/variants", b""), 1).status, 200);
+        assert_eq!(route(&router, &stats, &req("GET", "/metrics", b""), 1).status, 200);
+        assert_eq!(route(&router, &stats, &req("GET", "/nope", b""), 1).status, 404);
+        assert_eq!(route(&router, &stats, &req("DELETE", "/healthz", b""), 1).status, 405);
         // unknown variant → 404; bad JSON → 400; no split → 404
-        let r = route(&router, &stats, &req("POST", "/infer/nope", b"{\"input\":[1]}"));
+        let r = route(&router, &stats, &req("POST", "/infer/nope", b"{\"input\":[1]}"), 1);
         assert_eq!(r.status, 404);
-        let r = route(&router, &stats, &req("POST", "/infer/nope", b"not json"));
+        let r = route(&router, &stats, &req("POST", "/infer/nope", b"not json"), 1);
         assert_eq!(r.status, 400);
-        let r = route(&router, &stats, &req("POST", "/infer", b"{\"input\":[1]}"));
+        let r = route(&router, &stats, &req("POST", "/infer", b"{\"input\":[1]}"), 1);
         assert_eq!(r.status, 404);
         assert!(r.body.contains("no traffic split"));
+    }
+
+    #[test]
+    fn frontend_stats_page_renders_new_families() {
+        let stats = FrontendStats::new();
+        stats.shed_inflight.store(4, Ordering::Relaxed);
+        stats.st_dispatched.store(2, Ordering::Relaxed);
+        stats.read_timeouts.store(1, Ordering::Relaxed);
+        let page = stats.render_prometheus();
+        assert!(page.contains("mpdc_http_shed_total{reason=\"inflight\"} 4"));
+        assert!(page.contains("mpdc_http_shed_total{reason=\"connections\"} 0"));
+        assert!(page.contains("mpdc_http_conn_state{state=\"dispatched\"} 2"));
+        assert!(page.contains("mpdc_http_conn_state{state=\"idle\"} 0"));
+        assert!(page.contains("mpdc_http_timeouts_total{kind=\"read\"} 1"));
+        assert!(page.contains("mpdc_http_inflight 0"));
+    }
+}
+
+#[cfg(all(test, unix))]
+mod event_tests {
+    use super::event::test_support::*;
+    use super::*;
+    use std::net::{IpAddr, Ipv4Addr, TcpListener, TcpStream};
+
+    fn socket_pair(listener: &TcpListener) -> (TcpStream, TcpStream) {
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn slab_tokens_are_generation_safe() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let cfg = HttpConfig::default();
+        let ip = IpAddr::V4(Ipv4Addr::LOCALHOST);
+        let mut slab = new_slab();
+        let (_c1, s1) = socket_pair(&l);
+        let idx = slab_insert(&mut slab, s1, ip, &cfg);
+        let tok1 = slab_token(&slab, idx);
+        assert_eq!(slab_resolve(&slab, tok1), Some(idx));
+        slab_remove(&mut slab, idx);
+        assert_eq!(slab_resolve(&slab, tok1), None, "stale token must not resolve");
+        // slot reuse bumps the generation
+        let (_c2, s2) = socket_pair(&l);
+        let idx2 = slab_insert(&mut slab, s2, ip, &cfg);
+        assert_eq!(idx2, idx, "slot is recycled");
+        let tok2 = slab_token(&slab, idx2);
+        assert_ne!(tok1, tok2, "recycled slot has a fresh token");
+        assert_eq!(slab_resolve(&slab, tok1), None);
+        assert_eq!(slab_resolve(&slab, tok2), Some(idx2));
+    }
+
+    #[test]
+    fn admission_caps_and_release_bookkeeping() {
+        let ip = IpAddr::V4(Ipv4Addr::LOCALHOST);
+        let other = IpAddr::V4(Ipv4Addr::new(10, 0, 0, 9));
+        let cfg =
+            HttpConfig { max_inflight: 2, per_client_inflight: 1, ..HttpConfig::default() };
+        let ctx = test_ctx(cfg);
+        // per-client cap trips first
+        assert!(check(&ctx, ip).is_none());
+        acquire(&ctx, ip);
+        let msg = check(&ctx, ip).expect("per-client limit reached");
+        assert!(msg.contains("per-client"), "{msg}");
+        assert_eq!(ctx_stats(&ctx).shed_fairness.load(std::sync::atomic::Ordering::Relaxed), 1);
+        // another client still fits, then the global cap trips
+        assert!(check(&ctx, other).is_none());
+        acquire(&ctx, other);
+        let msg = check(&ctx, other).expect("global limit reached");
+        assert!(msg.contains("capacity"), "{msg}");
+        assert_eq!(ctx_stats(&ctx).shed_inflight.load(std::sync::atomic::Ordering::Relaxed), 1);
+        // releases restore both budgets to zero
+        release(&ctx, ip);
+        release(&ctx, other);
+        assert!(check(&ctx, ip).is_none());
+        assert_eq!(ctx_stats(&ctx).inflight.load(std::sync::atomic::Ordering::Relaxed), 0);
+        assert!(per_client_empty(&ctx), "per-client map fully cleaned up");
     }
 }

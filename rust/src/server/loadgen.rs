@@ -16,11 +16,18 @@
 //! Arrivals use the repo's deterministic [`Xoshiro256pp`] stream
 //! (exponential inter-arrival gaps), so a load run is reproducible
 //! seed-for-seed. The latency sink is the same log-bucketed
-//! [`Histogram`] the server uses (≈7% resolution) and records HTTP 200s
-//! only; every response is additionally counted per status class
+//! [`Histogram`] the server uses (≈7% resolution), kept **per status
+//! class**: [`LoadgenReport::latency`] holds HTTP 200s and
+//! [`LoadgenReport::latency_non200`] holds every other HTTP response
+//! (429s above all). Fast rejections would otherwise make a shed-heavy
+//! run's percentiles look rosier than any successful request actually
+//! was — both distributions appear in the summary and the bench JSONL.
+//! Responses are additionally counted per status class
 //! ([`LoadgenReport::status_classes`]) so a saturation run reports its
-//! 429/5xx fraction ([`LoadgenReport::non_200_rate`]) instead of silently
-//! dropping it from the percentiles.
+//! 429/5xx fraction ([`LoadgenReport::non_200_rate`]).
+//!
+//! [`sweep`] drives an open-loop grid across connection counts × offered
+//! load — the latency-vs-offered-load curves in `results/BENCH_7.json`.
 //!
 //! [`HttpClient`] is the matching dependency-free HTTP/1.1 client (keep-alive
 //! with one transparent reconnect), also used by the integration tests and
@@ -65,6 +72,12 @@ impl HttpClient {
     /// Issue a request; returns `(status, body)`. Retries once on a fresh
     /// connection if the pooled keep-alive connection died under us.
     pub fn request(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String), String> {
+        self.request_full(method, path, body).map(|r| (r.status, r.body))
+    }
+
+    /// Like [`HttpClient::request`] but keeps the response headers — needed
+    /// by tests asserting shed responses carry `Retry-After`.
+    pub fn request_full(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<HttpResponse, String> {
         let body = body.unwrap_or("");
         let head = format!(
             "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
@@ -87,7 +100,7 @@ impl HttpClient {
         }
     }
 
-    fn request_once(&mut self, bytes: &[u8]) -> std::io::Result<(u16, String)> {
+    fn request_once(&mut self, bytes: &[u8]) -> std::io::Result<HttpResponse> {
         if self.stream.is_none() {
             let s = TcpStream::connect(self.addr)?;
             s.set_read_timeout(Some(self.timeout))?;
@@ -119,15 +132,18 @@ impl HttpClient {
             .nth(1)
             .and_then(|s| s.parse().ok())
             .ok_or_else(|| std::io::Error::new(ErrorKind::InvalidData, format!("bad status line {status_line:?}")))?;
+        let mut headers: Vec<(String, String)> = Vec::new();
         let mut content_length = 0usize;
         let mut close = false;
         for line in lines {
             let Some((k, v)) = line.split_once(':') else { continue };
-            match k.trim().to_ascii_lowercase().as_str() {
-                "content-length" => content_length = v.trim().parse().unwrap_or(0),
-                "connection" => close = v.trim().eq_ignore_ascii_case("close"),
+            let (k, v) = (k.trim(), v.trim());
+            match k.to_ascii_lowercase().as_str() {
+                "content-length" => content_length = v.parse().unwrap_or(0),
+                "connection" => close = v.eq_ignore_ascii_case("close"),
                 _ => {}
             }
+            headers.push((k.to_string(), v.to_string()));
         }
         let total = head_end + 4 + content_length;
         while self.buf.len() < total {
@@ -144,7 +160,25 @@ impl HttpClient {
             self.stream = None;
             self.buf.clear();
         }
-        Ok((status, body))
+        Ok(HttpResponse { status, headers, body })
+    }
+}
+
+/// One parsed HTTP response, headers included.
+pub struct HttpResponse {
+    pub status: u16,
+    /// Header `(name, value)` pairs in wire order.
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
     }
 }
 
@@ -194,9 +228,15 @@ pub struct LoadgenReport {
     /// Requests that failed at the transport layer (connect/read/write/EOF).
     pub transport_errors: u64,
     pub elapsed: Duration,
-    /// Latency distribution of **successful** (HTTP 200) requests only;
-    /// rejections and errors are counted but never recorded here.
+    /// Latency distribution of **successful** (HTTP 200) requests only.
     pub latency: Histogram,
+    /// Latency distribution of every **non-200 HTTP response** (429 sheds,
+    /// 4xx/5xx errors). Kept separate because sheds are answered in
+    /// microseconds: folding them into [`LoadgenReport::latency`] would make
+    /// a saturated run's percentiles look *better* than any successful
+    /// request actually was. Transport failures produce no response and are
+    /// recorded in neither histogram.
+    pub latency_non200: Histogram,
 }
 
 impl LoadgenReport {
@@ -221,7 +261,7 @@ impl LoadgenReport {
     pub fn summary(&self) -> String {
         format!(
             "sent={} ok={} rejected={} errors={} | non-200 {:.2}% (4xx={} 5xx={} transport={}) | \
-             {:.0} req/s | p50/p90/p99 = {:.0}/{:.0}/{:.0} µs",
+             {:.0} req/s | p50/p90/p99 = {:.0}/{:.0}/{:.0} µs | non-200 p50/p99 = {:.0}/{:.0} µs",
             self.sent,
             self.ok,
             self.rejected,
@@ -234,6 +274,8 @@ impl LoadgenReport {
             self.latency.percentile_us(0.5),
             self.latency.percentile_us(0.9),
             self.latency.percentile_us(0.99),
+            self.latency_non200.percentile_us(0.5),
+            self.latency_non200.percentile_us(0.99),
         )
     }
 }
@@ -268,12 +310,13 @@ pub fn run_http(addr: SocketAddr, variant: &str, feature_dim: usize, cfg: &Loadg
     let transport_errors = AtomicU64::new(0);
     let next = AtomicUsize::new(0);
     let latency = Histogram::new();
+    let latency_non200 = Histogram::new();
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for w in 0..nworkers {
             let (path, schedule) = (&path, &schedule);
-            let (sent, ok, rejected, errors, next, latency) =
-                (&sent, &ok, &rejected, &errors, &next, &latency);
+            let (sent, ok, rejected, errors, next, latency, latency_non200) =
+                (&sent, &ok, &rejected, &errors, &next, &latency, &latency_non200);
             let (status_classes, transport_errors) = (&status_classes, &transport_errors);
             let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed).fork(w as u64 + 1);
             let arrival = cfg.arrival;
@@ -307,21 +350,23 @@ pub fn run_http(addr: SocketAddr, variant: &str, feature_dim: usize, cfg: &Loadg
                             if (1..=5).contains(&class) {
                                 status_classes[class - 1].fetch_add(1, Ordering::Relaxed);
                             }
+                            // Per-status-class latency: successes and sheds
+                            // go to different histograms — fast 429s folded
+                            // into the success distribution would skew the
+                            // percentiles exactly when the server is
+                            // saturated and they matter most.
                             match status {
                                 200 => {
                                     ok.fetch_add(1, Ordering::Relaxed);
-                                    // Only successes enter the latency
-                                    // distribution: fast 429s and client-
-                                    // timeout errors would otherwise skew the
-                                    // percentiles exactly when the server is
-                                    // saturated and they matter most.
                                     latency.record(started.elapsed());
                                 }
                                 429 => {
                                     rejected.fetch_add(1, Ordering::Relaxed);
+                                    latency_non200.record(started.elapsed());
                                 }
                                 _ => {
                                     errors.fetch_add(1, Ordering::Relaxed);
+                                    latency_non200.record(started.elapsed());
                                 }
                             }
                         }
@@ -343,7 +388,80 @@ pub fn run_http(addr: SocketAddr, variant: &str, feature_dim: usize, cfg: &Loadg
         transport_errors: transport_errors.into_inner(),
         elapsed: t0.elapsed(),
         latency,
+        latency_non200,
     }
+}
+
+// ---------------------------------------------------------------------------
+// open-loop sweeps
+// ---------------------------------------------------------------------------
+
+/// Grid for [`sweep`]: every connection count × every offered-load point.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub concurrencies: Vec<usize>,
+    /// Offered load per point (Poisson arrivals, queries/second).
+    pub qps_points: Vec<f64>,
+    pub requests_per_point: usize,
+    pub seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            concurrencies: vec![4, 16],
+            qps_points: vec![200.0, 1000.0, 5000.0],
+            requests_per_point: 500,
+            seed: 42,
+        }
+    }
+}
+
+/// One measured point of the latency-vs-offered-load curve.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub concurrency: usize,
+    pub offered_qps: f64,
+    pub achieved_rps: f64,
+    pub sent: u64,
+    pub ok: u64,
+    pub non_200_rate: f64,
+    /// Success-latency percentiles (µs, from scheduled arrival time).
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// Shed/error-latency p99 (µs); 0 when nothing was shed.
+    pub non200_p99_us: f64,
+}
+
+/// Open-loop sweep across connection counts × offered-load points — the
+/// curve behind `results/BENCH_7.json`. Each point is an independent
+/// Poisson run with a deterministic per-point seed, so a sweep replays
+/// arrival-for-arrival under the same top-level seed.
+pub fn sweep(addr: SocketAddr, variant: &str, feature_dim: usize, cfg: &SweepConfig) -> Vec<SweepPoint> {
+    let mut out = Vec::with_capacity(cfg.concurrencies.len() * cfg.qps_points.len());
+    for (ci, &concurrency) in cfg.concurrencies.iter().enumerate() {
+        for (qi, &qps) in cfg.qps_points.iter().enumerate() {
+            let run = LoadgenConfig {
+                concurrency,
+                requests: cfg.requests_per_point,
+                arrival: Arrival::Poisson { target_qps: qps },
+                seed: cfg.seed ^ ((ci as u64 + 1) << 32) ^ (qi as u64 + 1),
+            };
+            let r = run_http(addr, variant, feature_dim, &run);
+            out.push(SweepPoint {
+                concurrency,
+                offered_qps: qps,
+                achieved_rps: r.throughput_rps(),
+                sent: r.sent,
+                ok: r.ok,
+                non_200_rate: r.non_200_rate(),
+                p50_us: r.latency.percentile_us(0.5),
+                p99_us: r.latency.percentile_us(0.99),
+                non200_p99_us: r.latency_non200.percentile_us(0.99),
+            });
+        }
+    }
+    out
 }
 
 /// Ask the server which variants it serves (name + dims) via `GET /variants`.
@@ -400,6 +518,7 @@ mod tests {
             transport_errors: 1,
             elapsed: Duration::from_secs(1),
             latency: Histogram::new(),
+            latency_non200: Histogram::new(),
         };
         assert!((r.throughput_rps() - 7.0).abs() < 1e-9);
         // 3 of 10 sent did not come back 200
@@ -407,6 +526,42 @@ mod tests {
         let s = r.summary();
         assert!(s.contains("ok=7") && s.contains("rejected=2"), "{s}");
         assert!(s.contains("non-200 30.00%") && s.contains("4xx=2") && s.contains("transport=1"), "{s}");
+    }
+
+    #[test]
+    fn non200_latency_is_kept_separate() {
+        let r = LoadgenReport {
+            sent: 2,
+            ok: 1,
+            rejected: 1,
+            errors: 0,
+            status_classes: [0, 1, 0, 1, 0],
+            transport_errors: 0,
+            elapsed: Duration::from_secs(1),
+            latency: Histogram::new(),
+            latency_non200: Histogram::new(),
+        };
+        // a slow success and a fast shed must not share a distribution
+        r.latency.record(Duration::from_millis(10));
+        r.latency_non200.record(Duration::from_micros(50));
+        assert!(r.latency.percentile_us(0.5) > 5_000.0);
+        assert!(r.latency_non200.percentile_us(0.5) < 1_000.0);
+        let s = r.summary();
+        assert!(s.contains("non-200 p50/p99"), "{s}");
+    }
+
+    #[test]
+    fn sweep_config_spans_the_grid() {
+        let cfg = SweepConfig::default();
+        assert_eq!(cfg.concurrencies.len() * cfg.qps_points.len(), 6);
+        // per-point seeds must be pairwise distinct for the default grid
+        let mut seeds = std::collections::HashSet::new();
+        for ci in 0..cfg.concurrencies.len() {
+            for qi in 0..cfg.qps_points.len() {
+                seeds.insert(cfg.seed ^ ((ci as u64 + 1) << 32) ^ (qi as u64 + 1));
+            }
+        }
+        assert_eq!(seeds.len(), 6, "sweep points must not share arrival schedules");
     }
 
     #[test]
@@ -420,6 +575,7 @@ mod tests {
             transport_errors: 0,
             elapsed: Duration::ZERO,
             latency: Histogram::new(),
+            latency_non200: Histogram::new(),
         };
         assert_eq!(r.non_200_rate(), 0.0);
         assert_eq!(r.throughput_rps(), 0.0);

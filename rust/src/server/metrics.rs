@@ -126,10 +126,84 @@ impl Default for Histogram {
     }
 }
 
+/// Power-of-two bucket bounds for [`CountHist`] — sized for batch fills up
+/// to the 256 per-batch cap the backends advertise.
+const COUNT_BOUNDS: [u64; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+/// Small atomic histogram over integer counts (batch fill sizes): one bucket
+/// per power-of-two bound plus +Inf. Exposes exact `count`/`sum` so mean
+/// fill is recoverable, and renders cumulatively for Prometheus.
+pub struct CountHist {
+    buckets: [AtomicU64; COUNT_BOUNDS.len() + 1],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl CountHist {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, n: u64) {
+        let idx =
+            COUNT_BOUNDS.iter().position(|&b| n <= b).unwrap_or(COUNT_BOUNDS.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum() as f64 / c as f64
+    }
+
+    fn write_prometheus(&self, out: &mut String, name: &str, labels: &str) {
+        use std::fmt::Write as _;
+        let mut cum = 0u64;
+        for (i, bucket) in self.buckets.iter().enumerate() {
+            cum += bucket.load(Ordering::Relaxed);
+            match COUNT_BOUNDS.get(i) {
+                Some(le) => {
+                    let _ = writeln!(out, "{name}_bucket{{{labels},le=\"{le}\"}} {cum}");
+                }
+                None => {
+                    let _ = writeln!(out, "{name}_bucket{{{labels},le=\"+Inf\"}} {cum}");
+                }
+            }
+        }
+        let _ = writeln!(out, "{name}_sum{{{labels}}} {}", self.sum());
+        let _ = writeln!(out, "{name}_count{{{labels}}} {cum}");
+    }
+}
+
+impl Default for CountHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Aggregate serving metrics for one model variant.
 pub struct ServerMetrics {
     pub latency: Histogram,
     pub queue_wait: Histogram,
+    /// Requests per executed batch — the observable the deadline-budget
+    /// batching policy is tuned against (fill under load, not fixed waits).
+    pub batch_fill: CountHist,
     pub requests: AtomicU64,
     pub rejected: AtomicU64,
     pub batches: AtomicU64,
@@ -141,6 +215,7 @@ impl ServerMetrics {
         Self {
             latency: Histogram::new(),
             queue_wait: Histogram::new(),
+            batch_fill: CountHist::new(),
             requests: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             batches: AtomicU64::new(0),
@@ -219,6 +294,12 @@ pub fn render_prometheus(variants: &[(String, Arc<ServerMetrics>)]) -> String {
             let labels = format!("variant=\"{}\"", escape_label(variant));
             h.write_prometheus(&mut out, name, &labels);
         }
+    }
+    let _ = writeln!(out, "# HELP mpdc_batch_fill Requests per executed batch.");
+    let _ = writeln!(out, "# TYPE mpdc_batch_fill histogram");
+    for (variant, m) in variants {
+        let labels = format!("variant=\"{}\"", escape_label(variant));
+        m.batch_fill.write_prometheus(&mut out, "mpdc_batch_fill", &labels);
     }
     out
 }
@@ -319,6 +400,26 @@ mod tests {
     }
 
     #[test]
+    fn count_hist_exact_count_sum_and_cumulative_render() {
+        let h = CountHist::new();
+        for n in [1u64, 2, 3, 300] {
+            h.record(n);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 306);
+        assert!((h.mean() - 76.5).abs() < 1e-9);
+        let mut page = String::new();
+        h.write_prometheus(&mut page, "fill", "variant=\"x\"");
+        // 3 ≤ 4 lands in le="4"; 300 only in +Inf
+        assert!(page.contains("fill_bucket{variant=\"x\",le=\"1\"} 1"), "{page}");
+        assert!(page.contains("fill_bucket{variant=\"x\",le=\"4\"} 3"), "{page}");
+        assert!(page.contains("fill_bucket{variant=\"x\",le=\"256\"} 3"), "{page}");
+        assert!(page.contains("fill_bucket{variant=\"x\",le=\"+Inf\"} 4"), "{page}");
+        assert!(page.contains("fill_sum{variant=\"x\"} 306"), "{page}");
+        assert!(page.contains("fill_count{variant=\"x\"} 4"), "{page}");
+    }
+
+    #[test]
     fn prometheus_page_is_well_formed() {
         let m = Arc::new(ServerMetrics::new());
         m.requests.fetch_add(5, Ordering::Relaxed);
@@ -331,6 +432,8 @@ mod tests {
         assert!(page.contains("mpdc_requests_total{variant=\"mpd\"} 5"));
         assert!(page.contains("mpdc_rejected_total{variant=\"mpd\"} 2"));
         assert!(page.contains("# TYPE mpdc_latency_seconds histogram"));
+        assert!(page.contains("# TYPE mpdc_batch_fill histogram"));
+        assert!(page.contains("mpdc_batch_fill_count{variant=\"mpd\"} 0"));
         // cumulative bucket counts are non-decreasing and +Inf == _count
         let mut last = 0u64;
         let mut inf = None;

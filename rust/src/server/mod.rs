@@ -5,27 +5,37 @@
 //!
 //! ```text
 //!   HTTP client ── http::HttpServer ── Router ── BatcherHandle ── InferBackend
-//!                  (socket front-end)  (A/B split) (bounded queue,  (Plan / Csr /
-//!                                                   dynamic batch)   Aot / Const)
+//!                  (event loop or      (A/B split) (bounded queue,  (Plan / Csr /
+//!                   blocking pool)                  deadline batch)   Aot / Const)
 //! ```
+//!
+//! The default front-end is an event-driven readiness loop (nonblocking
+//! sockets over the vendored [`evloop`] poller, per-connection state machines
+//! with deadlines, admission control that sheds with 429 + `Retry-After`
+//! before reading the body); the original blocking accept-pool remains
+//! available as [`http::ServeMode::Blocking`] and serves as the benchmark
+//! baseline. Inference completions flow back through a per-loop
+//! [`batcher::CompletionQueue`].
 //!
 //! Every compiled model — dense baseline, f32 packed, int8, conv, mixed
 //! precision — serves through one generic [`PlanBackend`]: an
 //! [`crate::exec::Executor`] plus a per-worker scratch arena reused across
-//! batches. See DESIGN.md §Serving for the batching policy, backpressure
-//! semantics, and metric resolution bounds; DESIGN.md §Execution Plan for
-//! the plan/arena contract.
+//! batches. See DESIGN.md §Serving for the connection state machine, the
+//! deadline-budget batching policy, backpressure semantics, and metric
+//! resolution bounds; DESIGN.md §Execution Plan for the plan/arena contract.
 pub mod batcher;
+pub mod evloop;
 pub mod http;
 pub mod loadgen;
 pub mod metrics;
 pub mod router;
 
 pub use batcher::{
-    spawn, AotBackend, BatcherConfig, BatcherHandle, ConstBackend, CsrBackend, InferBackend,
-    PlanBackend, ServeError,
+    spawn, AotBackend, BatcherConfig, BatcherHandle, CompletionQueue, ConstBackend, CsrBackend,
+    InferBackend, PlanBackend, ServeError,
 };
-pub use http::{FrontendStats, HttpConfig, HttpServer};
-pub use loadgen::{Arrival, HttpClient, LoadgenConfig, LoadgenReport};
-pub use metrics::{render_prometheus, Histogram, ServerMetrics};
+pub use evloop::Backoff;
+pub use http::{FrontendStats, HttpConfig, HttpServer, ServeMode};
+pub use loadgen::{Arrival, HttpClient, HttpResponse, LoadgenConfig, LoadgenReport, SweepConfig, SweepPoint};
+pub use metrics::{render_prometheus, CountHist, Histogram, ServerMetrics};
 pub use router::Router;

@@ -94,8 +94,27 @@ impl Router {
         }
     }
 
-    /// Route according to the configured weighted split.
-    pub fn infer_weighted(&self, input: Vec<f32>) -> Result<(String, Vec<f32>), ServeError> {
+    /// Non-blocking dispatch to an explicit variant: the result lands in
+    /// `sink` tagged with `token` (see
+    /// [`crate::server::batcher::BatcherHandle::infer_async`]); admission
+    /// errors are returned synchronously.
+    pub fn infer_async(
+        &self,
+        variant: &str,
+        input: Vec<f32>,
+        sink: &std::sync::Arc<crate::server::batcher::CompletionQueue>,
+        token: u64,
+    ) -> Result<(), ServeError> {
+        match self.variants.get(variant) {
+            Some(h) => h.infer_async(input, sink, token),
+            None => Err(ServeError::UnknownVariant(variant.to_string())),
+        }
+    }
+
+    /// Sample a variant name from the configured weighted split (the routing
+    /// decision alone — event-driven callers dispatch separately via
+    /// [`Router::infer_async`]).
+    pub fn pick_weighted(&self) -> Result<String, ServeError> {
         let total: f64 = self.weights.iter().map(|(_, w)| w).sum();
         if total <= 0.0 {
             return Err(ServeError::Backend("no traffic split configured".into()));
@@ -104,11 +123,16 @@ impl Router {
         for (name, w) in &self.weights {
             pick -= w;
             if pick <= 0.0 {
-                return self.infer(name, input).map(|y| (name.clone(), y));
+                return Ok(name.clone());
             }
         }
-        let (name, _) = self.weights.last().unwrap();
-        self.infer(name, input).map(|y| (name.clone(), y))
+        Ok(self.weights.last().unwrap().0.clone())
+    }
+
+    /// Route according to the configured weighted split.
+    pub fn infer_weighted(&self, input: Vec<f32>) -> Result<(String, Vec<f32>), ServeError> {
+        let name = self.pick_weighted()?;
+        self.infer(&name, input).map(|y| (name, y))
     }
 
     /// Per-variant metric summaries.
@@ -199,6 +223,27 @@ mod tests {
         assert!(r.set_split(&[("nope", 1.0)]).is_err());
         assert!(r.set_split(&[("dense", -1.0)]).is_err());
         assert!(r.infer_weighted(vec![0.0, 0.0]).is_err()); // no split yet
+    }
+
+    #[test]
+    fn async_dispatch_routes_by_name() {
+        use crate::server::batcher::CompletionQueue;
+        let (r, _j) = router();
+        let sink = CompletionQueue::new(|| {});
+        r.infer_async("dense", vec![0.0, 0.0], &sink, 5).unwrap();
+        let mut done = Vec::new();
+        let t0 = std::time::Instant::now();
+        while done.is_empty() {
+            assert!(t0.elapsed() < std::time::Duration::from_secs(5), "completion never arrived");
+            sink.drain_into(&mut done);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(done[0].0, 5);
+        assert_eq!(done[0].1.as_ref().unwrap(), &vec![1.0]);
+        assert!(matches!(
+            r.infer_async("nope", vec![0.0, 0.0], &sink, 6),
+            Err(ServeError::UnknownVariant(_))
+        ));
     }
 
     #[test]

@@ -145,7 +145,12 @@ fn batched_serving_is_consistent() {
     let packed2 = PackedMlp::build(&comp, &weights, &biases);
     let (h, join) = spawn(
         PlanBackend::new(packed2.into_executor()),
-        BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(1), queue_depth: 128 },
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(1),
+            deadline: std::time::Duration::ZERO,
+            queue_depth: 128,
+        },
     );
     std::thread::scope(|s| {
         for c in 0..4usize {

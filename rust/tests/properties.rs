@@ -292,6 +292,7 @@ fn prop_batcher_serves_every_request_exactly_once() {
             BatcherConfig {
                 max_batch,
                 max_wait: std::time::Duration::from_micros(gen_range(rng, 0, 500) as u64),
+                deadline: std::time::Duration::ZERO,
                 queue_depth: 64,
             },
         );
@@ -342,6 +343,7 @@ fn prop_batcher_exactly_once_under_shared_persistent_pool() {
         let cfg = BatcherConfig {
             max_batch: gen_range(rng, 1, 16),
             max_wait: std::time::Duration::from_micros(gen_range(rng, 0, 400) as u64),
+            deadline: std::time::Duration::ZERO,
             queue_depth: 128,
         };
         let model = PackedMlp::build(&comp, &weights, &biases);

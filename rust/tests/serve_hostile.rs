@@ -1,0 +1,437 @@
+//! Hostile-client protocol & fault-injection suite for the event-driven
+//! front-end (ISSUE 7 acceptance): slowloris, half-close mid-body, oversized
+//! Content-Length, garbage request lines, disconnect mid-response, and
+//! admission-control saturation/recovery. Every scenario must leave the
+//! server healthy — a fresh well-formed request is answered bit-exactly and
+//! the connection-state gauges return to zero (no leaked slots).
+//!
+//! Raw `TcpStream`s are used deliberately: the scenarios hinge on byte-level
+//! misbehaviour (partial heads, early shutdown) that no well-formed client
+//! can produce.
+#![cfg(unix)]
+
+use mpdc::compress::compressor::MpdCompressor;
+use mpdc::compress::packed_model::PackedMlp;
+use mpdc::compress::plan::{LayerPlan, SparsityPlan};
+use mpdc::mask::prng::Xoshiro256pp;
+use mpdc::server::http::{FrontendStats, HttpConfig, HttpServer};
+use mpdc::server::loadgen::HttpClient;
+use mpdc::server::{spawn, BatcherConfig, InferBackend, PlanBackend, Router};
+use mpdc::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Masked 24→32 + dense 32→10, built twice from identical inputs: one copy
+/// serves, the other is the in-process oracle (`PackedMlp::build` is
+/// deterministic, so the two are bit-identical).
+fn packed_pair() -> (PackedMlp, PackedMlp) {
+    let plan = SparsityPlan::new(vec![
+        LayerPlan::masked("fc1", 32, 24, 4),
+        LayerPlan::dense("fc2", 10, 32),
+    ])
+    .unwrap();
+    let comp = MpdCompressor::new(plan, 3);
+    let (weights, biases) = comp.random_masked_weights(5);
+    (PackedMlp::build(&comp, &weights, &biases), PackedMlp::build(&comp, &weights, &biases))
+}
+
+/// Event-mode config with a short read deadline so slowloris tests run in
+/// hundreds of milliseconds, not the production 5 s.
+fn hostile_cfg() -> HttpConfig {
+    HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        event_threads: 1,
+        read_timeout: Duration::from_millis(400),
+        write_timeout: Duration::from_secs(2),
+        idle_timeout: Duration::from_secs(3),
+        ..HttpConfig::default()
+    }
+}
+
+fn start_packed(cfg: HttpConfig) -> (HttpServer, Arc<PackedMlp>) {
+    let (serve_model, oracle) = packed_pair();
+    let mut router = Router::new();
+    let (h, _worker) =
+        spawn(PlanBackend::new(serve_model.into_executor()), BatcherConfig::default());
+    router.register("mpd", h);
+    let server = HttpServer::start(Arc::new(router), cfg).unwrap();
+    (server, Arc::new(oracle))
+}
+
+/// Read until EOF (the server closes hostile connections) and split off the
+/// status code. The socket gets a 5 s read timeout so a hung server fails
+/// the test instead of wedging the run.
+fn read_response(stream: &mut TcpStream) -> (u16, String) {
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    loop {
+        match stream.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(_) => break,
+        }
+    }
+    let text = String::from_utf8_lossy(&buf).into_owned();
+    let status = text
+        .strip_prefix("HTTP/1.1 ")
+        .and_then(|rest| rest.get(..3))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    (status, text)
+}
+
+/// A fresh well-formed request after the hostile scenario must be answered
+/// bit-exactly against the in-process oracle — the core "server stays
+/// healthy" acceptance check.
+fn fresh_request_is_bit_exact(addr: SocketAddr, oracle: &PackedMlp, seed: u64) {
+    let mut client = HttpClient::new(addr);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let x: Vec<f32> = (0..24).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let body =
+        Json::obj(vec![("input", Json::Arr(x.iter().map(|&v| Json::num(v as f64)).collect()))]);
+    let (status, resp) = client.post_json("/infer/mpd", &body).unwrap();
+    assert_eq!(status, 200, "fresh request after hostile client must succeed: {resp}");
+    let parsed = Json::parse(&resp).unwrap();
+    let got: Vec<f32> = parsed
+        .get("output")
+        .and_then(|j| j.as_arr())
+        .expect("output array")
+        .iter()
+        .map(|j| j.as_f64().expect("number") as f32)
+        .collect();
+    let want = oracle.forward(&x, 1);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "output[{i}]: HTTP {g} != direct {w}");
+    }
+}
+
+/// Poll until every connection slot is released and the state gauges are
+/// back at zero. Leaked slots (a close path that forgot a gauge decrement,
+/// or a pending entry pinning admission) show up here as a timeout.
+fn wait_gauges_zero(stats: &FrontendStats) {
+    let t0 = Instant::now();
+    loop {
+        let snapshot = [
+            ("active", stats.active.load(Ordering::Relaxed)),
+            ("inflight", stats.inflight.load(Ordering::Relaxed)),
+            ("idle", stats.st_idle.load(Ordering::Relaxed)),
+            ("reading", stats.st_reading.load(Ordering::Relaxed)),
+            ("dispatched", stats.st_dispatched.load(Ordering::Relaxed)),
+            ("writing", stats.st_writing.load(Ordering::Relaxed)),
+        ];
+        if snapshot.iter().all(|(_, v)| *v == 0) {
+            return;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "connection slots leaked; gauges stuck at {snapshot:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn slowloris_partial_head_gets_408_and_frees_the_slot() {
+    let (server, oracle) = start_packed(hostile_cfg());
+    let addr = server.addr();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    // Trickle a byte at a time, always *before* the 400 ms read deadline
+    // (writes after the server closes could RST the 408 off the wire). The
+    // deadline is anchored at the first byte — trickling must not refresh it.
+    let started = Instant::now();
+    for b in b"POST" {
+        stream.write_all(&[*b]).unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+    }
+    let (status, text) = read_response(&mut stream);
+    assert_eq!(status, 408, "slowloris must get 408 Request Timeout: {text}");
+    assert!(
+        started.elapsed() < Duration::from_secs(4),
+        "408 must arrive promptly, not after a multi-deadline stall"
+    );
+    assert!(server.stats().read_timeouts.load(Ordering::Relaxed) >= 1);
+    drop(stream);
+
+    fresh_request_is_bit_exact(addr, &oracle, 11);
+    wait_gauges_zero(server.stats());
+    server.shutdown();
+}
+
+#[test]
+fn half_close_mid_body_gets_400_truncated() {
+    let (server, oracle) = start_packed(hostile_cfg());
+    let addr = server.addr();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let head = "POST /infer/mpd HTTP/1.1\r\nHost: t\r\nContent-Length: 100\r\n\r\n";
+    stream.write_all(head.as_bytes()).unwrap();
+    stream.write_all(b"{\"input\": [0.1").unwrap();
+    // half-close: no more body is coming, but the read side stays open so
+    // the error response is still deliverable
+    stream.shutdown(Shutdown::Write).unwrap();
+    let (status, text) = read_response(&mut stream);
+    assert_eq!(status, 400, "half-closed body must get 400: {text}");
+    assert!(text.contains("truncated request body"), "{text}");
+    drop(stream);
+
+    fresh_request_is_bit_exact(addr, &oracle, 12);
+    wait_gauges_zero(server.stats());
+    server.shutdown();
+}
+
+#[test]
+fn oversized_content_length_gets_413_with_body_drained() {
+    let mut cfg = hostile_cfg();
+    cfg.max_body_bytes = 512;
+    cfg.read_timeout = Duration::from_secs(2); // the drain needs real time
+    let (server, oracle) = start_packed(cfg);
+    let addr = server.addr();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let body_len = 4096usize;
+    let head = format!("POST /infer/mpd HTTP/1.1\r\nHost: t\r\nContent-Length: {body_len}\r\n\r\n");
+    stream.write_all(head.as_bytes()).unwrap();
+    // the client keeps pushing the oversized body; the server must drain it
+    // (bounded) rather than close immediately and RST the 413 off the wire
+    let chunk = vec![b'x'; 256];
+    for _ in 0..(body_len / chunk.len()) {
+        if stream.write_all(&chunk).is_err() {
+            break; // server may finish draining + close while we still write
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let (status, text) = read_response(&mut stream);
+    assert_eq!(status, 413, "oversized Content-Length must get 413: {text}");
+    assert!(text.contains("payload too large"), "{text}");
+    drop(stream);
+
+    fresh_request_is_bit_exact(addr, &oracle, 13);
+    wait_gauges_zero(server.stats());
+    server.shutdown();
+}
+
+#[test]
+fn garbage_request_line_gets_400() {
+    let (server, oracle) = start_packed(hostile_cfg());
+    let addr = server.addr();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(b"this is not http at all\r\n\r\n").unwrap();
+    let (status, _) = read_response(&mut stream);
+    assert_eq!(status, 400, "garbage request line must get 400");
+    assert!(server.stats().bad_requests.load(Ordering::Relaxed) >= 1);
+    drop(stream);
+
+    fresh_request_is_bit_exact(addr, &oracle, 14);
+    wait_gauges_zero(server.stats());
+    server.shutdown();
+}
+
+#[test]
+fn disconnect_mid_response_leaves_server_healthy() {
+    let (server, oracle) = start_packed(hostile_cfg());
+    let addr = server.addr();
+
+    // fire a valid inference and vanish before the response can be written
+    for seed in 0..4u64 {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let x: Vec<f32> = (0..24).map(|_| rng.next_f32()).collect();
+        let body = Json::obj(vec![(
+            "input",
+            Json::Arr(x.iter().map(|&v| Json::num(v as f64)).collect()),
+        )])
+        .to_string();
+        let req = format!(
+            "POST /infer/mpd HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        stream.write_all(req.as_bytes()).unwrap();
+        drop(stream); // gone before the completion lands
+    }
+
+    fresh_request_is_bit_exact(addr, &oracle, 15);
+    // admission must be released even though the requester is gone
+    wait_gauges_zero(server.stats());
+    server.shutdown();
+}
+
+/// Echo backend slow enough that concurrent clients pile up against the
+/// admission cap.
+struct SlowEcho;
+
+impl InferBackend for SlowEcho {
+    fn feature_dim(&self) -> usize {
+        4
+    }
+
+    fn out_dim(&self) -> usize {
+        4
+    }
+
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
+        std::thread::sleep(Duration::from_millis(150));
+        out.copy_from_slice(&x[..batch * 4]);
+        Ok(())
+    }
+}
+
+fn echo_body(seed: u64) -> (Vec<f32>, Json) {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let x: Vec<f32> = (0..4).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let json =
+        Json::obj(vec![("input", Json::Arr(x.iter().map(|&v| Json::num(v as f64)).collect()))]);
+    (x, json)
+}
+
+fn assert_echo_bit_exact(resp_body: &str, x: &[f32]) {
+    let parsed = Json::parse(resp_body).unwrap();
+    let got: Vec<f32> = parsed
+        .get("output")
+        .and_then(|j| j.as_arr())
+        .expect("output array")
+        .iter()
+        .map(|j| j.as_f64().expect("number") as f32)
+        .collect();
+    assert_eq!(got.len(), x.len());
+    for (i, (g, w)) in got.iter().zip(x).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "echo output[{i}] drifted: {g} != {w}");
+    }
+}
+
+#[test]
+fn saturation_sheds_with_retry_after_then_recovers_bit_exact() {
+    let cfg = HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        event_threads: 2,
+        max_inflight: 2,
+        retry_after_s: 1,
+        ..HttpConfig::default()
+    };
+    let mut router = Router::new();
+    let (h, _worker) = spawn(SlowEcho, BatcherConfig::default());
+    router.register("echo", h);
+    let server = HttpServer::start(Arc::new(router), cfg).unwrap();
+    let addr = server.addr();
+
+    // storm: 12 concurrent clients against an in-flight cap of 2 and a
+    // 150 ms backend — the overflow must shed with 429 + Retry-After, and
+    // every 200 that does get through must still echo bit-exactly
+    let barrier = std::sync::Barrier::new(12);
+    let ok = std::sync::atomic::AtomicUsize::new(0);
+    let shed = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for t in 0..12u64 {
+            let (barrier, ok, shed) = (&barrier, &ok, &shed);
+            s.spawn(move || {
+                let mut client = HttpClient::new(addr);
+                let (x, json) = echo_body(100 + t);
+                let body = json.to_string();
+                barrier.wait();
+                let resp = client.request_full("POST", "/infer/echo", Some(&body)).unwrap();
+                match resp.status {
+                    200 => {
+                        assert_echo_bit_exact(&resp.body, &x);
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                    429 => {
+                        assert_eq!(
+                            resp.header("retry-after"),
+                            Some("1"),
+                            "429 must carry Retry-After: {:?}",
+                            resp.headers
+                        );
+                        shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    other => panic!("unexpected status {other}: {}", resp.body),
+                }
+            });
+        }
+    });
+    let (ok, shed) = (ok.load(Ordering::Relaxed), shed.load(Ordering::Relaxed));
+    assert_eq!(ok + shed, 12);
+    assert!(ok >= 1, "the admitted requests must complete");
+    assert!(shed >= 1, "12 clients vs max_inflight=2 must shed");
+    assert!(server.stats().shed_inflight.load(Ordering::Relaxed) >= 1);
+
+    // recovery: the storm is over, so the server must serve a full batch of
+    // fresh requests with zero sheds and bit-exact echoes
+    wait_gauges_zero(server.stats());
+    let mut client = HttpClient::new(addr);
+    for seed in 0..6u64 {
+        let (x, json) = echo_body(500 + seed);
+        let resp = client.request_full("POST", "/infer/echo", Some(&json.to_string())).unwrap();
+        assert_eq!(resp.status, 200, "post-saturation request failed: {}", resp.body);
+        assert_echo_bit_exact(&resp.body, &x);
+    }
+
+    // /metrics agrees with the internal gauges after recovery
+    let (status, page) = client.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    assert!(page.contains("mpdc_http_inflight 0"), "{page}");
+    assert!(page.contains("mpdc_http_conn_state{state=\"dispatched\"} 0"), "{page}");
+    let shed_line = format!(
+        "mpdc_http_shed_total{{reason=\"inflight\"}} {}",
+        server.stats().shed_inflight.load(Ordering::Relaxed)
+    );
+    assert!(page.contains(&shed_line), "{page}");
+    drop(client);
+    wait_gauges_zero(server.stats());
+    server.shutdown();
+}
+
+#[test]
+fn per_client_fairness_cap_sheds_the_hog() {
+    let cfg = HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        event_threads: 1,
+        max_inflight: 0,
+        per_client_inflight: 1,
+        ..HttpConfig::default()
+    };
+    let mut router = Router::new();
+    let (h, _worker) = spawn(SlowEcho, BatcherConfig::default());
+    router.register("echo", h);
+    let server = HttpServer::start(Arc::new(router), cfg).unwrap();
+    let addr = server.addr();
+
+    // all test clients share 127.0.0.1, so a per-client cap of 1 with 6
+    // concurrent requests must shed at least one for fairness
+    let barrier = std::sync::Barrier::new(6);
+    let shed = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for t in 0..6u64 {
+            let (barrier, shed) = (&barrier, &shed);
+            s.spawn(move || {
+                let mut client = HttpClient::new(addr);
+                let (x, json) = echo_body(300 + t);
+                barrier.wait();
+                let resp = client.request_full("POST", "/infer/echo", Some(&json.to_string())).unwrap();
+                match resp.status {
+                    200 => assert_echo_bit_exact(&resp.body, &x),
+                    429 => {
+                        assert!(resp.body.contains("per-client"), "{}", resp.body);
+                        assert!(resp.header("retry-after").is_some());
+                        shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    other => panic!("unexpected status {other}: {}", resp.body),
+                }
+            });
+        }
+    });
+    assert!(shed.load(Ordering::Relaxed) >= 1, "same-IP hog must trip the fairness cap");
+    assert!(server.stats().shed_fairness.load(Ordering::Relaxed) >= 1);
+    wait_gauges_zero(server.stats());
+    server.shutdown();
+}

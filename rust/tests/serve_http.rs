@@ -116,7 +116,8 @@ impl InferBackend for SlowBackend {
 
 #[test]
 fn queue_saturation_maps_to_429() {
-    let cfg = BatcherConfig { max_batch: 1, max_wait: Duration::ZERO, queue_depth: 1 };
+    let cfg =
+        BatcherConfig { max_batch: 1, max_wait: Duration::ZERO, deadline: Duration::ZERO, queue_depth: 1 };
     let mut router = Router::new();
     let (h, _worker) = spawn(SlowBackend, cfg);
     router.register("slow", h);
