@@ -6,10 +6,14 @@
 //! cargo bench --bench microbench
 //! ```
 
+use mpdc::compress::compressor::MpdCompressor;
+use mpdc::compress::plan::SparsityPlan;
+use mpdc::exec::ScratchArena;
 use mpdc::linalg::blockdiag_mm::BlockDiagMatrix;
 use mpdc::linalg::gemm::{gemm, gemm_a_bt, gemm_naive};
 use mpdc::mask::mask::MpdMask;
 use mpdc::mask::prng::Xoshiro256pp;
+use mpdc::compress::packed_model::PackedMlp;
 use mpdc::server::batcher::{spawn, BatcherConfig, InferBackend};
 use mpdc::util::benchkit::{bench_quick, black_box};
 
@@ -149,6 +153,47 @@ fn main() {
         spawn_overhead.median_us(),
         pool_overhead.median_us(),
         spawn_overhead.median_ns / pool_overhead.median_ns
+    );
+
+    println!("\n--- obs overhead: span ring, filtered log, profiled run_into ---");
+    mpdc::obs::span::init(1024);
+    let s_rec = bench_quick("span.record_raw", || {
+        mpdc::obs::span::record_raw("bench_span", 0, 42);
+    });
+    let s_guard = bench_quick("span guard open+drop", || {
+        drop(mpdc::obs::span::span("bench_guard"));
+    });
+    let s_log = bench_quick("log_trace (filtered off)", || {
+        mpdc::log_trace!("bench", "suppressed {}", black_box(1u32));
+    });
+    println!(
+        "record_raw {} | guard {} | filtered log {}",
+        s_rec.human(),
+        s_guard.human(),
+        s_log.human()
+    );
+    let comp = MpdCompressor::new(SparsityPlan::lenet300(10), 7);
+    let (wts, bs) = comp.random_masked_weights(7);
+    let plain = PackedMlp::build(&comp, &wts, &bs).into_executor();
+    let profiled = PackedMlp::build(&comp, &wts, &bs).into_executor().with_profiling();
+    let batch = 32usize;
+    let xe: Vec<f32> = (0..batch * plain.in_dim()).map(|_| rng.next_f32()).collect();
+    let mut ye = vec![0.0f32; batch * plain.out_dim()];
+    let mut scratch = ScratchArena::for_plan(plain.plan(), batch);
+    let s_plain = bench_quick("run_into lenet b32 plain", || {
+        plain.run_into(&xe, batch, &mut ye, &mut scratch);
+        black_box(&ye);
+    });
+    let mut scratch_p = ScratchArena::for_plan(profiled.plan(), batch);
+    let s_prof = bench_quick("run_into lenet b32 profiled", || {
+        profiled.run_into(&xe, batch, &mut ye, &mut scratch_p);
+        black_box(&ye);
+    });
+    println!(
+        "plain {:.2}µs | profiled {:.2}µs | overhead {:+.1}%",
+        s_plain.median_us(),
+        s_prof.median_us(),
+        (s_prof.median_ns / s_plain.median_ns - 1.0) * 100.0
     );
 
     println!("\n--- batcher round-trip overhead (noop backend) ---");

@@ -107,6 +107,21 @@ fn run_into_zero_alloc_check() -> anyhow::Result<()> {
                 .into_executor()
                 .with_kernel(KernelChoice::detected()),
         ),
+        // Profiling-enabled executors share the contract: the per-op clamp
+        // writes pre-sized atomics only (ISSUE 8).
+        (
+            "mpd-f32-prof",
+            mpdc::compress::PackedMlp::build(&comp, &weights, &biases)
+                .into_executor()
+                .with_profiling(),
+        ),
+        (
+            "mpd-int8-prof",
+            QuantizedMlp::quantize(&comp, &weights, &biases, &Calibration::unit_range(3))
+                .map_err(anyhow::Error::msg)?
+                .into_executor()
+                .with_profiling(),
+        ),
         ("conv-f32", PackedConvNet::build(&conv_comp, &cparams).into_executor()),
     ];
     let batch = 4;
@@ -137,8 +152,45 @@ fn run_into_zero_alloc_check() -> anyhow::Result<()> {
             before_small - before,
             after - before_small
         );
+        if let Some(p) = exec.profile() {
+            anyhow::ensure!(
+                p.runs() >= 112,
+                "{name}: profiling enabled but only {} runs recorded",
+                p.runs()
+            );
+        }
         println!("OK: {name} run_into performed 0 allocations across 110 warmed calls");
     }
+    Ok(())
+}
+
+/// Span recording must be allocation-free once the ring exists and the
+/// thread has claimed its slot — both warmed below, exactly as a serving
+/// thread warms them on its first request.
+fn span_zero_alloc_check() -> anyhow::Result<()> {
+    use std::time::Instant;
+    mpdc::obs::span::init(256);
+    // Warm-up: the first record claims this thread's ring slot.
+    mpdc::obs::span::record("leak_warm", Instant::now());
+    {
+        let _g = mpdc::obs::span("leak_warm");
+    }
+    let before = ALLOC_COUNT.load(Ordering::Relaxed);
+    for i in 0..1000u64 {
+        mpdc::obs::span::record_raw("leak_span", i, 1);
+        let _g = mpdc::obs::span("leak_guard");
+    }
+    let after = ALLOC_COUNT.load(Ordering::Relaxed);
+    anyhow::ensure!(
+        after == before,
+        "span recording allocated on the hot path ({} allocs over 2000 records)",
+        after - before
+    );
+    // The records really landed (ring wraps at 256, totals keep counting).
+    let snap = mpdc::obs::span::snapshot();
+    let total: u64 = snap.threads.iter().map(|t| t.total).sum();
+    anyhow::ensure!(total >= 2002, "span ring lost records: total {total}");
+    println!("OK: span recording performed 0 allocations across 2000 records");
     Ok(())
 }
 
@@ -287,8 +339,9 @@ fn pjrt_check() -> anyhow::Result<()> {
 }
 
 fn main() -> anyhow::Result<()> {
-    // First, before anything spawns threads: the exact-count assertion.
+    // First, before anything spawns threads: the exact-count assertions.
     run_into_zero_alloc_check()?;
+    span_zero_alloc_check()?;
     pool_lifecycle_check()?;
     batcher_pool_check()?;
     pjrt_check()?;

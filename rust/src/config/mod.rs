@@ -209,6 +209,57 @@ impl ConvConfig {
     }
 }
 
+/// Observability knobs — the `[obs]` TOML table. Controls whether serving
+/// executors are built with per-op profiling (the `GET /debug/profile`
+/// payload), the per-thread span ring capacity, and the default log level
+/// used when the `MPDC_LOG` environment variable is unset (the env always
+/// wins; see `obs::logger`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Build serving executors with [`crate::exec::Executor::with_profiling`].
+    pub profiling: bool,
+    /// Per-thread span ring capacity (spans retained per recording thread).
+    pub ring_capacity: usize,
+    /// Default log level when `MPDC_LOG` is unset: one of
+    /// `off|error|warn|info|debug|trace`, or empty to keep the built-in
+    /// default (`info`).
+    pub log_level: String,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self { profiling: true, ring_capacity: 1024, log_level: String::new() }
+    }
+}
+
+impl ObsConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ring_capacity == 0 {
+            return Err("obs.ring_capacity must be ≥ 1".into());
+        }
+        if self.ring_capacity > 1 << 20 {
+            return Err(format!("obs.ring_capacity {} is absurd (max 1048576)", self.ring_capacity));
+        }
+        if !self.log_level.is_empty() && crate::obs::Level::parse(&self.log_level).is_none() {
+            return Err(format!(
+                "obs.log_level {:?} must be one of off|error|warn|info|debug|trace",
+                self.log_level
+            ));
+        }
+        Ok(())
+    }
+
+    /// Install this config into the process-wide observability state: size
+    /// the span rings and seed the logger's default level. Call once at
+    /// startup, before serving traffic.
+    pub fn apply(&self) {
+        if let Some(level) = crate::obs::Level::parse(&self.log_level) {
+            crate::obs::logger::set_default_level(level);
+        }
+        crate::obs::span::init(self.ring_capacity);
+    }
+}
+
 /// HTTP serving knobs — the `[server]` TOML table. Transport-level settings
 /// map onto [`crate::server::HttpConfig`]; batching-policy settings map onto
 /// [`crate::server::BatcherConfig`] (one batcher per registered variant).
@@ -369,6 +420,7 @@ pub struct ExperimentConfig {
     pub server: ServerConfig,
     pub quant: QuantConfig,
     pub conv: ConvConfig,
+    pub obs: ObsConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -389,6 +441,7 @@ impl Default for ExperimentConfig {
             server: ServerConfig::default(),
             quant: QuantConfig::default(),
             conv: ConvConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -509,6 +562,16 @@ impl ExperimentConfig {
             cfg.conv.steps =
                 usize::try_from(v).map_err(|_| format!("conv.steps {v} must be non-negative"))?;
         }
+        if let Some(v) = doc.get_bool("obs.profiling") {
+            cfg.obs.profiling = v;
+        }
+        if let Some(v) = doc.get_int("obs.ring_capacity") {
+            cfg.obs.ring_capacity = usize::try_from(v)
+                .map_err(|_| format!("obs.ring_capacity {v} must be non-negative"))?;
+        }
+        if let Some(v) = doc.get_str("obs.log_level") {
+            cfg.obs.log_level = v.to_string();
+        }
         if let Some(v) = doc.get_str("paths.artifacts") {
             cfg.artifacts_dir = Some(v.to_string());
         }
@@ -536,6 +599,7 @@ impl ExperimentConfig {
         self.server.validate()?;
         self.quant.validate()?;
         self.conv.validate()?;
+        self.obs.validate()?;
         // plan validity at this model/nblocks combination
         self.model.plan(self.nblocks)?;
         Ok(())
@@ -720,6 +784,31 @@ steps = 25
         assert!(ExperimentConfig::from_toml("[conv]\nsteps = 0\n").is_err());
         // a negative step count must not wrap through the usize cast
         assert!(ExperimentConfig::from_toml("[conv]\nsteps = -1\n").is_err());
+    }
+
+    #[test]
+    fn obs_config_parses_and_validates() {
+        let text = r#"
+[obs]
+profiling = false
+ring_capacity = 256
+log_level = "debug"
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(
+            cfg.obs,
+            ObsConfig { profiling: false, ring_capacity: 256, log_level: "debug".into() }
+        );
+        // defaults when the table is absent: profiling on, 1024 spans/thread
+        let cfg = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.obs, ObsConfig::default());
+        assert!(cfg.obs.profiling);
+        assert_eq!(cfg.obs.ring_capacity, 1024);
+        // invalid values rejected
+        assert!(ExperimentConfig::from_toml("[obs]\nring_capacity = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml("[obs]\nring_capacity = -1\n").is_err());
+        assert!(ExperimentConfig::from_toml("[obs]\nring_capacity = 2097152\n").is_err());
+        assert!(ExperimentConfig::from_toml("[obs]\nlog_level = \"loud\"\n").is_err());
     }
 
     #[test]

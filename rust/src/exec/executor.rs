@@ -43,21 +43,31 @@ use crate::linalg::gemm::gemm_a_bt;
 use crate::linalg::im2col::{gather_cols, gather_cols_isa, im2col, maxpool_nchw, rows_to_nchw};
 use crate::linalg::kernel::{self, KernelChoice};
 use crate::linalg::pool::ThreadPool;
+use crate::obs::profile::{ExecProfile, OpMeta};
 use std::sync::Arc;
+use std::time::Instant;
 
-/// A runnable compiled model: plan + pool + tile shape + kernel ISA.
+/// A runnable compiled model: plan + pool + tile shape + kernel ISA, plus
+/// an optional per-op profile (see [`Self::with_profiling`]).
 pub struct Executor {
     plan: ExecPlan,
     pool: PoolChoice,
     tile: TileShape,
     kernel: KernelChoice,
+    profile: Option<Arc<ExecProfile>>,
 }
 
 impl Executor {
     /// Wrap a plan with the default policy (single-threaded, default tile,
     /// auto-detected SIMD kernels — scalar under `MPDC_FORCE_SCALAR`).
     pub fn new(plan: ExecPlan) -> Self {
-        Self { plan, pool: PoolChoice::None, tile: TileShape::DEFAULT, kernel: KernelChoice::auto() }
+        Self {
+            plan,
+            pool: PoolChoice::None,
+            tile: TileShape::DEFAULT,
+            kernel: KernelChoice::auto(),
+            profile: None,
+        }
     }
 
     pub fn plan(&self) -> &ExecPlan {
@@ -99,6 +109,45 @@ impl Executor {
     /// output): per-op kernel column + a dispatch summary line.
     pub fn describe(&self, batch: usize) -> String {
         self.plan.describe_with_kernel(batch, Some(&self.kernel))
+    }
+
+    /// Enable per-op profiling: every subsequent [`Self::run_into`] times
+    /// each op application into a pre-sized [`ExecProfile`] seeded with the
+    /// plan's MAC/byte accounting. The recording path is two `Instant`
+    /// reads plus relaxed atomic adds per op — no allocation (the
+    /// zero-allocation `run_into` contract still holds, pinned by
+    /// `bin/leak_test.rs`) and no change to op application, so output stays
+    /// bit-identical to an unprofiled executor (pinned by `tests/exec.rs`).
+    pub fn with_profiling(mut self) -> Self {
+        self.profile = Some(Arc::new(ExecProfile::new(Self::op_meta(&self.plan))));
+        self
+    }
+
+    /// The live profile, when [`Self::with_profiling`] enabled one. Shared:
+    /// clone the `Arc` to snapshot from another thread (`/debug/profile`).
+    pub fn profile(&self) -> Option<&Arc<ExecProfile>> {
+        self.profile.as_ref()
+    }
+
+    /// Per-op profile metadata from the plan's accounting: MACs per sample,
+    /// activation traffic per sample (i8 GEMMs additionally stage an i8
+    /// copy of their input), and resident weight bytes per batch.
+    fn op_meta(plan: &ExecPlan) -> Vec<OpMeta> {
+        plan.ops
+            .iter()
+            .map(|p| {
+                let mut act = (p.in_elems() + p.out_elems()) * 4;
+                if p.uses_i8() {
+                    act += p.in_elems();
+                }
+                OpMeta {
+                    name: p.op.name(),
+                    macs_per_sample: p.macs_per_sample() as u64,
+                    act_bytes_per_sample: act as u64,
+                    weight_bytes: p.storage_bytes() as u64,
+                }
+            })
+            .collect()
     }
 
     /// Execute on a dedicated persistent pool of `nthreads` lanes
@@ -148,15 +197,24 @@ impl Executor {
         assert_eq!(x.len(), batch * self.plan.in_dim, "input shape");
         assert_eq!(out.len(), batch * self.plan.out_dim, "output shape");
         let pool = self.pool.get();
+        let prof = self.profile.as_deref();
+        let run_t0 = prof.map(|_| Instant::now());
         let ScratchArena { a, b, q } = scratch;
         let (mut cur, mut alt) = (a, b);
         cur.clear();
         cur.extend_from_slice(x);
-        for p in &self.plan.ops {
+        for (i, p) in self.plan.ops.iter().enumerate() {
+            let op_t0 = prof.map(|_| Instant::now());
             self.apply(p, cur, alt, q, batch, pool);
+            if let (Some(pr), Some(t0)) = (prof, op_t0) {
+                pr.record_op(i, t0.elapsed().as_nanos() as u64);
+            }
             std::mem::swap(&mut cur, &mut alt);
         }
         out.copy_from_slice(cur);
+        if let (Some(pr), Some(t0)) = (prof, run_t0) {
+            pr.record_run(batch as u64, t0.elapsed().as_nanos() as u64);
+        }
     }
 
     /// Allocating convenience forward (legacy `forward` shape): fresh arena

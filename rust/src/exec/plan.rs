@@ -204,17 +204,7 @@ impl ExecPlan {
                 p.storage_bytes().to_string(),
             ];
             if let Some(k) = kernel {
-                cells.push(
-                    match &p.op {
-                        Op::BlockGemmF32 { .. } => k.f32_isa().name(),
-                        Op::BlockGemmI8 { .. } => k.i8_isa().name(),
-                        Op::Gather { .. } => k.f32_isa().name(),
-                        // the uncompressed baseline intentionally stays scalar
-                        Op::DenseGemm { .. } => "scalar",
-                        _ => "-",
-                    }
-                    .to_string(),
-                );
+                cells.push(kernel_label(&p.op, k).to_string());
             }
             t.row(&cells);
         }
@@ -235,6 +225,20 @@ impl ExecPlan {
             self.storage_bytes(),
             arena_bytes as f64 / 1024.0,
         )
+    }
+}
+
+/// The kernel an op dispatches to under `kernel` — the shared `kernel`
+/// column of `mpdc plan` and `mpdc profile`: ISA name for compute ops, `-`
+/// for structural ops that only move bytes (the uncompressed `dense_gemm`
+/// baseline intentionally stays scalar).
+pub fn kernel_label(op: &Op, kernel: &crate::linalg::kernel::KernelChoice) -> &'static str {
+    match op {
+        Op::BlockGemmF32 { .. } => kernel.f32_isa().name(),
+        Op::BlockGemmI8 { .. } => kernel.i8_isa().name(),
+        Op::Gather { .. } => kernel.f32_isa().name(),
+        Op::DenseGemm { .. } => "scalar",
+        _ => "-",
     }
 }
 

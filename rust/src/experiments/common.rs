@@ -22,7 +22,7 @@ use std::path::Path;
 pub fn try_engine() -> Option<Engine> {
     let dir = default_artifact_dir();
     if !dir.join("manifest.txt").exists() {
-        eprintln!("[mpdc] artifacts not found at {} — run `make artifacts`", dir.display());
+        crate::log_warn!("runtime", "artifacts not found at {} — run `make artifacts`", dir.display());
         return None;
     }
     match Manifest::load(&dir).and_then(|m| Engine::cpu(m).map_err(|e| e.to_string())) {
@@ -32,7 +32,7 @@ pub fn try_engine() -> Option<Engine> {
                 !cfg!(feature = "pjrt"),
                 "engine init failed with pjrt enabled and artifacts present: {e}"
             );
-            eprintln!("[mpdc] engine init failed: {e}");
+            crate::log_warn!("runtime", "engine init failed: {e}");
             None
         }
     }
@@ -97,7 +97,7 @@ pub fn infer_mask_values(model: ModelKind, tr: &AotTrainer) -> Vec<Value> {
 pub fn emit(path: &str, row: Json) {
     let p = std::path::PathBuf::from(path);
     if let Err(e) = append_jsonl(&p, &row) {
-        eprintln!("[mpdc] failed to write {path}: {e}");
+        crate::log_warn!("experiments", "failed to write {path}: {e}");
     }
 }
 

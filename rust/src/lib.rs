@@ -40,8 +40,12 @@
 //!   [`server::PlanBackend`] whose worker reuses a persistent pool *and* a
 //!   scratch arena across every batch it executes
 //! * [`config`] — TOML-subset config system, incl. [`config::EngineConfig`]
-//!   (pool sizing + kernel tile shape) and [`config::ServerConfig`]
-//!   (`[server]`: HTTP transport + batching policy)
+//!   (pool sizing + kernel tile shape), [`config::ServerConfig`]
+//!   (`[server]`: HTTP transport + batching policy), and
+//!   [`config::ObsConfig`] (`[obs]`: profiling, span rings, log level)
+//! * [`obs`] — observability: the `MPDC_LOG`-leveled logger, lock-free
+//!   per-thread span rings, and the per-op [`obs::ExecProfile`] filled by
+//!   profiling-enabled executors (served live at `GET /debug/profile`)
 //! * [`util`] — bench harness, property testing, JSON, PGM, CRC32
 //!
 //! Engine notes — pool lifecycle, tile-shape choice, and the fusion
@@ -70,4 +74,5 @@ pub mod experiments;
 pub mod linalg;
 pub mod mask;
 pub mod nn;
+pub mod obs;
 pub mod util;

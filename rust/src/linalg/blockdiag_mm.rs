@@ -288,6 +288,7 @@ impl BlockDiagMatrix {
         tile: TileShape,
         isa: crate::linalg::kernel::Isa,
     ) {
+        let _span = crate::obs::span("blockdiag_mm_f32");
         if !isa.is_simd() {
             return self.forward_fused(x, y, batch, bias, relu, pool, tile);
         }

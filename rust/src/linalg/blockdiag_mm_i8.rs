@@ -280,6 +280,7 @@ impl QuantizedBlockDiagMatrix {
         tile: TileShape,
         isa: crate::linalg::kernel::Isa,
     ) {
+        let _span = crate::obs::span("blockdiag_mm_i8");
         if !isa.is_simd() {
             return self.forward_fused(xq, y, batch, act_scale, bias, relu, pool, tile);
         }

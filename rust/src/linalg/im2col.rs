@@ -89,6 +89,7 @@ impl ConvShape {
 /// `tests/simd_kernels.rs` pins across padding borders, stride tails, and
 /// single-column images.
 pub fn im2col(x: &[f32], batch: usize, s: &ConvShape, out: &mut Vec<f32>) {
+    let _span = crate::obs::span("im2col");
     assert_eq!(x.len(), batch * s.in_dim(), "im2col input shape");
     let (oh, ow) = s.out_hw();
     let pdim = s.patch_dim();

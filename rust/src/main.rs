@@ -8,6 +8,8 @@
 //!   quantize    post-training int8 quantization → checkpoint-v2 artifact
 //!   plan        dump a model's compiled execution plan (op list, buffer
 //!               sizes, MAC/storage accounting; f32/int8/mixed precision)
+//!   profile     per-op execution profile of a compiled plan (calls, ns,
+//!               GFLOP/s, GB/s) → stdout table + results/PROF_8.json
 //!   serve       start the HTTP inference server (dense + MPD + -int8 +
 //!               compressed-conv deep-mnist-mpd variants)
 //!   loadgen     drive closed/open-loop load against a running server
@@ -30,7 +32,7 @@ fn main() {
     let (cmd, flags) = match parse_args(&args) {
         Ok(v) => v,
         Err(e) => {
-            eprintln!("error: {e}\n");
+            mpdc::log_error!("mpdc", "{e}");
             usage();
             std::process::exit(2);
         }
@@ -42,6 +44,7 @@ fn main() {
         "train" => cmd_train(&flags),
         "quantize" => cmd_quantize(&flags),
         "plan" => cmd_plan(&flags),
+        "profile" => cmd_profile(&flags),
         "serve" => cmd_serve(&flags),
         "loadgen" => cmd_loadgen(&flags),
         "bench-fig1" => cmd_fig1(&flags),
@@ -55,13 +58,13 @@ fn main() {
             Ok(())
         }
         other => {
-            eprintln!("unknown command {other:?}\n");
+            mpdc::log_error!("mpdc", "unknown command {other:?}");
             usage();
             std::process::exit(2);
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
+        mpdc::log_error!("mpdc", "{e:#}");
         std::process::exit(1);
     }
 }
@@ -93,6 +96,14 @@ COMMANDS
                  compressed-conv (deep-mnist-lite) plan. --precision
                  mixed quantizes masked layers to int8 and keeps dense
                  layers f32 (per-layer mixed precision on one plan)
+  profile        [--model M] [--nblocks K] [--seed S] [--batch N]
+                 [--iters K] [--precision f32|int8|mixed] [--config FILE]
+                 run the compiled plan under the per-op profiler: warm,
+                 time --iters batched runs, print per-op calls / total /
+                 mean / min / max ns, time share, GFLOP/s and GB/s, check
+                 per-op totals attribute ≥ 90% of wall time, and merge
+                 the section into results/PROF_8.json; deep_mnist also
+                 profiles the compressed-conv deep-mnist-lite plan
   serve          [--port P] [--serve-mode event|blocking] [--steps N]
                  [--split dense:0.2,mpd:0.8] [--config FILE]
                  quick-train a masked LeNet, register dense + csr + mpd
@@ -274,7 +285,8 @@ fn cmd_train(flags: &Flags) -> anyhow::Result<()> {
     let dir = out_dir(flags);
     std::fs::create_dir_all(&dir)?;
     let log = dir.join(format!("{}_loss.jsonl", cfg.model.name()));
-    println!(
+    mpdc::log_info!(
+        "train",
         "training {} with {} blocks for {} steps (lr {})…",
         cfg.model.name(),
         cfg.nblocks,
@@ -325,10 +337,17 @@ fn cmd_quantize(flags: &Flags) -> anyhow::Result<()> {
 
     // 1) Trained f32 weights: --ckpt (fc{i}.w / fc{i}.b) or quick native training.
     let (weights, biases) = if let Some(path) = flags.get("ckpt") {
-        println!("loading {path} (model {}, {} blocks, seed {})…", cfg.model.name(), cfg.nblocks, cfg.seed);
+        mpdc::log_info!(
+            "quantize",
+            "loading {path} (model {}, {} blocks, seed {})…",
+            cfg.model.name(),
+            cfg.nblocks,
+            cfg.seed
+        );
         load_mlp_params(&comp, std::path::Path::new(path))?
     } else {
-        println!(
+        mpdc::log_info!(
+            "quantize",
             "no --ckpt given: training {} natively ({} steps, {} blocks)…",
             cfg.model.name(),
             cfg.steps,
@@ -355,7 +374,7 @@ fn cmd_quantize(flags: &Flags) -> anyhow::Result<()> {
 
     // 3) Calibrate on training activations, quantize, emit checkpoint v2.
     let nsamples = cfg.quant.calib_samples.min(train.len());
-    println!("calibrating on {nsamples} samples (batch {})…", cfg.quant.calib_batch);
+    mpdc::log_info!("quantize", "calibrating on {nsamples} samples (batch {})…", cfg.quant.calib_batch);
     let calib = calibrate_chunked(
         &comp,
         &weights,
@@ -543,6 +562,181 @@ fn cmd_plan(flags: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Run a compiled plan under the per-op profiler and report where the
+/// nanoseconds go. Lowers the model exactly like `mpdc plan` (op timing
+/// structure never depends on trained weight *values*, so deterministic
+/// random masked weights stand in), warms the arena outside the measured
+/// window, times `--iters` batched runs, and prints per-op calls /
+/// total / mean / min / max time, wall-time share, and effective GFLOP/s
+/// and GB/s from the plan's MAC/byte accounting. Per-op totals must
+/// attribute ≥ 90% of the end-to-end wall time (warns otherwise); every
+/// section is merged into `results/PROF_8.json`.
+fn cmd_profile(flags: &Flags) -> anyhow::Result<()> {
+    use mpdc::compress::compressor::MpdCompressor;
+    use mpdc::compress::conv_model::PackedConvNet;
+    use mpdc::compress::{ConvCompressor, ConvModelPlan};
+    use mpdc::exec::{kernel_label, Precision, ScratchArena};
+    use mpdc::mask::prng::Xoshiro256pp;
+    use mpdc::quant::{Calibration, QuantizedMlp};
+
+    let cfg = cfg_from_flags(flags)?;
+    let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let iters: usize = flags.get("iters").map(|s| s.parse()).transpose()?.unwrap_or(50);
+    anyhow::ensure!(batch >= 1, "--batch must be ≥ 1");
+    anyhow::ensure!(iters >= 1, "--iters must be ≥ 1");
+    let precision = flags.get("precision").map(String::as_str).unwrap_or("f32");
+
+    let comp = MpdCompressor::new(cfg.model.plan(cfg.nblocks).map_err(|e| anyhow::anyhow!(e))?, cfg.seed);
+    let (weights, biases) = comp.random_masked_weights(cfg.seed);
+    let cal = Calibration::unit_range(comp.nlayers());
+    let exec = match precision {
+        "f32" => mpdc::compress::PackedMlp::build(&comp, &weights, &biases).into_executor(),
+        "int8" => QuantizedMlp::quantize(&comp, &weights, &biases, &cal)
+            .map_err(|e| anyhow::anyhow!(e))?
+            .into_executor(),
+        "mixed" => {
+            let prec: Vec<Precision> = comp
+                .masks
+                .iter()
+                .map(|m| if m.is_some() { Precision::I8 } else { Precision::F32 })
+                .collect();
+            comp.build_mixed_engine(&weights, &biases, Some(&cal), &prec, &cfg.engine)
+                .map_err(|e| anyhow::anyhow!(e))?
+        }
+        other => anyhow::bail!("unknown --precision {other:?} (f32|int8|mixed)"),
+    };
+    let mut sections = vec![(cfg.model.name().to_string(), exec)];
+
+    // The server's deep-mnist-mpd variant runs the compressed-conv plan:
+    // profile it alongside the FC one, like `mpdc plan` dumps both.
+    if cfg.model == ModelKind::DeepMnist {
+        let conv_comp = ConvCompressor::new(ConvModelPlan::deep_mnist_lite(cfg.nblocks), cfg.seed);
+        let params = conv_comp.random_masked_params(cfg.seed);
+        let conv_exec = match precision {
+            "int8" | "mixed" => {
+                let ccal = mpdc::quant::ConvCalibration::unit_range(
+                    conv_comp.plan.convs.len(),
+                    conv_comp.fc.nlayers(),
+                );
+                mpdc::quant::QuantizedConvNet::quantize(&conv_comp, &params, &ccal)
+                    .map_err(|e| anyhow::anyhow!(e))?
+                    .into_executor()
+            }
+            _ => PackedConvNet::build(&conv_comp, &params).into_executor(),
+        };
+        sections.push(("deep-mnist-lite".to_string(), conv_exec));
+    }
+
+    let mut entries: Vec<Json> = Vec::new();
+    for (plan_name, exec) in sections {
+        let exec = exec.with_profiling();
+        let profile = exec.profile().expect("profiling just enabled").clone();
+        let (in_dim, out_dim) = (exec.in_dim(), exec.out_dim());
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+        let x: Vec<f32> = (0..batch * in_dim).map(|_| rng.next_f32()).collect();
+        let mut y = vec![0.0f32; batch * out_dim];
+        let mut scratch = ScratchArena::new();
+        // Warm-up outside the measured window: arena growth, pool spin-up,
+        // and first-touch page faults would otherwise be billed to op 0.
+        for _ in 0..3 {
+            exec.run_into(&x, batch, &mut y, &mut scratch);
+        }
+        profile.reset();
+        let wall_t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            exec.run_into(&x, batch, &mut y, &mut scratch);
+        }
+        let wall_ns = wall_t0.elapsed().as_nanos() as u64;
+        mpdc::util::benchkit::black_box(&y);
+
+        let attributed = profile.attributed_ns();
+        let attribution = attributed as f64 / wall_ns.max(1) as f64;
+        let mut t = Table::new(&[
+            "#", "op", "kernel", "calls", "total ms", "mean µs", "min µs", "max µs", "share %",
+            "GFLOP/s", "GB/s",
+        ]);
+        for r in &profile.rows() {
+            t.row(&[
+                r.index.to_string(),
+                r.name.to_string(),
+                kernel_label(&exec.plan().ops[r.index].op, &exec.kernel()).to_string(),
+                r.calls.to_string(),
+                format!("{:.3}", r.total_ns as f64 / 1e6),
+                format!("{:.1}", r.mean_ns() / 1e3),
+                format!("{:.1}", r.min_ns as f64 / 1e3),
+                format!("{:.1}", r.max_ns as f64 / 1e3),
+                format!("{:.1}", 100.0 * r.total_ns as f64 / attributed.max(1) as f64),
+                format!("{:.2}", r.gflops),
+                format!("{:.2}", r.gbytes_per_s),
+            ]);
+        }
+        println!(
+            "== {plan_name} · {} blocks · {precision} · batch {batch} · {iters} iters ==\n{}",
+            cfg.nblocks,
+            t.render()
+        );
+        println!(
+            "wall {:.3} ms  attributed {:.3} ms ({:.1}%)  {:.1} µs/run  {:.0} samples/s\n",
+            wall_ns as f64 / 1e6,
+            attributed as f64 / 1e6,
+            attribution * 100.0,
+            wall_ns as f64 / 1e3 / iters as f64,
+            (iters * batch) as f64 * 1e9 / wall_ns.max(1) as f64,
+        );
+        if attribution < 0.9 {
+            mpdc::log_warn!(
+                "profile",
+                "{plan_name}: per-op totals attribute only {:.1}% of wall time (want ≥ 90%)",
+                attribution * 100.0
+            );
+        }
+        entries.push(Json::obj(vec![
+            ("plan", Json::str(plan_name.as_str())),
+            ("precision", Json::str(precision)),
+            ("nblocks", Json::num(cfg.nblocks as f64)),
+            ("batch", Json::num(batch as f64)),
+            ("iters", Json::num(iters as f64)),
+            ("wall_ns", Json::num(wall_ns as f64)),
+            ("attribution", Json::num(attribution)),
+            ("profile", profile.to_json()),
+        ]));
+    }
+    let path = merge_prof_results(&entries)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Merge profile entries into `results/PROF_8.json`, keyed by
+/// (plan, precision, nblocks, batch): repeated CLI runs update their own
+/// entry in place instead of clobbering the rest of the file.
+fn merge_prof_results(new_entries: &[Json]) -> anyhow::Result<PathBuf> {
+    let path = mpdc::util::benchkit::results_dir().join("PROF_8.json");
+    let entry_key = |e: &Json| -> String {
+        format!(
+            "{}|{}|{}|{}",
+            e.get("plan").and_then(Json::as_str).unwrap_or(""),
+            e.get("precision").and_then(Json::as_str).unwrap_or(""),
+            e.get("nblocks").and_then(Json::as_f64).unwrap_or(-1.0),
+            e.get("batch").and_then(Json::as_f64).unwrap_or(-1.0),
+        )
+    };
+    let mut entries: Vec<Json> = match std::fs::read_to_string(&path) {
+        Ok(text) => Json::parse(&text)
+            .ok()
+            .and_then(|j| j.get("entries").and_then(|e| e.as_arr().map(<[Json]>::to_vec)))
+            .unwrap_or_default(),
+        Err(_) => Vec::new(),
+    };
+    for new in new_entries {
+        let key = entry_key(new);
+        entries.retain(|e| entry_key(e) != key);
+        entries.push(new.clone());
+    }
+    let doc = Json::obj(vec![("bench", Json::str("profile")), ("entries", Json::Arr(entries))]);
+    std::fs::write(&path, doc.to_string())?;
+    Ok(path)
+}
+
 fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     use mpdc::compress::compressor::MpdCompressor;
     use mpdc::compress::plan::{LayerPlan, SparsityPlan};
@@ -566,10 +760,13 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         cfg.server.validate().map_err(|e| anyhow::anyhow!(e))?;
     }
     let steps: usize = flags.get("steps").map(|s| s.parse()).transpose()?.unwrap_or(150);
+    // [obs]: seed the log-level default (MPDC_LOG still wins) and size the
+    // span rings before any server thread claims a ring slot.
+    cfg.obs.apply();
 
     // Quick native training on synthetic MNIST-like data: enough to make the
     // three representations meaningfully identical, fast enough for a CLI.
-    println!("training masked LeNet-300-100 natively ({steps} steps, {} blocks)…", cfg.nblocks);
+    mpdc::log_info!("serve", "training masked LeNet-300-100 natively ({steps} steps, {} blocks)…", cfg.nblocks);
     let spec = SynthSpec::mnist_like();
     let mut train = Dataset::from_synth(&SynthImages::generate(spec, 1500, cfg.seed, 0));
     train.normalize();
@@ -594,12 +791,15 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     // dense baseline is lowered to a plan too, so all four representations
     // run on the same interpreter with per-worker arenas.
     let bc = cfg.server.batcher_config();
+    // [obs] profiling=true (the default) builds every plan-backed variant
+    // with a live per-op profile, surfaced at GET /debug/profile.
+    let with_obs = |b: PlanBackend| if cfg.obs.profiling { b.profiled() } else { b };
     let mut router = Router::new();
-    let (h, _w1) = spawn(PlanBackend::new(Executor::new(lower_dense_mlp(&mlp))).with_max_batch(bc.max_batch).warmed(), bc);
+    let (h, _w1) = spawn(with_obs(PlanBackend::new(Executor::new(lower_dense_mlp(&mlp)))).with_max_batch(bc.max_batch).warmed(), bc);
     router.register("dense", h);
     let (h, _w2) = spawn(CsrBackend { layers: csr_layers, feature_dim: 784, out_dim: 10 }, bc);
     router.register("csr", h);
-    let (h, _w3) = spawn(PlanBackend::new(packed.into_executor()).with_max_batch(bc.max_batch).warmed(), bc);
+    let (h, _w3) = spawn(with_obs(PlanBackend::new(packed.into_executor())).with_max_batch(bc.max_batch).warmed(), bc);
     router.register("mpd", h);
 
     // Quantized -int8 variants of the same trained weights ([quant] in TOML):
@@ -613,7 +813,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         let q = comp
             .build_quantized_engine(&weights, &biases, &calib, &cfg.engine)
             .map_err(|e| anyhow::anyhow!(e))?;
-        let (h, _wq1) = spawn(PlanBackend::new(q.into_executor()).with_max_batch(bc.max_batch).warmed(), bc);
+        let (h, _wq1) = spawn(with_obs(PlanBackend::new(q.into_executor())).with_max_batch(bc.max_batch).warmed(), bc);
         router.register("mpd-int8", h);
 
         let dense_plan = SparsityPlan::new(vec![
@@ -628,7 +828,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         let qd = dense_comp
             .build_quantized_engine(&weights, &biases, &calib, &cfg.engine)
             .map_err(|e| anyhow::anyhow!(e))?;
-        let (h, _wq2) = spawn(PlanBackend::new(qd.into_executor()).with_max_batch(bc.max_batch).warmed(), bc);
+        let (h, _wq2) = spawn(with_obs(PlanBackend::new(qd.into_executor())).with_max_batch(bc.max_batch).warmed(), bc);
         router.register("dense-int8", h);
     }
 
@@ -644,9 +844,11 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         use mpdc::train::native_trainer::fit_native_conv;
 
         anyhow::ensure!(cfg.nblocks <= 256, "deep-mnist-mpd supports ≤ 256 blocks");
-        println!(
+        mpdc::log_info!(
+            "serve",
             "training Deep MNIST (lite) conv net natively ({} steps, {} blocks)…",
-            cfg.conv.steps, cfg.nblocks
+            cfg.conv.steps,
+            cfg.nblocks
         );
         let conv_comp = ConvCompressor::new(ConvModelPlan::deep_mnist_lite(cfg.nblocks), cfg.seed);
         let mut conv_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xC4);
@@ -661,14 +863,15 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         fit_native_conv(&mut conv_net, &train, 32, &ctc);
         let cparams = ConvNetParams::from_net(&conv_net);
         let cr = conv_comp.report();
-        println!(
-            "  deep-mnist-mpd: {:.2}× parameter compression ({} → {})",
+        mpdc::log_info!(
+            "serve",
+            "deep-mnist-mpd: {:.2}× parameter compression ({} → {})",
             cr.overall_compression(),
             cr.total_dense_params(),
             cr.total_kept_params()
         );
         let cpacked = conv_comp.build_engine(&cparams, &cfg.engine).map_err(|e| anyhow::anyhow!(e))?;
-        let (h, _wc1) = spawn(PlanBackend::new(cpacked.into_executor()).with_max_batch(bc.max_batch).warmed(), bc);
+        let (h, _wc1) = spawn(with_obs(PlanBackend::new(cpacked.into_executor())).with_max_batch(bc.max_batch).warmed(), bc);
         router.register("deep-mnist-mpd", h);
 
         if cfg.quant.enabled {
@@ -684,7 +887,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
                 .map_err(|e| anyhow::anyhow!(e))?
                 .with_engine_config(&cfg.engine)
                 .map_err(|e| anyhow::anyhow!(e))?;
-            let (h, _wc2) = spawn(PlanBackend::new(cq.into_executor()).with_max_batch(bc.max_batch).warmed(), bc);
+            let (h, _wc2) = spawn(with_obs(PlanBackend::new(cq.into_executor())).with_max_batch(bc.max_batch).warmed(), bc);
             router.register("deep-mnist-mpd-int8", h);
         }
     }
@@ -701,7 +904,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
             .collect::<anyhow::Result<_>>()?;
         let as_refs: Vec<(&str, f64)> = parsed.iter().map(|(n, w)| (n.as_str(), *w)).collect();
         router.set_split(&as_refs).map_err(|e| anyhow::anyhow!(e))?;
-        println!("weighted split: {split}");
+        mpdc::log_info!("serve", "weighted split: {split}");
     }
 
     let variants = router.variant_names().join("/");
@@ -761,7 +964,7 @@ fn cmd_loadgen(flags: &Flags) -> anyhow::Result<()> {
                 variants.iter().map(|(n, _, _)| n.as_str()).collect::<Vec<_>>().join(", ")
             );
         };
-        println!("sweeping open load at http://{addr}/infer/{variant} ({feature_dim} features)…");
+        mpdc::log_info!("loadgen", "sweeping open load at http://{addr}/infer/{variant} ({feature_dim} features)…");
         let points = loadgen::sweep(addr, &variant, *feature_dim, &sweep_cfg);
         let mut t = Table::new(&[
             "conc", "offered q/s", "achieved q/s", "sent", "ok", "non-200 %", "p50 µs", "p99 µs",
@@ -819,7 +1022,7 @@ fn cmd_loadgen(flags: &Flags) -> anyhow::Result<()> {
             variants.iter().map(|(n, _, _)| n.as_str()).collect::<Vec<_>>().join(", ")
         );
     };
-    println!("driving {mode} load at http://{addr}/infer/{variant} ({} features)…", feature_dim);
+    mpdc::log_info!("loadgen", "driving {mode} load at http://{addr}/infer/{variant} ({} features)…", feature_dim);
     let report = loadgen::run_http(addr, &variant, *feature_dim, &cfg);
     let mut t = Table::new(&[
         "variant", "mode", "sent", "ok", "429", "err", "req/s", "p50 µs", "p90 µs", "p99 µs",

@@ -1,0 +1,224 @@
+//! Leveled structured logger over stderr, filtered by `MPDC_LOG`.
+//!
+//! Filter syntax (comma-separated; the first bare level is the default):
+//!
+//! ```text
+//! MPDC_LOG=info                     # everything at info and above
+//! MPDC_LOG=warn,server=debug        # warn by default, debug for server::*
+//! MPDC_LOG=off                      # silence everything
+//! ```
+//!
+//! Targets are matched by prefix, longest rule wins, so `server` covers
+//! `server::http` and `server::batcher`. The filter is parsed once (first
+//! log call) and cached; a disabled line costs one atomic load plus the
+//! prefix scan — no formatting, no allocation. Line format:
+//!
+//! ```text
+//! [   12.345678s INFO  server::http] accepted conn 42 from 127.0.0.1
+//! ```
+//!
+//! The timestamp is monotonic seconds since [`epoch`] (process start), the
+//! same clock the span rings stamp against, so logs and traces correlate
+//! directly. Configs can seed the default level via [`set_default_level`]
+//! (the `[obs] log_level` key); the `MPDC_LOG` environment variable always
+//! wins when set.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log verbosity, ordered: a filter level admits itself and everything
+/// more severe (smaller discriminant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Admit nothing.
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Off => "OFF",
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    /// Parse a level name (case-insensitive). `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(Level::Off),
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            1 => Level::Error,
+            2 => Level::Warn,
+            3 => Level::Info,
+            4 => Level::Debug,
+            5 => Level::Trace,
+            _ => Level::Off,
+        }
+    }
+}
+
+/// A parsed `MPDC_LOG` filter: a default level plus per-target-prefix rules.
+#[derive(Debug)]
+pub struct Filter {
+    default: Level,
+    /// (target prefix, level), longest prefix wins.
+    rules: Vec<(String, Level)>,
+}
+
+impl Filter {
+    /// Parse a filter spec. Unknown level names and malformed entries are
+    /// ignored (a logger must never be the thing that crashes the process).
+    pub fn parse(spec: &str, fallback: Level) -> Filter {
+        let mut default = fallback;
+        let mut rules: Vec<(String, Level)> = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part.split_once('=') {
+                None => {
+                    if let Some(l) = Level::parse(part) {
+                        default = l;
+                    }
+                }
+                Some((target, level)) => {
+                    if let Some(l) = Level::parse(level) {
+                        rules.push((target.trim().to_string(), l));
+                    }
+                }
+            }
+        }
+        // Longest prefix first so max_for can take the first match.
+        rules.sort_by(|a, b| b.0.len().cmp(&a.0.len()));
+        Filter { default, rules }
+    }
+
+    /// The most verbose level admitted for `target`.
+    pub fn max_for(&self, target: &str) -> Level {
+        for (prefix, level) in &self.rules {
+            if target.starts_with(prefix.as_str()) {
+                return *level;
+            }
+        }
+        self.default
+    }
+}
+
+static FILTER: OnceLock<Filter> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+/// Config-provided default (0 = unset → Info), read once when the filter is
+/// first resolved; `MPDC_LOG` overrides it entirely.
+static CONFIG_DEFAULT: AtomicU8 = AtomicU8::new(0);
+
+/// The process-wide monotonic epoch shared by log timestamps and span
+/// start times. First caller pins it.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds elapsed since [`epoch`].
+pub fn monotonic_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Seed the default level used when `MPDC_LOG` is unset (from `[obs]
+/// log_level`). No effect once the filter has been resolved by a log call.
+pub fn set_default_level(level: Level) {
+    CONFIG_DEFAULT.store(level as u8, Ordering::Relaxed);
+}
+
+fn filter() -> &'static Filter {
+    FILTER.get_or_init(|| {
+        let cfg = CONFIG_DEFAULT.load(Ordering::Relaxed);
+        let fallback = if cfg == 0 { Level::Info } else { Level::from_u8(cfg) };
+        match std::env::var("MPDC_LOG") {
+            Ok(spec) => Filter::parse(&spec, fallback),
+            Err(_) => Filter { default: fallback, rules: Vec::new() },
+        }
+    })
+}
+
+/// Whether a line at `level` for `target` would be emitted.
+pub fn enabled(target: &str, level: Level) -> bool {
+    level != Level::Off && level <= filter().max_for(target)
+}
+
+/// Emit one log line (used via the `log_error!`…`log_trace!` macros).
+/// Formatting only happens when the level is admitted.
+pub fn log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if !enabled(target, level) {
+        return;
+    }
+    let t = epoch().elapsed();
+    eprintln!("[{:>12.6}s {:<5} {}] {}", t.as_secs_f64(), level.name(), target, args);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_and_names() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Debug < Level::Trace);
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+        assert_eq!(Level::Info.name(), "INFO");
+    }
+
+    #[test]
+    fn filter_default_and_target_rules() {
+        let f = Filter::parse("warn,server=debug,server::http=trace", Level::Info);
+        assert_eq!(f.max_for("exec::executor"), Level::Warn);
+        assert_eq!(f.max_for("server::batcher"), Level::Debug);
+        // Longest prefix wins over the shorter `server` rule.
+        assert_eq!(f.max_for("server::http"), Level::Trace);
+    }
+
+    #[test]
+    fn filter_ignores_malformed_entries() {
+        let f = Filter::parse("bogus,=,x=nope,debug", Level::Warn);
+        assert_eq!(f.max_for("anything"), Level::Debug);
+        let f = Filter::parse("", Level::Warn);
+        assert_eq!(f.max_for("anything"), Level::Warn);
+    }
+
+    #[test]
+    fn off_silences_everything() {
+        let f = Filter::parse("off", Level::Info);
+        assert_eq!(f.max_for("server"), Level::Off);
+        // Level::Off lines are never admitted, whatever the filter.
+        assert!(Level::Off > Level::Off || Level::Off == Level::Off);
+    }
+
+    #[test]
+    fn monotonic_clock_advances() {
+        let a = monotonic_ns();
+        let b = monotonic_ns();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,73 @@
+//! Observability: leveled logging, allocation-free span tracing, and per-op
+//! execution profiles. Dependency-free by construction — this layer is what
+//! every perf claim in `results/` reports through, so it must not perturb
+//! the system it measures.
+//!
+//! Three pieces (see DESIGN.md §Observability):
+//!
+//! * [`logger`] — a leveled structured logger filtered by the `MPDC_LOG`
+//!   environment variable (`error|warn|info|debug|trace|off`, with optional
+//!   per-target overrides like `MPDC_LOG=warn,server=debug`). Timestamps are
+//!   monotonic seconds since process start. Disabled levels cost one relaxed
+//!   atomic load plus a prefix match — no formatting, no allocation.
+//! * [`span`] — lock-free per-thread span ring buffers. Fixed capacity,
+//!   pre-allocated at first use, overwrite-on-wrap; recording a span is a
+//!   thread-local index lookup plus a seqlock-guarded sequence of relaxed
+//!   atomic stores. Zero allocation on the recording path (pinned by
+//!   `bin/leak_test.rs`), so spans can stay on in production.
+//! * [`profile`] — [`profile::ExecProfile`]: pre-sized per-op counters
+//!   (call count, total/min/max ns) with plan-derived MAC and byte
+//!   accounting, filled by `exec::Executor::run_into` when profiling is
+//!   enabled and snapshotted by `GET /debug/profile` and `mpdc profile`.
+//!
+//! The shared monotonic clock lives in [`logger::epoch`]: both log lines and
+//! span timestamps are nanoseconds relative to the same process epoch, so
+//! traces and logs line up without clock translation.
+
+pub mod logger;
+pub mod profile;
+pub mod span;
+
+pub use logger::Level;
+pub use profile::{ExecProfile, OpMeta, OpProfileRow};
+pub use span::{span, SpanGuard};
+
+/// Log at error level: `log_error!("target", "format {}", args)`.
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::logger::log($crate::obs::Level::Error, $target, format_args!($($arg)*))
+    };
+}
+
+/// Log at warn level: `log_warn!("target", "format {}", args)`.
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::logger::log($crate::obs::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+/// Log at info level: `log_info!("target", "format {}", args)`.
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::logger::log($crate::obs::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+/// Log at debug level: `log_debug!("target", "format {}", args)`.
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::logger::log($crate::obs::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+/// Log at trace level: `log_trace!("target", "format {}", args)`.
+#[macro_export]
+macro_rules! log_trace {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::logger::log($crate::obs::Level::Trace, $target, format_args!($($arg)*))
+    };
+}

@@ -1,0 +1,313 @@
+//! Per-op execution profiles: pre-sized atomic counters filled by
+//! `exec::Executor::run_into` when profiling is enabled.
+//!
+//! An [`ExecProfile`] is created once per executor from plan metadata (one
+//! [`OpMeta`] per planned op, carrying the plan's MAC/byte accounting) and
+//! updated with plain relaxed atomics — interior mutability keeps the
+//! executor API `&self` and the recording path allocation-free (pinned by
+//! `bin/leak_test.rs`). Snapshots ([`ExecProfile::rows`] /
+//! [`ExecProfile::to_json`]) derive effective GFLOP/s and bytes/s per op:
+//!
+//! * GFLOP/s counts each MAC as two floating-point ops (the usual GEMM
+//!   convention), over that op's accumulated wall time;
+//! * bytes/s counts activation traffic (`in + out` elements × element
+//!   width) per sample plus the op's resident weight bytes once per batch.
+//!
+//! Consumers: `GET /debug/profile` (live JSON snapshot), `mpdc profile`
+//! (per-op breakdown table + `results/PROF_8.json`), and the 10%
+//! wall-time-attribution acceptance test in `tests/exec.rs`.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Plan-derived metadata for one op (copied out of the `ExecPlan` when the
+/// profile is created, so snapshots need no plan access).
+#[derive(Clone, Debug)]
+pub struct OpMeta {
+    /// The op's stable name (`exec::Op::name`).
+    pub name: &'static str,
+    /// Multiply-accumulates per sample (0 for data-movement ops).
+    pub macs_per_sample: u64,
+    /// Activation bytes touched per sample: input + output elements at
+    /// their element width (1 for i8 paths, 4 for f32).
+    pub act_bytes_per_sample: u64,
+    /// Resident parameter bytes this op reads per batch.
+    pub weight_bytes: u64,
+}
+
+/// One op's live counters. All relaxed atomics: per-op totals are exact,
+/// cross-op reads are only ever consumed as a snapshot.
+struct OpStat {
+    calls: AtomicU64,
+    total_ns: AtomicU64,
+    min_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl OpStat {
+    fn new() -> OpStat {
+        OpStat {
+            calls: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A pre-sized per-op profile. Shared as `Arc<ExecProfile>` between the
+/// executor filling it and the snapshot consumers.
+pub struct ExecProfile {
+    meta: Vec<OpMeta>,
+    ops: Vec<OpStat>,
+    runs: AtomicU64,
+    samples: AtomicU64,
+    run_ns: AtomicU64,
+}
+
+/// One snapshot row, with derived rates.
+#[derive(Clone, Debug)]
+pub struct OpProfileRow {
+    pub index: usize,
+    pub name: &'static str,
+    pub calls: u64,
+    pub total_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+    pub macs_per_sample: u64,
+    /// Effective GFLOP/s (2 × MACs / second) over this op's recorded time.
+    pub gflops: f64,
+    /// Effective activation+weight traffic in GB/s over recorded time.
+    pub gbytes_per_s: f64,
+}
+
+impl OpProfileRow {
+    pub fn mean_ns(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.calls as f64
+        }
+    }
+}
+
+impl ExecProfile {
+    pub fn new(meta: Vec<OpMeta>) -> ExecProfile {
+        let n = meta.len();
+        ExecProfile {
+            meta,
+            ops: (0..n).map(|_| OpStat::new()).collect(),
+            runs: AtomicU64::new(0),
+            samples: AtomicU64::new(0),
+            run_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Record one execution of op `idx`. Allocation-free.
+    pub fn record_op(&self, idx: usize, ns: u64) {
+        let s = &self.ops[idx];
+        s.calls.fetch_add(1, Relaxed);
+        s.total_ns.fetch_add(ns, Relaxed);
+        s.min_ns.fetch_min(ns, Relaxed);
+        s.max_ns.fetch_max(ns, Relaxed);
+    }
+
+    /// Record one whole `run_into` call over `batch` samples.
+    pub fn record_run(&self, batch: u64, ns: u64) {
+        self.runs.fetch_add(1, Relaxed);
+        self.samples.fetch_add(batch, Relaxed);
+        self.run_ns.fetch_add(ns, Relaxed);
+    }
+
+    /// Completed `run_into` calls recorded.
+    pub fn runs(&self) -> u64 {
+        self.runs.load(Relaxed)
+    }
+
+    /// Total samples across all recorded runs.
+    pub fn samples(&self) -> u64 {
+        self.samples.load(Relaxed)
+    }
+
+    /// Total wall nanoseconds across all recorded runs (op time + the
+    /// interpreter's own copy/swap overhead).
+    pub fn run_ns(&self) -> u64 {
+        self.run_ns.load(Relaxed)
+    }
+
+    /// Sum of per-op recorded nanoseconds — the attributed share of
+    /// [`ExecProfile::run_ns`].
+    pub fn attributed_ns(&self) -> u64 {
+        self.ops.iter().map(|s| s.total_ns.load(Relaxed)).sum()
+    }
+
+    /// Zero every counter (between warm-up and the measured window).
+    pub fn reset(&self) {
+        for s in &self.ops {
+            s.calls.store(0, Relaxed);
+            s.total_ns.store(0, Relaxed);
+            s.min_ns.store(u64::MAX, Relaxed);
+            s.max_ns.store(0, Relaxed);
+        }
+        self.runs.store(0, Relaxed);
+        self.samples.store(0, Relaxed);
+        self.run_ns.store(0, Relaxed);
+    }
+
+    /// Snapshot every op with derived GFLOP/s and GB/s.
+    pub fn rows(&self) -> Vec<OpProfileRow> {
+        let runs = self.runs();
+        let samples = self.samples();
+        self.meta
+            .iter()
+            .zip(&self.ops)
+            .enumerate()
+            .map(|(index, (m, s))| {
+                let calls = s.calls.load(Relaxed);
+                let total_ns = s.total_ns.load(Relaxed);
+                let min_ns = s.min_ns.load(Relaxed);
+                let secs = total_ns as f64 / 1e9;
+                let (gflops, gbytes_per_s) = if secs > 0.0 {
+                    let flops = 2.0 * m.macs_per_sample as f64 * samples as f64;
+                    let bytes = m.act_bytes_per_sample as f64 * samples as f64
+                        + m.weight_bytes as f64 * runs as f64;
+                    (flops / secs / 1e9, bytes / secs / 1e9)
+                } else {
+                    (0.0, 0.0)
+                };
+                OpProfileRow {
+                    index,
+                    name: m.name,
+                    calls,
+                    total_ns,
+                    min_ns: if calls == 0 { 0 } else { min_ns },
+                    max_ns: s.max_ns.load(Relaxed),
+                    macs_per_sample: m.macs_per_sample,
+                    gflops,
+                    gbytes_per_s,
+                }
+            })
+            .collect()
+    }
+
+    /// The profile as JSON — the shared schema behind `GET /debug/profile`
+    /// and `results/PROF_8.json`.
+    pub fn to_json(&self) -> Json {
+        let rows = self.rows();
+        Json::obj(vec![
+            ("runs", Json::num(self.runs() as f64)),
+            ("samples", Json::num(self.samples() as f64)),
+            ("run_ns", Json::num(self.run_ns() as f64)),
+            ("attributed_ns", Json::num(self.attributed_ns() as f64)),
+            (
+                "ops",
+                Json::Arr(
+                    rows.iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("i", Json::num(r.index as f64)),
+                                ("op", Json::str(r.name)),
+                                ("calls", Json::num(r.calls as f64)),
+                                ("total_ns", Json::num(r.total_ns as f64)),
+                                ("mean_ns", Json::num(r.mean_ns())),
+                                ("min_ns", Json::num(r.min_ns as f64)),
+                                ("max_ns", Json::num(r.max_ns as f64)),
+                                ("macs_per_sample", Json::num(r.macs_per_sample as f64)),
+                                ("gflops", Json::num(r.gflops)),
+                                ("gb_per_s", Json::num(r.gbytes_per_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(n: usize) -> Vec<OpMeta> {
+        (0..n)
+            .map(|i| OpMeta {
+                name: "op",
+                macs_per_sample: (i as u64 + 1) * 100,
+                act_bytes_per_sample: 64,
+                weight_bytes: 1024,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn records_count_total_min_max() {
+        let p = ExecProfile::new(meta(2));
+        p.record_op(0, 50);
+        p.record_op(0, 10);
+        p.record_op(0, 30);
+        p.record_run(4, 100);
+        let rows = p.rows();
+        assert_eq!(rows[0].calls, 3);
+        assert_eq!(rows[0].total_ns, 90);
+        assert_eq!(rows[0].min_ns, 10);
+        assert_eq!(rows[0].max_ns, 50);
+        assert_eq!(rows[0].mean_ns(), 30.0);
+        // untouched op reports zeros, not u64::MAX sentinels
+        assert_eq!(rows[1].calls, 0);
+        assert_eq!(rows[1].min_ns, 0);
+        assert_eq!(p.attributed_ns(), 90);
+        assert_eq!(p.samples(), 4);
+        assert_eq!(p.run_ns(), 100);
+    }
+
+    #[test]
+    fn derived_rates_use_plan_accounting() {
+        let p = ExecProfile::new(meta(1));
+        // 2 runs of batch 8, op takes 1 ms total.
+        p.record_op(0, 500_000);
+        p.record_op(0, 500_000);
+        p.record_run(8, 600_000);
+        p.record_run(8, 600_000);
+        let r = &p.rows()[0];
+        // 100 MACs/sample × 16 samples × 2 flops / 1e-3 s = 3.2e6 flop/s
+        assert!((r.gflops - 3.2e6 / 1e9).abs() < 1e-12, "{}", r.gflops);
+        // (64 B × 16 + 1024 B × 2 runs) / 1e-3 s
+        let want_bps = (64.0 * 16.0 + 1024.0 * 2.0) / 1e-3 / 1e9;
+        assert!((r.gbytes_per_s - want_bps).abs() < 1e-12, "{}", r.gbytes_per_s);
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let p = ExecProfile::new(meta(1));
+        p.record_op(0, 10);
+        p.record_run(1, 20);
+        p.reset();
+        assert_eq!(p.runs(), 0);
+        assert_eq!(p.attributed_ns(), 0);
+        let r = &p.rows()[0];
+        assert_eq!((r.calls, r.total_ns, r.min_ns, r.max_ns), (0, 0, 0, 0));
+        // and it keeps recording correctly after reset
+        p.record_op(0, 7);
+        assert_eq!(p.rows()[0].min_ns, 7);
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let p = ExecProfile::new(meta(2));
+        p.record_op(0, 10);
+        p.record_run(1, 12);
+        let j = p.to_json();
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("round-trip");
+        assert_eq!(back.get("runs").and_then(|v| v.as_f64()), Some(1.0));
+        let ops = back.get("ops").and_then(|v| v.as_arr()).expect("ops array");
+        assert_eq!(ops.len(), 2);
+        for key in ["i", "op", "calls", "total_ns", "mean_ns", "min_ns", "max_ns", "macs_per_sample", "gflops", "gb_per_s"] {
+            assert!(ops[0].get(key).is_some(), "missing {key}");
+        }
+    }
+}

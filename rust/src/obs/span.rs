@@ -1,0 +1,454 @@
+//! Lock-free per-thread span ring buffers.
+//!
+//! Each recording thread owns one fixed-capacity ring claimed on first use;
+//! rings are pre-allocated (lazily, once, for all threads) and overwrite
+//! their oldest entry on wrap. Recording is a thread-local index load plus a
+//! seqlock-guarded run of relaxed atomic stores — no locks, no allocation
+//! (pinned by `bin/leak_test.rs`), no unsafe. Readers ([`snapshot`], the
+//! `GET /debug/profile` endpoint) copy cells out under the seqlock and
+//! retry if a writer raced them; writers never wait for readers.
+//!
+//! Span labels are `&'static str` packed inline into the cell (up to
+//! [`LABEL_BYTES`] bytes, truncated beyond) so a torn read can garble at
+//! worst the label *text*, never memory safety. Timestamps are nanoseconds
+//! since [`super::logger::epoch`] — the same clock log lines print — so
+//! spans and logs correlate without translation.
+//!
+//! ```
+//! mpdc::obs::span::init(256);
+//! {
+//!     let _guard = mpdc::obs::span("demo_work");
+//!     // … traced work …
+//! }
+//! let snap = mpdc::obs::span::snapshot();
+//! assert!(snap.threads.iter().any(|t| t.spans.iter().any(|s| s.label == "demo_work")));
+//! ```
+
+use std::cell::Cell as TlsCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Maximum label bytes stored per span (longer labels are truncated).
+pub const LABEL_BYTES: usize = 24;
+/// Maximum number of recording threads with their own ring; later threads
+/// drop spans (counted in [`Snapshot::dropped`]).
+pub const MAX_THREADS: usize = 64;
+/// Ring capacity when neither [`init`] nor `[obs] ring_capacity` ran first.
+pub const DEFAULT_CAPACITY: usize = 1024;
+
+const LABEL_WORDS: usize = LABEL_BYTES / 8;
+
+/// One recorded span, as copied out by [`snapshot`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub label: String,
+    /// Start, nanoseconds since the process epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// A span cell: label bytes packed into whole words plus start/duration.
+/// Every field is an atomic so concurrent snapshot reads are race-free by
+/// construction; the per-ring seqlock makes whole cells consistent.
+struct SpanCell {
+    label: [AtomicU64; LABEL_WORDS],
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+}
+
+impl SpanCell {
+    fn empty() -> SpanCell {
+        SpanCell {
+            label: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+            start_ns: AtomicU64::new(0),
+            dur_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+fn pack_label(label: &str) -> [u64; LABEL_WORDS] {
+    let mut words = [0u64; LABEL_WORDS];
+    let bytes = label.as_bytes();
+    for (i, &b) in bytes.iter().take(LABEL_BYTES).enumerate() {
+        words[i / 8] |= (b as u64) << ((i % 8) * 8);
+    }
+    words
+}
+
+fn unpack_label(words: &[u64; LABEL_WORDS]) -> String {
+    let mut bytes = Vec::with_capacity(LABEL_BYTES);
+    for w in words {
+        for shift in 0..8 {
+            let b = ((w >> (shift * 8)) & 0xFF) as u8;
+            if b == 0 {
+                return String::from_utf8_lossy(&bytes).into_owned();
+            }
+            bytes.push(b);
+        }
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// A single-producer ring. The owning thread writes; any thread may read a
+/// consistent copy via the seqlock (`seq` odd = write in progress).
+pub(crate) struct Ring {
+    seq: AtomicU64,
+    /// Total spans ever pushed (monotonic; `% capacity` is the write slot).
+    head: AtomicU64,
+    cells: Box<[SpanCell]>,
+}
+
+impl Ring {
+    pub(crate) fn new(capacity: usize) -> Ring {
+        assert!(capacity > 0, "span ring capacity must be > 0");
+        Ring {
+            seq: AtomicU64::new(0),
+            head: AtomicU64::new(0),
+            cells: (0..capacity).map(|_| SpanCell::empty()).collect(),
+        }
+    }
+
+    /// Writer side — must only be called from the ring's owning thread.
+    pub(crate) fn push(&self, label: &str, start_ns: u64, dur_ns: u64) {
+        let seq = self.seq.load(Relaxed);
+        self.seq.store(seq.wrapping_add(1), Relaxed); // odd: write in progress
+        let head = self.head.load(Relaxed);
+        let cell = &self.cells[(head % self.cells.len() as u64) as usize];
+        for (dst, word) in cell.label.iter().zip(pack_label(label)) {
+            dst.store(word, Relaxed);
+        }
+        cell.start_ns.store(start_ns, Relaxed);
+        cell.dur_ns.store(dur_ns, Relaxed);
+        self.head.store(head + 1, Relaxed);
+        self.seq.store(seq.wrapping_add(2), Relaxed); // even: stable
+    }
+
+    /// Reader side: the last `min(total, capacity)` spans, oldest first,
+    /// plus the total push count. Retries while a writer is mid-cell; after
+    /// a bounded number of races it returns the best-effort copy (labels
+    /// may be garbled under truly continuous overwrite, never unsafe).
+    pub(crate) fn snapshot(&self) -> (Vec<Span>, u64) {
+        for _attempt in 0..16 {
+            let s1 = self.seq.load(Relaxed);
+            if s1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let (spans, total) = self.copy_out();
+            if self.seq.load(Relaxed) == s1 {
+                return (spans, total);
+            }
+        }
+        self.copy_out()
+    }
+
+    fn copy_out(&self) -> (Vec<Span>, u64) {
+        let total = self.head.load(Relaxed);
+        let cap = self.cells.len() as u64;
+        let n = total.min(cap);
+        let mut spans = Vec::with_capacity(n as usize);
+        for k in 0..n {
+            let idx = ((total - n + k) % cap) as usize;
+            let cell = &self.cells[idx];
+            let mut words = [0u64; LABEL_WORDS];
+            for (w, src) in words.iter_mut().zip(&cell.label) {
+                *w = src.load(Relaxed);
+            }
+            spans.push(Span {
+                label: unpack_label(&words),
+                start_ns: cell.start_ns.load(Relaxed),
+                dur_ns: cell.dur_ns.load(Relaxed),
+            });
+        }
+        (spans, total)
+    }
+}
+
+/// The pre-allocated registry: one ring per recording thread, claimed in
+/// arrival order.
+pub(crate) struct Rings {
+    rings: Vec<Ring>,
+    next: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+impl Rings {
+    pub(crate) fn new(capacity: usize, nthreads: usize) -> Rings {
+        Rings {
+            rings: (0..nthreads).map(|_| Ring::new(capacity)).collect(),
+            next: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Claim a ring slot for a new thread; `None` once all are taken.
+    pub(crate) fn claim(&self) -> Option<usize> {
+        let idx = self.next.fetch_add(1, Relaxed);
+        if idx < self.rings.len() {
+            Some(idx)
+        } else {
+            None
+        }
+    }
+
+    pub(crate) fn ring(&self, idx: usize) -> &Ring {
+        &self.rings[idx]
+    }
+
+    pub(crate) fn drop_span(&self) {
+        self.dropped.fetch_add(1, Relaxed);
+    }
+}
+
+static RINGS: OnceLock<Rings> = OnceLock::new();
+/// Capacity requested by [`init`] before the registry was built.
+static CONFIG_CAPACITY: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// This thread's ring index; `usize::MAX - 1` = unclaimed, `usize::MAX`
+    /// = registry full, drop spans.
+    static MY_RING: TlsCell<usize> = const { TlsCell::new(usize::MAX - 1) };
+}
+
+const UNCLAIMED: usize = usize::MAX - 1;
+const NO_RING: usize = usize::MAX;
+
+/// Size the span rings (the `[obs] ring_capacity` knob). Effective only
+/// before the first span is recorded; afterwards the registry is already
+/// built and the call is a no-op. Also forces allocation now, so the first
+/// recording thread doesn't pay the one-time build.
+pub fn init(capacity: usize) {
+    CONFIG_CAPACITY.store(capacity, Relaxed);
+    let _ = rings();
+}
+
+fn rings() -> &'static Rings {
+    RINGS.get_or_init(|| {
+        let cap = CONFIG_CAPACITY.load(Relaxed);
+        Rings::new(if cap == 0 { DEFAULT_CAPACITY } else { cap }, MAX_THREADS)
+    })
+}
+
+/// The configured per-thread ring capacity.
+pub fn capacity() -> usize {
+    rings().rings[0].cells.len()
+}
+
+/// Record a completed span with an explicit start `Instant` (duration is
+/// measured here). Allocation-free after the registry exists.
+pub fn record(label: &'static str, start: Instant) {
+    let start_ns = start.saturating_duration_since(super::logger::epoch()).as_nanos() as u64;
+    let dur_ns = start.elapsed().as_nanos() as u64;
+    record_raw(label, start_ns, dur_ns);
+}
+
+/// Record a span from raw epoch-relative timestamps.
+pub fn record_raw(label: &'static str, start_ns: u64, dur_ns: u64) {
+    let regs = rings();
+    MY_RING.with(|slot| {
+        let mut idx = slot.get();
+        if idx == UNCLAIMED {
+            idx = match regs.claim() {
+                Some(i) => i,
+                None => NO_RING,
+            };
+            slot.set(idx);
+        }
+        if idx == NO_RING {
+            regs.drop_span();
+        } else {
+            regs.ring(idx).push(label, start_ns, dur_ns);
+        }
+    });
+}
+
+/// RAII span: records on drop. `let _s = obs::span("label");`
+pub struct SpanGuard {
+    label: &'static str,
+    t0: Instant,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        record(self.label, self.t0);
+    }
+}
+
+/// Open a span closing (and recording) when the guard drops.
+pub fn span(label: &'static str) -> SpanGuard {
+    SpanGuard { label, t0: Instant::now() }
+}
+
+/// Per-thread snapshot contents.
+#[derive(Debug)]
+pub struct ThreadSpans {
+    /// Ring slot index (claim order, not OS thread id).
+    pub thread: usize,
+    /// Total spans this thread ever recorded (≥ `spans.len()`).
+    pub total: u64,
+    /// The retained window, oldest first.
+    pub spans: Vec<Span>,
+}
+
+/// A point-in-time copy of every active ring.
+#[derive(Debug)]
+pub struct Snapshot {
+    pub threads: Vec<ThreadSpans>,
+    /// Spans dropped because more than [`MAX_THREADS`] threads recorded.
+    pub dropped: u64,
+    pub capacity: usize,
+}
+
+/// Copy out every claimed ring (threads that never recorded are skipped).
+pub fn snapshot() -> Snapshot {
+    let regs = rings();
+    let claimed = regs.next.load(Relaxed).min(regs.rings.len());
+    let mut threads = Vec::with_capacity(claimed);
+    for idx in 0..claimed {
+        let (spans, total) = regs.ring(idx).snapshot();
+        if total > 0 {
+            threads.push(ThreadSpans { thread: idx, total, spans });
+        }
+    }
+    Snapshot { threads, dropped: regs.dropped.load(Relaxed), capacity: capacity() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{for_all, gen_range};
+
+    #[test]
+    fn label_pack_roundtrip_and_truncation() {
+        assert_eq!(unpack_label(&pack_label("gather")), "gather");
+        assert_eq!(unpack_label(&pack_label("")), "");
+        let long = "a_very_long_span_label_that_exceeds_the_cell";
+        assert_eq!(unpack_label(&pack_label(long)), &long[..LABEL_BYTES]);
+        // exactly LABEL_BYTES fills every word with no terminator
+        let exact = "x".repeat(LABEL_BYTES);
+        assert_eq!(unpack_label(&pack_label(&exact)), exact);
+    }
+
+    #[test]
+    fn ring_records_in_order_below_capacity() {
+        let ring = Ring::new(8);
+        for i in 0..5u64 {
+            ring.push("op", i * 10, i);
+        }
+        let (spans, total) = ring.snapshot();
+        assert_eq!(total, 5);
+        assert_eq!(spans.len(), 5);
+        for (i, s) in spans.iter().enumerate() {
+            assert_eq!(s.label, "op");
+            assert_eq!(s.start_ns, i as u64 * 10);
+            assert_eq!(s.dur_ns, i as u64);
+        }
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_newest_oldest_first() {
+        // Property: after N pushes into a capacity-C ring, the snapshot is
+        // exactly the last min(N, C) pushes, oldest first.
+        for_all("span ring wraparound", |rng, _| {
+            let cap = gen_range(rng, 1, 32);
+            let n = gen_range(rng, 0, 100) as u64;
+            let ring = Ring::new(cap);
+            for i in 0..n {
+                ring.push("w", i, i + 1);
+            }
+            let (spans, total) = ring.snapshot();
+            assert_eq!(total, n);
+            let kept = n.min(cap as u64);
+            assert_eq!(spans.len() as u64, kept);
+            for (k, s) in spans.iter().enumerate() {
+                let expect = n - kept + k as u64;
+                assert_eq!(s.start_ns, expect, "cap={cap} n={n} k={k}");
+                assert_eq!(s.dur_ns, expect + 1);
+            }
+        });
+    }
+
+    #[test]
+    fn concurrent_writers_stay_isolated_and_consistent() {
+        // Property: concurrent single-producer writers on distinct rings
+        // never corrupt each other; a racing reader always sees per-cell
+        // label/start/dur triples that belong together.
+        for_all("span rings concurrent writers", |rng, _| {
+            let cap = gen_range(rng, 4, 64);
+            let nthreads = gen_range(rng, 2, 6);
+            let pushes = gen_range(rng, 50, 400) as u64;
+            let regs = Rings::new(cap, nthreads);
+            std::thread::scope(|scope| {
+                for t in 0..nthreads {
+                    let regs = &regs;
+                    scope.spawn(move || {
+                        let ring = regs.ring(t);
+                        for i in 0..pushes {
+                            // Encode the writer id in every field so a torn
+                            // cross-thread read would be detectable.
+                            ring.push(WRITER_LABELS[t], t as u64 * 1_000_000 + i, t as u64 + 1);
+                        }
+                    });
+                }
+                // A racing reader: everything it sees must be internally
+                // consistent (writer id agrees across label/start/dur).
+                let regs = &regs;
+                scope.spawn(move || {
+                    for _ in 0..50 {
+                        for t in 0..nthreads {
+                            let (spans, _) = regs.ring(t).snapshot();
+                            for s in &spans {
+                                assert_eq!(s.label, WRITER_LABELS[t]);
+                                assert_eq!(s.start_ns / 1_000_000, t as u64);
+                                assert_eq!(s.dur_ns, t as u64 + 1);
+                            }
+                        }
+                    }
+                });
+            });
+            // Quiesced: every ring holds exactly its own final window.
+            for t in 0..nthreads {
+                let (spans, total) = regs.ring(t).snapshot();
+                assert_eq!(total, pushes);
+                assert_eq!(spans.len() as u64, pushes.min(cap as u64));
+                for (k, s) in spans.iter().enumerate() {
+                    let expect = pushes - pushes.min(cap as u64) + k as u64;
+                    assert_eq!(s.label, WRITER_LABELS[t]);
+                    assert_eq!(s.start_ns, t as u64 * 1_000_000 + expect);
+                }
+            }
+        });
+    }
+
+    const WRITER_LABELS: [&str; 6] = ["w0", "w1", "w2", "w3", "w4", "w5"];
+
+    #[test]
+    fn global_record_and_snapshot_roundtrip() {
+        init(64);
+        let t0 = Instant::now();
+        record("global_test_span", t0);
+        let snap = snapshot();
+        assert_eq!(snap.capacity, capacity());
+        assert!(snap
+            .threads
+            .iter()
+            .any(|t| t.spans.iter().any(|s| s.label == "global_test_span")));
+    }
+
+    #[test]
+    fn guard_records_on_drop() {
+        init(64);
+        {
+            let _g = span("guard_span");
+            std::hint::black_box(42);
+        }
+        let snap = snapshot();
+        let found = snap
+            .threads
+            .iter()
+            .flat_map(|t| &t.spans)
+            .any(|s| s.label == "guard_span");
+        assert!(found);
+    }
+}

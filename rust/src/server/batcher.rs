@@ -59,6 +59,12 @@ pub trait InferBackend: 'static {
     /// logits into `out` (pre-sized by the worker; every element must be
     /// written). Steady-state implementations should not allocate.
     fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> anyhow::Result<()>;
+    /// Live per-op profile, if this backend's executor was built with
+    /// [`crate::exec::Executor::with_profiling`]. Snapshotted by
+    /// `GET /debug/profile`; `None` (the default) means unprofiled.
+    fn profile(&self) -> Option<Arc<crate::obs::ExecProfile>> {
+        None
+    }
 }
 
 /// Where a finished request's result goes: a blocking caller's reply channel
@@ -159,6 +165,9 @@ pub(crate) fn wait_budget(deadline: Duration, exec_est: Duration, max_wait: Dura
 pub struct BatcherHandle {
     tx: SyncSender<Request>,
     pub metrics: Arc<ServerMetrics>,
+    /// The backend's live per-op profile (see [`InferBackend::profile`]),
+    /// shared with the worker thread that fills it.
+    pub profile: Option<Arc<crate::obs::ExecProfile>>,
     feature_dim: usize,
     out_dim: usize,
 }
@@ -266,13 +275,15 @@ where
     let (tx, rx): (SyncSender<Request>, Receiver<Request>) = std::sync::mpsc::sync_channel(cfg.queue_depth);
     let metrics = Arc::new(ServerMetrics::new());
     let metrics_worker = metrics.clone();
-    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<(usize, usize, usize), String>>();
+    type Ready = (usize, usize, usize, Option<Arc<crate::obs::ExecProfile>>);
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<Ready, String>>();
     let join = std::thread::Builder::new()
         .name("mpdc-batcher".into())
         .spawn(move || {
             let mut backend = match factory() {
                 Ok(b) => {
-                    let _ = ready_tx.send(Ok((b.feature_dim(), b.out_dim(), b.max_batch())));
+                    let _ = ready_tx
+                        .send(Ok((b.feature_dim(), b.out_dim(), b.max_batch(), b.profile())));
                     b
                 }
                 Err(e) => {
@@ -330,7 +341,15 @@ where
                 let exec_start = Instant::now();
                 let result = backend.infer_into(&x, n, &mut y[..n * out_dim]);
                 let exec = exec_start.elapsed();
+                crate::obs::span::record("batcher_exec", exec_start);
                 exec_est = if exec_est.is_zero() { exec } else { (exec_est * 3 + exec) / 4 };
+                // Gauges for /metrics: the live EWMA execution estimate and
+                // the wait budget the *next* batch will be given.
+                metrics.exec_est_ns.store(exec_est.as_nanos() as u64, Ordering::Relaxed);
+                metrics.wait_budget_ns.store(
+                    wait_budget(cfg.deadline, exec_est, cfg.max_wait).as_nanos() as u64,
+                    Ordering::Relaxed,
+                );
                 match result {
                     Ok(()) => {
                         for (i, r) in batch.drain(..).enumerate() {
@@ -349,11 +368,11 @@ where
             }
         })
         .expect("spawn batcher");
-    let (feature_dim, out_dim, _max_batch) = ready_rx
+    let (feature_dim, out_dim, _max_batch, profile) = ready_rx
         .recv()
         .map_err(|_| anyhow::anyhow!("batcher worker died during startup"))?
         .map_err(|e| anyhow::anyhow!("backend factory failed: {e}"))?;
-    let handle = BatcherHandle { tx, metrics, feature_dim, out_dim };
+    let handle = BatcherHandle { tx, metrics, profile, feature_dim, out_dim };
     Ok((handle, join))
 }
 
@@ -412,6 +431,13 @@ impl PlanBackend {
     pub fn executor(&self) -> &crate::exec::Executor {
         &self.exec
     }
+
+    /// Build the wrapped executor with per-op profiling enabled (see
+    /// [`crate::exec::Executor::with_profiling`]).
+    pub fn profiled(mut self) -> Self {
+        self.exec = self.exec.with_profiling();
+        self
+    }
 }
 
 impl InferBackend for PlanBackend {
@@ -430,6 +456,10 @@ impl InferBackend for PlanBackend {
     fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
         self.exec.run_into(x, batch, out, &mut self.scratch);
         Ok(())
+    }
+
+    fn profile(&self) -> Option<Arc<crate::obs::ExecProfile>> {
+        self.exec.profile().cloned()
     }
 }
 

@@ -22,6 +22,7 @@
 //! | `POST /infer/{variant}`| body `{"input": [f32…]}` → `{"variant", "output"}`     |
 //! | `POST /infer`          | weighted A/B split (requires [`Router::set_split`])    |
 //! | `GET /metrics`         | Prometheus text format over all variants               |
+//! | `GET /debug/profile`   | JSON snapshot: per-op profiles + span rings            |
 //! | `GET /healthz`         | liveness probe                                         |
 //! | `GET /variants`        | variant names + feature/output dims (client discovery) |
 //!
@@ -59,7 +60,7 @@ use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Transport mode for [`HttpServer::start`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -181,6 +182,17 @@ pub struct FrontendStats {
     pub write_timeouts: AtomicU64,
     /// Idle keep-alive connections reaped by the idle deadline.
     pub idle_closed: AtomicU64,
+    /// Request-ID mint: every request gets the next value, so a request can
+    /// be followed through the debug log (`MPDC_LOG=http=debug`) from parse
+    /// to response.
+    pub next_req_id: AtomicU64,
+    /// Stage: first byte of a request head → request fully parsed.
+    pub stage_parse: metrics::Histogram,
+    /// Stage: dispatched into the batcher → completion received (queue wait
+    /// plus batch execution; the batcher's own histograms split those two).
+    pub stage_dispatch: metrics::Histogram,
+    /// Stage: response queued → last byte flushed to the socket.
+    pub stage_write: metrics::Histogram,
 }
 
 impl FrontendStats {
@@ -234,6 +246,15 @@ impl FrontendStats {
         let _ = writeln!(out, "# HELP mpdc_http_inflight Admitted inference requests in flight.");
         let _ = writeln!(out, "# TYPE mpdc_http_inflight gauge");
         let _ = writeln!(out, "mpdc_http_inflight {}", self.inflight.load(Ordering::Relaxed));
+        let _ = writeln!(out, "# HELP mpdc_http_stage_seconds Request lifecycle stage durations.");
+        let _ = writeln!(out, "# TYPE mpdc_http_stage_seconds histogram");
+        for (stage, h) in [
+            ("parse", &self.stage_parse),
+            ("dispatch", &self.stage_dispatch),
+            ("write", &self.stage_write),
+        ] {
+            h.write_prometheus(&mut out, "mpdc_http_stage_seconds", &format!("stage=\"{stage}\""));
+        }
         out
     }
 }
@@ -406,11 +427,24 @@ fn handle_connection(
             Err(ReadError::Io) => return,
         };
         stats.http_requests.fetch_add(1, Ordering::Relaxed);
+        let req_id = stats.next_req_id.fetch_add(1, Ordering::Relaxed) + 1;
+        crate::log_debug!("http", "req={req_id} {} {}", req.method, req.path);
         let keep = cfg.keep_alive && req.keep_alive;
+        let is_infer =
+            req.method == "POST" && (req.path == "/infer" || req.path.starts_with("/infer/"));
+        let t_route = Instant::now();
         let resp = route(router, stats, &req, cfg.retry_after_s);
+        // In blocking mode the inference round trip is synchronous, so the
+        // dispatch stage is simply the routing call for infer endpoints.
+        if is_infer {
+            stats.stage_dispatch.record(t_route.elapsed());
+        }
         // HEAD: full headers (including the would-be Content-Length), no body.
         let head_only = req.method == "HEAD";
-        if write_response_inner(&mut stream, &resp, keep, head_only).is_err() || !keep {
+        let t_write = Instant::now();
+        let write_ok = write_response_inner(&mut stream, &resp, keep, head_only).is_ok();
+        stats.stage_write.record(t_write.elapsed());
+        if !write_ok || !keep {
             return;
         }
     }
@@ -736,6 +770,7 @@ fn route_event(router: &Router, stats: &FrontendStats, method: &str, path: &str)
                 retry_after: None,
             })
         }
+        ("GET", "/debug/profile") => Routed::Immediate(debug_profile_response(router)),
         ("POST", "/infer") => Routed::Infer { variant: None },
         ("POST", p) => match p.strip_prefix("/infer/") {
             Some(v) if !v.is_empty() => Routed::Infer { variant: Some(v.to_string()) },
@@ -754,6 +789,56 @@ fn route(router: &Router, stats: &FrontendStats, req: &Request, retry_after_s: u
         Routed::Immediate(r) => r,
         Routed::Infer { variant } => infer_response(router, variant.as_deref(), &req.body, retry_after_s),
     }
+}
+
+/// `GET /debug/profile`: JSON snapshot of every profiled variant's live
+/// per-op counters (see [`crate::obs::ExecProfile::to_json`]) plus the
+/// process-wide span rings. Variants served without profiling are absent
+/// from `variants`; an empty snapshot is still valid JSON.
+fn debug_profile_response(router: &Router) -> Response {
+    let variants: Vec<Json> = router
+        .profiles()
+        .into_iter()
+        .map(|(name, p)| {
+            Json::obj(vec![("name", Json::str(name)), ("profile", p.to_json())])
+        })
+        .collect();
+    let snap = crate::obs::span::snapshot();
+    let threads: Vec<Json> = snap
+        .threads
+        .iter()
+        .map(|t| {
+            let spans: Vec<Json> = t
+                .spans
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("label", Json::str(s.label.clone())),
+                        ("start_ns", Json::num(s.start_ns as f64)),
+                        ("dur_ns", Json::num(s.dur_ns as f64)),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![
+                ("thread", Json::num(t.thread as f64)),
+                ("total", Json::num(t.total as f64)),
+                ("spans", Json::Arr(spans)),
+            ])
+        })
+        .collect();
+    let spans = Json::obj(vec![
+        ("capacity", Json::num(snap.capacity as f64)),
+        ("dropped", Json::num(snap.dropped as f64)),
+        ("threads", Json::Arr(threads)),
+    ]);
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("uptime_ns", Json::num(crate::obs::logger::monotonic_ns() as f64)),
+            ("variants", Json::Arr(variants)),
+            ("spans", spans),
+        ]),
+    )
 }
 
 fn variants_response(router: &Router) -> Response {
@@ -982,6 +1067,14 @@ mod event {
         /// Interest mask currently registered with the poller.
         interest: u32,
         read_eof: bool,
+        /// Lifecycle telemetry for the request currently on this connection:
+        /// ID from [`FrontendStats::next_req_id`], minted when its first
+        /// byte arrives.
+        req_id: u64,
+        /// First byte of the current request head (parse-stage anchor).
+        req_t0: Option<Instant>,
+        /// Response queued (write-stage anchor).
+        write_t0: Option<Instant>,
     }
 
     impl Conn {
@@ -999,6 +1092,9 @@ mod event {
                 deadline: Instant::now() + cfg.idle_timeout,
                 interest: EV_READ,
                 read_eof: false,
+                req_id: 0,
+                req_t0: None,
+                write_t0: None,
             }
         }
     }
@@ -1073,6 +1169,12 @@ mod event {
         variant: String,
         keep: bool,
         head_only: bool,
+        /// Request ID (debug-log correlation) and dispatch time (the
+        /// dispatch-stage histogram anchor). Kept here, not on the
+        /// connection, so the stage is recorded even if the client
+        /// disconnects before the completion lands.
+        req_id: u64,
+        dispatched: Instant,
     }
 
     enum Action {
@@ -1269,6 +1371,15 @@ mod event {
             for (token, result) in buf.drain(..) {
                 let Some(info) = self.pending.remove(&token) else { continue };
                 release_admission(&self.ctx, info.ip);
+                self.ctx.stats.stage_dispatch.record(info.dispatched.elapsed());
+                crate::log_debug!(
+                    "http",
+                    "req={} variant={} completed {} in {} µs",
+                    info.req_id,
+                    info.variant,
+                    if result.is_ok() { "ok" } else { "err" },
+                    info.dispatched.elapsed().as_micros()
+                );
                 let Some(idx) = self.conns.resolve(token) else { continue };
                 if self.conns.get(idx).map(|c| c.state) != Some(ConnState::Dispatched) {
                     continue;
@@ -1403,6 +1514,7 @@ mod event {
     fn respond(conn: &mut Conn, ctx: &Ctx, resp: &Response, keep: bool, head_only: bool) {
         encode_response_into(&mut conn.wbuf, resp, keep, head_only);
         conn.after_write = if keep { AfterWrite::KeepAlive } else { AfterWrite::Close };
+        conn.write_t0 = Some(Instant::now());
         if conn.state != ConnState::Draining {
             set_state(conn, ctx, ConnState::Writing);
         }
@@ -1512,6 +1624,9 @@ mod event {
             }
             conn.wbuf.clear();
             conn.wpos = 0;
+            if let Some(t0) = conn.write_t0.take() {
+                ctx.stats.stage_write.record(t0.elapsed());
+            }
             match conn.after_write {
                 AfterWrite::None => return Action::None,
                 AfterWrite::Close => {
@@ -1549,6 +1664,8 @@ mod event {
             match conn.state {
                 ConnState::Idle => {
                     if !conn.rbuf.is_empty() {
+                        conn.req_id = ctx.stats.next_req_id.fetch_add(1, Ordering::Relaxed) + 1;
+                        conn.req_t0 = Some(Instant::now());
                         set_state(conn, ctx, ConnState::ReadingHead);
                         continue;
                     }
@@ -1653,6 +1770,17 @@ mod event {
     ) -> Action {
         let head = conn.cur_head.take().expect("process_request requires a parsed head");
         ctx.stats.http_requests.fetch_add(1, Ordering::Relaxed);
+        if let Some(t0) = conn.req_t0.take() {
+            ctx.stats.stage_parse.record(t0.elapsed());
+        }
+        crate::log_debug!(
+            "http",
+            "req={} {} {} from {}",
+            conn.req_id,
+            head.method,
+            head.path,
+            conn.peer_ip
+        );
         let total = head.head_len + head.content_length;
         let body = conn.rbuf[head.head_len..total].to_vec();
         conn.rbuf.drain(..total);
@@ -1696,7 +1824,17 @@ mod event {
                 match ctx.router.infer_async(&name, x, &ctx.completions, token) {
                     Ok(()) => {
                         acquire_admission(ctx, conn.peer_ip);
-                        pending.insert(token, PendingInfo { ip: conn.peer_ip, variant: name, keep, head_only });
+                        pending.insert(
+                            token,
+                            PendingInfo {
+                                ip: conn.peer_ip,
+                                variant: name,
+                                keep,
+                                head_only,
+                                req_id: conn.req_id,
+                                dispatched: Instant::now(),
+                            },
+                        );
                         set_state(conn, ctx, ConnState::Dispatched);
                         Action::None
                     }

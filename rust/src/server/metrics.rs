@@ -99,7 +99,7 @@ impl Histogram {
     /// `_bucket` lines (`le` in seconds), then `_sum` and `_count`. The
     /// `+Inf` bucket and `_count` both use the summed bucket counts, so a
     /// scrape is internally consistent even while recording continues.
-    fn write_prometheus(&self, out: &mut String, name: &str, labels: &str) {
+    pub(crate) fn write_prometheus(&self, out: &mut String, name: &str, labels: &str) {
         use std::fmt::Write as _;
         let mut cum = 0u64;
         let groups = BUCKETS / PROM_STRIDE;
@@ -208,6 +208,13 @@ pub struct ServerMetrics {
     pub rejected: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Gauge: the worker's live EWMA of backend batch execution time (ns) —
+    /// the execution estimate the deadline-budget policy reserves headroom
+    /// for (see `server::batcher::wait_budget`).
+    pub exec_est_ns: AtomicU64,
+    /// Gauge: the wait budget (ns) the next batch will be given — deadline
+    /// minus the execution estimate, saturating at zero.
+    pub wait_budget_ns: AtomicU64,
 }
 
 impl ServerMetrics {
@@ -220,6 +227,8 @@ impl ServerMetrics {
             rejected: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
+            exec_est_ns: AtomicU64::new(0),
+            wait_budget_ns: AtomicU64::new(0),
         }
     }
 
@@ -300,6 +309,26 @@ pub fn render_prometheus(variants: &[(String, Arc<ServerMetrics>)]) -> String {
     for (variant, m) in variants {
         let labels = format!("variant=\"{}\"", escape_label(variant));
         m.batch_fill.write_prometheus(&mut out, "mpdc_batch_fill", &labels);
+    }
+    let gauges = [
+        ("mpdc_exec_est_seconds", "Worker's EWMA estimate of backend batch execution time."),
+        ("mpdc_wait_budget_seconds", "Wait budget the next batch will be given (deadline minus execution estimate)."),
+    ];
+    for (name, help) in gauges {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        for (variant, m) in variants {
+            let ns = match name {
+                "mpdc_exec_est_seconds" => m.exec_est_ns.load(Ordering::Relaxed),
+                _ => m.wait_budget_ns.load(Ordering::Relaxed),
+            };
+            let _ = writeln!(
+                out,
+                "{name}{{variant=\"{}\"}} {}",
+                escape_label(variant),
+                ns as f64 / 1e9
+            );
+        }
     }
     out
 }
@@ -434,6 +463,13 @@ mod tests {
         assert!(page.contains("# TYPE mpdc_latency_seconds histogram"));
         assert!(page.contains("# TYPE mpdc_batch_fill histogram"));
         assert!(page.contains("mpdc_batch_fill_count{variant=\"mpd\"} 0"));
+        // batcher gauges render in seconds
+        m.exec_est_ns.store(1_500_000, Ordering::Relaxed);
+        m.wait_budget_ns.store(500_000, Ordering::Relaxed);
+        let page2 = render_prometheus(&[("mpd".to_string(), m.clone())]);
+        assert!(page2.contains("# TYPE mpdc_exec_est_seconds gauge"), "{page2}");
+        assert!(page2.contains("mpdc_exec_est_seconds{variant=\"mpd\"} 0.0015"), "{page2}");
+        assert!(page2.contains("mpdc_wait_budget_seconds{variant=\"mpd\"} 0.0005"), "{page2}");
         // cumulative bucket counts are non-decreasing and +Inf == _count
         let mut last = 0u64;
         let mut inf = None;

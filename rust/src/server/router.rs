@@ -86,6 +86,19 @@ impl Router {
         v
     }
 
+    /// Per-variant live profile handles, sorted by name — the
+    /// `GET /debug/profile` payload is rendered from these. Variants whose
+    /// backend was built without profiling are skipped.
+    pub fn profiles(&self) -> Vec<(String, Arc<crate::obs::ExecProfile>)> {
+        let mut v: Vec<(String, Arc<crate::obs::ExecProfile>)> = self
+            .variants
+            .iter()
+            .filter_map(|(n, h)| h.profile.as_ref().map(|p| (n.clone(), p.clone())))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
     /// Route to an explicit variant.
     pub fn infer(&self, variant: &str, input: Vec<f32>) -> Result<Vec<f32>, ServeError> {
         match self.variants.get(variant) {

@@ -181,6 +181,17 @@ fn metrics_scrape_is_well_formed_prometheus() {
     assert!(page.contains("mpdc_requests_total{variant=\"mpd\"} 20"), "{page}");
     assert!(page.contains("# TYPE mpdc_latency_seconds histogram"));
     assert!(page.contains("# TYPE mpdc_http_active_connections gauge"));
+    // ISSUE 8: per-stage lifecycle histograms + batcher estimate gauges
+    assert!(page.contains("# TYPE mpdc_http_stage_seconds histogram"), "{page}");
+    for stage in ["parse", "dispatch", "write"] {
+        assert!(
+            page.contains(&format!("mpdc_http_stage_seconds_count{{stage=\"{stage}\"}}")),
+            "missing stage {stage}: {page}"
+        );
+    }
+    assert!(page.contains("# TYPE mpdc_exec_est_seconds gauge"), "{page}");
+    assert!(page.contains("mpdc_exec_est_seconds{variant=\"mpd\"}"), "{page}");
+    assert!(page.contains("mpdc_wait_budget_seconds{variant=\"mpd\"}"), "{page}");
 
     // histogram sanity: cumulative, monotone, +Inf == _count == 20
     let mut last = 0u64;
@@ -202,6 +213,54 @@ fn metrics_scrape_is_well_formed_prometheus() {
         let value = line.rsplit(' ').next().unwrap();
         assert!(value.parse::<f64>().is_ok(), "unparseable sample line: {line}");
     }
+    drop(client);
+    server.shutdown();
+}
+
+/// ISSUE 8: `GET /debug/profile` returns well-formed JSON snapshotting the
+/// live per-op profile of every profiled variant plus the span rings.
+#[test]
+fn debug_profile_endpoint_returns_well_formed_json() {
+    let (serve_model, _) = packed_pair();
+    let mut router = Router::new();
+    let (h, _worker) =
+        spawn(PlanBackend::new(serve_model.into_executor()).profiled(), BatcherConfig::default());
+    router.register("mpd", h);
+    let server = HttpServer::start(Arc::new(router), ephemeral(4)).unwrap();
+    let mut client = HttpClient::new(server.addr());
+    let mut rng = Xoshiro256pp::seed_from_u64(23);
+    for _ in 0..8 {
+        let x: Vec<Json> = (0..24).map(|_| Json::num(rng.next_f32() as f64)).collect();
+        let (status, _) =
+            client.post_json("/infer/mpd", &Json::obj(vec![("input", Json::Arr(x))])).unwrap();
+        assert_eq!(status, 200);
+    }
+    let (status, body) = client.get("/debug/profile").unwrap();
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).expect("well-formed JSON");
+    assert!(doc.get("uptime_ns").and_then(|v| v.as_f64()).is_some(), "{body}");
+    let variants = doc.get("variants").and_then(|v| v.as_arr()).expect("variants array");
+    assert_eq!(variants.len(), 1, "{body}");
+    assert_eq!(variants[0].get("name").and_then(|v| v.as_str()), Some("mpd"));
+    let profile = variants[0].get("profile").expect("profile object");
+    assert!(profile.get("runs").and_then(|v| v.as_f64()).unwrap_or(0.0) >= 1.0, "{body}");
+    assert!(profile.get("samples").and_then(|v| v.as_f64()).unwrap_or(0.0) >= 8.0, "{body}");
+    let ops = profile.get("ops").and_then(|v| v.as_arr()).expect("ops array");
+    assert!(!ops.is_empty());
+    for key in ["i", "op", "calls", "total_ns", "mean_ns", "min_ns", "max_ns", "gflops", "gb_per_s"]
+    {
+        assert!(ops[0].get(key).is_some(), "ops[0] missing {key}: {body}");
+    }
+    let spans = doc.get("spans").expect("spans object");
+    assert!(spans.get("capacity").and_then(|v| v.as_f64()).unwrap_or(0.0) >= 1.0, "{body}");
+    let threads = spans.get("threads").and_then(|v| v.as_arr()).expect("threads array");
+    // the batcher worker records a batcher_exec span per executed batch
+    let has_exec_span = threads.iter().any(|t| {
+        t.get("spans").and_then(|s| s.as_arr()).is_some_and(|s| {
+            s.iter().any(|sp| sp.get("label").and_then(|l| l.as_str()) == Some("batcher_exec"))
+        })
+    });
+    assert!(has_exec_span, "no batcher_exec span recorded: {body}");
     drop(client);
     server.shutdown();
 }
