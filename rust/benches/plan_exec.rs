@@ -114,7 +114,7 @@ fn main() {
                     .expect("quantize")
                     .into_executor(),
             ),
-            ("conv", PackedConvNet::build(&conv_comp, &conv_params).into_executor()),
+            ("conv", PackedConvNet::build(&conv_comp, &conv_params).expect("lower").into_executor()),
             (
                 "conv-int8",
                 QuantizedConvNet::quantize(

@@ -72,6 +72,13 @@ fn run_into_zero_alloc_check() -> anyhow::Result<()> {
     let (weights, biases) = comp.random_masked_weights(7);
     let conv_comp = ConvCompressor::new(ConvModelPlan::deep_mnist_lite(8), 7);
     let cparams = conv_comp.random_masked_params(7);
+    // The residual model exercises the arena's pinned skip slots (SkipSave /
+    // ResidualAdd) plus avg- and global-avg-pool; the alexnet-lite model the
+    // strided + grouped conv lowering. Both must hold the zero-alloc contract.
+    let res_comp = ConvCompressor::new(ConvModelPlan::tinyresnet(8, 16), 7);
+    let rparams = res_comp.random_masked_params(7);
+    let alex_comp = ConvCompressor::new(ConvModelPlan::alexnet_lite(8, 16), 7);
+    let aparams = alex_comp.random_masked_params(7);
     // The kernel choice is resolved once at executor construction (ISSUE 6);
     // both the forced-scalar and the detected-SIMD dispatch must stay
     // zero-alloc on the warmed path — no per-call feature probes or
@@ -122,7 +129,9 @@ fn run_into_zero_alloc_check() -> anyhow::Result<()> {
                 .into_executor()
                 .with_profiling(),
         ),
-        ("conv-f32", PackedConvNet::build(&conv_comp, &cparams).into_executor()),
+        ("conv-f32", PackedConvNet::build(&conv_comp, &cparams)?.into_executor()),
+        ("tinyresnet-f32", PackedConvNet::build(&res_comp, &rparams)?.into_executor()),
+        ("alexnet-lite-f32", PackedConvNet::build(&alex_comp, &aparams)?.into_executor()),
     ];
     let batch = 4;
     for (name, exec) in execs {

@@ -6,13 +6,20 @@
 //! [`PackedConvNet`] is the compiled inference engine: per conv stage,
 //!
 //! ```text
-//!   im2col → (patch-column gather = P_col)
-//!          → packed block-diagonal GEMM, fused bias+ReLU epilogue
-//!          → NCHW transpose restoring logical channel order (= P_row⁻¹)
-//!          → max-pool
+//!   [skip_save] → im2col → (patch-column gather = P_col)
+//!               → packed block-diagonal GEMM, fused bias(+ReLU) epilogue
+//!               → NCHW transpose restoring logical channel order (= P_row⁻¹)
+//!               → [residual_add (+ReLU)] → [max-pool | avg-pool | global-avg]
 //! ```
 //!
-//! and the FC head runs as the fused MLP op sequence of
+//! Strided and grouped convolutions need no new ops: stride is plain im2col
+//! geometry, and because patch columns are ordered `(ic·kh + ky)·kw + kx`,
+//! a grouped stage's filter matrix is *already* block-diagonal over groups —
+//! so a dense grouped stage packs as `groups` blocks (identity permutations)
+//! and a masked grouped stage composes `nblocks` MPD blocks per group
+//! ([`MpdMask::grouped`]), permutations confined within groups.
+//!
+//! The FC head runs as the fused MLP op sequence of
 //! [`crate::compress::packed_model::PackedMlp`] (gather fusion and all). Conv
 //! stages cannot fuse consecutive permutations the way FC stages do — pooling
 //! and the next im2col operate in channel/spatial space — so each stage
@@ -27,23 +34,25 @@
 //! float tolerance, exactly like `PackedMlp` vs the masked-dense MLP.
 //!
 //! **Lowering.** [`PackedConvNet`] compiles the whole network — conv stages
-//! *and* FC head — into one [`crate::exec::ExecPlan`]
-//! (`im2col → gather → block_gemm → rows_to_nchw → max_pool` per stage,
-//! then the head's fused MLP ops) executed by the single interpreter
-//! [`crate::exec::Executor`]. `PackedConvStage` (crate-internal) survives
-//! as the lowering intermediate shared with the int8 twin, so the two
-//! engines can never disagree about stage structure.
+//! *and* FC head — into one [`crate::exec::ExecPlan`] (the per-stage op
+//! sequence above, then the head's fused MLP ops) executed by the single
+//! interpreter [`crate::exec::Executor`]. Residual branches lower to
+//! `skip_save`/`residual_add` pairs over pinned arena slots; malformed
+//! geometry (pool windows that don't fit, unmatched residual adds) is
+//! rejected here as a [`PlanError`], never at run time. `PackedConvStage`
+//! (crate-internal) survives as the lowering intermediate shared with the
+//! int8 twin, so the two engines can never disagree about stage structure.
 
 use crate::compress::compressor::{CompressionReport, LayerReport, MpdCompressor};
 use crate::compress::plan::ConvModelPlan;
 use crate::config::EngineConfig;
-use crate::exec::{lower_mlp, Executor, PlanBuilder, Precision};
+use crate::exec::{lower_mlp, Executor, PlanBuilder, PlanError, Precision};
 use crate::linalg::blockdiag_mm::{BlockDiagMatrix, TileShape};
 use crate::linalg::im2col::ConvShape;
 use crate::linalg::pool::ThreadPool;
 use crate::mask::mask::MpdMask;
 use crate::nn::checkpoint::NamedTensor;
-use crate::nn::convnet::ConvNet;
+use crate::nn::convnet::{ConvNet, PoolKind};
 use std::sync::Arc;
 
 /// Trained parameters of a mixed conv+dense model, in training (masked-dense)
@@ -110,7 +119,10 @@ impl ConvCompressor {
             .zip(&self.plan.convs)
             .zip(&self.conv_masks)
             .map(|((&(out_c, cols), cp), mask)| {
-                let dense_params = out_c * cols;
+                // The honest dense baseline of a grouped stage only stores
+                // in_c/groups channels per filter — so a k-block-per-group
+                // mask reports k×, not groups·k×.
+                let dense_params = out_c * cols / cp.groups;
                 let dense_bytes = dense_params * 4;
                 match mask {
                     Some(m) => LayerReport {
@@ -138,6 +150,22 @@ impl ConvCompressor {
         CompressionReport { layers }
     }
 
+    /// The mask that actually governs packing of stage `i`: the plan's MPD
+    /// mask when present, else — for *dense grouped* stages — the identity
+    /// group-diagonal mask (one block per group, identity permutations), so
+    /// off-group weights (structurally zero in the grouped trainer) can
+    /// never leak into the packed engine. `None` = plain dense stage.
+    pub(crate) fn packing_mask(&self, i: usize) -> Option<MpdMask> {
+        if let Some(m) = &self.conv_masks[i] {
+            return Some(m.clone());
+        }
+        let cp = &self.plan.convs[i];
+        (cp.groups > 1).then(|| {
+            let (out_c, cols) = self.plan.filter_dims()[i];
+            MpdMask::grouped_non_permuted(out_c, cols, cp.groups, 1)
+        })
+    }
+
     /// Deterministic random masked parameters shaped for this plan — the
     /// shared fixture for tests and benches (stand-in for trained weights
     /// when only structure matters).
@@ -145,9 +173,9 @@ impl ConvCompressor {
         let mut rng = crate::mask::prng::Xoshiro256pp::seed_from_u64(seed);
         let mut conv_w = Vec::new();
         let mut conv_b = Vec::new();
-        for (&(out_c, cols), mask) in self.plan.filter_dims().iter().zip(&self.conv_masks) {
+        for (i, &(out_c, cols)) in self.plan.filter_dims().iter().enumerate() {
             let w: Vec<f32> = (0..out_c * cols).map(|_| rng.next_f32() - 0.5).collect();
-            conv_w.push(match mask {
+            conv_w.push(match self.packing_mask(i) {
                 Some(m) => m.apply(&w),
                 None => w,
             });
@@ -199,7 +227,7 @@ impl ConvCompressor {
                 return Err(format!("conv{i}.w: shape {:?} mismatch", w.shape));
             }
             let wv = w.as_f32().ok_or_else(|| format!("conv{i}.w: not f32"))?.to_vec();
-            conv_w.push(match &self.conv_masks[i] {
+            conv_w.push(match self.packing_mask(i) {
                 Some(m) => m.apply(&wv),
                 None => wv,
             });
@@ -237,7 +265,7 @@ impl ConvCompressor {
         cfg: &EngineConfig,
     ) -> Result<PackedConvNet, String> {
         cfg.validate()?;
-        PackedConvNet::build(self, params).with_engine_config(cfg)
+        PackedConvNet::build(self, params).map_err(|e| e.to_string())?.with_engine_config(cfg)
     }
 }
 
@@ -253,34 +281,87 @@ pub(crate) struct PackedConvStage {
     /// Bias in block-row space.
     pub(crate) bias: Vec<f32>,
     pub(crate) shape: ConvShape,
+    /// ReLU epilogue — fused into the GEMM for plain stages, applied by
+    /// `residual_add` for skip-merging stages (conv → add → ReLU order).
+    pub(crate) relu: bool,
+    /// Snapshot the stage input as the pending residual branch.
+    pub(crate) save_skip: bool,
+    /// Add the pending snapshot to the conv output (before any pool).
+    pub(crate) add_skip: bool,
+    pub(crate) pool_kind: PoolKind,
     pub(crate) pool_k: usize,
     pub(crate) pool_stride: usize,
 }
 
 /// Shared conv-stage lowering: emit each stage's op sequence onto `b`.
-/// `gemm(b, stage_idx, bd, bias)` pushes the stage's GEMM op — the f32
-/// engine pushes [`crate::exec::Op::BlockGemmF32`], the int8 twin quantizes
-/// the same block matrix first. ReLU is always fused (every conv stage is
-/// followed by an activation in this model family).
+/// `gemm(b, stage_idx, bd, bias, relu)` pushes the stage's GEMM op — the
+/// f32 engine pushes [`crate::exec::Op::BlockGemmF32`], the int8 twin
+/// quantizes the same block matrix first. `relu` is pre-resolved: it is
+/// `false` whenever the activation moves past the GEMM (skip-merging
+/// stages ReLU after the add instead).
+///
+/// All geometry/pairing violations surface here as [`PlanError`] — nothing
+/// in this walk panics on user-shaped input.
 pub(crate) fn lower_conv_stages(
     b: &mut PlanBuilder,
     stages: Vec<PackedConvStage>,
-    mut gemm: impl FnMut(&mut PlanBuilder, usize, BlockDiagMatrix, Vec<f32>),
-) {
+    mut gemm: impl FnMut(&mut PlanBuilder, usize, BlockDiagMatrix, Vec<f32>, bool),
+) -> Result<(), PlanError> {
+    let mut pending: Option<usize> = None;
     for (i, st) in stages.into_iter().enumerate() {
-        let PackedConvStage { bd, col_gather, chan_src, bias, shape, pool_k, pool_stride } = st;
+        let PackedConvStage {
+            bd,
+            col_gather,
+            chan_src,
+            bias,
+            shape,
+            relu,
+            save_skip,
+            add_skip,
+            pool_kind,
+            pool_k,
+            pool_stride,
+        } = st;
         let (oh, ow) = shape.out_hw();
         let out_c = bd.layout.rows;
-        b.im2col(shape);
+        if save_skip {
+            if pending.is_some() {
+                return Err(PlanError(format!(
+                    "stage {i}: save_skip while a residual branch is already pending"
+                )));
+            }
+            pending = Some(b.skip_save());
+        }
+        b.im2col(shape)?;
         if let Some(g) = col_gather {
             b.gather(g);
         }
-        gemm(b, i, bd, bias);
+        gemm(b, i, bd, bias, relu && !add_skip);
         b.rows_to_nchw(out_c, oh, ow, chan_src);
-        if pool_k > 0 {
-            b.max_pool(out_c, oh, ow, pool_k, pool_stride);
+        if add_skip {
+            let slot = pending.take().ok_or_else(|| {
+                PlanError(format!("stage {i}: add_skip with no pending residual branch"))
+            })?;
+            b.residual_add(slot, relu)?;
+        }
+        match pool_kind {
+            PoolKind::None => {}
+            PoolKind::Max => b.max_pool(out_c, oh, ow, pool_k, pool_stride)?,
+            PoolKind::Avg => b.avg_pool(out_c, oh, ow, pool_k, pool_stride)?,
+            PoolKind::GlobalAvg => {
+                if oh != ow {
+                    return Err(PlanError(format!(
+                        "stage {i}: global avg pool needs a square input, got {oh}×{ow}"
+                    )));
+                }
+                b.avg_pool(out_c, oh, ow, oh, 1)?;
+            }
         }
     }
+    if pending.is_some() {
+        return Err(PlanError("dangling save_skip: residual branch never merged".into()));
+    }
+    Ok(())
 }
 
 /// A compiled compressed conv model: one [`Executor`] over the whole
@@ -310,9 +391,9 @@ impl PackedConvNet {
             let cp = &comp.plan.convs[i];
             assert_eq!(params.conv_w[i].len(), cp.out_c * s.patch_dim(), "{}: filter size", cp.name);
             assert_eq!(params.conv_b[i].len(), cp.out_c, "{}: bias size", cp.name);
-            let (bd, col_gather, chan_src, bias) = match &comp.conv_masks[i] {
+            let (bd, col_gather, chan_src, bias) = match comp.packing_mask(i) {
                 Some(mask) => {
-                    let bd = BlockDiagMatrix::from_masked_weights(mask, &params.conv_w[i]);
+                    let bd = BlockDiagMatrix::from_masked_weights(&mask, &params.conv_w[i]);
                     let col_gather =
                         (!mask.p_col.is_identity()).then(|| mask.p_col.as_slice().to_vec());
                     let chan_src =
@@ -321,8 +402,8 @@ impl PackedConvNet {
                     (bd, col_gather, chan_src, bias)
                 }
                 None => {
-                    // Dense conv: one block covering the whole filter matrix,
-                    // logical order throughout.
+                    // Dense ungrouped conv: one block covering the whole
+                    // filter matrix, logical order throughout.
                     let layout = crate::mask::blockdiag::BlockDiagLayout::new(cp.out_c, s.patch_dim(), 1);
                     let bd = BlockDiagMatrix::from_packed(params.conv_w[i].clone(), layout);
                     (bd, None, None, params.conv_b[i].clone())
@@ -335,24 +416,30 @@ impl PackedConvNet {
                 chan_src,
                 bias,
                 shape: *s,
+                relu: cp.relu,
+                save_skip: cp.save_skip,
+                add_skip: cp.add_skip,
+                pool_kind: cp.pool_kind,
                 pool_k: cp.pool,
-                pool_stride: cp.pool,
+                pool_stride: cp.pool_stride,
             });
         }
         (stages, macs)
     }
 
     /// Build from a compressor and trained parameters (masked-dense layout).
-    pub fn build(comp: &ConvCompressor, params: &ConvNetParams) -> Self {
+    pub fn build(comp: &ConvCompressor, params: &ConvNetParams) -> Result<Self, PlanError> {
         let (stages, _) = Self::build_stages(comp, params);
         let nfc = comp.fc.nlayers();
         let head = lower_mlp(&comp.fc, &params.fc_w, &params.fc_b, None, &vec![Precision::F32; nfc])
             .expect("f32 head lowering");
         let in_dim = comp.plan.net_spec().in_dim();
         let mut b = PlanBuilder::new(in_dim);
-        lower_conv_stages(&mut b, stages, |b, _i, bd, bias| b.block_gemm_f32(bd, bias, true));
+        lower_conv_stages(&mut b, stages, |b, _i, bd, bias, relu| {
+            b.block_gemm_f32(bd, bias, relu)
+        })?;
         b.append_plan(head);
-        Self::from_executor(Executor::new(b.finish()))
+        Ok(Self::from_executor(Executor::new(b.finish())))
     }
 
     pub(crate) fn from_executor(exec: Executor) -> Self {
@@ -465,16 +552,17 @@ mod tests {
             }
         }
         let params = ConvNetParams::from_net(&net);
-        let packed = PackedConvNet::build(&comp, &params);
+        let packed = PackedConvNet::build(&comp, &params).expect("lower");
         let batch = 3;
         let x: Vec<f32> = (0..batch * 64).map(|_| rng.next_f32() - 0.5).collect();
         let want = net.forward(&x, batch);
         let got = packed.forward(&x, batch);
         assert_eq!(got, want, "dense conv lowering must be bit-exact");
         // pools and tiles must not change a single bit
-        let pooled = PackedConvNet::build(&comp, &params).with_threads(4);
+        let pooled = PackedConvNet::build(&comp, &params).expect("lower").with_threads(4);
         assert_eq!(pooled.forward(&x, batch), want);
         let tiled = PackedConvNet::build(&comp, &params)
+            .expect("lower")
             .with_engine_config(&EngineConfig {
                 pool_threads: 2,
                 tile_batch: 2,
@@ -493,7 +581,7 @@ mod tests {
         let comp = ConvCompressor::new(tiny_plan(true), 33);
         let mut net = comp.build_net(&mut rng);
         let params = ConvNetParams::from_net(&net);
-        let packed = PackedConvNet::build(&comp, &params);
+        let packed = PackedConvNet::build(&comp, &params).expect("lower");
         let batch = 2;
         let x: Vec<f32> = (0..batch * 64).map(|_| rng.next_f32() - 0.5).collect();
         let want = net.forward(&x, batch);
@@ -501,7 +589,7 @@ mod tests {
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
-        let pooled = PackedConvNet::build(&comp, &params).with_threads(8);
+        let pooled = PackedConvNet::build(&comp, &params).expect("lower").with_threads(8);
         assert_eq!(pooled.forward(&x, batch), got);
         // report: masked conv2 + fc1 compress, dense layers don't — and the
         // engine's actual byte footprint is below storing everything dense
@@ -529,13 +617,116 @@ mod tests {
         assert_eq!(params.conv_w, params2.conv_w);
         assert_eq!(params.fc_w, params2.fc_w);
         // packed engines built from both agree exactly
-        let a = PackedConvNet::build(&comp, &params);
-        let b = PackedConvNet::build(&comp, &params2);
+        let a = PackedConvNet::build(&comp, &params).expect("lower");
+        let b = PackedConvNet::build(&comp, &params2).expect("lower");
         let x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.7).sin()).collect();
         assert_eq!(a.forward(&x, 1), b.forward(&x, 1));
         // missing tensor rejected
         assert!(comp.params_from_tensors(&back[1..]).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Strided + grouped dense stages: the packed engine must stay
+    /// bit-exact with the grouped trainer, and grouped packing must keep
+    /// only the live (in-group) weights.
+    #[test]
+    fn grouped_strided_packed_matches_trainer_bit_exact() {
+        let plan = ConvModelPlan::new(
+            (2, 9, 9),
+            vec![
+                ConvLayerPlan::dense("c1", 4, 3, 0).with_geometry(2, 1).grouped(2),
+                ConvLayerPlan::dense("c2", 6, 3, 0).grouped(2),
+            ],
+            SparsityPlan::new(vec![LayerPlan::dense("fc", 3, 150)]).unwrap(),
+        )
+        .unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(41);
+        let comp = ConvCompressor::new(plan, 41);
+        let mut net = comp.build_net(&mut rng);
+        for c in net.convs.iter_mut() {
+            for b in c.b.iter_mut() {
+                *b = rng.next_f32() - 0.5;
+            }
+        }
+        let params = ConvNetParams::from_net(&net);
+        let packed = PackedConvNet::build(&comp, &params).expect("lower");
+        // c1: 4·(2·9)/2 = 36 live weights × 25 patches; c2: 6·(4·9)/2 = 108
+        // × 25; dense head 150·3. Full-dense c1+c2 would be twice the conv
+        // MACs — grouping must halve them.
+        assert_eq!(packed.macs_per_sample, 36 * 25 + 108 * 25 + 450);
+        let batch = 2;
+        let x: Vec<f32> = (0..batch * 162).map(|_| rng.next_f32() - 0.5).collect();
+        let want = net.forward(&x, batch);
+        assert_eq!(packed.forward(&x, batch), want, "grouped/strided lowering must be bit-exact");
+        let pooled = PackedConvNet::build(&comp, &params).expect("lower").with_threads(4);
+        assert_eq!(pooled.forward(&x, batch), want);
+    }
+
+    /// Residual save/add + avg-pool + global-avg head: bit-exact against
+    /// the trainer's forward (same add order, same pool accumulation).
+    #[test]
+    fn residual_avgpool_packed_matches_trainer_bit_exact() {
+        let plan = ConvModelPlan::new(
+            (1, 8, 8),
+            vec![
+                ConvLayerPlan::dense("c0", 4, 3, 0),
+                ConvLayerPlan::dense("c1", 4, 3, 0).saving_skip(),
+                ConvLayerPlan::dense("c2", 4, 3, 0).adding_skip().avg_pool(2, 2),
+                ConvLayerPlan::dense("c3", 4, 3, 0).global_avg_pool(),
+            ],
+            SparsityPlan::new(vec![LayerPlan::dense("fc", 3, 4)]).unwrap(),
+        )
+        .unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(43);
+        let comp = ConvCompressor::new(plan, 43);
+        let mut net = comp.build_net(&mut rng);
+        for c in net.convs.iter_mut() {
+            for b in c.b.iter_mut() {
+                *b = rng.next_f32() - 0.5;
+            }
+        }
+        let params = ConvNetParams::from_net(&net);
+        let packed = PackedConvNet::build(&comp, &params).expect("lower");
+        // the skip snapshot pins one arena slot sized to c1's input
+        assert_eq!(packed.executor().plan().skip_elems_per_sample, vec![4 * 8 * 8]);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * 64).map(|_| rng.next_f32() - 0.5).collect();
+        let want = net.forward(&x, batch);
+        assert_eq!(packed.forward(&x, batch), want, "residual lowering must be bit-exact");
+        let pooled = PackedConvNet::build(&comp, &params).expect("lower").with_threads(4);
+        assert_eq!(pooled.forward(&x, batch), want);
+    }
+
+    /// Malformed stage structure surfaces as `PlanError`, never a panic.
+    #[test]
+    fn lowering_rejects_malformed_stages() {
+        use crate::mask::blockdiag::BlockDiagLayout;
+        let shape = ConvShape { in_c: 1, h: 4, w: 4, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let mk = |save_skip: bool, add_skip: bool, pool_k: usize| PackedConvStage {
+            bd: BlockDiagMatrix::from_packed(vec![0.0; 18], BlockDiagLayout::new(2, 9, 1)),
+            col_gather: None,
+            chan_src: None,
+            bias: vec![0.0; 2],
+            shape,
+            relu: true,
+            save_skip,
+            add_skip,
+            pool_kind: if pool_k > 0 { PoolKind::Max } else { PoolKind::None },
+            pool_k,
+            pool_stride: 1,
+        };
+        let gemm = |b: &mut PlanBuilder, _i: usize, bd: BlockDiagMatrix, bias: Vec<f32>, relu: bool| {
+            b.block_gemm_f32(bd, bias, relu)
+        };
+        // add with no pending save
+        let mut b = PlanBuilder::new(16);
+        assert!(lower_conv_stages(&mut b, vec![mk(false, true, 0)], gemm).is_err());
+        // save that is never merged
+        let mut b = PlanBuilder::new(16);
+        assert!(lower_conv_stages(&mut b, vec![mk(true, false, 0)], gemm).is_err());
+        // pool window larger than the conv output
+        let mut b = PlanBuilder::new(16);
+        assert!(lower_conv_stages(&mut b, vec![mk(false, false, 9)], gemm).is_err());
     }
 
     #[test]
@@ -545,7 +736,7 @@ mod tests {
         let mut rng = Xoshiro256pp::seed_from_u64(37);
         let comp = ConvCompressor::new(tiny_plan(true), 37);
         let params = comp.random_masked_params(37);
-        let packed = PackedConvNet::build(&comp, &params);
+        let packed = PackedConvNet::build(&comp, &params).expect("lower");
         let batch = 4;
         let x: Vec<f32> = (0..batch * 64).map(|_| rng.next_f32() - 0.5).collect();
         let y = packed.forward(&x, batch);

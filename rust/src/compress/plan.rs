@@ -8,7 +8,7 @@
 use crate::linalg::im2col::ConvShape;
 use crate::mask::mask::MpdMask;
 use crate::mask::prng::Xoshiro256pp;
-use crate::nn::convnet::{ConvNetSpec, ConvStageSpec};
+use crate::nn::convnet::{ConvNetSpec, ConvStageSpec, PoolKind};
 
 /// Plan for one FC layer.
 #[derive(Clone, Debug, PartialEq)]
@@ -163,26 +163,108 @@ pub struct ConvLayerPlan {
     pub k: usize,
     pub stride: usize,
     pub pad: usize,
-    /// Max-pool kernel after the conv (`0` = no pool); stride equals the
-    /// kernel (the non-overlapping pooling every model here uses).
+    /// AlexNet-style channel groups (must divide in/out channels). A grouped
+    /// stage's filter matrix is block-diagonal over groups; MPD masks apply
+    /// *within* each group (`nblocks` blocks per group — see
+    /// [`MpdMask::grouped`]), so a dense grouped stage still lowers onto the
+    /// packed block-diagonal engine with `groups` blocks.
+    pub groups: usize,
+    /// ReLU epilogue (after the residual add, when one is present).
+    pub relu: bool,
+    /// Snapshot this stage's input as the pending residual branch.
+    pub save_skip: bool,
+    /// Add the pending snapshot to this stage's conv output.
+    pub add_skip: bool,
+    pub pool_kind: PoolKind,
+    /// Pool kernel for `Max`/`Avg` (`GlobalAvg` derives it; `None` ignores).
     pub pool: usize,
+    pub pool_stride: usize,
     pub nblocks: Option<usize>,
 }
 
 impl ConvLayerPlan {
-    /// `k×k` stride-1 dense conv with `pad = k/2` + `pool×pool` max-pool.
-    /// For odd `k` this is "same" padding (output-preserving); even kernels
-    /// get `k/2` padding too, which grows the output by one — set `pad`
-    /// explicitly on the struct if a different geometry is wanted
-    /// (`ConvModelPlan::validate` checks the head dims either way).
+    /// `k×k` stride-1 dense conv with `pad = k/2` + `pool×pool` max-pool
+    /// (`pool == 0` = no pool). For odd `k` this is "same" padding
+    /// (output-preserving); even kernels get `k/2` padding too, which grows
+    /// the output by one — set the fields explicitly or use the builder
+    /// methods for other geometries (`ConvModelPlan::validate` checks the
+    /// head dims either way).
     pub fn dense(name: &str, out_c: usize, k: usize, pool: usize) -> Self {
-        Self { name: name.into(), out_c, k, stride: 1, pad: k / 2, pool, nblocks: None }
+        Self {
+            name: name.into(),
+            out_c,
+            k,
+            stride: 1,
+            pad: k / 2,
+            groups: 1,
+            relu: true,
+            save_skip: false,
+            add_skip: false,
+            pool_kind: if pool > 0 { PoolKind::Max } else { PoolKind::None },
+            pool,
+            pool_stride: pool,
+            nblocks: None,
+        }
     }
 
     /// Same geometry, with an MPD mask of `nblocks` blocks on the filter
-    /// matrix.
+    /// matrix (per group, for grouped stages).
     pub fn masked(name: &str, out_c: usize, k: usize, pool: usize, nblocks: usize) -> Self {
         Self { nblocks: Some(nblocks), ..Self::dense(name, out_c, k, pool) }
+    }
+
+    pub fn with_geometry(mut self, stride: usize, pad: usize) -> Self {
+        self.stride = stride;
+        self.pad = pad;
+        self
+    }
+
+    pub fn grouped(mut self, groups: usize) -> Self {
+        self.groups = groups;
+        self
+    }
+
+    pub fn no_relu(mut self) -> Self {
+        self.relu = false;
+        self
+    }
+
+    pub fn saving_skip(mut self) -> Self {
+        self.save_skip = true;
+        self
+    }
+
+    pub fn adding_skip(mut self) -> Self {
+        self.add_skip = true;
+        self
+    }
+
+    pub fn max_pool(mut self, k: usize, stride: usize) -> Self {
+        self.pool_kind = PoolKind::Max;
+        self.pool = k;
+        self.pool_stride = stride;
+        self
+    }
+
+    pub fn avg_pool(mut self, k: usize, stride: usize) -> Self {
+        self.pool_kind = PoolKind::Avg;
+        self.pool = k;
+        self.pool_stride = stride;
+        self
+    }
+
+    pub fn global_avg_pool(mut self) -> Self {
+        self.pool_kind = PoolKind::GlobalAvg;
+        self.pool = 0;
+        self.pool_stride = 1;
+        self
+    }
+
+    /// Live weights of the layer (the dense baseline a compression ratio is
+    /// measured against): grouped stages only store `in_c/groups` channels
+    /// per filter.
+    pub fn dense_params(&self, in_c: usize) -> usize {
+        self.out_c * (in_c / self.groups) * self.k * self.k
     }
 
     fn stage_spec(&self) -> ConvStageSpec {
@@ -191,8 +273,13 @@ impl ConvLayerPlan {
             k: self.k,
             stride: self.stride,
             pad: self.pad,
+            groups: self.groups,
+            relu: self.relu,
+            save_skip: self.save_skip,
+            add_skip: self.add_skip,
+            pool_kind: self.pool_kind,
             pool_k: self.pool,
-            pool_stride: self.pool,
+            pool_stride: self.pool_stride,
         }
     }
 }
@@ -272,11 +359,14 @@ impl ConvModelPlan {
                 if k == 0 {
                     return Err(format!("{}: zero blocks", cp.name));
                 }
-                if k > *out_c || k > *cols {
+                // Masks apply per group: each group's sub-matrix is
+                // (out_c/groups) × (cols/groups).
+                let (ocg, ccg) = (out_c / cp.groups, cols / cp.groups);
+                if k > ocg || k > ccg {
                     return Err(format!(
-                        "{}: {k} blocks exceeds filter-matrix min dim {}",
+                        "{}: {k} blocks exceeds per-group filter-matrix min dim {}",
                         cp.name,
-                        out_c.min(cols)
+                        ocg.min(ccg)
                     ));
                 }
             }
@@ -295,7 +385,10 @@ impl ConvModelPlan {
             .enumerate()
             .map(|(i, ((out_c, cols), cp))| {
                 let mut rng = root.fork(i as u64);
-                cp.nblocks.map(|k| MpdMask::generate(*out_c, *cols, k, &mut rng))
+                // Per-group mask composition; `groups == 1` draws the exact
+                // same permutation stream as the plain generator, so
+                // pre-existing models keep their masks bit-for-bit.
+                cp.nblocks.map(|k| MpdMask::grouped(*out_c, *cols, cp.groups, k, &mut rng))
             })
             .collect()
     }
@@ -305,7 +398,9 @@ impl ConvModelPlan {
         self.filter_dims()
             .iter()
             .zip(&self.convs)
-            .map(|((out_c, cols), cp)| cp.nblocks.map(|k| MpdMask::non_permuted(*out_c, *cols, k)))
+            .map(|((out_c, cols), cp)| {
+                cp.nblocks.map(|k| MpdMask::grouped_non_permuted(*out_c, *cols, cp.groups, k))
+            })
             .collect()
     }
 
@@ -339,6 +434,78 @@ impl ConvModelPlan {
                 LayerPlan::masked("fc2", 10, 256, k.min(10)),
             ])
             .expect("static head"),
+        )
+        .expect("static plan")
+    }
+
+    /// AlexNet-class plan at paper-like 3×224×224 scale (§3.2), with the
+    /// classic grouped stages (conv2/4/5 split over 2 groups). Channel
+    /// counts are halved relative to the original single-GPU AlexNet so
+    /// the accounting stays honest about what this testbed would run;
+    /// conv2–conv5 and all FC layers carry MPD masks. This plan is for
+    /// plan/report accounting — training it is out of CI budget; use
+    /// [`ConvModelPlan::alexnet_lite`] for end-to-end serving.
+    pub fn alexnet(k: usize) -> Self {
+        Self::new(
+            (3, 224, 224),
+            vec![
+                ConvLayerPlan::dense("conv1", 48, 11, 0).with_geometry(4, 2).max_pool(3, 2),
+                ConvLayerPlan::masked("conv2", 128, 5, 0, k).grouped(2).max_pool(3, 2),
+                ConvLayerPlan::masked("conv3", 192, 3, 0, k),
+                ConvLayerPlan::masked("conv4", 192, 3, 0, k).grouped(2),
+                ConvLayerPlan::masked("conv5", 128, 3, 0, k).grouped(2).max_pool(3, 2),
+            ],
+            SparsityPlan::new(vec![
+                LayerPlan::masked("fc6", 1024, 4608, k),
+                LayerPlan::masked("fc7", 1024, 1024, k),
+                LayerPlan::masked("fc8", 200, 1024, k.min(200)),
+            ])
+            .expect("static head"),
+        )
+        .expect("static plan")
+    }
+
+    /// Training-scale AlexNet for this testbed: same structural motifs
+    /// (strided first conv, a grouped masked stage, max-pool pyramid) on
+    /// 3×32×32 inputs so the native trainer converges inside CI budget.
+    pub fn alexnet_lite(k: usize, classes: usize) -> Self {
+        let kc = k.min(16);
+        Self::new(
+            (3, 32, 32),
+            vec![
+                ConvLayerPlan::dense("conv1", 24, 5, 0).with_geometry(2, 2).max_pool(2, 2),
+                ConvLayerPlan::masked("conv2", 48, 3, 0, kc).grouped(2).max_pool(2, 2),
+                ConvLayerPlan::masked("conv3", 48, 3, 0, kc),
+            ],
+            SparsityPlan::new(vec![
+                LayerPlan::masked("fc6", 128, 48 * 4 * 4, k),
+                LayerPlan::masked("fc7", classes, 128, k.min(classes)),
+            ])
+            .expect("static head"),
+        )
+        .expect("static plan")
+    }
+
+    /// ResNet-style residual net on 3×32×32: two identity-skip blocks
+    /// (save on the block's first conv, add after the second conv, ReLU
+    /// after the add), an avg-pool downsample, and a global-avg-pool head
+    /// reducer feeding a single masked FC classifier.
+    pub fn tinyresnet(k: usize, classes: usize) -> Self {
+        let kc = k.min(8);
+        let km = k.min(16);
+        Self::new(
+            (3, 32, 32),
+            vec![
+                ConvLayerPlan::dense("conv0", 16, 3, 0),
+                ConvLayerPlan::masked("res1a", 16, 3, 0, kc).saving_skip(),
+                ConvLayerPlan::masked("res1b", 16, 3, 0, kc).adding_skip().max_pool(2, 2),
+                ConvLayerPlan::dense("conv3", 32, 3, 0),
+                ConvLayerPlan::masked("res2a", 32, 3, 0, km).saving_skip(),
+                ConvLayerPlan::masked("res2b", 32, 3, 0, km).adding_skip().avg_pool(2, 2),
+                ConvLayerPlan::masked("head_conv", 32, 3, 0, km).global_avg_pool(),
+            ],
+            SparsityPlan::new(vec![LayerPlan::masked("fc1", classes, 32, kc.min(classes))])
+                .expect("static head"),
         )
         .expect("static plan")
     }
@@ -414,6 +581,61 @@ mod tests {
         // deterministic + seed-sensitive, like FC masks
         assert_eq!(m.to_dense(), lite.generate_conv_masks(7)[1].as_ref().unwrap().to_dense());
         assert_ne!(m.to_dense(), lite.generate_conv_masks(8)[1].as_ref().unwrap().to_dense());
+    }
+
+    #[test]
+    fn alexnet_plan_geometry_and_grouped_masks() {
+        let plan = ConvModelPlan::alexnet(8);
+        // 224 →(c11 s4 p2) 55 →(pool3 s2) 27 →(c5 p2) 27 → 13 → 13 → 13
+        // →(c3 p1) 13 →(pool3 s2) 6; 128·6·6 = 4608.
+        assert_eq!(plan.net_spec().conv_out_dim(), 4608);
+        assert_eq!(plan.filter_dims()[1], (128, 48 * 25));
+        // Grouped stage params count only in_c/groups channels per filter.
+        assert_eq!(plan.convs[1].dense_params(48), 128 * 24 * 25);
+        let masks = plan.generate_conv_masks(3);
+        assert!(masks[0].is_none());
+        // conv2: 2 groups × 8 blocks per group = 16 spans, all confined.
+        let m = masks[1].as_ref().unwrap();
+        assert_eq!((m.rows(), m.cols(), m.nblocks()), (128, 1200, 16));
+        let d = m.to_dense();
+        for r in 0..128 {
+            for c in 0..1200 {
+                if d[r * 1200 + c] != 0.0 {
+                    assert_eq!(r / 64, c / 600, "mask entry crosses group boundary");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lite_model_plans_validate() {
+        let lite = ConvModelPlan::alexnet_lite(8, 10);
+        assert_eq!(lite.net_spec().conv_out_dim(), 768);
+        assert!(lite.generate_conv_masks(5)[1].is_some());
+
+        let res = ConvModelPlan::tinyresnet(8, 10);
+        assert_eq!(res.net_spec().conv_out_dim(), 32);
+        let spec = res.net_spec();
+        assert!(spec.convs[1].save_skip && spec.convs[2].add_skip);
+        assert_eq!(spec.convs[5].pool_kind, PoolKind::Avg);
+        assert_eq!(spec.convs[6].pool_kind, PoolKind::GlobalAvg);
+        // shapes: 32 →pool→ 16 →pool→ 8 →global→ 1
+        let shapes = spec.stage_shapes();
+        assert_eq!(shapes[6], (32, 8, 8)); // head_conv input
+        assert_eq!(shapes.last(), Some(&(32, 1, 1)));
+    }
+
+    #[test]
+    fn grouped_blocks_must_fit_per_group() {
+        // 4 out channels over 2 groups → 2 rows per group; 3 blocks per
+        // group cannot fit and must be a plan error, not a panic.
+        let bad = ConvModelPlan::new(
+            (2, 8, 8),
+            vec![ConvLayerPlan::masked("c1", 4, 3, 0, 3).grouped(2)],
+            SparsityPlan::new(vec![LayerPlan::dense("fc", 3, 4 * 8 * 8)]).unwrap(),
+        );
+        let err = bad.err().unwrap();
+        assert!(err.contains("per-group"), "unexpected error: {err}");
     }
 
     #[test]

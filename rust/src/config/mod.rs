@@ -8,7 +8,7 @@
 
 pub mod toml;
 
-use crate::compress::plan::{LayerPlan, SparsityPlan};
+use crate::compress::plan::{ConvModelPlan, LayerPlan, SparsityPlan};
 pub use toml::{TomlDoc, TomlValue};
 
 /// Model choice for the CLI / examples.
@@ -18,7 +18,15 @@ pub enum ModelKind {
     DeepMnist,
     Cifar10,
     TinyAlexnet,
+    /// AlexNet-class conv model (strided conv1, grouped stages); trains at
+    /// `alexnet_lite` scale, accounts at `ConvModelPlan::alexnet` scale.
+    Alexnet,
+    /// ResNet-style residual conv model with a global-avg-pool head.
+    TinyResnet,
 }
+
+/// Classes of the synthetic ImageNet-like dataset the conv models train on.
+const IMAGENET_LIKE_CLASSES: usize = 16;
 
 impl ModelKind {
     pub fn parse(s: &str) -> Result<Self, String> {
@@ -26,8 +34,12 @@ impl ModelKind {
             "lenet" | "lenet300" | "lenet-300-100" => Ok(Self::Lenet300),
             "deep_mnist" | "deepmnist" => Ok(Self::DeepMnist),
             "cifar10" | "cifar" => Ok(Self::Cifar10),
-            "tiny_alexnet" | "alexnet" => Ok(Self::TinyAlexnet),
-            other => Err(format!("unknown model {other} (try lenet|deep_mnist|cifar10|tiny_alexnet)")),
+            "tiny_alexnet" | "tinyalexnet" => Ok(Self::TinyAlexnet),
+            "alexnet" => Ok(Self::Alexnet),
+            "tinyresnet" | "tiny_resnet" | "resnet" => Ok(Self::TinyResnet),
+            other => Err(format!(
+                "unknown model {other} (try lenet|deep_mnist|cifar10|tiny_alexnet|alexnet|tinyresnet)"
+            )),
         }
     }
 
@@ -37,6 +49,8 @@ impl ModelKind {
             Self::DeepMnist => "deep_mnist",
             Self::Cifar10 => "cifar10",
             Self::TinyAlexnet => "tiny_alexnet",
+            Self::Alexnet => "alexnet",
+            Self::TinyResnet => "tinyresnet",
         }
     }
 
@@ -47,6 +61,8 @@ impl ModelKind {
             Self::DeepMnist => "deep_mnist_train_step_b32",
             Self::Cifar10 => "cifar10_train_step_b32",
             Self::TinyAlexnet => "tiny_alexnet_train_step_b32",
+            Self::Alexnet => "alexnet_train_step_b32",
+            Self::TinyResnet => "tinyresnet_train_step_b32",
         }
     }
 
@@ -57,12 +73,15 @@ impl ModelKind {
             Self::DeepMnist => "deep_mnist_infer_b128",
             Self::Cifar10 => "cifar10_infer_b128",
             Self::TinyAlexnet => "tiny_alexnet_infer_b128",
+            Self::Alexnet => "alexnet_infer_b128",
+            Self::TinyResnet => "tinyresnet_infer_b128",
         }
     }
 
     /// The *training-scale* sparsity plan used on this testbed (lenet trains
     /// at paper scale; conv models use the scaled "lite" FC dims that match
-    /// the artifacts — see DESIGN.md §2).
+    /// the artifacts — see DESIGN.md §2). For the conv model families this is
+    /// the FC *head* of [`Self::conv_plan`].
     pub fn plan(&self, k: usize) -> Result<SparsityPlan, String> {
         match self {
             Self::Lenet300 => SparsityPlan::new(vec![
@@ -84,6 +103,19 @@ impl ModelKind {
                 LayerPlan::masked("fc7", 256, 256, k),
                 LayerPlan::masked("fc8", 16, 256, k.min(16)),
             ]),
+            // Mirror `ConvModelPlan::alexnet_lite(k, 16).fc` / `tinyresnet(k, 16).fc`,
+            // but through the validating ctor so absurd `k` is a config error,
+            // not a panic inside the static conv-plan builders.
+            Self::Alexnet => SparsityPlan::new(vec![
+                LayerPlan::masked("fc6", 128, 768, k),
+                LayerPlan::masked("fc7", IMAGENET_LIKE_CLASSES, 128, k.min(IMAGENET_LIKE_CLASSES)),
+            ]),
+            Self::TinyResnet => SparsityPlan::new(vec![LayerPlan::masked(
+                "fc1",
+                IMAGENET_LIKE_CLASSES,
+                32,
+                k.min(8),
+            )]),
         }
     }
 
@@ -93,7 +125,41 @@ impl ModelKind {
             Self::Lenet300 => SparsityPlan::lenet300(k),
             Self::DeepMnist => SparsityPlan::deep_mnist(k),
             Self::Cifar10 => SparsityPlan::cifar10(k),
-            Self::TinyAlexnet => SparsityPlan::alexnet(k),
+            Self::TinyAlexnet | Self::Alexnet => SparsityPlan::alexnet(k),
+            // no paper FC analog: the residual model's only FC layer
+            Self::TinyResnet => ConvModelPlan::tinyresnet(k, IMAGENET_LIKE_CLASSES).fc,
+        }
+    }
+
+    /// The *training-scale* compressed-conv plan this model serves through
+    /// the im2col lowering, when it has one (`None` = pure-FC model).
+    pub fn conv_plan(&self, k: usize) -> Option<ConvModelPlan> {
+        match self {
+            Self::DeepMnist => Some(ConvModelPlan::deep_mnist_lite(k)),
+            Self::Alexnet => Some(ConvModelPlan::alexnet_lite(k, IMAGENET_LIKE_CLASSES)),
+            Self::TinyResnet => Some(ConvModelPlan::tinyresnet(k, IMAGENET_LIKE_CLASSES)),
+            _ => None,
+        }
+    }
+
+    /// Paper/report-scale conv plan (accounting only — never CI-trained).
+    pub fn paper_conv_plan(&self, k: usize) -> Option<ConvModelPlan> {
+        match self {
+            Self::DeepMnist => Some(ConvModelPlan::deep_mnist(k)),
+            Self::Alexnet => Some(ConvModelPlan::alexnet(k)),
+            Self::TinyResnet => Some(ConvModelPlan::tinyresnet(k, IMAGENET_LIKE_CLASSES)),
+            _ => None,
+        }
+    }
+
+    /// Serving variant name of the compressed-conv engine (`-int8` twin is
+    /// derived by suffix).
+    pub fn conv_variant(&self) -> Option<&'static str> {
+        match self {
+            Self::DeepMnist => Some("deep-mnist-mpd"),
+            Self::Alexnet => Some("alexnet-mpd"),
+            Self::TinyResnet => Some("tinyresnet-mpd"),
+            _ => None,
         }
     }
 }
@@ -613,8 +679,11 @@ mod tests {
     #[test]
     fn model_kind_parse() {
         assert_eq!(ModelKind::parse("lenet").unwrap(), ModelKind::Lenet300);
-        assert_eq!(ModelKind::parse("alexnet").unwrap(), ModelKind::TinyAlexnet);
-        assert!(ModelKind::parse("resnet").is_err());
+        assert_eq!(ModelKind::parse("tiny_alexnet").unwrap(), ModelKind::TinyAlexnet);
+        assert_eq!(ModelKind::parse("alexnet").unwrap(), ModelKind::Alexnet);
+        assert_eq!(ModelKind::parse("tinyresnet").unwrap(), ModelKind::TinyResnet);
+        assert_eq!(ModelKind::parse("resnet").unwrap(), ModelKind::TinyResnet);
+        assert!(ModelKind::parse("vgg").is_err());
     }
 
     #[test]
@@ -813,11 +882,37 @@ log_level = "debug"
 
     #[test]
     fn artifact_names_exist_for_all_models() {
-        for m in [ModelKind::Lenet300, ModelKind::DeepMnist, ModelKind::Cifar10, ModelKind::TinyAlexnet] {
+        for m in [
+            ModelKind::Lenet300,
+            ModelKind::DeepMnist,
+            ModelKind::Cifar10,
+            ModelKind::TinyAlexnet,
+            ModelKind::Alexnet,
+            ModelKind::TinyResnet,
+        ] {
             assert!(m.train_artifact().contains("train_step"));
             assert!(m.infer_artifact().contains("infer"));
             let plan = m.plan(8).unwrap();
             assert!(!plan.layers.is_empty());
         }
+    }
+
+    #[test]
+    fn conv_model_fc_heads_match_training_plans() {
+        // `plan()` hand-writes the conv models' FC heads so validation stays
+        // fallible; they must stay dimension-identical to `conv_plan().fc`.
+        for m in [ModelKind::Alexnet, ModelKind::TinyResnet] {
+            let fc = m.plan(8).unwrap();
+            let conv = m.conv_plan(8).unwrap();
+            assert_eq!(fc.layers.len(), conv.fc.layers.len(), "{}", m.name());
+            for (a, b) in fc.layers.iter().zip(&conv.fc.layers) {
+                assert_eq!((a.out_dim, a.in_dim, a.nblocks), (b.out_dim, b.in_dim, b.nblocks));
+            }
+            assert!(m.conv_variant().is_some());
+            assert!(m.paper_conv_plan(8).is_some());
+        }
+        // absurd nblocks is a config error, not a panic
+        assert!(ModelKind::Alexnet.plan(100_000).is_err());
+        assert!(ModelKind::Lenet300.conv_plan(8).is_none());
     }
 }

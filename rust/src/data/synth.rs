@@ -65,6 +65,13 @@ impl SynthSpec {
         Self { classes, channels: 3, height: 32, width: 32, label_noise: 0.02, pixel_noise: 0.45, max_shift: 4 }
     }
 
+    /// Paper-resolution ImageNet stand-in used by the AlexNet-class plan:
+    /// 3×224×224. Generate only a handful of samples — one image is ~600 KB
+    /// of f32 — for shape/plan exercises, never for training sweeps.
+    pub fn imagenet_224(classes: usize) -> Self {
+        Self { classes, channels: 3, height: 224, width: 224, label_noise: 0.02, pixel_noise: 0.45, max_shift: 16 }
+    }
+
     pub fn pixels(&self) -> usize {
         self.channels * self.height * self.width
     }
@@ -261,5 +268,14 @@ mod tests {
         let d = SynthImages::generate(spec, 10, 3, 0);
         assert_eq!(d.spec.classes, 37);
         assert!(d.labels.iter().all(|&l| l < 37));
+    }
+
+    #[test]
+    fn imagenet_224_has_paper_resolution() {
+        let spec = SynthSpec::imagenet_224(16);
+        assert_eq!(spec.pixels(), 3 * 224 * 224);
+        let d = SynthImages::generate(spec, 2, 5, 0);
+        assert_eq!(d.images.len(), 2 * 3 * 224 * 224);
+        assert!(d.labels.iter().all(|&l| l < 16));
     }
 }

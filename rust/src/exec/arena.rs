@@ -1,19 +1,28 @@
-//! Scratch arena for plan execution: two ping-pong f32 activation buffers
-//! plus one i8 staging buffer for quantized GEMM inputs.
+//! Scratch arena for plan execution: two ping-pong f32 activation buffers,
+//! one i8 staging buffer for quantized GEMM inputs, and a set of pinned f32
+//! **skip slots** holding residual-branch snapshots across stages.
 //!
 //! The arena is the *only* memory [`crate::exec::Executor::run_into`]
 //! touches besides the caller's input/output slices: every op writes the
-//! idle half, the halves swap, and quantized ops stage their input in `q`.
+//! idle half, the halves swap, quantized ops stage their input in `q`, and
+//! `skip_save`/`residual_add` ops pin/consume activations in `skip[slot]`.
 //! Buffers are `Vec`s resized to exact logical lengths per op — `resize`
 //! within capacity never allocates, so after warm-up (either an explicit
 //! [`ScratchArena::warm`] or the first call at the largest batch size) the
 //! hot path performs **zero heap allocations per call**, which
 //! `bin/leak_test.rs` pins down with a counting global allocator.
 //!
+//! Skip slots are *pinned*: unlike the ping-pong halves they are addressed
+//! by slot id across an arbitrary span of ops, so they can never be
+//! recycled into the swap rotation. `PlanBuilder` tracks each slot's
+//! lifetime (save → add) and records the per-slot high-water size on the
+//! plan, which is what [`ScratchArena::warm`] reserves here.
+//!
 //! One arena belongs to one executing thread at a time (each batcher worker
 //! owns one and reuses it across every batch it serves); arenas are cheap to
 //! create and hold no plan state, so one arena can serve many plans — its
-//! capacity simply grows to the largest.
+//! capacity simply grows to the largest, including the largest skip-slot
+//! set any plan needs.
 
 use crate::exec::plan::ExecPlan;
 
@@ -24,12 +33,14 @@ pub struct ScratchArena {
     pub(crate) b: Vec<f32>,
     /// Quantized-input staging buffer.
     pub(crate) q: Vec<i8>,
+    /// Pinned residual skip slots, indexed by `Op::SkipSave { slot }`.
+    pub(crate) skip: Vec<Vec<f32>>,
 }
 
 impl ScratchArena {
     /// An empty arena; capacity grows on first use.
     pub fn new() -> Self {
-        Self { a: Vec::new(), b: Vec::new(), q: Vec::new() }
+        Self { a: Vec::new(), b: Vec::new(), q: Vec::new(), skip: Vec::new() }
     }
 
     /// An arena pre-sized for `plan` at up to `max_batch` samples.
@@ -53,10 +64,25 @@ impl ScratchArena {
         if self.q.capacity() < i8_elems {
             self.q.reserve(i8_elems - self.q.len());
         }
+        let nslots = plan.skip_elems_per_sample.len();
+        if self.skip.len() < nslots {
+            self.skip.resize_with(nslots, Vec::new);
+        }
+        for (slot, &elems) in plan.skip_elems_per_sample.iter().enumerate() {
+            let need = elems * max_batch;
+            let buf = &mut self.skip[slot];
+            if buf.capacity() < need {
+                buf.reserve(need - buf.len());
+            }
+        }
     }
 
     /// Current heap footprint of the arena (capacity, not logical length).
     pub fn capacity_bytes(&self) -> usize {
-        (self.a.capacity() + self.b.capacity()) * 4 + self.q.capacity()
+        (self.a.capacity()
+            + self.b.capacity()
+            + self.skip.iter().map(Vec::capacity).sum::<usize>())
+            * 4
+            + self.q.capacity()
     }
 }

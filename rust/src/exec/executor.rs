@@ -40,7 +40,7 @@ use crate::exec::plan::{ExecPlan, Op, PlannedOp, PoolChoice};
 use crate::linalg::blockdiag_mm::TileShape;
 use crate::linalg::blockdiag_mm_i8::quantize_slice_into;
 use crate::linalg::gemm::gemm_a_bt;
-use crate::linalg::im2col::{gather_cols, gather_cols_isa, im2col, maxpool_nchw, rows_to_nchw};
+use crate::linalg::im2col::{avgpool_nchw, gather_cols, gather_cols_isa, im2col, maxpool_nchw, rows_to_nchw};
 use crate::linalg::kernel::{self, KernelChoice};
 use crate::linalg::pool::ThreadPool;
 use crate::obs::profile::{ExecProfile, OpMeta};
@@ -140,6 +140,13 @@ impl Executor {
                 if p.uses_i8() {
                     act += p.in_elems();
                 }
+                match &p.op {
+                    // Extra skip-slot traffic: save writes the slot as well
+                    // as the pass-through output; add reads it back.
+                    Op::SkipSave { .. } => act += p.out_elems() * 4,
+                    Op::ResidualAdd { .. } => act += p.in_elems() * 4,
+                    _ => {}
+                }
                 OpMeta {
                     name: p.op.name(),
                     macs_per_sample: p.macs_per_sample() as u64,
@@ -199,13 +206,13 @@ impl Executor {
         let pool = self.pool.get();
         let prof = self.profile.as_deref();
         let run_t0 = prof.map(|_| Instant::now());
-        let ScratchArena { a, b, q } = scratch;
+        let ScratchArena { a, b, q, skip } = scratch;
         let (mut cur, mut alt) = (a, b);
         cur.clear();
         cur.extend_from_slice(x);
         for (i, p) in self.plan.ops.iter().enumerate() {
             let op_t0 = prof.map(|_| Instant::now());
-            self.apply(p, cur, alt, q, batch, pool);
+            self.apply(p, cur, alt, q, skip, batch, pool);
             if let (Some(pr), Some(t0)) = (prof, op_t0) {
                 pr.record_op(i, t0.elapsed().as_nanos() as u64);
             }
@@ -236,6 +243,7 @@ impl Executor {
         src: &[f32],
         dst: &mut Vec<f32>,
         qbuf: &mut Vec<i8>,
+        skip: &mut Vec<Vec<f32>>,
         batch: usize,
         pool: Option<&ThreadPool>,
     ) {
@@ -273,6 +281,33 @@ impl Executor {
             Op::MaxPool { c, h, w, k, stride } => {
                 maxpool_nchw(src, batch, *c, *h, *w, *k, *stride, dst);
             }
+            Op::AvgPool { c, h, w, k, stride } => {
+                avgpool_nchw(src, batch, *c, *h, *w, *k, *stride, dst);
+            }
+            Op::SkipSave { slot } => {
+                // Pin a snapshot in the arena skip slot and pass the
+                // activation through unchanged (pure copies, bit-exact).
+                if skip.len() <= *slot {
+                    skip.resize_with(*slot + 1, Vec::new);
+                }
+                let buf = &mut skip[*slot];
+                buf.clear();
+                buf.extend_from_slice(src);
+                dst.clear();
+                dst.extend_from_slice(src);
+            }
+            Op::ResidualAdd { slot, relu } => {
+                // One add per element against the pinned snapshot; the
+                // optional ReLU is the stage epilogue fused here instead of
+                // into the preceding GEMM (fusion contract, DESIGN.md §Conv).
+                let snap = &skip[*slot];
+                debug_assert_eq!(snap.len(), src.len(), "residual_add: skip shape");
+                dst.clear();
+                dst.extend(src.iter().zip(snap.iter()).map(|(&v, &s)| {
+                    let sum = v + s;
+                    if *relu { sum.max(0.0) } else { sum }
+                }));
+            }
         }
         debug_assert_eq!(dst.len(), batch * p.out_elems(), "{}: dst shape", p.op.name());
     }
@@ -292,8 +327,11 @@ impl Executor {
     ///
     /// f32 GEMMs propagate the bound linearly (`e_out = |W|·e`), ReLU is
     /// 1-Lipschitz, gathers/im2col/transposes permute the bound (padded taps
-    /// carry bound 0), and max-pool takes the window max
-    /// (`|max aᵢ − max bᵢ| ≤ maxᵢ|aᵢ − bᵢ|`). The value stream is computed
+    /// carry bound 0), max-pool takes the window max
+    /// (`|max aᵢ − max bᵢ| ≤ maxᵢ|aᵢ − bᵢ|`), average-pool the window
+    /// *mean* (mean is linear), and a residual add sums the two streams'
+    /// bounds (skip-save snapshots the bound alongside the values). The
+    /// value stream is computed
     /// by the same [`Self::run_into`] op applications, so it is bit-identical
     /// to a plain forward. Scalar bound path — diagnostics, not serving.
     ///
@@ -325,12 +363,19 @@ impl Executor {
         let mut scratch: Vec<f32> = Vec::new();
         let mut err_scratch: Vec<f32> = Vec::new();
         let mut qbuf: Vec<i8> = Vec::new();
+        // Residual skip slots for both streams. A `None` error snapshot
+        // means the saved bound was identically zero (same lazy convention
+        // as the main stream).
+        let nslots = self.plan.skip_elems_per_sample.len();
+        let mut skip_val: Vec<Vec<f32>> = Vec::new();
+        skip_val.resize_with(nslots, Vec::new);
+        let mut skip_err: Vec<Option<Vec<f32>>> = vec![None; nslots];
         for p in &self.plan.ops {
             // Bound first (it reads the op's *input* values; for i8 ops it
             // quantizes into qbuf itself — `apply` then re-quantizes the
             // identical bytes), then the value op, then swap both streams.
-            let wrote = self.apply_bound(p, &act, err.as_deref(), &mut err_scratch, &mut qbuf, batch);
-            self.apply(p, &act, &mut scratch, &mut qbuf, batch, pool);
+            let wrote = self.apply_bound(p, &act, err.as_deref(), &mut err_scratch, &mut qbuf, &mut skip_err, batch);
+            self.apply(p, &act, &mut scratch, &mut qbuf, &mut skip_val, batch, pool);
             std::mem::swap(&mut act, &mut scratch);
             if wrote {
                 match &mut err {
@@ -354,6 +399,7 @@ impl Executor {
         err: Option<&[f32]>,
         err_dst: &mut Vec<f32>,
         qbuf: &mut Vec<i8>,
+        skip_err: &mut [Option<Vec<f32>>],
         batch: usize,
     ) -> bool {
         let nrows = batch * p.in_rows;
@@ -380,6 +426,45 @@ impl Executor {
                 let Some(err) = err else { return false };
                 maxpool_nchw(err, batch, *c, *h, *w, *k, *stride, err_dst);
                 true
+            }
+            Op::AvgPool { c, h, w, k, stride } => {
+                // Mean is linear: |mean aᵢ − mean bᵢ| ≤ meanᵢ|aᵢ − bᵢ|, so
+                // the bound pools as the window *mean* (unlike max).
+                let Some(err) = err else { return false };
+                avgpool_nchw(err, batch, *c, *h, *w, *k, *stride, err_dst);
+                true
+            }
+            Op::SkipSave { slot } => {
+                // Snapshot the bound alongside the values; an implicit zero
+                // saves as an implicit zero.
+                skip_err[*slot] = err.map(|e| e.to_vec());
+                let Some(err) = err else { return false };
+                err_dst.clear();
+                err_dst.extend_from_slice(err);
+                true
+            }
+            Op::ResidualAdd { slot, .. } => {
+                // Two independent error streams add: e_out ≤ e_src + e_skip.
+                // ReLU is 1-Lipschitz, so the fused epilogue changes nothing.
+                let snap = skip_err[*slot].take();
+                match (err, snap) {
+                    (None, None) => false,
+                    (Some(e), None) => {
+                        err_dst.clear();
+                        err_dst.extend_from_slice(e);
+                        true
+                    }
+                    (None, Some(s)) => {
+                        err_dst.clear();
+                        err_dst.extend_from_slice(&s);
+                        true
+                    }
+                    (Some(e), Some(s)) => {
+                        err_dst.clear();
+                        err_dst.extend(e.iter().zip(s.iter()).map(|(a, b)| a + b));
+                        true
+                    }
+                }
             }
             // f32 GEMMs: e_out[r] = Σ_p |w_rp|·e_p (ReLU is 1-Lipschitz).
             // Under SIMD dispatch the row also accrues the pinned-reorder

@@ -31,4 +31,4 @@ pub mod plan;
 pub use arena::ScratchArena;
 pub use executor::Executor;
 pub use lower::{lower_dense_mlp, lower_mlp, lower_mlp_with, FcOp, Precision};
-pub use plan::{kernel_label, ExecPlan, Op, PlanBuilder, PlannedOp, PoolChoice};
+pub use plan::{kernel_label, ExecPlan, Op, PlanBuilder, PlanError, PlannedOp, PoolChoice};

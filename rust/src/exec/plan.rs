@@ -18,13 +18,24 @@
 //! | [`Op::Im2col`] | NCHW → patch-matrix lowering | conv stage entry |
 //! | [`Op::RowsToNchw`] | GEMM rows → NCHW, optional `P_row⁻¹` channel restore | conv stage exit |
 //! | [`Op::MaxPool`] | stateless NCHW max-pool | conv stages with pooling |
+//! | [`Op::AvgPool`] | stateless NCHW average-pool (global when `k == h == w`) | ResNet-style heads, AlexNet-class stages |
+//! | [`Op::SkipSave`] | snapshot the activation into a pinned arena skip slot | residual-block entry |
+//! | [`Op::ResidualAdd`] | add a saved skip slot back (+ optional ReLU) | residual-block exit |
 //!
 //! Rectangular buffers are described per *sample*: an op transforms
 //! `[rows × cols]` (e.g. a conv patch matrix has `rows = oh·ow`); the
 //! interpreter scales rows by the batch size. ReLU and bias never appear as
 //! standalone ops — they are epilogue flags on the GEMM that produces the
-//! activation, so every output element is written exactly once (the fusion
-//! contract, DESIGN.md §Engine).
+//! activation (or on the [`Op::ResidualAdd`] that merges a skip branch), so
+//! every output element is written exactly once (the fusion contract,
+//! DESIGN.md §Engine).
+//!
+//! ## Geometry hardening
+//!
+//! Pool and im2col geometry can originate from a checkpoint, so those
+//! builder methods are **fallible** ([`PlanError`]) instead of asserting:
+//! a hostile or merely odd shape fails plan construction with a readable
+//! error rather than panicking a serving worker mid-request.
 
 use crate::linalg::blockdiag_mm::BlockDiagMatrix;
 use crate::linalg::blockdiag_mm_i8::QuantizedBlockDiagMatrix;
@@ -54,6 +65,18 @@ pub enum Op {
     RowsToNchw { out_c: usize, oh: usize, ow: usize, chan_src: Option<Vec<u32>> },
     /// Stateless NCHW max-pool over `[c × h × w]` per sample.
     MaxPool { c: usize, h: usize, w: usize, k: usize, stride: usize },
+    /// Stateless NCHW average-pool over `[c × h × w]` per sample. The
+    /// window mean uses the exact ascending `ky → kx` accumulation order of
+    /// the trainer's pooling layer, so dense lowerings stay bit-exact.
+    /// Global average pooling (the ResNet head reducer) is the `k == h == w`
+    /// case — one `1 × 1` output per channel.
+    AvgPool { c: usize, h: usize, w: usize, k: usize, stride: usize },
+    /// Snapshot the current flat activation into arena skip slot `slot`
+    /// (a residual branch point). Pass-through for the main data stream.
+    SkipSave { slot: usize },
+    /// Element-wise add of saved skip slot `slot` onto the current flat
+    /// activation, with optional fused ReLU (the residual-block exit).
+    ResidualAdd { slot: usize, relu: bool },
 }
 
 impl Op {
@@ -67,9 +90,27 @@ impl Op {
             Op::Im2col { .. } => "im2col",
             Op::RowsToNchw { .. } => "rows_to_nchw",
             Op::MaxPool { .. } => "max_pool",
+            Op::AvgPool { .. } => "avg_pool",
+            Op::SkipSave { .. } => "skip_save",
+            Op::ResidualAdd { .. } => "residual_add",
         }
     }
 }
+
+/// A plan-construction failure: malformed geometry (pool windows larger
+/// than the activation, inconsistent conv shapes, skip-slot shape drift).
+/// Surfaced by the fallible [`PlanBuilder`] methods so checkpoint-derived
+/// shapes fail at lowering time instead of panicking a serving worker.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanError(pub String);
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "plan error: {}", self.0)
+    }
+}
+
+impl std::error::Error for PlanError {}
 
 /// An [`Op`] plus its per-sample buffer shapes: the op maps an
 /// `[in_rows × in_cols]` input to an `[out_rows × out_cols]` output, rows
@@ -114,7 +155,8 @@ impl PlannedOp {
             Op::DenseGemm { w, bias, .. } => (w.len() + bias.len()) * 4,
             Op::Im2col { .. } => 0,
             Op::RowsToNchw { chan_src, .. } => chan_src.as_ref().map_or(0, |g| g.len() * 4),
-            Op::MaxPool { .. } => 0,
+            Op::MaxPool { .. } | Op::AvgPool { .. } => 0,
+            Op::SkipSave { .. } | Op::ResidualAdd { .. } => 0,
         }
     }
 
@@ -137,6 +179,10 @@ pub struct ExecPlan {
     pub n_gathers: usize,
     /// Multiply-accumulates per sample across all ops.
     pub macs_per_sample: usize,
+    /// Per-slot f32 elements per sample the arena's pinned skip buffers
+    /// must hold (empty for plans without residual branches). Slot `i` of
+    /// every [`Op::SkipSave`]/[`Op::ResidualAdd`] indexes this vector.
+    pub skip_elems_per_sample: Vec<usize>,
 }
 
 impl ExecPlan {
@@ -208,8 +254,9 @@ impl ExecPlan {
             }
             t.row(&cells);
         }
-        let arena_bytes =
-            2 * self.max_f32_elems_per_sample() * batch * 4 + self.max_i8_elems_per_sample() * batch;
+        let arena_bytes = 2 * self.max_f32_elems_per_sample() * batch * 4
+            + self.max_i8_elems_per_sample() * batch
+            + self.skip_elems_per_sample.iter().sum::<usize>() * batch * 4;
         let kernel_note = match kernel {
             Some(k) => format!(" | dispatch {}", k.describe()),
             None => String::new(),
@@ -253,13 +300,27 @@ pub struct PlanBuilder {
     cols: usize,
     n_gathers: usize,
     macs: usize,
+    /// Per-slot high-water mark (f32 elems/sample) across all saves.
+    skip_elems: Vec<usize>,
+    /// Per-slot outstanding save: `Some(width)` between a [`Op::SkipSave`]
+    /// and the [`Op::ResidualAdd`] that consumes it.
+    skip_live: Vec<Option<usize>>,
 }
 
 impl PlanBuilder {
     /// Start a plan whose input is `[1 × in_dim]` per sample.
     pub fn new(in_dim: usize) -> Self {
         assert!(in_dim > 0, "plan input dim must be ≥ 1");
-        Self { ops: Vec::new(), in_dim, rows: 1, cols: in_dim, n_gathers: 0, macs: 0 }
+        Self {
+            ops: Vec::new(),
+            in_dim,
+            rows: 1,
+            cols: in_dim,
+            n_gathers: 0,
+            macs: 0,
+            skip_elems: Vec::new(),
+            skip_live: Vec::new(),
+        }
     }
 
     fn push(&mut self, op: Op, out_rows: usize, out_cols: usize) {
@@ -324,13 +385,22 @@ impl PlanBuilder {
     }
 
     /// NCHW → patch matrix. Requires flat (`rows == 1`) NCHW input.
-    pub fn im2col(&mut self, shape: ConvShape) {
+    /// Fallible: conv geometry can come from a checkpoint, so a malformed
+    /// shape is a [`PlanError`], not a panic.
+    pub fn im2col(&mut self, shape: ConvShape) -> Result<(), PlanError> {
         assert_eq!(self.rows, 1, "im2col input must be flat NCHW");
-        assert_eq!(shape.in_dim(), self.cols, "im2col input size mismatch");
-        shape.validate().expect("valid conv shape");
+        shape.validate().map_err(PlanError)?;
+        if shape.in_dim() != self.cols {
+            return Err(PlanError(format!(
+                "im2col input size mismatch: shape wants {} features, activation has {}",
+                shape.in_dim(),
+                self.cols
+            )));
+        }
         let (oh, ow) = shape.out_hw();
         let pdim = shape.patch_dim();
         self.push(Op::Im2col { shape }, oh * ow, pdim);
+        Ok(())
     }
 
     /// GEMM rows → flat NCHW (optionally restoring logical channel order).
@@ -343,13 +413,95 @@ impl PlanBuilder {
         self.push(Op::RowsToNchw { out_c, oh, ow, chan_src }, 1, out_c * oh * ow);
     }
 
-    /// NCHW max-pool over the current flat activation.
-    pub fn max_pool(&mut self, c: usize, h: usize, w: usize, k: usize, stride: usize) {
-        assert_eq!(self.rows, 1, "max_pool input must be flat NCHW");
-        assert_eq!(self.cols, c * h * w, "max_pool input size mismatch");
-        assert!(k >= 1 && stride >= 1 && h >= k && w >= k, "max_pool geometry");
-        let (oh, ow) = ((h - k) / stride + 1, (w - k) / stride + 1);
+    /// NCHW max-pool over the current flat activation. Fallible: pool
+    /// geometry can come from a checkpoint (satellite of the panic-to-error
+    /// hardening — `maxpool_nchw`'s runtime assert is now unreachable from
+    /// plan-built executions).
+    pub fn max_pool(&mut self, c: usize, h: usize, w: usize, k: usize, stride: usize) -> Result<(), PlanError> {
+        let (oh, ow) = self.check_pool("max_pool", c, h, w, k, stride)?;
         self.push(Op::MaxPool { c, h, w, k, stride }, 1, c * oh * ow);
+        Ok(())
+    }
+
+    /// NCHW average-pool over the current flat activation. `k == h == w`
+    /// is the global-average-pool head reducer (one value per channel).
+    pub fn avg_pool(&mut self, c: usize, h: usize, w: usize, k: usize, stride: usize) -> Result<(), PlanError> {
+        let (oh, ow) = self.check_pool("avg_pool", c, h, w, k, stride)?;
+        self.push(Op::AvgPool { c, h, w, k, stride }, 1, c * oh * ow);
+        Ok(())
+    }
+
+    /// Shared pool-geometry validation: window and stride must be ≥ 1 and
+    /// the window must fit inside the spatial extent; the activation width
+    /// must match the claimed `c·h·w`.
+    fn check_pool(
+        &self,
+        what: &str,
+        c: usize,
+        h: usize,
+        w: usize,
+        k: usize,
+        stride: usize,
+    ) -> Result<(usize, usize), PlanError> {
+        assert_eq!(self.rows, 1, "{what} input must be flat NCHW");
+        if c == 0 || h == 0 || w == 0 {
+            return Err(PlanError(format!("{what}: degenerate input {c}×{h}×{w}")));
+        }
+        if k < 1 || stride < 1 {
+            return Err(PlanError(format!("{what}: window {k} / stride {stride} must be ≥ 1")));
+        }
+        if h < k || w < k {
+            return Err(PlanError(format!("{what}: window {k}×{k} exceeds input {h}×{w}")));
+        }
+        if self.cols != c * h * w {
+            return Err(PlanError(format!(
+                "{what} input size mismatch: activation has {} features, pool wants {c}×{h}×{w}",
+                self.cols
+            )));
+        }
+        Ok(((h - k) / stride + 1, (w - k) / stride + 1))
+    }
+
+    /// Snapshot the current flat activation into a pinned arena skip slot
+    /// and return the slot id. The slot stays live (its buffer pinned in the
+    /// [`crate::exec::ScratchArena`]) until a matching [`Self::residual_add`]
+    /// consumes it; [`Self::finish`] asserts no save is left dangling.
+    pub fn skip_save(&mut self) -> usize {
+        assert_eq!(self.rows, 1, "skip_save input must be a flat activation");
+        let slot = self.skip_live.iter().position(Option::is_none).unwrap_or_else(|| {
+            self.skip_live.push(None);
+            self.skip_elems.push(0);
+            self.skip_live.len() - 1
+        });
+        self.skip_live[slot] = Some(self.cols);
+        self.skip_elems[slot] = self.skip_elems[slot].max(self.cols);
+        let (rows, cols) = (self.rows, self.cols);
+        self.push(Op::SkipSave { slot }, rows, cols);
+        slot
+    }
+
+    /// Add skip slot `slot` back onto the current flat activation
+    /// (+ optional fused ReLU), consuming the slot. Fallible: a residual
+    /// branch whose main path changed shape (a checkpoint-derived geometry
+    /// bug) is a [`PlanError`], not a slice panic at run time.
+    pub fn residual_add(&mut self, slot: usize, relu: bool) -> Result<(), PlanError> {
+        assert_eq!(self.rows, 1, "residual_add input must be a flat activation");
+        let live = self
+            .skip_live
+            .get(slot)
+            .copied()
+            .flatten()
+            .ok_or_else(|| PlanError(format!("residual_add: skip slot {slot} has no live save")))?;
+        if live != self.cols {
+            return Err(PlanError(format!(
+                "residual_add: skip slot {slot} holds {live} features but the main path produced {}",
+                self.cols
+            )));
+        }
+        self.skip_live[slot] = None;
+        let (rows, cols) = (self.rows, self.cols);
+        self.push(Op::ResidualAdd { slot, relu }, rows, cols);
+        Ok(())
     }
 
     /// Splice a complete sub-plan (e.g. the FC head of a conv model) onto
@@ -357,9 +509,18 @@ impl PlanBuilder {
     pub fn append_plan(&mut self, plan: ExecPlan) {
         assert_eq!(self.rows, 1, "append_plan requires a flat activation");
         assert_eq!(plan.in_dim, self.cols, "sub-plan input dim mismatch");
-        for p in plan.ops {
+        // Re-number the sub-plan's skip slots past ours so the two plans'
+        // residual branches never alias one arena buffer.
+        let base = self.skip_elems.len();
+        for mut p in plan.ops {
+            match &mut p.op {
+                Op::SkipSave { slot } | Op::ResidualAdd { slot, .. } => *slot += base,
+                _ => {}
+            }
             self.ops.push(p);
         }
+        self.skip_elems.extend(plan.skip_elems_per_sample);
+        self.skip_live.resize(self.skip_elems.len(), None);
         self.rows = 1;
         self.cols = plan.out_dim;
         self.n_gathers += plan.n_gathers;
@@ -367,16 +528,22 @@ impl PlanBuilder {
     }
 
     /// Finish the plan. The final activation must be flat (one logical
-    /// feature row per sample).
+    /// feature row per sample) and every skip save must have been consumed
+    /// by a `residual_add` (slot lifetimes close within the plan).
     pub fn finish(self) -> ExecPlan {
         assert_eq!(self.rows, 1, "plan must end on a flat activation");
         assert!(!self.ops.is_empty(), "empty plan");
+        assert!(
+            self.skip_live.iter().all(Option::is_none),
+            "plan finished with a dangling skip save (residual branch never merged)"
+        );
         ExecPlan {
             ops: self.ops,
             in_dim: self.in_dim,
             out_dim: self.cols,
             n_gathers: self.n_gathers,
             macs_per_sample: self.macs,
+            skip_elems_per_sample: self.skip_elems,
         }
     }
 }

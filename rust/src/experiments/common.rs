@@ -43,7 +43,9 @@ pub fn make_datasets(model: ModelKind, n_train: usize, n_test: usize, seed: u64)
     let spec = match model {
         ModelKind::Lenet300 | ModelKind::DeepMnist => SynthSpec::mnist_like(),
         ModelKind::Cifar10 => SynthSpec::cifar_like(),
-        ModelKind::TinyAlexnet => SynthSpec::imagenet_like(16),
+        ModelKind::TinyAlexnet | ModelKind::Alexnet | ModelKind::TinyResnet => {
+            SynthSpec::imagenet_like(16)
+        }
     };
     let mut train = Dataset::from_synth(&SynthImages::generate(spec, n_train, seed, 0));
     let (mean, std) = train.normalize();

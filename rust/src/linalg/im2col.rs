@@ -265,6 +265,45 @@ pub fn maxpool_nchw(
     }
 }
 
+/// Stateless NCHW average-pool (global average pooling is the `k == h == w`
+/// special case, producing one value per channel). Each window accumulates
+/// taps in ascending `ky → kx` order starting from `+0.0`, then divides by
+/// `k·k` as an f32 (exactly representable for any practical window) — the
+/// trainable [`crate::nn::conv::AvgPool2d`] uses the identical accumulation
+/// order and divisor, so the value stream matches the trainer bit-for-bit.
+pub fn avgpool_nchw(
+    x: &[f32],
+    batch: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(x.len(), batch * c * h * w, "avgpool input shape");
+    assert!(k >= 1 && stride >= 1 && h >= k && w >= k, "avgpool geometry");
+    let (oh, ow) = ((h - k) / stride + 1, (w - k) / stride + 1);
+    let area = (k * k) as f32;
+    out.clear();
+    out.resize(batch * c * oh * ow, 0.0);
+    for bc in 0..batch * c {
+        let xp = &x[bc * h * w..(bc + 1) * h * w];
+        let yp = &mut out[bc * oh * ow..(bc + 1) * oh * ow];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0.0f32;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        acc += xp[(oy * stride + ky) * w + (ox * stride + kx)];
+                    }
+                }
+                yp[oy * ow + ox] = acc / area;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -343,6 +382,28 @@ mod tests {
         let mut out = Vec::new();
         rows_to_nchw(&rows, 1, 3, 2, 1, Some(&[2, 1, 0]), &mut out);
         assert_eq!(out, vec![2.0, 12.0, 1.0, 11.0, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn avgpool_matches_trainable_pool() {
+        use crate::nn::conv::AvgPool2d;
+        let mut rng = Xoshiro256pp::seed_from_u64(93);
+        let (batch, c, h, w) = (2, 3, 6, 6);
+        let x: Vec<f32> = (0..batch * c * h * w).map(|_| rng.next_f32() - 0.5).collect();
+        let mut ap = AvgPool2d::new(2, 2);
+        let want = ap.forward(&x, batch, c, h, w);
+        let mut got = Vec::new();
+        avgpool_nchw(&x, batch, c, h, w, 2, 2, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn avgpool_global_reduces_to_channel_means() {
+        // Global pooling (k == h == w, stride irrelevant) → one value/channel.
+        let x = [1.0f32, 3.0, 5.0, 7.0, /* ch1 */ 2.0, 2.0, 2.0, 2.0];
+        let mut got = Vec::new();
+        avgpool_nchw(&x, 1, 2, 2, 2, 2, 1, &mut got);
+        assert_eq!(got, vec![4.0, 2.0]);
     }
 
     #[test]

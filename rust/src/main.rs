@@ -92,24 +92,28 @@ COMMANDS
                  [--precision f32|int8|mixed] [--config FILE]
                  dump the compiled execution plan: one row per op with
                  per-sample shapes, activation-buffer bytes at --batch,
-                 MACs and storage; deep_mnist additionally dumps the
-                 compressed-conv (deep-mnist-lite) plan. --precision
-                 mixed quantizes masked layers to int8 and keeps dense
-                 layers f32 (per-layer mixed precision on one plan)
+                 MACs and storage; conv-family models (deep_mnist,
+                 alexnet, tinyresnet) additionally dump the
+                 compressed-conv plan + paper-scale compression
+                 accounting. --precision mixed quantizes masked
+                 layers/stages to int8 and keeps dense ones f32
+                 (per-layer mixed precision on one plan)
   profile        [--model M] [--nblocks K] [--seed S] [--batch N]
                  [--iters K] [--precision f32|int8|mixed] [--config FILE]
                  run the compiled plan under the per-op profiler: warm,
                  time --iters batched runs, print per-op calls / total /
                  mean / min / max ns, time share, GFLOP/s and GB/s, check
                  per-op totals attribute ≥ 90% of wall time, and merge
-                 the section into results/PROF_8.json; deep_mnist also
-                 profiles the compressed-conv deep-mnist-lite plan
+                 the section into results/PROF_8.json; conv-family
+                 models also profile their compressed-conv plan
   serve          [--port P] [--serve-mode event|blocking] [--steps N]
                  [--split dense:0.2,mpd:0.8] [--config FILE]
                  quick-train a masked LeNet, register dense + csr + mpd
                  (+ mpd-int8/dense-int8 unless quant.enabled=false;
                  + deep-mnist-mpd[-int8] conv variants unless
-                 conv.enabled=false), serve HTTP ([server] in TOML)
+                 conv.enabled=false; --model alexnet|tinyresnet also
+                 registers alexnet-mpd[-int8]|tinyresnet-mpd[-int8]),
+                 serve HTTP ([server] in TOML)
   loadgen        [--host H] [--port P] [--variant V]
                  [--mode closed|open|sweep] [--qps F] [--concurrency N]
                  [--requests N] [--seed S] [--qps-points F,F,…]
@@ -123,7 +127,7 @@ COMMANDS
   bench-table1   [--steps N] [--config FILE]
   bench-speedup  [--batch N] [--full]
 
-MODELS: lenet | deep_mnist | cifar10 | tiny_alexnet"
+MODELS: lenet | deep_mnist | cifar10 | tiny_alexnet | alexnet | tinyresnet"
     );
 }
 
@@ -485,8 +489,7 @@ fn load_mlp_params(
 /// `--batch`, MAC and storage accounting.
 fn cmd_plan(flags: &Flags) -> anyhow::Result<()> {
     use mpdc::compress::compressor::MpdCompressor;
-    use mpdc::compress::conv_model::PackedConvNet;
-    use mpdc::compress::{ConvCompressor, ConvModelPlan};
+    use mpdc::compress::ConvCompressor;
     use mpdc::exec::Precision;
     use mpdc::quant::{Calibration, QuantizedMlp};
 
@@ -536,30 +539,82 @@ fn cmd_plan(flags: &Flags) -> anyhow::Result<()> {
         exec.describe(batch)
     );
 
-    // The deep-mnist family also has the compressed-conv variant the server
-    // registers as deep-mnist-mpd: dump its plan alongside the FC one.
-    if cfg.model == ModelKind::DeepMnist {
-        let conv_comp = ConvCompressor::new(ConvModelPlan::deep_mnist_lite(cfg.nblocks), cfg.seed);
+    // Conv-family models (deep_mnist, alexnet, tinyresnet) also have the
+    // compressed-conv variant the server registers: dump its plan alongside
+    // the FC one, at the same precision.
+    if let Some(cplan) = cfg.model.conv_plan(cfg.nblocks) {
+        let conv_comp = ConvCompressor::new(cplan, cfg.seed);
         let params = conv_comp.random_masked_params(cfg.seed);
-        let conv_exec = match precision {
-            "int8" | "mixed" => {
-                let ccal = mpdc::quant::ConvCalibration::unit_range(
-                    conv_comp.plan.convs.len(),
-                    conv_comp.fc.nlayers(),
-                );
-                mpdc::quant::QuantizedConvNet::quantize(&conv_comp, &params, &ccal)
-                    .map_err(|e| anyhow::anyhow!(e))?
-                    .into_executor()
-            }
-            _ => PackedConvNet::build(&conv_comp, &params).into_executor(),
-        };
+        let conv_exec = build_conv_executor(&conv_comp, &params, precision)?;
         println!(
-            "== deep-mnist-lite (compressed conv) · {} blocks ==\n{}",
+            "== {} (compressed conv) · {} blocks ==\n{}",
+            conv_plan_label(cfg.model),
             cfg.nblocks,
             conv_exec.describe(batch)
         );
+        // Paper/report-scale accounting (structure only — the 224×224 AlexNet
+        // is never lowered or trained on this testbed): per-layer compression
+        // of the full-size conv stack + FC head.
+        if let Some(paper) = cfg.model.paper_conv_plan(cfg.nblocks) {
+            let report = ConvCompressor::new(paper, cfg.seed).report();
+            let mut t = Table::new(&["layer", "dense params", "kept", "compression"]);
+            for l in &report.layers {
+                t.row(&[
+                    l.name.clone(),
+                    l.dense_params.to_string(),
+                    l.kept_params.to_string(),
+                    format!("{:.2}×", l.compression),
+                ]);
+            }
+            println!(
+                "== {} (paper-scale accounting) ==\n{}overall: {} → {} params ({:.2}×)\n",
+                cfg.model.name(),
+                t.render(),
+                report.total_dense_params(),
+                report.total_kept_params(),
+                report.overall_compression()
+            );
+        }
     }
     Ok(())
+}
+
+/// Section label for a conv-family model's compressed-conv plan dump
+/// ("deep-mnist-lite" predates the alexnet/tinyresnet scenarios and is kept
+/// for `results/PROF_8.json` key stability). Labels must differ from the
+/// model's FC-plan name — both sections land in PROF_8.json under the same
+/// (precision, nblocks, batch), so a shared name would merge one entry away.
+fn conv_plan_label(model: ModelKind) -> &'static str {
+    match model {
+        ModelKind::DeepMnist => "deep-mnist-lite",
+        ModelKind::Alexnet => "alexnet-lite",
+        ModelKind::TinyResnet => "tinyresnet-conv",
+        _ => "conv",
+    }
+}
+
+/// Lower a compressed conv net at the requested CLI precision. "mixed" uses
+/// the mask-driven policy (masked stages → int8, dense stages → f32); both
+/// quantized paths calibrate with unit-range scales since plan *structure*
+/// is scale-independent.
+fn build_conv_executor(
+    conv_comp: &mpdc::compress::ConvCompressor,
+    params: &mpdc::compress::conv_model::ConvNetParams,
+    precision: &str,
+) -> anyhow::Result<mpdc::exec::Executor> {
+    use mpdc::compress::conv_model::PackedConvNet;
+    use mpdc::quant::{ConvCalibration, QuantizedConvNet};
+
+    let ccal = || ConvCalibration::unit_range(conv_comp.plan.convs.len(), conv_comp.fc.nlayers());
+    Ok(match precision {
+        "int8" => QuantizedConvNet::quantize(conv_comp, params, &ccal())
+            .map_err(|e| anyhow::anyhow!(e))?
+            .into_executor(),
+        "mixed" => QuantizedConvNet::quantize_mixed(conv_comp, params, &ccal())
+            .map_err(|e| anyhow::anyhow!(e))?
+            .into_executor(),
+        _ => PackedConvNet::build(conv_comp, params)?.into_executor(),
+    })
 }
 
 /// Run a compiled plan under the per-op profiler and report where the
@@ -573,8 +628,7 @@ fn cmd_plan(flags: &Flags) -> anyhow::Result<()> {
 /// section is merged into `results/PROF_8.json`.
 fn cmd_profile(flags: &Flags) -> anyhow::Result<()> {
     use mpdc::compress::compressor::MpdCompressor;
-    use mpdc::compress::conv_model::PackedConvNet;
-    use mpdc::compress::{ConvCompressor, ConvModelPlan};
+    use mpdc::compress::ConvCompressor;
     use mpdc::exec::{kernel_label, Precision, ScratchArena};
     use mpdc::mask::prng::Xoshiro256pp;
     use mpdc::quant::{Calibration, QuantizedMlp};
@@ -607,24 +661,14 @@ fn cmd_profile(flags: &Flags) -> anyhow::Result<()> {
     };
     let mut sections = vec![(cfg.model.name().to_string(), exec)];
 
-    // The server's deep-mnist-mpd variant runs the compressed-conv plan:
-    // profile it alongside the FC one, like `mpdc plan` dumps both.
-    if cfg.model == ModelKind::DeepMnist {
-        let conv_comp = ConvCompressor::new(ConvModelPlan::deep_mnist_lite(cfg.nblocks), cfg.seed);
+    // The server's conv-mpd variants (deep-mnist-mpd, alexnet-mpd,
+    // tinyresnet-mpd) run the compressed-conv plan: profile it alongside the
+    // FC one, like `mpdc plan` dumps both.
+    if let Some(cplan) = cfg.model.conv_plan(cfg.nblocks) {
+        let conv_comp = ConvCompressor::new(cplan, cfg.seed);
         let params = conv_comp.random_masked_params(cfg.seed);
-        let conv_exec = match precision {
-            "int8" | "mixed" => {
-                let ccal = mpdc::quant::ConvCalibration::unit_range(
-                    conv_comp.plan.convs.len(),
-                    conv_comp.fc.nlayers(),
-                );
-                mpdc::quant::QuantizedConvNet::quantize(&conv_comp, &params, &ccal)
-                    .map_err(|e| anyhow::anyhow!(e))?
-                    .into_executor()
-            }
-            _ => PackedConvNet::build(&conv_comp, &params).into_executor(),
-        };
-        sections.push(("deep-mnist-lite".to_string(), conv_exec));
+        let conv_exec = build_conv_executor(&conv_comp, &params, precision)?;
+        sections.push((conv_plan_label(cfg.model).to_string(), conv_exec));
     }
 
     let mut entries: Vec<Json> = Vec::new();
@@ -832,63 +876,92 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         router.register("dense-int8", h);
     }
 
-    // Compressed-conv variants ([conv] in TOML): quick-train the lite Deep
-    // MNIST conv net under in-training masking (conv2 filter matrix + both
-    // head FC layers carry MPD masks), lower it via im2col onto the packed
-    // block-diagonal engine, and register deep-mnist-mpd (+ its -int8 twin
-    // when [quant] is also enabled).
+    // Compressed-conv variants ([conv] in TOML): quick-train a conv net
+    // under in-training masking (masked filter matrices + head FC layers
+    // carry MPD masks), lower it via im2col onto the packed block-diagonal
+    // engine, and register its `<name>-mpd` variant (+ the `-int8` twin when
+    // [quant] is also enabled). deep-mnist-mpd is always registered;
+    // `--model alexnet` / `--model tinyresnet` additionally register their
+    // own strided/grouped (resp. residual + avg-pool) conv plans.
     if cfg.conv.enabled {
         use mpdc::compress::conv_model::ConvNetParams;
         use mpdc::compress::{ConvCompressor, ConvModelPlan};
         use mpdc::quant::{calibrate_conv, QuantizedConvNet};
         use mpdc::train::native_trainer::fit_native_conv;
 
-        anyhow::ensure!(cfg.nblocks <= 256, "deep-mnist-mpd supports ≤ 256 blocks");
-        mpdc::log_info!(
-            "serve",
-            "training Deep MNIST (lite) conv net natively ({} steps, {} blocks)…",
-            cfg.conv.steps,
-            cfg.nblocks
-        );
-        let conv_comp = ConvCompressor::new(ConvModelPlan::deep_mnist_lite(cfg.nblocks), cfg.seed);
-        let mut conv_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xC4);
-        let mut conv_net = conv_comp.build_net(&mut conv_rng);
-        let ctc = TrainConfig {
-            steps: cfg.conv.steps,
-            lr: 0.05,
-            log_every: (cfg.conv.steps / 4).max(1),
-            seed: cfg.seed,
-            ..Default::default()
-        };
-        fit_native_conv(&mut conv_net, &train, 32, &ctc);
-        let cparams = ConvNetParams::from_net(&conv_net);
-        let cr = conv_comp.report();
-        mpdc::log_info!(
-            "serve",
-            "deep-mnist-mpd: {:.2}× parameter compression ({} → {})",
-            cr.overall_compression(),
-            cr.total_dense_params(),
-            cr.total_kept_params()
-        );
-        let cpacked = conv_comp.build_engine(&cparams, &cfg.engine).map_err(|e| anyhow::anyhow!(e))?;
-        let (h, _wc1) = spawn(with_obs(PlanBackend::new(cpacked.into_executor())).with_max_batch(bc.max_batch).warmed(), bc);
-        router.register("deep-mnist-mpd", h);
-
-        if cfg.quant.enabled {
-            let nsamples = cfg.quant.calib_samples.min(train.len());
-            let ccalib = calibrate_conv(
-                &conv_comp,
-                &cparams,
-                &train.x[..nsamples * 784],
-                nsamples,
-                cfg.quant.calib_batch,
+        let mut register_conv = |router: &mut Router,
+                                 variant: &'static str,
+                                 cplan: ConvModelPlan,
+                                 data: &Dataset,
+                                 seed_salt: u64|
+         -> anyhow::Result<()> {
+            mpdc::log_info!(
+                "serve",
+                "training {variant} conv net natively ({} steps, {} blocks)…",
+                cfg.conv.steps,
+                cfg.nblocks
             );
-            let cq = QuantizedConvNet::quantize(&conv_comp, &cparams, &ccalib)
-                .map_err(|e| anyhow::anyhow!(e))?
-                .with_engine_config(&cfg.engine)
-                .map_err(|e| anyhow::anyhow!(e))?;
-            let (h, _wc2) = spawn(with_obs(PlanBackend::new(cq.into_executor())).with_max_batch(bc.max_batch).warmed(), bc);
-            router.register("deep-mnist-mpd-int8", h);
+            let conv_comp = ConvCompressor::new(cplan, cfg.seed);
+            let mut conv_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ seed_salt);
+            let mut conv_net = conv_comp.build_net(&mut conv_rng);
+            let ctc = TrainConfig {
+                steps: cfg.conv.steps,
+                lr: 0.05,
+                log_every: (cfg.conv.steps / 4).max(1),
+                seed: cfg.seed,
+                ..Default::default()
+            };
+            fit_native_conv(&mut conv_net, data, 32, &ctc);
+            let cparams = ConvNetParams::from_net(&conv_net);
+            let cr = conv_comp.report();
+            mpdc::log_info!(
+                "serve",
+                "{variant}: {:.2}× parameter compression ({} → {})",
+                cr.overall_compression(),
+                cr.total_dense_params(),
+                cr.total_kept_params()
+            );
+            let cpacked = conv_comp.build_engine(&cparams, &cfg.engine).map_err(|e| anyhow::anyhow!(e))?;
+            let (h, _wc) = spawn(with_obs(PlanBackend::new(cpacked.into_executor())).with_max_batch(bc.max_batch).warmed(), bc);
+            router.register(variant, h);
+
+            if cfg.quant.enabled {
+                let nsamples = cfg.quant.calib_samples.min(data.len());
+                let ccalib = calibrate_conv(
+                    &conv_comp,
+                    &cparams,
+                    &data.x[..nsamples * data.feature_dim],
+                    nsamples,
+                    cfg.quant.calib_batch,
+                );
+                let cq = QuantizedConvNet::quantize(&conv_comp, &cparams, &ccalib)
+                    .map_err(|e| anyhow::anyhow!(e))?
+                    .with_engine_config(&cfg.engine)
+                    .map_err(|e| anyhow::anyhow!(e))?;
+                let (h, _wcq) = spawn(with_obs(PlanBackend::new(cq.into_executor())).with_max_batch(bc.max_batch).warmed(), bc);
+                let name: &'static str = match variant {
+                    "deep-mnist-mpd" => "deep-mnist-mpd-int8",
+                    "alexnet-mpd" => "alexnet-mpd-int8",
+                    "tinyresnet-mpd" => "tinyresnet-mpd-int8",
+                    _ => unreachable!("unknown conv variant {variant}"),
+                };
+                router.register(name, h);
+            }
+            Ok(())
+        };
+
+        anyhow::ensure!(cfg.nblocks <= 256, "deep-mnist-mpd supports ≤ 256 blocks");
+        register_conv(&mut router, "deep-mnist-mpd", ConvModelPlan::deep_mnist_lite(cfg.nblocks), &train, 0xC4)?;
+
+        if let (Some(variant), Some(cplan)) = (cfg.model.conv_variant(), cfg.model.conv_plan(cfg.nblocks)) {
+            if variant != "deep-mnist-mpd" {
+                // conv-first models train on the ImageNet-like 3×32×32 synth
+                // set (16 classes), not the flat MNIST-like one
+                let mut ctrain =
+                    Dataset::from_synth(&SynthImages::generate(SynthSpec::imagenet_like(16), 600, cfg.seed, 2));
+                ctrain.normalize();
+                register_conv(&mut router, variant, cplan, &ctrain, 0xC7)?;
+            }
         }
     }
 

@@ -6,7 +6,7 @@
 //! inference-time re-blocking of eq. 2 — `W* = P_rowᵀ · W̄ · P_colᵀ` — and the
 //! consecutive-layer permutation fusion the paper mentions at the end of §2.
 
-use crate::mask::blockdiag::{pack_blocks, BlockDiagLayout};
+use crate::mask::blockdiag::{pack_blocks, partition, BlockDiagLayout, Span};
 use crate::mask::perm::Permutation;
 use crate::mask::prng::Xoshiro256pp;
 
@@ -41,6 +41,73 @@ impl MpdMask {
             layout: BlockDiagLayout::new(rows, cols, nblocks),
             p_row: Permutation::identity(rows),
             p_col: Permutation::identity(cols),
+        }
+    }
+
+    /// Compose per-group MPD masks into one mask over the full filter matrix
+    /// of a `groups`-grouped conv. Group `g` owns the contiguous row span
+    /// `[g·rows/groups, (g+1)·rows/groups)` and column span
+    /// `[g·cols/groups, (g+1)·cols/groups)` (patch columns of a group's
+    /// input channels are contiguous — see `linalg::im2col`); within its
+    /// spans each group gets an independent `nblocks`-block MPD mask, so the
+    /// composed mask is a `groups·nblocks`-block layout whose permutations
+    /// never cross a group boundary. Masked density is `1/nblocks` of the
+    /// grouped conv's *live* weights (`1/(groups·nblocks)` of the full
+    /// filter matrix).
+    pub fn grouped(
+        rows: usize,
+        cols: usize,
+        groups: usize,
+        nblocks: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> Self {
+        Self::grouped_with(rows, cols, groups, nblocks, |n| Permutation::random(n, rng))
+    }
+
+    /// [`Self::grouped`] with identity permutations — the lowering structure
+    /// of a *dense* grouped conv (`nblocks = 1` per group ⇒ `groups` blocks)
+    /// and the §3.1-ablation variant of a masked one.
+    pub fn grouped_non_permuted(rows: usize, cols: usize, groups: usize, nblocks: usize) -> Self {
+        Self::grouped_with(rows, cols, groups, nblocks, Permutation::identity)
+    }
+
+    fn grouped_with(
+        rows: usize,
+        cols: usize,
+        groups: usize,
+        nblocks: usize,
+        mut perm: impl FnMut(usize) -> Permutation,
+    ) -> Self {
+        assert!(groups >= 1, "need at least one group");
+        assert!(
+            rows % groups == 0 && cols % groups == 0,
+            "groups {groups} must divide filter matrix {rows}×{cols}"
+        );
+        let (rg, cg) = (rows / groups, cols / groups);
+        let mut row_spans = Vec::with_capacity(groups * nblocks);
+        let mut col_spans = Vec::with_capacity(groups * nblocks);
+        let mut row_map = vec![0u32; rows];
+        let mut col_map = vec![0u32; cols];
+        for g in 0..groups {
+            for s in partition(rg, nblocks) {
+                row_spans.push(Span { start: g * rg + s.start, len: s.len });
+            }
+            for s in partition(cg, nblocks) {
+                col_spans.push(Span { start: g * cg + s.start, len: s.len });
+            }
+            let pr = perm(rg);
+            let pc = perm(cg);
+            for i in 0..rg {
+                row_map[g * rg + i] = (g * rg + pr.dest(i)) as u32;
+            }
+            for i in 0..cg {
+                col_map[g * cg + i] = (g * cg + pc.dest(i)) as u32;
+            }
+        }
+        Self {
+            layout: BlockDiagLayout::from_spans(rows, cols, row_spans, col_spans),
+            p_row: Permutation::from_map(row_map).expect("per-group perms compose to a bijection"),
+            p_col: Permutation::from_map(col_map).expect("per-group perms compose to a bijection"),
         }
     }
 
@@ -282,6 +349,48 @@ mod tests {
         // near-uniform spread: essentially no never-covered cells
         assert!(stats.never_covered < 0.001, "never covered {}", stats.never_covered);
         assert!(stats.max < 30.0, "suspicious hot spot {}", stats.max);
+    }
+
+    #[test]
+    fn grouped_mask_confines_to_groups() {
+        let mut r = rng(8);
+        let m = MpdMask::grouped(8, 12, 2, 2, &mut r);
+        assert_eq!(m.nblocks(), 4);
+        let d = m.to_dense();
+        // no surviving entry crosses a group boundary
+        for row in 0..8 {
+            for col in 0..12 {
+                if d[row * 12 + col] == 1.0 {
+                    assert_eq!(row / 4, col / 6, "mask crosses group boundary at ({row},{col})");
+                }
+            }
+        }
+        // density 1/(groups·nblocks) of the full matrix
+        assert_eq!(m.nnz(), 8 * 12 / (2 * 2));
+        // the eq.-2 invariant survives composition
+        let w: Vec<f32> = (0..96).map(|i| (i as f32 * 0.7).sin()).collect();
+        let star = m.unpermute(&m.apply(&w));
+        assert_eq!(off_block_mass(&star, &m.layout), 0.0);
+        // groups = 1 degenerates to the plain generator
+        let mut r1 = rng(9);
+        let mut r2 = rng(9);
+        let a = MpdMask::grouped(10, 15, 1, 5, &mut r1);
+        let b = MpdMask::generate(10, 15, 5, &mut r2);
+        assert_eq!(a.to_dense(), b.to_dense());
+    }
+
+    #[test]
+    fn grouped_non_permuted_single_block_is_group_structure() {
+        // nblocks = 1 per group ⇒ the block-diagonal structure of a dense
+        // grouped conv's filter matrix.
+        let m = MpdMask::grouped_non_permuted(4, 6, 2, 1);
+        assert!(m.p_row.is_identity() && m.p_col.is_identity());
+        let d = m.to_dense();
+        for row in 0..4 {
+            for col in 0..6 {
+                assert_eq!(d[row * 6 + col] == 1.0, row / 2 == col / 3, "({row},{col})");
+            }
+        }
     }
 
     #[test]

@@ -35,6 +35,13 @@ pub struct Conv2d {
     pub kw: usize,
     pub stride: usize,
     pub pad: usize,
+    /// Channel groups (AlexNet-style): group `g` convolves input channels
+    /// `[g·in_c/groups, (g+1)·in_c/groups)` into output channels
+    /// `[g·out_c/groups, (g+1)·out_c/groups)`. Storage stays the full
+    /// `(out_c × in_c·kh·kw)` filter matrix with off-group weights pinned at
+    /// `0.0` (init zero, never touched by backward), which is exactly the
+    /// block-diagonal filter matrix the packed lowering consumes.
+    pub groups: usize,
     /// Optional MPD mask over the `(out_c × in_c·kh·kw)` filter matrix.
     pub mask: Option<MpdMask>,
     x_cache: Vec<f32>,
@@ -46,8 +53,40 @@ pub struct Conv2d {
 
 impl Conv2d {
     pub fn new(out_c: usize, in_c: usize, k: usize, stride: usize, pad: usize, rng: &mut Xoshiro256pp) -> Self {
+        Self::new_grouped(out_c, in_c, k, stride, pad, 1, rng)
+    }
+
+    /// Grouped constructor. `out_c` and `in_c` must both divide by `groups`.
+    /// He-init uses the *per-group* fan-in (`in_c/groups·k²`), scattered into
+    /// the full filter matrix so off-group entries are exactly `0.0`.
+    pub fn new_grouped(
+        out_c: usize,
+        in_c: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> Self {
+        assert!(groups >= 1 && out_c % groups == 0 && in_c % groups == 0, "conv groups must divide channels");
+        let (icg, ocg) = (in_c / groups, out_c / groups);
+        let w = if groups == 1 {
+            he_init(out_c, in_c * k * k, rng)
+        } else {
+            let dense = he_init(out_c, icg * k * k, rng);
+            let mut w = vec![0.0f32; out_c * in_c * k * k];
+            for oc in 0..out_c {
+                let g = oc / ocg;
+                for ic in 0..icg {
+                    let src = &dense[(oc * icg + ic) * k * k..][..k * k];
+                    let dst = &mut w[(oc * in_c + g * icg + ic) * k * k..][..k * k];
+                    dst.copy_from_slice(src);
+                }
+            }
+            w
+        };
         Self {
-            w: he_init(out_c, in_c * k * k, rng),
+            w,
             b: vec![0.0; out_c],
             out_c,
             in_c,
@@ -55,6 +94,7 @@ impl Conv2d {
             kw: k,
             stride,
             pad,
+            groups,
             mask: None,
             x_cache: Vec::new(),
             in_hw: (0, 0),
@@ -88,17 +128,22 @@ impl Conv2d {
         self.in_hw = (h, w);
         self.batch_cache = batch;
         let (oh, ow) = self.out_hw(h, w);
+        let (icg, ocg) = (self.in_c / self.groups, self.out_c / self.groups);
         let mut y = vec![0.0f32; batch * self.out_c * oh * ow];
         for bi in 0..batch {
             for oc in 0..self.out_c {
                 let bias = self.b[oc];
+                // Only this output channel's group of input channels; the
+                // skipped taps carry exactly-zero weights, so the restricted
+                // loop is bit-identical to summing the full filter row.
+                let ic0 = (oc / ocg) * icg;
                 for oy in 0..oh {
                     for ox in 0..ow {
                         // Products first, bias last — the packed engine's
                         // epilogue association, so the im2col lowering can be
                         // bit-identical to this loop.
                         let mut acc = 0.0f32;
-                        for ic in 0..self.in_c {
+                        for ic in ic0..ic0 + icg {
                             for ky in 0..self.kh {
                                 let iy = oy * self.stride + ky;
                                 if iy < self.pad || iy - self.pad >= h {
@@ -130,9 +175,13 @@ impl Conv2d {
         let batch = self.batch_cache;
         let (oh, ow) = self.out_hw(h, w);
         assert_eq!(dy.len(), batch * self.out_c * oh * ow);
+        let (icg, ocg) = (self.in_c / self.groups, self.out_c / self.groups);
         let mut dx = vec![0.0f32; batch * self.in_c * h * w];
         for bi in 0..batch {
             for oc in 0..self.out_c {
+                // Off-group weights never receive gradient, so they stay at
+                // their exact-zero init across training.
+                let ic0 = (oc / ocg) * icg;
                 for oy in 0..oh {
                     for ox in 0..ow {
                         let g = dy[((bi * self.out_c + oc) * oh + oy) * ow + ox];
@@ -140,7 +189,7 @@ impl Conv2d {
                             continue;
                         }
                         self.db[oc] += g;
-                        for ic in 0..self.in_c {
+                        for ic in ic0..ic0 + icg {
                             for ky in 0..self.kh {
                                 let iy = oy * self.stride + ky;
                                 if iy < self.pad || iy - self.pad >= h {
@@ -187,8 +236,11 @@ impl Conv2d {
         self.db.iter_mut().for_each(|v| *v = 0.0);
     }
 
+    /// Logical parameter count: a grouped conv stores the full filter matrix
+    /// but only `out_c·(in_c/groups)·k²` weights are live — the dense
+    /// baseline a compression ratio is measured against.
     pub fn param_count(&self) -> usize {
-        self.w.len() + self.b.len()
+        self.out_c * (self.in_c / self.groups) * self.kh * self.kw + self.b.len()
     }
 
     /// Surviving parameter count after masking (weights on the mask + biases).
@@ -255,6 +307,75 @@ impl MaxPool2d {
         let mut dx = vec![0.0f32; batch * c * h * w];
         for (oi, &ii) in self.argmax.iter().enumerate() {
             dx[ii] += dy[oi];
+        }
+        dx
+    }
+}
+
+/// Average pooling, NCHW. Global average pooling is the `k == h == w` case
+/// (one value per channel) — the ResNet-style head reducer.
+///
+/// **Exactness contract:** each window accumulates taps in ascending
+/// `ky → kx` order from `+0.0`, then divides by `(k·k)` as an f32 — the
+/// identical association `linalg::im2col::avgpool_nchw` uses, so the lowered
+/// inference pool is bit-identical to this trainer pool.
+pub struct AvgPool2d {
+    pub k: usize,
+    pub stride: usize,
+    in_shape: (usize, usize, usize, usize),
+}
+
+impl AvgPool2d {
+    pub fn new(k: usize, stride: usize) -> Self {
+        Self { k, stride, in_shape: (0, 0, 0, 0) }
+    }
+
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        ((h - self.k) / self.stride + 1, (w - self.k) / self.stride + 1)
+    }
+
+    pub fn forward(&mut self, x: &[f32], batch: usize, c: usize, h: usize, w: usize) -> Vec<f32> {
+        assert_eq!(x.len(), batch * c * h * w);
+        self.in_shape = (batch, c, h, w);
+        let (oh, ow) = self.out_hw(h, w);
+        let area = (self.k * self.k) as f32;
+        let mut y = vec![0.0f32; batch * c * oh * ow];
+        for bc in 0..batch * c {
+            let xp = &x[bc * h * w..(bc + 1) * h * w];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ky in 0..self.k {
+                        for kx in 0..self.k {
+                            acc += xp[(oy * self.stride + ky) * w + (ox * self.stride + kx)];
+                        }
+                    }
+                    y[(bc * oh + oy) * ow + ox] = acc / area;
+                }
+            }
+        }
+        y
+    }
+
+    /// Mean is linear: every tap of a window receives `dy / k²`.
+    pub fn backward(&self, dy: &[f32]) -> Vec<f32> {
+        let (batch, c, h, w) = self.in_shape;
+        let (oh, ow) = self.out_hw(h, w);
+        assert_eq!(dy.len(), batch * c * oh * ow);
+        let area = (self.k * self.k) as f32;
+        let mut dx = vec![0.0f32; batch * c * h * w];
+        for bc in 0..batch * c {
+            let dxp = &mut dx[bc * h * w..(bc + 1) * h * w];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let g = dy[(bc * oh + oy) * ow + ox] / area;
+                    for ky in 0..self.k {
+                        for kx in 0..self.k {
+                            dxp[(oy * self.stride + ky) * w + (ox * self.stride + kx)] += g;
+                        }
+                    }
+                }
+            }
         }
         dx
     }
@@ -356,6 +477,98 @@ mod tests {
             }
         }
         assert_eq!(conv.effective_param_count(), conv.mask.as_ref().unwrap().nnz() + 4);
+    }
+
+    #[test]
+    fn grouped_conv_structure_and_gradcheck() {
+        let mut r = rng(7);
+        // 4 out, 4 in, 2 groups: group 0 = out{0,1}×in{0,1}, group 1 = out{2,3}×in{2,3}
+        let mut conv = Conv2d::new_grouped(4, 4, 3, 1, 1, 2, &mut r);
+        let kk = 9;
+        for oc in 0..4 {
+            for ic in 0..4 {
+                let on_group = (oc / 2) == (ic / 2);
+                let blk = &conv.w[(oc * 4 + ic) * kk..][..kk];
+                if on_group {
+                    assert!(blk.iter().any(|&v| v != 0.0), "on-group block ({oc},{ic}) all zero");
+                } else {
+                    assert!(blk.iter().all(|&v| v == 0.0), "off-group block ({oc},{ic}) leaked");
+                }
+            }
+        }
+        assert_eq!(conv.param_count(), 4 * 2 * 9 + 4);
+        let x: Vec<f32> = (0..4 * 4 * 4).map(|i| (i as f32 * 0.19).sin()).collect();
+        let loss_of = |conv: &mut Conv2d, x: &[f32]| -> f32 {
+            let y = conv.forward(x, 1, 4, 4);
+            y.iter().map(|v| v * v).sum::<f32>() * 0.5
+        };
+        let y = conv.forward(&x, 1, 4, 4);
+        conv.zero_grad();
+        conv.backward(&y);
+        let eps = 1e-3f32;
+        // an on-group weight: numeric gradient matches
+        let idx = (2usize * 4 + 3) * kk + 4; // oc=2, ic=3 → on-group (both group 1)
+        let orig = conv.w[idx];
+        conv.w[idx] = orig + eps;
+        let lp = loss_of(&mut conv, &x);
+        conv.w[idx] = orig - eps;
+        let lm = loss_of(&mut conv, &x);
+        conv.w[idx] = orig;
+        let num = (lp - lm) / (2.0 * eps);
+        assert!((conv.dw[idx] - num).abs() < 2e-2, "dw[{idx}] {} vs {num}", conv.dw[idx]);
+        // off-group weights never accumulate gradient and survive sgd at zero
+        let off = (0usize * 4 + 3) * kk + 1; // oc=0, ic=3 → off-group
+        assert_eq!(conv.dw[off], 0.0);
+        conv.sgd_step(0.05);
+        assert_eq!(conv.w[off], 0.0);
+    }
+
+    #[test]
+    fn grouped_conv_matches_per_group_dense_convs() {
+        // A g=2 conv equals two independent dense convs over channel halves.
+        let mut r = rng(8);
+        let conv_g = Conv2d::new_grouped(4, 2, 3, 2, 1, 2, &mut r);
+        let x: Vec<f32> = (0..2 * 5 * 5).map(|i| (i as f32 * 0.31).cos()).collect();
+        let mut halves = Vec::new();
+        for g in 0..2 {
+            let mut sub = Conv2d::new(2, 1, 3, 2, 1, &mut r);
+            for oc in 0..2 {
+                let src = &conv_g.w[((g * 2 + oc) * 2 + g) * 9..][..9];
+                sub.w[oc * 9..(oc + 1) * 9].copy_from_slice(src);
+                sub.b[oc] = conv_g.b[g * 2 + oc];
+            }
+            let xg = &x[g * 25..(g + 1) * 25];
+            halves.push(sub.forward(xg, 1, 5, 5));
+        }
+        let mut conv_g = conv_g;
+        let y = conv_g.forward(&x, 1, 5, 5);
+        let want: Vec<f32> = halves.concat();
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn avgpool_forward_backward() {
+        let mut ap = AvgPool2d::new(2, 2);
+        #[rustfmt::skip]
+        let x = vec![
+            1.0, 2.0, 5.0, 6.0,
+            3.0, 4.0, 7.0, 8.0,
+            0.0, 0.0, 4.0, 0.0,
+            0.0, 8.0, 0.0, 0.0,
+        ];
+        let y = ap.forward(&x, 1, 1, 4, 4);
+        assert_eq!(y, vec![2.5, 6.5, 2.0, 1.0]);
+        let dx = ap.backward(&[4.0, 4.0, 4.0, 4.0]);
+        // every tap of each window gets dy/4
+        assert!(dx.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn avgpool_global_is_channel_mean() {
+        let mut ap = AvgPool2d::new(3, 1);
+        let x: Vec<f32> = (0..18).map(|i| i as f32).collect(); // 2 ch × 3×3
+        let y = ap.forward(&x, 1, 2, 3, 3);
+        assert_eq!(y, vec![4.0, 13.0]);
     }
 
     #[test]

@@ -15,31 +15,149 @@
 use crate::mask::mask::MpdMask;
 use crate::mask::prng::Xoshiro256pp;
 use crate::nn::checkpoint::NamedTensor;
-use crate::nn::conv::{Conv2d, MaxPool2d};
+use crate::nn::conv::{AvgPool2d, Conv2d, MaxPool2d};
 use crate::nn::layer::{accuracy, softmax_xent, Linear, Relu};
 
-/// One conv stage of a [`ConvNetSpec`]: a square-kernel convolution plus an
-/// optional max-pool (`pool_k == 0` disables pooling).
+/// Which pooling (if any) follows a conv stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    None,
+    Max,
+    Avg,
+    /// Global average pooling: one value per channel (`k` is derived from
+    /// the stage's output spatial size, which must be square).
+    GlobalAvg,
+}
+
+/// One conv stage of a [`ConvNetSpec`]: a square-kernel (optionally grouped)
+/// convolution, an optional residual save/add, an optional ReLU, and an
+/// optional pool.
+///
+/// Stage semantics (the order the compressed lowering reproduces op-for-op):
+///
+/// 1. if `save_skip`: snapshot the stage *input* as the residual branch
+/// 2. convolve (`groups`-grouped, strided, padded)
+/// 3. if `add_skip`: add the pending snapshot elementwise
+/// 4. if `relu`: ReLU
+/// 5. pool per `pool_kind`
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ConvStageSpec {
     pub out_c: usize,
     pub k: usize,
     pub stride: usize,
     pub pad: usize,
+    /// AlexNet-style channel groups (must divide both in/out channels).
+    pub groups: usize,
+    /// ReLU after the conv (and after the residual add, when present).
+    pub relu: bool,
+    /// Snapshot this stage's input as the pending residual branch.
+    pub save_skip: bool,
+    /// Add the pending snapshot to this stage's conv output.
+    pub add_skip: bool,
+    pub pool_kind: PoolKind,
     pub pool_k: usize,
     pub pool_stride: usize,
 }
 
 impl ConvStageSpec {
     /// `k×k` stride-1 conv with `pad = k/2` followed by a `p×p` stride-`p`
-    /// pool. Output-preserving ("same") for odd `k`; even kernels grow the
-    /// output by one — construct the struct directly for other geometries.
+    /// max-pool (`pool == 0` disables pooling). Output-preserving ("same")
+    /// for odd `k`; even kernels grow the output by one — use the builder
+    /// methods / struct literal for other geometries.
     pub fn same(out_c: usize, k: usize, pool: usize) -> Self {
-        Self { out_c, k, stride: 1, pad: k / 2, pool_k: pool, pool_stride: pool }
+        Self {
+            out_c,
+            k,
+            stride: 1,
+            pad: k / 2,
+            groups: 1,
+            relu: true,
+            save_skip: false,
+            add_skip: false,
+            pool_kind: if pool > 0 { PoolKind::Max } else { PoolKind::None },
+            pool_k: pool,
+            pool_stride: pool,
+        }
+    }
+
+    /// A bare conv stage (stride/pad explicit, no pool).
+    pub fn plain(out_c: usize, k: usize, stride: usize, pad: usize) -> Self {
+        Self {
+            out_c,
+            k,
+            stride,
+            pad,
+            groups: 1,
+            relu: true,
+            save_skip: false,
+            add_skip: false,
+            pool_kind: PoolKind::None,
+            pool_k: 0,
+            pool_stride: 0,
+        }
+    }
+
+    pub fn grouped(mut self, groups: usize) -> Self {
+        self.groups = groups;
+        self
+    }
+
+    pub fn no_relu(mut self) -> Self {
+        self.relu = false;
+        self
+    }
+
+    pub fn saving_skip(mut self) -> Self {
+        self.save_skip = true;
+        self
+    }
+
+    pub fn adding_skip(mut self) -> Self {
+        self.add_skip = true;
+        self
+    }
+
+    pub fn max_pool(mut self, k: usize, stride: usize) -> Self {
+        self.pool_kind = PoolKind::Max;
+        self.pool_k = k;
+        self.pool_stride = stride;
+        self
+    }
+
+    pub fn avg_pool(mut self, k: usize, stride: usize) -> Self {
+        self.pool_kind = PoolKind::Avg;
+        self.pool_k = k;
+        self.pool_stride = stride;
+        self
+    }
+
+    /// Global average pooling: `k` is derived from the stage output size.
+    pub fn global_avg_pool(mut self) -> Self {
+        self.pool_kind = PoolKind::GlobalAvg;
+        self.pool_k = 0;
+        self.pool_stride = 1;
+        self
     }
 
     pub fn has_pool(&self) -> bool {
-        self.pool_k > 0
+        self.pool_kind != PoolKind::None
+    }
+
+    /// Conv-output spatial dims before pooling.
+    pub fn conv_out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        ((h + 2 * self.pad - self.k) / self.stride + 1, (w + 2 * self.pad - self.k) / self.stride + 1)
+    }
+
+    /// Spatial dims after the stage's pool (identity for `PoolKind::None`).
+    pub fn pooled_hw(&self, oh: usize, ow: usize) -> (usize, usize) {
+        match self.pool_kind {
+            PoolKind::None => (oh, ow),
+            PoolKind::Max | PoolKind::Avg => (
+                (oh - self.pool_k) / self.pool_stride + 1,
+                (ow - self.pool_k) / self.pool_stride + 1,
+            ),
+            PoolKind::GlobalAvg => (1, 1),
+        }
     }
 }
 
@@ -62,13 +180,11 @@ impl ConvNetSpec {
         let mut shapes = Vec::with_capacity(self.convs.len() + 1);
         for s in &self.convs {
             shapes.push((c, h, w));
-            h = (h + 2 * s.pad - s.k) / s.stride + 1;
-            w = (w + 2 * s.pad - s.k) / s.stride + 1;
+            let (oh, ow) = s.conv_out_hw(h, w);
+            let (ph, pw) = s.pooled_hw(oh, ow);
             c = s.out_c;
-            if s.has_pool() {
-                h = (h - s.pool_k) / s.pool_stride + 1;
-                w = (w - s.pool_k) / s.pool_stride + 1;
-            }
+            h = ph;
+            w = pw;
         }
         shapes.push((c, h, w));
         shapes
@@ -94,26 +210,67 @@ impl ConvNetSpec {
             return Err("convnet head needs at least [in, out] dims".into());
         }
         let (mut c, mut h, mut w) = self.input;
+        // Pending residual snapshot shape (set by save_skip, cleared by
+        // add_skip) — the add must see the exact saved (c, h, w).
+        let mut pending: Option<(usize, usize, usize)> = None;
         for (i, s) in self.convs.iter().enumerate() {
             if s.out_c == 0 || s.k == 0 || s.stride == 0 {
                 return Err(format!("conv stage {i}: zero dimension"));
             }
+            if s.groups == 0 || c % s.groups != 0 || s.out_c % s.groups != 0 {
+                return Err(format!(
+                    "conv stage {i}: groups {} must divide in channels {c} and out channels {}",
+                    s.groups, s.out_c
+                ));
+            }
             if h + 2 * s.pad < s.k || w + 2 * s.pad < s.k {
                 return Err(format!("conv stage {i}: kernel {} does not fit {h}×{w} (pad {})", s.k, s.pad));
             }
-            h = (h + 2 * s.pad - s.k) / s.stride + 1;
-            w = (w + 2 * s.pad - s.k) / s.stride + 1;
-            c = s.out_c;
-            if s.has_pool() {
-                if s.pool_stride == 0 {
-                    return Err(format!("conv stage {i}: zero pool stride"));
+            if s.save_skip {
+                if pending.is_some() {
+                    return Err(format!("conv stage {i}: save_skip while a skip is already pending"));
                 }
-                if h < s.pool_k || w < s.pool_k {
-                    return Err(format!("conv stage {i}: pool {} does not fit {h}×{w}", s.pool_k));
-                }
-                h = (h - s.pool_k) / s.pool_stride + 1;
-                w = (w - s.pool_k) / s.pool_stride + 1;
+                pending = Some((c, h, w));
             }
+            let (oh, ow) = s.conv_out_hw(h, w);
+            if s.add_skip {
+                match pending.take() {
+                    None => return Err(format!("conv stage {i}: add_skip with no pending skip")),
+                    Some(saved) if saved != (s.out_c, oh, ow) => {
+                        return Err(format!(
+                            "conv stage {i}: residual shapes differ: saved {:?} vs conv output {:?}",
+                            saved,
+                            (s.out_c, oh, ow)
+                        ))
+                    }
+                    Some(_) => {}
+                }
+            }
+            c = s.out_c;
+            h = oh;
+            w = ow;
+            match s.pool_kind {
+                PoolKind::None => {}
+                PoolKind::Max | PoolKind::Avg => {
+                    if s.pool_k == 0 || s.pool_stride == 0 {
+                        return Err(format!("conv stage {i}: zero pool size/stride"));
+                    }
+                    if h < s.pool_k || w < s.pool_k {
+                        return Err(format!("conv stage {i}: pool {} does not fit {h}×{w}", s.pool_k));
+                    }
+                }
+                PoolKind::GlobalAvg => {
+                    if h != w {
+                        return Err(format!("conv stage {i}: global avg pool needs square input, got {h}×{w}"));
+                    }
+                }
+            }
+            let (ph, pw) = s.pooled_hw(h, w);
+            h = ph;
+            w = pw;
+        }
+        if pending.is_some() {
+            return Err("convnet: dangling save_skip (no stage adds it back)".into());
         }
         if self.fc_dims[0] != c * h * w {
             return Err(format!(
@@ -126,12 +283,18 @@ impl ConvNetSpec {
     }
 }
 
+/// The pool layer a stage instantiated from its [`PoolKind`].
+enum PoolLayer {
+    Max(MaxPool2d),
+    Avg(AvgPool2d),
+}
+
 /// A trainable conv net: conv stages + FC head, NCHW activations flattened
 /// row-major between the two.
 pub struct ConvNet {
     pub spec: ConvNetSpec,
     pub convs: Vec<Conv2d>,
-    pools: Vec<Option<MaxPool2d>>,
+    pools: Vec<Option<PoolLayer>>,
     conv_relus: Vec<Relu>,
     pub fcs: Vec<Linear>,
     fc_relus: Vec<Relu>,
@@ -147,12 +310,25 @@ impl ConvNet {
             .convs
             .iter()
             .zip(&shapes)
-            .map(|(s, &(in_c, _, _))| Conv2d::new(s.out_c, in_c, s.k, s.stride, s.pad, rng))
+            .map(|(s, &(in_c, _, _))| {
+                Conv2d::new_grouped(s.out_c, in_c, s.k, s.stride, s.pad, s.groups, rng)
+            })
             .collect();
         let pools = spec
             .convs
             .iter()
-            .map(|s| s.has_pool().then(|| MaxPool2d::new(s.pool_k, s.pool_stride)))
+            .zip(&shapes)
+            .map(|(s, &(_, h, w))| {
+                let (oh, _ow) = s.conv_out_hw(h, w);
+                match s.pool_kind {
+                    PoolKind::None => None,
+                    PoolKind::Max => Some(PoolLayer::Max(MaxPool2d::new(s.pool_k, s.pool_stride))),
+                    PoolKind::Avg => Some(PoolLayer::Avg(AvgPool2d::new(s.pool_k, s.pool_stride))),
+                    // Global pooling is a full-window average over the
+                    // stage's (square) conv output.
+                    PoolKind::GlobalAvg => Some(PoolLayer::Avg(AvgPool2d::new(oh, 1))),
+                }
+            })
             .collect();
         let conv_relus = (0..spec.convs.len()).map(|_| Relu::new()).collect();
         let fcs = spec.fc_dims.windows(2).map(|d| Linear::new(d[1], d[0], rng)).collect::<Vec<_>>();
@@ -196,16 +372,34 @@ impl ConvNet {
     }
 
     /// Forward a batch of flattened NCHW inputs `[batch × in_dim]` → logits.
+    /// Stage order — snapshot, conv, residual add, ReLU, pool — matches the
+    /// compressed lowering op-for-op (see `compress::conv_model`).
     pub fn forward(&mut self, x: &[f32], batch: usize) -> Vec<f32> {
         assert_eq!(x.len(), batch * self.in_dim());
         let mut act = x.to_vec();
+        let mut skip: Option<Vec<f32>> = None;
         for i in 0..self.convs.len() {
+            let s = self.spec.convs[i];
             let (_, h, w) = self.shapes[i];
+            if s.save_skip {
+                skip = Some(act.clone());
+            }
             act = self.convs[i].forward(&act, batch, h, w);
-            act = self.conv_relus[i].forward(&act);
+            if s.add_skip {
+                let snap = skip.take().expect("validated: pending skip");
+                for (a, &b) in act.iter_mut().zip(&snap) {
+                    *a += b;
+                }
+            }
+            if s.relu {
+                act = self.conv_relus[i].forward(&act);
+            }
             if let Some(p) = &mut self.pools[i] {
                 let (oh, ow) = self.convs[i].out_hw(h, w);
-                act = p.forward(&act, batch, self.convs[i].out_c, oh, ow);
+                act = match p {
+                    PoolLayer::Max(mp) => mp.forward(&act, batch, self.convs[i].out_c, oh, ow),
+                    PoolLayer::Avg(ap) => ap.forward(&act, batch, self.convs[i].out_c, oh, ow),
+                };
             }
         }
         let n = self.fcs.len();
@@ -229,12 +423,33 @@ impl ConvNet {
                 grad = self.fc_relus[j - 1].backward(&grad);
             }
         }
+        // Reverse walk: pool → ReLU → (branch split at add) → conv → (branch
+        // merge at save). The add is linear, so its gradient copies to both
+        // the conv branch and the snapshot branch; the snapshot was the
+        // saving stage's *input*, so its gradient joins after that stage's
+        // conv backward.
+        let mut skip_grad: Option<Vec<f32>> = None;
         for i in (0..self.convs.len()).rev() {
+            let s = self.spec.convs[i];
             if let Some(p) = &self.pools[i] {
-                grad = p.backward(&grad);
+                grad = match p {
+                    PoolLayer::Max(mp) => mp.backward(&grad),
+                    PoolLayer::Avg(ap) => ap.backward(&grad),
+                };
             }
-            grad = self.conv_relus[i].backward(&grad);
+            if s.relu {
+                grad = self.conv_relus[i].backward(&grad);
+            }
+            if s.add_skip {
+                skip_grad = Some(grad.clone());
+            }
             grad = self.convs[i].backward(&grad);
+            if s.save_skip {
+                let sg = skip_grad.take().expect("validated: pending skip grad");
+                for (g, &b) in grad.iter_mut().zip(&sg) {
+                    *g += b;
+                }
+            }
         }
         for c in &mut self.convs {
             c.sgd_step(lr);
@@ -393,6 +608,104 @@ mod tests {
         }
         assert!(last < first * 0.6, "loss {first} → {last} did not drop");
         assert!(net.evaluate(&x, &y, n) > 0.8);
+    }
+
+    fn res_spec() -> ConvNetSpec {
+        // conv0 → residual block (save → conv → conv+add) → global avg → fc
+        ConvNetSpec {
+            input: (1, 8, 8),
+            convs: vec![
+                ConvStageSpec::same(6, 3, 0),
+                ConvStageSpec::plain(6, 3, 1, 1).saving_skip(),
+                ConvStageSpec::plain(6, 3, 1, 1).adding_skip().global_avg_pool(),
+            ],
+            fc_dims: vec![6, 3],
+        }
+    }
+
+    #[test]
+    fn residual_spec_shapes_and_validation() {
+        let spec = res_spec();
+        spec.validate().unwrap();
+        assert_eq!(spec.stage_shapes(), vec![(1, 8, 8), (6, 8, 8), (6, 8, 8), (6, 1, 1)]);
+        assert_eq!(spec.conv_out_dim(), 6);
+
+        let mut bad = res_spec();
+        bad.convs[2].add_skip = false; // dangling save
+        bad.fc_dims[0] = 6;
+        assert!(bad.validate().unwrap_err().contains("dangling"));
+        let mut bad = res_spec();
+        bad.convs[1].save_skip = false; // add without save
+        assert!(bad.validate().unwrap_err().contains("no pending skip"));
+        let mut bad = res_spec();
+        bad.convs[2].out_c = 4; // residual shape mismatch
+        assert!(bad.validate().unwrap_err().contains("residual shapes differ"));
+        let mut bad = res_spec();
+        bad.convs[1].groups = 4; // 4 does not divide 6
+        assert!(bad.validate().unwrap_err().contains("groups"));
+        let mut bad = res_spec();
+        bad.convs[2].pool_kind = PoolKind::GlobalAvg; // still fine: square
+        bad.convs[0] = ConvStageSpec { pad: 0, ..ConvStageSpec::same(6, 2, 0) };
+        // 8×8 k2 pad0 → 7×7; residual stages keep 7×7 (square) — still valid
+        bad.fc_dims[0] = 6;
+        assert!(bad.validate().is_ok());
+    }
+
+    #[test]
+    fn residual_forward_matches_manual_composition() {
+        // Pin the stage semantics (save → conv → add → ReLU → global avg)
+        // bit-for-bit against a hand-composed forward over the same weights.
+        let mut rng = Xoshiro256pp::seed_from_u64(14);
+        let mut net = ConvNet::new(res_spec(), &mut rng);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * 64).map(|i| (i as f32 * 0.13).sin()).collect();
+        let logits = net.forward(&x, batch);
+
+        let mut manual_convs: Vec<Conv2d> = net
+            .spec
+            .convs
+            .iter()
+            .zip(net.spec.stage_shapes())
+            .map(|(s, (in_c, _, _))| Conv2d::new(s.out_c, in_c, s.k, s.stride, s.pad, &mut rng))
+            .collect();
+        for (m, c) in manual_convs.iter_mut().zip(&net.convs) {
+            m.w = c.w.clone();
+            m.b = c.b.clone();
+        }
+        let relu = |v: Vec<f32>| -> Vec<f32> { v.into_iter().map(|a| a.max(0.0)).collect() };
+        let a0 = relu(manual_convs[0].forward(&x, batch, 8, 8));
+        let snap = a0.clone();
+        let a1 = relu(manual_convs[1].forward(&a0, batch, 8, 8));
+        let mut a2 = manual_convs[2].forward(&a1, batch, 8, 8);
+        for (a, &b) in a2.iter_mut().zip(&snap) {
+            *a += b;
+        }
+        let a2 = relu(a2);
+        // global average pool: per-(sample, channel) mean of the 8×8 map
+        let mut pooled = vec![0.0f32; batch * 6];
+        for bc in 0..batch * 6 {
+            let mut acc = 0.0f32;
+            for p in 0..64 {
+                acc += a2[bc * 64 + p];
+            }
+            pooled[bc] = acc / 64.0;
+        }
+        let manual_logits = net.fcs[0].forward(&pooled, batch);
+        assert_eq!(logits, manual_logits);
+    }
+
+    #[test]
+    fn residual_net_training_reduces_loss() {
+        let mut rng = Xoshiro256pp::seed_from_u64(15);
+        let mut net = ConvNet::new(res_spec(), &mut rng);
+        let x: Vec<f32> = (0..6 * 64).map(|i| (i as f32 * 0.13).sin()).collect();
+        let y = vec![0u32, 1, 2, 0, 1, 2];
+        let first = net.train_step(&x, &y, 6, 0.05);
+        let mut last = first;
+        for _ in 0..40 {
+            last = net.train_step(&x, &y, 6, 0.05);
+        }
+        assert!(last < first * 0.6, "residual net loss {first} → {last} did not drop");
     }
 
     #[test]

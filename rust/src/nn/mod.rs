@@ -5,6 +5,6 @@ pub mod convnet;
 pub mod layer;
 pub mod mlp;
 
-pub use convnet::{ConvNet, ConvNetSpec, ConvStageSpec};
+pub use convnet::{ConvNet, ConvNetSpec, ConvStageSpec, PoolKind};
 pub use layer::{accuracy, softmax, softmax_xent, topk_accuracy, FcVariant, Linear, Relu};
 pub use mlp::Mlp;

@@ -18,8 +18,10 @@
 //! walk [`crate::exec::Executor::run_with_bound`]: im2col routes the
 //! incoming bound alongside the values (padded taps carry bound 0), the
 //! quantized-GEMM formula applies per patch row, the NCHW transpose
-//! permutes the bound, and max-pool propagates it as the window max
-//! (`|max aᵢ − max bᵢ| ≤ maxᵢ|aᵢ − bᵢ|`). ReLU is 1-Lipschitz as before.
+//! permutes the bound, max-pool propagates it as the window max
+//! (`|max aᵢ − max bᵢ| ≤ maxᵢ|aᵢ − bᵢ|`), avg-pool as the window mean
+//! (`|mean aᵢ − mean bᵢ| ≤ meanᵢ|aᵢ − bᵢ|`), and a residual add sums the
+//! bounds of its two streams. ReLU is 1-Lipschitz as before.
 //! The golden-fixture test asserts the int8 logits never leave this
 //! envelope of the stored f32 goldens.
 
@@ -28,8 +30,9 @@ use crate::config::EngineConfig;
 use crate::exec::{lower_mlp, Executor, PlanBuilder, Precision};
 use crate::linalg::blockdiag_mm_i8::QuantizedBlockDiagMatrix;
 use crate::linalg::gemm::gemm_a_bt;
-use crate::linalg::im2col::{im2col, maxpool_nchw, rows_to_nchw};
+use crate::linalg::im2col::{avgpool_nchw, im2col, maxpool_nchw, rows_to_nchw};
 use crate::linalg::pool::ThreadPool;
+use crate::nn::convnet::PoolKind;
 use crate::quant::calibrate::{calibrate, Calibration};
 use std::sync::Arc;
 
@@ -74,25 +77,40 @@ fn calibrate_conv_chunk(
     let mut conv_scales = Vec::with_capacity(shapes.len());
     let mut patches = Vec::new();
     let mut nchw = Vec::new();
+    let mut skip: Option<Vec<f32>> = None;
     for (i, s) in shapes.iter().enumerate() {
+        let cp = &comp.plan.convs[i];
         let max_abs = act.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         conv_scales.push(symmetric_scale(max_abs));
+        if cp.save_skip {
+            skip = Some(act.clone());
+        }
         let (oh, ow) = s.out_hw();
-        let out_c = comp.plan.convs[i].out_c;
+        let out_c = cp.out_c;
         im2col(&act, batch, s, &mut patches);
         let nrows = batch * oh * ow;
         let mut y = vec![0.0f32; nrows * out_c];
         for r in 0..nrows {
             y[r * out_c..(r + 1) * out_c].copy_from_slice(&params.conv_b[i]);
         }
+        // Grouped stages need no special casing here: the masked-dense
+        // filter matrix carries exact zeros off-group.
         gemm_a_bt(&patches, &params.conv_w[i], &mut y, nrows, s.patch_dim(), out_c);
-        y.iter_mut().for_each(|v| *v = v.max(0.0));
         rows_to_nchw(&y, batch, out_c, oh, ow, None, &mut nchw);
-        let cp = &comp.plan.convs[i];
-        if cp.pool > 0 {
-            maxpool_nchw(&nchw, batch, out_c, oh, ow, cp.pool, cp.pool, &mut act);
-        } else {
-            std::mem::swap(&mut act, &mut nchw);
+        if cp.add_skip {
+            let snap = skip.take().expect("validated plan pairs save/add");
+            for (a, b) in nchw.iter_mut().zip(&snap) {
+                *a += *b;
+            }
+        }
+        if cp.relu {
+            nchw.iter_mut().for_each(|v| *v = v.max(0.0));
+        }
+        match cp.pool_kind {
+            PoolKind::None => std::mem::swap(&mut act, &mut nchw),
+            PoolKind::Max => maxpool_nchw(&nchw, batch, out_c, oh, ow, cp.pool, cp.pool_stride, &mut act),
+            PoolKind::Avg => avgpool_nchw(&nchw, batch, out_c, oh, ow, cp.pool, cp.pool_stride, &mut act),
+            PoolKind::GlobalAvg => avgpool_nchw(&nchw, batch, out_c, oh, ow, oh, 1, &mut act),
         }
     }
     let fc = calibrate(&comp.fc, &params.fc_w, &params.fc_b, &act, batch);
@@ -170,9 +188,57 @@ impl QuantizedConvNet {
         let head =
             lower_mlp(&comp.fc, &params.fc_w, &params.fc_b, Some(&calib.fc), &vec![Precision::I8; nfc])?;
         let mut b = PlanBuilder::new(comp.plan.net_spec().in_dim());
-        lower_conv_stages(&mut b, f32_stages, |b, i, bd, bias| {
-            b.block_gemm_i8(QuantizedBlockDiagMatrix::from_f32(&bd), bias, calib.conv_scales[i], true);
-        });
+        lower_conv_stages(&mut b, f32_stages, |b, i, bd, bias, relu| {
+            b.block_gemm_i8(QuantizedBlockDiagMatrix::from_f32(&bd), bias, calib.conv_scales[i], relu);
+        })
+        .map_err(|e| e.to_string())?;
+        b.append_plan(head);
+        let exec = Executor::new(b.finish());
+        let p = exec.plan();
+        let (in_dim, out_dim, macs) = (p.in_dim, p.out_dim, p.macs_per_sample);
+        Ok(Self { exec, in_dim, out_dim, macs_per_sample: macs })
+    }
+
+    /// Mixed-precision variant (the serving default for `*-mpd` models):
+    /// *masked* conv stages and FC layers run int8 — they already traded
+    /// exactness for compression — while dense stages stay f32. The i8 GEMM
+    /// epilogue dequantizes to f32, so residual adds and pools downstream
+    /// of either precision need no variants.
+    pub fn quantize_mixed(
+        comp: &ConvCompressor,
+        params: &ConvNetParams,
+        calib: &ConvCalibration,
+    ) -> Result<Self, String> {
+        calib.validate()?;
+        if calib.conv_scales.len() != comp.plan.convs.len() {
+            return Err(format!(
+                "calibration has {} conv scales for {} conv stages",
+                calib.conv_scales.len(),
+                comp.plan.convs.len()
+            ));
+        }
+        let (f32_stages, _) = PackedConvNet::build_stages(comp, params);
+        let head_prec: Vec<Precision> = comp
+            .fc
+            .masks
+            .iter()
+            .map(|m| if m.is_some() { Precision::I8 } else { Precision::F32 })
+            .collect();
+        let head = lower_mlp(&comp.fc, &params.fc_w, &params.fc_b, Some(&calib.fc), &head_prec)?;
+        let mut b = PlanBuilder::new(comp.plan.net_spec().in_dim());
+        lower_conv_stages(&mut b, f32_stages, |b, i, bd, bias, relu| {
+            if comp.conv_masks[i].is_some() {
+                b.block_gemm_i8(
+                    QuantizedBlockDiagMatrix::from_f32(&bd),
+                    bias,
+                    calib.conv_scales[i],
+                    relu,
+                );
+            } else {
+                b.block_gemm_f32(bd, bias, relu);
+            }
+        })
+        .map_err(|e| e.to_string())?;
         b.append_plan(head);
         let exec = Executor::new(b.finish());
         let p = exec.plan();
@@ -262,7 +328,7 @@ mod tests {
     #[test]
     fn quantized_conv_tracks_f32_within_bound() {
         let (comp, params) = tiny();
-        let packed = PackedConvNet::build(&comp, &params);
+        let packed = PackedConvNet::build(&comp, &params).expect("lower");
         let mut rng = Xoshiro256pp::seed_from_u64(42);
         let batch = 3;
         let x: Vec<f32> = (0..batch * 64).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
@@ -301,6 +367,28 @@ mod tests {
     }
 
     #[test]
+    fn mixed_precision_tracks_f32_at_least_as_tightly_as_int8() {
+        let (comp, params) = tiny();
+        let packed = PackedConvNet::build(&comp, &params).expect("lower");
+        let mut rng = Xoshiro256pp::seed_from_u64(45);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * 64).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let calib = calibrate_conv(&comp, &params, &x, batch, batch);
+        let mixed = QuantizedConvNet::quantize_mixed(&comp, &params, &calib).unwrap();
+        let full = QuantizedConvNet::quantize(&comp, &params, &calib).unwrap();
+        // dense c1/fc2 stay f32 → fewer integer MACs than the all-int8 twin
+        assert!(mixed.macs_per_sample == full.macs_per_sample);
+        assert!(mixed.storage_bytes() > full.storage_bytes());
+        let y_f = packed.forward(&x, batch);
+        let (y_m, bound_m) = mixed.forward_with_bound(&x, batch);
+        for i in 0..y_m.len() {
+            let err = (y_m[i] - y_f[i]).abs();
+            assert!(err <= bound_m[i] * 1.001 + 1e-4, "elem {i}: err {err} > bound {}", bound_m[i]);
+            assert!(bound_m[i].is_finite());
+        }
+    }
+
+    #[test]
     fn chunked_calibration_merges_exactly() {
         let (comp, params) = tiny();
         let mut rng = Xoshiro256pp::seed_from_u64(44);
@@ -320,7 +408,7 @@ mod tests {
     #[test]
     fn quantized_storage_well_below_f32_packed() {
         let (comp, params) = tiny();
-        let packed = PackedConvNet::build(&comp, &params);
+        let packed = PackedConvNet::build(&comp, &params).expect("lower");
         let q = QuantizedConvNet::quantize(&comp, &params, &ConvCalibration::unit_range(2, 2)).unwrap();
         assert_eq!(q.macs_per_sample, packed.macs_per_sample);
         assert!(q.storage_bytes() * 2 < packed.storage_bytes(), "{} vs {}", q.storage_bytes(), packed.storage_bytes());

@@ -212,6 +212,18 @@ impl Default for LoadgenConfig {
     }
 }
 
+/// Bucket index for an HTTP status line's class: `Some(0..=4)` for 1xx–5xx,
+/// `None` for anything outside 100–599. A server bug (or a proxy mangling
+/// the stream) can hand the client parser a numeric "status" like 0, 42, or
+/// 65535; those are corrupt responses, not HTTP outcomes, and callers must
+/// account them as transport errors rather than dropping them on the floor.
+pub fn status_class(status: u16) -> Option<usize> {
+    match status {
+        100..=599 => Some((status / 100) as usize - 1),
+        _ => None,
+    }
+}
+
 /// Outcome counts + latency distribution of one load run.
 pub struct LoadgenReport {
     pub sent: u64,
@@ -222,10 +234,13 @@ pub struct LoadgenReport {
     /// Transport failures and any other status.
     pub errors: u64,
     /// Responses per HTTP status class: index 0 = 1xx … index 4 = 5xx.
-    /// Every HTTP response is counted here (200s and 429s included);
-    /// transport failures never produced a status and are excluded.
+    /// Every well-formed HTTP response is counted here (200s and 429s
+    /// included); transport failures and corrupt status lines (outside
+    /// 100–599) land in [`Self::transport_errors`] instead, so
+    /// `sum(status_classes) + transport_errors == sent` always holds.
     pub status_classes: [u64; 5],
-    /// Requests that failed at the transport layer (connect/read/write/EOF).
+    /// Requests that failed at the transport layer (connect/read/write/EOF)
+    /// or came back with a status outside 100–599 (corrupt status line).
     pub transport_errors: u64,
     pub elapsed: Duration,
     /// Latency distribution of **successful** (HTTP 200) requests only.
@@ -345,31 +360,38 @@ pub fn run_http(addr: SocketAddr, variant: &str, feature_dim: usize, cfg: &Loadg
                     let body = Json::obj(vec![("input", Json::Arr(input))]);
                     sent.fetch_add(1, Ordering::Relaxed);
                     match client.post_json(path, &body) {
-                        Ok((status, _)) => {
-                            let class = (status / 100) as usize;
-                            if (1..=5).contains(&class) {
-                                status_classes[class - 1].fetch_add(1, Ordering::Relaxed);
+                        Ok((status, _)) => match status_class(status) {
+                            Some(class) => {
+                                status_classes[class].fetch_add(1, Ordering::Relaxed);
+                                // Per-status-class latency: successes and sheds
+                                // go to different histograms — fast 429s folded
+                                // into the success distribution would skew the
+                                // percentiles exactly when the server is
+                                // saturated and they matter most.
+                                match status {
+                                    200 => {
+                                        ok.fetch_add(1, Ordering::Relaxed);
+                                        latency.record(started.elapsed());
+                                    }
+                                    429 => {
+                                        rejected.fetch_add(1, Ordering::Relaxed);
+                                        latency_non200.record(started.elapsed());
+                                    }
+                                    _ => {
+                                        errors.fetch_add(1, Ordering::Relaxed);
+                                        latency_non200.record(started.elapsed());
+                                    }
+                                }
                             }
-                            // Per-status-class latency: successes and sheds
-                            // go to different histograms — fast 429s folded
-                            // into the success distribution would skew the
-                            // percentiles exactly when the server is
-                            // saturated and they matter most.
-                            match status {
-                                200 => {
-                                    ok.fetch_add(1, Ordering::Relaxed);
-                                    latency.record(started.elapsed());
-                                }
-                                429 => {
-                                    rejected.fetch_add(1, Ordering::Relaxed);
-                                    latency_non200.record(started.elapsed());
-                                }
-                                _ => {
-                                    errors.fetch_add(1, Ordering::Relaxed);
-                                    latency_non200.record(started.elapsed());
-                                }
+                            // A parsed "status" outside 100–599 is a corrupt
+                            // status line, not an HTTP outcome: bucket it with
+                            // transport errors so status_classes + transport
+                            // still sum to `sent` instead of silently leaking.
+                            None => {
+                                transport_errors.fetch_add(1, Ordering::Relaxed);
+                                errors.fetch_add(1, Ordering::Relaxed);
                             }
-                        }
+                        },
                         Err(_) => {
                             transport_errors.fetch_add(1, Ordering::Relaxed);
                             errors.fetch_add(1, Ordering::Relaxed);
@@ -505,6 +527,34 @@ mod tests {
             t += -(1.0 - rng.next_f64()).ln() / target_qps;
         }
         assert!((t - 2.0).abs() < 0.3, "schedule span {t}s, expected ≈2s");
+    }
+
+    #[test]
+    fn status_class_buckets_every_u16() {
+        // real classes map to their bucket…
+        assert_eq!(status_class(100), Some(0));
+        assert_eq!(status_class(199), Some(0));
+        assert_eq!(status_class(200), Some(1));
+        assert_eq!(status_class(301), Some(2));
+        assert_eq!(status_class(404), Some(3));
+        assert_eq!(status_class(429), Some(3));
+        assert_eq!(status_class(599), Some(4));
+        // …and garbage statuses (corrupt status line, buggy upstream) are
+        // rejected rather than silently dropped from the accounting. The old
+        // code skipped these, breaking sum(status_classes)+transport == sent.
+        for garbage in [0u16, 1, 42, 99, 600, 601, 999, 7000, u16::MAX] {
+            assert_eq!(status_class(garbage), None, "status {garbage}");
+        }
+        // exhaustive: every u16 is either a 1xx–5xx bucket or None
+        for s in 0..=u16::MAX {
+            match status_class(s) {
+                Some(c) => {
+                    assert!(c < 5);
+                    assert_eq!(c, (s / 100) as usize - 1);
+                }
+                None => assert!(!(100..=599).contains(&s)),
+            }
+        }
     }
 
     #[test]

@@ -11,11 +11,17 @@
 //!    packed forward tracks the masked-dense trainer to float tolerance
 //!    (blocks sum taps in permuted order) while staying bit-identical
 //!    across thread counts and tile shapes (canonical accumulation).
-//! 3. **Golden fixture**: a committed seeded Deep-MNIST-shaped checkpoint
-//!    (`tests/fixtures/deep_mnist_tiny.mpdc`, regenerable with the sibling
-//!    python script) whose compress→pack→forward logits must match stored
-//!    goldens to exact bits (f32) and stay within the analytic error bound
-//!    (i8) — the guard against silent kernel regressions.
+//! 3. **Golden fixtures**: committed seeded checkpoints
+//!    (`tests/fixtures/deep_mnist_tiny.mpdc` and `tiny_resnet.mpdc`,
+//!    regenerable with the sibling python scripts) whose
+//!    compress→pack→forward logits must match stored goldens to exact bits
+//!    (f32) and stay within the analytic error bound (i8) — the guard
+//!    against silent kernel regressions. The resnet fixture pins the
+//!    residual-add / avg-pool / global-avg-pool path end to end.
+//!
+//! The random geometry sweep (ISSUE 9) also draws AlexNet-style channel
+//! groups and the pool kind (max vs average), so the grouped block-diagonal
+//! lowering and both pool reducers ride every property below.
 
 use mpdc::compress::conv_model::{ConvCompressor, ConvNetParams, PackedConvNet};
 use mpdc::compress::plan::{ConvLayerPlan, ConvModelPlan, LayerPlan, SparsityPlan};
@@ -24,12 +30,14 @@ use mpdc::linalg::pool::ThreadPool;
 use mpdc::linalg::{KernelChoice, TileShape};
 use mpdc::mask::prng::Xoshiro256pp;
 use mpdc::nn::checkpoint;
-use mpdc::quant::{Calibration, ConvCalibration, QuantizedConvNet};
+use mpdc::quant::{calibrate_conv, Calibration, ConvCalibration, QuantizedConvNet};
 use mpdc::util::prop::{for_all, gen_range};
 use std::sync::Arc;
 
-/// Random single-conv-stage plan: kernel/stride/pad sweep with a small dense
-/// head. `conv_blocks(out_c, patch_dim)` picks the conv mask (None = dense).
+/// Random single-conv-stage plan: kernel/stride/pad/group sweep with a small
+/// dense head. `conv_blocks(rng, out_c/groups, patch_dim/groups)` picks the
+/// conv mask from the *per-group* sub-matrix dims (None = dense). Pool kind
+/// (max vs average) is drawn at random when the output admits a 2×2 window.
 fn random_plan(
     rng: &mut Xoshiro256pp,
     conv_blocks: impl Fn(&mut Xoshiro256pp, usize, usize) -> Option<usize>,
@@ -41,6 +49,8 @@ fn random_plan(
     let pad = gen_range(rng, 0, k - 1);
     let stride = gen_range(rng, 1, 2);
     let out_c = gen_range(rng, 1, 6);
+    // AlexNet-style channel groups when both channel counts split evenly
+    let groups = if in_c % 2 == 0 && out_c % 2 == 0 && gen_range(rng, 0, 1) == 0 { 2 } else { 1 };
     let oh = (h + 2 * pad - k) / stride + 1;
     let ow = (w + 2 * pad - k) / stride + 1;
     let pool = if oh >= 2 && ow >= 2 && gen_range(rng, 0, 1) == 0 { 2 } else { 0 };
@@ -48,10 +58,20 @@ fn random_plan(
     let flat = out_c * fh * fw;
     let hidden = gen_range(rng, 3, 8);
     let classes = gen_range(rng, 2, 4);
-    let nblocks = conv_blocks(rng, out_c, in_c * k * k);
+    // masks compose per group: blocks must fit the per-group sub-matrix
+    let nblocks = conv_blocks(rng, out_c / groups, (in_c / groups) * k * k);
+    let mut cp = match nblocks {
+        Some(nb) => ConvLayerPlan::masked("c1", out_c, k, 0, nb),
+        None => ConvLayerPlan::dense("c1", out_c, k, 0),
+    }
+    .with_geometry(stride, pad)
+    .grouped(groups);
+    if pool == 2 {
+        cp = if gen_range(rng, 0, 1) == 0 { cp.max_pool(2, 2) } else { cp.avg_pool(2, 2) };
+    }
     ConvModelPlan::new(
         (in_c, h, w),
-        vec![ConvLayerPlan { name: "c1".into(), out_c, k, stride, pad, pool, nblocks }],
+        vec![cp],
         SparsityPlan::new(vec![
             LayerPlan::dense("fc1", hidden, flat),
             LayerPlan::dense("fc2", classes, hidden),
@@ -125,6 +145,7 @@ fn prop_lowered_conv_bit_identical_to_direct_loop() {
                 // bit-exactness is a property of the *scalar* canonical
                 // kernel — pin it regardless of host SIMD / MPDC_FORCE_SCALAR
                 let exec = PackedConvNet::build(&comp, &params)
+                    .expect("lower")
                     .with_pool(pool.clone())
                     .with_tile(tile)
                     .into_executor()
@@ -141,6 +162,7 @@ fn prop_lowered_conv_bit_identical_to_direct_loop() {
         // reorder bound of the scalar-canonical result (bit-equal when the
         // host has no SIMD, since detected() degrades to scalar).
         let simd_exec = PackedConvNet::build(&comp, &params)
+            .expect("lower")
             .into_executor()
             .with_kernel(KernelChoice::detected());
         let (y_v, bound_v) = simd_exec.run_with_bound(&x, None, batch);
@@ -170,7 +192,7 @@ fn prop_permuted_masked_conv_close_and_engine_stable() {
             .map(|_| rng.next_f32() * 2.0 - 1.0)
             .collect();
         let want = net.forward(&x, batch);
-        let base = PackedConvNet::build(&comp, &params);
+        let base = PackedConvNet::build(&comp, &params).expect("lower");
         let got = base.forward(&x, batch);
         for (a, b) in got.iter().zip(&want) {
             let scale = 1.0 + a.abs().max(b.abs());
@@ -178,9 +200,42 @@ fn prop_permuted_masked_conv_close_and_engine_stable() {
         }
         for pool in &pools {
             let p = PackedConvNet::build(&comp, &params)
+                .expect("lower")
                 .with_pool(pool.clone())
                 .with_tile(TileShape { batch: 2, rows: 4 });
             assert_eq!(p.forward(&x, batch), got, "lanes={}", pool.lanes());
+        }
+    });
+}
+
+/// i8 leg of the geometry sweep (ISSUE 9): across the same random
+/// stride/group/pad/pool shapes, the quantized engine stays within its own
+/// analytic worst-case bound of the packed f32 forward. Calibration comes
+/// from the actual probe batch (unit-range clipping would void the bound).
+#[test]
+fn prop_quantized_conv_within_analytic_bound_of_f32() {
+    for_all("i8 conv within analytic bound", |rng, case| {
+        let plan = random_plan(rng, |rng, ocg, pdimg| {
+            (case % 2 == 0).then(|| gen_range(rng, 1, ocg.min(pdimg)))
+        });
+        let comp = ConvCompressor::new(plan, case as u64 ^ 0x1B);
+        let (_net, params) = net_and_params(&comp, rng);
+        let batch = gen_range(rng, 1, 3);
+        let x: Vec<f32> = (0..batch * comp.plan.net_spec().in_dim())
+            .map(|_| rng.next_f32() * 2.0 - 1.0)
+            .collect();
+        let want = PackedConvNet::build(&comp, &params).expect("lower").forward(&x, batch);
+        let calib = calibrate_conv(&comp, &params, &x, batch, batch);
+        let q = QuantizedConvNet::quantize(&comp, &params, &calib).expect("quantize");
+        let (y_q, bound) = q.forward_with_bound(&x, batch);
+        assert_eq!(y_q, q.forward(&x, batch), "bound walk must not change values");
+        for i in 0..want.len() {
+            let err = (y_q[i] - want[i]).abs();
+            assert!(
+                err <= bound[i] * 1.001 + 1e-4,
+                "logit {i}: |i8 − f32| = {err} exceeds analytic bound {}",
+                bound[i]
+            );
         }
     });
 }
@@ -316,8 +371,8 @@ fn conv_checkpoint_roundtrip_preserves_serving_output() {
     let path = dir.join("tiny.mpdc");
     checkpoint::save(&path, &comp.tensors(&params)).unwrap();
     let params2 = comp.params_from_tensors(&checkpoint::load(&path).unwrap()).unwrap();
-    let a = PackedConvNet::build(&comp, &params);
-    let b = PackedConvNet::build(&comp, &params2);
+    let a = PackedConvNet::build(&comp, &params).expect("lower");
+    let b = PackedConvNet::build(&comp, &params2).expect("lower");
     let mut rng = Xoshiro256pp::seed_from_u64(7);
     let x: Vec<f32> = (0..3 * 64).map(|_| rng.next_f32() - 0.5).collect();
     assert_eq!(a.forward(&x, 3), b.forward(&x, 3));
@@ -341,4 +396,110 @@ fn trainer_and_compressor_checkpoints_interoperate() {
     net.load_tensors(&comp.tensors(&params)).expect("compressor tensors load");
     assert_eq!(net.convs[1].w, params.conv_w[1]);
     assert_eq!(net.fcs[0].b, params.fc_b[0]);
+}
+
+// ------------------------------------------------- residual golden fixture
+
+fn resnet_fixture_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_resnet.mpdc")
+}
+
+/// The residual fixture's plan — must stay in sync with gen_tiny_resnet.py:
+/// a dense stem, one skip-wrapped residual pair merging into an average
+/// pool, and a global-average-pooled head feeding a single masked FC layer.
+fn resnet_fixture_compressor() -> ConvCompressor {
+    let plan = ConvModelPlan::new(
+        (1, 8, 8),
+        vec![
+            ConvLayerPlan::dense("c0", 4, 3, 0),
+            ConvLayerPlan::masked("r1a", 4, 3, 0, 2).saving_skip(),
+            ConvLayerPlan::masked("r1b", 4, 3, 0, 2).adding_skip().avg_pool(2, 2),
+            ConvLayerPlan::masked("head", 4, 3, 0, 2).global_avg_pool(),
+        ],
+        SparsityPlan::new(vec![LayerPlan::masked("fc0", 3, 4, 2)]).unwrap(),
+    )
+    .unwrap();
+    ConvCompressor::new_non_permuted(plan)
+}
+
+/// Golden f32 for the residual/avg-pool path: compress→pack→forward logits
+/// must match the stored goldens to exact bits across engine configs — the
+/// guard that pins `SkipSave`/`ResidualAdd`/`AvgPool` numerics.
+#[test]
+fn resnet_golden_fixture_f32_logits_bit_exact() {
+    let comp = resnet_fixture_compressor();
+    let tensors = checkpoint::load(&resnet_fixture_path()).expect("fixture loads");
+    let params = comp.params_from_tensors(&tensors).expect("fixture params");
+    let x = fixture_tensor(&tensors, "golden.x");
+    let want = fixture_tensor(&tensors, "golden.y");
+    assert_eq!(x.len(), 2 * 64);
+    assert_eq!(want.len(), 2 * 3);
+    for cfg in [
+        EngineConfig { pool_threads: 1, tile_batch: 4, tile_rows: 8, simd: false },
+        EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 2, simd: false },
+        EngineConfig { pool_threads: 8, tile_batch: 8, tile_rows: 8, simd: false },
+    ] {
+        let packed = comp.build_engine(&params, &cfg).unwrap();
+        let got = packed.forward(&x, 2);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "logit {i}: engine {g} != golden {w} under {cfg:?} — residual/pool numerics changed"
+            );
+        }
+    }
+    // SIMD leg: detected kernels within the analytic reorder bound.
+    let simd_exec = comp
+        .build_engine(&params, &EngineConfig::default())
+        .unwrap()
+        .into_executor()
+        .with_kernel(KernelChoice::detected());
+    let (y_v, bound_v) = simd_exec.run_with_bound(&x, None, 2);
+    for (i, (g, w)) in y_v.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() <= bound_v[i] + 1e-6,
+            "SIMD logit {i}: {g} vs golden {w}, bound {}",
+            bound_v[i]
+        );
+    }
+}
+
+/// Golden i8 for the residual/avg-pool path: the quantized engine stays
+/// within its analytic bound of the stored f32 goldens (the bound walk
+/// crosses `ResidualAdd` and both pool reducers), and is config-stable.
+#[test]
+fn resnet_golden_fixture_i8_within_analytic_bound() {
+    let comp = resnet_fixture_compressor();
+    let tensors = checkpoint::load(&resnet_fixture_path()).expect("fixture loads");
+    let params = comp.params_from_tensors(&tensors).expect("fixture params");
+    let x = fixture_tensor(&tensors, "golden.x");
+    let want = fixture_tensor(&tensors, "golden.y");
+    let calib = ConvCalibration {
+        conv_scales: fixture_tensor(&tensors, "golden.conv_scales"),
+        fc: Calibration { act_scales: fixture_tensor(&tensors, "golden.fc_scales"), samples: 0 },
+    };
+    calib.validate().unwrap();
+    let q = QuantizedConvNet::quantize(&comp, &params, &calib).unwrap();
+    let (y_q, bound) = q.forward_with_bound(&x, 2);
+    assert_eq!(y_q, q.forward(&x, 2), "bound walk must not change values");
+    for i in 0..want.len() {
+        let err = (y_q[i] - want[i]).abs();
+        assert!(
+            err <= bound[i] * 1.001 + 1e-4,
+            "logit {i}: |i8 − golden f32| = {err} exceeds analytic bound {}",
+            bound[i]
+        );
+    }
+    for cfg in [
+        EngineConfig { pool_threads: 2, tile_batch: 2, tile_rows: 4, ..Default::default() },
+        EngineConfig { pool_threads: 8, tile_batch: 8, tile_rows: 8, ..Default::default() },
+    ] {
+        let q2 = QuantizedConvNet::quantize(&comp, &params, &calib)
+            .unwrap()
+            .with_engine_config(&cfg)
+            .unwrap();
+        assert_eq!(q2.forward(&x, 2), y_q, "{cfg:?}");
+    }
 }

@@ -113,12 +113,87 @@ fn packed_conv_forward_equals_plan_execution_across_pools_and_tiles() {
     let mut rng = Xoshiro256pp::seed_from_u64(79);
     let batch = 3;
     let x: Vec<f32> = (0..batch * 64).map(|_| rng.next_f32() - 0.5).collect();
-    let want = PackedConvNet::build(&comp, &params).forward(&x, batch);
+    let want = PackedConvNet::build(&comp, &params).unwrap().forward(&x, batch);
     for cfg in config_matrix() {
-        let engine = PackedConvNet::build(&comp, &params).with_engine_config(&cfg).unwrap();
+        let engine =
+            PackedConvNet::build(&comp, &params).unwrap().with_engine_config(&cfg).unwrap();
         assert_eq!(engine.forward(&x, batch), want, "wrapper drifted under {cfg:?}");
         assert_run_into_exact(engine.executor(), &x, batch, &want, &format!("conv-f32 {cfg:?}"));
     }
+}
+
+/// ISSUE 9 acceptance: the AlexNet-class (strided + grouped conv) and the
+/// residual (skip save/add + avg/global-avg pool) models must run `forward`
+/// ≡ `run_into` bit-exactly across the 1/2/8-lane pool matrix.
+#[test]
+fn alexnet_and_tinyresnet_forward_equals_plan_execution_across_pools() {
+    for (name, plan) in [
+        ("alexnet-lite", ConvModelPlan::alexnet_lite(4, 16)),
+        ("tinyresnet", ConvModelPlan::tinyresnet(4, 16)),
+    ] {
+        let comp = ConvCompressor::new(plan, 91);
+        let params = comp.random_masked_params(91);
+        let mut rng = Xoshiro256pp::seed_from_u64(93);
+        let batch = 2;
+        let in_dim = 3 * 32 * 32;
+        let x: Vec<f32> = (0..batch * in_dim).map(|_| rng.next_f32() - 0.5).collect();
+        let want = PackedConvNet::build(&comp, &params).unwrap().forward(&x, batch);
+        assert!(want.iter().all(|v| v.is_finite()), "{name}: non-finite forward");
+        for cfg in config_matrix() {
+            let engine =
+                PackedConvNet::build(&comp, &params).unwrap().with_engine_config(&cfg).unwrap();
+            assert_eq!(engine.forward(&x, batch), want, "{name} wrapper drifted under {cfg:?}");
+            assert_run_into_exact(engine.executor(), &x, batch, &want, &format!("{name} {cfg:?}"));
+        }
+        // the residual plan must actually carry a pinned skip slot
+        if name == "tinyresnet" {
+            let exec = PackedConvNet::build(&comp, &params).unwrap().into_executor();
+            assert!(!exec.plan().skip_elems_per_sample.is_empty(), "no skip slots lowered");
+            assert!(exec.plan().ops.iter().any(|p| matches!(p.op, Op::ResidualAdd { .. })));
+            assert!(exec.plan().ops.iter().any(|p| matches!(p.op, Op::AvgPool { .. })));
+        }
+    }
+}
+
+/// Panic-to-error hardening regression (ISSUE 9 satellite): hostile pool and
+/// residual geometry — the kind a corrupted checkpoint can feed the builder —
+/// must come back as a `PlanError` at plan-build time, never a run-time
+/// assert inside a kernel.
+#[test]
+fn hostile_pool_and_residual_geometry_is_a_plan_error() {
+    use mpdc::exec::PlanBuilder;
+    use mpdc::linalg::im2col::ConvShape;
+
+    // window larger than the spatial extent
+    let mut b = PlanBuilder::new(2 * 4 * 4);
+    let err = b.max_pool(2, 4, 4, 5, 1).unwrap_err().to_string();
+    assert!(err.contains("exceeds"), "{err}");
+    // zero window / stride
+    let mut b = PlanBuilder::new(2 * 4 * 4);
+    let err = b.avg_pool(2, 4, 4, 0, 1).unwrap_err().to_string();
+    assert!(err.contains("≥ 1"), "{err}");
+    let mut b = PlanBuilder::new(2 * 4 * 4);
+    assert!(b.max_pool(2, 4, 4, 2, 0).is_err());
+    // claimed c·h·w disagrees with the live activation width
+    let mut b = PlanBuilder::new(2 * 4 * 4);
+    let err = b.avg_pool(3, 4, 4, 2, 2).unwrap_err().to_string();
+    assert!(err.contains("mismatch"), "{err}");
+    // degenerate channel count
+    let mut b = PlanBuilder::new(16);
+    assert!(b.max_pool(0, 4, 4, 2, 2).is_err());
+    // im2col whose shape disagrees with the activation
+    let mut b = PlanBuilder::new(2 * 4 * 4);
+    let bad = ConvShape { in_c: 3, h: 4, w: 4, kh: 3, kw: 3, stride: 1, pad: 1 };
+    assert!(b.im2col(bad).is_err());
+    // residual add with no live save, then with a width mismatch
+    let mut b = PlanBuilder::new(12);
+    let err = b.residual_add(0, false).unwrap_err().to_string();
+    assert!(err.contains("no live save"), "{err}");
+    let mut b = PlanBuilder::new(12);
+    let slot = b.skip_save();
+    b.dense_gemm(vec![0.0; 8 * 12], vec![0.0; 8], 8, 12, false);
+    let err = b.residual_add(slot, true).unwrap_err().to_string();
+    assert!(err.contains("12") && err.contains("8"), "{err}");
 }
 
 #[test]
@@ -240,7 +315,7 @@ fn plan_accounting_matches_engine_wrappers() {
 
     // conv plans account im2col'd GEMM work (MACs scale with patch rows)
     let (ccomp, params) = conv_fixture();
-    let conv = PackedConvNet::build(&ccomp, &params);
+    let conv = PackedConvNet::build(&ccomp, &params).unwrap();
     let cplan = conv.executor().plan();
     assert_eq!(cplan.macs_per_sample, conv.macs_per_sample);
     assert!(cplan.ops.iter().any(|p| matches!(p.op, Op::Im2col { .. })));
@@ -332,7 +407,7 @@ fn profiled_op_totals_attribute_wall_time() {
     let execs = vec![
         ("lenet-f32", PackedMlp::build(&comp, &w, &b).into_executor()),
         ("lenet-int8", QuantizedMlp::quantize(&comp, &w, &b, &cal).unwrap().into_executor()),
-        ("deep-mnist-lite-f32", PackedConvNet::build(&ccomp, &cparams).into_executor()),
+        ("deep-mnist-lite-f32", PackedConvNet::build(&ccomp, &cparams).unwrap().into_executor()),
         (
             "deep-mnist-lite-int8",
             QuantizedConvNet::quantize(&ccomp, &cparams, &ccal).unwrap().into_executor(),

@@ -1,0 +1,295 @@
+#!/usr/bin/env python3
+"""Generate tests/fixtures/tiny_resnet.mpdc — the golden fixture for the
+residual/avg-pool conv path (tests/conv.rs::resnet_golden_fixture_*).
+
+The fixture is a checkpoint-v1 (all-f32) MPDC file holding:
+  * seeded masked weights for a tiny ResNet-shaped model
+      input (1,8,8)
+      c0:   dense 4ch 3x3 same pad1, ReLU                       -> (4,8,8)
+      r1a:  4ch 3x3 pad1, mask k=2 (non-permuted), ReLU,
+            save_skip (snapshot = c0 output)                    -> (4,8,8)
+      r1b:  4ch 3x3 pad1, mask k=2, conv WITHOUT fused ReLU,
+            + snapshot, ReLU, then 2x2/2 average pool           -> (4,4,4)
+      head: 4ch 3x3 pad1, mask k=2, ReLU, global average pool   -> (4,1,1)
+      fc0:  4->3, mask k=2, no ReLU (logits)
+  * a probe batch  golden.x [2, 64]
+  * golden logits  golden.y [2, 3] — computed HERE with exact float32
+    semantics mirroring the packed engine's canonical order: block columns
+    ascending, products before bias, skip snapshot of the stage *input*,
+    conv -> add -> ReLU for the merging stage, average pools accumulating
+    the window ascending ky->kx from 0.0 then dividing by k*k
+  * per-stage activation scales golden.conv_scales [4] /
+    golden.fc_scales [1] for the int8 engine's analytic-bound check
+
+Masks are NON-permuted (identity P_row/P_col) so the engine emits no gathers
+and block spans follow from the deterministic `partition` rule. Weights come
+from a fixed LCG, so the fixture is reproducible:
+
+    python3 gen_tiny_resnet.py   # rewrites tiny_resnet.mpdc in place
+"""
+import struct
+import zlib
+from pathlib import Path
+
+import numpy as np
+
+F32 = np.float32
+
+
+# ---------------------------------------------------------------- seeded LCG
+class Lcg:
+    def __init__(self, seed):
+        self.state = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64(self):
+        self.state = (self.state * 6364136223846793005 + 1442695040888963407) & 0xFFFFFFFFFFFFFFFF
+        return self.state
+
+    def next_f32(self, lo=-0.5, hi=0.5):
+        # 24 high-quality bits -> [0,1) -> [lo,hi); exactly representable
+        u = (self.next_u64() >> 40) / float(1 << 24)
+        return F32(lo + (hi - lo) * u)
+
+
+# ------------------------------------------------------- block-span helpers
+def partition(n, k):
+    base, rem = n // k, n % k
+    spans, start = [], 0
+    for b in range(k):
+        ln = base + (1 if b < rem else 0)
+        spans.append((start, ln))
+        start += ln
+    return spans
+
+
+def mask_matrix(rows, cols, k):
+    """Dense 0/1 non-permuted block-diagonal mask + per-row column spans."""
+    rs, cs = partition(rows, k), partition(cols, k)
+    m = np.zeros((rows, cols), dtype=F32)
+    row_span = [None] * rows
+    for (r0, rl), (c0, cl) in zip(rs, cs):
+        m[r0 : r0 + rl, c0 : c0 + cl] = 1.0
+        for r in range(r0, r0 + rl):
+            row_span[r] = (c0, cl)
+    return m, row_span
+
+
+def dense_span(rows, cols):
+    """A dense stage packs as one full-span block in logical order."""
+    return np.ones((rows, cols), dtype=F32), [(0, cols)] * rows
+
+
+# ----------------------------------------------------- exact-f32 forward ops
+def block_fc(x_rows, w, row_span, bias, relu):
+    """Packed block-diagonal FC over [N, in] rows, exact f32, canonical order:
+    per output row, products over the block's columns ascending, then + bias,
+    then fused ReLU (rust: `if v < 0.0 { 0.0 }`)."""
+    n = x_rows.shape[0]
+    out = np.zeros((n, w.shape[0]), dtype=F32)
+    for i in range(n):
+        xr = x_rows[i]
+        for r in range(w.shape[0]):
+            c0, cl = row_span[r]
+            acc = F32(0.0)
+            for c in range(c0, c0 + cl):
+                acc = F32(acc + F32(xr[c] * w[r, c]))
+            v = F32(acc + bias[r])
+            if relu and v < F32(0.0):
+                v = F32(0.0)
+            out[i, r] = v
+    return out
+
+
+def im2col(x, in_c, h, w, k, pad):
+    """[N, in_c*h*w] -> [N*oh*ow, in_c*k*k], stride 1, zero-padded taps."""
+    n = x.shape[0]
+    oh, ow = h, w  # same-padded stride-1
+    pdim = in_c * k * k
+    out = np.zeros((n * oh * ow, pdim), dtype=F32)
+    xi = x.reshape(n, in_c, h, w)
+    for b in range(n):
+        for oy in range(oh):
+            for ox in range(ow):
+                row = out[(b * oh + oy) * ow + ox]
+                for ic in range(in_c):
+                    for ky in range(k):
+                        iy = oy + ky - pad
+                        if iy < 0 or iy >= h:
+                            continue
+                        for kx in range(k):
+                            ix = ox + kx - pad
+                            if ix < 0 or ix >= w:
+                                continue
+                            row[(ic * k + ky) * k + kx] = xi[b, ic, iy, ix]
+    return out, oh, ow
+
+
+def conv_nchw(x, in_c, h, w, out_c, k, pad, wmat, row_span, bias, relu):
+    """One conv stage up to (and including) rows_to_nchw; no pool, no skip.
+    Returns flattened [N, out_c*oh*ow] NCHW activations."""
+    n = x.shape[0]
+    patches, oh, ow = im2col(x, in_c, h, w, k, pad)
+    rows = block_fc(patches, wmat, row_span, bias, relu)  # [N*oh*ow, out_c]
+    nchw = np.zeros((n, out_c, oh, ow), dtype=F32)
+    for b in range(n):
+        for oc in range(out_c):
+            for oy in range(oh):
+                for ox in range(ow):
+                    nchw[b, oc, oy, ox] = rows[(b * oh + oy) * ow + ox, oc]
+    return nchw.reshape(n, out_c * oh * ow), oh, ow
+
+
+def residual_relu(v, snap):
+    """Rust ResidualAdd: sum = v + s, then fused ReLU, elementwise exact."""
+    out = np.zeros_like(v)
+    for i in range(v.size):
+        s = F32(v.flat[i] + snap.flat[i])
+        out.flat[i] = F32(0.0) if s < F32(0.0) else s
+    return out
+
+
+def avg_pool(x, c, h, w, k, stride):
+    """Rust avgpool_nchw: window accumulated ascending ky->kx from 0.0,
+    then one division by k*k — exact f32 at every step."""
+    n = x.shape[0]
+    xi = x.reshape(n, c, h, w)
+    ph, pw = (h - k) // stride + 1, (w - k) // stride + 1
+    out = np.zeros((n, c, ph, pw), dtype=F32)
+    for b in range(n):
+        for oc in range(c):
+            for py in range(ph):
+                for px in range(pw):
+                    acc = F32(0.0)
+                    for ky in range(k):
+                        for kx in range(k):
+                            acc = F32(acc + xi[b, oc, py * stride + ky, px * stride + kx])
+                    out[b, oc, py, px] = F32(acc / F32(k * k))
+    return out.reshape(n, c * ph * pw), ph, pw
+
+
+def max_abs(a):
+    return float(np.max(np.abs(a.astype(np.float64)))) if a.size else 0.0
+
+
+# ------------------------------------------------------------- build model
+rng = Lcg(0x7E51DE47)
+
+def gen_matrix(rows, cols, scale=1.0):
+    m = np.zeros((rows, cols), dtype=F32)
+    for r in range(rows):
+        for c in range(cols):
+            m[r, c] = F32(rng.next_f32() * F32(scale))
+    return m
+
+def gen_vec(n, scale=0.2):
+    return np.array([F32(rng.next_f32() * F32(scale)) for _ in range(n)], dtype=F32)
+
+# c0: dense filter 4 x (1*3*3) = 4x9
+m0, span0 = dense_span(4, 9)
+w0 = gen_matrix(4, 9)
+b0 = gen_vec(4)
+# r1a: filter 4 x (4*3*3) = 4x36, mask k=2
+m1, span1 = mask_matrix(4, 36, 2)
+w1 = gen_matrix(4, 36) * m1
+b1 = gen_vec(4)
+# r1b: filter 4x36, mask k=2
+m2, span2 = mask_matrix(4, 36, 2)
+w2 = gen_matrix(4, 36) * m2
+b2 = gen_vec(4)
+# head: filter 4x36, mask k=2
+m3, span3 = mask_matrix(4, 36, 2)
+w3 = gen_matrix(4, 36) * m3
+b3 = gen_vec(4)
+# fc0: 3x4, mask k=2
+mf0, spanf0 = mask_matrix(3, 4, 2)
+wf0 = gen_matrix(3, 4) * mf0
+bf0 = gen_vec(3)
+
+# probe batch
+x = np.array([[F32(rng.next_f32(-1.0, 1.0)) for _ in range(64)] for _ in range(2)], dtype=F32)
+
+# ------------------------------------------------------------ exact forward
+conv_scales = [max_abs(x) / 127.0]
+# c0: dense conv + ReLU
+a0, _, _ = conv_nchw(x, 1, 8, 8, 4, 3, 1, w0, span0, b0, relu=True)  # [2, 4*8*8]
+conv_scales.append(max_abs(a0) / 127.0)
+# r1a: snapshot of the stage INPUT (= c0 output), conv + fused ReLU
+snap = a0
+a1, _, _ = conv_nchw(a0, 4, 8, 8, 4, 3, 1, w1, span1, b1, relu=True)
+conv_scales.append(max_abs(a1) / 127.0)
+# r1b: conv with NO fused ReLU, + snapshot, ReLU, 2x2/2 average pool
+a2, _, _ = conv_nchw(a1, 4, 8, 8, 4, 3, 1, w2, span2, b2, relu=False)
+a2 = residual_relu(a2, snap)
+a2, _, _ = avg_pool(a2, 4, 8, 8, 2, 2)  # -> [2, 4*4*4]
+conv_scales.append(max_abs(a2) / 127.0)
+# head: conv + ReLU, global average pool (k = full extent, stride 1)
+a3, _, _ = conv_nchw(a2, 4, 4, 4, 4, 3, 1, w3, span3, b3, relu=True)
+a3, _, _ = avg_pool(a3, 4, 4, 4, 4, 1)  # -> [2, 4]
+fc_scales = [max_abs(a3) / 127.0]
+# fc0: logits, no ReLU
+y = block_fc(a3, wf0, spanf0, bf0, relu=False)
+
+# float64 cross-check of the generator itself (catches structural bugs; the
+# exact-f32 path above is what the fixture stores)
+def f64_conv(a, in_c, h, w, out_c, k, pad, wm, bb, relu):
+    n = a.shape[0]
+    ai = a.reshape(n, in_c, h, w)
+    padded = np.pad(ai, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    pat = np.zeros((n, h, w, in_c * k * k))
+    for oy in range(h):
+        for ox in range(w):
+            pat[:, oy, ox, :] = padded[:, :, oy : oy + k, ox : ox + k].reshape(n, -1)
+    conv = pat.reshape(n * h * w, -1) @ wm.astype(np.float64).T + bb.astype(np.float64)
+    if relu:
+        conv = np.maximum(conv, 0.0)
+    return conv.reshape(n, h, w, out_c).transpose(0, 3, 1, 2).reshape(n, -1)
+
+def f64_forward(xx):
+    a = xx.astype(np.float64)
+    a0 = f64_conv(a, 1, 8, 8, 4, 3, 1, w0, b0, True)
+    a1 = f64_conv(a0, 4, 8, 8, 4, 3, 1, w1, b1, True)
+    a2 = np.maximum(f64_conv(a1, 4, 8, 8, 4, 3, 1, w2, b2, False) + a0, 0.0)
+    n = a2.shape[0]
+    a2 = a2.reshape(n, 4, 4, 2, 4, 2).mean(axis=(3, 5)).reshape(n, -1)
+    a3 = f64_conv(a2, 4, 4, 4, 4, 3, 1, w3, b3, True)
+    a3 = a3.reshape(n, 4, 16).mean(axis=2)
+    return a3 @ wf0.astype(np.float64).T + bf0.astype(np.float64)
+
+ref = f64_forward(x)
+assert np.max(np.abs(ref - y.astype(np.float64))) < 1e-4, "f32/f64 generator mismatch"
+
+# --------------------------------------------------------------- serialize
+def tensor(name, shape, data):
+    buf = struct.pack("<I", len(name)) + name.encode()
+    buf += struct.pack("<I", len(shape))
+    for d in shape:
+        buf += struct.pack("<Q", d)
+    flat = np.ascontiguousarray(data, dtype="<f4").reshape(-1)
+    assert flat.size == int(np.prod(shape)), name
+    return buf + flat.tobytes()
+
+tensors = [
+    ("conv0.w", [4, 1, 3, 3], w0),
+    ("conv0.b", [4], b0),
+    ("conv1.w", [4, 4, 3, 3], w1),
+    ("conv1.b", [4], b1),
+    ("conv2.w", [4, 4, 3, 3], w2),
+    ("conv2.b", [4], b2),
+    ("conv3.w", [4, 4, 3, 3], w3),
+    ("conv3.b", [4], b3),
+    ("fc0.w", [3, 4], wf0),
+    ("fc0.b", [3], bf0),
+    ("golden.x", [2, 64], x),
+    ("golden.y", [2, 3], y),
+    ("golden.conv_scales", [4], np.array(conv_scales, dtype=F32)),
+    ("golden.fc_scales", [1], np.array(fc_scales, dtype=F32)),
+]
+
+body = b"MPDC" + struct.pack("<II", 1, len(tensors))
+for name, shape, data in tensors:
+    body += tensor(name, shape, data)
+body += struct.pack("<I", zlib.crc32(body) & 0xFFFFFFFF)
+
+out = Path(__file__).parent / "tiny_resnet.mpdc"
+out.write_bytes(body)
+print(f"wrote {out} ({len(body)} bytes); logits: {y.tolist()}")
