@@ -13,8 +13,9 @@
 use mpdc::compress::conv_model::{ConvNetParams, PackedConvNet};
 use mpdc::compress::{ConvCompressor, ConvModelPlan};
 use mpdc::config::EngineConfig;
+use mpdc::exec::{Executor, ScratchArena};
 use mpdc::mask::prng::Xoshiro256pp;
-use mpdc::quant::{calibrate_conv, QuantizedConvNet};
+use mpdc::quant::{calibrate_conv, ConvCalibration, QuantizedConvNet};
 use mpdc::server::metrics::Histogram;
 use mpdc::util::benchkit::{black_box, Table};
 use mpdc::util::json::{append_jsonl, Json};
@@ -35,6 +36,43 @@ fn measure(iters: usize, mut f: impl FnMut()) -> Histogram {
         h.record(t0.elapsed());
     }
     h
+}
+
+/// ISSUE 10 spot check: run one executor on the serving hot path under
+/// per-op profiling and return (e2e p50 µs, attributed conv-stage µs per
+/// call) — the conv stage being every op up to the last spatial op.
+fn profiled_conv_stage(exec: Executor, iters: usize) -> (f64, f64) {
+    let exec = exec.with_profiling();
+    let stage_end = exec
+        .plan()
+        .ops
+        .iter()
+        .rposition(|p| {
+            matches!(
+                p.op.name(),
+                "im2col"
+                    | "rows_to_nchw"
+                    | "max_pool"
+                    | "avg_pool"
+                    | "skip_save"
+                    | "residual_add"
+                    | "gemm_f32_fused_im2col"
+                    | "gemm_i8_fused_im2col"
+            )
+        })
+        .map_or(0, |i| i + 1);
+    let x: Vec<f32> = (0..exec.in_dim()).map(|i| (i as f32 * 0.013).sin()).collect();
+    let mut scratch = ScratchArena::for_plan(exec.plan(), 1);
+    let mut out = vec![0.0f32; exec.out_dim()];
+    let h = measure(iters, || {
+        exec.run_into(&x, 1, &mut out, &mut scratch);
+        black_box(&out);
+    });
+    let prof = exec.profile().expect("profiling on");
+    let conv_ns: u64 =
+        prof.rows().iter().filter(|r| r.index < stage_end).map(|r| r.total_ns).sum();
+    // Normalize by recorded runs (warmup included), not `iters`.
+    (h.percentile_us(0.5), conv_ns as f64 / 1e3 / prof.runs().max(1) as f64)
 }
 
 fn main() {
@@ -133,5 +171,64 @@ fn main() {
     for (a, b) in yp.iter().zip(&yd) {
         assert!((a - b).abs() <= 1e-3 * (1.0 + a.abs().max(b.abs())), "{a} vs {b}");
     }
+
+    // ISSUE 10 spot check: implicit-GEMM (fused) vs materialized
+    // im2col→gather→GEMM (unfused) conv-stage time on alexnet_lite, both
+    // dtypes. The full fused-vs-unfused matrix with the CI perf gate lives
+    // in `benches/fusion_speedup.rs` (results/BENCH_10.json).
+    let a_comp = ConvCompressor::new(ConvModelPlan::alexnet_lite(4, 16), 42);
+    let a_params = a_comp.random_masked_params(7);
+    let a_cal = ConvCalibration::unit_range(a_comp.plan.convs.len(), a_comp.fc.nlayers());
+    let pairs: Vec<(&str, Executor, Executor)> = vec![
+        (
+            "f32",
+            PackedConvNet::build(&a_comp, &a_params).expect("fused f32").into_executor(),
+            PackedConvNet::build_unfused(&a_comp, &a_params)
+                .expect("unfused f32")
+                .into_executor(),
+        ),
+        (
+            "int8",
+            QuantizedConvNet::quantize(&a_comp, &a_params, &a_cal)
+                .expect("fused i8")
+                .into_executor(),
+            QuantizedConvNet::quantize_unfused(&a_comp, &a_params, &a_cal)
+                .expect("unfused i8")
+                .into_executor(),
+        ),
+    ];
+    let mut ft = Table::new(&[
+        "alexnet_lite",
+        "fused p50 µs",
+        "unfused p50 µs",
+        "fused conv µs",
+        "unfused conv µs",
+        "conv speedup",
+    ]);
+    for (dtype, fused_exec, unfused_exec) in pairs {
+        let (fp50, fconv) = profiled_conv_stage(fused_exec, iters);
+        let (up50, uconv) = profiled_conv_stage(unfused_exec, iters);
+        let stage_speedup = uconv / fconv.max(1e-9);
+        ft.row(&[
+            dtype.to_string(),
+            format!("{fp50:.0}"),
+            format!("{up50:.0}"),
+            format!("{fconv:.0}"),
+            format!("{uconv:.0}"),
+            format!("{stage_speedup:.2}×"),
+        ]);
+        let _ = append_jsonl(
+            std::path::Path::new("results/conv_speedup.jsonl"),
+            &Json::obj(vec![
+                ("engine", Json::str(format!("alexnet-lite-{dtype}"))),
+                ("fused_p50_us", Json::num(fp50)),
+                ("unfused_p50_us", Json::num(up50)),
+                ("fused_conv_stage_us", Json::num(fconv)),
+                ("unfused_conv_stage_us", Json::num(uconv)),
+                ("conv_stage_speedup", Json::num(stage_speedup)),
+            ]),
+        );
+    }
+    println!("{}", ft.render());
     println!("OK");
 }

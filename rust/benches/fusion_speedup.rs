@@ -1,0 +1,219 @@
+//! Fusion-pass bench (ISSUE 10): fused vs unfused plans for the conv models
+//! under the unified interpreter — end-to-end p50/p99 on the serving hot
+//! path, per-op-attributed conv-stage time (implicit-GEMM vs
+//! im2col→gather→GEMM), and the scratch-arena peak each plan requests.
+//! Emits the machine-readable `results/BENCH_10.json` (repo root,
+//! CWD-independent) which CI validates, perf-gates, and uploads as a
+//! workflow artifact.
+//!
+//! ```bash
+//! cargo bench --bench fusion_speedup                # quick (CI) preset
+//! MPDC_FUSION_ITERS=2000 cargo bench --bench fusion_speedup
+//! ```
+
+use mpdc::compress::compressor::MpdCompressor;
+use mpdc::compress::conv_model::PackedConvNet;
+use mpdc::compress::packed_model::PackedMlp;
+use mpdc::compress::plan::SparsityPlan;
+use mpdc::compress::{ConvCompressor, ConvModelPlan};
+use mpdc::exec::{Executor, ScratchArena};
+use mpdc::linalg::kernel::cpu_features;
+use mpdc::quant::{Calibration, ConvCalibration, QuantizedConvNet, QuantizedMlp};
+use mpdc::util::benchkit::{black_box, results_dir, Table};
+use mpdc::util::json::Json;
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn percentile_us(samples: &mut [f64], q: f64) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((samples.len() - 1) as f64 * q).round() as usize;
+    samples[idx]
+}
+
+/// Ops at or before the last spatial op (im2col / pools / layout and
+/// residual plumbing) form the conv stage; everything after is the FC head.
+fn conv_stage_end(exec: &Executor) -> usize {
+    exec.plan()
+        .ops
+        .iter()
+        .rposition(|p| {
+            matches!(
+                p.op.name(),
+                "im2col"
+                    | "rows_to_nchw"
+                    | "max_pool"
+                    | "avg_pool"
+                    | "skip_save"
+                    | "residual_add"
+                    | "gemm_f32_fused_im2col"
+                    | "gemm_i8_fused_im2col"
+            )
+        })
+        .map_or(0, |i| i + 1)
+}
+
+struct Cell {
+    p50_us: f64,
+    p99_us: f64,
+    rps: f64,
+    /// Per-op-attributed conv-stage time per call, µs.
+    conv_stage_us: f64,
+    arena_bytes: usize,
+}
+
+/// Serving hot path (`run_into`, warmed arena) with per-op profiling on;
+/// conv-stage time is the attributed total over the spatial prefix.
+fn measure(exec: Executor, iters: usize) -> Cell {
+    let exec = exec.with_profiling();
+    let batch = 1;
+    let arena_bytes = exec.plan().arena_bytes(batch);
+    let stage_end = conv_stage_end(&exec);
+    let x: Vec<f32> = (0..exec.in_dim()).map(|i| (i as f32 * 0.013).sin()).collect();
+    let mut scratch = ScratchArena::for_plan(exec.plan(), batch);
+    let mut out = vec![0.0f32; exec.out_dim()];
+    for _ in 0..(iters / 10).max(5) {
+        exec.run_into(&x, batch, &mut out, &mut scratch);
+    }
+    let prof = exec.profile().expect("profiling on").clone();
+    prof.reset();
+    let mut samples = Vec::with_capacity(iters);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let t = Instant::now();
+        exec.run_into(&x, batch, &mut out, &mut scratch);
+        black_box(&out);
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    let total = t0.elapsed().as_secs_f64();
+    let conv_ns: u64 =
+        prof.rows().iter().filter(|r| r.index < stage_end).map(|r| r.total_ns).sum();
+    Cell {
+        p50_us: percentile_us(&mut samples, 0.5),
+        p99_us: percentile_us(&mut samples, 0.99),
+        rps: iters as f64 / total,
+        conv_stage_us: conv_ns as f64 / 1e3 / iters as f64,
+        arena_bytes,
+    }
+}
+
+fn cell_json(c: &Cell) -> Json {
+    Json::obj(vec![
+        ("p50_us", Json::num(c.p50_us)),
+        ("p99_us", Json::num(c.p99_us)),
+        ("rps", Json::num(c.rps)),
+        ("conv_stage_us", Json::num(c.conv_stage_us)),
+        ("arena_bytes", Json::num(c.arena_bytes as f64)),
+    ])
+}
+
+fn main() {
+    let iters = env_usize("MPDC_FUSION_ITERS", 200);
+
+    // (kind, model, dtype, fused, unfused): conv pairs exercise the
+    // implicit-GEMM path, MLP pairs the gather-fused FC packing alone.
+    let mlp_comp = MpdCompressor::new(SparsityPlan::lenet300(10), 42);
+    let (mw, mb) = mlp_comp.random_masked_weights(7);
+    let mcal = Calibration::unit_range(3);
+    let mut pairs: Vec<(&str, &str, &str, Executor, Executor)> = vec![
+        (
+            "mlp",
+            "lenet300",
+            "f32",
+            PackedMlp::build(&mlp_comp, &mw, &mb).into_executor(),
+            PackedMlp::build_unfused(&mlp_comp, &mw, &mb).into_executor(),
+        ),
+        (
+            "mlp",
+            "lenet300",
+            "int8",
+            QuantizedMlp::quantize(&mlp_comp, &mw, &mb, &mcal).expect("fused i8").into_executor(),
+            QuantizedMlp::quantize_unfused(&mlp_comp, &mw, &mb, &mcal)
+                .expect("unfused i8")
+                .into_executor(),
+        ),
+    ];
+    for (name, plan) in [
+        ("deep_mnist_lite", ConvModelPlan::deep_mnist_lite(8)),
+        ("alexnet_lite", ConvModelPlan::alexnet_lite(4, 16)),
+    ] {
+        let comp = ConvCompressor::new(plan, 42);
+        let params = comp.random_masked_params(7);
+        let cal = ConvCalibration::unit_range(comp.plan.convs.len(), comp.fc.nlayers());
+        pairs.push((
+            "conv",
+            name,
+            "f32",
+            PackedConvNet::build(&comp, &params).expect("fused f32").into_executor(),
+            PackedConvNet::build_unfused(&comp, &params).expect("unfused f32").into_executor(),
+        ));
+        pairs.push((
+            "conv",
+            name,
+            "int8",
+            QuantizedConvNet::quantize(&comp, &params, &cal).expect("fused i8").into_executor(),
+            QuantizedConvNet::quantize_unfused(&comp, &params, &cal)
+                .expect("unfused i8")
+                .into_executor(),
+        ));
+    }
+
+    let mut table =
+        Table::new(&["model", "dtype", "variant", "p50 µs", "conv-stage µs", "arena KiB"]);
+    let mut rows: Vec<Json> = Vec::new();
+    for (kind, name, dtype, fused_exec, unfused_exec) in pairs {
+        let fused = measure(fused_exec, iters);
+        let unfused = measure(unfused_exec, iters);
+        for (variant, c) in [("fused", &fused), ("unfused", &unfused)] {
+            table.row(&[
+                name.to_string(),
+                dtype.to_string(),
+                variant.to_string(),
+                format!("{:.1}", c.p50_us),
+                format!("{:.1}", c.conv_stage_us),
+                format!("{:.1}", c.arena_bytes as f64 / 1024.0),
+            ]);
+        }
+        let arena_reduction = 1.0 - fused.arena_bytes as f64 / unfused.arena_bytes as f64;
+        let mut row = vec![
+            ("kind", Json::str(kind)),
+            ("model", Json::str(name)),
+            ("dtype", Json::str(dtype)),
+            ("fused", cell_json(&fused)),
+            ("unfused", cell_json(&unfused)),
+            ("e2e_speedup", Json::num(unfused.p50_us / fused.p50_us.max(1e-9))),
+            ("arena_reduction", Json::num(arena_reduction)),
+        ];
+        if kind == "conv" {
+            row.push((
+                "conv_stage_speedup",
+                Json::num(unfused.conv_stage_us / fused.conv_stage_us.max(1e-9)),
+            ));
+            // The fused conv plan must request strictly less scratch: the
+            // patch matrix is gone, replaced by the fixed-size A-panel slab.
+            // (MLP plans trade a gather buffer for the panel, so no claim.)
+            assert!(
+                fused.arena_bytes < unfused.arena_bytes,
+                "{name}/{dtype}: fused arena {} !< unfused {}",
+                fused.arena_bytes,
+                unfused.arena_bytes
+            );
+        }
+        rows.push(Json::obj(row));
+    }
+    println!("{}", table.render());
+
+    let features: Vec<Json> = cpu_features().iter().map(|f| Json::str(*f)).collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fusion_speedup")),
+        ("batch", Json::num(1.0)),
+        ("iters", Json::num(iters as f64)),
+        ("cpu_features", Json::Arr(features)),
+        ("models", Json::Arr(rows)),
+    ]);
+    let path = results_dir().join("BENCH_10.json");
+    std::fs::write(&path, doc.to_string()).expect("write BENCH_10.json");
+    println!("wrote {}", path.display());
+}

@@ -211,7 +211,7 @@ impl MpdCompressor {
         cfg: &crate::config::EngineConfig,
     ) -> Result<crate::exec::Executor, String> {
         cfg.validate()?;
-        let plan = crate::exec::lower_mlp(self, weights, biases, calib, prec)?;
+        let plan = crate::exec::fuse_plan(crate::exec::lower_mlp(self, weights, biases, calib, prec)?);
         crate::exec::Executor::new(plan).with_engine_config(cfg)
     }
 

@@ -428,7 +428,21 @@ impl PackedConvNet {
     }
 
     /// Build from a compressor and trained parameters (masked-dense layout).
+    /// The plan runs through [`crate::exec::fuse_plan`]: each conv stage's
+    /// `im2col → gather → gemm` chain becomes one implicit-GEMM op (the
+    /// patch matrix never hits the arena) and FC-head gathers fold into
+    /// their GEMM's A-panel pack. Output is bit-identical per dispatch ISA.
     pub fn build(comp: &ConvCompressor, params: &ConvNetParams) -> Result<Self, PlanError> {
+        Ok(Self::from_executor(Executor::new(crate::exec::fuse_plan(Self::lower(comp, params)?))))
+    }
+
+    /// [`Self::build`] without the fusion pass — the materializing baseline
+    /// kept for fused-vs-unfused benches and differential tests.
+    pub fn build_unfused(comp: &ConvCompressor, params: &ConvNetParams) -> Result<Self, PlanError> {
+        Ok(Self::from_executor(Executor::new(Self::lower(comp, params)?)))
+    }
+
+    fn lower(comp: &ConvCompressor, params: &ConvNetParams) -> Result<crate::exec::ExecPlan, PlanError> {
         let (stages, _) = Self::build_stages(comp, params);
         let nfc = comp.fc.nlayers();
         let head = lower_mlp(&comp.fc, &params.fc_w, &params.fc_b, None, &vec![Precision::F32; nfc])
@@ -439,7 +453,7 @@ impl PackedConvNet {
             b.block_gemm_f32(bd, bias, relu)
         })?;
         b.append_plan(head);
-        Ok(Self::from_executor(Executor::new(b.finish())))
+        Ok(b.finish())
     }
 
     pub(crate) fn from_executor(exec: Executor) -> Self {

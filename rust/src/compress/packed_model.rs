@@ -40,14 +40,31 @@ pub struct PackedMlp {
 impl PackedMlp {
     /// Build from a compressor (masks + plan) and trained per-layer weights
     /// and biases. ReLU is inserted between layers (fused into the preceding
-    /// FC op), none after the last.
+    /// FC op), none after the last. The lowered plan runs through
+    /// [`crate::exec::fuse_plan`]: inter-layer gathers fold into the next
+    /// GEMM's A-panel pack (output is bit-identical per dispatch ISA).
     pub fn build(comp: &MpdCompressor, weights: &[Vec<f32>], biases: &[Vec<f32>]) -> Self {
+        Self::from_executor(Executor::new(crate::exec::fuse_plan(Self::lower(
+            comp, weights, biases,
+        ))))
+    }
+
+    /// [`Self::build`] without the fusion pass — the materializing baseline
+    /// kept for fused-vs-unfused benches and differential tests.
+    pub fn build_unfused(comp: &MpdCompressor, weights: &[Vec<f32>], biases: &[Vec<f32>]) -> Self {
+        Self::from_executor(Executor::new(Self::lower(comp, weights, biases)))
+    }
+
+    fn lower(
+        comp: &MpdCompressor,
+        weights: &[Vec<f32>],
+        biases: &[Vec<f32>],
+    ) -> crate::exec::ExecPlan {
         let n = comp.nlayers();
         assert_eq!(weights.len(), n);
         assert_eq!(biases.len(), n);
-        let plan = lower_mlp(comp, weights, biases, None, &vec![Precision::F32; n])
-            .expect("f32 MLP lowering");
-        Self::from_executor(Executor::new(plan))
+        lower_mlp(comp, weights, biases, None, &vec![Precision::F32; n])
+            .expect("f32 MLP lowering")
     }
 
     /// Wrap an already-lowered executor (the mixed-precision and
@@ -233,6 +250,20 @@ mod tests {
         let x: Vec<f32> = (0..3 * 784).map(|_| rng.next_f32()).collect();
         // tile shape and pool must not change the computed values at all
         assert_eq!(base.forward(&x, 3), tuned.forward(&x, 3));
+    }
+
+    #[test]
+    fn fused_build_matches_unfused_bit_exact() {
+        let plan = SparsityPlan::lenet300(10);
+        let (comp, _, weights, biases) = build_trained(&plan, 37);
+        let fused = PackedMlp::build(&comp, &weights, &biases);
+        let unfused = PackedMlp::build_unfused(&comp, &weights, &biases);
+        let mut rng = Xoshiro256pp::seed_from_u64(41);
+        let x: Vec<f32> = (0..3 * 784).map(|_| rng.next_f32()).collect();
+        assert_eq!(fused.forward(&x, 3), unfused.forward(&x, 3));
+        // fusion must not alter the semantic counters
+        assert_eq!(fused.n_gathers, unfused.n_gathers);
+        assert_eq!(fused.macs_per_sample, unfused.macs_per_sample);
     }
 
     #[test]

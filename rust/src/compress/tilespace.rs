@@ -120,6 +120,201 @@ pub fn interlayer_gather(prev: &MpdMask, next: &MpdMask) -> Vec<u32> {
     g
 }
 
+// ---------------------------------------------------------------------------
+// Micro-kernel tile autotuner
+// ---------------------------------------------------------------------------
+
+use crate::linalg::blockdiag_mm::{BlockDiagMatrix, TileShape};
+use crate::linalg::blockdiag_mm_i8::{quantize_slice_into, QuantizedBlockDiagMatrix};
+use crate::linalg::pool::ThreadPool;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Every const-generic micro-kernel instantiation the scalar GEMM dispatch
+/// supports — the autotuner's sweep space ({1,2,4,8} × {1,2,4,8}).
+pub const TILE_CANDIDATES: [TileShape; 16] = [
+    TileShape { batch: 1, rows: 1 },
+    TileShape { batch: 1, rows: 2 },
+    TileShape { batch: 1, rows: 4 },
+    TileShape { batch: 1, rows: 8 },
+    TileShape { batch: 2, rows: 1 },
+    TileShape { batch: 2, rows: 2 },
+    TileShape { batch: 2, rows: 4 },
+    TileShape { batch: 2, rows: 8 },
+    TileShape { batch: 4, rows: 1 },
+    TileShape { batch: 4, rows: 2 },
+    TileShape { batch: 4, rows: 4 },
+    TileShape { batch: 4, rows: 8 },
+    TileShape { batch: 8, rows: 1 },
+    TileShape { batch: 8, rows: 2 },
+    TileShape { batch: 8, rows: 4 },
+    TileShape { batch: 8, rows: 8 },
+];
+
+/// Synthetic batch used for tuning runs — matches `PANEL_CHUNK`, so the
+/// measurement exercises exactly the row-chunk geometry of the fused
+/// implicit-GEMM path as well as the materialized one.
+const TUNE_BATCH: usize = 8;
+/// Timed repetitions per candidate (after one untimed warm-up call).
+const TUNE_REPS: usize = 4;
+
+/// Persisted cache of measured best micro-kernel tiles, keyed by GEMM
+/// geometry + dtype + detected ISA (tile choice is machine-specific, so the
+/// ISA is part of the key and a cache moved across machines simply re-tunes).
+///
+/// File format (`results/TUNE_10.json`):
+/// `{"version":1,"entries":{"r300xc784xb10:f32:scalar":{"batch":4,"rows":8}}}`
+pub struct TileTuner {
+    entries: BTreeMap<String, TileShape>,
+}
+
+impl Default for TileTuner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TileTuner {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self { entries: BTreeMap::new() }
+    }
+
+    /// Default on-disk location: `results/TUNE_10.json` next to the bench
+    /// artifacts (honors `MPDC_RESULTS_DIR` via [`crate::util::benchkit`]).
+    pub fn default_path() -> PathBuf {
+        crate::util::benchkit::results_dir().join("TUNE_10.json")
+    }
+
+    /// Load a cache from `path`. A missing, unreadable, or malformed file
+    /// yields an empty cache (the tuner then re-measures and re-persists);
+    /// entries with out-of-range tile axes are dropped on load.
+    pub fn load(path: &Path) -> Self {
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return Self::new();
+        };
+        let Ok(doc) = Json::parse(&text) else {
+            return Self::new();
+        };
+        let mut entries = BTreeMap::new();
+        if let Some(Json::Obj(map)) = doc.get("entries") {
+            for (k, v) in map {
+                let (Some(batch), Some(rows)) = (
+                    v.get("batch").and_then(Json::as_usize),
+                    v.get("rows").and_then(Json::as_usize),
+                ) else {
+                    continue;
+                };
+                let tile = TileShape { batch, rows };
+                if tile.validate().is_ok() {
+                    entries.insert(k.clone(), tile);
+                }
+            }
+        }
+        Self { entries }
+    }
+
+    /// Write the cache to `path`, creating parent directories as needed.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let entries: BTreeMap<String, Json> = self
+            .entries
+            .iter()
+            .map(|(k, t)| {
+                let tile = Json::obj(vec![
+                    ("batch", Json::num(t.batch as f64)),
+                    ("rows", Json::num(t.rows as f64)),
+                ]);
+                (k.clone(), tile)
+            })
+            .collect();
+        let doc = Json::obj(vec![("version", Json::num(1.0)), ("entries", Json::Obj(entries))]);
+        std::fs::write(path, doc.to_string() + "\n")
+    }
+
+    /// Cache key for one GEMM: geometry, dtype (`"f32"`/`"i8"`), ISA name.
+    pub fn key(rows: usize, cols: usize, nblocks: usize, dtype: &str, isa: &str) -> String {
+        format!("r{rows}xc{cols}xb{nblocks}:{dtype}:{isa}")
+    }
+
+    pub fn get(&self, key: &str) -> Option<TileShape> {
+        self.entries.get(key).copied()
+    }
+
+    pub fn insert(&mut self, key: String, tile: TileShape) {
+        self.entries.insert(key, tile);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Deterministic synthetic activations for tuning (values are irrelevant to
+/// timing; a fixed pattern keeps runs reproducible without pulling in RNG).
+fn tune_input(n: usize) -> Vec<f32> {
+    (0..n).map(|i| (i % 97) as f32 * 0.02 - 0.97).collect()
+}
+
+/// Measure the fastest scalar micro-kernel tile for one f32 block GEMM: a
+/// short argmin sweep over [`TILE_CANDIDATES`] at `TUNE_BATCH` rows. Only
+/// meaningful for the scalar dispatch path — SIMD kernels ignore the tile.
+pub fn best_tile_f32(bd: &BlockDiagMatrix, pool: Option<&ThreadPool>) -> TileShape {
+    let (rows, cols) = (bd.layout.rows, bd.layout.cols);
+    let x = tune_input(TUNE_BATCH * cols);
+    let bias = vec![0.1f32; rows];
+    let mut y = vec![0.0f32; TUNE_BATCH * rows];
+    let mut best = (TileShape::DEFAULT, std::time::Duration::MAX);
+    for &tile in TILE_CANDIDATES.iter() {
+        bd.forward_fused(&x, &mut y, TUNE_BATCH, &bias, true, pool, tile);
+        let t0 = std::time::Instant::now();
+        for _ in 0..TUNE_REPS {
+            bd.forward_fused(&x, &mut y, TUNE_BATCH, &bias, true, pool, tile);
+        }
+        let dt = t0.elapsed();
+        crate::util::benchkit::black_box(&y);
+        if dt < best.1 {
+            best = (tile, dt);
+        }
+    }
+    best.0
+}
+
+/// [`best_tile_f32`] for a quantized block GEMM.
+pub fn best_tile_i8(
+    qbd: &QuantizedBlockDiagMatrix,
+    act_scale: f32,
+    pool: Option<&ThreadPool>,
+) -> TileShape {
+    let (rows, cols) = (qbd.layout.rows, qbd.layout.cols);
+    let xf = tune_input(TUNE_BATCH * cols);
+    let mut xq = Vec::new();
+    quantize_slice_into(&xf, act_scale, &mut xq);
+    let bias = vec![0.1f32; rows];
+    let mut y = vec![0.0f32; TUNE_BATCH * rows];
+    let mut best = (TileShape::DEFAULT, std::time::Duration::MAX);
+    for &tile in TILE_CANDIDATES.iter() {
+        qbd.forward_fused(&xq, &mut y, TUNE_BATCH, act_scale, &bias, true, pool, tile);
+        let t0 = std::time::Instant::now();
+        for _ in 0..TUNE_REPS {
+            qbd.forward_fused(&xq, &mut y, TUNE_BATCH, act_scale, &bias, true, pool, tile);
+        }
+        let dt = t0.elapsed();
+        crate::util::benchkit::black_box(&y);
+        if dt < best.1 {
+            best = (tile, dt);
+        }
+    }
+    best.0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -222,5 +417,41 @@ mod tests {
                 assert!((got - y_ref[bi * 16 + c]).abs() < 1e-4);
             }
         }
+    }
+
+    #[test]
+    fn tile_tuner_roundtrips_through_json() {
+        let mut tuner = TileTuner::new();
+        assert!(tuner.is_empty());
+        let k1 = TileTuner::key(300, 784, 10, "f32", "scalar");
+        assert_eq!(k1, "r300xc784xb10:f32:scalar");
+        tuner.insert(k1.clone(), TileShape { batch: 2, rows: 8 });
+        tuner.insert(TileTuner::key(100, 300, 10, "i8", "avx2_fma"), TileShape { batch: 8, rows: 4 });
+        let dir = std::env::temp_dir().join(format!("mpdc_tune_{}", std::process::id()));
+        let path = dir.join("TUNE_10.json");
+        tuner.save(&path).unwrap();
+        let back = TileTuner::load(&path);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get(&k1), Some(TileShape { batch: 2, rows: 8 }));
+        assert_eq!(
+            back.get("r100xc300xb10:i8:avx2_fma"),
+            Some(TileShape { batch: 8, rows: 4 })
+        );
+        std::fs::remove_dir_all(&dir).ok();
+        // missing file → empty cache, not an error
+        assert!(TileTuner::load(&path).is_empty());
+    }
+
+    #[test]
+    fn tuner_sweep_returns_valid_tiles() {
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let layout = crate::mask::blockdiag::BlockDiagLayout::new(40, 30, 4);
+        let packed: Vec<f32> = (0..layout.nnz()).map(|_| rng.next_f32() - 0.5).collect();
+        let bd = crate::linalg::blockdiag_mm::BlockDiagMatrix::from_packed(packed, layout);
+        let t = best_tile_f32(&bd, None);
+        assert!(t.validate().is_ok());
+        let qbd = QuantizedBlockDiagMatrix::from_f32(&bd);
+        let tq = best_tile_i8(&qbd, 0.02, None);
+        assert!(tq.validate().is_ok());
     }
 }

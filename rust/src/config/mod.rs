@@ -188,6 +188,13 @@ pub struct EngineConfig {
     /// bit-identical either way; f32 differs by the pinned-reorder bound
     /// (see DESIGN.md §SIMD).
     pub simd: bool,
+    /// Measured tile autotuning at engine build: sweep the micro-kernel tile
+    /// instantiations per block GEMM and pin the fastest on each op, cached
+    /// in `results/TUNE_10.json` keyed by geometry/dtype/ISA (DESIGN.md
+    /// §Fusion). Only affects scalar-dispatched GEMMs — SIMD kernels ignore
+    /// the tile — and never changes scalar output bits (accumulation order
+    /// is tile-independent).
+    pub autotune: bool,
 }
 
 impl Default for EngineConfig {
@@ -197,6 +204,7 @@ impl Default for EngineConfig {
             tile_batch: crate::linalg::TileShape::DEFAULT.batch,
             tile_rows: crate::linalg::TileShape::DEFAULT.rows,
             simd: true,
+            autotune: false,
         }
     }
 }
@@ -556,6 +564,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_bool("engine.simd") {
             cfg.engine.simd = v;
         }
+        if let Some(v) = doc.get_bool("engine.autotune") {
+            cfg.engine.autotune = v;
+        }
         if let Some(v) = doc.get_str("server.host") {
             cfg.server.host = v.to_string();
         }
@@ -738,11 +749,18 @@ pool_threads = 4
 tile_batch = 2
 tile_rows = 8
 simd = false
+autotune = true
 "#;
         let cfg = ExperimentConfig::from_toml(text).unwrap();
         assert_eq!(
             cfg.engine,
-            EngineConfig { pool_threads: 4, tile_batch: 2, tile_rows: 8, simd: false }
+            EngineConfig {
+                pool_threads: 4,
+                tile_batch: 2,
+                tile_rows: 8,
+                simd: false,
+                autotune: true,
+            }
         );
         assert_eq!(cfg.engine.tile(), crate::linalg::TileShape { batch: 2, rows: 8 });
         // defaults when the table is absent (simd defaults on)

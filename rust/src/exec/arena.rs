@@ -35,12 +35,24 @@ pub struct ScratchArena {
     pub(crate) q: Vec<i8>,
     /// Pinned residual skip slots, indexed by `Op::SkipSave { slot }`.
     pub(crate) skip: Vec<Vec<f32>>,
+    /// f32 pack panel for fused implicit-GEMM ops (batch-independent: one
+    /// `PANEL_CHUNK`-row slab per block of the widest fused op).
+    pub(crate) panel: Vec<f32>,
+    /// i8 pack panel for fused quantized ops.
+    pub(crate) qpanel: Vec<i8>,
 }
 
 impl ScratchArena {
     /// An empty arena; capacity grows on first use.
     pub fn new() -> Self {
-        Self { a: Vec::new(), b: Vec::new(), q: Vec::new(), skip: Vec::new() }
+        Self {
+            a: Vec::new(),
+            b: Vec::new(),
+            q: Vec::new(),
+            skip: Vec::new(),
+            panel: Vec::new(),
+            qpanel: Vec::new(),
+        }
     }
 
     /// An arena pre-sized for `plan` at up to `max_batch` samples.
@@ -75,14 +87,27 @@ impl ScratchArena {
                 buf.reserve(need - buf.len());
             }
         }
+        // The fused pack panels are resized-in-place by the kernels, so
+        // warming them to the plan's high-water mark makes that a no-op on
+        // the hot path (the panels are batch-independent).
+        let panel_elems = plan.max_panel_f32_elems();
+        if self.panel.len() < panel_elems {
+            self.panel.resize(panel_elems, 0.0);
+        }
+        let qpanel_elems = plan.max_panel_i8_elems();
+        if self.qpanel.len() < qpanel_elems {
+            self.qpanel.resize(qpanel_elems, 0);
+        }
     }
 
     /// Current heap footprint of the arena (capacity, not logical length).
     pub fn capacity_bytes(&self) -> usize {
         (self.a.capacity()
             + self.b.capacity()
+            + self.panel.capacity()
             + self.skip.iter().map(Vec::capacity).sum::<usize>())
             * 4
             + self.q.capacity()
+            + self.qpanel.capacity()
     }
 }

@@ -34,13 +34,16 @@
 //! allocating [`Executor::run`] convenience exists for tests, trainers, and
 //! benches where a fresh `Vec` per call is fine.
 
+use crate::compress::tilespace::{best_tile_f32, best_tile_i8, TileTuner};
 use crate::config::EngineConfig;
 use crate::exec::arena::ScratchArena;
 use crate::exec::plan::{ExecPlan, Op, PlannedOp, PoolChoice};
 use crate::linalg::blockdiag_mm::TileShape;
 use crate::linalg::blockdiag_mm_i8::quantize_slice_into;
 use crate::linalg::gemm::gemm_a_bt;
-use crate::linalg::im2col::{avgpool_nchw, gather_cols, gather_cols_isa, im2col, maxpool_nchw, rows_to_nchw};
+use crate::linalg::im2col::{
+    avgpool_nchw, gather_cols, gather_cols_isa, im2col, maxpool_nchw, rows_to_nchw, PanelSource,
+};
 use crate::linalg::kernel::{self, KernelChoice};
 use crate::linalg::pool::ThreadPool;
 use crate::obs::profile::{ExecProfile, OpMeta};
@@ -187,15 +190,92 @@ impl Executor {
 
     /// Apply an [`EngineConfig`]: pool sizing (0 = global pool) + tile
     /// shape + kernel dispatch (`simd = false` pins the scalar oracle) —
-    /// the one implementation every engine wrapper delegates to.
+    /// the one implementation every engine wrapper delegates to. With
+    /// `cfg.autotune` set, runs [`Self::autotune_tiles`] against the
+    /// persisted cache at [`TileTuner::default_path`].
     pub fn with_engine_config(mut self, cfg: &EngineConfig) -> Result<Self, String> {
         cfg.validate()?;
         self.tile = cfg.tile();
         self.kernel = if cfg.simd { KernelChoice::auto() } else { KernelChoice::scalar() };
-        Ok(match cfg.pool_threads {
+        let mut this = match cfg.pool_threads {
             0 => self.with_global_pool(),
             n => self.with_threads(n),
-        })
+        };
+        if cfg.autotune {
+            let path = TileTuner::default_path();
+            let mut tuner = TileTuner::load(&path);
+            this = this.autotune_tiles(&mut tuner);
+            if let Err(e) = tuner.save(&path) {
+                eprintln!("warning: tile cache {} not persisted: {e}", path.display());
+            }
+        }
+        Ok(this)
+    }
+
+    /// Pin a measured per-op tile on every scalar-dispatched block GEMM in
+    /// the plan — fused ops included, since the fused panel path runs the
+    /// same tiled micro-kernels. Each GEMM consults `tuner` by
+    /// (geometry, dtype, ISA) key and falls back to a short argmin sweep
+    /// over the const-generic tile instantiations
+    /// ([`crate::compress::tilespace::best_tile_f32`] /
+    /// [`best_tile_i8`]), recording the winner into `tuner` for the caller
+    /// to persist. GEMMs whose resolved ISA is SIMD are skipped: those
+    /// kernels ignore the tile. Pinning a tile never changes scalar output
+    /// bits — the canonical accumulation order is tile-independent.
+    pub fn autotune_tiles(mut self, tuner: &mut TileTuner) -> Self {
+        let pool = self.pool.get();
+        for p in &mut self.plan.ops {
+            if !p.is_tileable_gemm() {
+                continue;
+            }
+            let isa = if p.uses_i8() { self.kernel.i8_isa() } else { self.kernel.f32_isa() };
+            if isa.is_simd() {
+                continue;
+            }
+            let best = match &p.op {
+                Op::BlockGemmF32 { bd, .. }
+                | Op::BlockGemmF32FusedIm2col { bd, .. }
+                | Op::BlockGemmF32FusedGather { bd, .. } => {
+                    let key = TileTuner::key(
+                        bd.layout.rows,
+                        bd.layout.cols,
+                        bd.nblocks(),
+                        "f32",
+                        isa.name(),
+                    );
+                    match tuner.get(&key) {
+                        Some(t) => t,
+                        None => {
+                            let t = best_tile_f32(bd, pool);
+                            tuner.insert(key, t);
+                            t
+                        }
+                    }
+                }
+                Op::BlockGemmI8 { qbd, act_scale, .. }
+                | Op::BlockGemmI8FusedIm2col { qbd, act_scale, .. }
+                | Op::BlockGemmI8FusedGather { qbd, act_scale, .. } => {
+                    let key = TileTuner::key(
+                        qbd.layout.rows,
+                        qbd.layout.cols,
+                        qbd.nblocks(),
+                        "i8",
+                        isa.name(),
+                    );
+                    match tuner.get(&key) {
+                        Some(t) => t,
+                        None => {
+                            let t = best_tile_i8(qbd, *act_scale, pool);
+                            tuner.insert(key, t);
+                            t
+                        }
+                    }
+                }
+                _ => continue,
+            };
+            p.tile = Some(best);
+        }
+        self
     }
 
     /// Zero-allocation forward: read `x` (`[batch × in_dim]`), write logits
@@ -206,13 +286,13 @@ impl Executor {
         let pool = self.pool.get();
         let prof = self.profile.as_deref();
         let run_t0 = prof.map(|_| Instant::now());
-        let ScratchArena { a, b, q, skip } = scratch;
+        let ScratchArena { a, b, q, skip, panel, qpanel } = scratch;
         let (mut cur, mut alt) = (a, b);
         cur.clear();
         cur.extend_from_slice(x);
         for (i, p) in self.plan.ops.iter().enumerate() {
             let op_t0 = prof.map(|_| Instant::now());
-            self.apply(p, cur, alt, q, skip, batch, pool);
+            self.apply(p, cur, alt, q, skip, panel, qpanel, batch, pool);
             if let (Some(pr), Some(t0)) = (prof, op_t0) {
                 pr.record_op(i, t0.elapsed().as_nanos() as u64);
             }
@@ -237,6 +317,7 @@ impl Executor {
     /// Execute one op: `src` is the current activation, `dst` the idle
     /// ping-pong half (resized to exact output length — every op fully
     /// overwrites its output, so stale contents are never read).
+    #[allow(clippy::too_many_arguments)]
     fn apply(
         &self,
         p: &PlannedOp,
@@ -244,10 +325,13 @@ impl Executor {
         dst: &mut Vec<f32>,
         qbuf: &mut Vec<i8>,
         skip: &mut Vec<Vec<f32>>,
+        panel: &mut Vec<f32>,
+        qpanel: &mut Vec<i8>,
         batch: usize,
         pool: Option<&ThreadPool>,
     ) {
         let nrows = batch * p.in_rows;
+        let tile = p.tile.unwrap_or(self.tile);
         debug_assert_eq!(src.len(), batch * p.in_elems(), "{}: src shape", p.op.name());
         match &p.op {
             Op::Gather { idx } => {
@@ -255,12 +339,53 @@ impl Executor {
             }
             Op::BlockGemmF32 { bd, bias, relu } => {
                 dst.resize(nrows * bd.layout.rows, 0.0);
-                bd.forward_fused_isa(src, dst, nrows, bias, *relu, pool, self.tile, self.kernel.f32_isa());
+                bd.forward_fused_isa(src, dst, nrows, bias, *relu, pool, tile, self.kernel.f32_isa());
             }
             Op::BlockGemmI8 { qbd, bias, act_scale, relu } => {
                 quantize_slice_into(src, *act_scale, qbuf);
                 dst.resize(nrows * qbd.layout.rows, 0.0);
-                qbd.forward_fused_isa(qbuf, dst, nrows, *act_scale, bias, *relu, pool, self.tile, self.kernel.i8_isa());
+                qbd.forward_fused_isa(qbuf, dst, nrows, *act_scale, bias, *relu, pool, tile, self.kernel.i8_isa());
+            }
+            Op::BlockGemmF32FusedIm2col { bd, bias, relu, shape, taps } => {
+                // Implicit-GEMM conv: the patch matrix is never materialized;
+                // A-rows are gathered from the flat NCHW `src` during the
+                // panel pack. One GEMM row per output patch.
+                let gemm_rows = batch * p.out_rows;
+                let psrc = PanelSource::Im2col { shape, taps };
+                dst.resize(gemm_rows * bd.layout.rows, 0.0);
+                bd.forward_panel_isa(
+                    src, dst, gemm_rows, &psrc, bias, *relu, pool, tile,
+                    self.kernel.f32_isa(), panel,
+                );
+            }
+            Op::BlockGemmI8FusedIm2col { qbd, bias, act_scale, relu, shape, taps } => {
+                // Quantize the flat NCHW input once; patch rows are gathered
+                // from the i8 buffer (quantization commutes with the gather).
+                quantize_slice_into(src, *act_scale, qbuf);
+                let gemm_rows = batch * p.out_rows;
+                let psrc = PanelSource::Im2col { shape, taps };
+                dst.resize(gemm_rows * qbd.layout.rows, 0.0);
+                qbd.forward_panel_isa(
+                    qbuf, dst, gemm_rows, &psrc, *act_scale, bias, *relu, pool, tile,
+                    self.kernel.i8_isa(), qpanel,
+                );
+            }
+            Op::BlockGemmF32FusedGather { bd, bias, relu, idx } => {
+                let psrc = PanelSource::Gather { idx, src_dim: p.in_cols };
+                dst.resize(nrows * bd.layout.rows, 0.0);
+                bd.forward_panel_isa(
+                    src, dst, nrows, &psrc, bias, *relu, pool, tile, self.kernel.f32_isa(),
+                    panel,
+                );
+            }
+            Op::BlockGemmI8FusedGather { qbd, bias, act_scale, relu, idx } => {
+                quantize_slice_into(src, *act_scale, qbuf);
+                let psrc = PanelSource::Gather { idx, src_dim: p.in_cols };
+                dst.resize(nrows * qbd.layout.rows, 0.0);
+                qbd.forward_panel_isa(
+                    qbuf, dst, nrows, &psrc, *act_scale, bias, *relu, pool, tile,
+                    self.kernel.i8_isa(), qpanel,
+                );
             }
             Op::DenseGemm { w, bias, out_dim, in_dim, relu } => {
                 dst.resize(nrows * out_dim, 0.0);
@@ -363,6 +488,8 @@ impl Executor {
         let mut scratch: Vec<f32> = Vec::new();
         let mut err_scratch: Vec<f32> = Vec::new();
         let mut qbuf: Vec<i8> = Vec::new();
+        let mut panel: Vec<f32> = Vec::new();
+        let mut qpanel: Vec<i8> = Vec::new();
         // Residual skip slots for both streams. A `None` error snapshot
         // means the saved bound was identically zero (same lazy convention
         // as the main stream).
@@ -375,7 +502,7 @@ impl Executor {
             // quantizes into qbuf itself — `apply` then re-quantizes the
             // identical bytes), then the value op, then swap both streams.
             let wrote = self.apply_bound(p, &act, err.as_deref(), &mut err_scratch, &mut qbuf, &mut skip_err, batch);
-            self.apply(p, &act, &mut scratch, &mut qbuf, &mut skip_val, batch, pool);
+            self.apply(p, &act, &mut scratch, &mut qbuf, &mut skip_val, &mut panel, &mut qpanel, batch, pool);
             std::mem::swap(&mut act, &mut scratch);
             if wrote {
                 match &mut err {
@@ -516,6 +643,28 @@ impl Executor {
                 }
                 true
             }
+            // Fused pack-gather GEMMs: same formulas as the unfused chains —
+            // the bound walk materializes each A-row through the identical
+            // `PanelSource::pack_row` the kernel uses (padded conv taps carry
+            // value 0 and bound 0), so the fused order changes nothing in the
+            // analysis. Row counts: one per output patch for conv, one per
+            // input row for FC.
+            Op::BlockGemmF32FusedIm2col { bd, shape, taps, .. } => {
+                let psrc = PanelSource::Im2col { shape, taps };
+                self.bound_gemm_f32_panel(bd, &psrc, batch * p.out_rows, act, err, err_dst)
+            }
+            Op::BlockGemmF32FusedGather { bd, idx, .. } => {
+                let psrc = PanelSource::Gather { idx, src_dim: p.in_cols };
+                self.bound_gemm_f32_panel(bd, &psrc, nrows, act, err, err_dst)
+            }
+            Op::BlockGemmI8FusedIm2col { qbd, act_scale, shape, taps, .. } => {
+                let psrc = PanelSource::Im2col { shape, taps };
+                Self::bound_gemm_i8_panel(qbd, &psrc, batch * p.out_rows, *act_scale, act, err, err_dst)
+            }
+            Op::BlockGemmI8FusedGather { qbd, act_scale, idx, .. } => {
+                let psrc = PanelSource::Gather { idx, src_dim: p.in_cols };
+                Self::bound_gemm_i8_panel(qbd, &psrc, nrows, *act_scale, act, err, err_dst)
+            }
             // The quantized GEMM — the full formula from the doc comment —
             // always materializes a bound (quantization introduces error
             // even when the incoming bound is zero).
@@ -546,5 +695,100 @@ impl Executor {
                 true
             }
         }
+    }
+
+    /// Bound propagation for a fused f32 GEMM: each logical A-row is
+    /// materialized (values and incoming bounds) through the same
+    /// [`PanelSource`] the kernel packs with, then the per-row formula of
+    /// the unfused `BlockGemmF32` arm applies unchanged.
+    fn bound_gemm_f32_panel(
+        &self,
+        bd: &crate::linalg::blockdiag_mm::BlockDiagMatrix,
+        psrc: &PanelSource<'_>,
+        nrows: usize,
+        act: &[f32],
+        err: Option<&[f32]>,
+        err_dst: &mut Vec<f32>,
+    ) -> bool {
+        let gamma_on = self.kernel.f32_isa().is_simd();
+        if err.is_none() && !gamma_on {
+            return false;
+        }
+        let rows = bd.layout.rows;
+        let width = psrc.ncols();
+        err_dst.clear();
+        err_dst.resize(nrows * rows, 0.0);
+        let mut vrow = vec![0.0f32; width];
+        let mut erow = vec![0.0f32; width];
+        for r in 0..nrows {
+            psrc.pack_row(act, r, 0, &mut vrow);
+            if let Some(e) = err {
+                psrc.pack_row(e, r, 0, &mut erow);
+            }
+            for b in 0..bd.nblocks() {
+                let rs = bd.layout.row_spans[b];
+                let cs = bd.layout.col_spans[b];
+                let wb = bd.block(b);
+                let gamma = if gamma_on { kernel::f32_reorder_bound(cs.len) as f64 } else { 0.0 };
+                for br in 0..rs.len {
+                    let mut bound = 0.0f64;
+                    for pp in 0..cs.len {
+                        let c = cs.start + pp;
+                        let aw = wb[br * cs.len + pp].abs() as f64;
+                        let e = if err.is_some() { erow[c] as f64 } else { 0.0 };
+                        bound += aw * (e + gamma * (vrow[c].abs() as f64 + e));
+                    }
+                    err_dst[r * rows + rs.start + br] = bound as f32;
+                }
+            }
+        }
+        true
+    }
+
+    /// Bound propagation for a fused quantized GEMM. The quantization
+    /// residual is computed on the materialized row — element-wise
+    /// quantization commutes with the gather, so `|v − quant(v)·s|` per
+    /// packed element is exactly the residual the unfused chain saw.
+    fn bound_gemm_i8_panel(
+        qbd: &crate::linalg::blockdiag_mm_i8::QuantizedBlockDiagMatrix,
+        psrc: &PanelSource<'_>,
+        nrows: usize,
+        act_scale: f32,
+        act: &[f32],
+        err: Option<&[f32]>,
+        err_dst: &mut Vec<f32>,
+    ) -> bool {
+        use crate::linalg::blockdiag_mm_i8::quantize_i8;
+        let rows = qbd.layout.rows;
+        let width = psrc.ncols();
+        err_dst.clear();
+        err_dst.resize(nrows * rows, 0.0);
+        let mut vrow = vec![0.0f32; width];
+        let mut erow = vec![0.0f32; width];
+        for r in 0..nrows {
+            psrc.pack_row(act, r, 0, &mut vrow);
+            if let Some(e) = err {
+                psrc.pack_row(e, r, 0, &mut erow);
+            }
+            for b in 0..qbd.nblocks() {
+                let rs = qbd.layout.row_spans[b];
+                let cs = qbd.layout.col_spans[b];
+                let qb = qbd.block(b);
+                for br in 0..rs.len {
+                    let s_w = qbd.row_scales[rs.start + br] as f64;
+                    let mut bound = 0.0f64;
+                    for pp in 0..cs.len {
+                        let c = cs.start + pp;
+                        let aw = (qb[br * cs.len + pp] as i32).abs() as f64 * s_w;
+                        let q = quantize_i8(vrow[c], act_scale);
+                        let qe = (vrow[c] - q as f32 * act_scale).abs() as f64;
+                        let e = if err.is_some() { erow[c] as f64 } else { 0.0 };
+                        bound += aw * (qe + e) + 0.5 * s_w * (vrow[c].abs() as f64 + e);
+                    }
+                    err_dst[r * rows + rs.start + br] = bound as f32;
+                }
+            }
+        }
+        true
     }
 }

@@ -1,0 +1,179 @@
+//! Plan-level fusion: rewrite materialization chains into implicit-GEMM ops.
+//!
+//! [`fuse_plan`] runs after plan construction (every engine front-end calls
+//! it on its freshly built [`ExecPlan`]) and pattern-matches two chains:
+//!
+//! ```text
+//!   im2col → (gather)? → block_gemm_{f32,i8}   ⇒  gemm_*_fused_im2col
+//!   gather → block_gemm_{f32,i8}               ⇒  gemm_*_fused_gather
+//! ```
+//!
+//! ## Legality rules (DESIGN.md §Fusion)
+//!
+//! - Fusion is purely local: a chain fuses iff the ops are adjacent in the
+//!   straight-line plan, the intermediate buffer has exactly one consumer
+//!   (always true in this IR — ops read only their predecessor's output),
+//!   and the consumer is a *block* GEMM (the dense baseline stays unfused
+//!   on purpose).
+//! - The `P_row⁻¹` restore gather at a plan's end has no following GEMM and
+//!   therefore never matches — it survives fusion, as does any gather
+//!   feeding a structural op.
+//! - i8 chains are legal because quantization is element-wise with
+//!   `quantize(0) == 0`: quantize-then-gather equals gather-then-quantize,
+//!   including conv zero-padding.
+//! - Numerics: the fused kernels pack byte-identical A-rows and reuse the
+//!   unfused kernels' accumulation order, so fused output is bit-exact with
+//!   the unfused plan under the same dispatch ISA (f32 scalar and SIMD each
+//!   agree with their unfused counterpart; i8 is order-free everywhere).
+//!
+//! Whole-plan counters (`in_dim`, `out_dim`, `n_gathers`, `macs_per_sample`,
+//! `skip_elems_per_sample`) are preserved verbatim: fusion changes how work
+//! is executed, not how much semantic work the model does — `n_gathers`
+//! still reports the permutations the compressor fused at mask level.
+
+use crate::exec::plan::{ExecPlan, Op, PlannedOp};
+use crate::linalg::im2col::patch_taps;
+
+/// Fuse materialization chains in `plan` (see module docs). Consumes and
+/// returns the plan; ops that match no pattern pass through untouched.
+pub fn fuse_plan(plan: ExecPlan) -> ExecPlan {
+    let ExecPlan { ops, in_dim, out_dim, n_gathers, macs_per_sample, skip_elems_per_sample } =
+        plan;
+    let mut slots: Vec<Option<PlannedOp>> = ops.into_iter().map(Some).collect();
+    let is_gather =
+        |s: Option<&Option<PlannedOp>>| matches!(flat_op(s), Some(Op::Gather { .. }));
+    let is_block_gemm = |s: Option<&Option<PlannedOp>>| {
+        matches!(flat_op(s), Some(Op::BlockGemmF32 { .. } | Op::BlockGemmI8 { .. }))
+    };
+    let mut fused: Vec<PlannedOp> = Vec::with_capacity(slots.len());
+    let mut i = 0;
+    while i < slots.len() {
+        let here = slots[i].as_ref().expect("slot already consumed");
+        if matches!(here.op, Op::Im2col { .. }) {
+            let has_gather = is_gather(slots.get(i + 1));
+            let gemm_at = i + 1 + usize::from(has_gather);
+            if is_block_gemm(slots.get(gemm_at)) {
+                let im = slots[i].take().unwrap();
+                let col_gather = has_gather.then(|| match slots[i + 1].take().unwrap().op {
+                    Op::Gather { idx } => idx,
+                    _ => unreachable!(),
+                });
+                let gm = slots[gemm_at].take().unwrap();
+                let Op::Im2col { shape } = im.op else { unreachable!() };
+                let taps = patch_taps(&shape, col_gather.as_deref());
+                let op = match gm.op {
+                    Op::BlockGemmF32 { bd, bias, relu } => {
+                        Op::BlockGemmF32FusedIm2col { bd, bias, relu, shape, taps }
+                    }
+                    Op::BlockGemmI8 { qbd, bias, act_scale, relu } => {
+                        Op::BlockGemmI8FusedIm2col { qbd, bias, act_scale, relu, shape, taps }
+                    }
+                    _ => unreachable!(),
+                };
+                fused.push(PlannedOp {
+                    op,
+                    in_rows: im.in_rows,
+                    in_cols: im.in_cols,
+                    out_rows: gm.out_rows,
+                    out_cols: gm.out_cols,
+                    tile: None,
+                });
+                i = gemm_at + 1;
+                continue;
+            }
+        }
+        if matches!(here.op, Op::Gather { .. }) && is_block_gemm(slots.get(i + 1)) {
+            let g = slots[i].take().unwrap();
+            let gm = slots[i + 1].take().unwrap();
+            let Op::Gather { idx } = g.op else { unreachable!() };
+            let op = match gm.op {
+                Op::BlockGemmF32 { bd, bias, relu } => {
+                    Op::BlockGemmF32FusedGather { bd, bias, relu, idx }
+                }
+                Op::BlockGemmI8 { qbd, bias, act_scale, relu } => {
+                    Op::BlockGemmI8FusedGather { qbd, bias, act_scale, relu, idx }
+                }
+                _ => unreachable!(),
+            };
+            fused.push(PlannedOp {
+                op,
+                in_rows: g.in_rows,
+                in_cols: g.in_cols,
+                out_rows: gm.out_rows,
+                out_cols: gm.out_cols,
+                tile: None,
+            });
+            i += 2;
+            continue;
+        }
+        fused.push(slots[i].take().unwrap());
+        i += 1;
+    }
+    ExecPlan { ops: fused, in_dim, out_dim, n_gathers, macs_per_sample, skip_elems_per_sample }
+}
+
+fn flat_op(s: Option<&Option<PlannedOp>>) -> Option<&Op> {
+    s.and_then(|p| p.as_ref()).map(|p| &p.op)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::PlanBuilder;
+    use crate::linalg::blockdiag_mm::BlockDiagMatrix;
+    use crate::linalg::im2col::ConvShape;
+    use crate::mask::blockdiag::BlockDiagLayout;
+    use crate::mask::prng::Xoshiro256pp;
+
+    fn bd(rows: usize, cols: usize, k: usize, rng: &mut Xoshiro256pp) -> BlockDiagMatrix {
+        let layout = BlockDiagLayout::new(rows, cols, k);
+        let packed = (0..layout.nnz()).map(|_| rng.next_f32() - 0.5).collect();
+        BlockDiagMatrix::from_packed(packed, layout)
+    }
+
+    #[test]
+    fn fuses_conv_and_fc_chains_and_keeps_counters() {
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let s = ConvShape { in_c: 2, h: 6, w: 6, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let pdim = s.patch_dim();
+        let mut b = PlanBuilder::new(s.in_dim());
+        b.im2col(s).unwrap();
+        b.gather((0..pdim as u32).rev().collect());
+        b.block_gemm_f32(bd(4, pdim, 2, &mut rng), vec![0.0; 4], true);
+        b.rows_to_nchw(4, 6, 6, None);
+        // FC head: gather → gemm fuses; trailing restore gather survives
+        b.gather((0..144u32).rev().collect());
+        b.block_gemm_f32(bd(10, 144, 2, &mut rng), vec![0.0; 10], false);
+        b.gather((0..10u32).rev().collect());
+        let plan = b.finish();
+        let (n_ops, gathers, macs) = (plan.ops.len(), plan.n_gathers, plan.macs_per_sample);
+        assert_eq!(n_ops, 7);
+
+        let fused = fuse_plan(plan);
+        let names: Vec<_> = fused.ops.iter().map(|p| p.op.name()).collect();
+        assert_eq!(
+            names,
+            ["gemm_f32_fused_im2col", "rows_to_nchw", "gemm_f32_fused_gather", "gather"]
+        );
+        // counters are semantic, not structural — unchanged by fusion
+        assert_eq!(fused.n_gathers, gathers);
+        assert_eq!(fused.macs_per_sample, macs);
+        assert_eq!(fused.macs_per_sample, fused.ops.iter().map(|p| p.macs_per_sample()).sum());
+        // the conv stage's fused op spans flat-NCHW in to GEMM-rows out
+        assert_eq!((fused.ops[0].in_rows, fused.ops[0].in_cols), (1, s.in_dim()));
+        assert_eq!((fused.ops[0].out_rows, fused.ops[0].out_cols), (36, 4));
+        // the patch matrix no longer bounds the arena
+        assert!(fused.max_f32_elems_per_sample() < 36 * pdim);
+    }
+
+    #[test]
+    fn gather_without_following_gemm_survives() {
+        let mut rng = Xoshiro256pp::seed_from_u64(10);
+        let mut b = PlanBuilder::new(8);
+        b.block_gemm_f32(bd(8, 8, 2, &mut rng), vec![0.0; 8], false);
+        b.gather((0..8u32).rev().collect());
+        let fused = fuse_plan(b.finish());
+        let names: Vec<_> = fused.ops.iter().map(|p| p.op.name()).collect();
+        assert_eq!(names, ["block_gemm_f32", "gather"]);
+    }
+}

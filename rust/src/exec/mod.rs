@@ -11,6 +11,9 @@
 //!   with per-op buffer shapes + MAC/storage accounting), the shape-checked
 //!   [`PlanBuilder`], and the shared [`PoolChoice`]
 //! * [`arena`] — the preallocated ping-pong [`ScratchArena`]
+//! * [`fuse`] — the post-build fusion pass ([`fuse_plan`]): implicit-GEMM
+//!   conv and gather-fused A-panel packing
+
 //! * [`executor`] — [`Executor`], the single stage-dispatch loop, with the
 //!   zero-allocation `run_into` hot path and the generic analytic error
 //!   bound walk (`run_with_bound`)
@@ -25,10 +28,12 @@
 
 pub mod arena;
 pub mod executor;
+pub mod fuse;
 pub mod lower;
 pub mod plan;
 
 pub use arena::ScratchArena;
 pub use executor::Executor;
+pub use fuse::fuse_plan;
 pub use lower::{lower_dense_mlp, lower_mlp, lower_mlp_with, FcOp, Precision};
 pub use plan::{kernel_label, ExecPlan, Op, PlanBuilder, PlanError, PlannedOp, PoolChoice};

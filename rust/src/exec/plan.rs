@@ -21,6 +21,8 @@
 //! | [`Op::AvgPool`] | stateless NCHW average-pool (global when `k == h == w`) | ResNet-style heads, AlexNet-class stages |
 //! | [`Op::SkipSave`] | snapshot the activation into a pinned arena skip slot | residual-block entry |
 //! | [`Op::ResidualAdd`] | add a saved skip slot back (+ optional ReLU) | residual-block exit |
+//! | [`Op::BlockGemmF32FusedIm2col`] / [`Op::BlockGemmI8FusedIm2col`] | implicit-GEMM conv: im2col + `P_col` gather folded into the A-panel pack | [`crate::exec::fuse_plan`] |
+//! | [`Op::BlockGemmF32FusedGather`] / [`Op::BlockGemmI8FusedGather`] | inter-layer permutation folded into the A-panel pack | [`crate::exec::fuse_plan`] |
 //!
 //! Rectangular buffers are described per *sample*: an op transforms
 //! `[rows × cols]` (e.g. a conv patch matrix has `rows = oh·ow`); the
@@ -37,9 +39,9 @@
 //! a hostile or merely odd shape fails plan construction with a readable
 //! error rather than panicking a serving worker mid-request.
 
-use crate::linalg::blockdiag_mm::BlockDiagMatrix;
+use crate::linalg::blockdiag_mm::{BlockDiagMatrix, TileShape};
 use crate::linalg::blockdiag_mm_i8::QuantizedBlockDiagMatrix;
-use crate::linalg::im2col::ConvShape;
+use crate::linalg::im2col::{ConvShape, PatchTap};
 use crate::linalg::pool::{self, ThreadPool};
 use std::sync::Arc;
 
@@ -77,6 +79,43 @@ pub enum Op {
     /// Element-wise add of saved skip slot `slot` onto the current flat
     /// activation, with optional fused ReLU (the residual-block exit).
     ResidualAdd { slot: usize, relu: bool },
+    /// Implicit-GEMM conv (fusion of `Im2col` → optional `P_col` `Gather` →
+    /// `BlockGemmF32`): patch elements are gathered straight out of the flat
+    /// NCHW input through `taps` while packing the GEMM A-panel, so the
+    /// patch matrix never exists in the arena. Input `[1 × in_dim]`, output
+    /// `[oh·ow × rows]` per sample.
+    BlockGemmF32FusedIm2col {
+        bd: BlockDiagMatrix,
+        bias: Vec<f32>,
+        relu: bool,
+        shape: ConvShape,
+        /// One tap per GEMM column: the `P_col`-permuted (channel, ky, kx)
+        /// source of that patch element.
+        taps: Vec<PatchTap>,
+    },
+    /// Quantized twin of [`Op::BlockGemmF32FusedIm2col`]: the flat NCHW
+    /// input is quantized once, then patch rows are gathered from the i8
+    /// buffer (element-wise quantization commutes with the gather).
+    BlockGemmI8FusedIm2col {
+        qbd: QuantizedBlockDiagMatrix,
+        bias: Vec<f32>,
+        act_scale: f32,
+        relu: bool,
+        shape: ConvShape,
+        taps: Vec<PatchTap>,
+    },
+    /// Gather-fused FC (fusion of an inter-layer permutation `Gather` →
+    /// `BlockGemmF32`): the permutation folds into the A-panel pack, turning
+    /// two arena passes into zero.
+    BlockGemmF32FusedGather { bd: BlockDiagMatrix, bias: Vec<f32>, relu: bool, idx: Vec<u32> },
+    /// Quantized twin of [`Op::BlockGemmF32FusedGather`].
+    BlockGemmI8FusedGather {
+        qbd: QuantizedBlockDiagMatrix,
+        bias: Vec<f32>,
+        act_scale: f32,
+        relu: bool,
+        idx: Vec<u32>,
+    },
 }
 
 impl Op {
@@ -93,6 +132,10 @@ impl Op {
             Op::AvgPool { .. } => "avg_pool",
             Op::SkipSave { .. } => "skip_save",
             Op::ResidualAdd { .. } => "residual_add",
+            Op::BlockGemmF32FusedIm2col { .. } => "gemm_f32_fused_im2col",
+            Op::BlockGemmI8FusedIm2col { .. } => "gemm_i8_fused_im2col",
+            Op::BlockGemmF32FusedGather { .. } => "gemm_f32_fused_gather",
+            Op::BlockGemmI8FusedGather { .. } => "gemm_i8_fused_gather",
         }
     }
 }
@@ -121,6 +164,10 @@ pub struct PlannedOp {
     pub in_cols: usize,
     pub out_rows: usize,
     pub out_cols: usize,
+    /// Per-op register-tile override (set by the autotuner); `None` falls
+    /// back to the executor's global tile. Only meaningful for block-GEMM
+    /// ops dispatched on the scalar tiled kernel — SIMD paths ignore it.
+    pub tile: Option<TileShape>,
 }
 
 impl PlannedOp {
@@ -140,6 +187,12 @@ impl PlannedOp {
             Op::BlockGemmF32 { bd, .. } => bd.nnz() * self.in_rows,
             Op::BlockGemmI8 { qbd, .. } => qbd.nnz() * self.in_rows,
             Op::DenseGemm { w, .. } => w.len() * self.in_rows,
+            // Fused conv: one GEMM row per output patch (out_rows = oh·ow),
+            // same count the unfused Im2col → Gather → BlockGemm chain had.
+            Op::BlockGemmF32FusedIm2col { bd, .. } => bd.nnz() * self.out_rows,
+            Op::BlockGemmI8FusedIm2col { qbd, .. } => qbd.nnz() * self.out_rows,
+            Op::BlockGemmF32FusedGather { bd, .. } => bd.nnz() * self.in_rows,
+            Op::BlockGemmI8FusedGather { qbd, .. } => qbd.nnz() * self.in_rows,
             _ => 0,
         }
     }
@@ -157,12 +210,70 @@ impl PlannedOp {
             Op::RowsToNchw { chan_src, .. } => chan_src.as_ref().map_or(0, |g| g.len() * 4),
             Op::MaxPool { .. } | Op::AvgPool { .. } => 0,
             Op::SkipSave { .. } | Op::ResidualAdd { .. } => 0,
+            Op::BlockGemmF32FusedIm2col { bd, bias, taps, .. } => {
+                bd.storage_bytes() + bias.len() * 4 + taps.len() * std::mem::size_of::<PatchTap>()
+            }
+            Op::BlockGemmI8FusedIm2col { qbd, bias, taps, .. } => {
+                qbd.storage_bytes()
+                    + bias.len() * 4
+                    + 4
+                    + taps.len() * std::mem::size_of::<PatchTap>()
+            }
+            Op::BlockGemmF32FusedGather { bd, bias, idx, .. } => {
+                bd.storage_bytes() + bias.len() * 4 + idx.len() * 4
+            }
+            Op::BlockGemmI8FusedGather { qbd, bias, idx, .. } => {
+                qbd.storage_bytes() + bias.len() * 4 + 4 + idx.len() * 4
+            }
         }
     }
 
     /// Whether this op consumes the i8 staging buffer of the arena.
     pub fn uses_i8(&self) -> bool {
-        matches!(self.op, Op::BlockGemmI8 { .. })
+        matches!(
+            self.op,
+            Op::BlockGemmI8 { .. }
+                | Op::BlockGemmI8FusedIm2col { .. }
+                | Op::BlockGemmI8FusedGather { .. }
+        )
+    }
+
+    /// f32 panel scratch (elements, batch-independent) this op needs for
+    /// the fused pack-gather path — 0 for everything else.
+    pub fn panel_f32_elems(&self) -> usize {
+        match &self.op {
+            Op::BlockGemmF32FusedIm2col { bd, .. } | Op::BlockGemmF32FusedGather { bd, .. } => {
+                bd.panel_elems()
+            }
+            _ => 0,
+        }
+    }
+
+    /// i8 panel scratch (elements, batch-independent) this op needs for the
+    /// fused pack-gather path — 0 for everything else.
+    pub fn panel_i8_elems(&self) -> usize {
+        match &self.op {
+            Op::BlockGemmI8FusedIm2col { qbd, .. } | Op::BlockGemmI8FusedGather { qbd, .. } => {
+                qbd.panel_elems()
+            }
+            _ => 0,
+        }
+    }
+
+    /// Whether the op is a block GEMM whose scalar dispatch honors a
+    /// [`TileShape`] — the autotuner's candidate set.
+    pub fn is_tileable_gemm(&self) -> bool {
+        !matches!(
+            self.op,
+            Op::Gather { .. }
+                | Op::DenseGemm { .. }
+                | Op::Im2col { .. }
+                | Op::RowsToNchw { .. }
+                | Op::MaxPool { .. }
+                | Op::AvgPool { .. }
+                | Op::SkipSave { .. }
+                | Op::ResidualAdd { .. }
+        )
     }
 }
 
@@ -207,6 +318,30 @@ impl ExecPlan {
     /// sample (0 for all-f32 plans).
     pub fn max_i8_elems_per_sample(&self) -> usize {
         self.ops.iter().filter(|p| p.uses_i8()).map(|p| p.in_elems()).max().unwrap_or(0)
+    }
+
+    /// Largest f32 pack-panel (elements, batch-independent) any fused op
+    /// needs — the arena holds one shared panel sized for the widest.
+    pub fn max_panel_f32_elems(&self) -> usize {
+        self.ops.iter().map(|p| p.panel_f32_elems()).max().unwrap_or(0)
+    }
+
+    /// Largest i8 pack-panel (elements, batch-independent) any fused op needs.
+    pub fn max_panel_i8_elems(&self) -> usize {
+        self.ops.iter().map(|p| p.panel_i8_elems()).max().unwrap_or(0)
+    }
+
+    /// Peak scratch-arena bytes this plan needs at `batch`: the two f32
+    /// ping-pong halves, the i8 staging buffer, the pinned residual skip
+    /// slots, and the (batch-independent) fused pack panels. This is the
+    /// post-fusion figure — fused conv plans never size the ping-pong halves
+    /// for a materialized patch matrix.
+    pub fn arena_bytes(&self, batch: usize) -> usize {
+        2 * self.max_f32_elems_per_sample() * batch * 4
+            + self.max_i8_elems_per_sample() * batch
+            + self.skip_elems_per_sample.iter().sum::<usize>() * batch * 4
+            + self.max_panel_f32_elems() * 4
+            + self.max_panel_i8_elems()
     }
 
     /// Human-readable plan dump: one row per op with per-sample shapes,
@@ -254,9 +389,7 @@ impl ExecPlan {
             }
             t.row(&cells);
         }
-        let arena_bytes = 2 * self.max_f32_elems_per_sample() * batch * 4
-            + self.max_i8_elems_per_sample() * batch
-            + self.skip_elems_per_sample.iter().sum::<usize>() * batch * 4;
+        let arena_bytes = self.arena_bytes(batch);
         let kernel_note = match kernel {
             Some(k) => format!(" | dispatch {}", k.describe()),
             None => String::new(),
@@ -281,8 +414,12 @@ impl ExecPlan {
 /// baseline intentionally stays scalar).
 pub fn kernel_label(op: &Op, kernel: &crate::linalg::kernel::KernelChoice) -> &'static str {
     match op {
-        Op::BlockGemmF32 { .. } => kernel.f32_isa().name(),
-        Op::BlockGemmI8 { .. } => kernel.i8_isa().name(),
+        Op::BlockGemmF32 { .. }
+        | Op::BlockGemmF32FusedIm2col { .. }
+        | Op::BlockGemmF32FusedGather { .. } => kernel.f32_isa().name(),
+        Op::BlockGemmI8 { .. }
+        | Op::BlockGemmI8FusedIm2col { .. }
+        | Op::BlockGemmI8FusedGather { .. } => kernel.i8_isa().name(),
         Op::Gather { .. } => kernel.f32_isa().name(),
         Op::DenseGemm { .. } => "scalar",
         _ => "-",
@@ -330,6 +467,7 @@ impl PlanBuilder {
             in_cols: self.cols,
             out_rows,
             out_cols,
+            tile: None,
         });
         self.rows = out_rows;
         self.cols = out_cols;

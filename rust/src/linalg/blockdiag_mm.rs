@@ -83,6 +83,11 @@ impl TileShape {
     }
 }
 
+/// A-rows packed per panel pass in the fused implicit-GEMM path — the
+/// largest supported `TileShape::batch`, so every tile shape tiles a full
+/// chunk without a remainder split that the unfused path wouldn't have.
+pub const PANEL_CHUNK: usize = 8;
+
 /// What the kernel does with the finished accumulator tile.
 #[derive(Clone, Copy)]
 enum Epilogue {
@@ -344,6 +349,141 @@ impl BlockDiagMatrix {
         }
     }
 
+    /// Widest block reduction dimension — the panel column stride of the
+    /// fused pack-gather path.
+    pub fn max_block_cols(&self) -> usize {
+        self.layout.col_spans.iter().map(|c| c.len).max().unwrap_or(0)
+    }
+
+    /// Scratch floats [`Self::forward_panel_isa`] needs: one `PANEL_CHUNK`-row
+    /// slab per block. Batch-independent — the fused path never materializes
+    /// the full patch/permuted matrix.
+    pub fn panel_elems(&self) -> usize {
+        self.nblocks() * PANEL_CHUNK * self.max_block_cols()
+    }
+
+    /// Implicit-GEMM fused forward: the A-matrix is never materialized.
+    /// `src` describes how to gather each block's A-rows straight out of the
+    /// upstream activation `x` (im2col patch taps for conv, a permutation for
+    /// inter-layer gathers); rows are packed `PANEL_CHUNK` at a time into a
+    /// per-block panel slab and multiplied in place.
+    ///
+    /// `nrows` is the logical A-row count (`batch · patches_per_sample` for
+    /// conv, `batch` for FC). Packed values are byte-identical to the
+    /// materialized `im2col → gather` pipeline, and both compute paths reuse
+    /// the unfused kernels' accumulation order ([`Self::block_forward_at`]
+    /// for scalar, one `dot_f32` per output element for SIMD), so fused
+    /// output is bit-exact with `forward_fused_isa` over the materialized
+    /// matrix under the same ISA.
+    ///
+    /// `panel` is caller-owned scratch (grown to [`Self::panel_elems`] on
+    /// first use, no-op when pre-warmed).
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_panel_isa(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        nrows: usize,
+        src: &crate::linalg::im2col::PanelSource<'_>,
+        bias: &[f32],
+        relu: bool,
+        pool: Option<&ThreadPool>,
+        tile: TileShape,
+        isa: crate::linalg::kernel::Isa,
+        panel: &mut Vec<f32>,
+    ) {
+        let _span = crate::obs::span("blockdiag_mm_f32_panel");
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        assert_eq!(src.ncols(), cols, "panel source width mismatch");
+        assert_eq!(x.len(), src.src_elems_for(nrows), "source shape mismatch");
+        assert_eq!(y.len(), nrows * rows, "Y shape mismatch");
+        assert_eq!(bias.len(), rows, "bias must be in block-row space");
+        let nblocks = self.nblocks();
+        let stride = PANEL_CHUNK * self.max_block_cols();
+        if panel.len() < nblocks * stride {
+            panel.resize(nblocks * stride, 0.0);
+        }
+        let yp = OutPtr { ptr: y.as_mut_ptr(), len: y.len() };
+        let pp = OutPtr { ptr: panel.as_mut_ptr(), len: panel.len() };
+        let parallel = pool.map(|p| p.lanes() > 1 && nblocks > 1).unwrap_or(false);
+        if !parallel {
+            for b in 0..nblocks {
+                // SAFETY: sequential — one panel projection live at a time.
+                let pslice = unsafe { pp.seg_mut(b * stride, stride) };
+                self.block_forward_panel(b, x, yp, nrows, src, bias, relu, tile, isa, pslice);
+            }
+            return;
+        }
+        pool.unwrap().run(nblocks, |b| {
+            // SAFETY of sharing yp/pp: block b writes only its own output
+            // row span and its own `[b·stride, (b+1)·stride)` panel slab —
+            // both disjoint across blocks — and the pool joins all tasks
+            // before the borrows of `y`/`panel` are used again.
+            let pslice = unsafe { pp.seg_mut(b * stride, stride) };
+            self.block_forward_panel(b, x, yp, nrows, src, bias, relu, tile, isa, pslice);
+        });
+    }
+
+    /// One block of the fused path: pack `PANEL_CHUNK` A-rows of this
+    /// block's column span into the panel slab, multiply, repeat. Scalar ISA
+    /// goes through the shared tiled micro-kernel; SIMD does one `dot_f32`
+    /// per output element, exactly like [`Self::block_forward_simd`].
+    #[allow(clippy::too_many_arguments)]
+    fn block_forward_panel(
+        &self,
+        b: usize,
+        x: &[f32],
+        yp: OutPtr,
+        nrows: usize,
+        src: &crate::linalg::im2col::PanelSource<'_>,
+        bias: &[f32],
+        relu: bool,
+        tile: TileShape,
+        isa: crate::linalg::kernel::Isa,
+        pslice: &mut [f32],
+    ) {
+        let rows = self.layout.rows;
+        let rs = self.layout.row_spans[b];
+        let cs = self.layout.col_spans[b];
+        let (out_b, in_b) = (rs.len, cs.len);
+        let wb = self.block(b);
+        for row0 in (0..nrows).step_by(PANEL_CHUNK) {
+            let nr = PANEL_CHUNK.min(nrows - row0);
+            for i in 0..nr {
+                src.pack_row(x, row0 + i, cs.start, &mut pslice[i * in_b..(i + 1) * in_b]);
+            }
+            if !isa.is_simd() {
+                self.block_forward_at(
+                    b,
+                    pslice,
+                    in_b,
+                    0,
+                    yp,
+                    row0,
+                    nr,
+                    bias,
+                    Epilogue::Fused { relu },
+                    tile,
+                );
+                continue;
+            }
+            for i in 0..nr {
+                let prow = &pslice[i * in_b..(i + 1) * in_b];
+                // SAFETY: rows of block b only — disjoint from all other tasks.
+                let yrow = unsafe { yp.seg_mut((row0 + i) * rows + rs.start, out_b) };
+                for (r, yv) in yrow.iter_mut().enumerate() {
+                    let wrow = &wb[r * in_b..(r + 1) * in_b];
+                    let mut v =
+                        crate::linalg::kernel::dot_f32(isa, prow, wrow) + bias[rs.start + r];
+                    if relu && v < 0.0 {
+                        v = 0.0;
+                    }
+                    *yv = v;
+                }
+            }
+        }
+    }
+
     /// Shared driver: run every block through the kernel, sequentially or on
     /// a pool.
     fn run_blocks(
@@ -381,8 +521,9 @@ impl BlockDiagMatrix {
         });
     }
 
-    /// Per-block kernel entry: dispatch the configured tile shape onto a
-    /// monomorphized micro-kernel.
+    /// Per-block kernel entry for the materialized-A path: the block reads
+    /// its A-rows straight out of the full activation matrix (`ldx = cols`,
+    /// row offset `cs.start`).
     fn block_forward(
         &self,
         b: usize,
@@ -393,50 +534,80 @@ impl BlockDiagMatrix {
         ep: Epilogue,
         tile: TileShape,
     ) {
+        let cs = self.layout.col_spans[b];
+        self.block_forward_at(b, x, self.layout.cols, cs.start, yp, 0, batch, bias, ep, tile);
+    }
+
+    /// Tile-shape dispatch onto a monomorphized micro-kernel, generalized
+    /// over where the block's A-rows live: local row `i` is
+    /// `x[xoff + i·ldx ..][..in_b]` and writes output row `y_row0 + i`.
+    /// The unfused path passes the whole activation (`ldx = cols`,
+    /// `xoff = cs.start`, `y_row0 = 0`); the fused panel path passes a packed
+    /// `[nloc × in_b]` chunk (`ldx = in_b`, `xoff = 0`) at its global row
+    /// offset — one 16-arm dispatch serves both, so the fused kernels can
+    /// never drift from the canonical accumulation order.
+    #[allow(clippy::too_many_arguments)]
+    fn block_forward_at(
+        &self,
+        b: usize,
+        x: &[f32],
+        ldx: usize,
+        xoff: usize,
+        yp: OutPtr,
+        y_row0: usize,
+        nloc: usize,
+        bias: &[f32],
+        ep: Epilogue,
+        tile: TileShape,
+    ) {
         // Every shape TileShape::validate accepts has its own monomorphized
         // kernel — a configured shape is never silently substituted. Shapes
         // that would fail validation (only reachable by constructing a
         // TileShape by hand) fall back to the default kernel.
         match (tile.batch, tile.rows) {
-            (1, 1) => self.block_forward_t::<1, 1>(b, x, yp, batch, bias, ep),
-            (1, 2) => self.block_forward_t::<1, 2>(b, x, yp, batch, bias, ep),
-            (1, 4) => self.block_forward_t::<1, 4>(b, x, yp, batch, bias, ep),
-            (1, 8) => self.block_forward_t::<1, 8>(b, x, yp, batch, bias, ep),
-            (2, 1) => self.block_forward_t::<2, 1>(b, x, yp, batch, bias, ep),
-            (2, 2) => self.block_forward_t::<2, 2>(b, x, yp, batch, bias, ep),
-            (2, 4) => self.block_forward_t::<2, 4>(b, x, yp, batch, bias, ep),
-            (2, 8) => self.block_forward_t::<2, 8>(b, x, yp, batch, bias, ep),
-            (4, 1) => self.block_forward_t::<4, 1>(b, x, yp, batch, bias, ep),
-            (4, 2) => self.block_forward_t::<4, 2>(b, x, yp, batch, bias, ep),
-            (4, 4) => self.block_forward_t::<4, 4>(b, x, yp, batch, bias, ep),
-            (4, 8) => self.block_forward_t::<4, 8>(b, x, yp, batch, bias, ep),
-            (8, 1) => self.block_forward_t::<8, 1>(b, x, yp, batch, bias, ep),
-            (8, 2) => self.block_forward_t::<8, 2>(b, x, yp, batch, bias, ep),
-            (8, 4) => self.block_forward_t::<8, 4>(b, x, yp, batch, bias, ep),
-            (8, 8) => self.block_forward_t::<8, 8>(b, x, yp, batch, bias, ep),
+            (1, 1) => self.block_forward_t::<1, 1>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (1, 2) => self.block_forward_t::<1, 2>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (1, 4) => self.block_forward_t::<1, 4>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (1, 8) => self.block_forward_t::<1, 8>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (2, 1) => self.block_forward_t::<2, 1>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (2, 2) => self.block_forward_t::<2, 2>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (2, 4) => self.block_forward_t::<2, 4>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (2, 8) => self.block_forward_t::<2, 8>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (4, 1) => self.block_forward_t::<4, 1>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (4, 2) => self.block_forward_t::<4, 2>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (4, 4) => self.block_forward_t::<4, 4>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (4, 8) => self.block_forward_t::<4, 8>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (8, 1) => self.block_forward_t::<8, 1>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (8, 2) => self.block_forward_t::<8, 2>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (8, 4) => self.block_forward_t::<8, 4>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (8, 8) => self.block_forward_t::<8, 8>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep),
             _ => {
                 debug_assert!(false, "unvalidated tile shape {tile:?}");
-                self.block_forward_t::<4, 8>(b, x, yp, batch, bias, ep)
+                self.block_forward_t::<4, 8>(b, x, ldx, xoff, yp, y_row0, nloc, bias, ep)
             }
         }
     }
 
     /// The tiled micro-GEMM over one block, `TM × TN` register tiles.
+    #[allow(clippy::too_many_arguments)]
     fn block_forward_t<const TM: usize, const TN: usize>(
         &self,
         b: usize,
         x: &[f32],
+        ldx: usize,
+        xoff: usize,
         yp: OutPtr,
-        batch: usize,
+        y_row0: usize,
+        nloc: usize,
         bias: &[f32],
         ep: Epilogue,
     ) {
         let rs = self.layout.row_spans[b];
         let cs = self.layout.col_spans[b];
-        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        let rows = self.layout.rows;
         let wb = self.block(b); // (rs.len × cs.len), row-major
         let (out_b, in_b) = (rs.len, cs.len);
-        let mb = batch - batch % TM;
+        let mb = nloc - nloc % TM;
         let nb = out_b - out_b % TN;
 
         for bi0 in (0..mb).step_by(TM) {
@@ -445,7 +616,7 @@ impl BlockDiagMatrix {
                 // indexes with in-bounds-provable offsets.
                 let mut xrows = [&x[..0]; TM];
                 for (i, xr) in xrows.iter_mut().enumerate() {
-                    let base = (bi0 + i) * cols + cs.start;
+                    let base = xoff + (bi0 + i) * ldx;
                     *xr = &x[base..base + in_b];
                 }
                 let mut wrows = [&wb[..0]; TN];
@@ -462,7 +633,7 @@ impl BlockDiagMatrix {
                     }
                 }
                 for i in 0..TM {
-                    let base = (bi0 + i) * rows + rs.start + r0;
+                    let base = (y_row0 + bi0 + i) * rows + rs.start + r0;
                     // SAFETY: rows of this block only — disjoint across tasks.
                     let yrow = unsafe { yp.seg_mut(base, TN) };
                     match ep {
@@ -489,20 +660,24 @@ impl BlockDiagMatrix {
         //   A: full-tile batch rows × leftover output rows
         //   B: leftover batch rows × all output rows
         if nb < out_b {
-            self.block_scalar(b, x, yp, bias, ep, 0..mb, nb..out_b);
+            self.block_scalar(b, x, ldx, xoff, yp, y_row0, bias, ep, 0..mb, nb..out_b);
         }
-        if mb < batch {
-            self.block_scalar(b, x, yp, bias, ep, mb..batch, 0..out_b);
+        if mb < nloc {
+            self.block_scalar(b, x, ldx, xoff, yp, y_row0, bias, ep, mb..nloc, 0..out_b);
         }
     }
 
-    /// Scalar cell path for tile remainders (and the 1×1 "tile").
+    /// Scalar cell path for tile remainders (and the 1×1 "tile"), with the
+    /// same `(ldx, xoff, y_row0)` A-row addressing as [`Self::block_forward_at`].
     #[allow(clippy::too_many_arguments)]
     fn block_scalar(
         &self,
         b: usize,
         x: &[f32],
+        ldx: usize,
+        xoff: usize,
         yp: OutPtr,
+        y_row0: usize,
         bias: &[f32],
         ep: Epilogue,
         bi_range: std::ops::Range<usize>,
@@ -510,18 +685,18 @@ impl BlockDiagMatrix {
     ) {
         let rs = self.layout.row_spans[b];
         let cs = self.layout.col_spans[b];
-        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        let rows = self.layout.rows;
         let wb = self.block(b);
         let in_b = cs.len;
         for bi in bi_range {
-            let xrow = &x[bi * cols + cs.start..bi * cols + cs.start + in_b];
+            let xrow = &x[xoff + bi * ldx..xoff + bi * ldx + in_b];
             for r in r_range.clone() {
                 let wrow = &wb[r * in_b..(r + 1) * in_b];
                 let mut acc = 0.0f32;
                 for p in 0..in_b {
                     acc += xrow[p] * wrow[p];
                 }
-                let idx = bi * rows + rs.start + r;
+                let idx = (y_row0 + bi) * rows + rs.start + r;
                 // SAFETY: a cell of this block's own rows — disjoint across tasks.
                 let cell = unsafe { yp.seg_mut(idx, 1) };
                 match ep {
@@ -716,5 +891,94 @@ mod tests {
         let mut rng = Xoshiro256pp::seed_from_u64(45);
         let (bd, dense) = mk(24, 36, 4, &mut rng);
         assert_eq!(bd.to_dense(), dense);
+    }
+
+    #[test]
+    fn panel_gather_fused_is_bit_exact_with_materialized() {
+        // forward_panel_isa over a permutation source must equal
+        // gather → forward_fused_isa over the materialized matrix exactly,
+        // for every tile shape, pool width, and dispatch ISA.
+        use crate::linalg::im2col::PanelSource;
+        let mut rng = Xoshiro256pp::seed_from_u64(51);
+        let (rows, cols, k, batch) = (45, 31, 4, 11);
+        let (bd, _) = mk(rows, cols, k, &mut rng);
+        let bias: Vec<f32> = (0..rows).map(|_| rng.next_f32() - 0.5).collect();
+        // random permutation of the source columns (an inter-layer gather)
+        let src_dim = cols + 3;
+        let mut idx: Vec<u32> = (0..cols as u32).collect();
+        for i in (1..idx.len()).rev() {
+            let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+            idx.swap(i, j);
+        }
+        let x: Vec<f32> = (0..batch * src_dim).map(|_| rng.next_f32() - 0.5).collect();
+        // materialized reference: gather then forward
+        let mut xg = vec![0.0f32; batch * cols];
+        for bi in 0..batch {
+            for (c, &s) in idx.iter().enumerate() {
+                xg[bi * cols + c] = x[bi * src_dim + s as usize];
+            }
+        }
+        let src = PanelSource::Gather { idx: &idx, src_dim };
+        let isas = [crate::linalg::kernel::Isa::Scalar, crate::linalg::kernel::KernelChoice::auto().f32_isa()];
+        for isa in isas {
+            let mut y_ref = vec![0.0f32; batch * rows];
+            bd.forward_fused_isa(&xg, &mut y_ref, batch, &bias, true, None, TileShape::DEFAULT, isa);
+            for (tm, tn) in [(1, 1), (2, 8), (4, 8), (8, 2)] {
+                let tile = TileShape { batch: tm, rows: tn };
+                for lanes in [0usize, 2, 8] {
+                    let pool = if lanes == 0 { None } else { Some(ThreadPool::new(lanes)) };
+                    let mut y = vec![0.0f32; batch * rows];
+                    let mut panel = Vec::new();
+                    bd.forward_panel_isa(
+                        &x, &mut y, batch, &src, &bias, true, pool.as_ref(), tile, isa, &mut panel,
+                    );
+                    // SIMD ignores tile; the scalar path's canonical
+                    // p-ascending accumulation makes values tile-independent.
+                    assert_eq!(y, y_ref, "isa={isa:?} tile={tm}x{tn} lanes={lanes}");
+                    assert_eq!(panel.len(), bd.panel_elems());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_im2col_fused_is_bit_exact_with_materialized() {
+        // implicit-GEMM conv: pack-gather straight from NCHW == im2col →
+        // P_col gather → forward_fused_isa, bit for bit.
+        use crate::linalg::im2col::{gather_cols, im2col, patch_taps, ConvShape, PanelSource};
+        let mut rng = Xoshiro256pp::seed_from_u64(52);
+        let s = ConvShape { in_c: 3, h: 7, w: 6, kh: 3, kw: 3, stride: 2, pad: 1 };
+        let pdim = s.patch_dim();
+        let (oh, ow) = s.out_hw();
+        let batch = 2;
+        let nrows = batch * oh * ow;
+        let (bd, _) = mk(10, pdim, 2, &mut rng);
+        let bias: Vec<f32> = (0..10).map(|_| rng.next_f32() - 0.5).collect();
+        let mut perm: Vec<u32> = (0..pdim as u32).collect();
+        for i in (1..perm.len()).rev() {
+            let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+            perm.swap(i, j);
+        }
+        let x: Vec<f32> = (0..batch * s.in_dim()).map(|_| rng.next_f32() - 0.5).collect();
+        // materialized pipeline
+        let mut patches = vec![0.0f32; nrows * pdim];
+        im2col(&x, batch, &s, &mut patches);
+        let mut gathered = vec![0.0f32; nrows * pdim];
+        gather_cols(&patches, nrows, pdim, &perm, &mut gathered);
+        let mut y_ref = vec![0.0f32; nrows * 10];
+        bd.forward_fused_isa(&gathered, &mut y_ref, nrows, &bias, false, None, TileShape::DEFAULT, crate::linalg::kernel::Isa::Scalar);
+        // fused path
+        let taps = patch_taps(&s, Some(&perm));
+        let src = PanelSource::Im2col { shape: &s, taps: &taps };
+        let pool = ThreadPool::new(2);
+        for pool_opt in [None, Some(&pool)] {
+            let mut y = vec![0.0f32; nrows * 10];
+            let mut panel = Vec::new();
+            bd.forward_panel_isa(
+                &x, &mut y, nrows, &src, &bias, false, pool_opt, TileShape::DEFAULT,
+                crate::linalg::kernel::Isa::Scalar, &mut panel,
+            );
+            assert_eq!(y, y_ref);
+        }
     }
 }

@@ -96,6 +96,30 @@ impl QOutPtr {
     }
 }
 
+/// Shared raw handle to the i8 panel scratch of the fused path; same
+/// aliasing discipline as [`QOutPtr`] (each block task projects only its own
+/// disjoint panel slab).
+#[derive(Clone, Copy)]
+struct QPanelPtr {
+    ptr: *mut i8,
+    len: usize,
+}
+
+// SAFETY: tasks write disjoint slabs (`[b·stride, (b+1)·stride)`) and the
+// pool joins all tasks before the caller's `&mut` is used again.
+unsafe impl Send for QPanelPtr {}
+unsafe impl Sync for QPanelPtr {}
+
+impl QPanelPtr {
+    /// SAFETY (caller): `[base, base + n)` must not overlap any other live
+    /// projection — guaranteed because panel slabs are disjoint per block.
+    #[inline]
+    unsafe fn seg_mut(&self, base: usize, n: usize) -> &mut [i8] {
+        debug_assert!(base + n <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(base), n)
+    }
+}
+
 /// A block-diagonal weight matrix quantized to i8 in packed storage, with
 /// symmetric per-block-row scales.
 #[derive(Clone, Debug)]
@@ -356,6 +380,141 @@ impl QuantizedBlockDiagMatrix {
         }
     }
 
+    /// Widest block reduction dimension — the panel column stride of the
+    /// fused pack-gather path.
+    pub fn max_block_cols(&self) -> usize {
+        self.layout.col_spans.iter().map(|c| c.len).max().unwrap_or(0)
+    }
+
+    /// Scratch i8 count [`Self::forward_panel_isa`] needs: one
+    /// `PANEL_CHUNK`-row slab per block, batch-independent.
+    pub fn panel_elems(&self) -> usize {
+        self.nblocks() * crate::linalg::blockdiag_mm::PANEL_CHUNK * self.max_block_cols()
+    }
+
+    /// Implicit-GEMM fused forward, quantized twin of
+    /// [`BlockDiagMatrix::forward_panel_isa`]: A-rows are gathered straight
+    /// out of the flat quantized activation `xq` (quantization is
+    /// element-wise and `quantize(0) == 0`, so quantize-then-gather equals
+    /// gather-then-quantize — including conv padding) into a per-block panel
+    /// slab, `PANEL_CHUNK` rows at a time. Integer accumulation keeps the
+    /// result bit-identical to the materialized pipeline for every tile
+    /// shape, thread count, and ISA.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_panel_isa(
+        &self,
+        xq: &[i8],
+        y: &mut [f32],
+        nrows: usize,
+        src: &crate::linalg::im2col::PanelSource<'_>,
+        act_scale: f32,
+        bias: &[f32],
+        relu: bool,
+        pool: Option<&ThreadPool>,
+        tile: TileShape,
+        isa: crate::linalg::kernel::Isa,
+        panel: &mut Vec<i8>,
+    ) {
+        let _span = crate::obs::span("blockdiag_mm_i8_panel");
+        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        assert_eq!(src.ncols(), cols, "panel source width mismatch");
+        assert_eq!(xq.len(), src.src_elems_for(nrows), "source shape mismatch");
+        assert_eq!(y.len(), nrows * rows, "Y shape mismatch");
+        assert_eq!(bias.len(), rows, "bias must be in block-row space");
+        let ep = QEpilogue { act_scale, relu };
+        let nblocks = self.nblocks();
+        let stride = crate::linalg::blockdiag_mm::PANEL_CHUNK * self.max_block_cols();
+        if panel.len() < nblocks * stride {
+            panel.resize(nblocks * stride, 0);
+        }
+        let yp = QOutPtr { ptr: y.as_mut_ptr(), len: y.len() };
+        let pp = QPanelPtr { ptr: panel.as_mut_ptr(), len: panel.len() };
+        let parallel = pool.map(|p| p.lanes() > 1 && nblocks > 1).unwrap_or(false);
+        if !parallel {
+            for b in 0..nblocks {
+                // SAFETY: sequential — one panel projection live at a time.
+                let pslice = unsafe { pp.seg_mut(b * stride, stride) };
+                self.block_forward_panel(b, xq, yp, nrows, src, bias, ep, tile, isa, pslice);
+            }
+            return;
+        }
+        pool.unwrap().run(nblocks, |b| {
+            // SAFETY of sharing yp/pp: block b writes only its own output
+            // row span and its own `[b·stride, (b+1)·stride)` panel slab —
+            // both disjoint across blocks — and the pool joins all tasks
+            // before the borrows of `y`/`panel` are used again.
+            let pslice = unsafe { pp.seg_mut(b * stride, stride) };
+            self.block_forward_panel(b, xq, yp, nrows, src, bias, ep, tile, isa, pslice);
+        });
+    }
+
+    /// One block of the fused path: pack `PANEL_CHUNK` quantized A-rows of
+    /// this block's column span, multiply, repeat. Scalar ISA goes through
+    /// the shared tiled micro-kernel; SIMD mirrors
+    /// [`Self::block_forward_simd`]'s dot + 4-row dequant groups.
+    #[allow(clippy::too_many_arguments)]
+    fn block_forward_panel(
+        &self,
+        b: usize,
+        xq: &[i8],
+        yp: QOutPtr,
+        nrows: usize,
+        src: &crate::linalg::im2col::PanelSource<'_>,
+        bias: &[f32],
+        ep: QEpilogue,
+        tile: TileShape,
+        isa: crate::linalg::kernel::Isa,
+        pslice: &mut [i8],
+    ) {
+        use crate::linalg::kernel;
+        let rows = self.layout.rows;
+        let rs = self.layout.row_spans[b];
+        let cs = self.layout.col_spans[b];
+        let (out_b, in_b) = (rs.len, cs.len);
+        let qb = self.block(b);
+        for row0 in (0..nrows).step_by(crate::linalg::blockdiag_mm::PANEL_CHUNK) {
+            let nr = crate::linalg::blockdiag_mm::PANEL_CHUNK.min(nrows - row0);
+            for i in 0..nr {
+                src.pack_row(xq, row0 + i, cs.start, &mut pslice[i * in_b..(i + 1) * in_b]);
+            }
+            if !isa.is_simd() {
+                self.block_forward_at(b, pslice, in_b, 0, yp, row0, nr, bias, ep, tile);
+                continue;
+            }
+            for i in 0..nr {
+                let prow = &pslice[i * in_b..(i + 1) * in_b];
+                // SAFETY: rows of block b only — disjoint from all other tasks.
+                let yrow = unsafe { yp.seg_mut((row0 + i) * rows + rs.start, out_b) };
+                let mut r = 0;
+                while r + 4 <= out_b {
+                    let accs = [
+                        kernel::dot_i8(isa, prow, &qb[r * in_b..(r + 1) * in_b]),
+                        kernel::dot_i8(isa, prow, &qb[(r + 1) * in_b..(r + 2) * in_b]),
+                        kernel::dot_i8(isa, prow, &qb[(r + 2) * in_b..(r + 3) * in_b]),
+                        kernel::dot_i8(isa, prow, &qb[(r + 3) * in_b..(r + 4) * in_b]),
+                    ];
+                    let gr = rs.start + r;
+                    kernel::dequant4(
+                        isa,
+                        accs,
+                        ep.act_scale,
+                        &self.row_scales[gr..gr + 4],
+                        &bias[gr..gr + 4],
+                        ep.relu,
+                        &mut yrow[r..r + 4],
+                    );
+                    r += 4;
+                }
+                while r < out_b {
+                    let acc = kernel::dot_i8(isa, prow, &qb[r * in_b..(r + 1) * in_b]);
+                    let gr = rs.start + r;
+                    yrow[r] = dequant(acc, ep, self.row_scales[gr], bias[gr]);
+                    r += 1;
+                }
+            }
+        }
+    }
+
     /// Scalar reference kernel (the oracle the tiled/pooled paths are tested
     /// against — equality is exact, integer accumulation is order-free).
     pub fn forward_fused_reference(
@@ -390,8 +549,9 @@ impl QuantizedBlockDiagMatrix {
         }
     }
 
-    /// Per-block kernel entry: dispatch the configured tile shape onto a
-    /// monomorphized micro-kernel (same shape set as the f32 kernel).
+    /// Per-block kernel entry for the materialized-A path: the block reads
+    /// its rows straight out of the full quantized activation matrix
+    /// (`ldx = cols`, row offset `cs.start`).
     fn block_forward(
         &self,
         b: usize,
@@ -402,54 +562,81 @@ impl QuantizedBlockDiagMatrix {
         ep: QEpilogue,
         tile: TileShape,
     ) {
+        let cs = self.layout.col_spans[b];
+        self.block_forward_at(b, xq, self.layout.cols, cs.start, yp, 0, batch, bias, ep, tile);
+    }
+
+    /// Tile-shape dispatch onto a monomorphized micro-kernel, generalized
+    /// over where the block's A-rows live (same `(ldx, xoff, y_row0, nloc)`
+    /// addressing as the f32 kernel's `block_forward_at`) so the fused panel
+    /// path and the materialized path share one kernel. Integer accumulation
+    /// is order-free, so this sharing is about code paths, not numerics.
+    #[allow(clippy::too_many_arguments)]
+    fn block_forward_at(
+        &self,
+        b: usize,
+        xq: &[i8],
+        ldx: usize,
+        xoff: usize,
+        yp: QOutPtr,
+        y_row0: usize,
+        nloc: usize,
+        bias: &[f32],
+        ep: QEpilogue,
+        tile: TileShape,
+    ) {
         match (tile.batch, tile.rows) {
-            (1, 1) => self.block_forward_t::<1, 1>(b, xq, yp, batch, bias, ep),
-            (1, 2) => self.block_forward_t::<1, 2>(b, xq, yp, batch, bias, ep),
-            (1, 4) => self.block_forward_t::<1, 4>(b, xq, yp, batch, bias, ep),
-            (1, 8) => self.block_forward_t::<1, 8>(b, xq, yp, batch, bias, ep),
-            (2, 1) => self.block_forward_t::<2, 1>(b, xq, yp, batch, bias, ep),
-            (2, 2) => self.block_forward_t::<2, 2>(b, xq, yp, batch, bias, ep),
-            (2, 4) => self.block_forward_t::<2, 4>(b, xq, yp, batch, bias, ep),
-            (2, 8) => self.block_forward_t::<2, 8>(b, xq, yp, batch, bias, ep),
-            (4, 1) => self.block_forward_t::<4, 1>(b, xq, yp, batch, bias, ep),
-            (4, 2) => self.block_forward_t::<4, 2>(b, xq, yp, batch, bias, ep),
-            (4, 4) => self.block_forward_t::<4, 4>(b, xq, yp, batch, bias, ep),
-            (4, 8) => self.block_forward_t::<4, 8>(b, xq, yp, batch, bias, ep),
-            (8, 1) => self.block_forward_t::<8, 1>(b, xq, yp, batch, bias, ep),
-            (8, 2) => self.block_forward_t::<8, 2>(b, xq, yp, batch, bias, ep),
-            (8, 4) => self.block_forward_t::<8, 4>(b, xq, yp, batch, bias, ep),
-            (8, 8) => self.block_forward_t::<8, 8>(b, xq, yp, batch, bias, ep),
+            (1, 1) => self.block_forward_t::<1, 1>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (1, 2) => self.block_forward_t::<1, 2>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (1, 4) => self.block_forward_t::<1, 4>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (1, 8) => self.block_forward_t::<1, 8>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (2, 1) => self.block_forward_t::<2, 1>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (2, 2) => self.block_forward_t::<2, 2>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (2, 4) => self.block_forward_t::<2, 4>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (2, 8) => self.block_forward_t::<2, 8>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (4, 1) => self.block_forward_t::<4, 1>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (4, 2) => self.block_forward_t::<4, 2>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (4, 4) => self.block_forward_t::<4, 4>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (4, 8) => self.block_forward_t::<4, 8>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (8, 1) => self.block_forward_t::<8, 1>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (8, 2) => self.block_forward_t::<8, 2>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (8, 4) => self.block_forward_t::<8, 4>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
+            (8, 8) => self.block_forward_t::<8, 8>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep),
             _ => {
                 debug_assert!(false, "unvalidated tile shape {tile:?}");
-                self.block_forward_t::<4, 8>(b, xq, yp, batch, bias, ep)
+                self.block_forward_t::<4, 8>(b, xq, ldx, xoff, yp, y_row0, nloc, bias, ep)
             }
         }
     }
 
     /// The tiled integer micro-GEMM over one block, `TM × TN` register tiles
     /// of i32 accumulators.
+    #[allow(clippy::too_many_arguments)]
     fn block_forward_t<const TM: usize, const TN: usize>(
         &self,
         b: usize,
         xq: &[i8],
+        ldx: usize,
+        xoff: usize,
         yp: QOutPtr,
-        batch: usize,
+        y_row0: usize,
+        nloc: usize,
         bias: &[f32],
         ep: QEpilogue,
     ) {
         let rs = self.layout.row_spans[b];
         let cs = self.layout.col_spans[b];
-        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        let rows = self.layout.rows;
         let qb = self.block(b); // (rs.len × cs.len), row-major i8
         let (out_b, in_b) = (rs.len, cs.len);
-        let mb = batch - batch % TM;
+        let mb = nloc - nloc % TM;
         let nb = out_b - out_b % TN;
 
         for bi0 in (0..mb).step_by(TM) {
             for r0 in (0..nb).step_by(TN) {
                 let mut xrows = [&xq[..0]; TM];
                 for (i, xr) in xrows.iter_mut().enumerate() {
-                    let base = (bi0 + i) * cols + cs.start;
+                    let base = xoff + (bi0 + i) * ldx;
                     *xr = &xq[base..base + in_b];
                 }
                 let mut wrows = [&qb[..0]; TN];
@@ -466,7 +653,7 @@ impl QuantizedBlockDiagMatrix {
                     }
                 }
                 for i in 0..TM {
-                    let base = (bi0 + i) * rows + rs.start + r0;
+                    let base = (y_row0 + bi0 + i) * rows + rs.start + r0;
                     // SAFETY: rows of this block only — disjoint across tasks.
                     let yrow = unsafe { yp.seg_mut(base, TN) };
                     for j in 0..TN {
@@ -480,19 +667,23 @@ impl QuantizedBlockDiagMatrix {
         //   A: full-tile batch rows × leftover output rows
         //   B: leftover batch rows × all output rows
         if nb < out_b {
-            self.block_scalar(b, xq, yp, bias, ep, 0..mb, nb..out_b);
+            self.block_scalar(b, xq, ldx, xoff, yp, y_row0, bias, ep, 0..mb, nb..out_b);
         }
-        if mb < batch {
-            self.block_scalar(b, xq, yp, bias, ep, mb..batch, 0..out_b);
+        if mb < nloc {
+            self.block_scalar(b, xq, ldx, xoff, yp, y_row0, bias, ep, mb..nloc, 0..out_b);
         }
     }
 
     /// Scalar cell path for tile remainders (and the 1×1 "tile").
+    #[allow(clippy::too_many_arguments)]
     fn block_scalar(
         &self,
         b: usize,
         xq: &[i8],
+        ldx: usize,
+        xoff: usize,
         yp: QOutPtr,
+        y_row0: usize,
         bias: &[f32],
         ep: QEpilogue,
         bi_range: std::ops::Range<usize>,
@@ -500,11 +691,11 @@ impl QuantizedBlockDiagMatrix {
     ) {
         let rs = self.layout.row_spans[b];
         let cs = self.layout.col_spans[b];
-        let (rows, cols) = (self.layout.rows, self.layout.cols);
+        let rows = self.layout.rows;
         let qb = self.block(b);
         let in_b = cs.len;
         for bi in bi_range {
-            let xrow = &xq[bi * cols + cs.start..bi * cols + cs.start + in_b];
+            let xrow = &xq[xoff + bi * ldx..xoff + bi * ldx + in_b];
             for r in r_range.clone() {
                 let wrow = &qb[r * in_b..(r + 1) * in_b];
                 let mut acc = 0i32;
@@ -512,7 +703,7 @@ impl QuantizedBlockDiagMatrix {
                     acc += xrow[p] as i32 * wrow[p] as i32;
                 }
                 let gr = rs.start + r;
-                let idx = bi * rows + gr;
+                let idx = (y_row0 + bi) * rows + gr;
                 // SAFETY: a cell of this block's own rows — disjoint across tasks.
                 let cell = unsafe { yp.seg_mut(idx, 1) };
                 cell[0] = dequant(acc, ep, self.row_scales[gr], bias[gr]);
@@ -675,6 +866,57 @@ mod tests {
             vec![0.0; 12]
         )
         .is_err());
+    }
+
+    #[test]
+    fn panel_fused_is_bit_identical_to_materialized() {
+        // quantize → gather → forward vs quantize → fused panel forward must
+        // be exactly equal: quantization is element-wise, so the gathered
+        // panel holds the same i8 values, and i32 accumulation is order-free.
+        use crate::linalg::im2col::PanelSource;
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        let (rows, cols, k, batch) = (40, 30, 4, 9);
+        let bd = mk(rows, cols, k, &mut rng);
+        let qbd = QuantizedBlockDiagMatrix::from_f32(&bd);
+        let src_dim = cols + 5;
+        let mut idx: Vec<u32> = (0..cols as u32).collect();
+        for i in (1..idx.len()).rev() {
+            let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+            idx.swap(i, j);
+        }
+        let x: Vec<f32> = (0..batch * src_dim).map(|_| rng.next_f32() - 0.5).collect();
+        let (xq, s) = quantize_input(&x);
+        let bias: Vec<f32> = (0..rows).map(|_| rng.next_f32() - 0.5).collect();
+        // materialized reference: gather the quantized source, then forward
+        let mut xg = vec![0i8; batch * cols];
+        for bi in 0..batch {
+            for (c, &sc) in idx.iter().enumerate() {
+                xg[bi * cols + c] = xq[bi * src_dim + sc as usize];
+            }
+        }
+        let mut y_ref = vec![0.0f32; batch * rows];
+        qbd.forward_fused_reference(&xg, &mut y_ref, batch, s, &bias, true);
+        let src = PanelSource::Gather { idx: &idx, src_dim };
+        let isas = [
+            crate::linalg::kernel::Isa::Scalar,
+            crate::linalg::kernel::KernelChoice::auto().i8_isa(),
+        ];
+        for isa in isas {
+            for (tm, tn) in [(1, 1), (2, 8), (4, 8), (8, 2)] {
+                let tile = TileShape { batch: tm, rows: tn };
+                for lanes in [0usize, 2, 8] {
+                    let pool = if lanes == 0 { None } else { Some(ThreadPool::new(lanes)) };
+                    let mut y = vec![0.0f32; batch * rows];
+                    let mut panel = Vec::new();
+                    qbd.forward_panel_isa(
+                        &xq, &mut y, batch, &src, s, &bias, true, pool.as_ref(), tile, isa,
+                        &mut panel,
+                    );
+                    assert_eq!(y, y_ref, "isa={isa:?} tile={tm}x{tn} lanes={lanes}");
+                    assert_eq!(panel.len(), qbd.panel_elems());
+                }
+            }
+        }
     }
 
     #[test]

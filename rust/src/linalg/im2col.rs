@@ -304,6 +304,120 @@ pub fn avgpool_nchw(
     }
 }
 
+/// One GEMM A-matrix column of a fused conv stage, pre-resolved to its
+/// input tap: reading column `j` of patch row `(oy, ox)` means reading the
+/// NCHW sample at `chan_off + (oy·stride + ky − pad)·w + (ox·stride + kx − pad)`
+/// — or a literal zero when that tap falls in the padding border. The
+/// decomposition (`P_col` gather included) happens once at fuse time, so the
+/// packing loop does two adds and two compares per tap instead of a whole
+/// materialized patch-matrix pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PatchTap {
+    /// `ic·h·w` — channel base offset into the sample's NCHW buffer.
+    pub chan_off: u32,
+    pub ky: u16,
+    pub kx: u16,
+}
+
+/// Resolve every GEMM column of a fused conv stage to its [`PatchTap`].
+/// `col_gather` is the conv `P_col` patch gather (`None` = identity):
+/// GEMM column `j` reads patch column `col_gather[j]`, which decomposes by
+/// the im2col ordering contract `(ic·kh + ky)·kw + kx`.
+pub fn patch_taps(s: &ConvShape, col_gather: Option<&[u32]>) -> Vec<PatchTap> {
+    let pdim = s.patch_dim();
+    if let Some(g) = col_gather {
+        assert_eq!(g.len(), pdim, "patch gather length");
+        assert!(g.iter().all(|&c| (c as usize) < pdim), "patch gather index out of range");
+    }
+    (0..pdim)
+        .map(|j| {
+            let src = col_gather.map_or(j, |g| g[j] as usize);
+            let ic = src / (s.kh * s.kw);
+            let rem = src % (s.kh * s.kw);
+            PatchTap {
+                chan_off: (ic * s.h * s.w) as u32,
+                ky: (rem / s.kw) as u16,
+                kx: (rem % s.kw) as u16,
+            }
+        })
+        .collect()
+}
+
+/// Where a fused GEMM's A-panel rows come from: the packing loop of the
+/// fused block kernels reads *source* activations through this descriptor
+/// instead of a materialized patch/gathered matrix in the arena.
+///
+/// The packed values are defined to be byte-identical to what the unfused
+/// pipeline would have materialized (`im2col` + `gather_cols` for conv,
+/// `gather_cols` for FC): padded taps pack literal `0.0` (or quantized 0,
+/// which `quantize_i8(0.0)` also yields), so the downstream accumulation
+/// sees the same operand stream in the same order — the fused-≡-unfused
+/// bit-exactness argument (DESIGN.md §Fusion) reduces to this equality.
+pub enum PanelSource<'a> {
+    /// Implicit im2col: row `gr` is output pixel `(gr / ow) % oh, gr % ow`
+    /// of sample `gr / (oh·ow)`; column `j` resolves through `taps[j]`.
+    Im2col { shape: &'a ConvShape, taps: &'a [PatchTap] },
+    /// Column gather: row `gr` is source row `gr`; column `j` reads
+    /// `src[gr·src_dim + idx[j]]`.
+    Gather { idx: &'a [u32], src_dim: usize },
+}
+
+impl PanelSource<'_> {
+    /// Source-activation elements per A-matrix row block: im2col rows share
+    /// one sample (`in_dim` per `patches_per_sample` rows), gather rows own
+    /// `src_dim` each. Used by the fused kernels to validate `x` length
+    /// against the caller-supplied row count.
+    pub fn src_elems_for(&self, nrows: usize) -> usize {
+        match self {
+            PanelSource::Im2col { shape, .. } => {
+                let pps = shape.patches_per_sample();
+                assert_eq!(nrows % pps, 0, "im2col panel rows must cover whole samples");
+                (nrows / pps) * shape.in_dim()
+            }
+            PanelSource::Gather { src_dim, .. } => nrows * src_dim,
+        }
+    }
+
+    /// Total A-matrix columns (must equal the GEMM layout's `cols`).
+    pub fn ncols(&self) -> usize {
+        match self {
+            PanelSource::Im2col { taps, .. } => taps.len(),
+            PanelSource::Gather { idx, .. } => idx.len(),
+        }
+    }
+
+    /// Pack columns `[col0, col0 + dst.len())` of A-matrix row `gr` into
+    /// `dst`. `Default::default()` is the padded-tap element (`0.0` / `0i8`).
+    #[inline]
+    pub fn pack_row<T: Copy + Default>(&self, x: &[T], gr: usize, col0: usize, dst: &mut [T]) {
+        match self {
+            PanelSource::Im2col { shape, taps } => {
+                let s = **shape;
+                let (oh, ow) = s.out_hw();
+                let pps = oh * ow;
+                let xs = &x[(gr / pps) * s.in_dim()..][..s.in_dim()];
+                let rem = gr % pps;
+                let (oy, ox) = (rem / ow, rem % ow);
+                for (d, t) in dst.iter_mut().zip(&taps[col0..col0 + dst.len()]) {
+                    let iy = oy * s.stride + t.ky as usize;
+                    let ix = ox * s.stride + t.kx as usize;
+                    *d = if iy >= s.pad && iy - s.pad < s.h && ix >= s.pad && ix - s.pad < s.w {
+                        xs[t.chan_off as usize + (iy - s.pad) * s.w + (ix - s.pad)]
+                    } else {
+                        T::default()
+                    };
+                }
+            }
+            PanelSource::Gather { idx, src_dim } => {
+                let src = &x[gr * src_dim..][..*src_dim];
+                for (d, &c) in dst.iter_mut().zip(&idx[col0..col0 + dst.len()]) {
+                    *d = src[c as usize];
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -417,5 +531,76 @@ mod tests {
         let mut got = Vec::new();
         maxpool_nchw(&x, batch, c, h, w, 2, 2, &mut got);
         assert_eq!(got, want);
+    }
+
+    /// The fused-kernel equality argument bottoms out here: a packed panel
+    /// row must be byte-identical to the corresponding row slice of the
+    /// materialized `im2col` (+ optional column gather) pipeline, including
+    /// padded taps, stride tails, and arbitrary sub-column windows.
+    #[test]
+    fn panel_source_packs_identical_bytes_to_materialized_pipeline() {
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        for (in_c, h, w, k, stride, pad, batch) in
+            [(1, 5, 5, 3, 1, 1, 2), (2, 7, 4, 3, 2, 0, 1), (3, 6, 6, 5, 1, 2, 2), (2, 4, 4, 4, 2, 2, 3)]
+        {
+            let s = ConvShape { in_c, h, w, kh: k, kw: k, stride, pad };
+            let pdim = s.patch_dim();
+            let x: Vec<f32> = (0..batch * s.in_dim()).map(|_| rng.next_f32() - 0.5).collect();
+            let mut patches = Vec::new();
+            im2col(&x, batch, &s, &mut patches);
+            // a pseudo-random permutation as the P_col stand-in
+            let mut g: Vec<u32> = (0..pdim as u32).collect();
+            for j in (1..pdim).rev() {
+                g.swap(j, (rng.next_f32() * (j + 1) as f32) as usize % (j + 1));
+            }
+            let nrows = batch * s.patches_per_sample();
+            let mut gathered = Vec::new();
+            gather_cols(&patches, nrows, pdim, &g, &mut gathered);
+
+            for (gather, want_rows) in [(None, &patches), (Some(g.as_slice()), &gathered)] {
+                let taps = patch_taps(&s, gather);
+                let src = PanelSource::Im2col { shape: &s, taps: &taps };
+                assert_eq!(src.ncols(), pdim);
+                assert_eq!(src.src_elems_for(nrows), x.len());
+                for gr in 0..nrows {
+                    // whole row and an awkward sub-window
+                    let mut row = vec![9.0f32; pdim];
+                    src.pack_row(&x, gr, 0, &mut row);
+                    assert_eq!(row, want_rows[gr * pdim..(gr + 1) * pdim], "row {gr}");
+                    if pdim > 3 {
+                        let (c0, n) = (1, pdim - 3);
+                        let mut win = vec![9.0f32; n];
+                        src.pack_row(&x, gr, c0, &mut win);
+                        assert_eq!(win, want_rows[gr * pdim + c0..gr * pdim + c0 + n]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Gather-sourced panel rows must match `gather_cols` byte-for-byte,
+    /// f32 and i8 alike (the i8 case is how fused quantized GEMMs pack).
+    #[test]
+    fn panel_source_gather_matches_gather_cols() {
+        let mut rng = Xoshiro256pp::seed_from_u64(78);
+        let (nrows, dim) = (5, 23);
+        let x: Vec<f32> = (0..nrows * dim).map(|_| rng.next_f32() - 0.5).collect();
+        let idx: Vec<u32> = (0..dim).map(|j| ((j * 7 + 3) % dim) as u32).collect();
+        let mut want = Vec::new();
+        gather_cols(&x, nrows, dim, &idx, &mut want);
+        let src = PanelSource::Gather { idx: &idx, src_dim: dim };
+        for gr in 0..nrows {
+            let mut row = vec![0.0f32; dim];
+            src.pack_row(&x, gr, 0, &mut row);
+            assert_eq!(row, want[gr * dim..(gr + 1) * dim]);
+        }
+        // i8: quantize-then-gather must equal gather-then-quantize
+        let xq: Vec<i8> = x.iter().map(|&v| crate::linalg::blockdiag_mm_i8::quantize_i8(v, 0.01)).collect();
+        let wantq: Vec<i8> = want.iter().map(|&v| crate::linalg::blockdiag_mm_i8::quantize_i8(v, 0.01)).collect();
+        for gr in 0..nrows {
+            let mut row = vec![0i8; dim];
+            src.pack_row(&xq, gr, 0, &mut row);
+            assert_eq!(row, wantq[gr * dim..(gr + 1) * dim]);
+        }
     }
 }

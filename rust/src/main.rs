@@ -89,7 +89,7 @@ COMMANDS
                  sidecars), report compression ratio + accuracy delta
                  ([quant] in TOML tunes calibration)
   plan           [--model M] [--nblocks K] [--seed S] [--batch N]
-                 [--precision f32|int8|mixed] [--config FILE]
+                 [--precision f32|int8|mixed] [--autotune] [--config FILE]
                  dump the compiled execution plan: one row per op with
                  per-sample shapes, activation-buffer bytes at --batch,
                  MACs and storage; conv-family models (deep_mnist,
@@ -99,7 +99,8 @@ COMMANDS
                  layers/stages to int8 and keeps dense ones f32
                  (per-layer mixed precision on one plan)
   profile        [--model M] [--nblocks K] [--seed S] [--batch N]
-                 [--iters K] [--precision f32|int8|mixed] [--config FILE]
+                 [--iters K] [--precision f32|int8|mixed] [--autotune]
+                 [--config FILE]
                  run the compiled plan under the per-op profiler: warm,
                  time --iters batched runs, print per-op calls / total /
                  mean / min / max ns, time share, GFLOP/s and GB/s, check
@@ -182,6 +183,9 @@ fn cfg_from_flags(flags: &Flags) -> anyhow::Result<ExperimentConfig> {
     if let Some(v) = flags.get("test-samples") {
         cfg.test_samples = v.parse()?;
     }
+    if let Some(v) = flags.get("autotune") {
+        cfg.engine.autotune = v.parse()?;
+    }
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     if let Some(dir) = &cfg.artifacts_dir {
         std::env::set_var("MPDC_ARTIFACTS", dir);
@@ -202,6 +206,24 @@ fn train_cfg(cfg: &ExperimentConfig) -> TrainConfig {
 
 fn out_dir(flags: &Flags) -> PathBuf {
     PathBuf::from(flags.get("out").cloned().unwrap_or_else(|| "results".into()))
+}
+
+/// Apply `--autotune`: measure + pin per-op micro-kernel tiles against the
+/// persisted cache (results/TUNE_10.json). No-op unless the flag/config set
+/// `engine.autotune`.
+fn maybe_autotune(exec: mpdc::exec::Executor, cfg: &ExperimentConfig) -> mpdc::exec::Executor {
+    if !cfg.engine.autotune {
+        return exec;
+    }
+    use mpdc::compress::tilespace::TileTuner;
+    let path = TileTuner::default_path();
+    let mut tuner = TileTuner::load(&path);
+    let exec = exec.autotune_tiles(&mut tuner);
+    match tuner.save(&path) {
+        Ok(()) => println!("autotune: {} tile entries cached in {}", tuner.len(), path.display()),
+        Err(e) => mpdc::log_error!("mpdc", "tile cache {} not persisted: {e}", path.display()),
+    }
+    exec
 }
 
 // ---------------------------------------------------------------- commands
@@ -529,6 +551,7 @@ fn cmd_plan(flags: &Flags) -> anyhow::Result<()> {
         }
         other => anyhow::bail!("unknown --precision {other:?} (f32|int8|mixed)"),
     };
+    let exec = maybe_autotune(exec, &cfg);
     // Executor-level describe: adds the per-op kernel column + dispatch
     // summary on top of the structural plan dump.
     println!(
@@ -545,7 +568,7 @@ fn cmd_plan(flags: &Flags) -> anyhow::Result<()> {
     if let Some(cplan) = cfg.model.conv_plan(cfg.nblocks) {
         let conv_comp = ConvCompressor::new(cplan, cfg.seed);
         let params = conv_comp.random_masked_params(cfg.seed);
-        let conv_exec = build_conv_executor(&conv_comp, &params, precision)?;
+        let conv_exec = maybe_autotune(build_conv_executor(&conv_comp, &params, precision)?, &cfg);
         println!(
             "== {} (compressed conv) · {} blocks ==\n{}",
             conv_plan_label(cfg.model),
@@ -659,6 +682,7 @@ fn cmd_profile(flags: &Flags) -> anyhow::Result<()> {
         }
         other => anyhow::bail!("unknown --precision {other:?} (f32|int8|mixed)"),
     };
+    let exec = maybe_autotune(exec, &cfg);
     let mut sections = vec![(cfg.model.name().to_string(), exec)];
 
     // The server's conv-mpd variants (deep-mnist-mpd, alexnet-mpd,
@@ -667,7 +691,7 @@ fn cmd_profile(flags: &Flags) -> anyhow::Result<()> {
     if let Some(cplan) = cfg.model.conv_plan(cfg.nblocks) {
         let conv_comp = ConvCompressor::new(cplan, cfg.seed);
         let params = conv_comp.random_masked_params(cfg.seed);
-        let conv_exec = build_conv_executor(&conv_comp, &params, precision)?;
+        let conv_exec = maybe_autotune(build_conv_executor(&conv_comp, &params, precision)?, &cfg);
         sections.push((conv_plan_label(cfg.model).to_string(), conv_exec));
     }
 

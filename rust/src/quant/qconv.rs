@@ -193,6 +193,38 @@ impl QuantizedConvNet {
         })
         .map_err(|e| e.to_string())?;
         b.append_plan(head);
+        let exec = Executor::new(crate::exec::fuse_plan(b.finish()));
+        let p = exec.plan();
+        let (in_dim, out_dim, macs) = (p.in_dim, p.out_dim, p.macs_per_sample);
+        Ok(Self { exec, in_dim, out_dim, macs_per_sample: macs })
+    }
+
+    /// [`Self::quantize`] without the fusion pass — the materializing
+    /// baseline kept for fused-vs-unfused benches (i8 output is
+    /// bit-identical either way).
+    pub fn quantize_unfused(
+        comp: &ConvCompressor,
+        params: &ConvNetParams,
+        calib: &ConvCalibration,
+    ) -> Result<Self, String> {
+        calib.validate()?;
+        if calib.conv_scales.len() != comp.plan.convs.len() {
+            return Err(format!(
+                "calibration has {} conv scales for {} conv stages",
+                calib.conv_scales.len(),
+                comp.plan.convs.len()
+            ));
+        }
+        let (f32_stages, _) = PackedConvNet::build_stages(comp, params);
+        let nfc = comp.fc.nlayers();
+        let head =
+            lower_mlp(&comp.fc, &params.fc_w, &params.fc_b, Some(&calib.fc), &vec![Precision::I8; nfc])?;
+        let mut b = PlanBuilder::new(comp.plan.net_spec().in_dim());
+        lower_conv_stages(&mut b, f32_stages, |b, i, bd, bias, relu| {
+            b.block_gemm_i8(QuantizedBlockDiagMatrix::from_f32(&bd), bias, calib.conv_scales[i], relu);
+        })
+        .map_err(|e| e.to_string())?;
+        b.append_plan(head);
         let exec = Executor::new(b.finish());
         let p = exec.plan();
         let (in_dim, out_dim, macs) = (p.in_dim, p.out_dim, p.macs_per_sample);
@@ -240,7 +272,7 @@ impl QuantizedConvNet {
         })
         .map_err(|e| e.to_string())?;
         b.append_plan(head);
-        let exec = Executor::new(b.finish());
+        let exec = Executor::new(crate::exec::fuse_plan(b.finish()));
         let p = exec.plan();
         let (in_dim, out_dim, macs) = (p.in_dim, p.out_dim, p.macs_per_sample);
         Ok(Self { exec, in_dim, out_dim, macs_per_sample: macs })

@@ -62,11 +62,33 @@ impl QuantizedMlp {
         biases: &[Vec<f32>],
         calib: &Calibration,
     ) -> Result<Self, String> {
+        let plan = Self::lower(comp, weights, biases, calib)?;
+        Ok(Self::from_executor(Executor::new(crate::exec::fuse_plan(plan))))
+    }
+
+    /// [`Self::quantize`] without the fusion pass — the materializing
+    /// baseline kept for fused-vs-unfused benches and differential tests
+    /// (i8 output is bit-identical either way).
+    pub fn quantize_unfused(
+        comp: &MpdCompressor,
+        weights: &[Vec<f32>],
+        biases: &[Vec<f32>],
+        calib: &Calibration,
+    ) -> Result<Self, String> {
+        let plan = Self::lower(comp, weights, biases, calib)?;
+        Ok(Self::from_executor(Executor::new(plan)))
+    }
+
+    fn lower(
+        comp: &MpdCompressor,
+        weights: &[Vec<f32>],
+        biases: &[Vec<f32>],
+        calib: &Calibration,
+    ) -> Result<crate::exec::ExecPlan, String> {
         let n = comp.nlayers();
         assert_eq!(weights.len(), n);
         assert_eq!(biases.len(), n);
-        let plan = lower_mlp(comp, weights, biases, Some(calib), &vec![Precision::I8; n])?;
-        Ok(Self::from_executor(Executor::new(plan)))
+        lower_mlp(comp, weights, biases, Some(calib), &vec![Precision::I8; n])
     }
 
     /// Execute on a dedicated persistent pool of `nthreads` lanes
@@ -150,7 +172,9 @@ impl QuantizedMlp {
         let mut out = Vec::new();
         let mut i = 0usize;
         for p in &self.exec.plan().ops {
-            if let Op::BlockGemmI8 { qbd, bias, act_scale, .. } = &p.op {
+            if let Op::BlockGemmI8 { qbd, bias, act_scale, .. }
+            | Op::BlockGemmI8FusedGather { qbd, bias, act_scale, .. } = &p.op
+            {
                 out.push(NamedTensor::i8(format!("fc{i}.wq"), vec![qbd.packed.len()], qbd.packed.clone()));
                 out.push(NamedTensor::f32(
                     format!("fc{i}.wq.scale"),
@@ -203,7 +227,7 @@ impl QuantizedMlp {
                 .map_err(|e| format!("fc{i}.wq: {e}"))?;
             Ok(FcOp::BlockI8 { qbd, bias, act_scale: act[0] })
         })?;
-        Ok(Self::from_executor(Executor::new(plan)))
+        Ok(Self::from_executor(Executor::new(crate::exec::fuse_plan(plan))))
     }
 }
 
@@ -274,6 +298,20 @@ mod tests {
                 .unwrap();
             assert_eq!(want, q.forward(&x, 2), "{cfg:?}");
         }
+    }
+
+    #[test]
+    fn fused_quantize_matches_unfused_bit_exact() {
+        let plan = SparsityPlan::lenet300(10);
+        let (comp, weights, biases) = setup(&plan, 31);
+        let cal = Calibration::unit_range(3);
+        let fused = QuantizedMlp::quantize(&comp, &weights, &biases, &cal).unwrap();
+        let unfused = QuantizedMlp::quantize_unfused(&comp, &weights, &biases, &cal).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(32);
+        let x: Vec<f32> = (0..3 * 784).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        assert_eq!(fused.forward(&x, 3), unfused.forward(&x, 3));
+        assert_eq!(fused.n_gathers, unfused.n_gathers);
+        assert_eq!(fused.macs_per_sample, unfused.macs_per_sample);
     }
 
     #[test]

@@ -313,13 +313,81 @@ fn plan_accounting_matches_engine_wrappers() {
     assert!(kdump.contains("dispatch f32="), "executor describe() missing dispatch summary");
     assert!(kdump.contains(packed.executor().kernel().f32_isa().name()));
 
-    // conv plans account im2col'd GEMM work (MACs scale with patch rows)
+    // conv plans account im2col'd GEMM work (MACs scale with patch rows);
+    // after fusion the patch matrix is implicit — every im2col is folded
+    // into a gemm_*_fused_im2col op, while the unfused baseline still
+    // materializes it. Semantic accounting agrees between the two.
     let (ccomp, params) = conv_fixture();
     let conv = PackedConvNet::build(&ccomp, &params).unwrap();
     let cplan = conv.executor().plan();
     assert_eq!(cplan.macs_per_sample, conv.macs_per_sample);
-    assert!(cplan.ops.iter().any(|p| matches!(p.op, Op::Im2col { .. })));
+    assert!(!cplan.ops.iter().any(|p| matches!(p.op, Op::Im2col { .. })));
+    assert!(cplan.ops.iter().any(|p| matches!(p.op, Op::BlockGemmF32FusedIm2col { .. })));
     assert!(cplan.ops.iter().any(|p| matches!(p.op, Op::MaxPool { .. })));
+    let unfused = PackedConvNet::build_unfused(&ccomp, &params).unwrap();
+    let uplan = unfused.executor().plan();
+    assert!(uplan.ops.iter().any(|p| matches!(p.op, Op::Im2col { .. })));
+    assert_eq!(uplan.macs_per_sample, cplan.macs_per_sample);
+    assert_eq!(uplan.n_gathers, cplan.n_gathers);
+}
+
+/// ISSUE 10 acceptance: the fusion pass must cut the conv plans' arena
+/// high-water footprint by ≥ 30% (the patch matrix never hits the arena;
+/// the fused pack panels are batch-independent and tiny) while staying
+/// bit-identical to the materializing baseline under the same dispatch.
+#[test]
+fn fused_conv_plans_shrink_arena_peak_and_stay_exact() {
+    for (name, plan) in [
+        ("alexnet-lite", ConvModelPlan::alexnet_lite(4, 16)),
+        ("tinyresnet", ConvModelPlan::tinyresnet(4, 16)),
+    ] {
+        let comp = ConvCompressor::new(plan, 91);
+        let params = comp.random_masked_params(91);
+        let fused = PackedConvNet::build(&comp, &params).unwrap();
+        let unfused = PackedConvNet::build_unfused(&comp, &params).unwrap();
+        for batch in [1usize, 16] {
+            let fb = fused.executor().plan().arena_bytes(batch);
+            let ub = unfused.executor().plan().arena_bytes(batch);
+            assert!(
+                fb as f64 <= 0.7 * ub as f64,
+                "{name} batch {batch}: fused arena {fb} B > 70% of unfused {ub} B"
+            );
+        }
+        let mut rng = Xoshiro256pp::seed_from_u64(95);
+        let x: Vec<f32> = (0..2 * fused.in_dim).map(|_| rng.next_f32() - 0.5).collect();
+        assert_eq!(fused.forward(&x, 2), unfused.forward(&x, 2), "{name}: fused drifted");
+    }
+}
+
+/// ISSUE 10: pinning measured per-op tiles must be output-invisible — the
+/// scalar kernels' canonical accumulation order is tile-independent, so an
+/// autotuned executor stays bit-identical to the default-tile one.
+#[test]
+fn autotuned_tiles_do_not_change_scalar_output() {
+    use mpdc::compress::tilespace::TileTuner;
+    let scalar_cfg = EngineConfig { simd: false, ..Default::default() };
+    let (comp, weights, biases) = mlp_fixture();
+    let base = PackedMlp::build(&comp, &weights, &biases).with_engine_config(&scalar_cfg).unwrap();
+    let mut tuner = TileTuner::new();
+    let tuned = PackedMlp::build(&comp, &weights, &biases)
+        .with_engine_config(&scalar_cfg)
+        .unwrap()
+        .into_executor()
+        .autotune_tiles(&mut tuner);
+    assert!(!tuner.is_empty(), "scalar dispatch must record tuned entries");
+    let mut rng = Xoshiro256pp::seed_from_u64(107);
+    let batch = 3;
+    let x: Vec<f32> = (0..batch * 36).map(|_| rng.next_f32() - 0.5).collect();
+    assert_eq!(base.forward(&x, batch), tuned.run(&x, batch));
+    // a second pass hits the cache (same keys) and changes nothing
+    let n = tuner.len();
+    let tuned2 = PackedMlp::build(&comp, &weights, &biases)
+        .with_engine_config(&scalar_cfg)
+        .unwrap()
+        .into_executor()
+        .autotune_tiles(&mut tuner);
+    assert_eq!(tuner.len(), n, "cached keys must not re-measure into new entries");
+    assert_eq!(base.forward(&x, batch), tuned2.run(&x, batch));
 }
 
 #[test]

@@ -21,14 +21,24 @@
 //! The deliberately awkward shapes (inner dims 3, 10, 67, 96, …) cover the
 //! wide-stride main loops, the single 8-wide step, and the scalar tails of
 //! every vector kernel.
+//!
+//! ISSUE 10 extends the suite to the fusion pass: every fused engine
+//! (implicit-GEMM conv, gather-fused FC packing) must be **bit-identical**
+//! to its unfused twin under the same resolved dispatch, across 1/2/8-lane
+//! pools and every register-tile instantiation, for both f32 and i8. The
+//! packed A-panel rows are byte-identical to the materialized patch/gathered
+//! rows and feed the same dot kernels in the same order, so fusion is
+//! invisible at the bit level — which trivially keeps it inside the
+//! documented f32 reorder bound as well.
 
 use mpdc::compress::compressor::MpdCompressor;
+use mpdc::compress::conv_model::{ConvCompressor, PackedConvNet};
 use mpdc::compress::packed_model::PackedMlp;
-use mpdc::compress::plan::{LayerPlan, SparsityPlan};
+use mpdc::compress::plan::{ConvLayerPlan, ConvModelPlan, LayerPlan, SparsityPlan};
 use mpdc::linalg::im2col::{gather_cols_isa, im2col, im2col_reference, ConvShape};
 use mpdc::linalg::{Isa, KernelChoice, TileShape};
 use mpdc::mask::prng::Xoshiro256pp;
-use mpdc::quant::{Calibration, QuantizedMlp};
+use mpdc::quant::{Calibration, ConvCalibration, QuantizedConvNet, QuantizedMlp};
 use mpdc::server::{InferBackend, PlanBackend};
 use mpdc::util::prop::{for_all, gen_range};
 
@@ -309,5 +319,168 @@ fn plan_backend_scalar_and_auto_dispatch_agree() {
         qb_scalar.infer_into(&x, batch, &mut y_s).unwrap();
         qb_auto.infer_into(&x, batch, &mut y_a).unwrap();
         assert_eq!(y_a, y_s, "i8 dispatch modes disagree at batch {batch}");
+    }
+}
+
+/// The register-tile instantiations the fused differential sweeps run over:
+/// the degenerate 1×1 tile, two rectangular shapes, the default, and the
+/// widest 8×8 tile — every axis value the micro-kernel dispatch accepts.
+fn fused_tile_matrix() -> [TileShape; 4] {
+    [
+        TileShape { batch: 1, rows: 1 },
+        TileShape { batch: 2, rows: 4 },
+        TileShape::DEFAULT,
+        TileShape { batch: 8, rows: 8 },
+    ]
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: shape");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{tag}: elem {i}: fused {g} != unfused {w}");
+    }
+}
+
+/// ISSUE 10 (f32 MLP): gather-fused A-panel packing is bit-identical to the
+/// unfused gather-then-GEMM plan under both dispatches, across 1/2/8-lane
+/// pools and every tile instantiation. The chained-masked fixtures carry
+/// inter-layer permutation gathers; the single-layer ones pin the no-op case
+/// (nothing to fuse ⇒ identical plans).
+#[test]
+fn fused_mlp_f32_bit_exact_with_unfused_across_lanes_and_tiles() {
+    for (plan, in_dim, seed) in plans() {
+        let comp = MpdCompressor::new(plan, seed);
+        let (w, b) = comp.random_masked_weights(seed ^ 0x3C);
+        let batch = 3;
+        let x = rand_x(seed ^ 0xF0, batch * in_dim);
+        for kernel in [KernelChoice::scalar(), KernelChoice::detected()] {
+            for lanes in [1usize, 2, 8] {
+                for tile in fused_tile_matrix() {
+                    let fused = PackedMlp::build(&comp, &w, &b)
+                        .into_executor()
+                        .with_kernel(kernel)
+                        .with_threads(lanes)
+                        .with_tile(tile)
+                        .run(&x, batch);
+                    let unfused = PackedMlp::build_unfused(&comp, &w, &b)
+                        .into_executor()
+                        .with_kernel(kernel)
+                        .with_threads(lanes)
+                        .with_tile(tile)
+                        .run(&x, batch);
+                    assert_bits_eq(
+                        &fused,
+                        &unfused,
+                        &format!("f32 seed {seed} lanes {lanes} tile {tile:?}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// ISSUE 10 (i8 MLP): the quantized gather-fused plan is bit-identical to
+/// its unfused twin — the panel packs the same i8 bytes the gather would
+/// have written, and integer accumulation is associative, so not even the
+/// dispatch choice can split them.
+#[test]
+fn fused_mlp_i8_bit_exact_with_unfused_across_lanes_and_tiles() {
+    for (plan, in_dim, seed) in plans() {
+        let comp = MpdCompressor::new(plan, seed ^ 0x51);
+        let (w, b) = comp.random_masked_weights(seed ^ 0x77);
+        let cal = Calibration::unit_range(comp.nlayers());
+        let batch = 4;
+        let x = rand_x(seed ^ 0xE1, batch * in_dim);
+        for kernel in [KernelChoice::scalar(), KernelChoice::detected()] {
+            for lanes in [1usize, 2, 8] {
+                for tile in fused_tile_matrix() {
+                    let fused = QuantizedMlp::quantize(&comp, &w, &b, &cal)
+                        .unwrap()
+                        .into_executor()
+                        .with_kernel(kernel)
+                        .with_threads(lanes)
+                        .with_tile(tile)
+                        .run(&x, batch);
+                    let unfused = QuantizedMlp::quantize_unfused(&comp, &w, &b, &cal)
+                        .unwrap()
+                        .into_executor()
+                        .with_kernel(kernel)
+                        .with_threads(lanes)
+                        .with_tile(tile)
+                        .run(&x, batch);
+                    assert_bits_eq(
+                        &fused,
+                        &unfused,
+                        &format!("i8 seed {seed} lanes {lanes} tile {tile:?}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// ISSUE 10 (conv, f32 + i8): implicit-GEMM conv — the fused plan never
+/// materializes the im2col patch matrix, packing padded/strided patch taps
+/// (and the conv `P_col` gather) straight into the A-panel — must be
+/// bit-identical to the unfused im2col→gather→GEMM plan across the same
+/// lane/tile/dispatch matrix. The fixture covers a strided dense conv and a
+/// masked conv whose permutation feeds the fused patch gather.
+#[test]
+fn fused_conv_bit_exact_with_unfused_across_lanes_and_tiles() {
+    let plan = ConvModelPlan::new(
+        (1, 8, 8),
+        vec![ConvLayerPlan::dense("c1", 4, 3, 2), ConvLayerPlan::masked("c2", 6, 3, 2, 3)],
+        SparsityPlan::new(vec![LayerPlan::masked("fc1", 16, 24, 4), LayerPlan::dense("fc2", 5, 16)])
+            .unwrap(),
+    )
+    .unwrap();
+    let comp = ConvCompressor::new(plan, 67);
+    let params = comp.random_masked_params(67);
+    let cal = ConvCalibration::unit_range(2, 2);
+    let batch = 3;
+    let x = rand_x(0xCAFE, batch * 64);
+    for kernel in [KernelChoice::scalar(), KernelChoice::detected()] {
+        for lanes in [1usize, 2, 8] {
+            for tile in fused_tile_matrix() {
+                let f32_fused = PackedConvNet::build(&comp, &params)
+                    .unwrap()
+                    .into_executor()
+                    .with_kernel(kernel)
+                    .with_threads(lanes)
+                    .with_tile(tile)
+                    .run(&x, batch);
+                let f32_unfused = PackedConvNet::build_unfused(&comp, &params)
+                    .unwrap()
+                    .into_executor()
+                    .with_kernel(kernel)
+                    .with_threads(lanes)
+                    .with_tile(tile)
+                    .run(&x, batch);
+                assert_bits_eq(
+                    &f32_fused,
+                    &f32_unfused,
+                    &format!("conv f32 lanes {lanes} tile {tile:?}"),
+                );
+                let i8_fused = QuantizedConvNet::quantize(&comp, &params, &cal)
+                    .unwrap()
+                    .into_executor()
+                    .with_kernel(kernel)
+                    .with_threads(lanes)
+                    .with_tile(tile)
+                    .run(&x, batch);
+                let i8_unfused = QuantizedConvNet::quantize_unfused(&comp, &params, &cal)
+                    .unwrap()
+                    .into_executor()
+                    .with_kernel(kernel)
+                    .with_threads(lanes)
+                    .with_tile(tile)
+                    .run(&x, batch);
+                assert_bits_eq(
+                    &i8_fused,
+                    &i8_unfused,
+                    &format!("conv i8 lanes {lanes} tile {tile:?}"),
+                );
+            }
+        }
     }
 }
